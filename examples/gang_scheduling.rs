@@ -1,0 +1,77 @@
+//! Sec. 3.5 extension demo: Gang Scheduling with the All-Or-Nothing
+//! property.  Each job type is split into task components; a job only
+//! launches when at least m_l components receive resources.  The policy
+//! is subgradient ascent on the convex relaxation + gang restoration
+//! (see `schedulers::gang`).
+//!
+//! Also demos the Sec. 3.4 multi-arrival extension on the same cluster.
+//!
+//!     cargo run --release --example gang_scheduling
+
+use ogasched::config::Scenario;
+use ogasched::coordinator::Leader;
+use ogasched::schedulers::gang::{GangOga, GangSpec};
+use ogasched::schedulers::{MultiArrivalOga, OgaSched, Policy};
+use ogasched::sim::arrivals::{Bernoulli, MultiCount};
+use ogasched::traces::synthesize;
+use ogasched::utils::table::Table;
+
+fn main() {
+    let mut scenario = Scenario::small();
+    scenario.horizon = 400;
+    let problem = synthesize(&scenario);
+    println!(
+        "gang/multi-arrival demo: |L|={} |R|={} K={} T={}",
+        scenario.num_ports, scenario.num_instances, scenario.num_resources, scenario.horizon
+    );
+
+    // --- gang scheduling: 3 components per job, min 2 must schedule ---
+    let specs: Vec<GangSpec> = (0..problem.num_ports())
+        .map(|l| GangSpec {
+            demands: (0..3)
+                .map(|_| {
+                    (0..problem.num_resources)
+                        .map(|k| problem.demand_at(l, k) / 3.0)
+                        .collect()
+                })
+                .collect(),
+            min_tasks: 2,
+        })
+        .collect();
+    let mut gang = GangOga::new(&problem, &specs, scenario.eta0, scenario.decay, 0);
+    let mut leader = Leader::new(&problem);
+    let mut arrivals =
+        Bernoulli::uniform(problem.num_ports(), scenario.arrival_prob, 11);
+    let gang_run = leader.run(&mut gang, &mut arrivals, scenario.horizon);
+
+    // --- plain OGASCHED on the same trajectory for reference ---
+    let mut plain = OgaSched::new(&problem, scenario.eta0, scenario.decay, 0);
+    let mut leader = Leader::new(&problem);
+    let mut arrivals =
+        Bernoulli::uniform(problem.num_ports(), scenario.arrival_prob, 11);
+    plain.reset(&problem);
+    let plain_run = leader.run(&mut plain, &mut arrivals, scenario.horizon);
+
+    // --- multi-arrival (Sec. 3.4): up to 3 jobs per port per slot ---
+    let copies = vec![3usize; problem.num_ports()];
+    let mut multi =
+        MultiArrivalOga::new(&problem, &copies, scenario.eta0, scenario.decay, 0);
+    let mut leader = Leader::new(&problem);
+    let mut counts = MultiCount::new(0.4, 3, 13);
+    let multi_run = leader.run(&mut multi, &mut counts, scenario.horizon);
+
+    let mut table = Table::new(&["variant", "avg reward", "cumulative"]);
+    for run in [&plain_run, &gang_run, &multi_run] {
+        table.push(&[
+            run.policy.clone(),
+            format!("{:.2}", run.avg_reward()),
+            format!("{:.1}", run.cumulative_reward),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "gang vs plain gap: the all-or-nothing restoration withholds partial \
+         jobs, so the gang variant trades reward for the launch guarantee \
+         (Sec. 3.5 notes the non-convex problem is strictly harder)."
+    );
+}

@@ -1,0 +1,43 @@
+//! Quickstart: a 16-instance cluster, 4 job types, 300 slots.
+//! Runs OGASCHED against the paper's four baselines and prints the
+//! reward table plus OGASCHED's improvement percentages.
+//!
+//!     cargo run --release --example quickstart
+
+use ogasched::config::Scenario;
+use ogasched::metrics;
+use ogasched::sim;
+use ogasched::utils::table::Table;
+
+fn main() {
+    let mut scenario = Scenario::small();
+    scenario.horizon = 1500; // long enough for the online learner to pass the reactive heuristics
+    println!(
+        "cluster: |L|={} |R|={} K={} T={} rho={} contention={}",
+        scenario.num_ports,
+        scenario.num_instances,
+        scenario.num_resources,
+        scenario.horizon,
+        scenario.arrival_prob,
+        scenario.contention
+    );
+
+    let results = sim::run_paper_lineup(&scenario);
+    let oga = &results[0];
+
+    let mut table = Table::new(&["policy", "avg reward", "cumulative", "vs OGASCHED"]);
+    for run in &results {
+        let delta = if run.policy == "OGASCHED" {
+            "-".to_string()
+        } else {
+            format!("{:+.2}%", metrics::improvement_pct(oga, run))
+        };
+        table.push(&[
+            run.policy.clone(),
+            format!("{:.2}", run.avg_reward()),
+            format!("{:.1}", run.cumulative_reward),
+            delta,
+        ]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,84 @@
+"""AOT export: lower the Layer-2 OGA step to HLO *text* artifacts.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser on
+the Rust side reassigns ids and round-trips cleanly.
+
+One artifact per shape bucket (HLO is fixed-shape).  Scenarios smaller
+than a bucket are zero-padded by the Rust runtime: padded ports get
+x = 0 / mask = 0 (no gradient, no reward) and padded instances get
+mask = 0 / c = 0, so padding is exactly reward- and decision-neutral.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--buckets small,default]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import oga_step_export
+
+# (name, L, R, K).  `default` matches the paper's Tab. 2 cluster;
+# `large` matches the Sec. 4.3 large-scale validation; `small` keeps CI
+# and the quickstart example fast.
+BUCKETS = {
+    "small": (4, 16, 4),
+    "default": (10, 128, 6),
+    "large": (100, 1024, 6),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_bucket(name: str, out_dir: str) -> str:
+    L, R, K = BUCKETS[name]
+    fn, args = oga_step_export(L, R, K)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"oga_step_{name}_L{L}_R{R}_K{K}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="small,default,large",
+                    help="comma-separated bucket names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for name in args.buckets.split(","):
+        name = name.strip()
+        if name not in BUCKETS:
+            raise SystemExit(f"unknown bucket {name!r}; have {list(BUCKETS)}")
+        path = export_bucket(name, args.out_dir)
+        L, R, K = BUCKETS[name]
+        manifest_lines.append(
+            f"{name} L={L} R={R} K={K} file={os.path.basename(path)}"
+        )
+        print(f"wrote {path}")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# bucket L= R= K= file=   (parsed by rust/src/runtime/artifact.rs)\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

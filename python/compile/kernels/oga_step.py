@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: fused OGA gradient + ascent step.
+
+The hot-spot of OGASCHED's slot loop is computing, for every port l,
+
+    z[l, r, k] = y + eta * x_l * mask_lr * ( (f_r^k)'(y) - beta_k * 1{k = k*_l} )
+
+with k*_l = argmax_k beta_k * sum_r y[l, r, k]   (Eq. 30 of the paper).
+
+Kernel design (TPU mindset, executed here with interpret=True — the CPU
+PJRT plugin cannot run Mosaic custom-calls):
+
+  * grid = (L,): one program instance per port.  Each instance owns a
+    (1, R, K) slab of `y` in VMEM via BlockSpec — the reduction over r and
+    the argmax over k needed for k* are slab-local, so `y` is read from HBM
+    exactly once per step.
+  * alpha/kind/beta are small broadcast operands replicated to every
+    program instance (index_map -> block 0); they stay VMEM-resident.
+  * All the utility derivatives are computed as one vectorized select over
+    the (R, K) lanes — pure VPU element-wise work; this op has no
+    contraction so the MXU is intentionally idle (see DESIGN.md
+    §Hardware-Adaptation and EXPERIMENTS.md §Perf for the bandwidth
+    roofline argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KIND_LINEAR, KIND_LOG, KIND_POLY, KIND_RECIPROCAL
+
+
+def _utility_grad_lanes(y, alpha, kind):
+    """(f_r^k)'(y) as a vectorized 4-way select over the (R, K) lanes."""
+    lin = alpha
+    log = alpha / (y + 1.0)
+    rec = 1.0 / jnp.square(y + alpha)
+    poly = alpha / (2.0 * jnp.sqrt(y + 1.0))
+    out = jnp.where(kind == KIND_LINEAR, lin, 0.0)
+    out = jnp.where(kind == KIND_LOG, log, out)
+    out = jnp.where(kind == KIND_RECIPROCAL, rec, out)
+    out = jnp.where(kind == KIND_POLY, poly, out)
+    return out
+
+
+def _oga_ascent_kernel(x_ref, y_ref, mask_ref, alpha_ref, kind_ref,
+                       beta_ref, eta_ref, z_ref):
+    """One program instance == one port l (grid axis 0)."""
+    y = y_ref[0]            # (R, K) slab
+    m = mask_ref[0][:, None]  # (R, 1)
+    alpha = alpha_ref[...]  # (R, K)
+    kind = kind_ref[...]    # (R, K)
+    beta = beta_ref[...]    # (K,)
+    x_l = x_ref[0]
+    eta = eta_ref[0]
+
+    # k* = argmax_k beta_k * sum_r y  (slab-local reduction, Eq. 27)
+    s = jnp.sum(y * m, axis=0)              # (K,)
+    kstar = jnp.argmax(beta * s)
+    k_iota = jax.lax.iota(jnp.int32, y.shape[1])
+    pen = jnp.where(k_iota == kstar, beta, 0.0)[None, :]  # (1, K)
+
+    fp = _utility_grad_lanes(y, alpha, kind)             # (R, K)
+    grad = x_l * m * (fp - pen)
+    z_ref[0] = y + eta * grad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def oga_ascent(x, y, mask, alpha, kind, beta, eta, *, interpret=True):
+    """z = y + eta * grad q(x, y), as a Pallas call tiled over ports.
+
+    Args match ref.py conventions; `eta` is a scalar (reshaped to (1,)).
+    """
+    L, R, K = y.shape
+    eta_v = jnp.reshape(eta, (1,)).astype(y.dtype)
+    return pl.pallas_call(
+        _oga_ascent_kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda l: (l,)),        # x
+            pl.BlockSpec((1, R, K), lambda l: (l, 0, 0)),  # y
+            pl.BlockSpec((1, R), lambda l: (l, 0)),    # mask
+            pl.BlockSpec((R, K), lambda l: (0, 0)),    # alpha
+            pl.BlockSpec((R, K), lambda l: (0, 0)),    # kind
+            pl.BlockSpec((K,), lambda l: (0,)),        # beta
+            pl.BlockSpec((1,), lambda l: (0,)),        # eta
+        ],
+        out_specs=pl.BlockSpec((1, R, K), lambda l: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, R, K), y.dtype),
+        interpret=interpret,
+    )(x.astype(y.dtype), y, mask.astype(y.dtype), alpha.astype(y.dtype),
+      kind, beta.astype(y.dtype), eta_v)

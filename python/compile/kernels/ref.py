@@ -1,0 +1,149 @@
+"""Pure-jnp oracles for the OGASCHED compute step.
+
+These are the correctness references the Pallas kernels (and, transitively,
+the Rust-native implementation through the AOT parity tests) are checked
+against.  Everything here is written for clarity, not speed.
+
+Shapes
+------
+    L : number of job types (ports)
+    R : number of computing instances
+    K : number of resource types
+
+    x     : f32[L]      arrival indicator (0/1; >=2 in the multi-arrival ext.)
+    y     : f32[L, R, K] allocation decision
+    mask  : f32[L, R]   bipartite edge mask (1 iff (l, r) in E)
+    alpha : f32[R, K]   utility coefficient of f_r^k
+    kind  : i32[R, K]   utility family per (r, k)  (see KIND_*)
+    beta  : f32[K]      communication-overhead coefficients
+    a     : f32[L, K]   per-channel request cap a_l^k
+    c     : f32[R, K]   instance capacity c_r^k
+    eta   : f32[]       OGA step size
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Utility families of Eq. (51) in the paper.
+KIND_LINEAR = 0
+KIND_LOG = 1
+KIND_RECIPROCAL = 2
+KIND_POLY = 3
+
+
+def utility(y, alpha, kind):
+    """f_r^k(y) for each element (Eq. 51). `y`, `alpha`, `kind` broadcast."""
+    lin = alpha * y
+    log = alpha * jnp.log1p(y)
+    rec = 1.0 / alpha - 1.0 / (y + alpha)
+    poly = alpha * jnp.sqrt(y + 1.0) - alpha
+    out = jnp.where(kind == KIND_LINEAR, lin, 0.0)
+    out = jnp.where(kind == KIND_LOG, log, out)
+    out = jnp.where(kind == KIND_RECIPROCAL, rec, out)
+    out = jnp.where(kind == KIND_POLY, poly, out)
+    return out
+
+
+def utility_grad(y, alpha, kind):
+    """(f_r^k)'(y) for each element."""
+    lin = alpha * jnp.ones_like(y)
+    log = alpha / (y + 1.0)
+    rec = 1.0 / jnp.square(y + alpha)
+    poly = alpha / (2.0 * jnp.sqrt(y + 1.0))
+    out = jnp.where(kind == KIND_LINEAR, lin, 0.0)
+    out = jnp.where(kind == KIND_LOG, log, out)
+    out = jnp.where(kind == KIND_RECIPROCAL, rec, out)
+    out = jnp.where(kind == KIND_POLY, poly, out)
+    return out
+
+
+def utility_grad_at_zero(alpha, kind):
+    """The bound \\varpi_r^k = (f_r^k)'(0) of Def. 1 (iii)."""
+    return utility_grad(jnp.zeros_like(alpha), alpha, kind)
+
+
+def reward_parts_ref(x, y, mask, alpha, kind, beta):
+    """Per-port (gain_l, penalty_l) of Eq. (7) under the nice setup.
+
+    Returns (gain[L], penalty[L]); the port reward is
+    q_l = x_l * (gain_l - penalty_l).
+    """
+    m = mask[:, :, None]  # [L,R,1]
+    f = utility(y, alpha[None], kind[None]) * m  # [L,R,K]
+    gain = jnp.sum(f, axis=(1, 2))  # [L]
+    s = jnp.sum(y * m, axis=1)  # [L,K] allocated quota per resource type
+    penalty = jnp.max(beta[None, :] * s, axis=1)  # [L]
+    return gain, penalty
+
+
+def reward_ref(x, y, mask, alpha, kind, beta):
+    """(q, total_gain, total_penalty) of Eq. (8), arrivals applied."""
+    gain, penalty = reward_parts_ref(x, y, mask, alpha, kind, beta)
+    q = jnp.sum(x * (gain - penalty))
+    return q, jnp.sum(x * gain), jnp.sum(x * penalty)
+
+
+def grad_ref(x, y, mask, alpha, kind, beta):
+    """The reward gradient of Eq. (30), including the k* penalty branch."""
+    m = mask[:, :, None]
+    s = jnp.sum(y * m, axis=1)  # [L,K]
+    kstar = jnp.argmax(beta[None, :] * s, axis=1)  # [L]
+    fp = utility_grad(y, alpha[None], kind[None])  # [L,R,K]
+    k_idx = jnp.arange(y.shape[2])
+    pen = jnp.where(k_idx[None, None, :] == kstar[:, None, None],
+                    beta[None, None, :], 0.0)
+    return x[:, None, None] * m * (fp - pen)
+
+
+def ascent_ref(x, y, mask, alpha, kind, beta, eta):
+    """One un-projected OGA ascent step: z = y + eta * grad q."""
+    return y + eta * grad_ref(x, y, mask, alpha, kind, beta)
+
+
+def project_ref(z, mask, a, c, iters: int = 64):
+    """Euclidean projection of z onto Y (Eqs. 5-6), via water-filling.
+
+    For each (r, k) independently the problem is
+        min ||v - z[:, r, k]||^2  s.t. 0 <= v_l <= a[l, k], sum_l v_l <= c[r, k]
+    whose exact solution is v_l = clip(z_l - tau, 0, a_l) with tau = 0 if the
+    clipped point is feasible, else the unique root of
+    g(tau) = sum_l clip(z_l - tau, 0, a_l) - c.  We find tau by bisection,
+    which vectorizes over every (r, k) pair at once (the jnp analogue of the
+    per-(r,k)-parallel Algorithm 1 in the paper; tau = rho_r^k / 2 in the
+    paper's KKT notation, Eq. 35).
+
+    Off-edge channels (mask == 0) are forced to zero and do not consume
+    capacity.
+    """
+    m = mask[:, :, None]
+    z = z * m  # off-edge -> 0
+    cap = a[:, None, :] * m  # effective per-channel cap, 0 off-edge
+
+    def g(tau):
+        # tau: [R,K] water level; returns capacity usage at that level [R,K]
+        v = jnp.clip(z - tau[None], 0.0, cap)
+        return jnp.sum(v, axis=0)
+
+    need = g(jnp.zeros_like(c)) > c  # [R,K] is the capacity constraint binding?
+    lo = jnp.zeros_like(c)
+    hi = jnp.max(z, axis=0) + 1e-6  # at tau >= max z_l, g = 0 <= c
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        too_big = g(mid) > c
+        lo = jnp.where(too_big, mid, lo)
+        hi = jnp.where(too_big, hi, mid)
+    tau = jnp.where(need, hi, 0.0)
+    return jnp.clip(z - tau[None], 0.0, cap)
+
+
+def oga_step_ref(x, y, mask, alpha, kind, beta, a, c, eta):
+    """Full reference OGA step: reward at (x, y), then y(t+1).
+
+    Returns (y_next, q, gain, penalty) — the same signature the AOT'd
+    model exports, so the Rust parity tests can reuse it.
+    """
+    q, gain, penalty = reward_ref(x, y, mask, alpha, kind, beta)
+    z = ascent_ref(x, y, mask, alpha, kind, beta, eta)
+    y_next = project_ref(z, mask, a, c)
+    return y_next, q, gain, penalty

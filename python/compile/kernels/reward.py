@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: per-port reward decomposition (Eq. 7).
+
+For every port l computes, over its (R, K) allocation slab,
+
+    gain_l    = sum_{r,k} mask_lr * f_r^k(y[l,r,k])
+    penalty_l = max_k beta_k * sum_r mask_lr * y[l,r,k]
+
+The slot reward is then q = sum_l x_l * (gain_l - penalty_l), reduced at
+Layer 2.  Same tiling story as oga_step.py: grid over ports, one
+(1, R, K) VMEM slab per instance, element-wise utility evaluation on the
+VPU lanes, slab-local reductions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KIND_LINEAR, KIND_LOG, KIND_POLY, KIND_RECIPROCAL
+
+
+def _utility_lanes(y, alpha, kind):
+    """f_r^k(y) as a vectorized 4-way select over the (R, K) lanes."""
+    lin = alpha * y
+    log = alpha * jnp.log1p(y)
+    rec = 1.0 / alpha - 1.0 / (y + alpha)
+    poly = alpha * jnp.sqrt(y + 1.0) - alpha
+    out = jnp.where(kind == KIND_LINEAR, lin, 0.0)
+    out = jnp.where(kind == KIND_LOG, log, out)
+    out = jnp.where(kind == KIND_RECIPROCAL, rec, out)
+    out = jnp.where(kind == KIND_POLY, poly, out)
+    return out
+
+
+def _reward_kernel(y_ref, mask_ref, alpha_ref, kind_ref, beta_ref,
+                   gain_ref, pen_ref):
+    y = y_ref[0]              # (R, K)
+    m = mask_ref[0][:, None]  # (R, 1)
+    f = _utility_lanes(y, alpha_ref[...], kind_ref[...]) * m
+    gain_ref[0] = jnp.sum(f)
+    s = jnp.sum(y * m, axis=0)            # (K,)
+    pen_ref[0] = jnp.max(beta_ref[...] * s)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def reward_parts(y, mask, alpha, kind, beta, *, interpret=True):
+    """Per-port (gain[L], penalty[L]) via the Pallas reward kernel."""
+    L, R, K = y.shape
+    return pl.pallas_call(
+        _reward_kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, R, K), lambda l: (l, 0, 0)),  # y
+            pl.BlockSpec((1, R), lambda l: (l, 0)),        # mask
+            pl.BlockSpec((R, K), lambda l: (0, 0)),        # alpha
+            pl.BlockSpec((R, K), lambda l: (0, 0)),        # kind
+            pl.BlockSpec((K,), lambda l: (0,)),            # beta
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda l: (l,)),
+            pl.BlockSpec((1,), lambda l: (l,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L,), y.dtype),
+            jax.ShapeDtypeStruct((L,), y.dtype),
+        ],
+        interpret=interpret,
+    )(y, mask.astype(y.dtype), alpha.astype(y.dtype), kind,
+      beta.astype(y.dtype))

@@ -1,0 +1,101 @@
+"""Layer-2 JAX model: one full OGASCHED step.
+
+Composes the Layer-1 Pallas kernels (gradient+ascent, reward) with the
+vectorized feasibility projection into a single jittable function.  This
+is what `aot.py` lowers to HLO text for the Rust runtime — Python never
+runs on the request path; the Rust coordinator executes the compiled
+artifact each slot.
+
+The projection is the jnp formulation of the paper's Algorithm 1
+(steps 6-31): for each (r, k) independently, project onto
+{0 <= v_l <= a_l^k, sum_l v_l <= c_r^k}.  The paper finds the KKT
+multiplier rho_r^k by sorting and water-filling; the vectorized
+equivalent here finds tau = rho/2 by bisection over all (R, K) pairs at
+once, which fuses into the same XLA module (no host round trips).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.oga_step import oga_ascent
+from .kernels.reward import reward_parts
+
+# Bisection depth for the projection water level.  48 halvings of an
+# interval of width max(z) <= a few hundred gives ~1e-12 relative
+# precision — far below f32 resolution, so the projection is exact at
+# working precision.
+_PROJ_ITERS = 48
+
+
+def project(z, mask, a, c, iters: int = _PROJ_ITERS):
+    """Euclidean projection of z onto the feasible polytope Y (Eqs. 5-6)."""
+    m = mask[:, :, None]
+    z = z * m
+    cap = a[:, None, :] * m  # per-channel cap; 0 off-edge
+
+    def usage(tau):
+        return jnp.sum(jnp.clip(z - tau[None], 0.0, cap), axis=0)  # [R,K]
+
+    need = usage(jnp.zeros_like(c)) > c
+    lo = jnp.zeros_like(c)
+    hi = jnp.max(z, axis=0) + 1e-6
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_big = usage(mid) > c
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = jnp.where(need, hi, 0.0)
+    return jnp.clip(z - tau[None], 0.0, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def oga_step(x, y, mask, alpha, kind, beta, a, c, eta, *, interpret=True):
+    """One OGASCHED slot: reward at (x, y), then the projected ascent.
+
+    Returns (y_next, q, gain, penalty).  `q/gain/penalty` are the Eq. 8
+    slot aggregates for the *current* decision y(t); `y_next` is y(t+1).
+    """
+    gain_l, pen_l = reward_parts(y, mask, alpha, kind, beta,
+                                 interpret=interpret)
+    q = jnp.sum(x * (gain_l - pen_l))
+    gain = jnp.sum(x * gain_l)
+    penalty = jnp.sum(x * pen_l)
+    z = oga_ascent(x, y, mask, alpha, kind, beta, eta, interpret=interpret)
+    y_next = project(z, mask, a, c)
+    return y_next, q, gain, penalty
+
+
+def oga_step_export(L: int, R: int, K: int):
+    """The (pytree-free, fixed-shape) function `aot.py` lowers.
+
+    Parameter order here defines the artifact's calling convention; the
+    Rust runtime (`rust/src/runtime/executor.rs`) must marshal literals in
+    exactly this order:
+        x[L] f32, y[L,R,K] f32, mask[L,R] f32, alpha[R,K] f32,
+        kind[R,K] i32, beta[K] f32, a[L,K] f32, c[R,K] f32, eta[] f32
+    Outputs (as a tuple): y_next[L,R,K], q[], gain[], penalty[].
+    """
+
+    def fn(x, y, mask, alpha, kind, beta, a, c, eta):
+        return oga_step(x, y, mask, alpha, kind, beta, a, c, eta,
+                        interpret=True)
+
+    args = (
+        jax.ShapeDtypeStruct((L,), jnp.float32),
+        jax.ShapeDtypeStruct((L, R, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, R), jnp.float32),
+        jax.ShapeDtypeStruct((R, K), jnp.float32),
+        jax.ShapeDtypeStruct((R, K), jnp.int32),
+        jax.ShapeDtypeStruct((K,), jnp.float32),
+        jax.ShapeDtypeStruct((L, K), jnp.float32),
+        jax.ShapeDtypeStruct((R, K), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return fn, args

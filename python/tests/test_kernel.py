@@ -1,0 +1,145 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal.
+
+The Pallas kernels (interpret=True) must agree with the pure-jnp oracles
+in ref.py across a hypothesis sweep of shapes, masks, utility mixes and
+dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.oga_step import oga_ascent
+from compile.kernels.reward import reward_parts
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_problem(rng, L, R, K, density=1.0, dtype=jnp.float32):
+    x = (rng.random(L) < 0.7).astype(np.float32)
+    y = rng.random((L, R, K)).astype(np.float32) * 4.0
+    mask = (rng.random((L, R)) < density).astype(np.float32)
+    # every port keeps at least one edge so rewards are non-degenerate
+    mask[np.arange(L), rng.integers(0, R, size=L)] = 1.0
+    alpha = (1.0 + 0.5 * rng.random((R, K))).astype(np.float32)
+    kind = rng.integers(0, 4, size=(R, K)).astype(np.int32)
+    beta = (0.3 + 0.2 * rng.random(K)).astype(np.float32)
+    a = (1.0 + 3.0 * rng.random((L, K))).astype(np.float32)
+    c = (2.0 + 6.0 * rng.random((R, K))).astype(np.float32)
+    y = np.minimum(y, a[:, None, :]) * mask[:, :, None]
+    to = lambda v: jnp.asarray(v, dtype) if v.dtype == np.float32 else jnp.asarray(v)
+    return tuple(map(to, (x, y, mask, alpha, kind, beta, a, c)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.integers(1, 12),
+    R=st.integers(1, 24),
+    K=st.integers(1, 6),
+    density=st.sampled_from([0.4, 0.8, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ascent_kernel_matches_ref(L, R, K, density, seed):
+    rng = np.random.default_rng(seed)
+    x, y, mask, alpha, kind, beta, a, c = make_problem(rng, L, R, K, density)
+    eta = jnp.float32(0.37)
+    got = oga_ascent(x, y, mask, alpha, kind, beta, eta)
+    want = ref.ascent_ref(x, y, mask, alpha, kind, beta, eta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.integers(1, 12),
+    R=st.integers(1, 24),
+    K=st.integers(1, 6),
+    density=st.sampled_from([0.4, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_reward_kernel_matches_ref(L, R, K, density, seed):
+    rng = np.random.default_rng(seed)
+    x, y, mask, alpha, kind, beta, a, c = make_problem(rng, L, R, K, density)
+    gain, pen = reward_parts(y, mask, alpha, kind, beta)
+    want_gain, want_pen = ref.reward_parts_ref(x, y, mask, alpha, kind, beta)
+    np.testing.assert_allclose(np.asarray(gain), np.asarray(want_gain),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pen), np.asarray(want_pen),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ascent_kernel_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    x, y, mask, alpha, kind, beta, a, c = make_problem(
+        rng, 6, 16, 4, dtype=dtype)
+    eta = jnp.asarray(0.25, dtype)
+    got = np.asarray(oga_ascent(x, y, mask, alpha, kind, beta, eta),
+                     np.float32)
+    want = np.asarray(
+        ref.ascent_ref(*(jnp.asarray(np.asarray(v, np.float32))
+                         if v.dtype != jnp.int32 else v
+                         for v in (x, y, mask, alpha, kind, beta)),
+                       0.25), np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_kstar_penalty_branch_only_on_argmax():
+    """Eq. 30: exactly one k per port carries the -beta_k penalty term."""
+    rng = np.random.default_rng(3)
+    x, y, mask, alpha, kind, beta, a, c = make_problem(rng, 5, 8, 4)
+    x = jnp.ones_like(x)
+    eta = jnp.float32(1.0)
+    z = np.asarray(oga_ascent(x, y, mask, alpha, kind, beta, eta))
+    fp = np.asarray(ref.utility_grad(y, alpha[None], kind[None]))
+    m = np.asarray(mask)[:, :, None]
+    diff = (z - np.asarray(y)) - fp * m  # = -beta_{k*} on (masked) k* lanes
+    s = np.asarray(jnp.sum(y * mask[:, :, None], axis=1))
+    kstar = np.argmax(np.asarray(beta)[None] * s, axis=1)
+    for l in range(5):
+        for k in range(4):
+            lane = diff[l, :, k][np.asarray(mask)[l] > 0]
+            if k == kstar[l]:
+                np.testing.assert_allclose(lane, -float(beta[k]), atol=1e-5)
+            else:
+                np.testing.assert_allclose(lane, 0.0, atol=1e-5)
+
+
+def test_zero_arrivals_zero_gradient():
+    rng = np.random.default_rng(11)
+    x, y, mask, alpha, kind, beta, a, c = make_problem(rng, 4, 8, 3)
+    x = jnp.zeros_like(x)
+    z = oga_ascent(x, y, mask, alpha, kind, beta, jnp.float32(5.0))
+    np.testing.assert_allclose(np.asarray(z), np.asarray(y), atol=1e-7)
+
+
+def test_utility_values_match_eq51():
+    """Spot-check the four utility families at hand-computed points."""
+    alpha = jnp.float32(2.0)
+    y = jnp.float32(3.0)
+    assert np.isclose(float(ref.utility(y, alpha, ref.KIND_LINEAR)), 6.0)
+    assert np.isclose(float(ref.utility(y, alpha, ref.KIND_LOG)),
+                      2.0 * np.log(4.0))
+    assert np.isclose(float(ref.utility(y, alpha, ref.KIND_RECIPROCAL)),
+                      0.5 - 1.0 / 5.0)
+    assert np.isclose(float(ref.utility(y, alpha, ref.KIND_POLY)),
+                      2.0 * 2.0 - 2.0)
+    # zero-startup: f(0) = 0 for all families
+    for kind in range(4):
+        assert np.isclose(float(ref.utility(jnp.float32(0.0), alpha, kind)),
+                          0.0, atol=1e-7)
+
+
+def test_varpi_bounds_derivative():
+    """Def. 1 (iii): f' is maximized at 0 (concavity) for every family."""
+    rng = np.random.default_rng(5)
+    alpha = jnp.asarray(1.0 + 0.5 * rng.random((8, 4)), jnp.float32)
+    kind = jnp.asarray(rng.integers(0, 4, (8, 4)), jnp.int32)
+    w0 = np.asarray(ref.utility_grad_at_zero(alpha, kind))
+    for yval in [0.1, 1.0, 7.5, 100.0]:
+        fp = np.asarray(ref.utility_grad(jnp.full((8, 4), yval), alpha, kind))
+        assert (fp <= w0 + 1e-6).all()

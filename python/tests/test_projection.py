@@ -1,0 +1,131 @@
+"""Properties of the feasibility projection (Eqs. 5-6, Alg. 1).
+
+The projection is the part of OGASCHED the regret proof leans on (the
+non-expansiveness step (i) of Eq. 37), so we check it hard:
+feasibility, idempotence, non-expansiveness, KKT optimality, and
+agreement between the L2 `project` (fused, fori_loop) and the ref.py
+bisection oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import project
+
+ATOL = 2e-4  # f32 bisection resolution at ~48-64 halvings
+
+
+def make_problem(rng, L, R, K, density=1.0):
+    z = (rng.random((L, R, K)) * 8.0 - 2.0).astype(np.float32)
+    mask = (rng.random((L, R)) < density).astype(np.float32)
+    mask[np.arange(L), rng.integers(0, R, size=L)] = 1.0
+    a = (0.5 + 3.0 * rng.random((L, K))).astype(np.float32)
+    # keep capacities small enough that the sum constraint actually binds
+    c = (0.5 + 2.0 * rng.random((R, K))).astype(np.float32)
+    return jnp.asarray(z), jnp.asarray(mask), jnp.asarray(a), jnp.asarray(c)
+
+
+def feasible(v, mask, a, c, tol=ATOL):
+    v = np.asarray(v)
+    m = np.asarray(mask)[:, :, None]
+    if (v < -tol).any():
+        return False
+    if (v > np.asarray(a)[:, None, :] + tol).any():
+        return False
+    if (np.abs(v * (1 - m)) > tol).any():
+        return False
+    return (v.sum(axis=0) <= np.asarray(c) + tol * v.shape[0]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(L=st.integers(1, 10), R=st.integers(1, 12), K=st.integers(1, 5),
+       density=st.sampled_from([0.5, 1.0]), seed=st.integers(0, 2**31 - 1))
+def test_projection_feasible(L, R, K, density, seed):
+    rng = np.random.default_rng(seed)
+    z, mask, a, c = make_problem(rng, L, R, K, density)
+    v = project(z, mask, a, c)
+    assert feasible(v, mask, a, c)
+
+
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(1, 8), R=st.integers(1, 10), K=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_projection_idempotent(L, R, K, seed):
+    rng = np.random.default_rng(seed)
+    z, mask, a, c = make_problem(rng, L, R, K)
+    v = project(z, mask, a, c)
+    v2 = project(v, mask, a, c)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v), atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(1, 8), R=st.integers(1, 10), K=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_projection_nonexpansive(L, R, K, seed):
+    """||P(z1) - P(z2)|| <= ||z1 - z2|| — the crux of the regret proof."""
+    rng = np.random.default_rng(seed)
+    z1, mask, a, c = make_problem(rng, L, R, K)
+    z2 = z1 + jnp.asarray((rng.random(z1.shape) - 0.5).astype(np.float32))
+    # compare on-edge coordinates only (off-edge are clamped to 0 anyway)
+    m = np.asarray(mask)[:, :, None]
+    d_in = np.linalg.norm((np.asarray(z1) - np.asarray(z2)) * m)
+    d_out = np.linalg.norm(np.asarray(project(z1, mask, a, c)) -
+                           np.asarray(project(z2, mask, a, c)))
+    assert d_out <= d_in + 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(1, 8), R=st.integers(1, 10), K=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_projection_matches_ref(L, R, K, seed):
+    rng = np.random.default_rng(seed)
+    z, mask, a, c = make_problem(rng, L, R, K)
+    np.testing.assert_allclose(np.asarray(project(z, mask, a, c)),
+                               np.asarray(ref.project_ref(z, mask, a, c)),
+                               atol=5e-4)
+
+
+def test_projection_interior_point_untouched():
+    """A point already in the interior of Y must be returned unchanged."""
+    rng = np.random.default_rng(0)
+    L, R, K = 4, 6, 3
+    mask = jnp.ones((L, R), jnp.float32)
+    a = jnp.full((L, K), 10.0, jnp.float32)
+    c = jnp.full((R, K), 100.0, jnp.float32)
+    z = jnp.asarray(rng.random((L, R, K)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(project(z, mask, a, c)),
+                               np.asarray(z), atol=1e-6)
+
+
+def test_projection_kkt_optimality():
+    """Check v is the *closest* feasible point, not just feasible:
+    compare against a dense random sample of feasible alternatives."""
+    rng = np.random.default_rng(42)
+    L, R, K = 5, 4, 3
+    z, mask, a, c = make_problem(rng, L, R, K)
+    v = np.asarray(project(z, mask, a, c))
+    dist_v = np.linalg.norm(v - np.asarray(z) * np.asarray(mask)[:, :, None])
+    for _ in range(200):
+        w = rng.random((L, R, K)).astype(np.float32) * np.asarray(a)[:, None, :]
+        w *= np.asarray(mask)[:, :, None]
+        # rescale columns to satisfy capacity
+        use = w.sum(axis=0)
+        scale = np.minimum(1.0, np.asarray(c) / np.maximum(use, 1e-9))
+        w *= scale[None]
+        assert feasible(w, mask, a, c)
+        assert np.linalg.norm(w - np.asarray(z) * np.asarray(mask)[:, :, None]) \
+            >= dist_v - 1e-3
+
+
+def test_water_level_matches_paper_rho():
+    """On an interior-free instance, tau must equal rho/2 of Eq. 35."""
+    # Single (r, k), 3 ports, no a-cap binding, capacity binding:
+    z = jnp.asarray(np.array([[[3.0]], [[2.0]], [[1.0]]], np.float32))
+    mask = jnp.ones((3, 1), jnp.float32)
+    a = jnp.full((3, 1), 10.0, jnp.float32)
+    c = jnp.full((1, 1), 3.0, jnp.float32)
+    v = np.asarray(project(z, mask, a, c))[:, 0, 0]
+    # B3 = {all}; rho/2 = (sum z - c)/|B3| = (6-3)/3 = 1  =>  v = z - 1
+    np.testing.assert_allclose(v, [2.0, 1.0, 0.0], atol=1e-4)

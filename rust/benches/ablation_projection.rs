@@ -1,0 +1,58 @@
+//! Ablation bench: Algorithm 1's fast projection.
+//!
+//! Compares (a) the breakpoint-scan channel projector against the
+//! bisection reference, (b) serial vs parallel full-tensor projection
+//! (the "for each (r,k) in parallel" claim), across problem scales.
+
+use ogasched::benchlib::{time_fn, Reporter};
+use ogasched::config::Scenario;
+use ogasched::oga::projection::{
+    project, project_channel, project_channel_bisect, project_serial,
+};
+use ogasched::traces::synthesize;
+use ogasched::utils::rng::Rng;
+
+fn main() {
+    let mut rep = Reporter::new("ablation_projection");
+
+    // (a) single-channel projector vs bisection reference
+    let mut rng = Rng::new(7);
+    for n in [8usize, 64, 512] {
+        let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 6.0)).collect();
+        let caps: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 3.0)).collect();
+        let cap = 0.3 * caps.iter().sum::<f64>();
+        let mut breaks = Vec::new();
+        rep.record(time_fn(&format!("channel breakpoint-scan n={n}"), 10, 200, || {
+            let mut v = vals.clone();
+            std::hint::black_box(project_channel(&mut v, &caps, cap, &mut breaks));
+        }));
+        rep.record(time_fn(&format!("channel bisection-ref  n={n}"), 10, 200, || {
+            let mut v = vals.clone();
+            std::hint::black_box(project_channel_bisect(&mut v, &caps, cap));
+        }));
+    }
+
+    // (b) full-tensor projection: serial vs parallel
+    for (name, mut scenario) in [
+        ("default 10x128x6", Scenario::default()),
+        ("large 100x1024x6", Scenario::large_scale()),
+    ] {
+        scenario.horizon = 1;
+        let p = synthesize(&scenario);
+        let mut rng = Rng::new(3);
+        let z: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(-1.0, 8.0)).collect();
+        rep.record(time_fn(&format!("project serial   {name}"), 2, 20, || {
+            let mut zz = z.clone();
+            project_serial(&p, &mut zz);
+            std::hint::black_box(&zz);
+        }));
+        for workers in [2usize, 4, 8] {
+            rep.record(time_fn(&format!("project par({workers})  {name}"), 2, 20, || {
+                let mut zz = z.clone();
+                project(&p, &mut zz, workers);
+                std::hint::black_box(&zz);
+            }));
+        }
+    }
+    rep.finish();
+}

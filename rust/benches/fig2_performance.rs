@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 2 (performance verification) and time the
+//! underlying lineup run.  OGASCHED_BENCH_SCALE shrinks T for CI.
+
+use ogasched::benchlib::{scaled, time_fn, Reporter};
+use ogasched::figures::fig2;
+
+fn main() {
+    let mut rep = Reporter::new("fig2_performance");
+    let t = scaled(8000, 200);
+    rep.record(time_fn(&format!("fig2 lineup T={t}"), 0, 1, || {
+        let out = fig2::run(t);
+        std::hint::black_box(&out);
+    }));
+    rep.section("Fig. 2 output", fig2::run(t));
+    rep.finish();
+}

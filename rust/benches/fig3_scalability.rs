@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 3 (scalability over |R|, |L|, contention).
+
+use ogasched::benchlib::{scaled, time_fn, Reporter};
+use ogasched::figures::fig3;
+
+fn main() {
+    let mut rep = Reporter::new("fig3_scalability");
+    let t = scaled(2000, 100);
+    rep.record(time_fn(&format!("fig3 sweeps T={t}"), 0, 1, || {
+        std::hint::black_box(&fig3::run(t));
+    }));
+    rep.section("Fig. 3 output", fig3::run(t));
+    rep.finish();
+}

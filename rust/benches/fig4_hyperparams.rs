@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 4 (eta0 / decay sensitivity).
+
+use ogasched::benchlib::{scaled, time_fn, Reporter};
+use ogasched::figures::fig4;
+
+fn main() {
+    let mut rep = Reporter::new("fig4_hyperparams");
+    let t = scaled(2000, 100);
+    rep.record(time_fn(&format!("fig4 sweeps T={t}"), 0, 1, || {
+        std::hint::black_box(&fig4::run(t));
+    }));
+    rep.section("Fig. 4 output", fig4::run(t));
+    rep.finish();
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 5 (|L|=100, |R|=1024 large-scale validation).
+//! Paper T=10000; scale via OGASCHED_BENCH_SCALE (default here: 1000
+//! slots — the full horizon takes a long while on one box).
+
+use ogasched::benchlib::{bench_scale, time_fn, Reporter};
+use ogasched::figures::fig5;
+
+fn main() {
+    let mut rep = Reporter::new("fig5_large_scale");
+    let t = ((10_000.0 * bench_scale() * 0.1) as usize).max(50);
+    rep.record(time_fn(&format!("fig5 large-scale T={t}"), 0, 1, || {
+        std::hint::black_box(&fig5::run(t));
+    }));
+    rep.section("Fig. 5 output", fig5::run(t));
+    rep.finish();
+}

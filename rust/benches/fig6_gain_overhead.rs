@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 6 (gain vs penalty per contention level).
+
+use ogasched::benchlib::{scaled, time_fn, Reporter};
+use ogasched::figures::fig6;
+
+fn main() {
+    let mut rep = Reporter::new("fig6_gain_overhead");
+    let t = scaled(2000, 100);
+    rep.record(time_fn(&format!("fig6 sweep T={t}"), 0, 1, || {
+        std::hint::black_box(&fig6::run(t));
+    }));
+    rep.section("Fig. 6 output", fig6::run(t));
+    rep.finish();
+}

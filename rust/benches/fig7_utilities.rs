@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 7 (cumulative rewards per utility family).
+
+use ogasched::benchlib::{scaled, time_fn, Reporter};
+use ogasched::figures::fig7;
+
+fn main() {
+    let mut rep = Reporter::new("fig7_utilities");
+    let t = scaled(2000, 100);
+    rep.record(time_fn(&format!("fig7 sweep T={t}"), 0, 1, || {
+        std::hint::black_box(&fig7::run(t));
+    }));
+    rep.section("Fig. 7 output", fig7::run(t));
+    rep.finish();
+}

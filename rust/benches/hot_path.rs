@@ -1,0 +1,59 @@
+//! Hot-path bench: per-slot latency of the whole L3 loop and its parts —
+//! gradient, projection, reward, native full step, and the PJRT-compiled
+//! step (when artifacts are present).  This is the §Perf baseline /
+//! after table of EXPERIMENTS.md.
+
+use ogasched::benchlib::{time_fn, Reporter};
+use ogasched::config::Scenario;
+use ogasched::oga::gradient::{gradient, GradScratch};
+use ogasched::oga::projection::project;
+use ogasched::oga::{LearningRate, OgaState};
+use ogasched::reward::slot_reward_scratch;
+use ogasched::runtime::{default_dir, Manifest, OgaStepExecutor};
+use ogasched::traces::synthesize;
+use ogasched::utils::rng::Rng;
+
+fn main() {
+    let mut rep = Reporter::new("hot_path");
+    for (name, mut scenario) in [
+        ("small 4x16x4", Scenario::small()),
+        ("default 10x128x6", Scenario::default()),
+        ("large 100x1024x6", Scenario::large_scale()),
+    ] {
+        scenario.horizon = 1;
+        let p = synthesize(&scenario);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..p.num_ports())
+            .map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 })
+            .collect();
+        let y: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(0.0, 1.0)).collect();
+
+        let mut grad = vec![0.0; p.decision_len()];
+        let mut scratch = GradScratch::default();
+        rep.record(time_fn(&format!("gradient          {name}"), 3, 50, || {
+            gradient(&p, &x, &y, &mut grad, &mut scratch);
+            std::hint::black_box(&grad);
+        }));
+        rep.record(time_fn(&format!("projection(auto)  {name}"), 3, 50, || {
+            let mut z = y.clone();
+            project(&p, &mut z, 0);
+            std::hint::black_box(&z);
+        }));
+        let mut quota = vec![0.0; p.num_resources];
+        rep.record(time_fn(&format!("reward            {name}"), 3, 50, || {
+            std::hint::black_box(slot_reward_scratch(&p, &x, &y, &mut quota));
+        }));
+        let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);
+        rep.record(time_fn(&format!("native OGA step   {name}"), 3, 50, || {
+            state.step(&p, &x);
+        }));
+        if let Ok(manifest) = Manifest::load(default_dir()) {
+            if let Ok(mut exec) = OgaStepExecutor::new(&manifest, &p) {
+                rep.record(time_fn(&format!("PJRT OGA step     {name}"), 3, 50, || {
+                    std::hint::black_box(exec.step(&x, 0.5).expect("pjrt"));
+                }));
+            }
+        }
+    }
+    rep.finish();
+}

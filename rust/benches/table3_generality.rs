@@ -1,0 +1,14 @@
+//! Bench: regenerate Tab. 3 (generality & robustness grid).
+
+use ogasched::benchlib::{scaled, time_fn, Reporter};
+use ogasched::figures::table3;
+
+fn main() {
+    let mut rep = Reporter::new("table3_generality");
+    let t = scaled(2000, 50);
+    rep.record(time_fn(&format!("table3 grid (base T={t})"), 0, 1, || {
+        std::hint::black_box(&table3::run(t));
+    }));
+    rep.section("Tab. 3 output", table3::run(t));
+    rep.finish();
+}

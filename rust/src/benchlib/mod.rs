@@ -1,0 +1,163 @@
+//! Hand-rolled bench harness (criterion is not available offline).
+//!
+//! Provides warmup + repeated timing with mean/σ, a row collector that
+//! renders paper-style tables, and CSV export under `results/`.  Every
+//! file in `benches/` is a `harness = false` binary built on this.
+
+use std::time::Instant;
+
+use crate::utils::csv::Csv;
+use crate::utils::stats;
+use crate::utils::table::Table;
+
+/// One timed measurement.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            1.0 / self.mean_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_secs: stats::mean(&samples),
+        std_secs: stats::std(&samples),
+        min_secs: stats::min(&samples),
+    }
+}
+
+/// Collector that renders/persists a bench's output.
+pub struct Reporter {
+    bench: String,
+    timings: Vec<Timing>,
+    sections: Vec<(String, String)>,
+}
+
+impl Reporter {
+    pub fn new(bench: &str) -> Self {
+        println!("=== bench: {bench} ===");
+        Reporter { bench: bench.to_string(), timings: Vec::new(), sections: Vec::new() }
+    }
+
+    pub fn record(&mut self, t: Timing) {
+        println!(
+            "  {:<44} {:>12.3} ms ±{:>8.3}  ({} iters)",
+            t.name,
+            t.mean_secs * 1e3,
+            t.std_secs * 1e3,
+            t.iters
+        );
+        self.timings.push(t);
+    }
+
+    /// Attach a named table/section to the output (figure rows).
+    pub fn section(&mut self, title: &str, body: impl std::fmt::Display) {
+        let body = body.to_string();
+        println!("--- {title} ---\n{body}");
+        self.sections.push((title.to_string(), body));
+    }
+
+    /// Persist timings CSV + sections to results/bench/.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("results/bench");
+        let mut csv = Csv::new(&["name", "iters", "mean_secs", "std_secs", "min_secs"]);
+        for t in &self.timings {
+            csv.push_row(&[
+                t.name.clone(),
+                t.iters.to_string(),
+                format!("{}", t.mean_secs),
+                format!("{}", t.std_secs),
+                format!("{}", t.min_secs),
+            ]);
+        }
+        let _ = csv.write_file(dir.join(format!("{}_timings.csv", self.bench)));
+        let mut all = String::new();
+        for (title, body) in &self.sections {
+            all.push_str(&format!("--- {title} ---\n{body}\n"));
+        }
+        if !all.is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+            let _ = std::fs::write(dir.join(format!("{}_sections.txt", self.bench)), all);
+        }
+        println!("=== bench {} done ===", self.bench);
+    }
+}
+
+/// Render a policy-vs-metric table (common bench output shape).
+pub fn policy_table(header: &[&str], rows: &[(String, Vec<f64>)], prec: usize) -> String {
+    let mut t = Table::new(header);
+    for (label, vals) in rows {
+        t.push_labeled(label, vals, prec);
+    }
+    t.render()
+}
+
+/// Benches honor `OGASCHED_BENCH_SCALE` (0 < scale ≤ 1) to shrink
+/// horizons for CI; default 1.0 regenerates the paper-scale runs.
+pub fn bench_scale() -> f64 {
+    std::env::var("OGASCHED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(|v: f64| v.clamp(0.001, 1.0))
+        .unwrap_or(1.0)
+}
+
+/// Scale a horizon by `bench_scale()`, keeping at least `min`.
+pub fn scaled(t: usize, min: usize) -> usize {
+    ((t as f64 * bench_scale()) as usize).max(min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time_fn("noop", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_secs >= 0.0);
+        assert!(t.min_secs <= t.mean_secs + 1e-12);
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn policy_table_renders() {
+        let s = policy_table(
+            &["policy", "reward"],
+            &[("OGASCHED".into(), vec![123.456])],
+            2,
+        );
+        assert!(s.contains("123.46"));
+    }
+
+    #[test]
+    fn scaled_floors() {
+        assert!(scaled(1000, 50) >= 50);
+    }
+}

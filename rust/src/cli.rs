@@ -1,0 +1,130 @@
+//! Hand-rolled CLI (clap is not available offline): subcommands, flags
+//! with values, and a help screen.  Used by `main.rs`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args, and `--key value`
+/// / `--flag` options.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                return Err(format!("expected a subcommand, got `{cmd}`"));
+            }
+            out.command = cmd;
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("stray `--`".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: `{v}` is not an integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: `{v}` is not a number")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub const HELP: &str = "\
+ogasched — online multi-server job scheduling with sublinear regret
+(reproduction of Zhao et al., 2023; see DESIGN.md)
+
+USAGE:
+    ogasched <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run        run one scenario with one policy
+               --policy <ogasched|ogasched-hlo|ogasched-mirror|drf|fairness|binpacking|spreading|random>
+               --config <file.toml>   scenario config (TOML subset)
+               --horizon N --ports N --instances N --resources N
+               --rho F --contention F --eta0 F --decay F --seed N
+    compare    run the full paper lineup on one scenario (same options)
+    figure     regenerate a paper figure/table:
+               ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|all>
+               --horizon N   override T (0 = paper scale)
+    artifacts  check AOT artifacts and run a PJRT smoke step
+    help       show this help
+
+EXAMPLES:
+    ogasched compare --horizon 2000
+    ogasched figure fig2 --horizon 1000
+    ogasched run --policy ogasched-hlo --horizon 500
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("figure fig2 --horizon 500 --verbose");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert_eq!(a.opt("horizon"), Some("500"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --policy=drf --rho=0.5");
+        assert_eq!(a.opt("policy"), Some("drf"));
+        assert_eq!(a.opt_f64("rho", 0.7).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn typed_accessors_error_cleanly() {
+        let a = parse("run --horizon abc");
+        assert!(a.opt_usize("horizon", 1).is_err());
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_leading_option() {
+        assert!(Args::parse(vec!["--oops".to_string()]).is_err());
+    }
+}

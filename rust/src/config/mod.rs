@@ -1,0 +1,8 @@
+//! Configuration system: a TOML-subset parser (`value`) and the typed
+//! experiment schema (`scenario`).
+
+pub mod scenario;
+pub mod value;
+
+pub use scenario::{GraphSpec, Scenario};
+pub use value::{Doc, Value};

@@ -1,0 +1,275 @@
+//! Typed scenario schema: the experiment knobs of Tab. 2 plus graph
+//! shape, utility mix and seeding.  Scenarios can be built from defaults,
+//! programmatically tweaked by the figure harnesses, or loaded from a
+//! TOML-subset config file (see `examples/configs/*.toml`).
+
+use crate::config::value::Doc;
+use crate::oga::utilities::UtilityMix;
+
+/// How the bipartite graph is generated.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GraphSpec {
+    /// Complete bipartite (no locality constraints).
+    Full,
+    /// Right d-regular.
+    RightRegular(usize),
+    /// Random with target density Σ|L_r|/|R|.
+    Density(f64),
+}
+
+impl GraphSpec {
+    pub fn name(&self) -> String {
+        match self {
+            GraphSpec::Full => "full".into(),
+            GraphSpec::RightRegular(d) => format!("regular-{d}"),
+            GraphSpec::Density(d) => format!("density-{d}"),
+        }
+    }
+}
+
+/// All knobs of one simulated experiment (defaults = paper Tab. 2).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    /// |L| — job types.
+    pub num_ports: usize,
+    /// |R| — computing instances.
+    pub num_instances: usize,
+    /// K — resource types.
+    pub num_resources: usize,
+    /// T — time horizon.
+    pub horizon: usize,
+    /// ρ — Bernoulli job-arrival probability per port per slot.
+    pub arrival_prob: f64,
+    /// Contention level: multiplier on job resource requirements.
+    pub contention: f64,
+    /// α sampled uniformly from this range per (r, k).
+    pub alpha_range: (f64, f64),
+    /// β sampled uniformly from this range per k.
+    pub beta_range: (f64, f64),
+    /// η₀ — initial learning rate.
+    pub eta0: f64,
+    /// λ — multiplicative learning-rate decay per slot.
+    pub decay: f64,
+    pub graph: GraphSpec,
+    pub utility_mix: UtilityMix,
+    pub seed: u64,
+    /// Worker threads for the parallel projection (0 = auto).
+    pub workers: usize,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "default".into(),
+            num_ports: 10,
+            num_instances: 128,
+            num_resources: 6,
+            horizon: 2000,
+            arrival_prob: 0.7,
+            contention: 10.0,
+            alpha_range: (1.0, 1.5),
+            beta_range: (0.3, 0.5),
+            // Tab. 2 lists eta0 = 25 for the authors' raw trace units; our
+            // device capacities are normalized (see traces::alibaba), which
+            // shrinks gradient magnitudes — eta0 = 2 sits at the optimum of
+            // the Fig. 4 sweep on this scaling (EXPERIMENTS.md §Fig4).
+            eta0: 2.0,
+            decay: 0.9999,
+            graph: GraphSpec::Density(3.0),
+            utility_mix: UtilityMix::Mixed,
+            seed: 2023,
+            workers: 0,
+        }
+    }
+}
+
+impl Scenario {
+    /// The Sec. 4.3 large-scale validation setting (Fig. 5).
+    ///
+    /// The paper lists beta in [0.01, 0.015] for its raw trace units,
+    /// where per-job quotas are ~30x larger than under our normalized
+    /// allocation units (see traces::alibaba); what matters in Eq. 7 is
+    /// the product beta_k * quota_k, so the unit-consistent penalty
+    /// keeps the Tab. 2 default beta range here.  With the raw tiny
+    /// beta the problem degenerates to penalty-free greedy saturation
+    /// and every policy ties (measured in EXPERIMENTS.md §Fig5).
+    pub fn large_scale() -> Self {
+        Scenario {
+            name: "large-scale".into(),
+            num_ports: 100,
+            num_instances: 1024,
+            horizon: 10_000,
+            contention: 5.0,
+            ..Scenario::default()
+        }
+    }
+
+    /// A small scenario for quickstart/tests/CI.
+    pub fn small() -> Self {
+        Scenario {
+            name: "small".into(),
+            num_ports: 4,
+            num_instances: 16,
+            num_resources: 4,
+            horizon: 200,
+            contention: 2.0,
+            ..Scenario::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_ports == 0 || self.num_instances == 0 || self.num_resources == 0 {
+            return Err("ports/instances/resources must be > 0".into());
+        }
+        if self.horizon == 0 {
+            return Err("horizon must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.arrival_prob) {
+            return Err(format!("arrival_prob {} outside [0,1]", self.arrival_prob));
+        }
+        if self.contention <= 0.0 {
+            return Err("contention must be > 0".into());
+        }
+        if self.alpha_range.0 > self.alpha_range.1 || self.alpha_range.0 <= 0.0 {
+            return Err(format!("bad alpha_range {:?}", self.alpha_range));
+        }
+        if self.beta_range.0 > self.beta_range.1
+            || self.beta_range.0 < 0.0
+            || self.beta_range.1 > 1.0
+        {
+            return Err(format!("bad beta_range {:?} (β ∈ [0,1])", self.beta_range));
+        }
+        if self.eta0 <= 0.0 || self.decay <= 0.0 {
+            return Err("eta0 and decay must be > 0".into());
+        }
+        if let GraphSpec::Density(d) = self.graph {
+            if d < 0.0 || d > self.num_ports as f64 {
+                return Err(format!("density {d} outside [0, |L|]"));
+            }
+        }
+        if let GraphSpec::RightRegular(d) = self.graph {
+            if d == 0 || d > self.num_ports {
+                return Err(format!("regular degree {d} outside [1, |L|]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from a TOML-subset document.  Unknown keys are rejected so
+    /// config typos fail loudly.
+    pub fn from_doc(doc: &Doc) -> Result<Scenario, String> {
+        const KNOWN: &[&str] = &[
+            "name", "ports", "instances", "resources", "horizon", "arrival_prob",
+            "contention", "alpha_range", "beta_range", "eta0", "decay", "graph",
+            "graph_degree", "graph_density", "utility_mix", "seed", "workers",
+        ];
+        for key in doc.entries.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("unknown config key `{key}`"));
+            }
+        }
+        let d = Scenario::default();
+        let range = |key: &str, dv: (f64, f64)| -> Result<(f64, f64), String> {
+            match doc.get(key) {
+                None => Ok(dv),
+                Some(_) => {
+                    let v = doc.f64_array(key)?;
+                    if v.len() != 2 {
+                        return Err(format!("{key}: expected [lo, hi]"));
+                    }
+                    Ok((v[0], v[1]))
+                }
+            }
+        };
+        let graph = match doc.str_or("graph", "density")? {
+            "full" => GraphSpec::Full,
+            "regular" => GraphSpec::RightRegular(doc.usize_or("graph_degree", 3)?),
+            "density" => GraphSpec::Density(doc.f64_or("graph_density", 3.0)?),
+            other => return Err(format!("graph: unknown kind `{other}`")),
+        };
+        let mix_name = doc.str_or("utility_mix", "mixed")?;
+        let utility_mix = UtilityMix::from_name(mix_name)
+            .ok_or_else(|| format!("utility_mix: unknown `{mix_name}`"))?;
+        let s = Scenario {
+            name: doc.str_or("name", &d.name)?.to_string(),
+            num_ports: doc.usize_or("ports", d.num_ports)?,
+            num_instances: doc.usize_or("instances", d.num_instances)?,
+            num_resources: doc.usize_or("resources", d.num_resources)?,
+            horizon: doc.usize_or("horizon", d.horizon)?,
+            arrival_prob: doc.f64_or("arrival_prob", d.arrival_prob)?,
+            contention: doc.f64_or("contention", d.contention)?,
+            alpha_range: range("alpha_range", d.alpha_range)?,
+            beta_range: range("beta_range", d.beta_range)?,
+            eta0: doc.f64_or("eta0", d.eta0)?,
+            decay: doc.f64_or("decay", d.decay)?,
+            graph,
+            utility_mix,
+            seed: doc.usize_or("seed", d.seed as usize)? as u64,
+            workers: doc.usize_or("workers", d.workers)?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Scenario, String> {
+        Scenario::from_doc(&Doc::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_tab2() {
+        let s = Scenario::default();
+        assert_eq!(s.num_ports, 10);
+        assert_eq!(s.num_instances, 128);
+        assert_eq!(s.num_resources, 6);
+        assert_eq!(s.horizon, 2000);
+        assert_eq!(s.arrival_prob, 0.7);
+        assert_eq!(s.contention, 10.0);
+        assert_eq!(s.alpha_range, (1.0, 1.5));
+        assert_eq!(s.beta_range, (0.3, 0.5));
+        assert_eq!(s.eta0, 2.0);
+        assert_eq!(s.decay, 0.9999);
+        s.validate().unwrap();
+        Scenario::large_scale().validate().unwrap();
+        Scenario::small().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip_overrides() {
+        let s = Scenario::from_toml(
+            "name = \"exp\"\nports = 5\nhorizon = 100\narrival_prob = 0.5\n\
+             alpha_range = [1.0, 2.0]\ngraph = \"regular\"\ngraph_degree = 2\n\
+             utility_mix = \"all-log\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.name, "exp");
+        assert_eq!(s.num_ports, 5);
+        assert_eq!(s.horizon, 100);
+        assert_eq!(s.alpha_range, (1.0, 2.0));
+        assert_eq!(s.graph, GraphSpec::RightRegular(2));
+        assert_eq!(s.utility_mix.name(), "all-log");
+        // unspecified keys keep Tab. 2 defaults
+        assert_eq!(s.num_instances, 128);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(Scenario::from_toml("portz = 5\n").unwrap_err().contains("unknown"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Scenario::from_toml("arrival_prob = 1.5\n").is_err());
+        assert!(Scenario::from_toml("beta_range = [0.5, 2.0]\n").is_err());
+        assert!(Scenario::from_toml("graph = \"hexagon\"\n").is_err());
+        assert!(Scenario::from_toml("utility_mix = \"all-cubic\"\n").is_err());
+        let mut s = Scenario::default();
+        s.horizon = 0;
+        assert!(s.validate().is_err());
+    }
+}

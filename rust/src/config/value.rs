@@ -1,0 +1,377 @@
+//! A TOML-subset parser (the `toml`/`serde` crates are unavailable
+//! offline).  Supported grammar — everything the scenario files need:
+//!
+//! ```toml
+//! # comment
+//! key = 1.5            # float / int
+//! name = "string"      # basic strings with \" escapes
+//! flag = true          # bool
+//! xs = [1, 2, 3]       # homogeneous arrays (numbers or strings)
+//!
+//! [section]            # tables, one level deep
+//! key = 2
+//! [section.sub]        # dotted headers flatten to "section.sub"
+//! ```
+//!
+//! Values are kept dynamically typed (`Value`), with typed accessors on
+//! `Doc` that produce precise error messages (`section.key: expected
+//! float, got string`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "\"{v}\""),
+            Value::Array(vs) => {
+                write!(f, "[")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Float(_) => "float",
+            Value::Int(_) => "int",
+            Value::Bool(_) => "bool",
+            Value::Str(_) => "string",
+            Value::Array(_) => "array",
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flattened `section.key -> Value` map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[') {
+                let header = header
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if header.is_empty() {
+                    return Err(err(lineno, "empty section header"));
+                }
+                section = header.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| err(lineno, &e))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(full.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key `{full}`")));
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, String> {
+        self.typed(key, "float", Value::as_f64)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(_) => self.f64(key),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, String> {
+        self.typed(key, "int", Value::as_usize)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(_) => self.usize(key),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("{key}: expected bool, got {}", v.type_name())),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| format!("{key}: expected string, got {}", v.type_name())),
+        }
+    }
+
+    pub fn f64_array(&self, key: &str) -> Result<Vec<f64>, String> {
+        match self.get(key) {
+            None => Err(format!("{key}: missing")),
+            Some(Value::Array(vs)) => vs
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| format!("{key}: non-numeric array element {v}"))
+                })
+                .collect(),
+            Some(v) => Err(format!("{key}: expected array, got {}", v.type_name())),
+        }
+    }
+
+    fn typed<T>(
+        &self,
+        key: &str,
+        want: &str,
+        f: impl Fn(&Value) -> Option<T>,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Err(format!("{key}: missing")),
+            Some(v) => {
+                f(v).ok_or_else(|| format!("{key}: expected {want}, got {}", v.type_name()))
+            }
+        }
+    }
+
+    /// Keys under a section prefix (e.g. all `jobs.*`).
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        let pre = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&pre))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> String {
+    format!("line {}: {msg}", lineno + 1)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if body.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(body).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(v) = s.parse::<i64>() {
+            return Ok(Value::Int(v));
+        }
+    }
+    s.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("cannot parse value `{s}`"))
+}
+
+/// Split an array body on commas not inside strings/nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = Doc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n[s]\ne = 3\n[s.t]\nf = [1, 2.5]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(1)));
+        assert_eq!(doc.f64("b").unwrap(), 2.5);
+        assert_eq!(doc.str_or("c", "").unwrap(), "hi");
+        assert!(doc.bool_or("d", false).unwrap());
+        assert_eq!(doc.usize("s.e").unwrap(), 3);
+        assert_eq!(doc.f64_array("s.t.f").unwrap(), vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn comments_stripped_outside_strings() {
+        let doc = Doc::parse("a = 1 # trailing\ns = \"x # y\"\n").unwrap();
+        assert_eq!(doc.usize("a").unwrap(), 1);
+        assert_eq!(doc.str_or("s", "").unwrap(), "x # y");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Doc::parse("a = 1\na = 2\n").unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn typed_access_errors_are_precise() {
+        let doc = Doc::parse("a = \"str\"\n").unwrap();
+        let e = doc.f64("a").unwrap_err();
+        assert!(e.contains("expected float, got string"), "{e}");
+        assert!(doc.f64("missing").unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn defaults_apply_only_when_absent() {
+        let doc = Doc::parse("a = 2\n").unwrap();
+        assert_eq!(doc.usize_or("a", 7).unwrap(), 2);
+        assert_eq!(doc.usize_or("b", 7).unwrap(), 7);
+        // present but wrong type is still an error
+        let doc = Doc::parse("a = \"x\"\n").unwrap();
+        assert!(doc.usize_or("a", 7).is_err());
+    }
+
+    #[test]
+    fn nested_arrays_and_strings_with_commas() {
+        let doc = Doc::parse("a = [\"x,y\", \"z\"]\n").unwrap();
+        match doc.get("a").unwrap() {
+            Value::Array(vs) => {
+                assert_eq!(vs[0], Value::Str("x,y".into()));
+                assert_eq!(vs.len(), 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn section_keys_enumerates() {
+        let doc = Doc::parse("[jobs]\na = 1\nb = 2\n[other]\nc = 3\n").unwrap();
+        let keys = doc.section_keys("jobs");
+        assert_eq!(keys, vec!["jobs.a", "jobs.b"]);
+    }
+}

@@ -1,0 +1,216 @@
+//! The leader event loop — Layer 3's request path.
+//!
+//! Per slot: ingest arrivals → ask the policy for a decision → commit it
+//! to the cluster ledger → score the Eq. 8 reward → release.  The loop
+//! is allocation-free in steady state (all buffers are pre-sized) and
+//! records a full per-slot time series for the figure harnesses.
+
+use std::time::Instant;
+
+use crate::coordinator::state::ClusterState;
+use crate::model::Problem;
+use crate::reward::{slot_reward_scratch, SlotReward};
+use crate::schedulers::Policy;
+use crate::sim::arrivals::ArrivalModel;
+
+/// Per-slot record (the recorder of sim/).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlotRecord {
+    pub t: usize,
+    pub q: f64,
+    pub gain: f64,
+    pub penalty: f64,
+    pub arrivals: f64,
+}
+
+/// Aggregated outcome of one run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub policy: String,
+    pub records: Vec<SlotRecord>,
+    pub cumulative_reward: f64,
+    pub clamped_total: usize,
+    pub elapsed_secs: f64,
+}
+
+impl RunResult {
+    /// Mean per-slot reward (the paper's "Avg. Reward" of Tab. 3).
+    pub fn avg_reward(&self) -> f64 {
+        if self.records.is_empty() {
+            0.0
+        } else {
+            self.cumulative_reward / self.records.len() as f64
+        }
+    }
+
+    pub fn rewards(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.q).collect()
+    }
+
+    /// Slots per second achieved by the whole loop.
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.records.len() as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The L3 coordinator: owns the ledger, drives a policy over a horizon.
+pub struct Leader<'p> {
+    problem: &'p Problem,
+    state: ClusterState,
+    /// Assert that policies never need clamping (on in tests/debug).
+    pub strict: bool,
+}
+
+impl<'p> Leader<'p> {
+    pub fn new(problem: &'p Problem) -> Self {
+        Leader { problem, state: ClusterState::new(problem), strict: cfg!(debug_assertions) }
+    }
+
+    /// Run `policy` against `arrivals` for `horizon` slots.
+    pub fn run(
+        &mut self,
+        policy: &mut dyn Policy,
+        arrivals: &mut dyn ArrivalModel,
+        horizon: usize,
+    ) -> RunResult {
+        let p = self.problem;
+        let mut x = vec![0.0; p.num_ports()];
+        let mut y = vec![0.0; p.decision_len()];
+        let mut quota = vec![0.0; p.num_resources];
+        let mut result = RunResult {
+            policy: policy.name().to_string(),
+            records: Vec::with_capacity(horizon),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        for t in 0..horizon {
+            arrivals.next(&mut x);
+            policy.decide(p, &x, &mut y);
+            let report = self.state.commit(p, &mut y);
+            if self.strict {
+                assert_eq!(
+                    report.clamped, 0,
+                    "policy {} emitted an infeasible decision at t={t}",
+                    policy.name()
+                );
+            }
+            result.clamped_total += report.clamped;
+            let SlotReward { q, gain, penalty } = slot_reward_scratch(p, &x, &y, &mut quota);
+            self.state.release();
+            result.cumulative_reward += q;
+            result.records.push(SlotRecord {
+                t,
+                q,
+                gain,
+                penalty,
+                arrivals: x.iter().sum(),
+            });
+        }
+        result.elapsed_secs = start.elapsed().as_secs_f64();
+        result
+    }
+}
+
+/// Convenience: run a whole policy lineup on forked arrival streams
+/// (every policy sees the *same* trajectory — seeded identically).
+pub fn run_lineup(
+    problem: &Problem,
+    policies: &mut [Box<dyn Policy>],
+    make_arrivals: impl Fn() -> Box<dyn ArrivalModel>,
+    horizon: usize,
+) -> Vec<RunResult> {
+    policies
+        .iter_mut()
+        .map(|policy| {
+            let mut leader = Leader::new(problem);
+            let mut arrivals = make_arrivals();
+            policy.reset(problem);
+            leader.run(policy.as_mut(), arrivals.as_mut(), horizon)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::schedulers::{paper_lineup, Fairness, OgaSched};
+    use crate::sim::arrivals::Bernoulli;
+    use crate::traces::synthesize;
+
+    #[test]
+    fn leader_runs_and_records() {
+        let p = synthesize(&Scenario::small());
+        let mut leader = Leader::new(&p);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.7, 1);
+        let res = leader.run(&mut pol, &mut arr, 100);
+        assert_eq!(res.records.len(), 100);
+        assert_eq!(res.clamped_total, 0);
+        assert!(res.cumulative_reward > 0.0);
+        assert!((res.avg_reward() - res.cumulative_reward / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_seeds_identical_trajectories() {
+        let p = synthesize(&Scenario::small());
+        let run = |seed| {
+            let mut leader = Leader::new(&p);
+            let mut pol = OgaSched::new(&p, 5.0, 0.999, 0);
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.7, seed);
+            leader.run(&mut pol, &mut arr, 50).cumulative_reward
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn lineup_shares_the_trajectory() {
+        let p = synthesize(&Scenario::small());
+        let mut lineup = paper_lineup(&p, 5.0, 0.999, 0);
+        let results = run_lineup(
+            &p,
+            &mut lineup,
+            || Box::new(Bernoulli::uniform(p.num_ports(), 0.7, 99)),
+            60,
+        );
+        assert_eq!(results.len(), 5);
+        // identical arrival totals across policies
+        let totals: Vec<f64> = results
+            .iter()
+            .map(|r| r.records.iter().map(|s| s.arrivals).sum::<f64>())
+            .collect();
+        for t in &totals[1..] {
+            assert_eq!(*t, totals[0]);
+        }
+    }
+
+    #[test]
+    fn strict_mode_catches_infeasible_policies() {
+        struct Evil;
+        impl crate::schedulers::Policy for Evil {
+            fn name(&self) -> &'static str {
+                "EVIL"
+            }
+            fn decide(&mut self, p: &Problem, _x: &[f64], y: &mut [f64]) {
+                y.fill(0.0);
+                // grossly over-allocate the first edge
+                let l = 0;
+                let r = p.graph.ports_to_instances[0][0];
+                y[p.idx(l, r, 0)] = p.capacity_at(r, 0) * 10.0;
+            }
+        }
+        let p = synthesize(&Scenario::small());
+        let mut leader = Leader::new(&p);
+        leader.strict = true;
+        let mut arr = Bernoulli::uniform(p.num_ports(), 1.0, 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            leader.run(&mut Evil, &mut arr, 2);
+        }));
+        assert!(result.is_err(), "strict leader must reject infeasible decisions");
+    }
+}

@@ -1,0 +1,9 @@
+//! Layer 3 — the Rust coordinator.  Owns the cluster ledger
+//! ([`state::ClusterState`]), the slot event loop ([`leader::Leader`])
+//! and, through `runtime/`, the PJRT-compiled OGA step on the hot path.
+
+pub mod leader;
+pub mod state;
+
+pub use leader::{run_lineup, Leader, RunResult, SlotRecord};
+pub use state::ClusterState;

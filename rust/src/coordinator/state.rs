@@ -1,0 +1,170 @@
+//! Cluster-state ledger: the L3 coordinator's source of truth for what
+//! is allocated where.  Decisions from a policy are *committed* for the
+//! slot (validated against capacities, clamped if a buggy policy
+//! overshoots) and *released* when the slot's jobs complete — multi-server
+//! jobs hold their resources for the whole slot, which is exactly the
+//! paper's one-slot occupancy model.
+
+use crate::model::Problem;
+
+/// Outcome of committing a decision tensor for one slot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommitReport {
+    /// Coordinates that had to be clamped to stay feasible.
+    pub clamped: usize,
+    /// Total resource units committed (Σ y).
+    pub committed_units: f64,
+}
+
+/// Capacity accounting for one slot at a time.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// Remaining capacity [R, K] within the current slot.
+    remaining: Vec<f64>,
+    /// Capacity snapshot for release/validation.
+    capacity: Vec<f64>,
+    k_n: usize,
+    in_slot: bool,
+}
+
+impl ClusterState {
+    pub fn new(problem: &Problem) -> Self {
+        ClusterState {
+            remaining: problem.capacity.clone(),
+            capacity: problem.capacity.clone(),
+            k_n: problem.num_resources,
+            in_slot: false,
+        }
+    }
+
+    /// Commit a decision for the slot.  The ledger clamps any
+    /// per-instance overshoot (defense against buggy policies) and
+    /// reports how many coordinates were touched; a correct policy
+    /// always reports `clamped == 0` (asserted by the engine in tests).
+    pub fn commit(&mut self, problem: &Problem, y: &mut [f64]) -> CommitReport {
+        assert!(!self.in_slot, "commit called twice without release");
+        self.in_slot = true;
+        let mut report = CommitReport::default();
+        let (l_n, r_n, k_n) = (problem.num_ports(), problem.num_instances(), self.k_n);
+        // Flat accumulation (§Perf): one sweep over y in memory order,
+        // accumulating per-(r, k) usage into `remaining` — avoids the
+        // L·R·K strided idx() walk of the naive triple loop.
+        self.remaining.fill(0.0);
+        let rk = r_n * k_n;
+        for l in 0..l_n {
+            let row = &y[l * rk..(l + 1) * rk];
+            for (i, &v) in row.iter().enumerate() {
+                self.remaining[i] += v;
+            }
+        }
+        for i in 0..rk {
+            let used = self.remaining[i];
+            let cap = self.capacity[i];
+            // tolerance is relative: decisions produced by the f32
+            // artifact path carry ~1e-6 relative rounding.
+            if used > cap * (1.0 + 1e-5) + 1e-6 && used > 0.0 {
+                // proportional clamp back to capacity
+                let scale = cap / used;
+                for l in 0..l_n {
+                    let j = l * rk + i;
+                    if y[j] != 0.0 {
+                        y[j] *= scale;
+                        report.clamped += 1;
+                    }
+                }
+                report.committed_units += cap;
+                self.remaining[i] = 0.0; // cap - cap
+            } else {
+                report.committed_units += used;
+                self.remaining[i] = cap - used;
+            }
+        }
+        report
+    }
+
+    /// Release the slot's resources (jobs completed).
+    pub fn release(&mut self) {
+        assert!(self.in_slot, "release without commit");
+        self.remaining.copy_from_slice(&self.capacity);
+        self.in_slot = false;
+    }
+
+    pub fn remaining_at(&self, r: usize, k: usize) -> f64 {
+        self.remaining[r * self.k_n + k]
+    }
+
+    /// Conservation invariant: remaining + committed == capacity, and
+    /// remaining is never negative.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for (i, &rem) in self.remaining.iter().enumerate() {
+            if rem < -1e-9 {
+                return Err(format!("negative remaining at flat index {i}: {rem}"));
+            }
+            if rem > self.capacity[i] + 1e-9 {
+                return Err(format!(
+                    "remaining {rem} exceeds capacity {} at flat index {i}",
+                    self.capacity[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::traces::synthesize;
+
+    #[test]
+    fn commit_release_cycle() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, p.graph.ports_to_instances[0][0], 0)] = 0.5;
+        let rep = st.commit(&p, &mut y);
+        assert_eq!(rep.clamped, 0);
+        assert!(rep.committed_units > 0.0);
+        st.check_conservation().unwrap();
+        st.release();
+        st.check_conservation().unwrap();
+        for r in 0..p.num_instances() {
+            for k in 0..p.num_resources {
+                assert_eq!(st.remaining_at(r, k), p.capacity_at(r, k));
+            }
+        }
+    }
+
+    #[test]
+    fn overshoot_is_clamped_proportionally() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let r0 = p.graph.ports_to_instances[0][0];
+        let mut y = vec![0.0; p.decision_len()];
+        let cap = p.capacity_at(r0, 0);
+        y[p.idx(0, r0, 0)] = cap * 2.0; // deliberate overshoot
+        let rep = st.commit(&p, &mut y);
+        assert!(rep.clamped > 0);
+        assert!((y[p.idx(0, r0, 0)] - cap).abs() < 1e-9);
+        st.check_conservation().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "commit called twice")]
+    fn double_commit_panics() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let mut y = vec![0.0; p.decision_len()];
+        st.commit(&p, &mut y);
+        st.commit(&p, &mut y);
+    }
+
+    #[test]
+    #[should_panic(expected = "release without commit")]
+    fn release_without_commit_panics() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        st.release();
+    }
+}

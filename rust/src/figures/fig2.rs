@@ -1,0 +1,86 @@
+//! Fig. 2 — performance verification on the Tab. 2 default cluster:
+//! (a) average reward until t, (b) cumulative reward, (c) OGASCHED /
+//! baseline average-reward ratio; plus the headline improvement
+//! percentages of the abstract (11.33 / 7.75 / 13.89 / 13.44 %).
+//!
+//! Paper setting: T = 8000, β ∈ [0.4, 0.6], contention 11.
+
+use crate::config::Scenario;
+use crate::figures::{results_dir, FigureOutput};
+use crate::metrics;
+use crate::sim;
+use crate::utils::table::Table;
+
+pub fn scenario(horizon_override: usize) -> Scenario {
+    let mut s = Scenario::default();
+    s.name = "fig2".into();
+    s.horizon = if horizon_override > 0 { horizon_override } else { 8000 };
+    s.beta_range = (0.4, 0.6);
+    s.contention = 11.0;
+    s
+}
+
+pub fn run(horizon_override: usize) -> FigureOutput {
+    let s = scenario(horizon_override);
+    let results = sim::run_paper_lineup(&s);
+    let oga = &results[0];
+
+    // (a)+(b)+(c) series
+    let names: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
+    let avg_curves: Vec<Vec<f64>> = results.iter().map(metrics::avg_reward_curve).collect();
+    let cum_curves: Vec<Vec<f64>> = results.iter().map(metrics::cumulative_curve).collect();
+    let ratio_names: Vec<String> =
+        results[1..].iter().map(|r| format!("OGA/{}", r.policy)).collect();
+    let ratio_curves: Vec<Vec<f64>> =
+        results[1..].iter().map(|r| metrics::ratio_curve(oga, r)).collect();
+
+    let dir = results_dir();
+    let mut csv_paths = Vec::new();
+    for (file, names, curves) in [
+        ("fig2a_avg_reward.csv", names.clone(), &avg_curves),
+        ("fig2b_cumulative.csv", names.clone(), &cum_curves),
+        (
+            "fig2c_ratio.csv",
+            ratio_names.iter().map(String::as_str).collect::<Vec<_>>(),
+            &ratio_curves,
+        ),
+    ] {
+        let path = dir.join(file);
+        let _ = metrics::curves_to_csv(&names, curves, 400).write_file(&path);
+        csv_paths.push(path);
+    }
+
+    let mut table = Table::new(&["policy", "avg reward", "cumulative", "OGA improvement"]);
+    for run in &results {
+        let imp = if run.policy == "OGASCHED" {
+            "-".into()
+        } else {
+            format!("{:+.2}%", metrics::improvement_pct(oga, run))
+        };
+        table.push(&[
+            run.policy.clone(),
+            format!("{:.2}", run.avg_reward()),
+            format!("{:.1}", run.cumulative_reward),
+            imp,
+        ]);
+    }
+    let rendered = format!(
+        "T={} beta=[0.4,0.6] contention=11\n{}\npaper: OGASCHED beats \
+         DRF/FAIRNESS/BINPACKING/SPREADING by 11.33/7.75/13.89/13.44 %\n",
+        s.horizon,
+        table.render()
+    );
+    FigureOutput { title: "Fig. 2 — performance verification".into(), rendered, csv_paths }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_small_horizon_runs_and_oga_wins() {
+        let out = run(400);
+        assert!(out.rendered.contains("OGASCHED"));
+        assert_eq!(out.csv_paths.len(), 3);
+    }
+}

@@ -1,0 +1,160 @@
+//! Fig. 3 — scalability: cumulative reward and OGASCHED/baseline ratio
+//! under (a) |R| ∈ {32..512}, (b) |L| ∈ {5..50}, (c) contention level
+//! ∈ {0.1..20}.  Expected shapes (Sec. 4.2): rewards grow with |R|;
+//! |L| has a weaker effect than |R| (regret sublinear in |L|);
+//! contention raises rewards up to ~1 then degrades them; OGASCHED
+//! leads everywhere.
+
+use crate::config::Scenario;
+use crate::figures::{results_dir, FigureOutput};
+use crate::sim;
+use crate::utils::csv::Csv;
+use crate::utils::table::Table;
+
+const INSTANCES: [usize; 5] = [32, 64, 128, 256, 512];
+const PORTS: [usize; 4] = [5, 10, 20, 50];
+const CONTENTION: [f64; 6] = [0.1, 0.5, 1.0, 5.0, 10.0, 20.0];
+
+fn base(horizon_override: usize) -> Scenario {
+    let mut s = Scenario::default();
+    s.name = "fig3".into();
+    if horizon_override > 0 {
+        s.horizon = horizon_override;
+    }
+    s
+}
+
+/// One sweep: vary a scenario knob, return (labels, per-policy curves).
+fn sweep(
+    scenarios: Vec<(String, Scenario)>,
+) -> (Vec<String>, Vec<String>, Vec<Vec<f64>>) {
+    let labels: Vec<String> = scenarios.iter().map(|(l, _)| l.clone()).collect();
+    let mut policy_names = Vec::new();
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    for (_, scenario) in &scenarios {
+        let results = sim::run_paper_lineup(scenario);
+        if policy_names.is_empty() {
+            policy_names = results.iter().map(|r| r.policy.clone()).collect();
+            series = vec![Vec::new(); results.len()];
+        }
+        for (i, r) in results.iter().enumerate() {
+            series[i].push(r.cumulative_reward);
+        }
+    }
+    (labels, policy_names, series)
+}
+
+fn render_panel(
+    title: &str,
+    xlabel: &str,
+    labels: &[String],
+    policy_names: &[String],
+    series: &[Vec<f64>],
+    csv_file: &str,
+    csv_paths: &mut Vec<std::path::PathBuf>,
+) -> String {
+    let mut header: Vec<&str> = vec![xlabel];
+    let names: Vec<&str> = policy_names.iter().map(String::as_str).collect();
+    header.extend(&names);
+    header.push("OGA/best-baseline");
+    let mut table = Table::new(&header);
+    let mut csv = Csv::new(&header);
+    for (i, label) in labels.iter().enumerate() {
+        let mut row: Vec<String> = vec![label.clone()];
+        let oga = series[0][i];
+        let best_baseline =
+            series[1..].iter().map(|s| s[i]).fold(f64::NEG_INFINITY, f64::max);
+        for s in series {
+            row.push(format!("{:.1}", s[i]));
+        }
+        let ratio = if best_baseline.abs() > 1e-9 { oga / best_baseline } else { 1.0 };
+        row.push(format!("{ratio:.3}"));
+        table.push(&row);
+        csv.push_row(&row);
+    }
+    let path = results_dir().join(csv_file);
+    let _ = csv.write_file(&path);
+    csv_paths.push(path);
+    format!("{title}\n{}", table.render())
+}
+
+pub fn run(horizon_override: usize) -> FigureOutput {
+    let mut csv_paths = Vec::new();
+
+    // (a) vary |R|
+    let scenarios_a: Vec<(String, Scenario)> = INSTANCES
+        .iter()
+        .map(|&r| {
+            let mut s = base(horizon_override);
+            s.num_instances = r;
+            (format!("{r}"), s)
+        })
+        .collect();
+    let (la, pa, sa) = sweep(scenarios_a);
+    let panel_a = render_panel(
+        "(a) cumulative reward vs |R|",
+        "|R|",
+        &la,
+        &pa,
+        &sa,
+        "fig3a_instances.csv",
+        &mut csv_paths,
+    );
+
+    // (b) vary |L|
+    let scenarios_b: Vec<(String, Scenario)> = PORTS
+        .iter()
+        .map(|&l| {
+            let mut s = base(horizon_override);
+            s.num_ports = l;
+            (format!("{l}"), s)
+        })
+        .collect();
+    let (lb, pb, sb) = sweep(scenarios_b);
+    let panel_b = render_panel(
+        "(b) cumulative reward vs |L|",
+        "|L|",
+        &lb,
+        &pb,
+        &sb,
+        "fig3b_ports.csv",
+        &mut csv_paths,
+    );
+
+    // (c) vary contention
+    let scenarios_c: Vec<(String, Scenario)> = CONTENTION
+        .iter()
+        .map(|&c| {
+            let mut s = base(horizon_override);
+            s.contention = c;
+            (format!("{c}"), s)
+        })
+        .collect();
+    let (lc, pc, sc) = sweep(scenarios_c);
+    let panel_c = render_panel(
+        "(c) cumulative reward vs contention level",
+        "contention",
+        &lc,
+        &pc,
+        &sc,
+        "fig3c_contention.csv",
+        &mut csv_paths,
+    );
+
+    FigureOutput {
+        title: "Fig. 3 — scalability (|R|, |L|, contention)".into(),
+        rendered: format!("{panel_a}\n{panel_b}\n{panel_c}"),
+        csv_paths,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig3_runs_small() {
+        let out = super::run(60);
+        assert!(out.rendered.contains("(a)"));
+        assert!(out.rendered.contains("(c)"));
+        assert_eq!(out.csv_paths.len(), 3);
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 5 — large-scale validation (Sec. 4.3): |L| = 100 job types,
+//! |R| = 1024 instances, contention 5, T = 10000 in the paper (the
+//! harness scales T via the override / bench scale).  β uses the
+//! unit-consistent default range — see Scenario::large_scale() for why
+//! the paper's raw [0.01, 0.015] degenerates under normalized units.
+//! Expected shape: OGASCHED's superiority is preserved at scale.
+
+use crate::config::Scenario;
+use crate::figures::{results_dir, FigureOutput};
+use crate::metrics;
+use crate::sim;
+use crate::utils::table::Table;
+
+pub fn scenario(horizon_override: usize) -> Scenario {
+    let mut s = Scenario::large_scale();
+    s.name = "fig5".into();
+    s.horizon = if horizon_override > 0 { horizon_override } else { 10_000 };
+    s
+}
+
+pub fn run(horizon_override: usize) -> FigureOutput {
+    let s = scenario(horizon_override);
+    let results = sim::run_paper_lineup(&s);
+    let oga = &results[0];
+
+    let names: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
+    let curves: Vec<Vec<f64>> = results.iter().map(metrics::avg_reward_curve).collect();
+    let path = results_dir().join("fig5_large_scale.csv");
+    let _ = metrics::curves_to_csv(&names, &curves, 400).write_file(&path);
+
+    let mut table = Table::new(&["policy", "avg reward", "cumulative", "OGA improvement"]);
+    for run in &results {
+        let imp = if run.policy == "OGASCHED" {
+            "-".into()
+        } else {
+            format!("{:+.2}%", metrics::improvement_pct(oga, run))
+        };
+        table.push(&[
+            run.policy.clone(),
+            format!("{:.2}", run.avg_reward()),
+            format!("{:.1}", run.cumulative_reward),
+            imp,
+        ]);
+    }
+    FigureOutput {
+        title: "Fig. 5 — large-scale validation (|L|=100, |R|=1024)".into(),
+        rendered: format!(
+            "T={} beta=[{},{}] contention=5 (unit-consistent beta; see EXPERIMENTS.md)\n{}",
+            s.horizon,
+            s.beta_range.0,
+            s.beta_range.1,
+            table.render()
+        ),
+        csv_paths: vec![path],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    #[ignore = "large scenario; run explicitly or via the bench"]
+    fn fig5_runs_tiny_horizon() {
+        let out = super::run(20);
+        assert!(out.rendered.contains("OGASCHED"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Figure/table harnesses: one module per experiment in the paper's
+//! evaluation section (see DESIGN.md §5 for the index).  Each harness
+//! runs the relevant sweep, prints the paper-style table, and writes the
+//! plotted series as CSV under `results/`.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod regret_fig;
+pub mod table3;
+
+use std::path::PathBuf;
+
+/// Where figure CSVs land.
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("results")
+}
+
+/// Shared output bundle: rendered text + the CSV files written.
+#[derive(Clone, Debug, Default)]
+pub struct FigureOutput {
+    pub title: String,
+    pub rendered: String,
+    pub csv_paths: Vec<PathBuf>,
+}
+
+impl std::fmt::Display for FigureOutput {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "== {} ==", self.title)?;
+        write!(f, "{}", self.rendered)?;
+        for p in &self.csv_paths {
+            writeln!(f, "csv: {}", p.display())?;
+        }
+        Ok(())
+    }
+}
+
+/// Run a figure by id ("fig2" ... "fig7", "table3", "regret").
+/// `horizon_override` shrinks T for quick runs (0 = paper scale).
+pub fn run_by_id(id: &str, horizon_override: usize) -> Result<FigureOutput, String> {
+    match id {
+        "fig2" => Ok(fig2::run(horizon_override)),
+        "fig3" => Ok(fig3::run(horizon_override)),
+        "fig4" => Ok(fig4::run(horizon_override)),
+        "fig5" => Ok(fig5::run(horizon_override)),
+        "fig6" => Ok(fig6::run(horizon_override)),
+        "fig7" => Ok(fig7::run(horizon_override)),
+        "table3" => Ok(table3::run(horizon_override)),
+        "regret" => Ok(regret_fig::run(horizon_override)),
+        other => Err(format!(
+            "unknown figure id `{other}` (have fig2..fig7, table3, regret)"
+        )),
+    }
+}
+
+pub const ALL_IDS: [&str; 8] =
+    ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table3", "regret"];

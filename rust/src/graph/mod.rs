@@ -1,0 +1,207 @@
+//! The bipartite service-locality graph `G = (L, R, E)` of Sec. 2.1.
+//!
+//! Left vertices are job types ("ports"), right vertices are computing
+//! instances; an edge (l, r) — a "channel" — means instance `r` satisfies
+//! type-l's locality/affinity constraints and may serve it.
+
+use crate::utils::rng::Rng;
+
+/// Compressed bipartite graph with both adjacency directions and a dense
+/// edge mask for the vectorized kernels.
+#[derive(Clone, Debug)]
+pub struct Bipartite {
+    /// |L| — number of ports (job types).
+    pub num_ports: usize,
+    /// |R| — number of computing instances.
+    pub num_instances: usize,
+    /// R_l: instances adjacent to port l (sorted).
+    pub ports_to_instances: Vec<Vec<usize>>,
+    /// L_r: ports adjacent to instance r (sorted).
+    pub instances_to_ports: Vec<Vec<usize>>,
+    /// Dense row-major mask [L * R]: 1.0 iff (l, r) ∈ E.
+    pub mask: Vec<f32>,
+}
+
+impl Bipartite {
+    /// Build from an explicit edge list.
+    pub fn from_edges(num_ports: usize, num_instances: usize, edges: &[(usize, usize)]) -> Self {
+        let mut ports_to_instances = vec![Vec::new(); num_ports];
+        let mut instances_to_ports = vec![Vec::new(); num_instances];
+        let mut mask = vec![0.0f32; num_ports * num_instances];
+        for &(l, r) in edges {
+            assert!(l < num_ports && r < num_instances, "edge ({l},{r}) out of range");
+            if mask[l * num_instances + r] == 0.0 {
+                mask[l * num_instances + r] = 1.0;
+                ports_to_instances[l].push(r);
+                instances_to_ports[r].push(l);
+            }
+        }
+        for v in &mut ports_to_instances {
+            v.sort_unstable();
+        }
+        for v in &mut instances_to_ports {
+            v.sort_unstable();
+        }
+        Bipartite { num_ports, num_instances, ports_to_instances, instances_to_ports, mask }
+    }
+
+    /// Complete bipartite graph (no locality constraints).
+    pub fn full(num_ports: usize, num_instances: usize) -> Self {
+        let edges: Vec<(usize, usize)> = (0..num_ports)
+            .flat_map(|l| (0..num_instances).map(move |r| (l, r)))
+            .collect();
+        Self::from_edges(num_ports, num_instances, &edges)
+    }
+
+    /// Right d-regular graph: every instance serves exactly `d` ports
+    /// (the structure the paper's proofs specialize to).  Ports are
+    /// assigned round-robin with a random rotation so that port degrees
+    /// stay balanced.
+    pub fn right_regular(num_ports: usize, num_instances: usize, d: usize, rng: &mut Rng) -> Self {
+        let d = d.min(num_ports);
+        let mut edges = Vec::with_capacity(num_instances * d);
+        for r in 0..num_instances {
+            let start = rng.below(num_ports);
+            for j in 0..d {
+                edges.push(((start + j) % num_ports, r));
+            }
+        }
+        Self::from_edges(num_ports, num_instances, &edges)
+    }
+
+    /// Random graph targeting an average instance indegree of
+    /// `density` = Σ_r |L_r| / |R|  (the "graph dense" of Tab. 3).
+    /// Every instance keeps ≥1 port and every port keeps ≥1 instance so
+    /// no vertex is stranded.
+    pub fn random_density(
+        num_ports: usize,
+        num_instances: usize,
+        density: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let p = (density / num_ports as f64).clamp(0.0, 1.0);
+        let mut edges = Vec::new();
+        for r in 0..num_instances {
+            let mut any = false;
+            for l in 0..num_ports {
+                if rng.bernoulli(p) {
+                    edges.push((l, r));
+                    any = true;
+                }
+            }
+            if !any {
+                edges.push((rng.below(num_ports), r));
+            }
+        }
+        // make sure no port is isolated
+        let mut port_deg = vec![0usize; num_ports];
+        for &(l, _) in &edges {
+            port_deg[l] += 1;
+        }
+        for (l, &deg) in port_deg.iter().enumerate() {
+            if deg == 0 {
+                edges.push((l, rng.below(num_instances)));
+            }
+        }
+        Self::from_edges(num_ports, num_instances, &edges)
+    }
+
+    #[inline]
+    pub fn has_edge(&self, l: usize, r: usize) -> bool {
+        self.mask[l * self.num_instances + r] != 0.0
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.ports_to_instances.iter().map(Vec::len).sum()
+    }
+
+    /// Σ_r |L_r| / |R| — the "graph dense" metric of Tab. 3.
+    pub fn density(&self) -> f64 {
+        if self.num_instances == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_instances as f64
+    }
+
+    /// Is every instance indegree exactly d?
+    pub fn is_right_regular(&self, d: usize) -> bool {
+        self.instances_to_ports.iter().all(|ls| ls.len() == d)
+    }
+
+    /// Internal-consistency check (used by tests and debug assertions):
+    /// both adjacency directions and the mask describe the same edge set.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut count = 0usize;
+        for (l, rs) in self.ports_to_instances.iter().enumerate() {
+            for &r in rs {
+                if !self.has_edge(l, r) {
+                    return Err(format!("mask missing edge ({l},{r})"));
+                }
+                if !self.instances_to_ports[r].contains(&l) {
+                    return Err(format!("reverse adjacency missing ({l},{r})"));
+                }
+                count += 1;
+            }
+        }
+        let mask_count = self.mask.iter().filter(|&&m| m != 0.0).count();
+        if mask_count != count {
+            return Err(format!("mask has {mask_count} edges, adjacency has {count}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_graph_shape() {
+        let g = Bipartite::full(3, 5);
+        assert_eq!(g.num_edges(), 15);
+        assert!((g.density() - 3.0).abs() < 1e-12);
+        assert!(g.is_right_regular(3));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn from_edges_dedups() {
+        let g = Bipartite::from_edges(2, 2, &[(0, 1), (0, 1), (1, 0)]);
+        assert_eq!(g.num_edges(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn right_regular_has_exact_indegree() {
+        let mut rng = Rng::new(1);
+        let g = Bipartite::right_regular(10, 64, 4, &mut rng);
+        assert!(g.is_right_regular(4));
+        assert!((g.density() - 4.0).abs() < 1e-12);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn random_density_hits_target_and_strands_nobody() {
+        let mut rng = Rng::new(7);
+        let g = Bipartite::random_density(10, 512, 3.0, &mut rng);
+        assert!((g.density() - 3.0).abs() < 0.4, "density={}", g.density());
+        assert!(g.ports_to_instances.iter().all(|v| !v.is_empty()));
+        assert!(g.instances_to_ports.iter().all(|v| !v.is_empty()));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn density_one_is_minimum_connectivity() {
+        let mut rng = Rng::new(3);
+        let g = Bipartite::random_density(5, 100, 0.0, &mut rng);
+        // forced fallback edges keep each instance at exactly one port
+        assert!(g.instances_to_ports.iter().all(|v| v.len() == 1));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        Bipartite::from_edges(2, 2, &[(2, 0)]);
+    }
+}

@@ -1,0 +1,43 @@
+//! # OGASCHED — online multi-server job scheduling with sublinear regret
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of
+//! *"Scheduling Multi-Server Jobs with Sublinear Regrets via Online
+//! Learning"* (Zhao et al., 2023).
+//!
+//! - **Layer 3 (this crate)** — the cluster coordinator: bipartite
+//!   service-locality model, slot event loop, OGASCHED + the paper's four
+//!   baselines, regret oracle, figure harnesses, CLI.
+//! - **Layer 2/1 (`python/compile/`)** — the OGA step (Pallas gradient
+//!   kernel + fused projection) AOT-lowered to HLO text.
+//! - **Runtime bridge (`runtime/`)** — loads `artifacts/*.hlo.txt` via the
+//!   PJRT CPU client and runs the compiled step from the slot loop; Python
+//!   never executes on the request path.
+//!
+//! Quick start:
+//! ```no_run
+//! use ogasched::config::Scenario;
+//! use ogasched::sim;
+//!
+//! let mut scenario = Scenario::small();
+//! scenario.horizon = 200;
+//! for run in sim::run_paper_lineup(&scenario) {
+//!     println!("{:<10} avg reward {:.2}", run.policy, run.avg_reward());
+//! }
+//! ```
+
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod oga;
+pub mod regret;
+pub mod reward;
+pub mod runtime;
+pub mod schedulers;
+pub mod sim;
+pub mod traces;
+pub mod utils;

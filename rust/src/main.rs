@@ -1,0 +1,178 @@
+//! `ogasched` binary — the L3 leader entrypoint.
+//!
+//! See `ogasched help` (cli::HELP) for the command surface.
+
+use ogasched::cli::{Args, HELP};
+use ogasched::config::Scenario;
+use ogasched::figures;
+use ogasched::metrics;
+use ogasched::runtime::{default_dir, HloOgaSched, Manifest};
+use ogasched::schedulers::{
+    BinPacking, Drf, Fairness, OgaSched, Policy, RandomAlloc, Spreading,
+};
+use ogasched::sim;
+use ogasched::traces::synthesize;
+use ogasched::utils::table::Table;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "figure" => cmd_figure(&args),
+        "artifacts" => cmd_artifacts(),
+        "help" | "" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n\n{HELP}")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |()| 0,
+    );
+    std::process::exit(code);
+}
+
+/// Build a scenario from --config plus CLI overrides.
+fn scenario_from(args: &Args) -> Result<Scenario, String> {
+    let mut s = match args.opt("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            Scenario::from_toml(&text)?
+        }
+        None => Scenario::default(),
+    };
+    s.horizon = args.opt_usize("horizon", s.horizon)?;
+    s.num_ports = args.opt_usize("ports", s.num_ports)?;
+    s.num_instances = args.opt_usize("instances", s.num_instances)?;
+    s.num_resources = args.opt_usize("resources", s.num_resources)?;
+    s.arrival_prob = args.opt_f64("rho", s.arrival_prob)?;
+    s.contention = args.opt_f64("contention", s.contention)?;
+    s.eta0 = args.opt_f64("eta0", s.eta0)?;
+    s.decay = args.opt_f64("decay", s.decay)?;
+    s.seed = args.opt_usize("seed", s.seed as usize)? as u64;
+    s.workers = args.opt_usize("workers", s.workers)?;
+    s.validate()?;
+    Ok(s)
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let s = scenario_from(args)?;
+    let problem = synthesize(&s);
+    let name = args.opt("policy").unwrap_or("ogasched");
+    let mut policy: Box<dyn Policy> = match name {
+        "ogasched" => Box::new(OgaSched::new(&problem, s.eta0, s.decay, s.workers)),
+        "ogasched-hlo" => Box::new(
+            HloOgaSched::from_default_dir(&problem, s.eta0, s.decay)
+                .map_err(|e| format!("{e:#}"))?,
+        ),
+        "drf" => Box::new(Drf::new()),
+        "fairness" => Box::new(Fairness::new()),
+        "binpacking" => Box::new(BinPacking::new()),
+        "spreading" => Box::new(Spreading::new()),
+        "ogasched-mirror" => {
+            Box::new(ogasched::schedulers::OgaMirror::new(&problem, s.eta0, s.decay, s.workers))
+        }
+        "random" => Box::new(RandomAlloc::new(s.seed)),
+        other => return Err(format!("unknown policy `{other}`")),
+    };
+    let run = sim::run_on_problem(&s, &problem, policy.as_mut());
+    println!(
+        "policy={} T={} avg_reward={:.3} cumulative={:.1} throughput={:.0} slots/s",
+        run.policy,
+        s.horizon,
+        run.avg_reward(),
+        run.cumulative_reward,
+        run.throughput()
+    );
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let s = scenario_from(args)?;
+    let results = sim::run_paper_lineup(&s);
+    let oga = results[0].clone();
+    let mut table =
+        Table::new(&["policy", "avg reward", "cumulative", "OGA improvement", "slots/s"]);
+    for run in &results {
+        let imp = if run.policy == "OGASCHED" {
+            "-".into()
+        } else {
+            format!("{:+.2}%", metrics::improvement_pct(&oga, run))
+        };
+        table.push(&[
+            run.policy.clone(),
+            format!("{:.2}", run.avg_reward()),
+            format!("{:.1}", run.cumulative_reward),
+            imp,
+            format!("{:.0}", run.throughput()),
+        ]);
+    }
+    println!(
+        "scenario `{}`: |L|={} |R|={} K={} T={} rho={} contention={}",
+        s.name, s.num_ports, s.num_instances, s.num_resources, s.horizon,
+        s.arrival_prob, s.contention
+    );
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<(), String> {
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    let horizon = args.opt_usize("horizon", 0)?;
+    if id == "all" {
+        for id in figures::ALL_IDS {
+            println!("{}", figures::run_by_id(id, horizon)?);
+        }
+        return Ok(());
+    }
+    println!("{}", figures::run_by_id(id, horizon)?);
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let dir = default_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifact dir: {}", dir.display());
+    for b in &manifest.buckets {
+        println!(
+            "  bucket {:<8} L={:<4} R={:<5} K={:<2} {}",
+            b.name,
+            b.l,
+            b.r,
+            b.k,
+            b.path.display()
+        );
+    }
+    // PJRT smoke: run a few compiled steps on the smallest bucket
+    let small = manifest
+        .buckets
+        .iter()
+        .min_by_key(|b| b.volume())
+        .expect("manifest is non-empty");
+    let mut s = Scenario::small();
+    s.num_ports = small.l;
+    s.num_instances = small.r;
+    s.num_resources = small.k;
+    let problem = synthesize(&s);
+    let mut exec = ogasched::runtime::OgaStepExecutor::new(&manifest, &problem)
+        .map_err(|e| format!("{e:#}"))?;
+    let x = vec![1.0; problem.num_ports()];
+    let mut reward = 0.0;
+    for _ in 0..5 {
+        reward = exec.step(&x, 1.0).map_err(|e| format!("{e:#}"))?.q;
+    }
+    println!("PJRT smoke OK: 5 compiled steps on `{}`, q(5th)={reward:.3}", small.name);
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Figure-grade metric series built from run results: the exact curves
+//! the paper plots (average-reward-until-t, cumulative reward, OGASCHED/
+//! baseline ratios) plus CSV export used by every figure harness.
+
+use crate::coordinator::RunResult;
+use crate::utils::csv::Csv;
+use crate::utils::stats;
+
+/// Fig. 2(a): average reward until t for one run.
+pub fn avg_reward_curve(run: &RunResult) -> Vec<f64> {
+    stats::prefix_mean(&run.rewards())
+}
+
+/// Fig. 2(b): cumulative reward over t.
+pub fn cumulative_curve(run: &RunResult) -> Vec<f64> {
+    stats::cumsum(&run.rewards())
+}
+
+/// Fig. 2(c): ratio of OGASCHED's average reward to a baseline's, per t.
+/// Slots where the baseline curve is ~0 are clamped to 1.0 (the paper's
+/// plots start after the warm-up oscillation for the same reason).
+pub fn ratio_curve(oga: &RunResult, baseline: &RunResult) -> Vec<f64> {
+    let a = avg_reward_curve(oga);
+    let b = avg_reward_curve(baseline);
+    a.iter()
+        .zip(&b)
+        .map(|(&x, &y)| if y.abs() < 1e-9 { 1.0 } else { x / y })
+        .collect()
+}
+
+/// Headline improvement: (avg(OGA) / avg(baseline) − 1) · 100%.
+pub fn improvement_pct(oga: &RunResult, baseline: &RunResult) -> f64 {
+    let b = baseline.avg_reward();
+    if b.abs() < 1e-12 {
+        return 0.0;
+    }
+    (oga.avg_reward() / b - 1.0) * 100.0
+}
+
+/// Mean per-slot gain/penalty split (Fig. 6's bars).
+pub fn gain_penalty_split(run: &RunResult) -> (f64, f64) {
+    let n = run.records.len().max(1) as f64;
+    let g: f64 = run.records.iter().map(|r| r.gain).sum();
+    let p: f64 = run.records.iter().map(|r| r.penalty).sum();
+    (g / n, p / n)
+}
+
+/// Export a set of per-slot curves to CSV (`t` column + one per policy),
+/// thinned to at most `max_rows` rows so large-T figures stay plottable.
+pub fn curves_to_csv(names: &[&str], curves: &[Vec<f64>], max_rows: usize) -> Csv {
+    assert_eq!(names.len(), curves.len());
+    let len = curves.iter().map(Vec::len).max().unwrap_or(0);
+    let stride = len.div_ceil(max_rows.max(1)).max(1);
+    let mut header = vec!["t"];
+    header.extend_from_slice(names);
+    let mut csv = Csv::new(&header);
+    let mut t = 0;
+    while t < len {
+        let mut row = vec![(t + 1) as f64];
+        for c in curves {
+            row.push(c.get(t).copied().unwrap_or(f64::NAN));
+        }
+        csv.push_f64(&row);
+        t += stride;
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SlotRecord;
+
+    fn run_with(rewards: &[f64]) -> RunResult {
+        RunResult {
+            policy: "X".into(),
+            records: rewards
+                .iter()
+                .enumerate()
+                .map(|(t, &q)| SlotRecord { t, q, gain: q + 1.0, penalty: 1.0, arrivals: 1.0 })
+                .collect(),
+            cumulative_reward: rewards.iter().sum(),
+            clamped_total: 0,
+            elapsed_secs: 0.1,
+        }
+    }
+
+    #[test]
+    fn curves_match_hand_math() {
+        let r = run_with(&[2.0, 4.0, 6.0]);
+        assert_eq!(avg_reward_curve(&r), vec![2.0, 3.0, 4.0]);
+        assert_eq!(cumulative_curve(&r), vec![2.0, 6.0, 12.0]);
+    }
+
+    #[test]
+    fn ratio_and_improvement() {
+        let a = run_with(&[2.0, 2.0]);
+        let b = run_with(&[1.0, 1.0]);
+        assert_eq!(ratio_curve(&a, &b), vec![2.0, 2.0]);
+        assert!((improvement_pct(&a, &b) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gain_penalty_split_means() {
+        let r = run_with(&[2.0, 4.0]);
+        let (g, p) = gain_penalty_split(&r);
+        assert!((g - 4.0).abs() < 1e-12);
+        assert!((p - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_thinning() {
+        let c = curves_to_csv(&["a"], &[(0..1000).map(|i| i as f64).collect()], 100);
+        assert!(c.rows.len() <= 101);
+        assert_eq!(c.header, vec!["t", "a"]);
+    }
+}

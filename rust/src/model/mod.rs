@@ -1,0 +1,233 @@
+//! The problem instance of Sec. 2: graph + resource model + utilities.
+//!
+//! Tensor conventions (row-major, mirroring the Python side):
+//!   - `[L, K]` demands `a`, indexed `l * K + k`
+//!   - `[R, K]` capacities `c`, coefficients `alpha`, families `kind`
+//!   - `[L, R, K]` decisions `y`, indexed `(l * R + r) * K + k`
+
+use crate::graph::Bipartite;
+use crate::oga::utilities::UtilityKind;
+
+/// Names for the K=6 default device classes (Tab. 2).
+pub const DEVICE_NAMES: [&str; 6] = ["CPU", "MEM", "GPU", "NPU", "TPU", "FPGA"];
+
+/// A fully specified scheduling problem instance.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub graph: Bipartite,
+    /// K — number of resource types.
+    pub num_resources: usize,
+    /// [L, K] maximum per-channel requests a_l^k (already scaled by the
+    /// contention-level multiplier).
+    pub demand: Vec<f64>,
+    /// [R, K] instance capacities c_r^k.
+    pub capacity: Vec<f64>,
+    /// [R, K] utility coefficients α of f_r^k.
+    pub alpha: Vec<f64>,
+    /// [R, K] utility family of f_r^k.
+    pub kind: Vec<UtilityKind>,
+    /// [K] communication-overhead coefficients β_k ∈ [0, 1].
+    pub beta: Vec<f64>,
+}
+
+impl Problem {
+    pub fn num_ports(&self) -> usize {
+        self.graph.num_ports
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.graph.num_instances
+    }
+
+    /// Length of the dense decision tensor [L, R, K].
+    pub fn decision_len(&self) -> usize {
+        self.num_ports() * self.num_instances() * self.num_resources
+    }
+
+    #[inline]
+    pub fn demand_at(&self, l: usize, k: usize) -> f64 {
+        self.demand[l * self.num_resources + k]
+    }
+
+    #[inline]
+    pub fn capacity_at(&self, r: usize, k: usize) -> f64 {
+        self.capacity[r * self.num_resources + k]
+    }
+
+    #[inline]
+    pub fn alpha_at(&self, r: usize, k: usize) -> f64 {
+        self.alpha[r * self.num_resources + k]
+    }
+
+    #[inline]
+    pub fn kind_at(&self, r: usize, k: usize) -> UtilityKind {
+        self.kind[r * self.num_resources + k]
+    }
+
+    #[inline]
+    pub fn idx(&self, l: usize, r: usize, k: usize) -> usize {
+        (l * self.num_instances() + r) * self.num_resources + k
+    }
+
+    /// ā^k = max_l a_l^k (Thm. 1).
+    pub fn max_demand(&self, k: usize) -> f64 {
+        (0..self.num_ports())
+            .map(|l| self.demand_at(l, k))
+            .fold(0.0, f64::max)
+    }
+
+    /// β* = max_k β_k (Thm. 1).
+    pub fn beta_star(&self) -> f64 {
+        self.beta.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// ϖ*_r = max_k ϖ_r^k (Thm. 1).
+    pub fn varpi_star(&self, r: usize) -> f64 {
+        (0..self.num_resources)
+            .map(|k| self.kind_at(r, k).varpi(self.alpha_at(r, k)))
+            .fold(0.0, f64::max)
+    }
+
+    /// The graph factor H_G of Eq. (49):
+    /// sqrt(2 Σ_k Σ_r ā^k c_r^k) · sqrt(Σ_l Σ_{r∈R_l} ((β*)² + K(ϖ*_r)²)).
+    pub fn h_g(&self) -> f64 {
+        let k_n = self.num_resources;
+        let mut cap_term = 0.0;
+        for k in 0..k_n {
+            let abar = self.max_demand(k);
+            for r in 0..self.num_instances() {
+                cap_term += abar * self.capacity_at(r, k);
+            }
+        }
+        let beta2 = self.beta_star().powi(2);
+        let mut grad_term = 0.0;
+        for l in 0..self.num_ports() {
+            for &r in &self.graph.ports_to_instances[l] {
+                grad_term += beta2 + k_n as f64 * self.varpi_star(r).powi(2);
+            }
+        }
+        (2.0 * cap_term).sqrt() * grad_term.sqrt()
+    }
+
+    /// diam(Y) upper bound of Eq. (48).
+    pub fn diam_upper(&self) -> f64 {
+        let mut cap_term = 0.0;
+        for k in 0..self.num_resources {
+            let abar = self.max_demand(k);
+            for r in 0..self.num_instances() {
+                cap_term += abar * self.capacity_at(r, k);
+            }
+        }
+        (2.0 * cap_term).sqrt()
+    }
+
+    /// max ||∇q|| upper bound of Eq. (45).
+    pub fn grad_norm_upper(&self) -> f64 {
+        let beta2 = self.beta_star().powi(2);
+        let mut sum = 0.0;
+        for l in 0..self.num_ports() {
+            for &r in &self.graph.ports_to_instances[l] {
+                sum += beta2 + self.num_resources as f64 * self.varpi_star(r).powi(2);
+            }
+        }
+        sum.sqrt()
+    }
+
+    /// Is the dense decision tensor `y` feasible (Eqs. 5-6 + locality)?
+    pub fn check_feasible(&self, y: &[f64], tol: f64) -> Result<(), String> {
+        let (l_n, r_n, k_n) = (self.num_ports(), self.num_instances(), self.num_resources);
+        assert_eq!(y.len(), self.decision_len());
+        for l in 0..l_n {
+            for r in 0..r_n {
+                for k in 0..k_n {
+                    let v = y[self.idx(l, r, k)];
+                    if !self.graph.has_edge(l, r) {
+                        if v.abs() > tol {
+                            return Err(format!("off-edge allocation y[{l},{r},{k}]={v}"));
+                        }
+                        continue;
+                    }
+                    if v < -tol {
+                        return Err(format!("negative allocation y[{l},{r},{k}]={v}"));
+                    }
+                    if v > self.demand_at(l, k) + tol {
+                        return Err(format!(
+                            "y[{l},{r},{k}]={v} exceeds demand {}",
+                            self.demand_at(l, k)
+                        ));
+                    }
+                }
+            }
+        }
+        for r in 0..r_n {
+            for k in 0..k_n {
+                let used: f64 =
+                    (0..l_n).map(|l| y[self.idx(l, r, k)]).sum();
+                let cap = self.capacity_at(r, k);
+                if used > cap + tol * (1.0 + l_n as f64) {
+                    return Err(format!("capacity violated at (r={r},k={k}): {used} > {cap}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Bipartite;
+
+    fn tiny() -> Problem {
+        let graph = Bipartite::full(2, 3);
+        Problem {
+            graph,
+            num_resources: 2,
+            demand: vec![1.0, 2.0, 3.0, 4.0],       // [2,2]
+            capacity: vec![5.0; 6],                 // [3,2]
+            alpha: vec![1.0; 6],
+            kind: vec![UtilityKind::Linear; 6],
+            beta: vec![0.3, 0.5],
+        }
+    }
+
+    #[test]
+    fn index_math() {
+        let p = tiny();
+        assert_eq!(p.decision_len(), 2 * 3 * 2);
+        assert_eq!(p.idx(1, 2, 1), (1 * 3 + 2) * 2 + 1);
+        assert_eq!(p.demand_at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn theorem_quantities() {
+        let p = tiny();
+        assert_eq!(p.max_demand(0), 3.0);
+        assert_eq!(p.max_demand(1), 4.0);
+        assert!((p.beta_star() - 0.5).abs() < 1e-12);
+        assert!((p.varpi_star(0) - 1.0).abs() < 1e-12);
+        // H_G = sqrt(2*(3*5*3 + 4*5*3)) * sqrt(6*(0.25 + 2*1))
+        let want = (2.0f64 * (45.0 + 60.0)).sqrt() * (6.0 * 2.25f64).sqrt();
+        assert!((p.h_g() - want).abs() < 1e-9, "{} vs {want}", p.h_g());
+        assert!((p.diam_upper() - (210.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feasibility_checks() {
+        let p = tiny();
+        let mut y = vec![0.0; p.decision_len()];
+        assert!(p.check_feasible(&y, 1e-9).is_ok());
+        y[p.idx(0, 0, 0)] = 0.5;
+        assert!(p.check_feasible(&y, 1e-9).is_ok());
+        y[p.idx(0, 0, 0)] = 1.5; // demand a_0^0 = 1.0
+        assert!(p.check_feasible(&y, 1e-9).is_err());
+        y[p.idx(0, 0, 0)] = -0.1;
+        assert!(p.check_feasible(&y, 1e-9).is_err());
+        // capacity violation
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, 0, 0)] = 1.0;
+        y[p.idx(1, 0, 0)] = 3.0;
+        // sums to 4.0 <= 5.0 ok
+        assert!(p.check_feasible(&y, 1e-9).is_ok());
+    }
+}

@@ -1,0 +1,184 @@
+//! The reward gradient ∇q of Eq. (30).
+//!
+//! For each arrived port l (x_l > 0):
+//!     ∂q/∂y_{(l,r)}^k = x_l · ( (f_r^k)'(y) − β_k · 1{k = k*_l} )
+//! with k*_l = argmax_k β_k Σ_{r∈R_l} y_{(l,r)}^k (Eq. 27).  Ports with
+//! x_l = 0 contribute zero gradient; off-edge coordinates are never
+//! touched (they stay exactly 0 in `grad`).
+
+use crate::model::Problem;
+
+/// Scratch space reused across slots so the hot loop never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct GradScratch {
+    /// [K] per-port resource quotas Σ_{r∈R_l} y.
+    quota: Vec<f64>,
+}
+
+/// Compute ∇q(x, y) into `grad` (dense [L, R, K]; caller provides a
+/// zeroed or reusable buffer — it is fully overwritten on edges and
+/// zeroed off-edge lazily via memset).
+pub fn gradient(
+    problem: &Problem,
+    x: &[f64],
+    y: &[f64],
+    grad: &mut [f64],
+    scratch: &mut GradScratch,
+) {
+    let k_n = problem.num_resources;
+    debug_assert_eq!(x.len(), problem.num_ports());
+    debug_assert_eq!(y.len(), problem.decision_len());
+    debug_assert_eq!(grad.len(), problem.decision_len());
+    grad.fill(0.0);
+    scratch.quota.resize(k_n, 0.0);
+
+    for l in 0..problem.num_ports() {
+        let x_l = x[l];
+        if x_l == 0.0 {
+            continue;
+        }
+        let instances = &problem.graph.ports_to_instances[l];
+        // quota_k = Σ_{r∈R_l} y_{(l,r)}^k
+        scratch.quota.fill(0.0);
+        for &r in instances {
+            let base = problem.idx(l, r, 0);
+            for k in 0..k_n {
+                scratch.quota[k] += y[base + k];
+            }
+        }
+        // k* = argmax_k β_k · quota_k  (Eq. 27)
+        let mut kstar = 0;
+        let mut best = f64::NEG_INFINITY;
+        for k in 0..k_n {
+            let v = problem.beta[k] * scratch.quota[k];
+            if v > best {
+                best = v;
+                kstar = k;
+            }
+        }
+        for &r in instances {
+            let base = problem.idx(l, r, 0);
+            let rk = r * k_n;
+            for k in 0..k_n {
+                let fp = problem.kind[rk + k].grad(y[base + k], problem.alpha[rk + k]);
+                let pen = if k == kstar { problem.beta[k] } else { 0.0 };
+                grad[base + k] = x_l * (fp - pen);
+            }
+        }
+    }
+}
+
+/// Euclidean norm of the gradient (used for the Eq. 50 oracle step size
+/// and the Thm. 1 bound check).
+pub fn grad_norm(grad: &[f64]) -> f64 {
+    grad.iter().map(|g| g * g).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Bipartite;
+    use crate::oga::utilities::UtilityKind;
+
+    fn problem() -> Problem {
+        let graph = Bipartite::from_edges(2, 2, &[(0, 0), (0, 1), (1, 1)]);
+        Problem {
+            graph,
+            num_resources: 2,
+            demand: vec![5.0; 4],
+            capacity: vec![10.0; 4],
+            alpha: vec![1.0, 2.0, 3.0, 4.0],
+            kind: vec![UtilityKind::Linear; 4],
+            beta: vec![0.4, 0.6],
+        }
+    }
+
+    #[test]
+    fn zero_arrivals_zero_gradient() {
+        let p = problem();
+        let y = vec![1.0; p.decision_len()];
+        let mut g = vec![9.0; p.decision_len()];
+        gradient(&p, &[0.0, 0.0], &y, &mut g, &mut GradScratch::default());
+        assert!(g.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn penalty_applies_only_on_kstar() {
+        let p = problem();
+        // port 0 connects to r=0,1. Put all mass on k=1 so k*=1.
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, 0, 1)] = 2.0;
+        let mut g = vec![0.0; p.decision_len()];
+        gradient(&p, &[1.0, 0.0], &y, &mut g, &mut GradScratch::default());
+        // linear utilities: f' = alpha
+        assert!((g[p.idx(0, 0, 0)] - 1.0).abs() < 1e-12); // alpha(0,0)=1, no pen
+        assert!((g[p.idx(0, 0, 1)] - (2.0 - 0.6)).abs() < 1e-12); // pen beta_1
+        assert!((g[p.idx(0, 1, 0)] - 3.0).abs() < 1e-12);
+        assert!((g[p.idx(0, 1, 1)] - (4.0 - 0.6)).abs() < 1e-12);
+        // port 1 did not arrive
+        assert_eq!(g[p.idx(1, 1, 0)], 0.0);
+    }
+
+    #[test]
+    fn off_edge_coordinates_stay_zero() {
+        let p = problem();
+        let y = vec![0.5; p.decision_len()];
+        let mut g = vec![0.0; p.decision_len()];
+        gradient(&p, &[1.0, 1.0], &y, &mut g, &mut GradScratch::default());
+        assert_eq!(g[p.idx(1, 0, 0)], 0.0); // (1,0) is not an edge
+        assert_eq!(g[p.idx(1, 0, 1)], 0.0);
+    }
+
+    #[test]
+    fn matches_finite_difference_of_reward() {
+        use crate::reward::slot_reward;
+        let p = problem();
+        let x = [1.0, 1.0];
+        let mut y = vec![0.7; p.decision_len()];
+        // zero off-edge entries so reward is consistent
+        y[p.idx(1, 0, 0)] = 0.0;
+        y[p.idx(1, 0, 1)] = 0.0;
+        let mut g = vec![0.0; p.decision_len()];
+        gradient(&p, &x, &y, &mut g, &mut GradScratch::default());
+        let h = 1e-6;
+        for l in 0..2 {
+            for &r in &p.graph.ports_to_instances[l] {
+                for k in 0..2 {
+                    let i = p.idx(l, r, k);
+                    let mut yp = y.clone();
+                    yp[i] += h;
+                    let mut ym = y.clone();
+                    ym[i] -= h;
+                    let fd = (slot_reward(&p, &x, &yp).q - slot_reward(&p, &x, &ym).q)
+                        / (2.0 * h);
+                    // finite differences straddle the argmax tie at equal
+                    // quotas; tolerance covers the kink
+                    assert!(
+                        (fd - g[i]).abs() < 1e-4,
+                        "fd={fd} grad={} at ({l},{r},{k})",
+                        g[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_norm_is_euclidean() {
+        assert!((grad_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_arrival_scales_gradient() {
+        // Sec. 3.4: x_l ∈ ℕ scales the port gradient linearly.
+        let p = problem();
+        let y = vec![0.3; p.decision_len()];
+        let mut g1 = vec![0.0; p.decision_len()];
+        let mut g3 = vec![0.0; p.decision_len()];
+        gradient(&p, &[1.0, 0.0], &y, &mut g1, &mut GradScratch::default());
+        gradient(&p, &[3.0, 0.0], &y, &mut g3, &mut GradScratch::default());
+        for i in 0..g1.len() {
+            assert!((g3[i] - 3.0 * g1[i]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,389 @@
+//! The fast Euclidean projection onto Y (Algorithm 1, steps 6–31).
+//!
+//! The projection decomposes per (r, k) pair: each column
+//! v = y[·, r, k] over the ports l ∈ L_r solves
+//!
+//! ```text
+//! min ‖v − z‖²   s.t.   0 ≤ v_l ≤ a_l^k,   Σ_l v_l ≤ c_r^k .
+//! ```
+//!
+//! KKT (Eq. 34) gives v_l = clip(z_l − ρ/2, 0, a_l) with water level
+//! τ = ρ/2 ≥ 0, zero if the capacity constraint is slack.  The paper
+//! finds τ by sorting the column and iterating the B¹/B²/B³ partition;
+//! `project_channel` implements the equivalent exact *breakpoint scan*:
+//! g(τ) = Σ_l clip(z_l − τ, 0, a_l) is piecewise linear and decreasing
+//! with breakpoints {z_l} ∪ {z_l − a_l}, so one sort of the 2·|L_r|
+//! breakpoints plus one linear scan pins the segment where g(τ) = c and
+//! solves for τ in closed form — same O(|L_r| log |L_r|) complexity and
+//! the same sorted structure as the paper's inner/outer loop, but with a
+//! termination argument that doesn't rely on uniform caps.
+//!
+//! Columns are independent, so `project` runs them in parallel over a
+//! scoped thread pool (the "for each (r, k) in parallel" of Alg. 1).
+
+use crate::model::Problem;
+use crate::utils::pool;
+
+/// Per-worker scratch for one channel projection (reused across columns).
+#[derive(Clone, Debug, Default)]
+pub struct ChannelScratch {
+    vals: Vec<f64>,
+    caps: Vec<f64>,
+    breaks: Vec<f64>,
+}
+
+/// Exact projection of one (r, k) column.
+///
+/// `vals[i]`/`caps[i]` are z and a for the i-th port of L_r; on return
+/// `vals` holds the projected v.  Returns the water level τ (= ρ/2 of
+/// Eq. 35), 0.0 when the capacity constraint is slack.
+pub fn project_channel(vals: &mut [f64], caps: &[f64], capacity: f64,
+                       breaks: &mut Vec<f64>) -> f64 {
+    debug_assert_eq!(vals.len(), caps.len());
+    // Fast path: if the box-clipped point fits the capacity, τ = 0
+    // (KKT: ρ > 0 only when the capacity constraint is tight).  The
+    // original z must be kept for the scan below — clipping first and
+    // scanning the clipped values changes the answer (a coordinate far
+    // above its cap must stay pinned at the cap while others drain).
+    let used: f64 = vals
+        .iter()
+        .zip(caps)
+        .map(|(&z, &a)| z.clamp(0.0, a))
+        .sum();
+    if used <= capacity {
+        for i in 0..vals.len() {
+            vals[i] = vals[i].clamp(0.0, caps[i]);
+        }
+        return 0.0;
+    }
+
+    // Capacity binds: find τ with g(τ) = Σ clip(z−τ, 0, a) = capacity.
+    // g is piecewise linear, decreasing; its breakpoints are where any
+    // coordinate enters/leaves the interior regime: τ = z_i (leaves zero
+    // set) and τ = z_i − a_i (leaves the cap set).
+    breaks.clear();
+    for i in 0..vals.len() {
+        breaks.push(vals[i]);
+        breaks.push(vals[i] - caps[i]);
+    }
+    breaks.retain(|&b| b > 0.0);
+    breaks.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    breaks.push(0.0);
+
+    // g(τ) and the number of interior coordinates at level τ⁺.
+    let g_at = |tau: f64| -> (f64, f64) {
+        let mut g = 0.0;
+        let mut interior = 0.0;
+        for i in 0..vals.len() {
+            let v = vals[i] - tau;
+            if v <= 0.0 {
+                // zero set
+            } else if v >= caps[i] {
+                g += caps[i];
+            } else {
+                g += v;
+                interior += 1.0;
+            }
+        }
+        (g, interior)
+    };
+
+    // Scan from the largest breakpoint (g smallest) downward; stop at the
+    // first breakpoint where g(τ) ≥ capacity — the crossing lies in
+    // [tau, prev_tau].  g is linear *inside* the segment; boundary
+    // points belong to both adjacent regimes (a coordinate with
+    // z_i − a_i == τ is "capped" at τ but interior just above), so the
+    // slope must be sampled at the segment midpoint, not an endpoint.
+    let mut prev_tau = breaks[0];
+    for &tau in breaks.iter() {
+        let (g, _) = g_at(tau);
+        if g >= capacity {
+            let mid = 0.5 * (tau + prev_tau);
+            let (g_mid, interior) = g_at(mid);
+            // solve g(mid) − interior·(τ* − mid) = capacity
+            let tau_star = if interior > 0.0 {
+                mid + (g_mid - capacity) / interior
+            } else {
+                tau
+            };
+            let tau_star = tau_star.clamp(tau, prev_tau);
+            for i in 0..vals.len() {
+                vals[i] = (vals[i] - tau_star).clamp(0.0, caps[i]);
+            }
+            return tau_star;
+        }
+        prev_tau = tau;
+    }
+    // g(0) > capacity was established, so we must have returned above.
+    unreachable!("breakpoint scan failed to bracket the water level");
+}
+
+/// Reference projector for tests: bisection on τ (slow, obviously
+/// correct).  Mirrors python/compile/kernels/ref.py::project_ref.
+pub fn project_channel_bisect(vals: &mut [f64], caps: &[f64], capacity: f64) -> f64 {
+    let used: f64 = vals.iter().zip(caps).map(|(&z, &a)| z.clamp(0.0, a)).sum();
+    if used <= capacity {
+        for i in 0..vals.len() {
+            vals[i] = vals[i].clamp(0.0, caps[i]);
+        }
+        return 0.0;
+    }
+    let g = |tau: f64| -> f64 {
+        vals.iter().zip(caps).map(|(&z, &a)| (z - tau).clamp(0.0, a)).sum()
+    };
+    let mut lo = 0.0;
+    let mut hi = vals.iter().copied().fold(0.0, f64::max) + 1e-9;
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) > capacity {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let tau = hi;
+    for i in 0..vals.len() {
+        vals[i] = (vals[i] - tau).clamp(0.0, caps[i]);
+    }
+    tau
+}
+
+/// Project the dense decision tensor `z` [L, R, K] onto Y in place.
+///
+/// Off-edge coordinates are zeroed.  Channels are distributed over
+/// `workers` threads (0 = auto); each instance r owns the disjoint slice
+/// of coordinates {(l, r, k) : l, k}, so parallelizing over r is race-free.
+pub fn project(problem: &Problem, z: &mut [f64], workers: usize) {
+    let r_n = problem.num_instances();
+    // Thread-spawn costs ~100us per worker per call; below this tensor
+    // size the serial scan wins outright (measured in
+    // benches/ablation_projection.rs — see EXPERIMENTS.md §Perf).
+    const SERIAL_THRESHOLD: usize = 65_536;
+    if workers <= 1 || (workers == 0 && z.len() < SERIAL_THRESHOLD) {
+        return project_serial(problem, z);
+    }
+    let workers = if workers == 0 {
+        // one worker per ~64k tensor elements, capped by cores
+        pool::default_workers(r_n).min((z.len() / 32_768).max(2))
+    } else {
+        workers
+    };
+    let shared = SharedTensor { ptr: z.as_mut_ptr(), len: z.len() };
+    let shared = &shared; // capture the Sync wrapper, not the raw pointer field
+    pool::parallel_for(r_n, workers, |r| {
+        // SAFETY: instance r touches only indices (l*R + r)*K + k — disjoint
+        // across distinct r.
+        let z = unsafe { std::slice::from_raw_parts_mut(shared.ptr, shared.len) };
+        let mut scratch = ChannelScratch::default();
+        project_instance(problem, r, z, &mut scratch);
+    });
+}
+
+/// Serial variant (used by benches to measure the parallel speedup).
+pub fn project_serial(problem: &Problem, z: &mut [f64]) {
+    let mut scratch = ChannelScratch::default();
+    for r in 0..problem.num_instances() {
+        project_instance(problem, r, z, &mut scratch);
+    }
+}
+
+/// Project all K channels of instance r and zero its off-edge entries.
+fn project_instance(problem: &Problem, r: usize, z: &mut [f64], scratch: &mut ChannelScratch) {
+    let k_n = problem.num_resources;
+    let ports = &problem.graph.instances_to_ports[r];
+    // zero off-edge coordinates of this instance
+    for l in 0..problem.num_ports() {
+        if !problem.graph.has_edge(l, r) {
+            let base = problem.idx(l, r, 0);
+            z[base..base + k_n].fill(0.0);
+        }
+    }
+    if ports.is_empty() {
+        return;
+    }
+    for k in 0..k_n {
+        scratch.vals.clear();
+        scratch.caps.clear();
+        for &l in ports {
+            scratch.vals.push(z[problem.idx(l, r, k)]);
+            scratch.caps.push(problem.demand_at(l, k));
+        }
+        project_channel(
+            &mut scratch.vals,
+            &scratch.caps,
+            problem.capacity_at(r, k),
+            &mut scratch.breaks,
+        );
+        for (i, &l) in ports.iter().enumerate() {
+            z[problem.idx(l, r, k)] = scratch.vals[i];
+        }
+    }
+}
+
+/// Pointer wrapper so the scoped threads can share the tensor; safety is
+/// argued at the call site (disjoint index ownership per instance).
+struct SharedTensor {
+    ptr: *mut f64,
+    len: usize,
+}
+unsafe impl Sync for SharedTensor {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::traces::synthesize;
+    use crate::utils::prop::{check, ensure};
+    use crate::utils::rng::Rng;
+
+    fn channel_case(rng: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>, f64) {
+        let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 6.0)).collect();
+        let caps: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 3.0)).collect();
+        let capacity = rng.uniform(0.2, 0.7 * caps.iter().sum::<f64>());
+        (vals, caps, capacity)
+    }
+
+    #[test]
+    fn channel_matches_bisection_reference() {
+        check("channel-vs-bisect", 300, |rng, size| {
+            let n = rng.range(1, size.dim(40, 1));
+            let (vals, caps, capacity) = channel_case(rng, n);
+            let mut fast = vals.clone();
+            let mut slow = vals.clone();
+            let mut breaks = Vec::new();
+            project_channel(&mut fast, &caps, capacity, &mut breaks);
+            project_channel_bisect(&mut slow, &caps, capacity);
+            for i in 0..n {
+                if (fast[i] - slow[i]).abs() > 1e-6 {
+                    return Err(format!(
+                        "i={i}: fast={} slow={} (vals={vals:?} caps={caps:?} c={capacity})",
+                        fast[i], slow[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn channel_output_feasible_and_optimal_kkt() {
+        check("channel-kkt", 300, |rng, size| {
+            let n = rng.range(1, size.dim(30, 1));
+            let (vals, caps, capacity) = channel_case(rng, n);
+            let mut v = vals.clone();
+            let mut breaks = Vec::new();
+            let tau = project_channel(&mut v, &caps, capacity, &mut breaks);
+            let sum: f64 = v.iter().sum();
+            ensure(sum <= capacity + 1e-9, || format!("sum {sum} > cap {capacity}"))?;
+            for i in 0..n {
+                ensure(v[i] >= -1e-12 && v[i] <= caps[i] + 1e-12, || {
+                    format!("box violated at {i}: {}", v[i])
+                })?;
+                // KKT stationarity: v_i = clip(z_i - tau, 0, a_i)
+                let want = (vals[i] - tau).clamp(0.0, caps[i]);
+                ensure((v[i] - want).abs() < 1e-9, || {
+                    format!("stationarity at {i}: {} vs {want}", v[i])
+                })?;
+            }
+            // complementary slackness: tau > 0 => capacity tight
+            if tau > 1e-9 {
+                ensure((sum - capacity).abs() < 1e-6, || {
+                    format!("tau={tau} but sum={sum} != c={capacity}")
+                })?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interior_point_untouched() {
+        let mut v = vec![0.5, 0.25];
+        let caps = [1.0, 1.0];
+        let mut breaks = Vec::new();
+        let tau = project_channel(&mut v, &caps, 10.0, &mut breaks);
+        assert_eq!(tau, 0.0);
+        assert_eq!(v, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn water_level_matches_eq35_hand_case() {
+        // mirrors python test_water_level_matches_paper_rho: z=[3,2,1],
+        // a=10, c=3 -> B3 = all, rho/2 = (6-3)/3 = 1.
+        let mut v = vec![3.0, 2.0, 1.0];
+        let caps = [10.0, 10.0, 10.0];
+        let mut breaks = Vec::new();
+        let tau = project_channel(&mut v, &caps, 3.0, &mut breaks);
+        assert!((tau - 1.0).abs() < 1e-9, "tau={tau}");
+        assert!((v[0] - 2.0).abs() < 1e-9);
+        assert!((v[1] - 1.0).abs() < 1e-9);
+        assert!(v[2].abs() < 1e-9);
+    }
+
+    #[test]
+    fn caps_saturate_b1_set() {
+        // largest value pinned at its cap (B1), rest water-filled
+        let mut v = vec![5.0, 1.0, 0.8];
+        let caps = [1.0, 2.0, 2.0];
+        let mut breaks = Vec::new();
+        let tau = project_channel(&mut v, &caps, 2.0, &mut breaks);
+        assert!((v[0] - 1.0).abs() < 1e-9, "v={v:?} tau={tau}");
+        let sum: f64 = v.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn full_projection_feasible_parallel_equals_serial() {
+        let scenario = Scenario::small();
+        let p = synthesize(&scenario);
+        let mut rng = Rng::new(9);
+        let mut z: Vec<f64> =
+            (0..p.decision_len()).map(|_| rng.uniform(-1.0, 8.0)).collect();
+        let mut z_par = z.clone();
+        project_serial(&p, &mut z);
+        project(&p, &mut z_par, 4);
+        assert_eq!(z, z_par, "parallel and serial projections must agree exactly");
+        p.check_feasible(&z, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn projection_idempotent() {
+        let p = synthesize(&Scenario::small());
+        let mut rng = Rng::new(21);
+        let mut z: Vec<f64> =
+            (0..p.decision_len()).map(|_| rng.uniform(-2.0, 10.0)).collect();
+        project(&p, &mut z, 0);
+        let once = z.clone();
+        project(&p, &mut z, 0);
+        for i in 0..z.len() {
+            assert!((z[i] - once[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn projection_nonexpansive() {
+        // ‖P(z1) − P(z2)‖ ≤ ‖z1 − z2‖ on-edge — step (i) of Eq. 37.
+        let p = synthesize(&Scenario::small());
+        check("nonexpansive", 50, |rng, _| {
+            let mut z1: Vec<f64> =
+                (0..p.decision_len()).map(|_| rng.uniform(-1.0, 6.0)).collect();
+            let mut z2: Vec<f64> =
+                z1.iter().map(|v| v + rng.uniform(-0.5, 0.5)).collect();
+            // distance over on-edge coords only (off-edge are clamped)
+            let mut d_in = 0.0;
+            for l in 0..p.num_ports() {
+                for &r in &p.graph.ports_to_instances[l] {
+                    for k in 0..p.num_resources {
+                        let i = p.idx(l, r, k);
+                        d_in += (z1[i] - z2[i]).powi(2);
+                    }
+                }
+            }
+            project(&p, &mut z1, 0);
+            project(&p, &mut z2, 0);
+            let d_out: f64 = z1.iter().zip(&z2).map(|(a, b)| (a - b) * (a - b)).sum();
+            ensure(d_out <= d_in + 1e-9, || {
+                format!("expansion: {} > {}", d_out.sqrt(), d_in.sqrt())
+            })
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! The concave utility families of Eq. (51) and their calculus.
+//!
+//! Each channel's gain function `f_r^k` is one of four families, all
+//! zero-startup (`f(0) = 0`), non-decreasing and concave on ℝ₊ — the
+//! diminishing marginal effect of adding parallel workers:
+//!
+//! | family     | f(y)                  | f'(y)            | ϖ = f'(0) |
+//! |------------|-----------------------|------------------|-----------|
+//! | linear     | αy                    | α                | α         |
+//! | log        | α·ln(y+1)             | α/(y+1)          | α         |
+//! | reciprocal | 1/α − 1/(y+α)         | 1/(y+α)²         | 1/α²      |
+//! | poly       | α·√(y+1) − α          | α/(2√(y+1))      | α/2       |
+
+/// Utility family discriminant.  The numeric values match the `kind`
+/// codes the Python kernels use (ref.py KIND_*), so the same i32 tensor
+/// drives both implementations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(i32)]
+pub enum UtilityKind {
+    Linear = 0,
+    Log = 1,
+    Reciprocal = 2,
+    Poly = 3,
+}
+
+impl UtilityKind {
+    pub const ALL: [UtilityKind; 4] =
+        [UtilityKind::Linear, UtilityKind::Log, UtilityKind::Reciprocal, UtilityKind::Poly];
+
+    pub fn from_code(code: i32) -> Option<UtilityKind> {
+        match code {
+            0 => Some(UtilityKind::Linear),
+            1 => Some(UtilityKind::Log),
+            2 => Some(UtilityKind::Reciprocal),
+            3 => Some(UtilityKind::Poly),
+            _ => None,
+        }
+    }
+
+    pub fn code(self) -> i32 {
+        self as i32
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            UtilityKind::Linear => "linear",
+            UtilityKind::Log => "log",
+            UtilityKind::Reciprocal => "reciprocal",
+            UtilityKind::Poly => "poly",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<UtilityKind> {
+        match name {
+            "linear" => Some(UtilityKind::Linear),
+            "log" => Some(UtilityKind::Log),
+            "reciprocal" => Some(UtilityKind::Reciprocal),
+            "poly" => Some(UtilityKind::Poly),
+            _ => None,
+        }
+    }
+
+    /// f(y) — the parallel-computation gain of `y` units (Eq. 51).
+    #[inline]
+    pub fn value(self, y: f64, alpha: f64) -> f64 {
+        debug_assert!(y >= -1e-9, "utility evaluated at negative y={y}");
+        let y = y.max(0.0);
+        match self {
+            UtilityKind::Linear => alpha * y,
+            UtilityKind::Log => alpha * (y + 1.0).ln(),
+            UtilityKind::Reciprocal => 1.0 / alpha - 1.0 / (y + alpha),
+            UtilityKind::Poly => alpha * (y + 1.0).sqrt() - alpha,
+        }
+    }
+
+    /// f'(y) — marginal gain.
+    #[inline]
+    pub fn grad(self, y: f64, alpha: f64) -> f64 {
+        let y = y.max(0.0);
+        match self {
+            UtilityKind::Linear => alpha,
+            UtilityKind::Log => alpha / (y + 1.0),
+            UtilityKind::Reciprocal => {
+                let d = y + alpha;
+                1.0 / (d * d)
+            }
+            UtilityKind::Poly => alpha / (2.0 * (y + 1.0).sqrt()),
+        }
+    }
+
+    /// ϖ = f'(0), the gradient bound of Def. 1 (iii) used in Thm. 1.
+    #[inline]
+    pub fn varpi(self, alpha: f64) -> f64 {
+        self.grad(0.0, alpha)
+    }
+}
+
+/// The per-experiment utility assignment policy (Fig. 7 sweeps these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UtilityMix {
+    /// Uniform-random family per (r, k) — the default "hybrid" setting.
+    Mixed,
+    /// Every channel uses the same family.
+    All(UtilityKind),
+}
+
+impl UtilityMix {
+    pub fn name(self) -> String {
+        match self {
+            UtilityMix::Mixed => "mixed".to_string(),
+            UtilityMix::All(k) => format!("all-{}", k.name()),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<UtilityMix> {
+        if name == "mixed" {
+            return Some(UtilityMix::Mixed);
+        }
+        name.strip_prefix("all-").and_then(UtilityKind::from_name).map(UtilityMix::All)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALPHAS: [f64; 3] = [1.0, 1.25, 1.5];
+
+    #[test]
+    fn zero_startup() {
+        for kind in UtilityKind::ALL {
+            for alpha in ALPHAS {
+                assert!(
+                    kind.value(0.0, alpha).abs() < 1e-12,
+                    "{}: f(0) != 0",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nondecreasing_and_concave() {
+        for kind in UtilityKind::ALL {
+            for alpha in ALPHAS {
+                let mut prev_f = kind.value(0.0, alpha);
+                let mut prev_g = kind.grad(0.0, alpha);
+                for i in 1..200 {
+                    let y = i as f64 * 0.25;
+                    let f = kind.value(y, alpha);
+                    let g = kind.grad(y, alpha);
+                    assert!(f >= prev_f - 1e-12, "{} not nondecreasing", kind.name());
+                    assert!(g <= prev_g + 1e-12, "{} grad not nonincreasing", kind.name());
+                    assert!(g >= 0.0);
+                    prev_f = f;
+                    prev_g = g;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let h = 1e-6;
+        for kind in UtilityKind::ALL {
+            for alpha in ALPHAS {
+                for i in 0..50 {
+                    let y = 0.1 + i as f64 * 0.37;
+                    let fd = (kind.value(y + h, alpha) - kind.value(y - h, alpha)) / (2.0 * h);
+                    let an = kind.grad(y, alpha);
+                    assert!(
+                        (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                        "{}: fd={fd} an={an} at y={y}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn varpi_upper_bounds_grad() {
+        for kind in UtilityKind::ALL {
+            for alpha in ALPHAS {
+                let w = kind.varpi(alpha);
+                for i in 0..100 {
+                    let y = i as f64 * 0.5;
+                    assert!(kind.grad(y, alpha) <= w + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for kind in UtilityKind::ALL {
+            assert_eq!(UtilityKind::from_code(kind.code()), Some(kind));
+            assert_eq!(UtilityKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(UtilityKind::from_code(9), None);
+    }
+
+    #[test]
+    fn mix_names_roundtrip() {
+        for mix in [
+            UtilityMix::Mixed,
+            UtilityMix::All(UtilityKind::Log),
+            UtilityMix::All(UtilityKind::Poly),
+        ] {
+            assert_eq!(UtilityMix::from_name(&mix.name()), Some(mix));
+        }
+        assert_eq!(UtilityMix::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn spot_values_match_eq51() {
+        // mirrored by python/tests/test_kernel.py::test_utility_values_match_eq51
+        assert!((UtilityKind::Linear.value(3.0, 2.0) - 6.0).abs() < 1e-12);
+        assert!((UtilityKind::Log.value(3.0, 2.0) - 2.0 * 4.0f64.ln()).abs() < 1e-12);
+        assert!((UtilityKind::Reciprocal.value(3.0, 2.0) - (0.5 - 0.2)).abs() < 1e-12);
+        assert!((UtilityKind::Poly.value(3.0, 2.0) - 2.0).abs() < 1e-12);
+    }
+}

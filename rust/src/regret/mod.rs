@@ -1,0 +1,172 @@
+//! Regret machinery (Sec. 2.3, Thm. 1).
+//!
+//! The offline comparator y* (Eq. 10) is the best *stationary* decision
+//! for the realized trajectory {x(t)}.  Because Eq. 8 is linear in x,
+//!     Σ_t q(x(t), y) = Σ_l n_l · (gain_l(y) − penalty_l(y)),
+//! with n_l = Σ_t x_l(t) — a weighted single-slot reward with "arrival
+//! counts" n.  That is a concave program over the convex polytope Y, so
+//! we solve it to (numerical) optimality with full-batch projected
+//! gradient ascent re-using the exact same gradient/projection code the
+//! online algorithm runs.
+
+use crate::model::Problem;
+use crate::oga::gradient::{grad_norm, gradient, GradScratch};
+use crate::oga::projection::project;
+use crate::reward::slot_reward;
+
+/// Result of the offline oracle solve.
+#[derive(Clone, Debug)]
+pub struct Oracle {
+    /// y* — the optimal stationary decision.
+    pub y_star: Vec<f64>,
+    /// Σ_t q(x(t), y*) — the comparator's cumulative reward.
+    pub cumulative_reward: f64,
+    /// Iterations used.
+    pub iters: usize,
+}
+
+/// Arrival counts n_l = Σ_t x_l(t) for a recorded trajectory.
+pub fn arrival_counts(trajectory: &[Vec<f64>], num_ports: usize) -> Vec<f64> {
+    let mut n = vec![0.0; num_ports];
+    for x in trajectory {
+        for l in 0..num_ports {
+            n[l] += x[l];
+        }
+    }
+    n
+}
+
+/// Solve Eq. 10 by projected full-gradient ascent with diminishing steps
+/// (η_i = η₀/√(i+1)); tracks the best iterate seen (the objective is
+/// concave but the ascent path need not be monotone at finite step size).
+pub fn solve_oracle(
+    problem: &Problem,
+    counts: &[f64],
+    horizon: usize,
+    iters: usize,
+    workers: usize,
+) -> Oracle {
+    let mut y = vec![0.0; problem.decision_len()];
+    let mut grad = vec![0.0; problem.decision_len()];
+    let mut scratch = GradScratch::default();
+    let mut best_y = y.clone();
+    let mut best_obj = weighted_reward(problem, counts, &y);
+
+    // Scale-free initial step: diam(Y) / ‖∇q(0)‖ keeps the first move
+    // inside the polytope's order of magnitude.
+    gradient(problem, counts, &y, &mut grad, &mut scratch);
+    let g0 = grad_norm(&grad).max(1e-12);
+    let eta0 = problem.diam_upper() / g0;
+
+    for i in 0..iters {
+        gradient(problem, counts, &y, &mut grad, &mut scratch);
+        let eta = eta0 / ((i + 1) as f64).sqrt();
+        for j in 0..y.len() {
+            y[j] += eta * grad[j];
+        }
+        project(problem, &mut y, workers);
+        let obj = weighted_reward(problem, counts, &y);
+        if obj > best_obj {
+            best_obj = obj;
+            best_y = y.clone();
+        }
+    }
+    let _ = horizon;
+    Oracle { y_star: best_y, cumulative_reward: best_obj, iters }
+}
+
+/// Σ_l n_l (gain_l(y) − penalty_l(y)) — the oracle objective.
+pub fn weighted_reward(problem: &Problem, counts: &[f64], y: &[f64]) -> f64 {
+    slot_reward(problem, counts, y).q
+}
+
+/// Regret of a realized online reward sequence against the oracle for
+/// the same trajectory: R_T = Q(y*) − Q({y(t)}).
+pub fn regret(oracle: &Oracle, online_cumulative: f64) -> f64 {
+    oracle.cumulative_reward - online_cumulative
+}
+
+/// The Thm. 1 upper bound H_G · √T (Eq. 36/49).
+pub fn theorem1_bound(problem: &Problem, horizon: usize) -> f64 {
+    problem.h_g() * (horizon as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::coordinator::Leader;
+    use crate::schedulers::OgaSched;
+    use crate::sim::arrivals::{record_trajectory, Bernoulli, Replay};
+    use crate::traces::synthesize;
+
+    fn small_problem() -> (Scenario, crate::model::Problem) {
+        let mut s = Scenario::small();
+        s.horizon = 150;
+        let p = synthesize(&s);
+        (s, p)
+    }
+
+    #[test]
+    fn oracle_beats_any_feasible_point_we_try() {
+        let (_s, p) = small_problem();
+        let counts = vec![100.0; p.num_ports()];
+        let oracle = solve_oracle(&p, &counts, 150, 300, 0);
+        p.check_feasible(&oracle.y_star, 1e-7).unwrap();
+        // random feasible candidates never beat the oracle
+        let mut rng = crate::utils::rng::Rng::new(5);
+        for _ in 0..50 {
+            let mut y: Vec<f64> =
+                (0..p.decision_len()).map(|_| rng.uniform(0.0, 2.0)).collect();
+            crate::oga::projection::project(&p, &mut y, 0);
+            assert!(
+                weighted_reward(&p, &counts, &y) <= oracle.cumulative_reward + 1e-6
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_solution_is_stationary_point() {
+        // projecting one more ascent step from y* should barely move it
+        let (_s, p) = small_problem();
+        let counts = vec![50.0; p.num_ports()];
+        let oracle = solve_oracle(&p, &counts, 100, 500, 0);
+        let mut y = oracle.y_star.clone();
+        let mut grad = vec![0.0; y.len()];
+        let mut scratch = GradScratch::default();
+        gradient(&p, &counts, &y, &mut grad, &mut scratch);
+        let tiny = 1e-4;
+        for j in 0..y.len() {
+            y[j] += tiny * grad[j];
+        }
+        project(&p, &mut y, 0);
+        let improve = weighted_reward(&p, &counts, &y) - oracle.cumulative_reward;
+        assert!(
+            improve <= 1e-3 * oracle.cumulative_reward.abs().max(1.0),
+            "oracle not stationary: improve={improve}"
+        );
+    }
+
+    #[test]
+    fn online_regret_below_theorem1_bound() {
+        let (s, p) = small_problem();
+        let mut src = Bernoulli::uniform(p.num_ports(), s.arrival_prob, 77);
+        let traj = record_trajectory(&mut src, p.num_ports(), s.horizon);
+        let counts = arrival_counts(&traj, p.num_ports());
+        let oracle = solve_oracle(&p, &counts, s.horizon, 400, 0);
+
+        let mut leader = Leader::new(&p);
+        let mut pol = OgaSched::with_oracle_rate(&p, s.horizon, 0);
+        let mut replay = Replay::new(traj);
+        let run = leader.run(&mut pol, &mut replay, s.horizon);
+        let r = regret(&oracle, run.cumulative_reward);
+        let bound = theorem1_bound(&p, s.horizon);
+        assert!(r <= bound, "regret {r} exceeds Thm. 1 bound {bound}");
+    }
+
+    #[test]
+    fn counts_accumulate() {
+        let traj = vec![vec![1.0, 0.0], vec![1.0, 1.0], vec![0.0, 1.0]];
+        assert_eq!(arrival_counts(&traj, 2), vec![2.0, 2.0]);
+    }
+}

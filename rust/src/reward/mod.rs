@@ -1,0 +1,184 @@
+//! The reward model of Sec. 2.2–2.3: per-port reward (Eq. 7), slot
+//! aggregation (Eq. 8), and the Thm. 1 quantities used by the regret
+//! experiments.
+
+use crate::model::Problem;
+
+/// Decomposed slot reward: q = gain − penalty summed over arrived ports.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SlotReward {
+    /// Σ_l x_l (gain_l − penalty_l) — Eq. 8.
+    pub q: f64,
+    /// Σ_l x_l gain_l (parallel-computation gain term of Eq. 7).
+    pub gain: f64,
+    /// Σ_l x_l penalty_l (dominant communication overhead term).
+    pub penalty: f64,
+}
+
+/// Per-port reward decomposition for one port (Eq. 7, without the x_l
+/// arrival factor).
+pub fn port_reward(problem: &Problem, l: usize, y: &[f64]) -> (f64, f64) {
+    let k_n = problem.num_resources;
+    let mut gain = 0.0;
+    let mut quota = vec![0.0; k_n];
+    for &r in &problem.graph.ports_to_instances[l] {
+        let base = problem.idx(l, r, 0);
+        let rk = r * k_n;
+        for k in 0..k_n {
+            let v = y[base + k];
+            gain += problem.kind[rk + k].value(v, problem.alpha[rk + k]);
+            quota[k] += v;
+        }
+    }
+    let penalty = (0..k_n)
+        .map(|k| problem.beta[k] * quota[k])
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(0.0);
+    (gain, penalty)
+}
+
+/// Slot reward q(x(t), y(t)) with gain/penalty breakdown (Eqs. 7–8).
+pub fn slot_reward(problem: &Problem, x: &[f64], y: &[f64]) -> SlotReward {
+    let mut out = SlotReward::default();
+    for l in 0..problem.num_ports() {
+        if x[l] == 0.0 {
+            continue;
+        }
+        let (gain, penalty) = port_reward(problem, l, y);
+        out.gain += x[l] * gain;
+        out.penalty += x[l] * penalty;
+        out.q += x[l] * (gain - penalty);
+    }
+    out
+}
+
+/// Allocation-free variant used in the hot loop: caller supplies the
+/// [K] quota scratch.
+pub fn slot_reward_scratch(
+    problem: &Problem,
+    x: &[f64],
+    y: &[f64],
+    quota: &mut [f64],
+) -> SlotReward {
+    let k_n = problem.num_resources;
+    debug_assert_eq!(quota.len(), k_n);
+    let mut out = SlotReward::default();
+    for l in 0..problem.num_ports() {
+        if x[l] == 0.0 {
+            continue;
+        }
+        let mut gain = 0.0;
+        quota.fill(0.0);
+        for &r in &problem.graph.ports_to_instances[l] {
+            let base = problem.idx(l, r, 0);
+            let rk = r * k_n;
+            for k in 0..k_n {
+                let v = y[base + k];
+                gain += problem.kind[rk + k].value(v, problem.alpha[rk + k]);
+                quota[k] += v;
+            }
+        }
+        let mut penalty = 0.0f64;
+        for k in 0..k_n {
+            penalty = penalty.max(problem.beta[k] * quota[k]);
+        }
+        out.gain += x[l] * gain;
+        out.penalty += x[l] * penalty;
+        out.q += x[l] * (gain - penalty);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::graph::Bipartite;
+    use crate::oga::utilities::UtilityKind;
+    use crate::traces::synthesize;
+    use crate::utils::rng::Rng;
+
+    fn tiny() -> Problem {
+        Problem {
+            graph: Bipartite::full(1, 2),
+            num_resources: 2,
+            demand: vec![10.0, 10.0],
+            capacity: vec![10.0; 4],
+            alpha: vec![1.0, 2.0, 1.5, 0.5],
+            kind: vec![
+                UtilityKind::Linear,
+                UtilityKind::Log,
+                UtilityKind::Poly,
+                UtilityKind::Reciprocal,
+            ],
+            beta: vec![0.5, 0.25],
+        }
+    }
+
+    #[test]
+    fn hand_computed_reward() {
+        let p = tiny();
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, 0, 0)] = 2.0; // linear alpha=1 -> 2.0
+        y[p.idx(0, 0, 1)] = 3.0; // log alpha=2 -> 2 ln 4
+        y[p.idx(0, 1, 0)] = 1.0; // poly alpha=1.5 -> 1.5(sqrt2 - 1)
+        y[p.idx(0, 1, 1)] = 0.5; // reciprocal alpha=0.5 -> 2 - 1/1 = 1
+        let gain = 2.0 + 2.0 * 4.0f64.ln() + 1.5 * (2.0f64.sqrt() - 1.0) + 1.0;
+        // quotas: k0 = 3.0, k1 = 3.5 -> penalty = max(1.5, 0.875) = 1.5
+        let r = slot_reward(&p, &[1.0], &y);
+        assert!((r.gain - gain).abs() < 1e-12);
+        assert!((r.penalty - 1.5).abs() < 1e-12);
+        assert!((r.q - (gain - 1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_allocation_zero_reward() {
+        let p = tiny();
+        let y = vec![0.0; p.decision_len()];
+        let r = slot_reward(&p, &[1.0], &y);
+        assert_eq!(r, SlotReward { q: 0.0, gain: 0.0, penalty: 0.0 });
+    }
+
+    #[test]
+    fn arrivals_gate_reward() {
+        let p = tiny();
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, 0, 0)] = 1.0;
+        assert_eq!(slot_reward(&p, &[0.0], &y).q, 0.0);
+        assert!(slot_reward(&p, &[1.0], &y).q > 0.0);
+        // multi-arrival (Sec. 3.4): x_l = 2 doubles the port contribution
+        let r1 = slot_reward(&p, &[1.0], &y);
+        let r2 = slot_reward(&p, &[2.0], &y);
+        assert!((r2.q - 2.0 * r1.q).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scratch_variant_matches() {
+        let p = synthesize(&Scenario::small());
+        let mut rng = Rng::new(5);
+        let y: Vec<f64> = (0..p.decision_len())
+            .map(|_| rng.uniform(0.0, 0.5))
+            .collect();
+        let x: Vec<f64> =
+            (0..p.num_ports()).map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 }).collect();
+        let a = slot_reward(&p, &x, &y);
+        let mut quota = vec![0.0; p.num_resources];
+        let b = slot_reward_scratch(&p, &x, &y, &mut quota);
+        assert!((a.q - b.q).abs() < 1e-12);
+        assert!((a.gain - b.gain).abs() < 1e-12);
+        assert!((a.penalty - b.penalty).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reward_monotone_in_capacity_gain() {
+        // more allocation (feasible) should not decrease the gain term
+        let p = tiny();
+        let mut y1 = vec![0.0; p.decision_len()];
+        y1[p.idx(0, 0, 0)] = 1.0;
+        let mut y2 = y1.clone();
+        y2[p.idx(0, 1, 0)] = 1.0;
+        let r1 = slot_reward(&p, &[1.0], &y1);
+        let r2 = slot_reward(&p, &[1.0], &y2);
+        assert!(r2.gain > r1.gain);
+    }
+}

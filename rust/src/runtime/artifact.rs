@@ -1,0 +1,164 @@
+//! AOT artifact discovery: parse `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) and pick the smallest shape bucket that fits
+//! a problem.  Artifacts are HLO *text* — see aot.py for why text, not
+//! serialized protos, is the interchange format.
+
+use std::path::{Path, PathBuf};
+
+/// One AOT'd shape bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub name: String,
+    pub l: usize,
+    pub r: usize,
+    pub k: usize,
+    pub path: PathBuf,
+}
+
+impl Bucket {
+    /// Can a problem of shape (l, r, k) run (zero-padded) in this bucket?
+    pub fn fits(&self, l: usize, r: usize, k: usize) -> bool {
+        l <= self.l && r <= self.r && k <= self.k
+    }
+
+    /// Padded tensor volume — the cost proxy used to pick a bucket.
+    pub fn volume(&self) -> usize {
+        self.l * self.r * self.k
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub buckets: Vec<Bucket>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text: `name L=10 R=128 K=6 file=...` per line.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, String> {
+        let mut buckets = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut l = None;
+            let mut r = None;
+            let mut k = None;
+            let mut file = None;
+            for (i, tok) in line.split_whitespace().enumerate() {
+                if i == 0 {
+                    name = Some(tok.to_string());
+                    continue;
+                }
+                let (key, val) = tok
+                    .split_once('=')
+                    .ok_or_else(|| format!("manifest line {}: bad token {tok}", lineno + 1))?;
+                match key {
+                    "L" => l = val.parse().ok(),
+                    "R" => r = val.parse().ok(),
+                    "K" => k = val.parse().ok(),
+                    "file" => file = Some(val.to_string()),
+                    _ => return Err(format!("manifest line {}: unknown key {key}", lineno + 1)),
+                }
+            }
+            match (name, l, r, k, file) {
+                (Some(name), Some(l), Some(r), Some(k), Some(file)) => {
+                    buckets.push(Bucket { name, l, r, k, path: dir.join(file) });
+                }
+                _ => return Err(format!("manifest line {}: missing fields", lineno + 1)),
+            }
+        }
+        if buckets.is_empty() {
+            return Err("manifest has no buckets".into());
+        }
+        Ok(Manifest { buckets, dir })
+    }
+
+    /// Smallest-volume bucket that fits (l, r, k).
+    pub fn pick(&self, l: usize, r: usize, k: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.fits(l, r, k))
+            .min_by_key(|b| b.volume())
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.name == name)
+    }
+}
+
+/// Default artifact directory: `$OGASCHED_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root.
+pub fn default_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("OGASCHED_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // walk up from CWD looking for artifacts/manifest.txt (covers running
+    // from the workspace root, rust/, or target/)
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..4 {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+small L=4 R=16 K=4 file=oga_step_small.hlo.txt
+default L=10 R=128 K=6 file=oga_step_default.hlo.txt
+large L=100 R=1024 K=6 file=oga_step_large.hlo.txt
+";
+
+    #[test]
+    fn parses_and_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.buckets.len(), 3);
+        assert_eq!(m.pick(4, 16, 4).unwrap().name, "small");
+        assert_eq!(m.pick(5, 16, 4).unwrap().name, "default");
+        assert_eq!(m.pick(10, 128, 6).unwrap().name, "default");
+        assert_eq!(m.pick(11, 128, 6).unwrap().name, "large");
+        assert!(m.pick(200, 1, 1).is_none());
+        assert_eq!(m.by_name("large").unwrap().l, 100);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("x L=1", PathBuf::new()).is_err());
+        assert!(Manifest::parse("", PathBuf::new()).is_err());
+        assert!(Manifest::parse("x L=1 R=2 K=3 Z=9 file=f", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_when_present() {
+        let dir = default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.pick(4, 16, 4).is_some());
+            for b in &m.buckets {
+                assert!(b.path.exists(), "missing artifact {}", b.path.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! The PJRT-backed OGA step: load an HLO-text artifact, compile it once
+//! on the CPU PJRT client, and execute it every slot from the Rust hot
+//! path.  This is the Layer-3 ↔ Layer-2/1 bridge — after `make
+//! artifacts`, Python is never needed again.
+//!
+//! Calling convention (defined by `python/compile/model.py::
+//! oga_step_export`, parameter order is load-bearing):
+//!     x[L] f32, y[L,R,K] f32, mask[L,R] f32, alpha[R,K] f32,
+//!     kind[R,K] i32, beta[K] f32, a[L,K] f32, c[R,K] f32, eta[] f32
+//!   → tuple(y_next[L,R,K] f32, q f32, gain f32, penalty f32)
+//!
+//! Problems smaller than the artifact's shape bucket are zero-padded:
+//! padded ports get x = 0 / mask = 0 and padded instances get c = 0, so
+//! padding is reward- and decision-neutral (proved by
+//! python/tests/test_model.py::test_export_shapes_and_padding_neutrality
+//! and re-checked against the native path in rust/tests/runtime_parity.rs).
+
+use anyhow::{Context, Result};
+
+use crate::model::Problem;
+use crate::runtime::artifact::{Bucket, Manifest};
+
+/// Reward triple returned by the compiled step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReward {
+    pub q: f64,
+    pub gain: f64,
+    pub penalty: f64,
+}
+
+/// A compiled OGA step bound to one problem (static operands are padded
+/// and converted once at construction).
+pub struct OgaStepExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    bucket: Bucket,
+    /// Problem dims (unpadded).
+    l: usize,
+    r: usize,
+    k: usize,
+    /// Padded static literals, rebuilt only when the problem changes.
+    mask: xla::Literal,
+    alpha: xla::Literal,
+    kind: xla::Literal,
+    beta: xla::Literal,
+    a: xla::Literal,
+    c: xla::Literal,
+    /// Current padded decision y(t) (f32, bucket shape).
+    y: Vec<f32>,
+    /// Scratch for padded arrivals.
+    x: Vec<f32>,
+}
+
+impl OgaStepExecutor {
+    /// Load the best-fitting artifact from `manifest` and bind `problem`.
+    pub fn new(manifest: &Manifest, problem: &Problem) -> Result<Self> {
+        let (l, r, k) =
+            (problem.num_ports(), problem.num_instances(), problem.num_resources);
+        let bucket = manifest
+            .pick(l, r, k)
+            .with_context(|| format!("no artifact bucket fits L={l} R={r} K={k}"))?
+            .clone();
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            bucket.path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+
+        let (bl, br, bk) = (bucket.l, bucket.r, bucket.k);
+        // --- pad static operands to the bucket shape ---
+        let mut mask = vec![0.0f32; bl * br];
+        for ll in 0..l {
+            for rr in 0..r {
+                mask[ll * br + rr] = problem.graph.mask[ll * r + rr];
+            }
+        }
+        // alpha padded with 1.0: reciprocal-family lanes divide by alpha,
+        // and padded lanes are masked out anyway.
+        let mut alpha = vec![1.0f32; br * bk];
+        let mut kind = vec![0i32; br * bk];
+        let mut c = vec![0.0f32; br * bk];
+        for rr in 0..r {
+            for kk in 0..k {
+                alpha[rr * bk + kk] = problem.alpha_at(rr, kk) as f32;
+                kind[rr * bk + kk] = problem.kind_at(rr, kk).code();
+                c[rr * bk + kk] = problem.capacity_at(rr, kk) as f32;
+            }
+        }
+        let mut beta = vec![0.0f32; bk];
+        for kk in 0..k {
+            beta[kk] = problem.beta[kk] as f32;
+        }
+        let mut a = vec![0.0f32; bl * bk];
+        for ll in 0..l {
+            for kk in 0..k {
+                a[ll * bk + kk] = problem.demand_at(ll, kk) as f32;
+            }
+        }
+
+        Ok(OgaStepExecutor {
+            exe,
+            l,
+            r,
+            k,
+            mask: lit2(&mask, bl, br)?,
+            alpha: lit2(&alpha, br, bk)?,
+            kind: lit2i(&kind, br, bk)?,
+            beta: xla::Literal::vec1(&beta),
+            a: lit2(&a, bl, bk)?,
+            c: lit2(&c, br, bk)?,
+            y: vec![0.0f32; bl * br * bk],
+            x: vec![0.0f32; bl],
+            bucket,
+        })
+    }
+
+    pub fn bucket(&self) -> &Bucket {
+        &self.bucket
+    }
+
+    /// Reset the decision state to y(1) = 0.
+    pub fn reset(&mut self) {
+        self.y.fill(0.0);
+    }
+
+    /// Copy the current (unpadded) decision into `out` [L, R, K] (f64).
+    pub fn current_decision(&self, out: &mut [f64]) {
+        let (br, bk) = (self.bucket.r, self.bucket.k);
+        for l in 0..self.l {
+            for r in 0..self.r {
+                for k in 0..self.k {
+                    out[(l * self.r + r) * self.k + k] =
+                        self.y[(l * br + r) * bk + k] as f64;
+                }
+            }
+        }
+    }
+
+    /// Run one compiled OGA step: y(t) ← y(t+1) given arrivals x and
+    /// step size eta.  Returns the artifact-computed reward triple for
+    /// the pre-step decision (f32 numerics).
+    pub fn step(&mut self, x: &[f64], eta: f64) -> Result<StepReward> {
+        debug_assert_eq!(x.len(), self.l);
+        self.x.fill(0.0);
+        for (i, &v) in x.iter().enumerate() {
+            self.x[i] = v as f32;
+        }
+        let (bl, br, bk) = (self.bucket.l, self.bucket.r, self.bucket.k);
+        let x_lit = xla::Literal::vec1(&self.x);
+        let y_lit = xla::Literal::vec1(&self.y).reshape(&[bl as i64, br as i64, bk as i64])?;
+        let eta_lit = xla::Literal::from(eta as f32);
+        // execute::<Borrow<Literal>> — pass references so the static
+        // operands are not deep-cloned every slot.
+        let result = self.exe.execute::<&xla::Literal>(&[
+            &x_lit,
+            &y_lit,
+            &self.mask,
+            &self.alpha,
+            &self.kind,
+            &self.beta,
+            &self.a,
+            &self.c,
+            &eta_lit,
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (y_next, q, gain, penalty) = result.to_tuple4()?;
+        let y_vec = y_next.to_vec::<f32>()?;
+        debug_assert_eq!(y_vec.len(), self.y.len());
+        self.y.copy_from_slice(&y_vec);
+        Ok(StepReward {
+            q: q.get_first_element::<f32>()? as f64,
+            gain: gain.get_first_element::<f32>()? as f64,
+            penalty: penalty.get_first_element::<f32>()? as f64,
+        })
+    }
+}
+
+fn lit2(data: &[f32], d0: usize, d1: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64])?)
+}
+
+fn lit2i(data: &[i32], d0: usize, d1: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64])?)
+}

@@ -1,0 +1,70 @@
+//! Runtime bridge: load the AOT'd OGA step (HLO text) via the PJRT CPU
+//! client and run it from the slot loop.  `artifact` handles bucket
+//! discovery, `executor` the compiled step, and [`HloOgaSched`] exposes
+//! the whole thing as a drop-in [`Policy`].
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{default_dir, Bucket, Manifest};
+pub use executor::{OgaStepExecutor, StepReward};
+
+use crate::model::Problem;
+use crate::schedulers::Policy;
+
+/// OGASCHED with its per-slot compute executed by the AOT-compiled
+/// XLA artifact instead of the native Rust kernels — the production
+/// hot path of the three-layer architecture.
+pub struct HloOgaSched {
+    exec: OgaStepExecutor,
+    eta0: f64,
+    decay: f64,
+    t: usize,
+    /// Last artifact-reported reward triple (pre-step decision).
+    pub last_reward: StepReward,
+}
+
+impl HloOgaSched {
+    pub fn new(manifest: &Manifest, problem: &Problem, eta0: f64, decay: f64)
+        -> anyhow::Result<Self> {
+        Ok(HloOgaSched {
+            exec: OgaStepExecutor::new(manifest, problem)?,
+            eta0,
+            decay,
+            t: 0,
+            last_reward: StepReward::default(),
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn from_default_dir(problem: &Problem, eta0: f64, decay: f64)
+        -> anyhow::Result<Self> {
+        let manifest = Manifest::load(default_dir()).map_err(anyhow::Error::msg)?;
+        Self::new(&manifest, problem, eta0, decay)
+    }
+
+    pub fn bucket_name(&self) -> &str {
+        &self.exec.bucket().name
+    }
+}
+
+impl Policy for HloOgaSched {
+    fn name(&self) -> &'static str {
+        "OGASCHED-HLO"
+    }
+
+    fn decide(&mut self, _problem: &Problem, x: &[f64], y: &mut [f64]) {
+        // Reactive scoring, matching schedulers::OgaSched::new (see the
+        // semantics note there): observe x(t), run the compiled Alg. 1
+        // step, serve the arrivals with the updated allocation.
+        let eta = self.eta0 * self.decay.powi(self.t as i32);
+        self.last_reward = self.exec.step(x, eta).expect("PJRT step failed");
+        self.exec.current_decision(y);
+        self.t += 1;
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.exec.reset();
+        self.t = 0;
+    }
+}

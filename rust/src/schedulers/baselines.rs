@@ -1,0 +1,474 @@
+//! The four heuristics of the paper's Sec. 4 comparison plus a random
+//! sanity baseline.  All are *reactive*: they see x(t) and place the
+//! arrived jobs subject to the per-channel caps (Eq. 5) and instance
+//! capacities (Eq. 6); they differ in who wins when capacity is scarce.
+//!
+//! * DRF — ports ascending by dominant resource share
+//!   s_l = max_k a_l^k / Σ_{r∈R_l} c_r^k get resources first (the
+//!   YARN/Mesos allocation order).
+//! * FAIRNESS —每 instance splits each resource proportionally to the
+//!   arrived ports' demands: y = c_r^k · a_l^k / Σ_{l'} a_{l'}^k, capped
+//!   by a_l^k (bias-free proportional sharing).
+//! * BINPACKING — Kubernetes MostAllocated: jobs take capacity from the
+//!   *most*-utilized instances first (consolidation).
+//! * SPREADING — same scoring with the opposite favor: least-utilized
+//!   instances first (isolation / load-balancing).
+
+use crate::model::Problem;
+use crate::schedulers::Policy;
+use crate::utils::rng::Rng;
+
+/// Shared scratch: remaining capacity ledger [R, K] rebuilt each slot.
+#[derive(Clone, Debug, Default)]
+struct Ledger {
+    remaining: Vec<f64>,
+}
+
+impl Ledger {
+    fn begin(&mut self, problem: &Problem) {
+        self.remaining.clear();
+        self.remaining.extend_from_slice(&problem.capacity);
+    }
+
+    /// Take up to `want` of (r, k); returns the granted amount.
+    #[inline]
+    fn take(&mut self, problem: &Problem, r: usize, k: usize, want: f64) -> f64 {
+        let slot = &mut self.remaining[r * problem.num_resources + k];
+        let got = want.min(*slot).max(0.0);
+        *slot -= got;
+        got
+    }
+}
+
+/// Greedy channel-fill in the given instance order: for each arrived
+/// port (already ordered by the policy), take min(a_l^k, remaining
+/// capacity) on every connected channel.
+fn greedy_fill(
+    problem: &Problem,
+    ports: &[usize],
+    instance_order: impl Fn(usize, &Ledger) -> Vec<usize>,
+    ledger: &mut Ledger,
+    y: &mut [f64],
+) {
+    let k_n = problem.num_resources;
+    for &l in ports {
+        let order = instance_order(l, ledger);
+        for r in order {
+            let base = problem.idx(l, r, 0);
+            for k in 0..k_n {
+                let got = ledger.take(problem, r, k, problem.demand_at(l, k));
+                y[base + k] = got;
+            }
+        }
+    }
+}
+
+/// Instance utilization score: allocated fraction of capacity, averaged
+/// over resource types (the Volcano binpack plugin's scoring shape).
+fn utilization(problem: &Problem, r: usize, ledger: &Ledger) -> f64 {
+    let k_n = problem.num_resources;
+    let mut score = 0.0;
+    let mut terms = 0.0;
+    for k in 0..k_n {
+        let cap = problem.capacity_at(r, k);
+        if cap > 0.0 {
+            score += 1.0 - ledger.remaining[r * k_n + k] / cap;
+            terms += 1.0;
+        }
+    }
+    if terms > 0.0 {
+        score / terms
+    } else {
+        0.0
+    }
+}
+
+/// Parallelism budget for the packing/spreading heuristics: the job
+/// requests its per-channel maximum on about half of its reachable
+/// channels (these schedulers place a job, they do not reserve the whole
+/// locality set the way the OGA reservation does).
+fn budget_channels(n_channels: usize) -> f64 {
+    ((n_channels as f64) / 2.0).ceil().max(1.0)
+}
+
+// ---------------------------------------------------------------- DRF --
+
+pub struct Drf {
+    ledger: Ledger,
+}
+
+impl Drf {
+    pub fn new() -> Self {
+        Drf { ledger: Ledger::default() }
+    }
+
+    /// Dominant share s_l = max_k a_l^k / Σ_{r∈R_l} c_r^k.
+    pub fn dominant_share(problem: &Problem, l: usize) -> f64 {
+        let k_n = problem.num_resources;
+        let mut worst = 0.0f64;
+        for k in 0..k_n {
+            let pool: f64 = problem.graph.ports_to_instances[l]
+                .iter()
+                .map(|&r| problem.capacity_at(r, k))
+                .sum();
+            if pool > 0.0 {
+                worst = worst.max(problem.demand_at(l, k) / pool);
+            }
+        }
+        worst
+    }
+}
+
+impl Default for Drf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for Drf {
+    fn name(&self) -> &'static str {
+        "DRF"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.ledger.begin(problem);
+        let mut ports: Vec<usize> =
+            (0..problem.num_ports()).filter(|&l| x[l] > 0.0).collect();
+        ports.sort_by(|&a, &b| {
+            Drf::dominant_share(problem, a)
+                .partial_cmp(&Drf::dominant_share(problem, b))
+                .unwrap()
+        });
+        greedy_fill(
+            problem,
+            &ports,
+            |l, _| problem.graph.ports_to_instances[l].clone(),
+            &mut self.ledger,
+            y,
+        );
+    }
+}
+
+// ----------------------------------------------------------- FAIRNESS --
+
+pub struct Fairness;
+
+impl Fairness {
+    pub fn new() -> Self {
+        Fairness
+    }
+}
+
+impl Default for Fairness {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for Fairness {
+    fn name(&self) -> &'static str {
+        "FAIRNESS"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        let k_n = problem.num_resources;
+        for r in 0..problem.num_instances() {
+            let arrived: Vec<usize> = problem.graph.instances_to_ports[r]
+                .iter()
+                .copied()
+                .filter(|&l| x[l] > 0.0)
+                .collect();
+            if arrived.is_empty() {
+                continue;
+            }
+            for k in 0..k_n {
+                let total_demand: f64 =
+                    arrived.iter().map(|&l| problem.demand_at(l, k)).sum();
+                if total_demand <= 0.0 {
+                    continue;
+                }
+                let cap = problem.capacity_at(r, k);
+                for &l in &arrived {
+                    let want = problem.demand_at(l, k);
+                    // proportional share, never above the channel cap
+                    let share = cap * want / total_demand;
+                    y[problem.idx(l, r, k)] = share.min(want);
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------- BINPACKING / SPREADING --
+
+pub struct BinPacking {
+    ledger: Ledger,
+}
+
+impl BinPacking {
+    pub fn new() -> Self {
+        BinPacking { ledger: Ledger::default() }
+    }
+}
+
+impl Default for BinPacking {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for BinPacking {
+    fn name(&self) -> &'static str {
+        "BINPACKING"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.ledger.begin(problem);
+        let k_n = problem.num_resources;
+        for l in (0..problem.num_ports()).filter(|&l| x[l] > 0.0) {
+            let channels = &problem.graph.ports_to_instances[l];
+            let mut order = channels.clone();
+            // MostAllocated: highest utilization first (consolidation)
+            order.sort_by(|&a, &b| {
+                utilization(problem, b, &self.ledger)
+                    .partial_cmp(&utilization(problem, a, &self.ledger))
+                    .unwrap()
+            });
+            for k in 0..k_n {
+                // parallelism budget: the job asks for its per-channel max
+                // on about half of its reachable channels
+                let mut budget = problem.demand_at(l, k) * budget_channels(channels.len());
+                for &r in &order {
+                    if budget <= 0.0 {
+                        break;
+                    }
+                    let want = problem.demand_at(l, k).min(budget);
+                    let got = self.ledger.take(problem, r, k, want);
+                    y[problem.idx(l, r, k)] = got;
+                    budget -= got;
+                }
+            }
+        }
+    }
+}
+
+pub struct Spreading {
+    ledger: Ledger,
+}
+
+impl Spreading {
+    pub fn new() -> Self {
+        Spreading { ledger: Ledger::default() }
+    }
+}
+
+impl Default for Spreading {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for Spreading {
+    fn name(&self) -> &'static str {
+        "SPREADING"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.ledger.begin(problem);
+        let k_n = problem.num_resources;
+        for l in (0..problem.num_ports()).filter(|&l| x[l] > 0.0) {
+            let channels = &problem.graph.ports_to_instances[l];
+            let mut order = channels.clone();
+            // LeastAllocated: lowest utilization first (isolation)
+            order.sort_by(|&a, &b| {
+                utilization(problem, a, &self.ledger)
+                    .partial_cmp(&utilization(problem, b, &self.ledger))
+                    .unwrap()
+            });
+            for k in 0..k_n {
+                // same budget as BINPACKING, but spread evenly over every
+                // reachable channel instead of packed onto few
+                let budget = problem.demand_at(l, k) * budget_channels(channels.len());
+                let per_channel = budget / channels.len() as f64;
+                for &r in &order {
+                    let want = per_channel.min(problem.demand_at(l, k));
+                    let got = self.ledger.take(problem, r, k, want);
+                    y[problem.idx(l, r, k)] = got;
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- RandomAlloc --
+
+/// Random feasible allocation — a sanity floor for the figures (any
+/// serious policy must beat it).
+pub struct RandomAlloc {
+    ledger: Ledger,
+    rng: Rng,
+}
+
+impl RandomAlloc {
+    pub fn new(seed: u64) -> Self {
+        RandomAlloc { ledger: Ledger::default(), rng: Rng::new(seed) }
+    }
+}
+
+impl Policy for RandomAlloc {
+    fn name(&self) -> &'static str {
+        "RANDOM"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.ledger.begin(problem);
+        let k_n = problem.num_resources;
+        let mut ports: Vec<usize> =
+            (0..problem.num_ports()).filter(|&l| x[l] > 0.0).collect();
+        self.rng.shuffle(&mut ports);
+        for &l in &ports {
+            for &r in &problem.graph.ports_to_instances[l] {
+                let base = problem.idx(l, r, 0);
+                for k in 0..k_n {
+                    let frac = self.rng.f64();
+                    let want = problem.demand_at(l, k) * frac;
+                    y[base + k] = self.ledger.take(problem, r, k, want);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::reward::slot_reward;
+    use crate::traces::synthesize;
+
+    fn scarce_problem() -> Problem {
+        // capacity scarce enough that ordering matters
+        let mut s = Scenario::small();
+        s.contention = 20.0;
+        synthesize(&s)
+    }
+
+    #[test]
+    fn drf_orders_by_dominant_share() {
+        let p = synthesize(&Scenario::small());
+        // shares are computable and finite for every port
+        for l in 0..p.num_ports() {
+            let s = Drf::dominant_share(&p, l);
+            assert!(s.is_finite() && s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn all_baselines_respect_scarcity() {
+        let p = scarce_problem();
+        let x = vec![1.0; p.num_ports()];
+        let mut y = vec![0.0; p.decision_len()];
+        let mut policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(Drf::new()),
+            Box::new(Fairness::new()),
+            Box::new(BinPacking::new()),
+            Box::new(Spreading::new()),
+            Box::new(RandomAlloc::new(3)),
+        ];
+        for pol in policies.iter_mut() {
+            pol.decide(&p, &x, &mut y);
+            p.check_feasible(&y, 1e-9)
+                .map_err(|e| format!("{}: {e}", pol.name()))
+                .unwrap();
+            let r = slot_reward(&p, &x, &y);
+            assert!(r.gain > 0.0, "{} allocated nothing", pol.name());
+        }
+    }
+
+    #[test]
+    fn no_allocation_to_absent_ports() {
+        let p = synthesize(&Scenario::small());
+        let mut x = vec![0.0; p.num_ports()];
+        x[0] = 1.0;
+        let mut y = vec![0.0; p.decision_len()];
+        let mut policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(Drf::new()),
+            Box::new(Fairness::new()),
+            Box::new(BinPacking::new()),
+            Box::new(Spreading::new()),
+        ];
+        for pol in policies.iter_mut() {
+            pol.decide(&p, &x, &mut y);
+            for l in 1..p.num_ports() {
+                for &r in &p.graph.ports_to_instances[l] {
+                    for k in 0..p.num_resources {
+                        assert_eq!(
+                            y[p.idx(l, r, k)],
+                            0.0,
+                            "{} allocated to absent port {l}",
+                            pol.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binpacking_concentrates_spreading_balances() {
+        let p = scarce_problem();
+        let x = vec![1.0; p.num_ports()];
+        let mut y_bin = vec![0.0; p.decision_len()];
+        let mut y_spr = vec![0.0; p.decision_len()];
+        BinPacking::new().decide(&p, &x, &mut y_bin);
+        Spreading::new().decide(&p, &x, &mut y_spr);
+        // BINPACKING stops once the budget is packed onto few channels;
+        // SPREADING touches every reachable channel.  Count the channels
+        // each policy actually uses.
+        let used_channels = |y: &[f64]| -> usize {
+            let mut n = 0;
+            for l in 0..p.num_ports() {
+                for &r in &p.graph.ports_to_instances[l] {
+                    let base = p.idx(l, r, 0);
+                    if (0..p.num_resources).any(|k| y[base + k] > 1e-9) {
+                        n += 1;
+                    }
+                }
+            }
+            n
+        };
+        assert!(
+            used_channels(&y_bin) < used_channels(&y_spr),
+            "binpacking ({}) should use fewer channels than spreading ({})",
+            used_channels(&y_bin),
+            used_channels(&y_spr)
+        );
+        assert_ne!(y_bin, y_spr);
+    }
+
+    #[test]
+    fn fairness_is_proportional_when_uncontended() {
+        // single instance, two ports, ample capacity: each gets its demand
+        use crate::graph::Bipartite;
+        use crate::oga::utilities::UtilityKind;
+        let p = Problem {
+            graph: Bipartite::full(2, 1),
+            num_resources: 1,
+            demand: vec![2.0, 6.0],
+            capacity: vec![100.0],
+            alpha: vec![1.0],
+            kind: vec![UtilityKind::Linear],
+            beta: vec![0.3],
+        };
+        let mut y = vec![0.0; 2];
+        Fairness::new().decide(&p, &[1.0, 1.0], &mut y);
+        // shares: cap*2/8 = 25 -> capped at 2; cap*6/8 = 75 -> capped at 6
+        assert!((y[0] - 2.0).abs() < 1e-12);
+        assert!((y[1] - 6.0).abs() < 1e-12);
+    }
+}

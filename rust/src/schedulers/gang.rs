@@ -1,0 +1,220 @@
+//! Sec. 3.5 extension: Gang Scheduling with the All-Or-Nothing property.
+//!
+//! Each type-l job is a set Q_l of task components; at least m_l of them
+//! must be scheduled for the job to launch.  The feasible set gains the
+//! non-convex counting constraint
+//!     Σ_q 1{Σ_{r,k} y^{q} > 0} ≥ m_l ,
+//! so the paper switches to subgradient ascent plus a feasibility
+//! restoration.  We implement that recipe:
+//!
+//!  1. task expansion — each (l, q) component becomes a port of an
+//!     expanded convex problem (like Sec. 3.4's clones, but components
+//!     may have distinct demands a_l^{q,k});
+//!  2. a projected (sub)gradient step on the convex relaxation;
+//!  3. *gang restoration* — for each arrived job, count components with
+//!     non-trivial allocations; if fewer than m_l, the whole job's
+//!     allocation is withdrawn for the slot (all-or-nothing: the job is
+//!     not launched, resources return to the pool implicitly since the
+//!     next projection re-spreads them).
+
+use crate::graph::Bipartite;
+use crate::model::Problem;
+use crate::oga::{LearningRate, OgaState};
+use crate::schedulers::Policy;
+
+/// A gang job spec: per-component demand rows [(|Q_l|, K)] and the
+/// minimum component count m_l.
+#[derive(Clone, Debug)]
+pub struct GangSpec {
+    /// demands[q][k] = a_l^{q,k}
+    pub demands: Vec<Vec<f64>>,
+    /// m_l — minimum components that must be scheduled.
+    pub min_tasks: usize,
+}
+
+/// Allocation threshold below which a component counts as "not scheduled"
+/// for the all-or-nothing test.
+const ACTIVE_EPS: f64 = 1e-6;
+
+pub struct GangOga {
+    /// Expanded convex problem: one port per (l, q) component.
+    expanded: Problem,
+    /// Component port ranges per original job type: [start, end).
+    ranges: Vec<(usize, usize)>,
+    specs: Vec<GangSpec>,
+    state: OgaState,
+    x_buf: Vec<f64>,
+}
+
+impl GangOga {
+    pub fn new(problem: &Problem, specs: &[GangSpec], eta0: f64, decay: f64,
+               workers: usize) -> Self {
+        assert_eq!(specs.len(), problem.num_ports());
+        let k_n = problem.num_resources;
+        let mut edges = Vec::new();
+        let mut demand = Vec::new();
+        let mut ranges = Vec::new();
+        let mut next = 0usize;
+        for (l, spec) in specs.iter().enumerate() {
+            assert!(spec.min_tasks <= spec.demands.len(),
+                    "m_l > |Q_l| for job type {l}");
+            let start = next;
+            for comp in &spec.demands {
+                assert_eq!(comp.len(), k_n);
+                let port = next;
+                next += 1;
+                for &r in &problem.graph.ports_to_instances[l] {
+                    edges.push((port, r));
+                }
+                demand.extend_from_slice(comp);
+            }
+            ranges.push((start, next));
+        }
+        let graph = Bipartite::from_edges(next, problem.num_instances(), &edges);
+        let expanded = Problem {
+            graph,
+            num_resources: k_n,
+            demand,
+            capacity: problem.capacity.clone(),
+            alpha: problem.alpha.clone(),
+            kind: problem.kind.clone(),
+            beta: problem.beta.clone(),
+        };
+        let state = OgaState::new(
+            &expanded,
+            LearningRate::Decay { eta0, lambda: decay },
+            workers,
+        );
+        GangOga { expanded, ranges, specs: specs.to_vec(), state, x_buf: Vec::new() }
+    }
+
+    /// Components of job l with non-trivial allocation in the expanded
+    /// decision `y_exp`.
+    fn active_components(&self, l: usize, y_exp: &[f64]) -> usize {
+        let (start, end) = self.ranges[l];
+        let k_n = self.expanded.num_resources;
+        (start..end)
+            .filter(|&port| {
+                self.expanded.graph.ports_to_instances[port].iter().any(|&r| {
+                    let base = self.expanded.idx(port, r, 0);
+                    (0..k_n).any(|k| y_exp[base + k] > ACTIVE_EPS)
+                })
+            })
+            .count()
+    }
+}
+
+impl Policy for GangOga {
+    fn name(&self) -> &'static str {
+        "OGASCHED-GANG"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        // expand arrivals: every component of an arrived job is active
+        self.x_buf.clear();
+        for (l, spec) in self.specs.iter().enumerate() {
+            for _ in 0..spec.demands.len() {
+                self.x_buf.push(x[l]);
+            }
+        }
+        // decision y(t) = current reservation, gang-restored
+        let y_exp = self.state.y.clone();
+        y.fill(0.0);
+        let k_n = problem.num_resources;
+        for (l, spec) in self.specs.iter().enumerate() {
+            // all-or-nothing (footnote 1: Kubernetes minAvailable)
+            if self.active_components(l, &y_exp) < spec.min_tasks {
+                continue; // job not launched this slot
+            }
+            let (start, end) = self.ranges[l];
+            for port in start..end {
+                for &r in &problem.graph.ports_to_instances[l] {
+                    let src = self.expanded.idx(port, r, 0);
+                    let dst = problem.idx(l, r, 0);
+                    for k in 0..k_n {
+                        y[dst + k] += y_exp[src + k];
+                    }
+                }
+            }
+        }
+        // subgradient step on the convex relaxation toward y(t+1)
+        self.state.step(&self.expanded, &self.x_buf);
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.state = OgaState::new(&self.expanded, self.state.lr, self.state.workers);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::traces::synthesize;
+
+    fn specs_for(p: &Problem, comps: usize, min_tasks: usize) -> Vec<GangSpec> {
+        (0..p.num_ports())
+            .map(|l| GangSpec {
+                demands: (0..comps)
+                    .map(|_| {
+                        (0..p.num_resources)
+                            .map(|k| p.demand_at(l, k) / comps as f64)
+                            .collect()
+                    })
+                    .collect(),
+                min_tasks,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn expansion_shapes() {
+        let p = synthesize(&Scenario::small());
+        let gang = GangOga::new(&p, &specs_for(&p, 3, 2), 5.0, 0.999, 0);
+        assert_eq!(gang.expanded.num_ports(), 3 * p.num_ports());
+        assert_eq!(gang.ranges.len(), p.num_ports());
+        gang.expanded.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn decisions_feasible_under_gang_restoration() {
+        let p = synthesize(&Scenario::small());
+        let mut gang = GangOga::new(&p, &specs_for(&p, 3, 2), 10.0, 0.999, 0);
+        let x = vec![1.0; p.num_ports()];
+        let mut y = vec![0.0; p.decision_len()];
+        for _ in 0..15 {
+            gang.decide(&p, &x, &mut y);
+            // capacity per (r, k) must hold after component folding
+            for r in 0..p.num_instances() {
+                for k in 0..p.num_resources {
+                    let used: f64 = (0..p.num_ports()).map(|l| y[p.idx(l, r, k)]).sum();
+                    assert!(used <= p.capacity_at(r, k) + 1e-6);
+                }
+            }
+        }
+        // after warmup the gang jobs actually launch
+        let total: f64 = y.iter().sum();
+        assert!(total > 0.0, "no gang job ever launched");
+    }
+
+    #[test]
+    fn all_or_nothing_withholds_partial_jobs() {
+        let p = synthesize(&Scenario::small());
+        // min_tasks == comps: every component must be active
+        let mut gang = GangOga::new(&p, &specs_for(&p, 2, 2), 5.0, 0.999, 0);
+        let x = vec![1.0; p.num_ports()];
+        let mut y = vec![0.0; p.decision_len()];
+        // first slot: y(1) = 0 so no components active -> nothing launches
+        gang.decide(&p, &x, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "m_l > |Q_l|")]
+    fn invalid_spec_rejected() {
+        let p = synthesize(&Scenario::small());
+        let mut specs = specs_for(&p, 2, 2);
+        specs[0].min_tasks = 5;
+        GangOga::new(&p, &specs, 5.0, 0.999, 0);
+    }
+}

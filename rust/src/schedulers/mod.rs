@@ -1,0 +1,83 @@
+//! Scheduling policies: OGASCHED plus the four baselines the paper
+//! compares against (DRF, FAIRNESS, BINPACKING, SPREADING), a random
+//! sanity baseline, and the Sec. 3.4/3.5 extensions.
+
+pub mod baselines;
+pub mod gang;
+pub mod mirror;
+pub mod multi_arrival;
+pub mod oga_sched;
+
+use crate::model::Problem;
+
+pub use baselines::{BinPacking, Drf, Fairness, RandomAlloc, Spreading};
+pub use gang::GangOga;
+pub use mirror::OgaMirror;
+pub use multi_arrival::MultiArrivalOga;
+pub use oga_sched::OgaSched;
+
+/// A per-slot scheduling policy.
+///
+/// `decide` fills the dense decision tensor `y` [L, R, K] for the current
+/// slot, given the arrival vector `x` [L].  The engine then scores
+/// q(x, y) (Eq. 8) — so *reactive* heuristics (the baselines) may use
+/// x(t) to place arrived jobs, while *learning* policies (OGASCHED)
+/// return the reservation y(t) they committed before seeing x(t) and use
+/// x(t) only to update toward y(t+1), exactly as Def. 2 prescribes.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]);
+
+    /// Reset internal state between runs (default: nothing).
+    fn reset(&mut self, _problem: &Problem) {}
+}
+
+/// Construct every policy of the paper's Fig. 2 comparison, OGASCHED
+/// first (order matters for the figure legends).
+pub fn paper_lineup(problem: &Problem, eta0: f64, decay: f64, workers: usize)
+    -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(OgaSched::new(problem, eta0, decay, workers)),
+        Box::new(Drf::new()),
+        Box::new(Fairness::new()),
+        Box::new(BinPacking::new()),
+        Box::new(Spreading::new()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::traces::synthesize;
+    use crate::utils::rng::Rng;
+
+    /// Every policy must emit feasible decisions on random arrivals.
+    #[test]
+    fn all_policies_feasible() {
+        let scenario = Scenario::small();
+        let p = synthesize(&scenario);
+        let mut rng = Rng::new(77);
+        for mut policy in paper_lineup(&p, 5.0, 0.999, 0) {
+            let mut y = vec![0.0; p.decision_len()];
+            for _ in 0..30 {
+                let x: Vec<f64> = (0..p.num_ports())
+                    .map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 })
+                    .collect();
+                policy.decide(&p, &x, &mut y);
+                p.check_feasible(&y, 1e-6)
+                    .map_err(|e| format!("{}: {e}", policy.name()))
+                    .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn lineup_names_match_paper() {
+        let p = synthesize(&Scenario::small());
+        let names: Vec<&str> =
+            paper_lineup(&p, 25.0, 0.9999, 0).iter().map(|p| p.name()).collect();
+        assert_eq!(names, vec!["OGASCHED", "DRF", "FAIRNESS", "BINPACKING", "SPREADING"]);
+    }
+}

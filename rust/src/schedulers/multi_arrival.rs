@@ -1,0 +1,176 @@
+//! Sec. 3.4 extension: multiple jobs per port per slot.
+//!
+//! The paper re-formulates x(t) ∈ ℕ^|L| and gives each of the up-to-J_l
+//! simultaneous type-l jobs its own decision plane y^{j}.  We realize
+//! that by *port expansion*: the expanded problem clones port l into J_l
+//! ports sharing l's edges and demands, and an arrival of x_l = n jobs
+//! activates the first n clones.  Native OGASCHED then runs unchanged on
+//! the expanded problem — exactly the paper's "solved by native
+//! OGASCHED after transformations".
+
+use crate::graph::Bipartite;
+use crate::model::Problem;
+use crate::schedulers::oga_sched::OgaSched;
+use crate::schedulers::Policy;
+
+/// Expand a problem so port l has `copies[l]` clones (J_l planes).
+pub fn expand_problem(problem: &Problem, copies: &[usize]) -> (Problem, Vec<usize>) {
+    assert_eq!(copies.len(), problem.num_ports());
+    let k_n = problem.num_resources;
+    let mut edges = Vec::new();
+    let mut demand = Vec::new();
+    let mut owner = Vec::new(); // expanded port -> original port
+    for (l, &j_l) in copies.iter().enumerate() {
+        for _ in 0..j_l.max(1) {
+            let lx = owner.len();
+            owner.push(l);
+            for &r in &problem.graph.ports_to_instances[l] {
+                edges.push((lx, r));
+            }
+            for k in 0..k_n {
+                demand.push(problem.demand_at(l, k));
+            }
+        }
+    }
+    let graph = Bipartite::from_edges(owner.len(), problem.num_instances(), &edges);
+    (
+        Problem {
+            graph,
+            num_resources: k_n,
+            demand,
+            capacity: problem.capacity.clone(),
+            alpha: problem.alpha.clone(),
+            kind: problem.kind.clone(),
+            beta: problem.beta.clone(),
+        },
+        owner,
+    )
+}
+
+/// Expand a multi-arrival vector x ∈ ℕ^|L| to per-clone indicators
+/// (1{j ≤ x_l} of the Sec. 3.4 reward).
+pub fn expand_arrivals(x: &[f64], copies: &[usize], out: &mut Vec<f64>) {
+    out.clear();
+    for (l, &j_l) in copies.iter().enumerate() {
+        let n = x[l].max(0.0).round() as usize;
+        for j in 0..j_l.max(1) {
+            out.push(if j < n { 1.0 } else { 0.0 });
+        }
+    }
+}
+
+/// OGASCHED over the expanded problem, exposed as a policy on the
+/// *original* problem shape (decisions of clone planes are summed back
+/// into the original tensor; feasibility is preserved because capacity
+/// constraints live per (r, k), which expansion leaves intact).
+pub struct MultiArrivalOga {
+    expanded: Problem,
+    copies: Vec<usize>,
+    inner: OgaSched,
+    x_buf: Vec<f64>,
+    y_buf: Vec<f64>,
+}
+
+impl MultiArrivalOga {
+    pub fn new(problem: &Problem, copies: &[usize], eta0: f64, decay: f64,
+               workers: usize) -> Self {
+        let (expanded, _owner) = expand_problem(problem, copies);
+        let inner = OgaSched::new(&expanded, eta0, decay, workers);
+        let y_len = expanded.decision_len();
+        MultiArrivalOga {
+            expanded,
+            copies: copies.to_vec(),
+            inner,
+            x_buf: Vec::new(),
+            y_buf: vec![0.0; y_len],
+        }
+    }
+}
+
+impl Policy for MultiArrivalOga {
+    fn name(&self) -> &'static str {
+        "OGASCHED-MULTI"
+    }
+
+    fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        expand_arrivals(x, &self.copies, &mut self.x_buf);
+        self.inner.decide(&self.expanded, &self.x_buf, &mut self.y_buf);
+        // fold clone planes back into the original [L, R, K] tensor
+        y.fill(0.0);
+        let k_n = problem.num_resources;
+        let mut lx = 0;
+        for (l, &j_l) in self.copies.iter().enumerate() {
+            for _ in 0..j_l.max(1) {
+                for &r in &problem.graph.ports_to_instances[l] {
+                    let src = self.expanded.idx(lx, r, 0);
+                    let dst = problem.idx(l, r, 0);
+                    for k in 0..k_n {
+                        y[dst + k] += self.y_buf[src + k];
+                    }
+                }
+                lx += 1;
+            }
+        }
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.inner.reset(&self.expanded);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::traces::synthesize;
+
+    #[test]
+    fn expansion_clones_edges_and_demands() {
+        let p = synthesize(&Scenario::small());
+        let copies = vec![2; p.num_ports()];
+        let (e, owner) = expand_problem(&p, &copies);
+        assert_eq!(e.num_ports(), 2 * p.num_ports());
+        assert_eq!(owner.len(), e.num_ports());
+        for (lx, &l) in owner.iter().enumerate() {
+            assert_eq!(
+                e.graph.ports_to_instances[lx],
+                p.graph.ports_to_instances[l]
+            );
+            for k in 0..p.num_resources {
+                assert_eq!(e.demand_at(lx, k), p.demand_at(l, k));
+            }
+        }
+        e.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn arrival_expansion_thresholds() {
+        let mut out = Vec::new();
+        expand_arrivals(&[2.0, 0.0, 1.0], &[3, 2, 2], &mut out);
+        assert_eq!(out, vec![1.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn capacity_still_respected_after_folding() {
+        let p = synthesize(&Scenario::small());
+        let copies = vec![3; p.num_ports()];
+        let mut pol = MultiArrivalOga::new(&p, &copies, 10.0, 0.999, 0);
+        let x: Vec<f64> = (0..p.num_ports()).map(|l| (l % 4) as f64).collect();
+        let mut y = vec![0.0; p.decision_len()];
+        let k_n = p.num_resources;
+        for _ in 0..10 {
+            pol.decide(&p, &x, &mut y);
+            // per-channel caps are per *job copy*, so only check capacity
+            for r in 0..p.num_instances() {
+                for k in 0..k_n {
+                    let used: f64 =
+                        (0..p.num_ports()).map(|l| y[p.idx(l, r, k)]).sum();
+                    assert!(
+                        used <= p.capacity_at(r, k) + 1e-6,
+                        "capacity violated at ({r},{k})"
+                    );
+                }
+            }
+        }
+    }
+}

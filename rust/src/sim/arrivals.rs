@@ -1,0 +1,317 @@
+//! Job-arrival models.  The paper "does not make any assumption on the
+//! arrival patterns"; experiments drive Bernoulli(ρ) thinning over
+//! trace-derived base intensities (Tab. 2's ρ), and the regret ablation
+//! needs adversarial and bursty trajectories too.
+
+use crate::utils::rng::Rng;
+
+/// A source of per-slot arrival vectors x(t) ∈ ℝ^|L| (0/1 in the base
+/// model; counts in the Sec. 3.4 extension).
+pub trait ArrivalModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Fill `x` for the next slot.
+    fn next(&mut self, x: &mut [f64]);
+
+    fn reset(&mut self, _seed: u64) {}
+}
+
+/// i.i.d. Bernoulli(ρ_l) per port, ρ_l = ρ · w_l with per-port weights
+/// from the trace (uniform weights by default).
+pub struct Bernoulli {
+    pub rho: f64,
+    weights: Vec<f64>,
+    rng: Rng,
+    seed: u64,
+}
+
+impl Bernoulli {
+    pub fn uniform(num_ports: usize, rho: f64, seed: u64) -> Self {
+        Bernoulli { rho, weights: vec![1.0; num_ports], rng: Rng::new(seed), seed }
+    }
+
+    /// Trace-weighted: port l arrives w.p. clamp(ρ·w_l·|L|/Σw, 0, 1) so
+    /// the *average* rate stays ρ while ports keep trace-shaped skew.
+    pub fn weighted(weights: &[f64], rho: f64, seed: u64) -> Self {
+        let mean = weights.iter().sum::<f64>() / weights.len().max(1) as f64;
+        let norm: Vec<f64> =
+            weights.iter().map(|w| if mean > 0.0 { w / mean } else { 1.0 }).collect();
+        Bernoulli { rho, weights: norm, rng: Rng::new(seed), seed }
+    }
+}
+
+impl ArrivalModel for Bernoulli {
+    fn name(&self) -> &'static str {
+        "bernoulli"
+    }
+
+    fn next(&mut self, x: &mut [f64]) {
+        for (l, v) in x.iter_mut().enumerate() {
+            let p = (self.rho * self.weights[l]).clamp(0.0, 1.0);
+            *v = if self.rng.bernoulli(p) { 1.0 } else { 0.0 };
+        }
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.seed = seed;
+        self.rng = Rng::new(seed);
+    }
+}
+
+/// Markov-modulated on/off bursts: each port flips between an active
+/// phase (arrival prob `rho_on`) and an idle phase with the given
+/// transition probabilities — diurnal burstiness of the real traces.
+pub struct Bursty {
+    rho_on: f64,
+    p_on_off: f64,
+    p_off_on: f64,
+    state_on: Vec<bool>,
+    rng: Rng,
+}
+
+impl Bursty {
+    pub fn new(num_ports: usize, rho_on: f64, p_on_off: f64, p_off_on: f64,
+               seed: u64) -> Self {
+        Bursty {
+            rho_on,
+            p_on_off,
+            p_off_on,
+            state_on: vec![true; num_ports],
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl ArrivalModel for Bursty {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn next(&mut self, x: &mut [f64]) {
+        for (l, v) in x.iter_mut().enumerate() {
+            let on = self.state_on[l];
+            let flip = self.rng.bernoulli(if on { self.p_on_off } else { self.p_off_on });
+            let on = if flip { !on } else { on };
+            self.state_on[l] = on;
+            *v = if on && self.rng.bernoulli(self.rho_on) { 1.0 } else { 0.0 };
+        }
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+        self.state_on.fill(true);
+    }
+}
+
+/// Adversarial-ish trajectory for the regret supremum (Eq. 11): phases
+/// of length `phase` alternate between complementary port subsets, so a
+/// stationary allocation keeps being wrong for half the horizon.
+pub struct Alternating {
+    phase: usize,
+    t: usize,
+}
+
+impl Alternating {
+    pub fn new(phase: usize) -> Self {
+        Alternating { phase: phase.max(1), t: 0 }
+    }
+}
+
+impl ArrivalModel for Alternating {
+    fn name(&self) -> &'static str {
+        "alternating"
+    }
+
+    fn next(&mut self, x: &mut [f64]) {
+        let even_phase = (self.t / self.phase) % 2 == 0;
+        for (l, v) in x.iter_mut().enumerate() {
+            let in_even_half = l % 2 == 0;
+            *v = if in_even_half == even_phase { 1.0 } else { 0.0 };
+        }
+        self.t += 1;
+    }
+
+    fn reset(&mut self, _seed: u64) {
+        self.t = 0;
+    }
+}
+
+/// Multi-arrival counts (Sec. 3.4): Poisson-ish via summed Bernoulli
+/// micro-trials, capped at `max_jobs`.
+pub struct MultiCount {
+    rho: f64,
+    max_jobs: usize,
+    rng: Rng,
+}
+
+impl MultiCount {
+    pub fn new(rho: f64, max_jobs: usize, seed: u64) -> Self {
+        MultiCount { rho, max_jobs: max_jobs.max(1), rng: Rng::new(seed) }
+    }
+}
+
+impl ArrivalModel for MultiCount {
+    fn name(&self) -> &'static str {
+        "multi-count"
+    }
+
+    fn next(&mut self, x: &mut [f64]) {
+        for v in x.iter_mut() {
+            let mut n = 0usize;
+            for _ in 0..self.max_jobs {
+                if self.rng.bernoulli(self.rho) {
+                    n += 1;
+                }
+            }
+            *v = n as f64;
+        }
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+}
+
+/// Replay a fixed trajectory (tests, recorded traces).
+pub struct Replay {
+    trajectory: Vec<Vec<f64>>,
+    t: usize,
+}
+
+impl Replay {
+    pub fn new(trajectory: Vec<Vec<f64>>) -> Self {
+        Replay { trajectory, t: 0 }
+    }
+}
+
+impl ArrivalModel for Replay {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn next(&mut self, x: &mut [f64]) {
+        let row = &self.trajectory[self.t % self.trajectory.len()];
+        x.copy_from_slice(row);
+        self.t += 1;
+    }
+
+    fn reset(&mut self, _seed: u64) {
+        self.t = 0;
+    }
+}
+
+/// Record a model's full trajectory up front (the regret oracle needs
+/// the whole {x(t)} sequence).
+pub fn record_trajectory(
+    model: &mut dyn ArrivalModel,
+    num_ports: usize,
+    horizon: usize,
+) -> Vec<Vec<f64>> {
+    let mut out = Vec::with_capacity(horizon);
+    let mut x = vec![0.0; num_ports];
+    for _ in 0..horizon {
+        model.next(&mut x);
+        out.push(x.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut m = Bernoulli::uniform(10, 0.7, 1);
+        let mut x = vec![0.0; 10];
+        let mut hits = 0.0;
+        for _ in 0..5000 {
+            m.next(&mut x);
+            hits += x.iter().sum::<f64>();
+        }
+        let rate = hits / 50_000.0;
+        assert!((rate - 0.7).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn weighted_bernoulli_keeps_mean_rate_and_skew() {
+        let w = vec![3.0, 1.0, 1.0, 1.0];
+        let mut m = Bernoulli::weighted(&w, 0.5, 2);
+        let mut x = vec![0.0; 4];
+        let mut per_port = vec![0.0; 4];
+        for _ in 0..20_000 {
+            m.next(&mut x);
+            for l in 0..4 {
+                per_port[l] += x[l];
+            }
+        }
+        let mean: f64 = per_port.iter().sum::<f64>() / (4.0 * 20_000.0);
+        assert!((mean - 0.5).abs() < 0.03, "mean={mean}");
+        assert!(per_port[0] > per_port[1] * 1.5, "skew lost: {per_port:?}");
+    }
+
+    #[test]
+    fn reset_reproduces() {
+        let mut m = Bernoulli::uniform(5, 0.6, 42);
+        let mut a = vec![0.0; 5];
+        let mut b = vec![0.0; 5];
+        m.next(&mut a);
+        m.reset(42);
+        m.next(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alternating_flips_subsets() {
+        let mut m = Alternating::new(2);
+        let mut x = vec![0.0; 4];
+        m.next(&mut x);
+        assert_eq!(x, vec![1.0, 0.0, 1.0, 0.0]);
+        m.next(&mut x);
+        assert_eq!(x, vec![1.0, 0.0, 1.0, 0.0]);
+        m.next(&mut x); // phase boundary
+        assert_eq!(x, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn multi_count_bounded() {
+        let mut m = MultiCount::new(0.5, 4, 3);
+        let mut x = vec![0.0; 8];
+        for _ in 0..100 {
+            m.next(&mut x);
+            assert!(x.iter().all(|&v| (0.0..=4.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn replay_and_record_roundtrip() {
+        let mut src = Alternating::new(1);
+        let traj = record_trajectory(&mut src, 3, 5);
+        let mut rep = Replay::new(traj.clone());
+        let mut x = vec![0.0; 3];
+        for t in 0..5 {
+            rep.next(&mut x);
+            assert_eq!(x, traj[t]);
+        }
+    }
+
+    #[test]
+    fn bursty_produces_runs() {
+        let mut m = Bursty::new(1, 0.9, 0.05, 0.05, 7);
+        let mut x = vec![0.0];
+        let mut flips = 0;
+        let mut prev = 1.0;
+        let mut ones = 0.0;
+        for _ in 0..2000 {
+            m.next(&mut x);
+            if x[0] != prev {
+                flips += 1;
+            }
+            prev = x[0];
+            ones += x[0];
+        }
+        // bursty: far fewer transitions than a fair coin would have
+        assert!(flips < 900, "flips={flips}");
+        assert!(ones > 100.0);
+    }
+}

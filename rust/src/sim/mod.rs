@@ -1,0 +1,84 @@
+//! Trace-driven simulation: arrival models plus convenience drivers over
+//! the L3 coordinator.  (The engine itself lives in `coordinator::leader`
+//! — the simulator *is* the coordinator running against synthetic time.)
+
+pub mod arrivals;
+
+use crate::config::Scenario;
+use crate::coordinator::{Leader, RunResult};
+use crate::model::Problem;
+use crate::schedulers::Policy;
+use crate::traces::synthesize;
+use arrivals::{ArrivalModel, Bernoulli};
+
+/// Run one policy on a scenario end to end (problem synthesis + Bernoulli
+/// arrivals from the scenario seed).
+pub fn run_scenario(scenario: &Scenario, policy: &mut dyn Policy) -> RunResult {
+    let problem = synthesize(scenario);
+    run_on_problem(scenario, &problem, policy)
+}
+
+/// Run one policy on an existing problem (avoids re-synthesis in sweeps).
+pub fn run_on_problem(
+    scenario: &Scenario,
+    problem: &Problem,
+    policy: &mut dyn Policy,
+) -> RunResult {
+    let mut leader = Leader::new(problem);
+    let mut arrivals: Box<dyn ArrivalModel> = Box::new(Bernoulli::uniform(
+        problem.num_ports(),
+        scenario.arrival_prob,
+        scenario.seed ^ 0xA5A5,
+    ));
+    policy.reset(problem);
+    leader.run(policy, arrivals.as_mut(), scenario.horizon)
+}
+
+/// Run the full paper lineup on a scenario; every policy sees the same
+/// arrival trajectory.
+pub fn run_paper_lineup(scenario: &Scenario) -> Vec<RunResult> {
+    let problem = synthesize(scenario);
+    let mut lineup = crate::schedulers::paper_lineup(
+        &problem,
+        scenario.eta0,
+        scenario.decay,
+        scenario.workers,
+    );
+    crate::coordinator::run_lineup(
+        &problem,
+        &mut lineup,
+        || {
+            Box::new(Bernoulli::uniform(
+                problem.num_ports(),
+                scenario.arrival_prob,
+                scenario.seed ^ 0xA5A5,
+            ))
+        },
+        scenario.horizon,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedulers::Fairness;
+
+    #[test]
+    fn scenario_run_is_deterministic() {
+        let s = Scenario::small();
+        let a = run_scenario(&s, &mut Fairness::new()).cumulative_reward;
+        let b = run_scenario(&s, &mut Fairness::new()).cumulative_reward;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn paper_lineup_runs_all_five() {
+        let mut s = Scenario::small();
+        s.horizon = 80;
+        let results = run_paper_lineup(&s);
+        assert_eq!(results.len(), 5);
+        for r in &results {
+            assert_eq!(r.records.len(), 80);
+        }
+    }
+}

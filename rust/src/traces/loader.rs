@@ -1,0 +1,170 @@
+//! CSV trace loader: build a [`Problem`] from machine/job spec files in
+//! the schema our Alibaba extraction would produce.  An embedded sample
+//! (data/machines_sample.csv, data/jobs_sample.csv) doubles as format
+//! documentation and as a fixture for tests and the quickstart.
+//!
+//! machines.csv:  instance,class,cpu,mem,gpu,npu,tpu,fpga
+//! jobs.csv:      job_type,class,cpu,mem,gpu,npu,tpu,fpga,weight
+
+use crate::config::{GraphSpec, Scenario};
+use crate::graph::Bipartite;
+use crate::model::Problem;
+use crate::oga::utilities::{UtilityKind, UtilityMix};
+use crate::utils::csv::Csv;
+use crate::utils::rng::Rng;
+
+pub const MACHINES_SAMPLE: &str = include_str!("data/machines_sample.csv");
+pub const JOBS_SAMPLE: &str = include_str!("data/jobs_sample.csv");
+
+const DEVICE_COLS: [&str; 6] = ["cpu", "mem", "gpu", "npu", "tpu", "fpga"];
+
+/// Parsed machine rows: capacities [R, 6].
+pub fn parse_machines(text: &str) -> Result<Vec<[f64; 6]>, String> {
+    let csv = Csv::parse(text)?;
+    let cols: Vec<Vec<f64>> = DEVICE_COLS
+        .iter()
+        .map(|c| csv.col_f64(c).ok_or_else(|| format!("machines csv missing column {c}")))
+        .collect::<Result<_, _>>()?;
+    let n = csv.rows.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = [0.0; 6];
+        for (k, col) in cols.iter().enumerate() {
+            if col[i].is_nan() || col[i] < 0.0 {
+                return Err(format!("machines row {i}: bad {}", DEVICE_COLS[k]));
+            }
+            row[k] = col[i];
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Parsed job rows: (demands [L, 6], arrival weights [L]).
+pub fn parse_jobs(text: &str) -> Result<(Vec<[f64; 6]>, Vec<f64>), String> {
+    let csv = Csv::parse(text)?;
+    let cols: Vec<Vec<f64>> = DEVICE_COLS
+        .iter()
+        .map(|c| csv.col_f64(c).ok_or_else(|| format!("jobs csv missing column {c}")))
+        .collect::<Result<_, _>>()?;
+    let weights = csv.col_f64("weight").ok_or("jobs csv missing column weight")?;
+    let n = csv.rows.len();
+    let mut demands = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = [0.0; 6];
+        for (k, col) in cols.iter().enumerate() {
+            if col[i].is_nan() || col[i] < 0.0 {
+                return Err(format!("jobs row {i}: bad {}", DEVICE_COLS[k]));
+            }
+            row[k] = col[i];
+        }
+        if weights[i].is_nan() || weights[i] <= 0.0 {
+            return Err(format!("jobs row {i}: bad weight"));
+        }
+        demands.push(row);
+    }
+    Ok((demands, weights))
+}
+
+/// Build a Problem from explicit machine/job CSV text.  The scenario's
+/// |L|/|R| are taken from the files (cycled if the scenario asks for
+/// more); contention, graph spec, utilities and seeding come from the
+/// scenario as usual.
+pub fn problem_from_csv(
+    scenario: &Scenario,
+    machines_csv: &str,
+    jobs_csv: &str,
+) -> Result<Problem, String> {
+    let machines = parse_machines(machines_csv)?;
+    let (jobs, _weights) = parse_jobs(jobs_csv)?;
+    if machines.is_empty() || jobs.is_empty() {
+        return Err("empty machines/jobs csv".into());
+    }
+    let k_n = scenario.num_resources.min(6);
+    let (l_n, r_n) = (scenario.num_ports, scenario.num_instances);
+    let mut rng = Rng::new(scenario.seed);
+
+    let mut graph_rng = rng.fork(0x67726170);
+    let graph = match scenario.graph {
+        GraphSpec::Full => Bipartite::full(l_n, r_n),
+        GraphSpec::RightRegular(d) => Bipartite::right_regular(l_n, r_n, d, &mut graph_rng),
+        GraphSpec::Density(d) => Bipartite::random_density(l_n, r_n, d, &mut graph_rng),
+    };
+
+    let mut capacity = vec![0.0; r_n * k_n];
+    for r in 0..r_n {
+        let m = &machines[r % machines.len()];
+        for k in 0..k_n {
+            capacity[r * k_n + k] = m[k].max(1.0);
+        }
+    }
+    let mut demand = vec![0.0; l_n * k_n];
+    for l in 0..l_n {
+        let j = &jobs[l % jobs.len()];
+        for k in 0..k_n {
+            demand[l * k_n + k] = (j[k] * scenario.contention).max(0.25);
+        }
+    }
+
+    let mut util_rng = rng.fork(0x7574696c);
+    let (alo, ahi) = scenario.alpha_range;
+    let alpha: Vec<f64> = (0..r_n * k_n).map(|_| util_rng.uniform(alo, ahi)).collect();
+    let kind: Vec<UtilityKind> = (0..r_n * k_n)
+        .map(|_| match scenario.utility_mix {
+            UtilityMix::All(kind) => kind,
+            UtilityMix::Mixed => UtilityKind::ALL[util_rng.below(4)],
+        })
+        .collect();
+    let (blo, bhi) = scenario.beta_range;
+    let beta: Vec<f64> = (0..k_n).map(|_| util_rng.uniform(blo, bhi)).collect();
+
+    Ok(Problem { graph, num_resources: k_n, demand, capacity, alpha, kind, beta })
+}
+
+/// Arrival weights from the sample jobs file (used by the trace-driven
+/// arrival model).
+pub fn sample_arrival_weights(num_ports: usize) -> Vec<f64> {
+    let (_, w) = parse_jobs(JOBS_SAMPLE).expect("embedded sample is valid");
+    (0..num_ports).map(|l| w[l % w.len()]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedded_samples_parse() {
+        let m = parse_machines(MACHINES_SAMPLE).unwrap();
+        let (j, w) = parse_jobs(JOBS_SAMPLE).unwrap();
+        assert!(m.len() >= 8);
+        assert!(j.len() >= 5);
+        assert_eq!(j.len(), w.len());
+    }
+
+    #[test]
+    fn problem_from_samples() {
+        let mut s = Scenario::small();
+        s.contention = 1.0;
+        let p = problem_from_csv(&s, MACHINES_SAMPLE, JOBS_SAMPLE).unwrap();
+        assert_eq!(p.capacity.len(), s.num_instances * s.num_resources);
+        assert_eq!(p.demand.len(), s.num_ports * s.num_resources);
+        assert!(p.demand.iter().all(|&d| d > 0.0));
+        p.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_csv_rejected() {
+        assert!(parse_machines("instance,cpu\nm1,4\n").is_err()); // missing cols
+        assert!(parse_jobs("job_type,cpu,mem,gpu,npu,tpu,fpga\nj,1,1,0,0,0,0\n").is_err()); // no weight
+        let bad = "instance,class,cpu,mem,gpu,npu,tpu,fpga\nm1,c,-1,1,0,0,0,0\n";
+        assert!(parse_machines(bad).is_err());
+    }
+
+    #[test]
+    fn scenario_larger_than_file_cycles() {
+        let mut s = Scenario::small();
+        s.num_instances = 64; // sample has fewer machines; must cycle
+        let p = problem_from_csv(&s, MACHINES_SAMPLE, JOBS_SAMPLE).unwrap();
+        assert_eq!(p.capacity.len(), 64 * s.num_resources);
+    }
+}

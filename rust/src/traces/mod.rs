@@ -1,0 +1,10 @@
+//! Workload synthesis and trace loading (the paper's "trace-driven
+//! simulation" substrate).  `alibaba` synthesizes clusters shaped like
+//! the Alibaba cluster-trace extraction the paper uses; `loader` reads
+//! real extractions from CSV.
+
+pub mod alibaba;
+pub mod loader;
+
+pub use alibaba::synthesize;
+pub use loader::problem_from_csv;

@@ -1,0 +1,179 @@
+//! Minimal CSV reader/writer (no external crates).
+//!
+//! Used for two things: exporting figure/table series for plotting, and
+//! loading machine/job trace files (`traces/` ships an embedded sample in
+//! the same format as our Alibaba-like extraction).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A CSV table: a header row plus data rows of equal arity.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push_row<S: ToString>(&mut self, row: &[S]) {
+        assert_eq!(row.len(), self.header.len(), "row arity != header arity");
+        self.rows.push(row.iter().map(|s| s.to_string()).collect());
+    }
+
+    /// Convenience for numeric rows.
+    pub fn push_f64(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.header.len());
+        self.rows.push(row.iter().map(|v| format!("{v}")).collect());
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Column by name, parsed as f64 (non-numeric cells become NaN).
+    pub fn col_f64(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.col_index(name)?;
+        Some(self.rows.iter().map(|r| r[i].parse().unwrap_or(f64::NAN)).collect())
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln_row(&mut out, &self.header);
+        for row in &self.rows {
+            writeln_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())
+    }
+
+    pub fn parse(text: &str) -> Result<Csv, String> {
+        let mut lines = text
+            .lines()
+            .map(str::trim_end)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = match lines.next() {
+            Some(h) => split_row(h),
+            None => return Err("empty csv".into()),
+        };
+        let mut rows = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let row = split_row(line);
+            if row.len() != header.len() {
+                return Err(format!(
+                    "row {} has {} fields, header has {}",
+                    i + 2,
+                    row.len(),
+                    header.len()
+                ));
+            }
+            rows.push(row);
+        }
+        Ok(Csv { header, rows })
+    }
+
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<Csv, String> {
+        let text = fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Csv::parse(&text)
+    }
+}
+
+fn needs_quote(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n')
+}
+
+fn writeln_row(out: &mut String, row: &[String]) {
+    for (i, cell) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quote(cell) {
+            write!(out, "\"{}\"", cell.replace('"', "\"\"")).unwrap();
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+/// Split one CSV line honoring double-quoted fields.
+fn split_row(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(ch) = chars.next() {
+        match ch {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut c = Csv::new(&["t", "reward"]);
+        c.push_f64(&[1.0, 2.5]);
+        c.push_f64(&[2.0, 3.5]);
+        let parsed = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(parsed, c);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let mut c = Csv::new(&["name", "v"]);
+        c.push_row(&["has,comma", "x\"y"]);
+        let parsed = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(parsed.rows[0][0], "has,comma");
+        assert_eq!(parsed.rows[0][1], "x\"y");
+    }
+
+    #[test]
+    fn col_by_name() {
+        let text = "a,b\n1,2\n3,4\n";
+        let c = Csv::parse(text).unwrap();
+        assert_eq!(c.col_f64("b").unwrap(), vec![2.0, 4.0]);
+        assert!(c.col_f64("z").is_none());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let text = "# comment\na,b\n\n1,2\n";
+        let c = Csv::parse(text).unwrap();
+        assert_eq!(c.rows.len(), 1);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(Csv::parse("a,b\n1\n").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates: PRNG, statistics, CSV, thread pool, tables, and a
+//! property-testing harness.  The offline build environment only ships
+//! the `xla` crate closure, so these replace rand/rayon/csv/proptest.
+
+pub mod csv;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,165 @@
+//! Scoped thread-pool helpers (no rayon in the offline image).
+//!
+//! Algorithm 1's projection is "for each (r, k) do in parallel"; these
+//! helpers provide that parallelism with `std::thread::scope`.  Work is
+//! chunked statically — projection tasks per (r, k) are near-uniform, so
+//! static chunking beats a work-stealing queue here and keeps the hot
+//! loop allocation-free apart from thread spawn (amortized by chunk
+//! size; see benches/ablation_projection.rs).
+
+/// Number of worker threads to use for `n_tasks` independent tasks.
+pub fn default_workers(n_tasks: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.min(n_tasks).max(1)
+}
+
+/// Run `f(i)` for every `i in 0..n`, in parallel over `workers` threads.
+/// `f` must be `Sync` (interior mutability / disjoint writes are the
+/// caller's responsibility — see `for_each_mut_chunks` for slice output).
+pub fn parallel_for<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.min(n).max(1);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let f = &f;
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            scope.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a Vec<T> in index order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice::new(&mut out);
+        parallel_for(n, workers, |i| {
+            // SAFETY: each index written exactly once by exactly one task.
+            unsafe { slots.write(i, f(i)) };
+        });
+    }
+    out
+}
+
+/// Split `data` into `chunks` contiguous mutable pieces and run
+/// `f(chunk_index, start_offset, piece)` on each in parallel.
+pub fn for_each_mut_chunks<T, F>(data: &mut [T], chunks: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let chunks = chunks.min(n).max(1);
+    let chunk = n.div_ceil(chunks);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut off = 0;
+        let mut idx = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (piece, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let o = off;
+            let i = idx;
+            scope.spawn(move || f(i, o, piece));
+            rest = tail;
+            off += take;
+            idx += 1;
+        }
+    });
+}
+
+/// A shared wrapper allowing disjoint-index writes into a slice from
+/// multiple threads.  Callers must guarantee indices don't collide.
+struct SyncSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Sync for SyncSlice<T> {}
+unsafe impl<T: Send> Send for SyncSlice<T> {}
+
+impl<T> SyncSlice<T> {
+    fn new(slice: &mut [T]) -> Self {
+        SyncSlice { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// SAFETY: caller guarantees `i < len` and that no two threads write
+    /// the same index.
+    unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).write(value) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(1000, 8, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(257, 7, |i| i * 3);
+        assert_eq!(out, (0..257).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_mut_writes_disjoint() {
+        let mut data = vec![0usize; 100];
+        for_each_mut_chunks(&mut data, 6, |_, off, piece| {
+            for (j, v) in piece.iter_mut().enumerate() {
+                *v = off + j;
+            }
+        });
+        assert_eq!(data, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_degrades_to_serial() {
+        let out = parallel_map(10, 1, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_tasks_is_noop() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,110 @@
+//! Hand-rolled property-testing harness (proptest is not in the offline
+//! image).  `check` runs a predicate over many seeded random cases and, on
+//! failure, reports the seed so the case replays deterministically; a
+//! lightweight "shrink" retries the failing predicate with scaled-down
+//! size hints to find a smaller reproduction.
+
+use crate::utils::rng::Rng;
+
+/// Size hints handed to generators: dimensions shrink before seeds.
+#[derive(Clone, Copy, Debug)]
+pub struct Size {
+    pub scale: f64,
+}
+
+impl Size {
+    /// Scale an upper bound, keeping at least `min`.
+    pub fn dim(&self, max: usize, min: usize) -> usize {
+        ((max as f64 * self.scale).round() as usize).max(min)
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random trials of `prop(rng, size)`; panic with the seed
+/// and (possibly shrunk) failure message if any trial fails.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng, Size) -> CaseResult,
+{
+    check_seeded(name, 0xC0FFEE, cases, prop)
+}
+
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng, Size) -> CaseResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, Size { scale: 1.0 }) {
+            // try to shrink: re-run with smaller size hints on the same seed
+            let mut best = (1.0f64, msg);
+            for &scale in &[0.5, 0.25, 0.1] {
+                let mut rng = Rng::new(seed);
+                if let Err(m) = prop(&mut rng, Size { scale }) {
+                    best = (scale, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 shrunk scale {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert two floats are close; returns a CaseResult for use in props.
+pub fn close(label: &str, got: f64, want: f64, tol: f64) -> CaseResult {
+    if (got - want).abs() <= tol + tol * want.abs() {
+        Ok(())
+    } else {
+        Err(format!("{label}: got {got}, want {want} (tol {tol})"))
+    }
+}
+
+/// Assert `cond` with a lazily formatted message.
+pub fn ensure(cond: bool, msg: impl Fn() -> String) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            close("a+b", a + b, b + a, 1e-15)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_scales_dimensions() {
+        let s = Size { scale: 0.25 };
+        assert_eq!(s.dim(100, 2), 25);
+        assert_eq!(s.dim(4, 2), 2);
+    }
+
+    #[test]
+    fn ensure_and_close_helpers() {
+        assert!(ensure(true, || "x".into()).is_ok());
+        assert!(ensure(false, || "x".into()).is_err());
+        assert!(close("v", 1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close("v", 1.0, 2.0, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Small statistics toolkit (no external crates): summaries, Welford
+//! online moments, percentiles, linear regression (used by the regret
+//! sublinearity fit), and moving averages for the figure harnesses.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Percentile with linear interpolation; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Ordinary least squares y = a + b·x; returns (a, b, r²).
+pub fn linregress(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for i in 0..x.len() {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 {
+        return (my, 0.0, 0.0);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Fit y ≈ C·x^p on log-log axes; returns (C, p, r²).  Used to verify the
+/// Thm. 1 √T regret empirically (expect p ≈ 0.5, certainly < 1).
+pub fn powerlaw_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    let lx: Vec<f64> = x.iter().map(|v| v.max(1e-12).ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.max(1e-12).ln()).collect();
+    let (a, b, r2) = linregress(&lx, &ly);
+    (a.exp(), b, r2)
+}
+
+/// Trailing moving average with window `w` (figure smoothing).
+pub fn moving_avg(xs: &[f64], w: usize) -> Vec<f64> {
+    let w = w.max(1);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for i in 0..xs.len() {
+        sum += xs[i];
+        if i >= w {
+            sum -= xs[i - w];
+        }
+        out.push(sum / (i.min(w - 1) + 1) as f64);
+    }
+    out
+}
+
+/// Prefix-mean curve: out[t] = mean(xs[0..=t]) — the paper's Fig. 2(a)
+/// "average reward until time t".
+pub fn prefix_mean(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for (i, x) in xs.iter().enumerate() {
+        sum += x;
+        out.push(sum / (i + 1) as f64);
+    }
+    out
+}
+
+/// Cumulative-sum curve (Fig. 2(b)).
+pub fn cumsum(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for x in xs {
+        sum += x;
+        out.push(sum);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linregress_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.0 * v).collect();
+        let (a, b, r2) = linregress(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn powerlaw_recovers_sqrt() {
+        let x: Vec<f64> = (1..100).map(|i| i as f64 * 10.0).collect();
+        let y: Vec<f64> = x.iter().map(|v| 4.0 * v.sqrt()).collect();
+        let (c, p, r2) = powerlaw_fit(&x, &y);
+        assert!((c - 4.0).abs() < 1e-6);
+        assert!((p - 0.5).abs() < 1e-9);
+        assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn prefix_mean_and_cumsum() {
+        let xs = [2.0, 4.0, 6.0];
+        assert_eq!(prefix_mean(&xs), vec![2.0, 3.0, 4.0]);
+        assert_eq!(cumsum(&xs), vec![2.0, 6.0, 12.0]);
+    }
+
+    #[test]
+    fn moving_avg_window() {
+        let xs = [1.0, 1.0, 4.0, 4.0];
+        let ma = moving_avg(&xs, 2);
+        assert_eq!(ma, vec![1.0, 1.0, 2.5, 4.0]);
+    }
+}

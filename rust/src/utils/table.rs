@@ -1,0 +1,134 @@
+//! Aligned ASCII table rendering for paper-style output (every figure
+//! harness prints its rows through this, mirroring the paper's tables).
+
+/// A column-aligned text table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// Row indices to render in bold-ish emphasis (`*value*`), used for
+    /// the "two largest values per column in bold" convention of Tab. 3.
+    emphasized: Vec<(usize, usize)>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            emphasized: Vec::new(),
+        }
+    }
+
+    pub fn push<S: ToString>(&mut self, row: &[S]) {
+        assert_eq!(row.len(), self.header.len());
+        self.rows.push(row.iter().map(|s| s.to_string()).collect());
+    }
+
+    /// Push a row with a string label followed by numeric cells.
+    pub fn push_labeled(&mut self, label: &str, values: &[f64], prec: usize) {
+        let mut row = vec![label.to_string()];
+        row.extend(values.iter().map(|v| format!("{v:.prec$}")));
+        assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    /// Emphasize the top-n numeric cells of every column except column 0
+    /// (the Tab. 3 "two largest per column bold" rendering).
+    pub fn emphasize_top_per_column(&mut self, n: usize) {
+        self.emphasized.clear();
+        for col in 1..self.header.len() {
+            let mut vals: Vec<(usize, f64)> = self
+                .rows
+                .iter()
+                .enumerate()
+                .filter_map(|(i, r)| r[col].parse::<f64>().ok().map(|v| (i, v)))
+                .collect();
+            vals.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            for &(row, _) in vals.iter().take(n) {
+                self.emphasized.push((row, col));
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let cell = |r: usize, c: usize| -> String {
+            let raw = &self.rows[r][c];
+            if self.emphasized.contains(&(r, c)) {
+                format!("*{raw}*")
+            } else {
+                raw.clone()
+            }
+        };
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in 0..self.rows.len() {
+            for c in 0..widths.len() {
+                widths[c] = widths[c].max(cell(r, c).len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for (i, w) in widths.iter().enumerate() {
+                out.push_str(if i == 0 { "+" } else { "+" });
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str("| ");
+            out.push_str(h);
+            out.push_str(&" ".repeat(widths[i] - h.len() + 1));
+        }
+        out.push_str("|\n");
+        sep(&mut out);
+        for r in 0..self.rows.len() {
+            for c in 0..widths.len() {
+                let s = cell(r, c);
+                out.push_str("| ");
+                out.push_str(&s);
+                out.push_str(&" ".repeat(widths[c] - s.len() + 1));
+            }
+            out.push_str("|\n");
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["policy", "reward"]);
+        t.push(&["OGASCHED", "2886.33"]);
+        t.push(&["DRF", "2493.02"]);
+        let s = t.render();
+        assert!(s.contains("OGASCHED"));
+        let lines: Vec<&str> = s.lines().collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "ragged table:\n{s}");
+    }
+
+    #[test]
+    fn emphasizes_top_cells() {
+        let mut t = Table::new(&["p", "v"]);
+        t.push(&["a", "1.0"]);
+        t.push(&["b", "3.0"]);
+        t.push(&["c", "2.0"]);
+        t.emphasize_top_per_column(2);
+        let s = t.render();
+        assert!(s.contains("*3.0*"));
+        assert!(s.contains("*2.0*"));
+        assert!(!s.contains("*1.0*"));
+    }
+
+    #[test]
+    fn push_labeled_formats_precision() {
+        let mut t = Table::new(&["x", "a", "b"]);
+        t.push_labeled("row", &[1.23456, 2.0], 2);
+        assert!(t.render().contains("1.23"));
+    }
+}

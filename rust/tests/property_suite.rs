@@ -1,0 +1,172 @@
+//! Cross-module randomized property suite (hand-rolled harness in
+//! utils::prop): the invariants the paper's correctness rests on, hit
+//! with random problems rather than fixed fixtures.
+
+use ogasched::config::{GraphSpec, Scenario};
+use ogasched::oga::gradient::{gradient, GradScratch};
+use ogasched::oga::projection::project;
+use ogasched::oga::utilities::{UtilityKind, UtilityMix};
+use ogasched::oga::{LearningRate, OgaState};
+use ogasched::reward::slot_reward;
+use ogasched::schedulers::{paper_lineup, Policy};
+use ogasched::traces::synthesize;
+use ogasched::utils::prop::{check, ensure, Size};
+use ogasched::utils::rng::Rng;
+
+fn random_scenario(rng: &mut Rng, size: Size) -> Scenario {
+    let mut s = Scenario::small();
+    s.num_ports = rng.range(1, size.dim(8, 1));
+    s.num_instances = rng.range(1, size.dim(24, 1));
+    s.num_resources = rng.range(1, size.dim(6, 1));
+    s.contention = rng.uniform(0.5, 15.0);
+    s.arrival_prob = rng.uniform(0.1, 1.0);
+    s.seed = rng.next_u64();
+    s.graph = match rng.below(3) {
+        0 => GraphSpec::Full,
+        1 => GraphSpec::RightRegular(rng.range(1, s.num_ports)),
+        _ => GraphSpec::Density(rng.uniform(1.0, s.num_ports as f64)),
+    };
+    s.utility_mix = match rng.below(3) {
+        0 => UtilityMix::Mixed,
+        1 => UtilityMix::All(UtilityKind::Log),
+        _ => UtilityMix::All(UtilityKind::Linear),
+    };
+    s
+}
+
+#[test]
+fn every_policy_feasible_on_random_problems() {
+    check("policies-feasible", 40, |rng, size| {
+        let s = random_scenario(rng, size);
+        let p = synthesize(&s);
+        let mut y = vec![0.0; p.decision_len()];
+        for mut policy in paper_lineup(&p, 5.0, 0.999, 1) {
+            for _ in 0..5 {
+                let x: Vec<f64> = (0..p.num_ports())
+                    .map(|_| if rng.bernoulli(s.arrival_prob) { 1.0 } else { 0.0 })
+                    .collect();
+                policy.decide(&p, &x, &mut y);
+                if let Err(e) = p.check_feasible(&y, 1e-6) {
+                    return Err(format!("{} on {:?}: {e}", policy.name(), s.graph));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn projection_never_lowers_capped_objective() {
+    // For the projected point v = P(z): moving from v toward z (the
+    // unconstrained ascent target) must exit Y or stay equal — i.e. v is
+    // the closest feasible point along that segment.
+    check("projection-segment-optimal", 60, |rng, size| {
+        let s = random_scenario(rng, size);
+        let p = synthesize(&s);
+        let z: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(-1.0, 6.0)).collect();
+        let mut v = z.clone();
+        project(&p, &mut v, 1);
+        p.check_feasible(&v, 1e-7).map_err(|e| e.to_string())?;
+        // any strict step from v toward z leaves Y unless v == z (on-edge)
+        let step = 0.5;
+        let mut w = v.clone();
+        let mut moved = false;
+        for l in 0..p.num_ports() {
+            for &r in &p.graph.ports_to_instances[l] {
+                for k in 0..p.num_resources {
+                    let i = p.idx(l, r, k);
+                    if (z[i] - v[i]).abs() > 1e-9 {
+                        w[i] = v[i] + step * (z[i] - v[i]);
+                        moved = true;
+                    }
+                }
+            }
+        }
+        if moved {
+            ensure(p.check_feasible(&w, 1e-7).is_err(), || {
+                "a point strictly between P(z) and z is still feasible — \
+                 projection was not tight"
+                    .to_string()
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gradient_is_ascent_direction() {
+    // At interior points, an infinitesimal step along ∇q must not lower q.
+    check("gradient-ascent-direction", 40, |rng, size| {
+        let s = random_scenario(rng, size);
+        let p = synthesize(&s);
+        let x: Vec<f64> = (0..p.num_ports()).map(|_| 1.0).collect();
+        // strictly interior point: tiny fractions of demand
+        let mut y = vec![0.0; p.decision_len()];
+        for l in 0..p.num_ports() {
+            for &r in &p.graph.ports_to_instances[l] {
+                for k in 0..p.num_resources {
+                    y[p.idx(l, r, k)] = 0.01 * p.demand_at(l, k) * rng.f64();
+                }
+            }
+        }
+        let mut g = vec![0.0; p.decision_len()];
+        gradient(&p, &x, &y, &mut g, &mut GradScratch::default());
+        let before = slot_reward(&p, &x, &y).q;
+        let eps = 1e-7;
+        for i in 0..y.len() {
+            y[i] += eps * g[i];
+        }
+        let after = slot_reward(&p, &x, &y).q;
+        ensure(after >= before - 1e-9, || {
+            format!("gradient step lowered reward: {before} -> {after}")
+        })
+    });
+}
+
+#[test]
+fn oga_trajectory_stays_feasible_under_any_learning_rate() {
+    check("oga-feasible-any-lr", 30, |rng, size| {
+        let s = random_scenario(rng, size);
+        let p = synthesize(&s);
+        let lr = match rng.below(3) {
+            0 => LearningRate::Constant(rng.uniform(0.01, 100.0)),
+            1 => LearningRate::Decay {
+                eta0: rng.uniform(0.1, 200.0),
+                lambda: rng.uniform(0.9, 1.01),
+            },
+            _ => LearningRate::Oracle { horizon: rng.range(10, 500) },
+        };
+        let mut state = OgaState::new(&p, lr, 1);
+        for _ in 0..8 {
+            let x: Vec<f64> = (0..p.num_ports())
+                .map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 })
+                .collect();
+            state.step(&p, &x);
+            p.check_feasible(&state.y, 1e-6).map_err(|e| format!("{lr:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reward_decomposition_consistent() {
+    // q == gain - penalty for every policy decision on random problems.
+    check("reward-decomposition", 40, |rng, size| {
+        let s = random_scenario(rng, size);
+        let p = synthesize(&s);
+        let x: Vec<f64> = (0..p.num_ports())
+            .map(|_| if rng.bernoulli(0.8) { 1.0 } else { 0.0 })
+            .collect();
+        let mut policy = paper_lineup(&p, 5.0, 0.999, 1)
+            .into_iter()
+            .nth(rng.below(5))
+            .unwrap();
+        let mut y = vec![0.0; p.decision_len()];
+        policy.decide(&p, &x, &mut y);
+        let r = slot_reward(&p, &x, &y);
+        ensure((r.q - (r.gain - r.penalty)).abs() < 1e-9, || {
+            format!("q {} != gain {} - penalty {}", r.q, r.gain, r.penalty)
+        })?;
+        ensure(r.penalty >= -1e-12, || format!("negative penalty {}", r.penalty))
+    });
+}

@@ -1,0 +1,125 @@
+//! Integration: the PJRT-compiled OGA step (artifacts/*.hlo.txt, f32)
+//! must agree with the native Rust implementation (f64) over whole
+//! trajectories.  This is the cross-layer correctness seam of the
+//! three-layer architecture — if it holds, the Python ref.py oracle,
+//! the Pallas kernels, the fused L2 projection, and the Rust gradient/
+//! projection all compute the same algorithm.
+//!
+//! Tests are skipped (with a loud message) when artifacts are missing;
+//! `make artifacts` builds them.
+
+use ogasched::config::Scenario;
+use ogasched::coordinator::Leader;
+use ogasched::oga::{LearningRate, OgaState};
+use ogasched::runtime::{default_dir, HloOgaSched, Manifest, OgaStepExecutor};
+use ogasched::schedulers::Policy;
+use ogasched::sim::arrivals::{ArrivalModel, Bernoulli};
+use ogasched::traces::synthesize;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime parity tests: {e}");
+            None
+        }
+    }
+}
+
+fn small_scenario() -> Scenario {
+    let mut s = Scenario::small();
+    // small bucket is L=4 R=16 K=4 — match it exactly
+    s.num_ports = 4;
+    s.num_instances = 16;
+    s.num_resources = 4;
+    s.contention = 2.0;
+    s
+}
+
+#[test]
+fn hlo_step_matches_native_over_trajectory() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let s = small_scenario();
+    let p = synthesize(&s);
+    let mut exec = OgaStepExecutor::new(&manifest, &p).expect("load artifact");
+    let mut native = OgaState::new(&p, LearningRate::Constant(0.0), 1);
+
+    let mut arr = Bernoulli::uniform(p.num_ports(), 0.7, 42);
+    let mut x = vec![0.0; p.num_ports()];
+    let mut y_hlo = vec![0.0; p.decision_len()];
+    let eta = 0.5;
+    native.lr = LearningRate::Constant(eta);
+
+    for t in 0..40 {
+        arr.next(&mut x);
+        exec.step(&x, eta).expect("pjrt step");
+        native.step(&p, &x);
+        exec.current_decision(&mut y_hlo);
+        // f32 artifact vs f64 native: tolerance covers accumulation drift
+        let mut max_err = 0.0f64;
+        for i in 0..y_hlo.len() {
+            max_err = max_err.max((y_hlo[i] - native.y[i]).abs());
+        }
+        assert!(
+            max_err < 5e-3,
+            "decision divergence {max_err} at slot {t} (f32 vs f64 paths)"
+        );
+    }
+}
+
+#[test]
+fn hlo_reward_triple_matches_native_reward() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let s = small_scenario();
+    let p = synthesize(&s);
+    let mut exec = OgaStepExecutor::new(&manifest, &p).expect("load artifact");
+    let mut y = vec![0.0; p.decision_len()];
+    let x = vec![1.0; p.num_ports()];
+    for _ in 0..10 {
+        // reward triple reported by the artifact is for the PRE-step y
+        exec.current_decision(&mut y);
+        let want = ogasched::reward::slot_reward(&p, &x, &y);
+        let got = exec.step(&x, 0.4).expect("pjrt step");
+        let tol = 1e-3 * (1.0 + want.q.abs());
+        assert!((got.q - want.q).abs() < tol, "q {} vs {}", got.q, want.q);
+        assert!((got.gain - want.gain).abs() < tol);
+        assert!((got.penalty - want.penalty).abs() < tol);
+    }
+}
+
+#[test]
+fn hlo_policy_runs_under_leader_with_padding() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    // deliberately smaller than the bucket: exercises zero-padding
+    let mut s = Scenario::small();
+    s.num_ports = 3;
+    s.num_instances = 11;
+    s.num_resources = 4;
+    s.horizon = 60;
+    let p = synthesize(&s);
+    let mut pol = HloOgaSched::new(&manifest, &p, 5.0, 0.999).expect("policy");
+    assert_eq!(pol.bucket_name(), "small");
+    let mut leader = Leader::new(&p);
+    let mut arr = Bernoulli::uniform(p.num_ports(), 0.7, 7);
+    let run = leader.run(&mut pol, &mut arr, s.horizon);
+    assert_eq!(run.records.len(), s.horizon);
+    assert_eq!(run.clamped_total, 0, "HLO decisions must be feasible");
+    assert!(run.cumulative_reward > 0.0);
+}
+
+#[test]
+fn hlo_policy_reset_restarts_cleanly() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let s = small_scenario();
+    let p = synthesize(&s);
+    let mut pol = HloOgaSched::new(&manifest, &p, 5.0, 0.999).expect("policy");
+    let x = vec![1.0; p.num_ports()];
+    let mut y = vec![0.0; p.decision_len()];
+    pol.decide(&p, &x, &mut y);
+    let first = y.clone();
+    pol.decide(&p, &x, &mut y);
+    assert!(y.iter().any(|&v| v > 0.0));
+    pol.reset(&p);
+    pol.decide(&p, &x, &mut y);
+    assert_eq!(y, first, "after reset, the trajectory restarts identically");
+}
