@@ -21,10 +21,10 @@ fn main() {
         let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 6.0)).collect();
         let caps: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 3.0)).collect();
         let cap = 0.3 * caps.iter().sum::<f64>();
-        let mut breaks = Vec::new();
-        rep.record(time_fn(&format!("channel breakpoint-scan n={n}"), 10, 200, || {
+        let mut events = Vec::new();
+        rep.record(time_fn(&format!("channel event-sweep    n={n}"), 10, 200, || {
             let mut v = vals.clone();
-            std::hint::black_box(project_channel(&mut v, &caps, cap, &mut breaks));
+            std::hint::black_box(project_channel(&mut v, &caps, cap, &mut events));
         }));
         rep.record(time_fn(&format!("channel bisection-ref  n={n}"), 10, 200, || {
             let mut v = vals.clone();

@@ -1,10 +1,14 @@
 //! Hot-path bench: per-slot latency of the whole L3 loop and its parts —
-//! gradient, projection, reward, native full step, and the PJRT-compiled
-//! step (when artifacts are present).  This is the §Perf baseline /
-//! after table of EXPERIMENTS.md.
+//! gradient, projection, reward, the native edge-major (CSR) OGA step,
+//! the seed's dense [L, R, K] step as the before/after baseline, and the
+//! PJRT-compiled step (when artifacts are present).  This is the §Perf
+//! baseline/after table of EXPERIMENTS.md; the per-section ns/op are
+//! also emitted to BENCH_hot_path.json at the repo root so the perf
+//! trajectory is tracked across PRs.
 
 use ogasched::benchlib::{time_fn, Reporter};
 use ogasched::config::Scenario;
+use ogasched::oga::dense_ref::DenseOgaState;
 use ogasched::oga::gradient::{gradient, GradScratch};
 use ogasched::oga::projection::project;
 use ogasched::oga::{LearningRate, OgaState};
@@ -47,6 +51,13 @@ fn main() {
         rep.record(time_fn(&format!("native OGA step   {name}"), 3, 50, || {
             state.step(&p, &x);
         }));
+        // the seed's dense [L, R, K] step: off-edge re-zeroing, full
+        // projection every slot, scoped-thread spawns — the "before" row
+        // of the layout comparison
+        let mut dense = DenseOgaState::new(&p, 0);
+        rep.record(time_fn(&format!("dense-ref OGA step {name}"), 3, 50, || {
+            dense.step(&p, &x, 0.5);
+        }));
         if let Ok(manifest) = Manifest::load(default_dir()) {
             if let Ok(mut exec) = OgaStepExecutor::new(&manifest, &p) {
                 rep.record(time_fn(&format!("PJRT OGA step     {name}"), 3, 50, || {
@@ -55,5 +66,7 @@ fn main() {
             }
         }
     }
+    // machine-readable perf record at the repo root (tracked across PRs)
+    rep.write_json(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_path.json"));
     rep.finish();
 }

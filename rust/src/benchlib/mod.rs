@@ -81,6 +81,43 @@ impl Reporter {
         self.sections.push((title.to_string(), body));
     }
 
+    /// Render the recorded timings as a machine-readable JSON document
+    /// (per-section ns/op), so a bench's perf trajectory can be tracked
+    /// across PRs instead of only printed to stdout.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", escape_json(&self.bench)));
+        out.push_str("  \"entries\": [\n");
+        for (i, t) in self.timings.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_op\": {:.1}, \
+                 \"ns_per_op_min\": {:.1}, \"std_ns\": {:.1}}}{}\n",
+                escape_json(&t.name),
+                t.iters,
+                t.mean_secs * 1e9,
+                t.min_secs * 1e9,
+                t.std_secs * 1e9,
+                if i + 1 < self.timings.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON report to `path` (used by benches that feed the
+    /// cross-PR perf record, e.g. hot_path -> BENCH_hot_path.json).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("json: {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+
     /// Persist timings CSV + sections to results/bench/.
     pub fn finish(self) {
         let dir = std::path::Path::new("results/bench");
@@ -105,6 +142,18 @@ impl Reporter {
         }
         println!("=== bench {} done ===", self.bench);
     }
+}
+
+/// Minimal JSON string escaping (names are ASCII bench labels).
+fn escape_json(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect()
 }
 
 /// Render a policy-vs-metric table (common bench output shape).
@@ -159,5 +208,22 @@ mod tests {
     #[test]
     fn scaled_floors() {
         assert!(scaled(1000, 50) >= 50);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut rep = Reporter::new("unit");
+        rep.record(time_fn("alpha \"x\"", 0, 2, || {
+            std::hint::black_box(1 + 1);
+        }));
+        rep.record(time_fn("beta", 0, 2, || {
+            std::hint::black_box(2 + 2);
+        }));
+        let json = rep.to_json();
+        assert!(json.contains("\"bench\": \"unit\""));
+        assert!(json.contains("\"name\": \"alpha \\\"x\\\"\""));
+        assert!(json.contains("\"ns_per_op\""));
+        // two entries, comma-separated exactly once
+        assert_eq!(json.matches("\"iters\"").count(), 2);
     }
 }

@@ -45,16 +45,18 @@ impl ClusterState {
         assert!(!self.in_slot, "commit called twice without release");
         self.in_slot = true;
         let mut report = CommitReport::default();
-        let (l_n, r_n, k_n) = (problem.num_ports(), problem.num_instances(), self.k_n);
-        // Flat accumulation (§Perf): one sweep over y in memory order,
-        // accumulating per-(r, k) usage into `remaining` — avoids the
-        // L·R·K strided idx() walk of the naive triple loop.
+        let (r_n, k_n) = (problem.num_instances(), self.k_n);
+        let g = &problem.graph;
+        // Edge-major accumulation (§Perf): one sweep over y in memory
+        // order, scattering per-(r, k) usage into `remaining` — O(|E|·K)
+        // instead of the dense layout's L·R·K walk.
         self.remaining.fill(0.0);
         let rk = r_n * k_n;
-        for l in 0..l_n {
-            let row = &y[l * rk..(l + 1) * rk];
-            for (i, &v) in row.iter().enumerate() {
-                self.remaining[i] += v;
+        for e in 0..g.num_edges() {
+            let rbase = g.edge_instance[e] * k_n;
+            let base = e * k_n;
+            for k in 0..k_n {
+                self.remaining[rbase + k] += y[base + k];
             }
         }
         for i in 0..rk {
@@ -65,8 +67,9 @@ impl ClusterState {
             if used > cap * (1.0 + 1e-5) + 1e-6 && used > 0.0 {
                 // proportional clamp back to capacity
                 let scale = cap / used;
-                for l in 0..l_n {
-                    let j = l * rk + i;
+                let (r, k) = (i / k_n, i % k_n);
+                for &e in g.instance_edge_ids(r) {
+                    let j = e * k_n + k;
                     if y[j] != 0.0 {
                         y[j] *= scale;
                         report.clamped += 1;

@@ -6,8 +6,15 @@
 
 use crate::utils::rng::Rng;
 
-/// Compressed bipartite graph with both adjacency directions and a dense
-/// edge mask for the vectorized kernels.
+/// Compressed bipartite graph with both adjacency directions, a dense
+/// edge mask for the vectorized kernels, and an **edge-major CSR index**
+/// that the sparse decision layout is built on.
+///
+/// Every edge (l, r) ∈ E gets a stable id `e ∈ 0..|E|`, assigned in
+/// port-major order (ascending l, then ascending r).  The decision
+/// tensor stores `K` values per edge at `y[e*K .. (e+1)*K]`, so the
+/// coordinates of one port are one contiguous slice and off-edge
+/// coordinates simply do not exist.
 #[derive(Clone, Debug)]
 pub struct Bipartite {
     /// |L| — number of ports (job types).
@@ -20,6 +27,18 @@ pub struct Bipartite {
     pub instances_to_ports: Vec<Vec<usize>>,
     /// Dense row-major mask [L * R]: 1.0 iff (l, r) ∈ E.
     pub mask: Vec<f32>,
+    /// Port-major CSR offsets: edges of port l are
+    /// `port_ptr[l]..port_ptr[l+1]` (length |L| + 1).
+    pub port_ptr: Vec<usize>,
+    /// edge → instance (length |E|, port-major order).
+    pub edge_instance: Vec<usize>,
+    /// edge → port (length |E|).
+    pub edge_port: Vec<usize>,
+    /// Instance-major CSR offsets into `instance_edges` (length |R| + 1).
+    pub instance_ptr: Vec<usize>,
+    /// Edge ids grouped by instance, ascending port within an instance
+    /// (length |E|).
+    pub instance_edges: Vec<usize>,
 }
 
 impl Bipartite {
@@ -42,7 +61,47 @@ impl Bipartite {
         for v in &mut instances_to_ports {
             v.sort_unstable();
         }
-        Bipartite { num_ports, num_instances, ports_to_instances, instances_to_ports, mask }
+
+        // --- edge-major CSR index (port-major edge ids) ---
+        let mut port_ptr = Vec::with_capacity(num_ports + 1);
+        port_ptr.push(0);
+        let mut edge_instance = Vec::new();
+        let mut edge_port = Vec::new();
+        for (l, rs) in ports_to_instances.iter().enumerate() {
+            for &r in rs {
+                edge_instance.push(r);
+                edge_port.push(l);
+            }
+            port_ptr.push(edge_instance.len());
+        }
+        // counting sort of edge ids by instance; port-major iteration
+        // keeps each instance's list ascending in port
+        let mut instance_ptr = vec![0usize; num_instances + 1];
+        for &r in &edge_instance {
+            instance_ptr[r + 1] += 1;
+        }
+        for r in 0..num_instances {
+            instance_ptr[r + 1] += instance_ptr[r];
+        }
+        let mut cursor = instance_ptr.clone();
+        let mut instance_edges = vec![0usize; edge_instance.len()];
+        for (e, &r) in edge_instance.iter().enumerate() {
+            instance_edges[cursor[r]] = e;
+            cursor[r] += 1;
+        }
+
+        Bipartite {
+            num_ports,
+            num_instances,
+            ports_to_instances,
+            instances_to_ports,
+            mask,
+            port_ptr,
+            edge_instance,
+            edge_port,
+            instance_ptr,
+            instance_edges,
+        }
     }
 
     /// Complete bipartite graph (no locality constraints).
@@ -112,7 +171,36 @@ impl Bipartite {
     }
 
     pub fn num_edges(&self) -> usize {
-        self.ports_to_instances.iter().map(Vec::len).sum()
+        self.edge_port.len()
+    }
+
+    /// Edge-id range of port l (edges are port-major, so this is also
+    /// the contiguous slice `port_ptr[l]*K..port_ptr[l+1]*K` of the
+    /// decision tensor).
+    #[inline]
+    pub fn port_edges(&self, l: usize) -> std::ops::Range<usize> {
+        self.port_ptr[l]..self.port_ptr[l + 1]
+    }
+
+    /// Edge ids adjacent to instance r, ascending in port.
+    #[inline]
+    pub fn instance_edge_ids(&self, r: usize) -> &[usize] {
+        &self.instance_edges[self.instance_ptr[r]..self.instance_ptr[r + 1]]
+    }
+
+    /// Degree of instance r (|L_r|).
+    #[inline]
+    pub fn instance_degree(&self, r: usize) -> usize {
+        self.instance_ptr[r + 1] - self.instance_ptr[r]
+    }
+
+    /// Edge id of (l, r), if it is an edge (binary search in R_l).
+    #[inline]
+    pub fn edge_id(&self, l: usize, r: usize) -> Option<usize> {
+        self.ports_to_instances[l]
+            .binary_search(&r)
+            .ok()
+            .map(|pos| self.port_ptr[l] + pos)
     }
 
     /// Σ_r |L_r| / |R| — the "graph dense" metric of Tab. 3.
@@ -146,6 +234,43 @@ impl Bipartite {
         let mask_count = self.mask.iter().filter(|&&m| m != 0.0).count();
         if mask_count != count {
             return Err(format!("mask has {mask_count} edges, adjacency has {count}"));
+        }
+        // edge index consistency
+        if self.edge_port.len() != count || self.edge_instance.len() != count {
+            return Err("edge arrays disagree with adjacency edge count".into());
+        }
+        if self.port_ptr.len() != self.num_ports + 1
+            || self.instance_ptr.len() != self.num_instances + 1
+        {
+            return Err("CSR pointer arrays have wrong length".into());
+        }
+        for l in 0..self.num_ports {
+            let rs = &self.ports_to_instances[l];
+            let range = self.port_edges(l);
+            if range.len() != rs.len() {
+                return Err(format!("port_ptr range of port {l} disagrees with R_l"));
+            }
+            for (j, e) in range.enumerate() {
+                if self.edge_port[e] != l || self.edge_instance[e] != rs[j] {
+                    return Err(format!("edge {e} maps to wrong endpoints"));
+                }
+                if self.edge_id(l, rs[j]) != Some(e) {
+                    return Err(format!("edge_id({l},{}) != {e}", rs[j]));
+                }
+            }
+        }
+        for r in 0..self.num_instances {
+            let ids = self.instance_edge_ids(r);
+            if ids.len() != self.instances_to_ports[r].len() {
+                return Err(format!("instance_edges of {r} disagrees with L_r"));
+            }
+            for (j, &e) in ids.iter().enumerate() {
+                if self.edge_instance[e] != r
+                    || self.edge_port[e] != self.instances_to_ports[r][j]
+                {
+                    return Err(format!("instance edge list of {r} is inconsistent at {j}"));
+                }
+            }
         }
         Ok(())
     }
@@ -203,5 +328,31 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn out_of_range_edge_panics() {
         Bipartite::from_edges(2, 2, &[(2, 0)]);
+    }
+
+    #[test]
+    fn edge_index_is_port_major() {
+        let g = Bipartite::from_edges(3, 3, &[(0, 2), (0, 0), (1, 1), (2, 0), (2, 2)]);
+        assert_eq!(g.port_ptr, vec![0, 2, 3, 5]);
+        assert_eq!(g.edge_instance, vec![0, 2, 1, 0, 2]);
+        assert_eq!(g.edge_port, vec![0, 0, 1, 2, 2]);
+        assert_eq!(g.edge_id(0, 2), Some(1));
+        assert_eq!(g.edge_id(1, 0), None);
+        assert_eq!(g.instance_edge_ids(0), &[0, 3]);
+        assert_eq!(g.instance_edge_ids(1), &[2]);
+        assert_eq!(g.instance_edge_ids(2), &[1, 4]);
+        assert_eq!(g.instance_degree(0), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_index_handles_isolated_vertices() {
+        // port 1 and instance 0 have no edges at all
+        let g = Bipartite::from_edges(2, 2, &[(0, 1)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.port_edges(1).len(), 0);
+        assert!(g.instance_edge_ids(0).is_empty());
+        assert_eq!(g.edge_id(1, 1), None);
+        g.validate().unwrap();
     }
 }

@@ -1,9 +1,19 @@
 //! The problem instance of Sec. 2: graph + resource model + utilities.
 //!
-//! Tensor conventions (row-major, mirroring the Python side):
+//! Tensor conventions (row-major):
 //!   - `[L, K]` demands `a`, indexed `l * K + k`
 //!   - `[R, K]` capacities `c`, coefficients `alpha`, families `kind`
-//!   - `[L, R, K]` decisions `y`, indexed `(l * R + r) * K + k`
+//!   - `[E, K]` decisions `y` in the **edge-major CSR layout**: the
+//!     channel (l, r) with edge id `e = graph.edge_id(l, r)` lives at
+//!     `y[e * K + k]`.  Edge ids are port-major, so port l's coordinates
+//!     are the contiguous slice
+//!     `y[graph.port_ptr[l] * K .. graph.port_ptr[l + 1] * K]`.
+//!     Off-edge (l, r) pairs have no coordinates at all — feasibility's
+//!     locality constraint holds by construction and the hot path scales
+//!     with |E|·K instead of L·R·K.  (The Python/XLA side still works on
+//!     the dense `[L, R, K]` tensor; `runtime::executor` converts at the
+//!     boundary, and `oga::dense_ref` keeps a dense reference
+//!     implementation for parity tests and benchmarks.)
 
 use crate::graph::Bipartite;
 use crate::oga::utilities::UtilityKind;
@@ -39,9 +49,15 @@ impl Problem {
         self.graph.num_instances
     }
 
-    /// Length of the dense decision tensor [L, R, K].
+    /// |E| — number of channels in the locality graph.
+    pub fn num_edges(&self) -> usize {
+        self.graph.num_edges()
+    }
+
+    /// Length of the edge-major decision tensor [E, K]
+    /// (= Σ_l |R_l| · K).
     pub fn decision_len(&self) -> usize {
-        self.num_ports() * self.num_instances() * self.num_resources
+        self.num_edges() * self.num_resources
     }
 
     #[inline]
@@ -64,9 +80,22 @@ impl Problem {
         self.kind[r * self.num_resources + k]
     }
 
+    /// Flat index of channel (l, r), resource k in the edge-major
+    /// decision layout.  Panics when (l, r) is not an edge — off-edge
+    /// coordinates do not exist under the CSR layout.
     #[inline]
     pub fn idx(&self, l: usize, r: usize, k: usize) -> usize {
-        (l * self.num_instances() + r) * self.num_resources + k
+        let e = self
+            .graph
+            .edge_id(l, r)
+            .unwrap_or_else(|| panic!("idx({l},{r},{k}): ({l},{r}) is not an edge"));
+        e * self.num_resources + k
+    }
+
+    /// Flat index of edge `e`, resource k.
+    #[inline]
+    pub fn edge_idx(&self, e: usize, k: usize) -> usize {
+        e * self.num_resources + k
     }
 
     /// ā^k = max_l a_l^k (Thm. 1).
@@ -133,38 +162,34 @@ impl Problem {
         sum.sqrt()
     }
 
-    /// Is the dense decision tensor `y` feasible (Eqs. 5-6 + locality)?
+    /// Is the edge-major decision tensor `y` feasible (Eqs. 5-6)?  The
+    /// locality constraint is structural: off-edge coordinates cannot be
+    /// represented, so only the box and capacity constraints remain.
     pub fn check_feasible(&self, y: &[f64], tol: f64) -> Result<(), String> {
-        let (l_n, r_n, k_n) = (self.num_ports(), self.num_instances(), self.num_resources);
+        let (r_n, k_n) = (self.num_instances(), self.num_resources);
         assert_eq!(y.len(), self.decision_len());
-        for l in 0..l_n {
-            for r in 0..r_n {
-                for k in 0..k_n {
-                    let v = y[self.idx(l, r, k)];
-                    if !self.graph.has_edge(l, r) {
-                        if v.abs() > tol {
-                            return Err(format!("off-edge allocation y[{l},{r},{k}]={v}"));
-                        }
-                        continue;
-                    }
-                    if v < -tol {
-                        return Err(format!("negative allocation y[{l},{r},{k}]={v}"));
-                    }
-                    if v > self.demand_at(l, k) + tol {
-                        return Err(format!(
-                            "y[{l},{r},{k}]={v} exceeds demand {}",
-                            self.demand_at(l, k)
-                        ));
-                    }
+        for e in 0..self.num_edges() {
+            let l = self.graph.edge_port[e];
+            let r = self.graph.edge_instance[e];
+            for k in 0..k_n {
+                let v = y[e * k_n + k];
+                if v < -tol {
+                    return Err(format!("negative allocation y[{l},{r},{k}]={v}"));
+                }
+                if v > self.demand_at(l, k) + tol {
+                    return Err(format!(
+                        "y[{l},{r},{k}]={v} exceeds demand {}",
+                        self.demand_at(l, k)
+                    ));
                 }
             }
         }
         for r in 0..r_n {
+            let edges = self.graph.instance_edge_ids(r);
             for k in 0..k_n {
-                let used: f64 =
-                    (0..l_n).map(|l| y[self.idx(l, r, k)]).sum();
+                let used: f64 = edges.iter().map(|&e| y[e * k_n + k]).sum();
                 let cap = self.capacity_at(r, k);
-                if used > cap + tol * (1.0 + l_n as f64) {
+                if used > cap + tol * (1.0 + edges.len() as f64) {
                     return Err(format!("capacity violated at (r={r},k={k}): {used} > {cap}"));
                 }
             }
@@ -194,9 +219,46 @@ mod tests {
     #[test]
     fn index_math() {
         let p = tiny();
+        // full graph: |E| = L·R, and CSR port-major ids coincide with the
+        // dense (l·R + r) ordering
+        assert_eq!(p.num_edges(), 2 * 3);
         assert_eq!(p.decision_len(), 2 * 3 * 2);
         assert_eq!(p.idx(1, 2, 1), (1 * 3 + 2) * 2 + 1);
+        assert_eq!(p.edge_idx(5, 1), 11);
         assert_eq!(p.demand_at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn sparse_graph_shrinks_decision_len() {
+        let graph = Bipartite::from_edges(2, 3, &[(0, 0), (1, 2)]);
+        let p = Problem {
+            graph,
+            num_resources: 2,
+            demand: vec![1.0; 4],
+            capacity: vec![5.0; 6],
+            alpha: vec![1.0; 6],
+            kind: vec![UtilityKind::Linear; 6],
+            beta: vec![0.3, 0.5],
+        };
+        assert_eq!(p.decision_len(), 2 * 2); // |E|·K, not L·R·K
+        assert_eq!(p.idx(0, 0, 1), 1);
+        assert_eq!(p.idx(1, 2, 0), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "is not an edge")]
+    fn off_edge_idx_panics() {
+        let graph = Bipartite::from_edges(2, 3, &[(0, 0), (1, 2)]);
+        let p = Problem {
+            graph,
+            num_resources: 2,
+            demand: vec![1.0; 4],
+            capacity: vec![5.0; 6],
+            alpha: vec![1.0; 6],
+            kind: vec![UtilityKind::Linear; 6],
+            beta: vec![0.3, 0.5],
+        };
+        p.idx(0, 1, 0);
     }
 
     #[test]

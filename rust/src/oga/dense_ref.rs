@@ -1,0 +1,328 @@
+//! Dense `[L, R, K]` reference implementation of the OGA hot path — the
+//! seed's original storage layout, kept for two jobs:
+//!
+//!  1. **Layout-parity oracle** — `tests/layout_parity.rs` checks that
+//!     the edge-major CSR gradient, fused ascent, projection, and slot
+//!     reward agree coordinate-wise with these dense versions on random
+//!     bipartite graphs.
+//!  2. **Before/after baseline** — `benches/hot_path.rs` times
+//!     [`DenseOgaState::step`] next to the CSR `OgaState::step`, so the
+//!     layout speedup is measured inside one binary (recorded in
+//!     `BENCH_hot_path.json` and EXPERIMENTS.md §Perf).
+//!
+//! The dense step reproduces the seed's cost profile deliberately:
+//! off-edge coordinates are stored and re-zeroed on every projection,
+//! every instance is projected every slot (no dirty tracking), and the
+//! parallel path spawns fresh `std::thread::scope` workers per call.
+//! Only the channel projector is shared with the CSR path, so the bench
+//! isolates the layout/pool effect rather than the projector algorithm.
+
+use crate::model::Problem;
+use crate::oga::projection::project_channel;
+use crate::reward::SlotReward;
+
+/// Per-worker scratch for one dense channel projection.
+#[derive(Default)]
+struct DenseScratch {
+    vals: Vec<f64>,
+    caps: Vec<f64>,
+    events: Vec<(f64, u32)>,
+}
+
+/// Length of the dense decision tensor [L, R, K].
+pub fn dense_len(problem: &Problem) -> usize {
+    problem.num_ports() * problem.num_instances() * problem.num_resources
+}
+
+/// Dense flat index (l * R + r) * K + k.
+#[inline]
+pub fn dense_idx(problem: &Problem, l: usize, r: usize, k: usize) -> usize {
+    (l * problem.num_instances() + r) * problem.num_resources + k
+}
+
+/// Scatter an edge-major decision into a fresh dense tensor
+/// (off-edge coordinates zero).
+pub fn to_dense(problem: &Problem, y_csr: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(y_csr.len(), problem.decision_len());
+    let k_n = problem.num_resources;
+    let mut out = vec![0.0; dense_len(problem)];
+    for e in 0..problem.num_edges() {
+        let l = problem.graph.edge_port[e];
+        let r = problem.graph.edge_instance[e];
+        for k in 0..k_n {
+            out[dense_idx(problem, l, r, k)] = y_csr[e * k_n + k];
+        }
+    }
+    out
+}
+
+/// Gather the on-edge coordinates of a dense tensor into the edge-major
+/// layout (off-edge values are dropped).
+pub fn from_dense(problem: &Problem, y_dense: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(y_dense.len(), dense_len(problem));
+    let k_n = problem.num_resources;
+    let mut out = vec![0.0; problem.decision_len()];
+    for e in 0..problem.num_edges() {
+        let l = problem.graph.edge_port[e];
+        let r = problem.graph.edge_instance[e];
+        for k in 0..k_n {
+            out[e * k_n + k] = y_dense[dense_idx(problem, l, r, k)];
+        }
+    }
+    out
+}
+
+/// Dense ∇q of Eq. 30 (the seed's `gradient`): zero the whole [L, R, K]
+/// buffer, then fill the arrived ports' on-edge rows.
+pub fn gradient_dense(problem: &Problem, x: &[f64], y: &[f64], grad: &mut [f64]) {
+    let k_n = problem.num_resources;
+    debug_assert_eq!(y.len(), dense_len(problem));
+    debug_assert_eq!(grad.len(), dense_len(problem));
+    grad.fill(0.0);
+    let mut quota = vec![0.0; k_n];
+    for l in 0..problem.num_ports() {
+        let x_l = x[l];
+        if x_l == 0.0 {
+            continue;
+        }
+        let instances = &problem.graph.ports_to_instances[l];
+        quota.fill(0.0);
+        for &r in instances {
+            let base = dense_idx(problem, l, r, 0);
+            for k in 0..k_n {
+                quota[k] += y[base + k];
+            }
+        }
+        let mut kstar = 0;
+        let mut best = f64::NEG_INFINITY;
+        for k in 0..k_n {
+            let v = problem.beta[k] * quota[k];
+            if v > best {
+                best = v;
+                kstar = k;
+            }
+        }
+        for &r in instances {
+            let base = dense_idx(problem, l, r, 0);
+            let rk = r * k_n;
+            for k in 0..k_n {
+                let fp = problem.kind[rk + k].grad(y[base + k], problem.alpha[rk + k]);
+                let pen = if k == kstar { problem.beta[k] } else { 0.0 };
+                grad[base + k] = x_l * (fp - pen);
+            }
+        }
+    }
+}
+
+/// Dense fused ascent (the seed's `OgaState::fused_ascent`).
+pub fn fused_ascent_dense(problem: &Problem, x: &[f64], eta: f64, y: &mut [f64]) {
+    let k_n = problem.num_resources;
+    let mut quota = vec![0.0; k_n];
+    for l in 0..problem.num_ports() {
+        let x_l = x[l];
+        if x_l == 0.0 {
+            continue;
+        }
+        let instances = &problem.graph.ports_to_instances[l];
+        quota.fill(0.0);
+        for &r in instances {
+            let base = dense_idx(problem, l, r, 0);
+            for k in 0..k_n {
+                quota[k] += y[base + k];
+            }
+        }
+        let mut kstar = 0;
+        let mut best = f64::NEG_INFINITY;
+        for k in 0..k_n {
+            let v = problem.beta[k] * quota[k];
+            if v > best {
+                best = v;
+                kstar = k;
+            }
+        }
+        for &r in instances {
+            let base = dense_idx(problem, l, r, 0);
+            let rk = r * k_n;
+            for k in 0..k_n {
+                let yv = y[base + k];
+                let fp = problem.kind[rk + k].grad(yv, problem.alpha[rk + k]);
+                let pen = if k == kstar { problem.beta[k] } else { 0.0 };
+                y[base + k] = yv + eta * x_l * (fp - pen);
+            }
+        }
+    }
+}
+
+/// Dense projection (the seed's `project`): zero off-edge coordinates of
+/// every instance, project every (r, k) channel, and — exactly like the
+/// seed — spawn fresh scoped threads when the tensor is large.
+pub fn project_dense(problem: &Problem, z: &mut [f64], workers: usize) {
+    let r_n = problem.num_instances();
+    const SERIAL_THRESHOLD: usize = 65_536;
+    if workers == 1 || (workers == 0 && z.len() < SERIAL_THRESHOLD) {
+        return project_dense_serial(problem, z);
+    }
+    let workers = if workers == 0 {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        cores.min(r_n).max(1).min((z.len() / 32_768).max(2))
+    } else {
+        workers
+    };
+    let shared = SharedTensor { ptr: z.as_mut_ptr(), len: z.len() };
+    let shared = &shared;
+    // the seed's per-call scoped spawn, preserved so the baseline pays
+    // the same ~100µs/worker dispatch the issue calls out
+    let chunk = r_n.div_ceil(workers.max(1));
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(r_n);
+            if lo >= hi {
+                continue;
+            }
+            scope.spawn(move || {
+                // SAFETY: instance r touches only indices (l*R + r)*K + k
+                // — disjoint across distinct r.
+                let z = unsafe { std::slice::from_raw_parts_mut(shared.ptr, shared.len) };
+                let mut scratch = DenseScratch::default();
+                for r in lo..hi {
+                    project_instance_dense(problem, r, z, &mut scratch);
+                }
+            });
+        }
+    });
+}
+
+/// Serial dense projection.
+pub fn project_dense_serial(problem: &Problem, z: &mut [f64]) {
+    let mut scratch = DenseScratch::default();
+    for r in 0..problem.num_instances() {
+        project_instance_dense(problem, r, z, &mut scratch);
+    }
+}
+
+fn project_instance_dense(
+    problem: &Problem,
+    r: usize,
+    z: &mut [f64],
+    scratch: &mut DenseScratch,
+) {
+    let k_n = problem.num_resources;
+    let ports = &problem.graph.instances_to_ports[r];
+    // the dense layout stores off-edge coordinates, so they must be
+    // re-zeroed on every call — the O(L·R·K) term the CSR layout removes
+    for l in 0..problem.num_ports() {
+        if !problem.graph.has_edge(l, r) {
+            let base = dense_idx(problem, l, r, 0);
+            z[base..base + k_n].fill(0.0);
+        }
+    }
+    if ports.is_empty() {
+        return;
+    }
+    for k in 0..k_n {
+        scratch.vals.clear();
+        scratch.caps.clear();
+        for &l in ports {
+            scratch.vals.push(z[dense_idx(problem, l, r, k)]);
+            scratch.caps.push(problem.demand_at(l, k));
+        }
+        project_channel(
+            &mut scratch.vals,
+            &scratch.caps,
+            problem.capacity_at(r, k),
+            &mut scratch.events,
+        );
+        for (i, &l) in ports.iter().enumerate() {
+            z[dense_idx(problem, l, r, k)] = scratch.vals[i];
+        }
+    }
+}
+
+/// Dense slot reward (Eqs. 7–8 over the [L, R, K] tensor).
+pub fn slot_reward_dense(problem: &Problem, x: &[f64], y: &[f64]) -> SlotReward {
+    let k_n = problem.num_resources;
+    let mut out = SlotReward::default();
+    let mut quota = vec![0.0; k_n];
+    for l in 0..problem.num_ports() {
+        if x[l] == 0.0 {
+            continue;
+        }
+        let mut gain = 0.0;
+        quota.fill(0.0);
+        for &r in &problem.graph.ports_to_instances[l] {
+            let base = dense_idx(problem, l, r, 0);
+            let rk = r * k_n;
+            for k in 0..k_n {
+                let v = y[base + k];
+                gain += problem.kind[rk + k].value(v, problem.alpha[rk + k]);
+                quota[k] += v;
+            }
+        }
+        let mut penalty = 0.0f64;
+        for k in 0..k_n {
+            penalty = penalty.max(problem.beta[k] * quota[k]);
+        }
+        out.gain += x[l] * gain;
+        out.penalty += x[l] * penalty;
+        out.q += x[l] * (gain - penalty);
+    }
+    out
+}
+
+/// Dense OGA state: the seed's per-slot loop (fused ascent + full dense
+/// projection), used as the hot-path baseline.
+pub struct DenseOgaState {
+    pub y: Vec<f64>,
+    pub t: usize,
+    pub workers: usize,
+}
+
+impl DenseOgaState {
+    pub fn new(problem: &Problem, workers: usize) -> Self {
+        DenseOgaState { y: vec![0.0; dense_len(problem)], t: 0, workers }
+    }
+
+    /// One dense OGA slot at a fixed step size.
+    pub fn step(&mut self, problem: &Problem, x: &[f64], eta: f64) {
+        fused_ascent_dense(problem, x, eta, &mut self.y);
+        project_dense(problem, &mut self.y, self.workers);
+        self.t += 1;
+    }
+}
+
+struct SharedTensor {
+    ptr: *mut f64,
+    len: usize,
+}
+unsafe impl Sync for SharedTensor {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::traces::synthesize;
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn dense_roundtrip_preserves_on_edge() {
+        let p = synthesize(&Scenario::small());
+        let mut rng = Rng::new(4);
+        let y: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(0.0, 3.0)).collect();
+        let dense = to_dense(&p, &y);
+        assert_eq!(dense.len(), dense_len(&p));
+        assert_eq!(from_dense(&p, &dense), y);
+    }
+
+    #[test]
+    fn dense_projection_serial_equals_parallel() {
+        let p = synthesize(&Scenario::small());
+        let mut rng = Rng::new(12);
+        let z: Vec<f64> = (0..dense_len(&p)).map(|_| rng.uniform(-1.0, 6.0)).collect();
+        let mut a = z.clone();
+        let mut b = z;
+        project_dense_serial(&p, &mut a);
+        project_dense(&p, &mut b, 4);
+        assert_eq!(a, b);
+    }
+}

@@ -1,10 +1,13 @@
-//! The reward gradient ∇q of Eq. (30).
+//! The reward gradient ∇q of Eq. (30), over the edge-major layout.
 //!
 //! For each arrived port l (x_l > 0):
 //!     ∂q/∂y_{(l,r)}^k = x_l · ( (f_r^k)'(y) − β_k · 1{k = k*_l} )
 //! with k*_l = argmax_k β_k Σ_{r∈R_l} y_{(l,r)}^k (Eq. 27).  Ports with
-//! x_l = 0 contribute zero gradient; off-edge coordinates are never
-//! touched (they stay exactly 0 in `grad`).
+//! x_l = 0 contribute zero gradient.  The decision and gradient tensors
+//! are edge-major `[E, K]` (see `model`), so a port's coordinates are
+//! one contiguous slice and off-edge coordinates don't exist — the loop
+//! below touches exactly Σ_{l: x_l>0} |R_l| · K entries plus one memset
+//! of the |E|·K buffer.
 
 use crate::model::Problem;
 
@@ -15,9 +18,8 @@ pub struct GradScratch {
     quota: Vec<f64>,
 }
 
-/// Compute ∇q(x, y) into `grad` (dense [L, R, K]; caller provides a
-/// zeroed or reusable buffer — it is fully overwritten on edges and
-/// zeroed off-edge lazily via memset).
+/// Compute ∇q(x, y) into `grad` (edge-major [E, K]; caller provides a
+/// reusable buffer — rows of absent ports are zeroed via memset).
 pub fn gradient(
     problem: &Problem,
     x: &[f64],
@@ -32,16 +34,16 @@ pub fn gradient(
     grad.fill(0.0);
     scratch.quota.resize(k_n, 0.0);
 
+    let g = &problem.graph;
     for l in 0..problem.num_ports() {
         let x_l = x[l];
         if x_l == 0.0 {
             continue;
         }
-        let instances = &problem.graph.ports_to_instances[l];
         // quota_k = Σ_{r∈R_l} y_{(l,r)}^k
         scratch.quota.fill(0.0);
-        for &r in instances {
-            let base = problem.idx(l, r, 0);
+        for e in g.port_edges(l) {
+            let base = e * k_n;
             for k in 0..k_n {
                 scratch.quota[k] += y[base + k];
             }
@@ -56,9 +58,9 @@ pub fn gradient(
                 kstar = k;
             }
         }
-        for &r in instances {
-            let base = problem.idx(l, r, 0);
-            let rk = r * k_n;
+        for e in g.port_edges(l) {
+            let rk = g.edge_instance[e] * k_n;
+            let base = e * k_n;
             for k in 0..k_n {
                 let fp = problem.kind[rk + k].grad(y[base + k], problem.alpha[rk + k]);
                 let pen = if k == kstar { problem.beta[k] } else { 0.0 };
@@ -94,6 +96,13 @@ mod tests {
     }
 
     #[test]
+    fn decision_len_counts_edges_only() {
+        let p = problem();
+        // 3 edges × 2 resources, not 2·2·2
+        assert_eq!(p.decision_len(), 6);
+    }
+
+    #[test]
     fn zero_arrivals_zero_gradient() {
         let p = problem();
         let y = vec![1.0; p.decision_len()];
@@ -120,13 +129,14 @@ mod tests {
     }
 
     #[test]
-    fn off_edge_coordinates_stay_zero() {
+    fn absent_port_rows_are_zeroed() {
         let p = problem();
         let y = vec![0.5; p.decision_len()];
-        let mut g = vec![0.0; p.decision_len()];
-        gradient(&p, &[1.0, 1.0], &y, &mut g, &mut GradScratch::default());
-        assert_eq!(g[p.idx(1, 0, 0)], 0.0); // (1,0) is not an edge
-        assert_eq!(g[p.idx(1, 0, 1)], 0.0);
+        let mut g = vec![7.0; p.decision_len()];
+        gradient(&p, &[1.0, 0.0], &y, &mut g, &mut GradScratch::default());
+        // port 1's single edge (1,1) must be memset back to zero
+        assert_eq!(g[p.idx(1, 1, 0)], 0.0);
+        assert_eq!(g[p.idx(1, 1, 1)], 0.0);
     }
 
     #[test]
@@ -134,10 +144,7 @@ mod tests {
         use crate::reward::slot_reward;
         let p = problem();
         let x = [1.0, 1.0];
-        let mut y = vec![0.7; p.decision_len()];
-        // zero off-edge entries so reward is consistent
-        y[p.idx(1, 0, 0)] = 0.0;
-        y[p.idx(1, 0, 1)] = 0.0;
+        let y = vec![0.7; p.decision_len()];
         let mut g = vec![0.0; p.decision_len()];
         gradient(&p, &x, &y, &mut g, &mut GradScratch::default());
         let h = 1e-6;

@@ -2,13 +2,14 @@
 //! the Alg. 1 fast projection, the learning-rate schedule, and the
 //! per-slot stepper that ties them together.
 
+pub mod dense_ref;
 pub mod gradient;
 pub mod projection;
 pub mod utilities;
 
 use crate::model::Problem;
 use gradient::{gradient, GradScratch};
-use projection::project;
+use projection::{project, project_instances};
 
 /// Learning-rate schedule.  The paper's experiments use a multiplicative
 /// decay η_{t+1} = λ·η_t (Alg. 1 step 32) around the Eq. 50 oracle rate;
@@ -41,7 +42,13 @@ impl LearningRate {
 /// heap allocation after construction (scratch is pre-sized).
 #[derive(Clone, Debug)]
 pub struct OgaState {
-    /// Current decision y(t), dense [L, R, K].
+    /// Current decision y(t), edge-major [E, K].
+    ///
+    /// Invariant relied on by the dirty-instance projection: between
+    /// steps, `y` is feasible.  `step` only re-projects instances its
+    /// own ascent perturbed, so after writing `y` directly (warm
+    /// starts, tests) call [`OgaState::invalidate`] to make the next
+    /// step re-project every instance.
     pub y: Vec<f64>,
     /// Slot counter (t starts at 0 == paper's t = 1).
     pub t: usize,
@@ -51,6 +58,12 @@ pub struct OgaState {
     grad: Vec<f64>,
     scratch: GradScratch,
     scratch_quota: Vec<f64>,
+    /// Instances perturbed by the current slot's ascent (flags + list).
+    dirty: Vec<bool>,
+    dirty_list: Vec<usize>,
+    /// Set by `invalidate`: the next step projects globally because `y`
+    /// was written from outside and may be infeasible anywhere.
+    full_project_pending: bool,
 }
 
 impl OgaState {
@@ -65,18 +78,37 @@ impl OgaState {
             grad: vec![0.0; problem.decision_len()],
             scratch: GradScratch::default(),
             scratch_quota: Vec::new(),
+            dirty: vec![false; problem.num_instances()],
+            dirty_list: Vec::new(),
+            full_project_pending: false,
         }
+    }
+
+    /// Declare `y` externally modified: the next `step` re-projects
+    /// every instance instead of only the arrived neighborhood.
+    pub fn invalidate(&mut self) {
+        self.full_project_pending = true;
     }
 
     /// One OGA slot: observe x(t), ascend the reward gradient at
     /// (x(t), y(t)), project back onto Y.  Returns the step size used.
     ///
-    /// Hot-path note (§Perf): when η_t does not depend on ‖∇q‖ (decay /
-    /// constant schedules) the gradient is *fused into the ascent* —
-    /// only the arrived ports' coordinates are touched and no gradient
-    /// buffer is materialized.  The Oracle schedule (Eq. 50) needs the
-    /// norm first, so it keeps the two-pass path.
+    /// Hot-path notes (§Perf):
+    /// * When η_t does not depend on ‖∇q‖ (decay / constant schedules)
+    ///   the gradient is *fused into the ascent* — only the arrived
+    ///   ports' coordinates are touched and no gradient buffer is
+    ///   materialized.  The Oracle schedule (Eq. 50) needs the norm
+    ///   first, so it keeps the two-pass path.
+    /// * The ascent only perturbs instances adjacent to arrived ports
+    ///   (the *dirty* set); every other column of y was feasible before
+    ///   the step and is untouched, so the projection re-runs only the
+    ///   dirty channels.  With sparse graphs / sparse arrivals this is
+    ///   the difference between O(|E_x|·K) and O(L·R·K) per slot.
     pub fn step(&mut self, problem: &Problem, x: &[f64]) -> f64 {
+        for &r in &self.dirty_list {
+            self.dirty[r] = false;
+        }
+        self.dirty_list.clear();
         let eta = match self.lr {
             LearningRate::Oracle { .. } => {
                 gradient(problem, x, &self.y, &mut self.grad, &mut self.scratch);
@@ -85,6 +117,9 @@ impl OgaState {
                 for i in 0..self.y.len() {
                     self.y[i] += eta * self.grad[i];
                 }
+                // the gradient is zero off the arrived ports, so only
+                // their instances were perturbed
+                self.mark_dirty_from_arrivals(problem, x);
                 eta
             }
             _ => {
@@ -93,24 +128,32 @@ impl OgaState {
                 eta
             }
         };
-        project(problem, &mut self.y, self.workers);
+        if self.full_project_pending {
+            project(problem, &mut self.y, self.workers);
+            self.full_project_pending = false;
+        } else {
+            project_instances(problem, &mut self.y, &self.dirty_list, self.workers);
+        }
         self.t += 1;
         eta
     }
 
     /// y += η·∇q(x, y) touching only the arrived ports (Eq. 30 inline).
-    fn fused_ascent(&mut self, problem: &Problem, x: &[f64], eta: f64) {
+    /// Public for the layout-parity suite and the hot-path bench; normal
+    /// callers go through [`OgaState::step`].
+    pub fn fused_ascent(&mut self, problem: &Problem, x: &[f64], eta: f64) {
         let k_n = problem.num_resources;
         self.scratch_quota.resize(k_n, 0.0);
+        let g = &problem.graph;
         for l in 0..problem.num_ports() {
             let x_l = x[l];
             if x_l == 0.0 {
                 continue;
             }
-            let instances = &problem.graph.ports_to_instances[l];
+            let edges = g.port_edges(l);
             self.scratch_quota.fill(0.0);
-            for &r in instances {
-                let base = problem.idx(l, r, 0);
+            for e in edges.clone() {
+                let base = e * k_n;
                 for k in 0..k_n {
                     self.scratch_quota[k] += self.y[base + k];
                 }
@@ -124,8 +167,13 @@ impl OgaState {
                     kstar = k;
                 }
             }
-            for &r in instances {
-                let base = problem.idx(l, r, 0);
+            for e in edges {
+                let r = g.edge_instance[e];
+                if !self.dirty[r] {
+                    self.dirty[r] = true;
+                    self.dirty_list.push(r);
+                }
+                let base = e * k_n;
                 let rk = r * k_n;
                 for k in 0..k_n {
                     let yv = self.y[base + k];
@@ -135,6 +183,28 @@ impl OgaState {
                 }
             }
         }
+    }
+
+    fn mark_dirty_from_arrivals(&mut self, problem: &Problem, x: &[f64]) {
+        let g = &problem.graph;
+        for l in 0..problem.num_ports() {
+            if x[l] == 0.0 {
+                continue;
+            }
+            for e in g.port_edges(l) {
+                let r = g.edge_instance[e];
+                if !self.dirty[r] {
+                    self.dirty[r] = true;
+                    self.dirty_list.push(r);
+                }
+            }
+        }
+    }
+
+    /// Instances perturbed by the most recent ascent (valid between the
+    /// ascent and the next `step`; exposed for tests and diagnostics).
+    pub fn dirty_instances(&self) -> &[usize] {
+        &self.dirty_list
     }
 
     /// Current gradient buffer (valid after `step`; exposed for tests
@@ -160,6 +230,53 @@ mod tests {
             s.step(&p, &x);
             p.check_feasible(&s.y, 1e-7).unwrap();
         }
+    }
+
+    #[test]
+    fn step_with_partial_arrivals_keeps_feasibility() {
+        // only some ports arrive -> only their instances are dirty; the
+        // result must still be globally feasible every slot
+        let p = synthesize(&Scenario::small());
+        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 25.0, lambda: 0.999 }, 0);
+        let mut rng = crate::utils::rng::Rng::new(17);
+        for _ in 0..40 {
+            let x: Vec<f64> = (0..p.num_ports())
+                .map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 })
+                .collect();
+            s.step(&p, &x);
+            p.check_feasible(&s.y, 1e-7).unwrap();
+        }
+    }
+
+    #[test]
+    fn dirty_set_is_exactly_arrived_neighborhood() {
+        let p = synthesize(&Scenario::small());
+        let mut s = OgaState::new(&p, LearningRate::Constant(1.0), 0);
+        let mut x = vec![0.0; p.num_ports()];
+        x[0] = 1.0;
+        s.step(&p, &x);
+        let mut want: Vec<usize> = p.graph.ports_to_instances[0].clone();
+        want.sort_unstable();
+        let mut got = s.dirty_instances().to_vec();
+        got.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn invalidate_forces_global_reprojection() {
+        let p = synthesize(&Scenario::small());
+        let mut s = OgaState::new(&p, LearningRate::Constant(0.5), 0);
+        // plant an infeasible decision everywhere, then arrive only at
+        // port 0: without invalidate(), instances outside port 0's
+        // neighborhood would never be re-projected
+        for v in s.y.iter_mut() {
+            *v = 1e6;
+        }
+        s.invalidate();
+        let mut x = vec![0.0; p.num_ports()];
+        x[0] = 1.0;
+        s.step(&p, &x);
+        p.check_feasible(&s.y, 1e-6).unwrap();
     }
 
     #[test]
@@ -202,11 +319,9 @@ mod tests {
         }
         let before = s.y.clone();
         s.step(&p, &x_off);
-        // zero gradient => the step is a re-projection of a feasible
-        // point; equal up to re-projection round-off on exactly-tight
-        // capacity columns.
-        for (a, b) in s.y.iter().zip(&before) {
-            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
-        }
+        // zero gradient => empty dirty set => the step is a no-op (the
+        // dirty-tracking projection doesn't even re-project)
+        assert_eq!(s.y, before);
+        assert!(s.dirty_instances().is_empty());
     }
 }

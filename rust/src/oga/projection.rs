@@ -10,16 +10,27 @@
 //! KKT (Eq. 34) gives v_l = clip(z_l − ρ/2, 0, a_l) with water level
 //! τ = ρ/2 ≥ 0, zero if the capacity constraint is slack.  The paper
 //! finds τ by sorting the column and iterating the B¹/B²/B³ partition;
-//! `project_channel` implements the equivalent exact *breakpoint scan*:
+//! `project_channel` implements the equivalent exact *event sweep*:
 //! g(τ) = Σ_l clip(z_l − τ, 0, a_l) is piecewise linear and decreasing
-//! with breakpoints {z_l} ∪ {z_l − a_l}, so one sort of the 2·|L_r|
-//! breakpoints plus one linear scan pins the segment where g(τ) = c and
-//! solves for τ in closed form — same O(|L_r| log |L_r|) complexity and
-//! the same sorted structure as the paper's inner/outer loop, but with a
-//! termination argument that doesn't rely on uniform caps.
+//! with breakpoints {z_l} ∪ {z_l − a_l}.  One descending sort of the
+//! ≤ 2·|L_r| positive breakpoints plus a single prefix-maintained sweep
+//! (interior count m, interior sum S, capped sum C, so g(τ) = S − m·τ + C
+//! on each segment) pins the segment where g(τ) = c and solves for τ in
+//! closed form — O(|L_r| log |L_r|) total, against the seed's
+//! O(|L_r|²) worst case of re-evaluating g from scratch per breakpoint
+//! (see EXPERIMENTS.md §Perf).
 //!
-//! Columns are independent, so `project` runs them in parallel over a
-//! scoped thread pool (the "for each (r, k) in parallel" of Alg. 1).
+//! Columns are independent, so `project` distributes instances over the
+//! persistent worker pool (the "for each (r, k) in parallel" of Alg. 1).
+//! `project_instances` projects only a caller-supplied subset — the
+//! dirty-instance fast path of `OgaState::step`, which re-projects only
+//! instances adjacent to arrived ports.
+//!
+//! Decisions are edge-major `[E, K]` (see `model`); every edge belongs
+//! to exactly one instance, so parallelizing over instances is race-free
+//! and there are no off-edge coordinates to re-zero.
+
+use std::cell::RefCell;
 
 use crate::model::Problem;
 use crate::utils::pool;
@@ -29,21 +40,26 @@ use crate::utils::pool;
 pub struct ChannelScratch {
     vals: Vec<f64>,
     caps: Vec<f64>,
-    breaks: Vec<f64>,
+    events: Vec<(f64, u32)>,
 }
 
 /// Exact projection of one (r, k) column.
 ///
 /// `vals[i]`/`caps[i]` are z and a for the i-th port of L_r; on return
-/// `vals` holds the projected v.  Returns the water level τ (= ρ/2 of
-/// Eq. 35), 0.0 when the capacity constraint is slack.
-pub fn project_channel(vals: &mut [f64], caps: &[f64], capacity: f64,
-                       breaks: &mut Vec<f64>) -> f64 {
+/// `vals` holds the projected v.  `events` is reusable scratch.  Returns
+/// the water level τ (= ρ/2 of Eq. 35), 0.0 when the capacity constraint
+/// is slack.
+pub fn project_channel(
+    vals: &mut [f64],
+    caps: &[f64],
+    capacity: f64,
+    events: &mut Vec<(f64, u32)>,
+) -> f64 {
     debug_assert_eq!(vals.len(), caps.len());
     // Fast path: if the box-clipped point fits the capacity, τ = 0
     // (KKT: ρ > 0 only when the capacity constraint is tight).  The
-    // original z must be kept for the scan below — clipping first and
-    // scanning the clipped values changes the answer (a coordinate far
+    // original z must be kept for the sweep below — clipping first and
+    // sweeping the clipped values changes the answer (a coordinate far
     // above its cap must stay pinned at the cap while others drain).
     let used: f64 = vals
         .iter()
@@ -58,64 +74,71 @@ pub fn project_channel(vals: &mut [f64], caps: &[f64], capacity: f64,
     }
 
     // Capacity binds: find τ with g(τ) = Σ clip(z−τ, 0, a) = capacity.
-    // g is piecewise linear, decreasing; its breakpoints are where any
-    // coordinate enters/leaves the interior regime: τ = z_i (leaves zero
-    // set) and τ = z_i − a_i (leaves the cap set).
-    breaks.clear();
+    // Events mark where a coordinate changes regime as τ decreases:
+    // at τ = z_i it leaves the zero set and becomes interior, at
+    // τ = z_i − a_i it leaves the interior and pins at its cap.  Only
+    // positive event values matter since τ* > 0 here.
+    events.clear();
     for i in 0..vals.len() {
-        breaks.push(vals[i]);
-        breaks.push(vals[i] - caps[i]);
-    }
-    breaks.retain(|&b| b > 0.0);
-    breaks.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
-    breaks.push(0.0);
-
-    // g(τ) and the number of interior coordinates at level τ⁺.
-    let g_at = |tau: f64| -> (f64, f64) {
-        let mut g = 0.0;
-        let mut interior = 0.0;
-        for i in 0..vals.len() {
-            let v = vals[i] - tau;
-            if v <= 0.0 {
-                // zero set
-            } else if v >= caps[i] {
-                g += caps[i];
-            } else {
-                g += v;
-                interior += 1.0;
-            }
+        if vals[i] > 0.0 {
+            events.push((vals[i], (i as u32) << 1));
         }
-        (g, interior)
-    };
+        if vals[i] - caps[i] > 0.0 {
+            events.push((vals[i] - caps[i], ((i as u32) << 1) | 1));
+        }
+    }
+    events.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap()); // descending τ
 
-    // Scan from the largest breakpoint (g smallest) downward; stop at the
-    // first breakpoint where g(τ) ≥ capacity — the crossing lies in
-    // [tau, prev_tau].  g is linear *inside* the segment; boundary
-    // points belong to both adjacent regimes (a coordinate with
-    // z_i − a_i == τ is "capped" at τ but interior just above), so the
-    // slope must be sampled at the segment midpoint, not an endpoint.
-    let mut prev_tau = breaks[0];
-    for &tau in breaks.iter() {
-        let (g, _) = g_at(tau);
-        if g >= capacity {
-            let mid = 0.5 * (tau + prev_tau);
-            let (g_mid, interior) = g_at(mid);
-            // solve g(mid) − interior·(τ* − mid) = capacity
-            let tau_star = if interior > 0.0 {
-                mid + (g_mid - capacity) / interior
+    // Sweep downward, maintaining m = |interior|, s = Σ_interior z,
+    // c = Σ_capped a, so g(τ) = s − m·τ + c on the open segment below
+    // the processed events.  g is continuous at the boundaries (an
+    // entering coordinate contributes 0 at τ = z_i, a capping one
+    // contributes exactly a_i at τ = z_i − a_i), so evaluating at the
+    // segment's lower boundary with the upper segment's state is exact.
+    let mut m = 0.0f64;
+    let mut s = 0.0f64;
+    let mut c = 0.0f64;
+    let n_ev = events.len();
+    let mut idx = 0usize;
+    while idx < n_ev {
+        let upper = events[idx].0;
+        while idx < n_ev && events[idx].0 == upper {
+            let tag = events[idx].1;
+            let i = (tag >> 1) as usize;
+            if tag & 1 == 0 {
+                // zero set -> interior
+                m += 1.0;
+                s += vals[i];
             } else {
-                tau
-            };
-            let tau_star = tau_star.clamp(tau, prev_tau);
+                // interior -> capped
+                m -= 1.0;
+                s -= vals[i];
+                c += caps[i];
+            }
+            idx += 1;
+        }
+        let lower = if idx < n_ev { events[idx].0 } else { 0.0 };
+        let g_low = s - m * lower + c;
+        // The final segment (lower == 0) crosses unconditionally: the
+        // fast path established g(0) = used > capacity, but its `used`
+        // was a fresh sum while s/c accumulated incrementally (+z then
+        // −z does not cancel exactly), so on a marginally-tight channel
+        // the rounded s + c can land a few ulps below `capacity` — the
+        // crossing must not be lost to that rounding.
+        if g_low >= capacity || idx >= n_ev {
+            // crossing inside (lower, upper]: solve s − m·τ + c = capacity
+            let tau = if m > 0.0 { (s + c - capacity) / m } else { lower };
+            let tau = tau.clamp(lower, upper);
             for i in 0..vals.len() {
-                vals[i] = (vals[i] - tau_star).clamp(0.0, caps[i]);
+                vals[i] = (vals[i] - tau).clamp(0.0, caps[i]);
             }
-            return tau_star;
+            return tau;
         }
-        prev_tau = tau;
     }
-    // g(0) > capacity was established, so we must have returned above.
-    unreachable!("breakpoint scan failed to bracket the water level");
+    // only reachable with no positive breakpoints at all, i.e. every
+    // z_i ≤ 0 — then used = 0 ≤ capacity (capacities are nonnegative)
+    // and the fast path already returned.
+    unreachable!("event sweep failed to bracket the water level");
 }
 
 /// Reference projector for tests: bisection on τ (slow, obviously
@@ -148,34 +171,75 @@ pub fn project_channel_bisect(vals: &mut [f64], caps: &[f64], capacity: f64) -> 
     tau
 }
 
-/// Project the dense decision tensor `z` [L, R, K] onto Y in place.
+thread_local! {
+    /// Per-thread channel scratch so pool workers don't allocate per
+    /// instance.
+    static SCRATCH: RefCell<ChannelScratch> = RefCell::new(ChannelScratch::default());
+}
+
+/// Touched-coordinate threshold below which serial projection beats the
+/// pool dispatch (the persistent pool costs a few µs per call, against
+/// the ~100µs/worker of the seed's `thread::scope` spawns).
+const SERIAL_THRESHOLD: usize = 8_192;
+
+/// Project the edge-major decision tensor `z` [E, K] onto Y in place.
 ///
-/// Off-edge coordinates are zeroed.  Channels are distributed over
-/// `workers` threads (0 = auto); each instance r owns the disjoint slice
-/// of coordinates {(l, r, k) : l, k}, so parallelizing over r is race-free.
+/// Channels are distributed over `workers` threads (0 = auto); each
+/// instance r owns the disjoint coordinate set {(e, k) : edge e ∈ r},
+/// so parallelizing over r is race-free.
 pub fn project(problem: &Problem, z: &mut [f64], workers: usize) {
     let r_n = problem.num_instances();
-    // Thread-spawn costs ~100us per worker per call; below this tensor
-    // size the serial scan wins outright (measured in
-    // benches/ablation_projection.rs — see EXPERIMENTS.md §Perf).
-    const SERIAL_THRESHOLD: usize = 65_536;
-    if workers <= 1 || (workers == 0 && z.len() < SERIAL_THRESHOLD) {
-        return project_serial(problem, z);
+    let touched = z.len();
+    project_impl(problem, z, workers, touched, r_n, |i| i);
+}
+
+/// Project only the channels of the listed instances (the dirty set of
+/// one OGA step).  Instances not listed are left untouched — an ascent
+/// that only perturbed the listed instances leaves every other column
+/// feasible, so skipping them is exact, not approximate.
+pub fn project_instances(problem: &Problem, z: &mut [f64], instances: &[usize], workers: usize) {
+    if instances.is_empty() {
+        return;
+    }
+    let k_n = problem.num_resources;
+    let touched: usize =
+        instances.iter().map(|&r| problem.graph.instance_degree(r) * k_n).sum();
+    project_impl(problem, z, workers, touched, instances.len(), |i| instances[i]);
+}
+
+fn project_impl(
+    problem: &Problem,
+    z: &mut [f64],
+    workers: usize,
+    touched: usize,
+    n: usize,
+    instance_of: impl Fn(usize) -> usize + Sync,
+) {
+    // NB: the seed guarded with `workers <= 1`, which swallowed the
+    // `workers == 0` auto mode entirely — auto never parallelized.
+    if workers == 1 || (workers == 0 && touched < SERIAL_THRESHOLD) {
+        SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            for i in 0..n {
+                project_instance(problem, instance_of(i), z, scratch);
+            }
+        });
+        return;
     }
     let workers = if workers == 0 {
-        // one worker per ~64k tensor elements, capped by cores
-        pool::default_workers(r_n).min((z.len() / 32_768).max(2))
+        pool::default_workers(n).min((touched / 2_048).max(2))
     } else {
         workers
     };
     let shared = SharedTensor { ptr: z.as_mut_ptr(), len: z.len() };
     let shared = &shared; // capture the Sync wrapper, not the raw pointer field
-    pool::parallel_for(r_n, workers, |r| {
-        // SAFETY: instance r touches only indices (l*R + r)*K + k — disjoint
-        // across distinct r.
+    pool::parallel_for(n, workers, |i| {
+        // SAFETY: instance r owns only its edges' coordinates — disjoint
+        // across distinct r, and `instances` lists each r at most once.
         let z = unsafe { std::slice::from_raw_parts_mut(shared.ptr, shared.len) };
-        let mut scratch = ChannelScratch::default();
-        project_instance(problem, r, z, &mut scratch);
+        SCRATCH.with(|s| {
+            project_instance(problem, instance_of(i), z, &mut s.borrow_mut());
+        });
     });
 }
 
@@ -187,40 +251,33 @@ pub fn project_serial(problem: &Problem, z: &mut [f64]) {
     }
 }
 
-/// Project all K channels of instance r and zero its off-edge entries.
+/// Project all K channels of instance r.
 fn project_instance(problem: &Problem, r: usize, z: &mut [f64], scratch: &mut ChannelScratch) {
     let k_n = problem.num_resources;
-    let ports = &problem.graph.instances_to_ports[r];
-    // zero off-edge coordinates of this instance
-    for l in 0..problem.num_ports() {
-        if !problem.graph.has_edge(l, r) {
-            let base = problem.idx(l, r, 0);
-            z[base..base + k_n].fill(0.0);
-        }
-    }
-    if ports.is_empty() {
+    let edges = problem.graph.instance_edge_ids(r);
+    if edges.is_empty() {
         return;
     }
     for k in 0..k_n {
         scratch.vals.clear();
         scratch.caps.clear();
-        for &l in ports {
-            scratch.vals.push(z[problem.idx(l, r, k)]);
-            scratch.caps.push(problem.demand_at(l, k));
+        for &e in edges {
+            scratch.vals.push(z[e * k_n + k]);
+            scratch.caps.push(problem.demand_at(problem.graph.edge_port[e], k));
         }
         project_channel(
             &mut scratch.vals,
             &scratch.caps,
             problem.capacity_at(r, k),
-            &mut scratch.breaks,
+            &mut scratch.events,
         );
-        for (i, &l) in ports.iter().enumerate() {
-            z[problem.idx(l, r, k)] = scratch.vals[i];
+        for (i, &e) in edges.iter().enumerate() {
+            z[e * k_n + k] = scratch.vals[i];
         }
     }
 }
 
-/// Pointer wrapper so the scoped threads can share the tensor; safety is
+/// Pointer wrapper so the pool workers can share the tensor; safety is
 /// argued at the call site (disjoint index ownership per instance).
 struct SharedTensor {
     ptr: *mut f64,
@@ -250,8 +307,8 @@ mod tests {
             let (vals, caps, capacity) = channel_case(rng, n);
             let mut fast = vals.clone();
             let mut slow = vals.clone();
-            let mut breaks = Vec::new();
-            project_channel(&mut fast, &caps, capacity, &mut breaks);
+            let mut events = Vec::new();
+            project_channel(&mut fast, &caps, capacity, &mut events);
             project_channel_bisect(&mut slow, &caps, capacity);
             for i in 0..n {
                 if (fast[i] - slow[i]).abs() > 1e-6 {
@@ -266,13 +323,70 @@ mod tests {
     }
 
     #[test]
+    fn channel_with_duplicate_values_matches_bisection() {
+        // duplicate z's and z−a ties exercise the same-value event
+        // grouping of the sweep
+        check("channel-ties-vs-bisect", 200, |rng, size| {
+            let n = rng.range(2, size.dim(24, 2));
+            let base = rng.uniform(0.5, 3.0);
+            let vals: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.5) { base } else { rng.uniform(-1.0, 4.0) })
+                .collect();
+            let caps: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.3) { base } else { rng.uniform(0.2, 2.0) })
+                .collect();
+            let capacity = rng.uniform(0.1, 0.6 * caps.iter().sum::<f64>());
+            let mut fast = vals.clone();
+            let mut slow = vals.clone();
+            let mut events = Vec::new();
+            project_channel(&mut fast, &caps, capacity, &mut events);
+            project_channel_bisect(&mut slow, &caps, capacity);
+            for i in 0..n {
+                ensure((fast[i] - slow[i]).abs() < 1e-6, || {
+                    format!(
+                        "i={i}: fast={} slow={} (vals={vals:?} caps={caps:?} c={capacity})",
+                        fast[i], slow[i]
+                    )
+                })?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn channel_marginally_tight_capacity_does_not_panic() {
+        // capacity one ulp below the clipped sum: the capacity binds by
+        // rounding only, and the sweep's incrementally-accumulated
+        // g(0) = s + c may land below `capacity` — the final segment
+        // must still produce a (tiny) water level instead of panicking
+        check("channel-marginal-tight", 300, |rng, size| {
+            let n = rng.range(1, size.dim(30, 1));
+            let (vals, caps, _) = channel_case(rng, n);
+            let used: f64 =
+                vals.iter().zip(&caps).map(|(&z, &a)| z.clamp(0.0, a)).sum();
+            if used <= 0.0 {
+                return Ok(());
+            }
+            let capacity = f64::from_bits(used.to_bits() - 1); // next below
+            let mut v = vals.clone();
+            let mut events = Vec::new();
+            let tau = project_channel(&mut v, &caps, capacity, &mut events);
+            let sum: f64 = v.iter().sum();
+            ensure(tau >= 0.0, || format!("negative tau {tau}"))?;
+            ensure(sum <= capacity + 1e-9, || {
+                format!("sum {sum} > marginal capacity {capacity}")
+            })
+        });
+    }
+
+    #[test]
     fn channel_output_feasible_and_optimal_kkt() {
         check("channel-kkt", 300, |rng, size| {
             let n = rng.range(1, size.dim(30, 1));
             let (vals, caps, capacity) = channel_case(rng, n);
             let mut v = vals.clone();
-            let mut breaks = Vec::new();
-            let tau = project_channel(&mut v, &caps, capacity, &mut breaks);
+            let mut events = Vec::new();
+            let tau = project_channel(&mut v, &caps, capacity, &mut events);
             let sum: f64 = v.iter().sum();
             ensure(sum <= capacity + 1e-9, || format!("sum {sum} > cap {capacity}"))?;
             for i in 0..n {
@@ -299,8 +413,8 @@ mod tests {
     fn interior_point_untouched() {
         let mut v = vec![0.5, 0.25];
         let caps = [1.0, 1.0];
-        let mut breaks = Vec::new();
-        let tau = project_channel(&mut v, &caps, 10.0, &mut breaks);
+        let mut events = Vec::new();
+        let tau = project_channel(&mut v, &caps, 10.0, &mut events);
         assert_eq!(tau, 0.0);
         assert_eq!(v, vec![0.5, 0.25]);
     }
@@ -311,8 +425,8 @@ mod tests {
         // a=10, c=3 -> B3 = all, rho/2 = (6-3)/3 = 1.
         let mut v = vec![3.0, 2.0, 1.0];
         let caps = [10.0, 10.0, 10.0];
-        let mut breaks = Vec::new();
-        let tau = project_channel(&mut v, &caps, 3.0, &mut breaks);
+        let mut events = Vec::new();
+        let tau = project_channel(&mut v, &caps, 3.0, &mut events);
         assert!((tau - 1.0).abs() < 1e-9, "tau={tau}");
         assert!((v[0] - 2.0).abs() < 1e-9);
         assert!((v[1] - 1.0).abs() < 1e-9);
@@ -324,8 +438,8 @@ mod tests {
         // largest value pinned at its cap (B1), rest water-filled
         let mut v = vec![5.0, 1.0, 0.8];
         let caps = [1.0, 2.0, 2.0];
-        let mut breaks = Vec::new();
-        let tau = project_channel(&mut v, &caps, 2.0, &mut breaks);
+        let mut events = Vec::new();
+        let tau = project_channel(&mut v, &caps, 2.0, &mut events);
         assert!((v[0] - 1.0).abs() < 1e-9, "v={v:?} tau={tau}");
         let sum: f64 = v.iter().sum();
         assert!((sum - 2.0).abs() < 1e-8);
@@ -346,6 +460,39 @@ mod tests {
     }
 
     #[test]
+    fn dirty_subset_projection_matches_full() {
+        // projecting a feasible point perturbed only on a subset of
+        // instances: projecting just that subset equals the full pass
+        let p = synthesize(&Scenario::small());
+        let mut rng = Rng::new(33);
+        let mut y: Vec<f64> =
+            (0..p.decision_len()).map(|_| rng.uniform(0.0, 4.0)).collect();
+        project(&p, &mut y, 0); // feasible baseline
+        // perturb instances 0..R/2 only
+        let dirty: Vec<usize> = (0..p.num_instances() / 2).collect();
+        let k_n = p.num_resources;
+        for &r in &dirty {
+            for &e in p.graph.instance_edge_ids(r) {
+                for k in 0..k_n {
+                    y[e * k_n + k] += rng.uniform(0.0, 5.0);
+                }
+            }
+        }
+        let mut y_full = y.clone();
+        project(&p, &mut y_full, 0);
+        project_instances(&p, &mut y, &dirty, 0);
+        for i in 0..y.len() {
+            assert!(
+                (y[i] - y_full[i]).abs() < 1e-12,
+                "subset projection diverged at {i}: {} vs {}",
+                y[i],
+                y_full[i]
+            );
+        }
+        p.check_feasible(&y, 1e-7).unwrap();
+    }
+
+    #[test]
     fn projection_idempotent() {
         let p = synthesize(&Scenario::small());
         let mut rng = Rng::new(21);
@@ -361,23 +508,16 @@ mod tests {
 
     #[test]
     fn projection_nonexpansive() {
-        // ‖P(z1) − P(z2)‖ ≤ ‖z1 − z2‖ on-edge — step (i) of Eq. 37.
+        // ‖P(z1) − P(z2)‖ ≤ ‖z1 − z2‖ — step (i) of Eq. 37.  Under the
+        // edge-major layout every coordinate is on-edge, so the distances
+        // are plain Euclidean norms of the whole tensors.
         let p = synthesize(&Scenario::small());
         check("nonexpansive", 50, |rng, _| {
             let mut z1: Vec<f64> =
                 (0..p.decision_len()).map(|_| rng.uniform(-1.0, 6.0)).collect();
             let mut z2: Vec<f64> =
                 z1.iter().map(|v| v + rng.uniform(-0.5, 0.5)).collect();
-            // distance over on-edge coords only (off-edge are clamped)
-            let mut d_in = 0.0;
-            for l in 0..p.num_ports() {
-                for &r in &p.graph.ports_to_instances[l] {
-                    for k in 0..p.num_resources {
-                        let i = p.idx(l, r, k);
-                        d_in += (z1[i] - z2[i]).powi(2);
-                    }
-                }
-            }
+            let d_in: f64 = z1.iter().zip(&z2).map(|(a, b)| (a - b) * (a - b)).sum();
             project(&p, &mut z1, 0);
             project(&p, &mut z2, 0);
             let d_out: f64 = z1.iter().zip(&z2).map(|(a, b)| (a - b) * (a - b)).sum();

@@ -16,14 +16,16 @@ pub struct SlotReward {
 }
 
 /// Per-port reward decomposition for one port (Eq. 7, without the x_l
-/// arrival factor).
+/// arrival factor).  `y` is edge-major [E, K], so port l's coordinates
+/// are one contiguous slice.
 pub fn port_reward(problem: &Problem, l: usize, y: &[f64]) -> (f64, f64) {
     let k_n = problem.num_resources;
+    let g = &problem.graph;
     let mut gain = 0.0;
     let mut quota = vec![0.0; k_n];
-    for &r in &problem.graph.ports_to_instances[l] {
-        let base = problem.idx(l, r, 0);
-        let rk = r * k_n;
+    for e in g.port_edges(l) {
+        let base = e * k_n;
+        let rk = g.edge_instance[e] * k_n;
         for k in 0..k_n {
             let v = y[base + k];
             gain += problem.kind[rk + k].value(v, problem.alpha[rk + k]);
@@ -61,6 +63,7 @@ pub fn slot_reward_scratch(
     quota: &mut [f64],
 ) -> SlotReward {
     let k_n = problem.num_resources;
+    let g = &problem.graph;
     debug_assert_eq!(quota.len(), k_n);
     let mut out = SlotReward::default();
     for l in 0..problem.num_ports() {
@@ -69,9 +72,9 @@ pub fn slot_reward_scratch(
         }
         let mut gain = 0.0;
         quota.fill(0.0);
-        for &r in &problem.graph.ports_to_instances[l] {
-            let base = problem.idx(l, r, 0);
-            let rk = r * k_n;
+        for e in g.port_edges(l) {
+            let base = e * k_n;
+            let rk = g.edge_instance[e] * k_n;
             for k in 0..k_n {
                 let v = y[base + k];
                 gain += problem.kind[rk + k].value(v, problem.alpha[rk + k]);

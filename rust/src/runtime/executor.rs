@@ -48,6 +48,9 @@ pub struct OgaStepExecutor {
     y: Vec<f32>,
     /// Scratch for padded arrivals.
     x: Vec<f32>,
+    /// (l, r) per edge id, copied from the problem graph so the dense
+    /// artifact tensor can be gathered into the edge-major layout.
+    edges: Vec<(u32, u32)>,
 }
 
 impl OgaStepExecutor {
@@ -110,6 +113,12 @@ impl OgaStepExecutor {
             c: lit2(&c, br, bk)?,
             y: vec![0.0f32; bl * br * bk],
             x: vec![0.0f32; bl],
+            edges: (0..problem.num_edges())
+                .map(|e| {
+                    (problem.graph.edge_port[e] as u32,
+                     problem.graph.edge_instance[e] as u32)
+                })
+                .collect(),
             bucket,
         })
     }
@@ -123,15 +132,17 @@ impl OgaStepExecutor {
         self.y.fill(0.0);
     }
 
-    /// Copy the current (unpadded) decision into `out` [L, R, K] (f64).
+    /// Gather the current decision into `out`, edge-major [E, K] (f64).
+    /// The artifact computes on the padded dense [L, R, K] tensor; this
+    /// is the layout seam between the XLA side and the Rust CSR side.
     pub fn current_decision(&self, out: &mut [f64]) {
         let (br, bk) = (self.bucket.r, self.bucket.k);
-        for l in 0..self.l {
-            for r in 0..self.r {
-                for k in 0..self.k {
-                    out[(l * self.r + r) * self.k + k] =
-                        self.y[(l * br + r) * bk + k] as f64;
-                }
+        debug_assert_eq!(out.len(), self.edges.len() * self.k);
+        for (e, &(l, r)) in self.edges.iter().enumerate() {
+            let src = (l as usize * br + r as usize) * bk;
+            let dst = e * self.k;
+            for k in 0..self.k {
+                out[dst + k] = self.y[src + k] as f64;
             }
         }
     }

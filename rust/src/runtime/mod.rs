@@ -2,15 +2,88 @@
 //! client and run it from the slot loop.  `artifact` handles bucket
 //! discovery, `executor` the compiled step, and [`HloOgaSched`] exposes
 //! the whole thing as a drop-in [`Policy`].
+//!
+//! The PJRT path needs the `xla` crate (and `anyhow`), which only the
+//! closure-vendored build environment ships.  The crate therefore gates
+//! the real executor behind the **`xla` cargo feature**; without it a
+//! stub with the same API is compiled whose constructor returns an
+//! error, so every caller (CLI `ogasched-hlo`, benches, the parity
+//! tests) degrades gracefully instead of failing the build.  To enable
+//! the real path, build with `--features xla` after adding the `xla`
+//! dependency (vendored closure or registry) to rust/Cargo.toml.
 
 pub mod artifact;
+
+#[cfg(feature = "xla")]
 pub mod executor;
+
+/// Stub executor compiled when the `xla` feature is off: identical API,
+/// constructor always errors (see module docs).
+#[cfg(not(feature = "xla"))]
+pub mod executor {
+    use crate::model::Problem;
+    use crate::runtime::artifact::{Bucket, Manifest};
+
+    /// Reward triple returned by the compiled step.
+    #[derive(Clone, Copy, Debug, Default)]
+    pub struct StepReward {
+        pub q: f64,
+        pub gain: f64,
+        pub penalty: f64,
+    }
+
+    /// Placeholder for the PJRT-backed step; cannot be constructed.
+    pub struct OgaStepExecutor {
+        never: std::convert::Infallible,
+    }
+
+    impl OgaStepExecutor {
+        pub fn new(_manifest: &Manifest, _problem: &Problem) -> Result<Self, String> {
+            Err("ogasched was built without the `xla` feature; the PJRT \
+                 runtime bridge is unavailable (rebuild with --features xla \
+                 and the vendored xla crate)"
+                .into())
+        }
+
+        pub fn bucket(&self) -> &Bucket {
+            match self.never {}
+        }
+
+        pub fn reset(&mut self) {
+            match self.never {}
+        }
+
+        pub fn current_decision(&self, _out: &mut [f64]) {
+            match self.never {}
+        }
+
+        pub fn step(&mut self, _x: &[f64], _eta: f64) -> Result<StepReward, String> {
+            match self.never {}
+        }
+    }
+}
 
 pub use artifact::{default_dir, Bucket, Manifest};
 pub use executor::{OgaStepExecutor, StepReward};
 
 use crate::model::Problem;
 use crate::schedulers::Policy;
+
+/// Error type of the runtime bridge: `anyhow::Error` when the real PJRT
+/// path is compiled in, a plain `String` for the stub.
+#[cfg(feature = "xla")]
+pub type RuntimeError = anyhow::Error;
+#[cfg(not(feature = "xla"))]
+pub type RuntimeError = String;
+
+#[cfg(feature = "xla")]
+fn runtime_err(msg: String) -> RuntimeError {
+    anyhow::Error::msg(msg)
+}
+#[cfg(not(feature = "xla"))]
+fn runtime_err(msg: String) -> RuntimeError {
+    msg
+}
 
 /// OGASCHED with its per-slot compute executed by the AOT-compiled
 /// XLA artifact instead of the native Rust kernels — the production
@@ -26,7 +99,7 @@ pub struct HloOgaSched {
 
 impl HloOgaSched {
     pub fn new(manifest: &Manifest, problem: &Problem, eta0: f64, decay: f64)
-        -> anyhow::Result<Self> {
+        -> Result<Self, RuntimeError> {
         Ok(HloOgaSched {
             exec: OgaStepExecutor::new(manifest, problem)?,
             eta0,
@@ -38,8 +111,8 @@ impl HloOgaSched {
 
     /// Load from the default artifact directory.
     pub fn from_default_dir(problem: &Problem, eta0: f64, decay: f64)
-        -> anyhow::Result<Self> {
-        let manifest = Manifest::load(default_dir()).map_err(anyhow::Error::msg)?;
+        -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(default_dir()).map_err(runtime_err)?;
         Self::new(&manifest, problem, eta0, decay)
     }
 

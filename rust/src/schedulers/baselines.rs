@@ -6,13 +6,17 @@
 //! * DRF — ports ascending by dominant resource share
 //!   s_l = max_k a_l^k / Σ_{r∈R_l} c_r^k get resources first (the
 //!   YARN/Mesos allocation order).
-//! * FAIRNESS —每 instance splits each resource proportionally to the
+//! * FAIRNESS — each instance splits each resource proportionally to the
 //!   arrived ports' demands: y = c_r^k · a_l^k / Σ_{l'} a_{l'}^k, capped
 //!   by a_l^k (bias-free proportional sharing).
 //! * BINPACKING — Kubernetes MostAllocated: jobs take capacity from the
 //!   *most*-utilized instances first (consolidation).
 //! * SPREADING — same scoring with the opposite favor: least-utilized
 //!   instances first (isolation / load-balancing).
+//!
+//! Decisions are written into the edge-major [E, K] tensor (see
+//! `model`); each policy walks edge-id ranges rather than dense rows, so
+//! a slot costs O(|E_x|·K) in the graph's arrived neighborhood.
 
 use crate::model::Problem;
 use crate::schedulers::Policy;
@@ -40,24 +44,18 @@ impl Ledger {
     }
 }
 
-/// Greedy channel-fill in the given instance order: for each arrived
+/// Greedy channel-fill in ascending-instance order: for each arrived
 /// port (already ordered by the policy), take min(a_l^k, remaining
 /// capacity) on every connected channel.
-fn greedy_fill(
-    problem: &Problem,
-    ports: &[usize],
-    instance_order: impl Fn(usize, &Ledger) -> Vec<usize>,
-    ledger: &mut Ledger,
-    y: &mut [f64],
-) {
+fn greedy_fill(problem: &Problem, ports: &[usize], ledger: &mut Ledger, y: &mut [f64]) {
     let k_n = problem.num_resources;
+    let g = &problem.graph;
     for &l in ports {
-        let order = instance_order(l, ledger);
-        for r in order {
-            let base = problem.idx(l, r, 0);
+        for e in g.port_edges(l) {
+            let r = g.edge_instance[e];
+            let base = e * k_n;
             for k in 0..k_n {
-                let got = ledger.take(problem, r, k, problem.demand_at(l, k));
-                y[base + k] = got;
+                y[base + k] = ledger.take(problem, r, k, problem.demand_at(l, k));
             }
         }
     }
@@ -140,13 +138,7 @@ impl Policy for Drf {
                 .partial_cmp(&Drf::dominant_share(problem, b))
                 .unwrap()
         });
-        greedy_fill(
-            problem,
-            &ports,
-            |l, _| problem.graph.ports_to_instances[l].clone(),
-            &mut self.ledger,
-            y,
-        );
+        greedy_fill(problem, &ports, &mut self.ledger, y);
     }
 }
 
@@ -174,27 +166,31 @@ impl Policy for Fairness {
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
         y.fill(0.0);
         let k_n = problem.num_resources;
+        let g = &problem.graph;
         for r in 0..problem.num_instances() {
-            let arrived: Vec<usize> = problem.graph.instances_to_ports[r]
-                .iter()
-                .copied()
-                .filter(|&l| x[l] > 0.0)
-                .collect();
-            if arrived.is_empty() {
+            let edges = g.instance_edge_ids(r);
+            if !edges.iter().any(|&e| x[g.edge_port[e]] > 0.0) {
                 continue;
             }
             for k in 0..k_n {
-                let total_demand: f64 =
-                    arrived.iter().map(|&l| problem.demand_at(l, k)).sum();
+                let total_demand: f64 = edges
+                    .iter()
+                    .filter(|&&e| x[g.edge_port[e]] > 0.0)
+                    .map(|&e| problem.demand_at(g.edge_port[e], k))
+                    .sum();
                 if total_demand <= 0.0 {
                     continue;
                 }
                 let cap = problem.capacity_at(r, k);
-                for &l in &arrived {
+                for &e in edges {
+                    let l = g.edge_port[e];
+                    if x[l] <= 0.0 {
+                        continue;
+                    }
                     let want = problem.demand_at(l, k);
                     // proportional share, never above the channel cap
                     let share = cap * want / total_demand;
-                    y[problem.idx(l, r, k)] = share.min(want);
+                    y[e * k_n + k] = share.min(want);
                 }
             }
         }
@@ -205,11 +201,12 @@ impl Policy for Fairness {
 
 pub struct BinPacking {
     ledger: Ledger,
+    order: Vec<usize>,
 }
 
 impl BinPacking {
     pub fn new() -> Self {
-        BinPacking { ledger: Ledger::default() }
+        BinPacking { ledger: Ledger::default(), order: Vec::new() }
     }
 }
 
@@ -228,26 +225,29 @@ impl Policy for BinPacking {
         y.fill(0.0);
         self.ledger.begin(problem);
         let k_n = problem.num_resources;
+        let g = &problem.graph;
         for l in (0..problem.num_ports()).filter(|&l| x[l] > 0.0) {
-            let channels = &problem.graph.ports_to_instances[l];
-            let mut order = channels.clone();
+            let n_channels = g.port_edges(l).len();
+            self.order.clear();
+            self.order.extend(g.port_edges(l));
             // MostAllocated: highest utilization first (consolidation)
-            order.sort_by(|&a, &b| {
-                utilization(problem, b, &self.ledger)
-                    .partial_cmp(&utilization(problem, a, &self.ledger))
+            let ledger = &self.ledger;
+            self.order.sort_by(|&a, &b| {
+                utilization(problem, g.edge_instance[b], ledger)
+                    .partial_cmp(&utilization(problem, g.edge_instance[a], ledger))
                     .unwrap()
             });
             for k in 0..k_n {
                 // parallelism budget: the job asks for its per-channel max
                 // on about half of its reachable channels
-                let mut budget = problem.demand_at(l, k) * budget_channels(channels.len());
-                for &r in &order {
+                let mut budget = problem.demand_at(l, k) * budget_channels(n_channels);
+                for &e in &self.order {
                     if budget <= 0.0 {
                         break;
                     }
                     let want = problem.demand_at(l, k).min(budget);
-                    let got = self.ledger.take(problem, r, k, want);
-                    y[problem.idx(l, r, k)] = got;
+                    let got = self.ledger.take(problem, g.edge_instance[e], k, want);
+                    y[e * k_n + k] = got;
                     budget -= got;
                 }
             }
@@ -257,11 +257,12 @@ impl Policy for BinPacking {
 
 pub struct Spreading {
     ledger: Ledger,
+    order: Vec<usize>,
 }
 
 impl Spreading {
     pub fn new() -> Self {
-        Spreading { ledger: Ledger::default() }
+        Spreading { ledger: Ledger::default(), order: Vec::new() }
     }
 }
 
@@ -280,24 +281,27 @@ impl Policy for Spreading {
         y.fill(0.0);
         self.ledger.begin(problem);
         let k_n = problem.num_resources;
+        let g = &problem.graph;
         for l in (0..problem.num_ports()).filter(|&l| x[l] > 0.0) {
-            let channels = &problem.graph.ports_to_instances[l];
-            let mut order = channels.clone();
+            let n_channels = g.port_edges(l).len();
+            self.order.clear();
+            self.order.extend(g.port_edges(l));
             // LeastAllocated: lowest utilization first (isolation)
-            order.sort_by(|&a, &b| {
-                utilization(problem, a, &self.ledger)
-                    .partial_cmp(&utilization(problem, b, &self.ledger))
+            let ledger = &self.ledger;
+            self.order.sort_by(|&a, &b| {
+                utilization(problem, g.edge_instance[a], ledger)
+                    .partial_cmp(&utilization(problem, g.edge_instance[b], ledger))
                     .unwrap()
             });
             for k in 0..k_n {
                 // same budget as BINPACKING, but spread evenly over every
                 // reachable channel instead of packed onto few
-                let budget = problem.demand_at(l, k) * budget_channels(channels.len());
-                let per_channel = budget / channels.len() as f64;
-                for &r in &order {
+                let budget = problem.demand_at(l, k) * budget_channels(n_channels);
+                let per_channel = budget / n_channels.max(1) as f64;
+                for &e in &self.order {
                     let want = per_channel.min(problem.demand_at(l, k));
-                    let got = self.ledger.take(problem, r, k, want);
-                    y[problem.idx(l, r, k)] = got;
+                    let got = self.ledger.take(problem, g.edge_instance[e], k, want);
+                    y[e * k_n + k] = got;
                 }
             }
         }
@@ -328,12 +332,14 @@ impl Policy for RandomAlloc {
         y.fill(0.0);
         self.ledger.begin(problem);
         let k_n = problem.num_resources;
+        let g = &problem.graph;
         let mut ports: Vec<usize> =
             (0..problem.num_ports()).filter(|&l| x[l] > 0.0).collect();
         self.rng.shuffle(&mut ports);
         for &l in &ports {
-            for &r in &problem.graph.ports_to_instances[l] {
-                let base = problem.idx(l, r, 0);
+            for e in g.port_edges(l) {
+                let r = g.edge_instance[e];
+                let base = e * k_n;
                 for k in 0..k_n {
                     let frac = self.rng.f64();
                     let want = problem.demand_at(l, k) * frac;
@@ -405,10 +411,10 @@ mod tests {
         for pol in policies.iter_mut() {
             pol.decide(&p, &x, &mut y);
             for l in 1..p.num_ports() {
-                for &r in &p.graph.ports_to_instances[l] {
+                for e in p.graph.port_edges(l) {
                     for k in 0..p.num_resources {
                         assert_eq!(
-                            y[p.idx(l, r, k)],
+                            y[p.edge_idx(e, k)],
                             0.0,
                             "{} allocated to absent port {l}",
                             pol.name()
@@ -432,12 +438,10 @@ mod tests {
         // each policy actually uses.
         let used_channels = |y: &[f64]| -> usize {
             let mut n = 0;
-            for l in 0..p.num_ports() {
-                for &r in &p.graph.ports_to_instances[l] {
-                    let base = p.idx(l, r, 0);
-                    if (0..p.num_resources).any(|k| y[base + k] > 1e-9) {
-                        n += 1;
-                    }
+            for e in 0..p.num_edges() {
+                let base = e * p.num_resources;
+                if (0..p.num_resources).any(|k| y[base + k] > 1e-9) {
+                    n += 1;
                 }
             }
             n

@@ -89,16 +89,17 @@ impl GangOga {
     }
 
     /// Components of job l with non-trivial allocation in the expanded
-    /// decision `y_exp`.
+    /// decision `y_exp`.  Under the edge-major layout a component port's
+    /// coordinates are one contiguous slice.
     fn active_components(&self, l: usize, y_exp: &[f64]) -> usize {
         let (start, end) = self.ranges[l];
         let k_n = self.expanded.num_resources;
+        let g = &self.expanded.graph;
         (start..end)
             .filter(|&port| {
-                self.expanded.graph.ports_to_instances[port].iter().any(|&r| {
-                    let base = self.expanded.idx(port, r, 0);
-                    (0..k_n).any(|k| y_exp[base + k] > ACTIVE_EPS)
-                })
+                let lo = g.port_ptr[port] * k_n;
+                let hi = g.port_ptr[port + 1] * k_n;
+                y_exp[lo..hi].iter().any(|&v| v > ACTIVE_EPS)
             })
             .count()
     }
@@ -126,11 +127,17 @@ impl Policy for GangOga {
             if self.active_components(l, &y_exp) < spec.min_tasks {
                 continue; // job not launched this slot
             }
+            // every component port clones l's edge list, so the expanded
+            // and original CSR rows walk the same instances in lockstep
             let (start, end) = self.ranges[l];
+            let olo = problem.graph.port_ptr[l];
+            let deg = problem.graph.port_ptr[l + 1] - olo;
             for port in start..end {
-                for &r in &problem.graph.ports_to_instances[l] {
-                    let src = self.expanded.idx(port, r, 0);
-                    let dst = problem.idx(l, r, 0);
+                let elo = self.expanded.graph.port_ptr[port];
+                debug_assert_eq!(self.expanded.graph.port_ptr[port + 1] - elo, deg);
+                for j in 0..deg {
+                    let src = (elo + j) * k_n;
+                    let dst = (olo + j) * k_n;
                     for k in 0..k_n {
                         y[dst + k] += y_exp[src + k];
                     }
@@ -187,7 +194,12 @@ mod tests {
             // capacity per (r, k) must hold after component folding
             for r in 0..p.num_instances() {
                 for k in 0..p.num_resources {
-                    let used: f64 = (0..p.num_ports()).map(|l| y[p.idx(l, r, k)]).sum();
+                    let used: f64 = p
+                        .graph
+                        .instance_edge_ids(r)
+                        .iter()
+                        .map(|&e| y[p.edge_idx(e, k)])
+                        .sum();
                     assert!(used <= p.capacity_at(r, k) + 1e-6);
                 }
             }

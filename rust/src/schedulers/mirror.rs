@@ -21,7 +21,7 @@
 //! at a small ε > 0 on every edge instead of the OGA zero start.
 
 use crate::model::Problem;
-use crate::oga::projection::project;
+use crate::oga::projection::{project, project_instances};
 use crate::schedulers::Policy;
 
 /// Seed allocation (fraction of the per-channel cap) so multiplicative
@@ -32,13 +32,16 @@ const SEED_FRACTION: f64 = 1e-3;
 const MAX_EXPONENT: f64 = 30.0;
 
 pub struct OgaMirror {
-    /// Current decision y(t), dense [L, R, K].
+    /// Current decision y(t), edge-major [E, K].
     y: Vec<f64>,
     eta0: f64,
     decay: f64,
     workers: usize,
     t: usize,
     quota: Vec<f64>,
+    /// Dirty-instance tracking (same trick as `OgaState::step`).
+    dirty: Vec<bool>,
+    dirty_list: Vec<usize>,
 }
 
 impl OgaMirror {
@@ -50,39 +53,47 @@ impl OgaMirror {
             workers,
             t: 0,
             quota: vec![0.0; problem.num_resources],
+            dirty: vec![false; problem.num_instances()],
+            dirty_list: Vec::new(),
         };
         pol.seed(problem);
         pol
     }
 
     fn seed(&mut self, problem: &Problem) {
+        let k_n = problem.num_resources;
         self.y = vec![0.0; problem.decision_len()];
-        for l in 0..problem.num_ports() {
-            for &r in &problem.graph.ports_to_instances[l] {
-                let base = problem.idx(l, r, 0);
-                for k in 0..problem.num_resources {
-                    self.y[base + k] = SEED_FRACTION * problem.demand_at(l, k);
-                }
+        for e in 0..problem.num_edges() {
+            let l = problem.graph.edge_port[e];
+            for k in 0..k_n {
+                self.y[e * k_n + k] = SEED_FRACTION * problem.demand_at(l, k);
             }
         }
+        // the seed touches every edge, so this one projection is global
         project(problem, &mut self.y, self.workers);
         self.t = 0;
     }
 
     /// One mirror step: multiplicative update on arrived ports' lanes
-    /// (Eq. 30 gradient), then the Alg. 1 projection.
+    /// (Eq. 30 gradient), then the Alg. 1 projection of the perturbed
+    /// (dirty) instances only.
     fn step(&mut self, problem: &Problem, x: &[f64]) {
         let k_n = problem.num_resources;
+        let g = &problem.graph;
         let eta = self.eta0 * self.decay.powi(self.t as i32);
+        for &r in &self.dirty_list {
+            self.dirty[r] = false;
+        }
+        self.dirty_list.clear();
         for l in 0..problem.num_ports() {
             let x_l = x[l];
             if x_l == 0.0 {
                 continue;
             }
-            let instances = &problem.graph.ports_to_instances[l];
+            let edges = g.port_edges(l);
             self.quota.fill(0.0);
-            for &r in instances {
-                let base = problem.idx(l, r, 0);
+            for e in edges.clone() {
+                let base = e * k_n;
                 for k in 0..k_n {
                     self.quota[k] += self.y[base + k];
                 }
@@ -96,8 +107,13 @@ impl OgaMirror {
                     kstar = k;
                 }
             }
-            for &r in instances {
-                let base = problem.idx(l, r, 0);
+            for e in edges {
+                let r = g.edge_instance[e];
+                if !self.dirty[r] {
+                    self.dirty[r] = true;
+                    self.dirty_list.push(r);
+                }
+                let base = e * k_n;
                 let rk = r * k_n;
                 for k in 0..k_n {
                     let yv = self.y[base + k];
@@ -108,7 +124,7 @@ impl OgaMirror {
                 }
             }
         }
-        project(problem, &mut self.y, self.workers);
+        project_instances(problem, &mut self.y, &self.dirty_list, self.workers);
         self.t += 1;
     }
 }

@@ -18,8 +18,9 @@ pub use oga_sched::OgaSched;
 
 /// A per-slot scheduling policy.
 ///
-/// `decide` fills the dense decision tensor `y` [L, R, K] for the current
-/// slot, given the arrival vector `x` [L].  The engine then scores
+/// `decide` fills the edge-major decision tensor `y` [E, K] (see
+/// `model` for the CSR layout) for the current slot, given the arrival
+/// vector `x` [L].  The engine then scores
 /// q(x, y) (Eq. 8) — so *reactive* heuristics (the baselines) may use
 /// x(t) to place arrived jobs, while *learning* policies (OGASCHED)
 /// return the reservation y(t) they committed before seeing x(t) and use

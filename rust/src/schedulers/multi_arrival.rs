@@ -95,15 +95,21 @@ impl Policy for MultiArrivalOga {
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
         expand_arrivals(x, &self.copies, &mut self.x_buf);
         self.inner.decide(&self.expanded, &self.x_buf, &mut self.y_buf);
-        // fold clone planes back into the original [L, R, K] tensor
+        // fold clone planes back into the original edge-major tensor —
+        // every clone replicates l's edge list, so the CSR rows of clone
+        // and original walk the same instances in lockstep
         y.fill(0.0);
         let k_n = problem.num_resources;
         let mut lx = 0;
         for (l, &j_l) in self.copies.iter().enumerate() {
+            let olo = problem.graph.port_ptr[l];
+            let deg = problem.graph.port_ptr[l + 1] - olo;
             for _ in 0..j_l.max(1) {
-                for &r in &problem.graph.ports_to_instances[l] {
-                    let src = self.expanded.idx(lx, r, 0);
-                    let dst = problem.idx(l, r, 0);
+                let elo = self.expanded.graph.port_ptr[lx];
+                debug_assert_eq!(self.expanded.graph.port_ptr[lx + 1] - elo, deg);
+                for j in 0..deg {
+                    let src = (elo + j) * k_n;
+                    let dst = (olo + j) * k_n;
                     for k in 0..k_n {
                         y[dst + k] += self.y_buf[src + k];
                     }
@@ -163,8 +169,12 @@ mod tests {
             // per-channel caps are per *job copy*, so only check capacity
             for r in 0..p.num_instances() {
                 for k in 0..k_n {
-                    let used: f64 =
-                        (0..p.num_ports()).map(|l| y[p.idx(l, r, k)]).sum();
+                    let used: f64 = p
+                        .graph
+                        .instance_edge_ids(r)
+                        .iter()
+                        .map(|&e| y[p.edge_idx(e, k)])
+                        .sum();
                     assert!(
                         used <= p.capacity_at(r, k) + 1e-6,
                         "capacity violated at ({r},{k})"

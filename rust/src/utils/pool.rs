@@ -1,11 +1,25 @@
-//! Scoped thread-pool helpers (no rayon in the offline image).
+//! Persistent worker pool (no rayon in the offline image).
 //!
-//! Algorithm 1's projection is "for each (r, k) do in parallel"; these
-//! helpers provide that parallelism with `std::thread::scope`.  Work is
-//! chunked statically — projection tasks per (r, k) are near-uniform, so
-//! static chunking beats a work-stealing queue here and keeps the hot
-//! loop allocation-free apart from thread spawn (amortized by chunk
-//! size; see benches/ablation_projection.rs).
+//! Algorithm 1's projection is "for each (r, k) do in parallel".  The
+//! seed provided that parallelism with `std::thread::scope`, which pays
+//! ~100µs of spawn/join per worker per call — more than the projection
+//! itself on mid-sized problems (measured in
+//! benches/ablation_projection.rs, recorded in EXPERIMENTS.md §Perf).
+//! This module keeps one process-wide pool of parked workers instead:
+//! a call publishes a job (type-erased closure + atomic chunk cursor),
+//! wakes the workers, participates in the work itself, and blocks until
+//! every index has executed.  Steady-state dispatch cost is one mutex
+//! round-trip plus condvar wakes — single-digit microseconds.
+//!
+//! Work is chunked dynamically (atomic `fetch_add` on a shared cursor in
+//! chunks of ~n/4·workers), which keeps near-uniform projection tasks
+//! balanced without a work-stealing deque.  Concurrent submitters (e.g.
+//! parallel test threads) do not queue: whoever arrives second runs its
+//! loop inline on its own thread, which is always correct and avoids
+//! nested-job deadlocks by construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use for `n_tasks` independent tasks.
 pub fn default_workers(n_tasks: usize) -> usize {
@@ -13,7 +27,126 @@ pub fn default_workers(n_tasks: usize) -> usize {
     cores.min(n_tasks).max(1)
 }
 
-/// Run `f(i)` for every `i in 0..n`, in parallel over `workers` threads.
+/// One published parallel-for job.
+struct Job {
+    /// Type-erased pointer to the caller's closure.  Only dereferenced
+    /// while the submitting thread is blocked inside `parallel_for`, so
+    /// the pointee outlives every use (raw pointers carry no lifetime).
+    f: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed index (claimed in `chunk`-sized strides).
+    next: AtomicUsize,
+    /// Indices fully executed; the job is done when this reaches `n`.
+    completed: AtomicUsize,
+    /// Pool threads that joined; capped at `max_entrants` so a caller's
+    /// `workers` budget is honored even when the pool is larger.
+    entrants: AtomicUsize,
+    n: usize,
+    chunk: usize,
+    max_entrants: usize,
+}
+
+// SAFETY: `f` points at a `Sync` closure owned by the submitting thread,
+// which blocks until `completed == n`; workers never touch `f` after
+// their final chunk completes.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Slot {
+    /// Bumped once per published job so parked workers can tell a new
+    /// job from the one they already ran.
+    seq: u64,
+    job: Option<Arc<Job>>,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers park here waiting for `seq` to move.
+    work_cv: Condvar,
+    /// The submitter parks here waiting for `completed == n`.
+    done_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes submissions; `try_lock` losers run inline instead of
+    /// queueing (see module docs).
+    submit: Mutex<()>,
+    /// Parked worker threads (detached; they live for the process).
+    pool_threads: usize,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut last_seq = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.seq != last_seq {
+                    last_seq = slot.seq;
+                    if let Some(job) = slot.job.clone() {
+                        break job;
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        run_job(&shared, &job);
+    }
+}
+
+/// Claim and execute chunks of `job` until its index space is exhausted.
+/// Whichever thread retires the final index wakes the submitter.
+fn run_job(shared: &Shared, job: &Job) {
+    if job.entrants.fetch_add(1, Ordering::Relaxed) >= job.max_entrants {
+        return;
+    }
+    loop {
+        let lo = job.next.fetch_add(job.chunk, Ordering::Relaxed);
+        if lo >= job.n {
+            break;
+        }
+        // SAFETY: we hold an unexecuted chunk, so `completed < n` and the
+        // submitter is still blocked in `parallel_for` — the closure is
+        // alive.  A late-waking worker on a finished job always sees
+        // `lo >= n` above and never reaches this deref.
+        let f = unsafe { &*job.f };
+        let hi = (lo + job.chunk).min(job.n);
+        for i in lo..hi {
+            f(i);
+        }
+        let done = job.completed.fetch_add(hi - lo, Ordering::AcqRel) + (hi - lo);
+        if done == job.n {
+            // Lock before notifying so the wake cannot slip between the
+            // submitter's predicate check and its wait.
+            let _slot = shared.slot.lock().unwrap();
+            shared.done_cv.notify_all();
+            break;
+        }
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { seq: 0, job: None }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        // The submitter participates, so spawn cores − 1 parked workers.
+        let pool_threads = default_workers(usize::MAX).saturating_sub(1);
+        for i in 0..pool_threads {
+            let shared = Arc::clone(&shared);
+            let _ = std::thread::Builder::new()
+                .name(format!("ogasched-pool-{i}"))
+                .spawn(move || worker_loop(shared));
+        }
+        Pool { shared, submit: Mutex::new(()), pool_threads }
+    })
+}
+
+/// Run `f(i)` for every `i in 0..n`, in parallel over up to `workers`
+/// threads of the persistent pool (the submitting thread counts as one).
 /// `f` must be `Sync` (interior mutability / disjoint writes are the
 /// caller's responsibility — see `for_each_mut_chunks` for slice output).
 pub fn parallel_for<F>(n: usize, workers: usize, f: F)
@@ -24,28 +157,46 @@ where
         return;
     }
     let workers = workers.min(n).max(1);
-    if workers == 1 {
+    let pool = pool();
+    if workers == 1 || pool.pool_threads == 0 {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let f = &f;
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            if lo >= hi {
-                continue;
-            }
-            scope.spawn(move || {
-                for i in lo..hi {
-                    f(i);
-                }
-            });
+    // Second concurrent submitter (or a nested call from inside a job)
+    // runs inline rather than waiting for the pool.
+    let Ok(_submit) = pool.submit.try_lock() else {
+        for i in 0..n {
+            f(i);
         }
+        return;
+    };
+    let f_ref: &(dyn Fn(usize) + Sync) = &f;
+    let job = Arc::new(Job {
+        f: f_ref as *const (dyn Fn(usize) + Sync),
+        next: AtomicUsize::new(0),
+        completed: AtomicUsize::new(0),
+        entrants: AtomicUsize::new(0),
+        n,
+        chunk: n.div_ceil(workers * 4).max(1),
+        // total entrants: the submitting thread plus pool threads
+        max_entrants: workers,
     });
+    {
+        let mut slot = pool.shared.slot.lock().unwrap();
+        slot.seq += 1;
+        slot.job = Some(Arc::clone(&job));
+        pool.shared.work_cv.notify_all();
+    }
+    // The submitter works too — on small jobs it often finishes the
+    // whole index space before a worker even wakes.
+    run_job(&pool.shared, &job);
+    let mut slot = pool.shared.slot.lock().unwrap();
+    while job.completed.load(Ordering::Acquire) < job.n {
+        slot = pool.shared.done_cv.wait(slot).unwrap();
+    }
+    slot.job = None;
 }
 
 /// Parallel map over `0..n` producing a Vec<T> in index order.
@@ -78,21 +229,15 @@ where
     }
     let chunks = chunks.min(n).max(1);
     let chunk = n.div_ceil(chunks);
-    std::thread::scope(|scope| {
-        let mut rest = data;
-        let mut off = 0;
-        let mut idx = 0;
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (piece, tail) = rest.split_at_mut(take);
-            let f = &f;
-            let o = off;
-            let i = idx;
-            scope.spawn(move || f(i, o, piece));
-            rest = tail;
-            off += take;
-            idx += 1;
-        }
+    let pieces = n.div_ceil(chunk);
+    let base = SyncSlice::new(data);
+    parallel_for(pieces, pieces, |i| {
+        let lo = i * chunk;
+        let hi = (lo + chunk).min(n);
+        // SAFETY: pieces are disjoint ranges of the original slice, and
+        // each piece index runs exactly once.
+        let piece = unsafe { base.slice_mut(lo, hi) };
+        f(i, lo, piece);
     });
 }
 
@@ -117,6 +262,13 @@ impl<T> SyncSlice<T> {
         debug_assert!(i < self.len);
         unsafe { self.ptr.add(i).write(value) };
     }
+
+    /// SAFETY: caller guarantees `lo <= hi <= len` and that ranges
+    /// handed out to concurrent users are disjoint.
+    unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo) }
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +283,40 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn repeated_jobs_reuse_the_pool() {
+        // the pool must stay consistent across many submissions
+        for round in 0..50 {
+            let hits = AtomicUsize::new(0);
+            parallel_for(97 + round, 4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 97 + round);
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_fall_back_inline() {
+        // two threads submitting at once: one owns the pool, the other
+        // must run inline — both complete all indices
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                parallel_for(10_000, 8, |_| {
+                    a.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+            s.spawn(|| {
+                parallel_for(10_000, 8, |_| {
+                    b.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 10_000);
+        assert_eq!(b.load(Ordering::Relaxed), 10_000);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Layout parity: the edge-major CSR hot path must agree coordinate-wise
+//! with the dense [L, R, K] reference implementation (`oga::dense_ref`,
+//! the seed's layout) on random bipartite graphs — including ports with
+//! zero instances, isolated instances, and fully-connected graphs.
+//!
+//! Each property draws a random problem (random edge set, demands,
+//! capacities, utility families, betas), runs both layouts, and compares
+//! through the edge maps.  This is the correctness seam of the sparse
+//! refactor: gradient, fused ascent, projection, the dirty-tracking full
+//! step, and the slot reward are each pinned to the dense oracle.
+
+use ogasched::graph::Bipartite;
+use ogasched::model::Problem;
+use ogasched::oga::dense_ref::{
+    self, dense_idx, dense_len, fused_ascent_dense, gradient_dense, project_dense_serial,
+    slot_reward_dense, DenseOgaState,
+};
+use ogasched::oga::gradient::{gradient, GradScratch};
+use ogasched::oga::projection::project;
+use ogasched::oga::utilities::UtilityKind;
+use ogasched::oga::{LearningRate, OgaState};
+use ogasched::reward::slot_reward;
+use ogasched::utils::prop::{check, ensure, Size};
+use ogasched::utils::rng::Rng;
+
+/// Random problem over a random bipartite graph.  With probability ~0.15
+/// the graph is complete; otherwise edges are Bernoulli so some ports
+/// and instances may have zero edges.
+fn random_problem(rng: &mut Rng, size: Size) -> Problem {
+    let l_n = rng.range(1, size.dim(8, 1));
+    let r_n = rng.range(1, size.dim(20, 1));
+    let k_n = rng.range(1, size.dim(5, 1));
+    let graph = if rng.bernoulli(0.15) {
+        Bipartite::full(l_n, r_n)
+    } else {
+        let p = rng.uniform(0.05, 0.8);
+        let mut edges = Vec::new();
+        for l in 0..l_n {
+            for r in 0..r_n {
+                if rng.bernoulli(p) {
+                    edges.push((l, r));
+                }
+            }
+        }
+        // deliberately allow stranded ports/instances (zero-degree)
+        Bipartite::from_edges(l_n, r_n, &edges)
+    };
+    let kinds = [
+        UtilityKind::Linear,
+        UtilityKind::Log,
+        UtilityKind::Poly,
+        UtilityKind::Reciprocal,
+    ];
+    Problem {
+        graph,
+        num_resources: k_n,
+        demand: (0..l_n * k_n).map(|_| rng.uniform(0.2, 4.0)).collect(),
+        capacity: (0..r_n * k_n).map(|_| rng.uniform(0.5, 8.0)).collect(),
+        alpha: (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        kind: (0..r_n * k_n).map(|_| kinds[rng.below(kinds.len())]).collect(),
+        beta: (0..k_n).map(|_| rng.uniform(0.0, 1.0)).collect(),
+    }
+}
+
+fn random_arrivals(rng: &mut Rng, p: &Problem) -> Vec<f64> {
+    (0..p.num_ports())
+        .map(|_| {
+            if rng.bernoulli(0.6) {
+                // include multi-arrival counts (Sec. 3.4)
+                rng.range(1, 3) as f64
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+fn random_decision(rng: &mut Rng, p: &Problem, lo: f64, hi: f64) -> Vec<f64> {
+    (0..p.decision_len()).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+/// Compare a CSR tensor against a dense tensor through the edge maps;
+/// also require the dense off-edge coordinates to equal `off_edge`.
+fn compare_layouts(
+    p: &Problem,
+    csr: &[f64],
+    dense: &[f64],
+    off_edge: Option<f64>,
+    tol: f64,
+    what: &str,
+) -> Result<(), String> {
+    let k_n = p.num_resources;
+    for e in 0..p.num_edges() {
+        let l = p.graph.edge_port[e];
+        let r = p.graph.edge_instance[e];
+        for k in 0..k_n {
+            let a = csr[e * k_n + k];
+            let b = dense[dense_idx(p, l, r, k)];
+            ensure((a - b).abs() <= tol, || {
+                format!("{what}: csr={a} dense={b} at (l={l},r={r},k={k})")
+            })?;
+        }
+    }
+    if let Some(want) = off_edge {
+        for l in 0..p.num_ports() {
+            for r in 0..p.num_instances() {
+                if p.graph.has_edge(l, r) {
+                    continue;
+                }
+                for k in 0..k_n {
+                    let v = dense[dense_idx(p, l, r, k)];
+                    ensure((v - want).abs() <= tol, || {
+                        format!("{what}: dense off-edge ({l},{r},{k}) = {v}, want {want}")
+                    })?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn gradient_matches_dense_reference() {
+    check("parity-gradient", 120, |rng, size| {
+        let p = random_problem(rng, size);
+        let x = random_arrivals(rng, &p);
+        let y = random_decision(rng, &p, 0.0, 3.0);
+        let y_dense = dense_ref::to_dense(&p, &y);
+        let mut g_csr = vec![1.0; p.decision_len()];
+        gradient(&p, &x, &y, &mut g_csr, &mut GradScratch::default());
+        let mut g_dense = vec![1.0; dense_len(&p)];
+        gradient_dense(&p, &x, &y_dense, &mut g_dense);
+        compare_layouts(&p, &g_csr, &g_dense, Some(0.0), 1e-12, "gradient")
+    });
+}
+
+#[test]
+fn fused_ascent_matches_dense_reference() {
+    check("parity-fused-ascent", 120, |rng, size| {
+        let p = random_problem(rng, size);
+        let x = random_arrivals(rng, &p);
+        let eta = rng.uniform(0.01, 5.0);
+        let y0 = random_decision(rng, &p, 0.0, 2.0);
+        let mut y_dense = dense_ref::to_dense(&p, &y0);
+        fused_ascent_dense(&p, &x, eta, &mut y_dense);
+        let mut state = OgaState::new(&p, LearningRate::Constant(eta), 0);
+        state.y.copy_from_slice(&y0);
+        state.fused_ascent(&p, &x, eta);
+        compare_layouts(&p, &state.y, &y_dense, Some(0.0), 1e-12, "fused ascent")
+    });
+}
+
+#[test]
+fn projection_matches_dense_reference() {
+    check("parity-projection", 120, |rng, size| {
+        let p = random_problem(rng, size);
+        // negatives + above-cap values exercise every projection regime
+        let z = random_decision(rng, &p, -2.0, 8.0);
+        let mut z_csr = z.clone();
+        project(&p, &mut z_csr, 0);
+        let mut z_dense = dense_ref::to_dense(&p, &z);
+        // plant garbage off-edge to prove the dense path re-zeroes it
+        // while the CSR path has nothing to re-zero
+        for l in 0..p.num_ports() {
+            for r in 0..p.num_instances() {
+                if !p.graph.has_edge(l, r) {
+                    for k in 0..p.num_resources {
+                        z_dense[dense_idx(&p, l, r, k)] = rng.uniform(-3.0, 3.0);
+                    }
+                }
+            }
+        }
+        project_dense_serial(&p, &mut z_dense);
+        compare_layouts(&p, &z_csr, &z_dense, Some(0.0), 1e-9, "projection")?;
+        p.check_feasible(&z_csr, 1e-7).map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn slot_reward_matches_dense_reference() {
+    check("parity-reward", 120, |rng, size| {
+        let p = random_problem(rng, size);
+        let x = random_arrivals(rng, &p);
+        let y = random_decision(rng, &p, 0.0, 2.0);
+        let y_dense = dense_ref::to_dense(&p, &y);
+        let a = slot_reward(&p, &x, &y);
+        let b = slot_reward_dense(&p, &x, &y_dense);
+        ensure((a.q - b.q).abs() < 1e-9, || format!("q: {} vs {}", a.q, b.q))?;
+        ensure((a.gain - b.gain).abs() < 1e-9, || {
+            format!("gain: {} vs {}", a.gain, b.gain)
+        })?;
+        ensure((a.penalty - b.penalty).abs() < 1e-9, || {
+            format!("penalty: {} vs {}", a.penalty, b.penalty)
+        })
+    });
+}
+
+#[test]
+fn full_step_trajectory_matches_dense_reference() {
+    // The end-to-end check: dirty-instance tracking + subset projection
+    // over several slots must equal the dense full-projection step.
+    check("parity-step-trajectory", 40, |rng, size| {
+        let p = random_problem(rng, size);
+        let eta = rng.uniform(0.05, 2.0);
+        let mut csr = OgaState::new(&p, LearningRate::Constant(eta), 0);
+        let mut dense = DenseOgaState::new(&p, 1);
+        for t in 0..6 {
+            let x = random_arrivals(rng, &p);
+            csr.step(&p, &x);
+            dense.step(&p, &x, eta);
+            compare_layouts(
+                &p,
+                &csr.y,
+                &dense.y,
+                Some(0.0),
+                1e-9,
+                &format!("step t={t}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_graph_parity_smoke() {
+    // fully-connected graph: CSR edge ids coincide with dense (l·R + r)
+    // ordering, so the tensors must be bit-identical after projection
+    let mut rng = Rng::new(99);
+    let p = Problem {
+        graph: Bipartite::full(5, 7),
+        num_resources: 3,
+        demand: (0..5 * 3).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        capacity: (0..7 * 3).map(|_| rng.uniform(1.0, 4.0)).collect(),
+        alpha: vec![1.0; 21],
+        kind: vec![UtilityKind::Linear; 21],
+        beta: vec![0.3, 0.4, 0.5],
+    };
+    assert_eq!(p.decision_len(), dense_len(&p));
+    let z: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(-1.0, 5.0)).collect();
+    let mut z_csr = z.clone();
+    let mut z_dense = z;
+    project(&p, &mut z_csr, 0);
+    project_dense_serial(&p, &mut z_dense);
+    assert_eq!(z_csr, z_dense);
+}
+
+#[test]
+fn zero_degree_port_contributes_nothing() {
+    // a port with no instances has no coordinates, no gradient, and no
+    // reward — and must not break any stage
+    let graph = Bipartite::from_edges(3, 2, &[(0, 0), (2, 1)]); // port 1 stranded
+    let p = Problem {
+        graph,
+        num_resources: 2,
+        demand: vec![1.0; 6],
+        capacity: vec![2.0; 4],
+        alpha: vec![1.0; 4],
+        kind: vec![UtilityKind::Linear; 4],
+        beta: vec![0.4, 0.6],
+    };
+    assert_eq!(p.decision_len(), 2 * 2);
+    let x = vec![1.0, 1.0, 1.0];
+    let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);
+    for _ in 0..3 {
+        state.step(&p, &x);
+        p.check_feasible(&state.y, 1e-9).unwrap();
+    }
+    let r = slot_reward(&p, &x, &state.y);
+    let r_dense = slot_reward_dense(&p, &x, &dense_ref::to_dense(&p, &state.y));
+    assert!((r.q - r_dense.q).abs() < 1e-12);
+}

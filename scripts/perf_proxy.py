@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Layout-speedup proxy for the Rust hot path (EXPERIMENTS.md §Perf).
+
+The offline image this repo grows in ships no Rust toolchain, so the
+`benches/hot_path.rs` numbers cannot be regenerated here.  This script
+mirrors the two per-slot OGA step implementations *structurally 1:1*
+(same loops, same operation counts, same channel projector) in pure
+Python:
+
+  * dense  — the seed's [L, R, K] layout: fused ascent over arrived
+    ports, then a full projection that re-zeroes every off-edge
+    coordinate of every instance (O(L*R*K)) and projects all R*K
+    channels;
+  * csr    — the edge-major [E, K] layout with dirty-instance tracking:
+    fused ascent over arrived edge ranges, then projection of only the
+    instances adjacent to arrived ports, with no off-edge coordinates to
+    re-zero.
+
+Because both sides pay identical interpreter overhead per primitive
+operation, the dense/csr *ratio* approximates the Rust ratio of the same
+loops (it excludes the seed's additional ~100us/worker thread::scope
+spawn cost on the dense side, so it is a conservative lower bound for
+the parallel path).  Regenerate the real numbers with
+`cargo bench --bench hot_path` -> BENCH_hot_path.json once a toolchain
+is available.
+"""
+
+import json
+import random
+import time
+
+
+def make_problem(L, R, K, density, seed):
+    rng = random.Random(seed)
+    ports_to_instances = [[] for _ in range(L)]
+    instances_to_ports = [[] for _ in range(R)]
+    p = min(1.0, density / L)
+    for r in range(R):
+        any_edge = False
+        for l in range(L):
+            if rng.random() < p:
+                ports_to_instances[l].append(r)
+                instances_to_ports[r].append(l)
+                any_edge = True
+        if not any_edge:
+            l = rng.randrange(L)
+            ports_to_instances[l].append(r)
+            instances_to_ports[r].append(l)
+    for l in range(L):
+        if not ports_to_instances[l]:
+            r = rng.randrange(R)
+            ports_to_instances[l].append(r)
+            instances_to_ports[r].append(l)
+            instances_to_ports[r].sort()
+    # edge-major CSR index (port-major ids)
+    port_ptr = [0]
+    edge_instance = []
+    edge_port = []
+    for l in range(L):
+        for r in sorted(ports_to_instances[l]):
+            edge_instance.append(r)
+            edge_port.append(l)
+        port_ptr.append(len(edge_instance))
+    instance_edges = [[] for _ in range(R)]
+    for e, r in enumerate(edge_instance):
+        instance_edges[r].append(e)
+    has_edge = [[False] * R for _ in range(L)]
+    for l in range(L):
+        for r in ports_to_instances[l]:
+            has_edge[l][r] = True
+    demand = [[rng.uniform(0.5, 2.0) for _ in range(K)] for _ in range(L)]
+    capacity = [[rng.uniform(2.0, 6.0) for _ in range(K)] for _ in range(R)]
+    alpha = [[rng.uniform(1.0, 1.5) for _ in range(K)] for _ in range(R)]
+    beta = [rng.uniform(0.3, 0.5) for _ in range(K)]
+    return dict(L=L, R=R, K=K, ports_to_instances=ports_to_instances,
+                instances_to_ports=instances_to_ports, port_ptr=port_ptr,
+                edge_instance=edge_instance, edge_port=edge_port,
+                instance_edges=instance_edges, has_edge=has_edge,
+                demand=demand, capacity=capacity, alpha=alpha, beta=beta,
+                E=len(edge_port))
+
+
+def project_channel(vals, caps, capacity):
+    """Shared O(n log n) event-sweep channel projector (both layouts)."""
+    used = sum(min(max(z, 0.0), a) for z, a in zip(vals, caps))
+    if used <= capacity:
+        return [min(max(z, 0.0), a) for z, a in zip(vals, caps)]
+    events = []
+    for i, (z, a) in enumerate(zip(vals, caps)):
+        if z > 0.0:
+            events.append((z, 0, i))
+        if z - a > 0.0:
+            events.append((z - a, 1, i))
+    events.sort(key=lambda t: -t[0])
+    m = s = c = 0.0
+    n_ev = len(events)
+    idx = 0
+    tau = 0.0
+    while idx < n_ev:
+        upper = events[idx][0]
+        while idx < n_ev and events[idx][0] == upper:
+            _, kind, i = events[idx]
+            if kind == 0:
+                m += 1.0
+                s += vals[i]
+            else:
+                m -= 1.0
+                s -= vals[i]
+                c += caps[i]
+            idx += 1
+        lower = events[idx][0] if idx < n_ev else 0.0
+        g_low = s - m * lower + c
+        # final segment crosses unconditionally (rounding guard; mirrors
+        # rust/src/oga/projection.rs)
+        if g_low >= capacity or idx >= n_ev:
+            tau = (s + c - capacity) / m if m > 0.0 else lower
+            tau = min(max(tau, lower), upper)
+            break
+    return [min(max(z - tau, 0.0), a) for z, a in zip(vals, caps)]
+
+
+# --------------------------------------------------------------- dense --
+
+def dense_step(p, y, x, eta):
+    L, R, K = p["L"], p["R"], p["K"]
+    # fused ascent (arrived ports only; linear utilities: f' = alpha)
+    for l in range(L):
+        xl = x[l]
+        if xl == 0.0:
+            continue
+        quota = [0.0] * K
+        for r in p["ports_to_instances"][l]:
+            base = (l * R + r) * K
+            for k in range(K):
+                quota[k] += y[base + k]
+        kstar = max(range(K), key=lambda k: p["beta"][k] * quota[k])
+        for r in p["ports_to_instances"][l]:
+            base = (l * R + r) * K
+            for k in range(K):
+                pen = p["beta"][k] if k == kstar else 0.0
+                y[base + k] += eta * xl * (p["alpha"][r][k] - pen)
+    # full dense projection: off-edge re-zeroing + all R*K channels
+    for r in range(R):
+        for l in range(L):
+            if not p["has_edge"][l][r]:
+                base = (l * R + r) * K
+                for k in range(K):
+                    y[base + k] = 0.0
+        ports = p["instances_to_ports"][r]
+        if not ports:
+            continue
+        for k in range(K):
+            vals = [y[(l * R + r) * K + k] for l in ports]
+            caps = [p["demand"][l][k] for l in ports]
+            out = project_channel(vals, caps, p["capacity"][r][k])
+            for i, l in enumerate(ports):
+                y[(l * R + r) * K + k] = out[i]
+
+
+# ----------------------------------------------------------------- csr --
+
+def csr_step(p, y, x, eta, dirty, dirty_list):
+    L, K = p["L"], p["K"]
+    del dirty_list[:]
+    for l in range(L):
+        xl = x[l]
+        if xl == 0.0:
+            continue
+        lo, hi = p["port_ptr"][l], p["port_ptr"][l + 1]
+        quota = [0.0] * K
+        for e in range(lo, hi):
+            base = e * K
+            for k in range(K):
+                quota[k] += y[base + k]
+        kstar = max(range(K), key=lambda k: p["beta"][k] * quota[k])
+        for e in range(lo, hi):
+            r = p["edge_instance"][e]
+            if not dirty[r]:
+                dirty[r] = True
+                dirty_list.append(r)
+            base = e * K
+            for k in range(K):
+                pen = p["beta"][k] if k == kstar else 0.0
+                y[base + k] += eta * xl * (p["alpha"][r][k] - pen)
+    # project only the dirty instances; nothing to re-zero
+    for r in dirty_list:
+        edges = p["instance_edges"][r]
+        for k in range(K):
+            vals = [y[e * K + k] for e in edges]
+            caps = [p["demand"][p["edge_port"][e]][k] for e in edges]
+            out = project_channel(vals, caps, p["capacity"][r][k])
+            for i, e in enumerate(edges):
+                y[e * K + k] = out[i]
+    for r in dirty_list:
+        dirty[r] = False
+
+
+def bench(fn, warmup, iters):
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return sum(samples) / len(samples), min(samples)
+
+
+def main():
+    rows = []
+    for name, L, R, K, density, warm, iters in [
+        ("small 4x16x4", 4, 16, 4, 3.0, 3, 30),
+        ("default 10x128x6", 10, 128, 6, 3.0, 3, 20),
+        ("large 100x1024x6", 100, 1024, 6, 3.0, 2, 8),
+    ]:
+        p = make_problem(L, R, K, density, seed=2023)
+        rng = random.Random(5)
+        x = [1.0 if rng.random() < 0.7 else 0.0 for _ in range(L)]
+        eta = 0.5
+
+        y_dense = [0.0] * (L * R * K)
+        mean_d, min_d = bench(lambda: dense_step(p, y_dense, x, eta), warm, iters)
+
+        y_csr = [0.0] * (p["E"] * K)
+        dirty = [False] * R
+        dirty_list = []
+        mean_c, min_c = bench(
+            lambda: csr_step(p, y_csr, x, eta, dirty, dirty_list), warm, iters
+        )
+
+        rows.append(dict(name=name, E=p["E"], dense_coords=L * R * K,
+                         csr_coords=p["E"] * K,
+                         dense_ms=mean_d * 1e3, csr_ms=mean_c * 1e3,
+                         dense_ms_min=min_d * 1e3, csr_ms_min=min_c * 1e3,
+                         speedup=mean_d / mean_c))
+        print(f"{name:<20} dense {mean_d*1e3:9.3f} ms   csr {mean_c*1e3:9.3f} ms"
+              f"   speedup {mean_d/mean_c:6.2f}x   (|E|K={p['E']*K}"
+              f" vs LRK={L*R*K})")
+    with open("perf_proxy.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print("wrote perf_proxy.json")
+
+
+if __name__ == "__main__":
+    main()
