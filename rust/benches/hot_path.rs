@@ -5,15 +5,25 @@
 //! baseline/after table of EXPERIMENTS.md; the per-section ns/op are
 //! also emitted to BENCH_hot_path.json at the repo root so the perf
 //! trajectory is tracked across PRs.
+//!
+//! §Perf-2 adds the *full leader slot* under sparse arrivals (10%
+//! Bernoulli) on the large scenario: decide + commit + score + release,
+//! once with the incremental ledger driven by the policy's `Touched`
+//! reporting and once forced through the full-sweep commit — the
+//! before/after pair for the arrival-sparse pipeline.
 
 use ogasched::benchlib::{time_fn, Reporter};
 use ogasched::config::Scenario;
+use ogasched::coordinator::ClusterState;
+use ogasched::model::KindIndex;
 use ogasched::oga::dense_ref::DenseOgaState;
-use ogasched::oga::gradient::{gradient, GradScratch};
-use ogasched::oga::projection::project;
+use ogasched::oga::gradient::{grad_norm, gradient, GradScratch};
+use ogasched::oga::projection::{project, project_instances};
 use ogasched::oga::{LearningRate, OgaState};
-use ogasched::reward::slot_reward_scratch;
+use ogasched::reward::{slot_reward_kinds, slot_reward_scratch};
 use ogasched::runtime::{default_dir, Manifest, OgaStepExecutor};
+use ogasched::schedulers::{OgaSched, Policy, Touched};
+use ogasched::sim::arrivals::{ArrivalModel, Bernoulli};
 use ogasched::traces::synthesize;
 use ogasched::utils::rng::Rng;
 
@@ -26,6 +36,7 @@ fn main() {
     ] {
         scenario.horizon = 1;
         let p = synthesize(&scenario);
+        let kinds = KindIndex::build(&p);
         let mut rng = Rng::new(5);
         let x: Vec<f64> = (0..p.num_ports())
             .map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 })
@@ -35,7 +46,7 @@ fn main() {
         let mut grad = vec![0.0; p.decision_len()];
         let mut scratch = GradScratch::default();
         rep.record(time_fn(&format!("gradient          {name}"), 3, 50, || {
-            gradient(&p, &x, &y, &mut grad, &mut scratch);
+            gradient(&p, &kinds, &x, &y, &mut grad, &mut scratch);
             std::hint::black_box(&grad);
         }));
         rep.record(time_fn(&format!("projection(auto)  {name}"), 3, 50, || {
@@ -46,6 +57,9 @@ fn main() {
         let mut quota = vec![0.0; p.num_resources];
         rep.record(time_fn(&format!("reward            {name}"), 3, 50, || {
             std::hint::black_box(slot_reward_scratch(&p, &x, &y, &mut quota));
+        }));
+        rep.record(time_fn(&format!("reward(kinds)     {name}"), 3, 50, || {
+            std::hint::black_box(slot_reward_kinds(&p, &kinds, &x, &y, &mut quota));
         }));
         let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);
         rep.record(time_fn(&format!("native OGA step   {name}"), 3, 50, || {
@@ -66,6 +80,114 @@ fn main() {
             }
         }
     }
+
+    // ---- §Perf-2: full leader slot, sparse arrivals, large scenario ----
+    // decide + commit + score + release per iteration, for both
+    // learning-rate schedules; "incr" follows the policy's Touched
+    // reporting into commit_instances, "full" forces the |E|·K + R·K
+    // full-sweep ledger of PR 1.
+    {
+        let mut scenario = Scenario::large_scale();
+        scenario.horizon = 1;
+        let p = synthesize(&scenario);
+        let kinds = KindIndex::build(&p);
+        let mut quota = vec![0.0; p.num_resources];
+
+        let make_policy = |schedule: &str| -> OgaSched {
+            match schedule {
+                "decay" => OgaSched::new(&p, scenario.eta0, scenario.decay, 0),
+                _ => OgaSched::with_oracle_rate(&p, 10_000, 0),
+            }
+        };
+        for schedule in ["decay", "oracle"] {
+            // "incr": the §Perf-2 pipeline as the Leader runs it.
+            {
+                let mut pol = make_policy(schedule);
+                let mut arr = Bernoulli::uniform(p.num_ports(), 0.1, 7);
+                let mut st = ClusterState::new(&p);
+                let mut x = vec![0.0; p.num_ports()];
+                let mut y = vec![0.0; p.decision_len()];
+                rep.record(time_fn(
+                    &format!("leader slot sparse10 {schedule} incr large 100x1024x6"),
+                    10,
+                    200,
+                    || {
+                        arr.next(&mut x);
+                        pol.decide(&p, &x, &mut y);
+                        let report = match pol.touched() {
+                            Touched::All => st.commit(&p, &mut y),
+                            Touched::Instances(list) => st.commit_instances(&p, &mut y, list),
+                        };
+                        std::hint::black_box(report);
+                        std::hint::black_box(slot_reward_kinds(&p, &kinds, &x, &y, &mut quota));
+                        st.release();
+                    },
+                ));
+            }
+            // "full": the PR 1 slot, emulated stage for stage so the row
+            // is comparable with scripts/perf_proxy.py's pr1 pipeline —
+            // full |E|·K publish copy, full-sweep commit, per-coordinate
+            // scalar reward, eager R·K release copy; the oracle variant
+            // additionally pays PR 1's dense decide internals (gradient
+            // memset, full-buffer norm, full-buffer ascent).
+            {
+                let mut pol = make_policy(schedule);
+                let lr = LearningRate::Oracle { horizon: 10_000 };
+                let mut arr = Bernoulli::uniform(p.num_ports(), 0.1, 7);
+                let mut st = ClusterState::new(&p);
+                let mut x = vec![0.0; p.num_ports()];
+                let mut y = vec![0.0; p.decision_len()];
+                let mut y_out = vec![0.0; p.decision_len()];
+                let mut remaining = p.capacity.clone();
+                let mut grad = vec![0.0; p.decision_len()];
+                let mut gs = GradScratch::default();
+                let mut dirty: Vec<usize> = Vec::new();
+                let mut flags = vec![false; p.num_instances()];
+                rep.record(time_fn(
+                    &format!("leader slot sparse10 {schedule} full large 100x1024x6"),
+                    10,
+                    200,
+                    || {
+                        arr.next(&mut x);
+                        if schedule == "decay" {
+                            // PR 1's decay decide was already
+                            // arrival-sparse internally (fused ascent +
+                            // dirty projection) — reuse the policy
+                            pol.decide(&p, &x, &mut y);
+                        } else {
+                            // PR 1's oracle decide: full-buffer two-pass
+                            gradient(&p, &kinds, &x, &y, &mut grad, &mut gs);
+                            let eta = lr.eta(&p, 0, grad_norm(&grad));
+                            for i in 0..y.len() {
+                                y[i] += eta * grad[i];
+                            }
+                            dirty.clear();
+                            for l in (0..p.num_ports()).filter(|&l| x[l] != 0.0) {
+                                for e in p.graph.port_edges(l) {
+                                    let r = p.graph.edge_instance[e];
+                                    if !flags[r] {
+                                        flags[r] = true;
+                                        dirty.push(r);
+                                    }
+                                }
+                            }
+                            project_instances(&p, &mut y, &dirty, 0);
+                            for &r in &dirty {
+                                flags[r] = false;
+                            }
+                        }
+                        y_out.copy_from_slice(&y); // PR 1 published the whole tensor
+                        std::hint::black_box(st.commit(&p, &mut y_out));
+                        std::hint::black_box(slot_reward_scratch(&p, &x, &y_out, &mut quota));
+                        st.release();
+                        remaining.copy_from_slice(&p.capacity); // PR 1's eager release
+                        std::hint::black_box(&remaining);
+                    },
+                ));
+            }
+        }
+    }
+
     // machine-readable perf record at the repo root (tracked across PRs)
     rep.write_json(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_path.json"));
     rep.finish();

@@ -4,14 +4,25 @@
 //! to the cluster ledger → score the Eq. 8 reward → release.  The loop
 //! is allocation-free in steady state (all buffers are pre-sized) and
 //! records a full per-slot time series for the figure harnesses.
+//!
+//! §Perf-2: the whole slot is arrival-sparse.  The policy reports which
+//! instances its decision changed ([`Policy::touched`]); the ledger
+//! commits only those rows (`ClusterState::commit_instances`, with the
+//! full sweep as fallback and parity oracle), release is lazy, and the
+//! reward runs the kind-batched kernel over the arrived ports — so a
+//! zero/sparse-arrival slot costs O(dirty), not O(|E|·K + R·K).
+//! [`run_lineup`] fans independent policy runs out over the persistent
+//! `utils::pool` workers (each run's inner projections degrade to
+//! inline submission, which the pool handles by construction).
 
 use std::time::Instant;
 
 use crate::coordinator::state::ClusterState;
-use crate::model::Problem;
-use crate::reward::{slot_reward_scratch, SlotReward};
-use crate::schedulers::Policy;
+use crate::model::{KindIndex, Problem};
+use crate::reward::{slot_reward_kinds, SlotReward};
+use crate::schedulers::{Policy, Touched};
 use crate::sim::arrivals::ArrivalModel;
+use crate::utils::pool;
 
 /// Per-slot record (the recorder of sim/).
 #[derive(Clone, Copy, Debug, Default)]
@@ -48,6 +59,12 @@ impl RunResult {
     }
 
     /// Slots per second achieved by the whole loop.
+    ///
+    /// NB: for results produced by the parallel [`run_lineup`], wall
+    /// clock includes contention with the other policies' runs (and
+    /// inner projections degrade to inline execution), so this measures
+    /// sweep throughput, not isolated per-policy speed — time a direct
+    /// [`Leader::run`] (e.g. `benches/hot_path.rs`) for that.
     pub fn throughput(&self) -> f64 {
         if self.elapsed_secs > 0.0 {
             self.records.len() as f64 / self.elapsed_secs
@@ -61,22 +78,34 @@ impl RunResult {
 pub struct Leader<'p> {
     problem: &'p Problem,
     state: ClusterState,
+    /// Kind-grouped runs for the batched reward kernel (§Perf-2).
+    kinds: KindIndex,
     /// Assert that policies never need clamping (on in tests/debug).
     pub strict: bool,
 }
 
 impl<'p> Leader<'p> {
     pub fn new(problem: &'p Problem) -> Self {
-        Leader { problem, state: ClusterState::new(problem), strict: cfg!(debug_assertions) }
+        Leader {
+            problem,
+            state: ClusterState::new(problem),
+            kinds: KindIndex::build(problem),
+            strict: cfg!(debug_assertions),
+        }
     }
 
-    /// Run `policy` against `arrivals` for `horizon` slots.
+    /// Run `policy` against `arrivals` for `horizon` slots.  Does not
+    /// reset the policy; it does bump the run epoch
+    /// (`schedulers::begin_run_epoch`) so the sparse publishers
+    /// re-prime against this run's fresh output buffer even when a
+    /// policy is carried across runs without `reset`.
     pub fn run(
         &mut self,
         policy: &mut dyn Policy,
         arrivals: &mut dyn ArrivalModel,
         horizon: usize,
     ) -> RunResult {
+        crate::schedulers::begin_run_epoch();
         let p = self.problem;
         let mut x = vec![0.0; p.num_ports()];
         let mut y = vec![0.0; p.decision_len()];
@@ -90,7 +119,14 @@ impl<'p> Leader<'p> {
         for t in 0..horizon {
             arrivals.next(&mut x);
             policy.decide(p, &x, &mut y);
-            let report = self.state.commit(p, &mut y);
+            // commit only what the policy changed (§Perf-2); the full
+            // sweep remains the fallback for Touched::All policies
+            let report = match policy.touched() {
+                Touched::All => self.state.commit(p, &mut y),
+                Touched::Instances(instances) => {
+                    self.state.commit_instances(p, &mut y, instances)
+                }
+            };
             if self.strict {
                 assert_eq!(
                     report.clamped, 0,
@@ -99,7 +135,8 @@ impl<'p> Leader<'p> {
                 );
             }
             result.clamped_total += report.clamped;
-            let SlotReward { q, gain, penalty } = slot_reward_scratch(p, &x, &y, &mut quota);
+            let SlotReward { q, gain, penalty } =
+                slot_reward_kinds(p, &self.kinds, &x, &y, &mut quota);
             self.state.release();
             result.cumulative_reward += q;
             result.records.push(SlotRecord {
@@ -117,21 +154,27 @@ impl<'p> Leader<'p> {
 
 /// Convenience: run a whole policy lineup on forked arrival streams
 /// (every policy sees the *same* trajectory — seeded identically).
+///
+/// §Perf-2: the runs are independent (each gets its own leader, ledger
+/// and arrival stream), so they are fanned out over the persistent
+/// worker pool — the figure sweeps become parallel across policies
+/// instead of serial.  Inner projections submitted from within a run
+/// degrade to inline execution (pool contract), so *results* are
+/// identical to the serial loop; per-run `elapsed_secs`/`throughput`
+/// however reflect the contended sweep, not isolated policy speed (see
+/// [`RunResult::throughput`]).
 pub fn run_lineup(
     problem: &Problem,
-    policies: &mut [Box<dyn Policy>],
-    make_arrivals: impl Fn() -> Box<dyn ArrivalModel>,
+    policies: &mut [Box<dyn Policy + Send>],
+    make_arrivals: impl Fn() -> Box<dyn ArrivalModel> + Sync,
     horizon: usize,
 ) -> Vec<RunResult> {
-    policies
-        .iter_mut()
-        .map(|policy| {
-            let mut leader = Leader::new(problem);
-            let mut arrivals = make_arrivals();
-            policy.reset(problem);
-            leader.run(policy.as_mut(), arrivals.as_mut(), horizon)
-        })
-        .collect()
+    pool::parallel_map_mut(policies, policies.len().max(1), |_, policy| {
+        let mut leader = Leader::new(problem);
+        let mut arrivals = make_arrivals();
+        policy.reset(problem);
+        leader.run(policy.as_mut(), arrivals.as_mut(), horizon)
+    })
 }
 
 #[cfg(test)]

@@ -4,6 +4,20 @@
 //! overshoots) and *released* when the slot's jobs complete — multi-server
 //! jobs hold their resources for the whole slot, which is exactly the
 //! paper's one-slot occupancy model.
+//!
+//! §Perf-2 — incremental commits.  The ledger keeps the per-(r, k)
+//! usage it derived from the last committed decision.  A policy that
+//! knows which instances' columns changed since its previous decision
+//! (`schedulers::Touched::Instances`) commits through
+//! [`ClusterState::commit_instances`], which re-derives *only those
+//! rows* — O(Σ_{r dirty} |L_r|·K) instead of the full |E|·K sweep — and
+//! [`ClusterState::release`] is lazy (a flag flip, not an R·K capacity
+//! copy), so a zero/sparse-arrival slot does O(dirty) ledger work end
+//! to end.  The full-sweep [`ClusterState::commit`] remains both the
+//! fallback for policies that rewrite their whole tensor and the parity
+//! oracle for the property suite (`tests/ledger_parity.rs`): both paths
+//! share [`ClusterState::commit_row`]'s gather order, so rows agree
+//! bit-for-bit.
 
 use crate::model::Problem;
 
@@ -19,10 +33,17 @@ pub struct CommitReport {
 /// Capacity accounting for one slot at a time.
 #[derive(Clone, Debug)]
 pub struct ClusterState {
-    /// Remaining capacity [R, K] within the current slot.
-    remaining: Vec<f64>,
-    /// Capacity snapshot for release/validation.
+    /// Per-(r, k) units committed by the current (or, after `release`,
+    /// the most recent) decision.  Persists across slots so the next
+    /// commit can be driven by instance deltas.
+    usage: Vec<f64>,
+    /// Capacity snapshot for validation.
     capacity: Vec<f64>,
+    /// Σ usage, maintained incrementally (reported as committed_units;
+    /// refreshed exactly on every full-sweep commit so it cannot drift).
+    total_units: f64,
+    /// [K] scratch row for `commit_row`.
+    row: Vec<f64>,
     k_n: usize,
     in_slot: bool,
 }
@@ -30,83 +51,140 @@ pub struct ClusterState {
 impl ClusterState {
     pub fn new(problem: &Problem) -> Self {
         ClusterState {
-            remaining: problem.capacity.clone(),
+            usage: vec![0.0; problem.capacity.len()],
             capacity: problem.capacity.clone(),
+            total_units: 0.0,
+            row: vec![0.0; problem.num_resources],
             k_n: problem.num_resources,
             in_slot: false,
         }
     }
 
-    /// Commit a decision for the slot.  The ledger clamps any
-    /// per-instance overshoot (defense against buggy policies) and
-    /// reports how many coordinates were touched; a correct policy
-    /// always reports `clamped == 0` (asserted by the engine in tests).
+    /// Commit a decision for the slot (full sweep over every instance).
+    /// The ledger clamps any per-instance overshoot (defense against
+    /// buggy policies) and reports how many coordinates were touched; a
+    /// correct policy always reports `clamped == 0` (asserted by the
+    /// engine in tests).
     pub fn commit(&mut self, problem: &Problem, y: &mut [f64]) -> CommitReport {
         assert!(!self.in_slot, "commit called twice without release");
         self.in_slot = true;
         let mut report = CommitReport::default();
-        let (r_n, k_n) = (problem.num_instances(), self.k_n);
-        let g = &problem.graph;
-        // Edge-major accumulation (§Perf): one sweep over y in memory
-        // order, scattering per-(r, k) usage into `remaining` — O(|E|·K)
-        // instead of the dense layout's L·R·K walk.
-        self.remaining.fill(0.0);
-        let rk = r_n * k_n;
-        for e in 0..g.num_edges() {
-            let rbase = g.edge_instance[e] * k_n;
+        for r in 0..problem.num_instances() {
+            self.commit_row(problem, y, r, &mut report);
+        }
+        // the full sweep refreshes the running total exactly
+        self.total_units = self.usage.iter().sum();
+        report.committed_units = self.total_units;
+        report
+    }
+
+    /// Incremental commit: re-derive usage only for the listed
+    /// instances' rows.  Correct iff `y` is unchanged outside the
+    /// listed instances' columns since the previous commit — the
+    /// `Touched::Instances` contract the policies uphold (and that
+    /// `tests/ledger_parity.rs` checks against the full-sweep oracle).
+    pub fn commit_instances(
+        &mut self,
+        problem: &Problem,
+        y: &mut [f64],
+        instances: &[usize],
+    ) -> CommitReport {
+        assert!(!self.in_slot, "commit called twice without release");
+        self.in_slot = true;
+        let mut report = CommitReport::default();
+        let k_n = self.k_n;
+        for &r in instances {
+            let base = r * k_n;
+            let old: f64 = self.usage[base..base + k_n].iter().sum();
+            self.commit_row(problem, y, r, &mut report);
+            let new: f64 = self.usage[base..base + k_n].iter().sum();
+            self.total_units += new - old;
+        }
+        report.committed_units = self.total_units;
+        report
+    }
+
+    /// Re-derive instance r's usage row from `y`, clamping overshoot.
+    /// Shared by the full-sweep and incremental paths so both produce
+    /// bit-identical rows (same gather order over `instance_edge_ids`).
+    fn commit_row(
+        &mut self,
+        problem: &Problem,
+        y: &mut [f64],
+        r: usize,
+        report: &mut CommitReport,
+    ) {
+        let k_n = self.k_n;
+        let edges = problem.graph.instance_edge_ids(r);
+        self.row.fill(0.0);
+        for &e in edges {
             let base = e * k_n;
             for k in 0..k_n {
-                self.remaining[rbase + k] += y[base + k];
+                self.row[k] += y[base + k];
             }
         }
-        for i in 0..rk {
-            let used = self.remaining[i];
-            let cap = self.capacity[i];
+        for k in 0..k_n {
+            let used = self.row[k];
+            let cap = self.capacity[r * k_n + k];
             // tolerance is relative: decisions produced by the f32
             // artifact path carry ~1e-6 relative rounding.
             if used > cap * (1.0 + 1e-5) + 1e-6 && used > 0.0 {
                 // proportional clamp back to capacity
                 let scale = cap / used;
-                let (r, k) = (i / k_n, i % k_n);
-                for &e in g.instance_edge_ids(r) {
+                for &e in edges {
                     let j = e * k_n + k;
                     if y[j] != 0.0 {
                         y[j] *= scale;
                         report.clamped += 1;
                     }
                 }
-                report.committed_units += cap;
-                self.remaining[i] = 0.0; // cap - cap
+                // re-gather the clamped column (≈ cap up to rounding):
+                // the stored row must equal what a later sweep of the
+                // unchanged tensor would derive, or the incremental and
+                // full-sweep paths drift apart by ulps
+                let mut clamped_used = 0.0;
+                for &e in edges {
+                    clamped_used += y[e * k_n + k];
+                }
+                self.usage[r * k_n + k] = clamped_used;
             } else {
-                report.committed_units += used;
-                self.remaining[i] = cap - used;
+                self.usage[r * k_n + k] = used;
             }
         }
-        report
     }
 
-    /// Release the slot's resources (jobs completed).
+    /// Release the slot's resources (jobs completed).  Lazy: remaining
+    /// capacity is recomputed from the retained usage on demand, so the
+    /// release itself is O(1) instead of an R·K capacity copy.
     pub fn release(&mut self) {
         assert!(self.in_slot, "release without commit");
-        self.remaining.copy_from_slice(&self.capacity);
         self.in_slot = false;
     }
 
     pub fn remaining_at(&self, r: usize, k: usize) -> f64 {
-        self.remaining[r * self.k_n + k]
+        let i = r * self.k_n + k;
+        if self.in_slot {
+            self.capacity[i] - self.usage[i]
+        } else {
+            self.capacity[i]
+        }
     }
 
     /// Conservation invariant: remaining + committed == capacity, and
     /// remaining is never negative.
     pub fn check_conservation(&self) -> Result<(), String> {
-        for (i, &rem) in self.remaining.iter().enumerate() {
-            if rem < -1e-9 {
-                return Err(format!("negative remaining at flat index {i}: {rem}"));
-            }
-            if rem > self.capacity[i] + 1e-9 {
+        for (i, &used) in self.usage.iter().enumerate() {
+            let cap = self.capacity[i];
+            if used > cap + 1e-9 {
                 return Err(format!(
-                    "remaining {rem} exceeds capacity {} at flat index {i}",
-                    self.capacity[i]
+                    "negative remaining at flat index {i}: {}",
+                    cap - used
+                ));
+            }
+            if used < -1e-9 {
+                return Err(format!(
+                    "remaining {} exceeds capacity {cap} at flat index {i}",
+                    cap - used
                 ));
             }
         }
@@ -154,6 +232,46 @@ mod tests {
     }
 
     #[test]
+    fn incremental_commit_tracks_deltas() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let r0 = p.graph.ports_to_instances[0][0];
+        let mut y = vec![0.0; p.decision_len()];
+        // slot 1: commit the whole (zero) tensor via the dirty path
+        let all: Vec<usize> = (0..p.num_instances()).collect();
+        let rep = st.commit_instances(&p, &mut y, &all);
+        assert_eq!(rep.committed_units, 0.0);
+        st.release();
+        // slot 2: only r0's column changes
+        y[p.idx(0, r0, 0)] = 0.75;
+        let rep = st.commit_instances(&p, &mut y, &[r0]);
+        assert_eq!(rep.clamped, 0);
+        assert!((rep.committed_units - 0.75).abs() < 1e-12);
+        assert!((st.remaining_at(r0, 0) - (p.capacity_at(r0, 0) - 0.75)).abs() < 1e-12);
+        st.release();
+        // slot 3: nothing changes — empty dirty set, usage carries over
+        let rep = st.commit_instances(&p, &mut y, &[]);
+        assert!((rep.committed_units - 0.75).abs() < 1e-12);
+        st.check_conservation().unwrap();
+        st.release();
+    }
+
+    #[test]
+    fn release_is_lazy_but_exact() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let r0 = p.graph.ports_to_instances[0][0];
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, r0, 0)] = 1.0;
+        st.commit_instances(&p, &mut y, &[r0]);
+        assert!(st.remaining_at(r0, 0) < p.capacity_at(r0, 0));
+        st.release();
+        // after release every remaining reads full capacity again even
+        // though usage is retained internally for the next delta commit
+        assert_eq!(st.remaining_at(r0, 0), p.capacity_at(r0, 0));
+    }
+
+    #[test]
     #[should_panic(expected = "commit called twice")]
     fn double_commit_panics() {
         let p = synthesize(&Scenario::small());
@@ -161,6 +279,16 @@ mod tests {
         let mut y = vec![0.0; p.decision_len()];
         st.commit(&p, &mut y);
         st.commit(&p, &mut y);
+    }
+
+    #[test]
+    #[should_panic(expected = "commit called twice")]
+    fn double_incremental_commit_panics() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let mut y = vec![0.0; p.decision_len()];
+        st.commit_instances(&p, &mut y, &[]);
+        st.commit_instances(&p, &mut y, &[]);
     }
 
     #[test]

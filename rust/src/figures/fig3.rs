@@ -9,6 +9,7 @@ use crate::config::Scenario;
 use crate::figures::{results_dir, FigureOutput};
 use crate::sim;
 use crate::utils::csv::Csv;
+use crate::utils::pool;
 use crate::utils::table::Table;
 
 const INSTANCES: [usize; 5] = [32, 64, 128, 256, 512];
@@ -25,14 +26,21 @@ fn base(horizon_override: usize) -> Scenario {
 }
 
 /// One sweep: vary a scenario knob, return (labels, per-policy curves).
+///
+/// §Perf-2: sweep points are independent (policy, seed) bundles, so
+/// they run in parallel over the persistent worker pool; the lineup
+/// parallelism nested inside each point degrades to inline execution
+/// (pool contract), keeping results identical to the serial sweep.
 fn sweep(
     scenarios: Vec<(String, Scenario)>,
 ) -> (Vec<String>, Vec<String>, Vec<Vec<f64>>) {
     let labels: Vec<String> = scenarios.iter().map(|(l, _)| l.clone()).collect();
+    let all = pool::parallel_map(scenarios.len(), scenarios.len(), |i| {
+        sim::run_paper_lineup(&scenarios[i].1)
+    });
     let mut policy_names = Vec::new();
     let mut series: Vec<Vec<f64>> = Vec::new();
-    for (_, scenario) in &scenarios {
-        let results = sim::run_paper_lineup(scenario);
+    for results in &all {
         if policy_names.is_empty() {
             policy_names = results.iter().map(|r| r.policy.clone()).collect();
             series = vec![Vec::new(); results.len()];

@@ -21,6 +21,118 @@ use crate::oga::utilities::UtilityKind;
 /// Names for the K=6 default device classes (Tab. 2).
 pub const DEVICE_NAMES: [&str; 6] = ["CPU", "MEM", "GPU", "NPU", "TPU", "FPGA"];
 
+/// A maximal run of decision coordinates `[lo, hi)` (edge-major flat
+/// indices) whose utility family is the same `kind`.  Runs never span a
+/// port boundary, so each run lies inside one port's contiguous slice.
+#[derive(Clone, Copy, Debug)]
+pub struct KindRun {
+    pub lo: usize,
+    pub hi: usize,
+    pub kind: UtilityKind,
+}
+
+/// Kind-grouped view of the edge-major decision tensor (§Perf-2).
+///
+/// The hot kernels (gradient, fused ascent, slot reward, oracle solve)
+/// evaluate `f_r^k` / `(f_r^k)'` per coordinate; matching on the
+/// `UtilityKind` inside the innermost `K` loop costs a branch per
+/// coordinate and blocks vectorization.  This index is built once per
+/// problem: each port's contiguous `[E, K]` slice is cut into maximal
+/// same-kind runs, and the per-coordinate α is gathered into a flat
+/// array aligned with the decision layout.  A kernel then dispatches on
+/// the family once per run and streams a branch-free contiguous loop
+/// (`UtilityKind::{value_sum, grad_into, ascend_slice}`).
+#[derive(Clone, Debug, Default)]
+pub struct KindIndex {
+    /// α per decision coordinate: `alpha_flat[e*K + k] = α[r(e)*K + k]`.
+    pub alpha_flat: Vec<f64>,
+    runs: Vec<KindRun>,
+    /// Runs of port l are `runs[port_run_ptr[l]..port_run_ptr[l + 1]]`.
+    port_run_ptr: Vec<usize>,
+}
+
+impl KindIndex {
+    pub fn build(problem: &Problem) -> Self {
+        let k_n = problem.num_resources;
+        let g = &problem.graph;
+        let mut alpha_flat = Vec::with_capacity(problem.decision_len());
+        let mut runs: Vec<KindRun> = Vec::new();
+        let mut port_run_ptr = Vec::with_capacity(problem.num_ports() + 1);
+        port_run_ptr.push(0);
+        for l in 0..problem.num_ports() {
+            let mut open: Option<KindRun> = None;
+            for e in g.port_edges(l) {
+                let rk = g.edge_instance[e] * k_n;
+                for k in 0..k_n {
+                    let c = e * k_n + k;
+                    let kind = problem.kind[rk + k];
+                    alpha_flat.push(problem.alpha[rk + k]);
+                    match open {
+                        Some(ref mut run) if run.kind == kind => run.hi = c + 1,
+                        ref mut slot => {
+                            if let Some(done) = slot.take() {
+                                runs.push(done);
+                            }
+                            *slot = Some(KindRun { lo: c, hi: c + 1, kind });
+                        }
+                    }
+                }
+            }
+            if let Some(done) = open {
+                runs.push(done);
+            }
+            port_run_ptr.push(runs.len());
+        }
+        KindIndex { alpha_flat, runs, port_run_ptr }
+    }
+
+    /// The same-kind runs covering port l's coordinate slice, in
+    /// ascending coordinate order.
+    #[inline]
+    pub fn port_runs(&self, l: usize) -> &[KindRun] {
+        &self.runs[self.port_run_ptr[l]..self.port_run_ptr[l + 1]]
+    }
+
+    /// Internal-consistency check used by tests: the runs of each port
+    /// tile exactly its coordinate slice, and kind/α agree with the
+    /// problem's `[R, K]` tables.
+    pub fn validate(&self, problem: &Problem) -> Result<(), String> {
+        let k_n = problem.num_resources;
+        if self.alpha_flat.len() != problem.decision_len() {
+            return Err("alpha_flat length disagrees with decision_len".into());
+        }
+        if self.port_run_ptr.len() != problem.num_ports() + 1 {
+            return Err("port_run_ptr has wrong length".into());
+        }
+        for l in 0..problem.num_ports() {
+            let lo = problem.graph.port_ptr[l] * k_n;
+            let hi = problem.graph.port_ptr[l + 1] * k_n;
+            let mut cursor = lo;
+            for run in self.port_runs(l) {
+                if run.lo != cursor || run.hi <= run.lo {
+                    return Err(format!("runs of port {l} do not tile its slice"));
+                }
+                for c in run.lo..run.hi {
+                    let e = c / k_n;
+                    let k = c % k_n;
+                    let rk = problem.graph.edge_instance[e] * k_n + k;
+                    if problem.kind[rk] != run.kind {
+                        return Err(format!("run kind mismatch at coordinate {c}"));
+                    }
+                    if self.alpha_flat[c] != problem.alpha[rk] {
+                        return Err(format!("alpha_flat mismatch at coordinate {c}"));
+                    }
+                }
+                cursor = run.hi;
+            }
+            if cursor != hi {
+                return Err(format!("runs of port {l} stop at {cursor}, slice ends at {hi}"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// A fully specified scheduling problem instance.
 #[derive(Clone, Debug)]
 pub struct Problem {
@@ -272,6 +384,44 @@ mod tests {
         let want = (2.0f64 * (45.0 + 60.0)).sqrt() * (6.0 * 2.25f64).sqrt();
         assert!((p.h_g() - want).abs() < 1e-9, "{} vs {want}", p.h_g());
         assert!((p.diam_upper() - (210.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kind_index_tiles_every_port_slice() {
+        let graph = Bipartite::from_edges(3, 3, &[(0, 0), (0, 2), (1, 1), (2, 0), (2, 1)]);
+        let kinds = vec![
+            UtilityKind::Linear,
+            UtilityKind::Linear,
+            UtilityKind::Log,
+            UtilityKind::Poly,
+            UtilityKind::Log,
+            UtilityKind::Reciprocal,
+        ];
+        let p = Problem {
+            graph,
+            num_resources: 2,
+            demand: vec![1.0; 6],
+            capacity: vec![5.0; 6],
+            alpha: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            kind: kinds,
+            beta: vec![0.3, 0.5],
+        };
+        let idx = KindIndex::build(&p);
+        idx.validate(&p).unwrap();
+        // port 0 -> instances 0 and 2: coordinate kinds are
+        // [Linear, Linear, Log, Reciprocal] -> 3 runs
+        assert_eq!(idx.port_runs(0).len(), 3);
+        assert_eq!(idx.port_runs(0)[0].kind, UtilityKind::Linear);
+        assert_eq!((idx.port_runs(0)[0].lo, idx.port_runs(0)[0].hi), (0, 2));
+        // alpha gathered per coordinate: (l=0, r=2, k=0) -> alpha[2*2+0]
+        assert_eq!(idx.alpha_flat[2], 5.0);
+        // uniform-kind problem collapses to one run per port
+        let uni = tiny();
+        let idx = KindIndex::build(&uni);
+        idx.validate(&uni).unwrap();
+        for l in 0..uni.num_ports() {
+            assert_eq!(idx.port_runs(l).len(), 1);
+        }
     }
 
     #[test]

@@ -5,11 +5,18 @@
 //! with k*_l = argmax_k β_k Σ_{r∈R_l} y_{(l,r)}^k (Eq. 27).  Ports with
 //! x_l = 0 contribute zero gradient.  The decision and gradient tensors
 //! are edge-major `[E, K]` (see `model`), so a port's coordinates are
-//! one contiguous slice and off-edge coordinates don't exist — the loop
-//! below touches exactly Σ_{l: x_l>0} |R_l| · K entries plus one memset
-//! of the |E|·K buffer.
+//! one contiguous slice and off-edge coordinates don't exist.
+//!
+//! §Perf-2: the (f_r^k)' evaluation is *kind-batched* — the utility
+//! family `match` is hoisted out of the inner loop via the
+//! [`KindIndex`] same-kind runs, and the Eq. 27 penalty is applied as a
+//! separate strided pass over the k* lane.  [`gradient`] memsets the
+//! whole buffer (the offline oracle's full-batch shape);
+//! [`gradient_sparse`] instead zeroes only the slices it wrote on the
+//! *previous* call, so a slot costs O(|E_x|·K) in the arrived
+//! neighborhood with nothing proportional to |E|.
 
-use crate::model::Problem;
+use crate::model::{KindIndex, Problem};
 
 /// Scratch space reused across slots so the hot loop never allocates.
 #[derive(Clone, Debug, Default)]
@@ -22,51 +29,101 @@ pub struct GradScratch {
 /// reusable buffer — rows of absent ports are zeroed via memset).
 pub fn gradient(
     problem: &Problem,
+    kinds: &KindIndex,
     x: &[f64],
     y: &[f64],
     grad: &mut [f64],
     scratch: &mut GradScratch,
 ) {
-    let k_n = problem.num_resources;
     debug_assert_eq!(x.len(), problem.num_ports());
     debug_assert_eq!(y.len(), problem.decision_len());
     debug_assert_eq!(grad.len(), problem.decision_len());
     grad.fill(0.0);
-    scratch.quota.resize(k_n, 0.0);
-
-    let g = &problem.graph;
+    scratch.quota.resize(problem.num_resources, 0.0);
     for l in 0..problem.num_ports() {
-        let x_l = x[l];
-        if x_l == 0.0 {
-            continue;
+        if x[l] != 0.0 {
+            port_gradient(problem, kinds, l, x[l], y, grad, &mut scratch.quota);
         }
-        // quota_k = Σ_{r∈R_l} y_{(l,r)}^k
-        scratch.quota.fill(0.0);
-        for e in g.port_edges(l) {
-            let base = e * k_n;
-            for k in 0..k_n {
-                scratch.quota[k] += y[base + k];
-            }
+    }
+}
+
+/// Sparse variant for the per-slot hot path: `active` holds the ports
+/// whose slices the *previous* call filled (state owned by the caller).
+/// Those slices are zeroed, then this slot's arrived ports are filled
+/// and recorded into `active` — after the call, `grad` equals the full
+/// [`gradient`] output without the O(|E|·K) memset.
+pub fn gradient_sparse(
+    problem: &Problem,
+    kinds: &KindIndex,
+    x: &[f64],
+    y: &[f64],
+    grad: &mut [f64],
+    scratch: &mut GradScratch,
+    active: &mut Vec<usize>,
+) {
+    let k_n = problem.num_resources;
+    debug_assert_eq!(x.len(), problem.num_ports());
+    debug_assert_eq!(y.len(), problem.decision_len());
+    debug_assert_eq!(grad.len(), problem.decision_len());
+    for &l in active.iter() {
+        let lo = problem.graph.port_ptr[l] * k_n;
+        let hi = problem.graph.port_ptr[l + 1] * k_n;
+        grad[lo..hi].fill(0.0);
+    }
+    active.clear();
+    scratch.quota.resize(k_n, 0.0);
+    for l in 0..problem.num_ports() {
+        if x[l] != 0.0 {
+            port_gradient(problem, kinds, l, x[l], y, grad, &mut scratch.quota);
+            active.push(l);
         }
-        // k* = argmax_k β_k · quota_k  (Eq. 27)
-        let mut kstar = 0;
-        let mut best = f64::NEG_INFINITY;
+    }
+}
+
+/// Fill one arrived port's gradient slice (shared by both entry points).
+fn port_gradient(
+    problem: &Problem,
+    kinds: &KindIndex,
+    l: usize,
+    x_l: f64,
+    y: &[f64],
+    grad: &mut [f64],
+    quota: &mut [f64],
+) {
+    let k_n = problem.num_resources;
+    let g = &problem.graph;
+    // quota_k = Σ_{r∈R_l} y_{(l,r)}^k
+    quota.fill(0.0);
+    for e in g.port_edges(l) {
+        let base = e * k_n;
         for k in 0..k_n {
-            let v = problem.beta[k] * scratch.quota[k];
-            if v > best {
-                best = v;
-                kstar = k;
-            }
+            quota[k] += y[base + k];
         }
-        for e in g.port_edges(l) {
-            let rk = g.edge_instance[e] * k_n;
-            let base = e * k_n;
-            for k in 0..k_n {
-                let fp = problem.kind[rk + k].grad(y[base + k], problem.alpha[rk + k]);
-                let pen = if k == kstar { problem.beta[k] } else { 0.0 };
-                grad[base + k] = x_l * (fp - pen);
-            }
+    }
+    // k* = argmax_k β_k · quota_k  (Eq. 27)
+    let mut kstar = 0;
+    let mut best = f64::NEG_INFINITY;
+    for k in 0..k_n {
+        let v = problem.beta[k] * quota[k];
+        if v > best {
+            best = v;
+            kstar = k;
         }
+    }
+    // kind-batched marginal gains: one family dispatch per run, then a
+    // branch-free contiguous pass
+    for run in kinds.port_runs(l) {
+        run.kind.grad_into(
+            &y[run.lo..run.hi],
+            &kinds.alpha_flat[run.lo..run.hi],
+            x_l,
+            &mut grad[run.lo..run.hi],
+        );
+    }
+    // Eq. 27 penalty on the k* lane only
+    let pen = x_l * problem.beta[kstar];
+    for e in g.port_edges(l) {
+        grad[e * k_n + kstar] -= pen;
     }
 }
 
@@ -74,6 +131,23 @@ pub fn gradient(
 /// and the Thm. 1 bound check).
 pub fn grad_norm(grad: &[f64]) -> f64 {
     grad.iter().map(|g| g * g).sum::<f64>().sqrt()
+}
+
+/// Norm restricted to the listed ports' slices.  Exact when the
+/// gradient is zero elsewhere (it is, by Eq. 30, off the arrived
+/// neighborhood) — the [`gradient_sparse`] companion that keeps the
+/// Eq. 50 oracle rate from paying an O(|E|·K) reduction per slot.
+pub fn grad_norm_ports(problem: &Problem, grad: &[f64], ports: &[usize]) -> f64 {
+    let k_n = problem.num_resources;
+    let mut acc = 0.0;
+    for &l in ports {
+        let lo = problem.graph.port_ptr[l] * k_n;
+        let hi = problem.graph.port_ptr[l + 1] * k_n;
+        for g in &grad[lo..hi] {
+            acc += g * g;
+        }
+    }
+    acc.sqrt()
 }
 
 #[cfg(test)]
@@ -95,6 +169,13 @@ mod tests {
         }
     }
 
+    fn grad_of(p: &Problem, x: &[f64], y: &[f64]) -> Vec<f64> {
+        let kinds = KindIndex::build(p);
+        let mut g = vec![0.0; p.decision_len()];
+        gradient(p, &kinds, x, y, &mut g, &mut GradScratch::default());
+        g
+    }
+
     #[test]
     fn decision_len_counts_edges_only() {
         let p = problem();
@@ -105,9 +186,10 @@ mod tests {
     #[test]
     fn zero_arrivals_zero_gradient() {
         let p = problem();
+        let kinds = KindIndex::build(&p);
         let y = vec![1.0; p.decision_len()];
         let mut g = vec![9.0; p.decision_len()];
-        gradient(&p, &[0.0, 0.0], &y, &mut g, &mut GradScratch::default());
+        gradient(&p, &kinds, &[0.0, 0.0], &y, &mut g, &mut GradScratch::default());
         assert!(g.iter().all(|&v| v == 0.0));
     }
 
@@ -117,8 +199,7 @@ mod tests {
         // port 0 connects to r=0,1. Put all mass on k=1 so k*=1.
         let mut y = vec![0.0; p.decision_len()];
         y[p.idx(0, 0, 1)] = 2.0;
-        let mut g = vec![0.0; p.decision_len()];
-        gradient(&p, &[1.0, 0.0], &y, &mut g, &mut GradScratch::default());
+        let g = grad_of(&p, &[1.0, 0.0], &y);
         // linear utilities: f' = alpha
         assert!((g[p.idx(0, 0, 0)] - 1.0).abs() < 1e-12); // alpha(0,0)=1, no pen
         assert!((g[p.idx(0, 0, 1)] - (2.0 - 0.6)).abs() < 1e-12); // pen beta_1
@@ -132,8 +213,7 @@ mod tests {
     fn absent_port_rows_are_zeroed() {
         let p = problem();
         let y = vec![0.5; p.decision_len()];
-        let mut g = vec![7.0; p.decision_len()];
-        gradient(&p, &[1.0, 0.0], &y, &mut g, &mut GradScratch::default());
+        let g = grad_of(&p, &[1.0, 0.0], &y);
         // port 1's single edge (1,1) must be memset back to zero
         assert_eq!(g[p.idx(1, 1, 0)], 0.0);
         assert_eq!(g[p.idx(1, 1, 1)], 0.0);
@@ -145,8 +225,7 @@ mod tests {
         let p = problem();
         let x = [1.0, 1.0];
         let y = vec![0.7; p.decision_len()];
-        let mut g = vec![0.0; p.decision_len()];
-        gradient(&p, &x, &y, &mut g, &mut GradScratch::default());
+        let g = grad_of(&p, &x, &y);
         let h = 1e-6;
         for l in 0..2 {
             for &r in &p.graph.ports_to_instances[l] {
@@ -171,6 +250,28 @@ mod tests {
     }
 
     #[test]
+    fn sparse_gradient_matches_full_across_changing_arrivals() {
+        // the sparse path re-zeroes exactly its previous slices, so a
+        // port that arrived at t but not at t+1 must read zero again
+        let p = problem();
+        let kinds = KindIndex::build(&p);
+        let y = vec![0.8; p.decision_len()];
+        let mut sparse = vec![0.0; p.decision_len()];
+        let mut active = Vec::new();
+        let mut scratch = GradScratch::default();
+        for x in [[1.0, 0.0], [0.0, 2.0], [1.0, 1.0], [0.0, 0.0]] {
+            gradient_sparse(&p, &kinds, &x, &y, &mut sparse, &mut scratch, &mut active);
+            let full = grad_of(&p, &x, &y);
+            assert_eq!(sparse, full, "x={x:?}");
+            let want_ports: Vec<usize> =
+                (0..2).filter(|&l| x[l] != 0.0).collect();
+            assert_eq!(active, want_ports);
+            let n_sparse = grad_norm_ports(&p, &sparse, &active);
+            assert!((n_sparse - grad_norm(&full)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn grad_norm_is_euclidean() {
         assert!((grad_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
     }
@@ -180,10 +281,8 @@ mod tests {
         // Sec. 3.4: x_l ∈ ℕ scales the port gradient linearly.
         let p = problem();
         let y = vec![0.3; p.decision_len()];
-        let mut g1 = vec![0.0; p.decision_len()];
-        let mut g3 = vec![0.0; p.decision_len()];
-        gradient(&p, &[1.0, 0.0], &y, &mut g1, &mut GradScratch::default());
-        gradient(&p, &[3.0, 0.0], &y, &mut g3, &mut GradScratch::default());
+        let g1 = grad_of(&p, &[1.0, 0.0], &y);
+        let g3 = grad_of(&p, &[3.0, 0.0], &y);
         for i in 0..g1.len() {
             assert!((g3[i] - 3.0 * g1[i]).abs() < 1e-12);
         }

@@ -7,8 +7,8 @@ pub mod gradient;
 pub mod projection;
 pub mod utilities;
 
-use crate::model::Problem;
-use gradient::{gradient, GradScratch};
+use crate::model::{KindIndex, Problem};
+use gradient::{grad_norm_ports, gradient_sparse, GradScratch};
 use projection::{project, project_instances};
 
 /// Learning-rate schedule.  The paper's experiments use a multiplicative
@@ -25,9 +25,14 @@ pub enum LearningRate {
 }
 
 impl LearningRate {
+    /// Closed-form η_t.  For the Decay schedule this is the *reference*
+    /// form only: the hot path maintains η multiplicatively
+    /// (`OgaState::step`, η_{t+1} = λ·η_t — Alg. 1 step 32) because the
+    /// closed form re-exponentiates from scratch every slot and its old
+    /// `powi(t as i32)` cast truncated for horizons beyond i32::MAX.
     pub fn eta(&self, problem: &Problem, t: usize, grad_norm: f64) -> f64 {
         match *self {
-            LearningRate::Decay { eta0, lambda } => eta0 * lambda.powi(t as i32),
+            LearningRate::Decay { eta0, lambda } => eta0 * lambda.powf(t as f64),
             LearningRate::Oracle { horizon } => {
                 let g = grad_norm.max(1e-9);
                 problem.diam_upper() / (g * (horizon.max(1) as f64).sqrt())
@@ -58,9 +63,19 @@ pub struct OgaState {
     grad: Vec<f64>,
     scratch: GradScratch,
     scratch_quota: Vec<f64>,
+    /// Kind-grouped runs + flattened α for the batched kernels (§Perf-2).
+    kinds: KindIndex,
+    /// Running η for the Decay schedule (η_{t+1} = λ·η_t, Alg. 1 l.32).
+    /// Maintained multiplicatively: the closed form η₀λ^t costs a
+    /// `powf` per slot and the seed's `powi(t as i32)` truncated the
+    /// exponent for horizons beyond i32::MAX.
+    eta_run: f64,
     /// Instances perturbed by the current slot's ascent (flags + list).
     dirty: Vec<bool>,
     dirty_list: Vec<usize>,
+    /// Ports whose slices of `grad` are live (Oracle path; lets the
+    /// next slot zero exactly those instead of the whole buffer).
+    grad_ports: Vec<usize>,
     /// Set by `invalidate`: the next step projects globally because `y`
     /// was written from outside and may be infeasible anywhere.
     full_project_pending: bool,
@@ -78,8 +93,14 @@ impl OgaState {
             grad: vec![0.0; problem.decision_len()],
             scratch: GradScratch::default(),
             scratch_quota: Vec::new(),
+            kinds: KindIndex::build(problem),
+            eta_run: match lr {
+                LearningRate::Decay { eta0, .. } => eta0,
+                _ => 0.0,
+            },
             dirty: vec![false; problem.num_instances()],
             dirty_list: Vec::new(),
+            grad_ports: Vec::new(),
             full_project_pending: false,
         }
     }
@@ -111,19 +132,40 @@ impl OgaState {
         self.dirty_list.clear();
         let eta = match self.lr {
             LearningRate::Oracle { .. } => {
-                gradient(problem, x, &self.y, &mut self.grad, &mut self.scratch);
-                let gnorm = gradient::grad_norm(&self.grad);
+                // Sparse two-pass path (§Perf-2): the gradient, its
+                // norm, and the ascent all touch only the arrived
+                // ports' slices — the gradient is zero everywhere else,
+                // so nothing here scales with |E|.
+                gradient_sparse(
+                    problem,
+                    &self.kinds,
+                    x,
+                    &self.y,
+                    &mut self.grad,
+                    &mut self.scratch,
+                    &mut self.grad_ports,
+                );
+                let gnorm = grad_norm_ports(problem, &self.grad, &self.grad_ports);
                 let eta = self.lr.eta(problem, self.t, gnorm);
-                for i in 0..self.y.len() {
-                    self.y[i] += eta * self.grad[i];
+                let k_n = problem.num_resources;
+                for &l in &self.grad_ports {
+                    let lo = problem.graph.port_ptr[l] * k_n;
+                    let hi = problem.graph.port_ptr[l + 1] * k_n;
+                    for i in lo..hi {
+                        self.y[i] += eta * self.grad[i];
+                    }
                 }
-                // the gradient is zero off the arrived ports, so only
-                // their instances were perturbed
-                self.mark_dirty_from_arrivals(problem, x);
+                // only the arrived ports' instances were perturbed
+                self.mark_dirty_from_grad_ports(problem);
                 eta
             }
-            _ => {
-                let eta = self.lr.eta(problem, self.t, 0.0);
+            LearningRate::Decay { lambda, .. } => {
+                let eta = self.eta_run;
+                self.eta_run *= lambda;
+                self.fused_ascent(problem, x, eta);
+                eta
+            }
+            LearningRate::Constant(eta) => {
                 self.fused_ascent(problem, x, eta);
                 eta
             }
@@ -141,6 +183,12 @@ impl OgaState {
     /// y += η·∇q(x, y) touching only the arrived ports (Eq. 30 inline).
     /// Public for the layout-parity suite and the hot-path bench; normal
     /// callers go through [`OgaState::step`].
+    ///
+    /// §Perf-2: the marginal-gain pass is kind-batched — one utility
+    /// family dispatch per [`KindIndex`] run, then a branch-free
+    /// contiguous sweep; the Eq. 27 penalty is a second strided pass
+    /// over the k* lane (f' is evaluated at the pre-update y either
+    /// way, so the two-pass split is exact up to rounding).
     pub fn fused_ascent(&mut self, problem: &Problem, x: &[f64], eta: f64) {
         let k_n = problem.num_resources;
         self.scratch_quota.resize(k_n, 0.0);
@@ -167,30 +215,28 @@ impl OgaState {
                     kstar = k;
                 }
             }
+            for run in self.kinds.port_runs(l) {
+                run.kind.ascend_slice(
+                    &mut self.y[run.lo..run.hi],
+                    &self.kinds.alpha_flat[run.lo..run.hi],
+                    eta * x_l,
+                );
+            }
+            let pen = eta * x_l * problem.beta[kstar];
             for e in edges {
                 let r = g.edge_instance[e];
                 if !self.dirty[r] {
                     self.dirty[r] = true;
                     self.dirty_list.push(r);
                 }
-                let base = e * k_n;
-                let rk = r * k_n;
-                for k in 0..k_n {
-                    let yv = self.y[base + k];
-                    let fp = problem.kind[rk + k].grad(yv, problem.alpha[rk + k]);
-                    let pen = if k == kstar { problem.beta[k] } else { 0.0 };
-                    self.y[base + k] = yv + eta * x_l * (fp - pen);
-                }
+                self.y[e * k_n + kstar] -= pen;
             }
         }
     }
 
-    fn mark_dirty_from_arrivals(&mut self, problem: &Problem, x: &[f64]) {
+    fn mark_dirty_from_grad_ports(&mut self, problem: &Problem) {
         let g = &problem.graph;
-        for l in 0..problem.num_ports() {
-            if x[l] == 0.0 {
-                continue;
-            }
+        for &l in &self.grad_ports {
             for e in g.port_edges(l) {
                 let r = g.edge_instance[e];
                 if !self.dirty[r] {
@@ -298,6 +344,60 @@ mod tests {
         let lr = LearningRate::Decay { eta0: 25.0, lambda: 0.9 };
         assert!((lr.eta(&p, 0, 1.0) - 25.0).abs() < 1e-12);
         assert!((lr.eta(&p, 2, 1.0) - 25.0 * 0.81).abs() < 1e-9);
+    }
+
+    #[test]
+    fn running_eta_matches_closed_form() {
+        // the Decay schedule is maintained multiplicatively in step();
+        // the closed form eta0 * lambda^t is the parity reference
+        let p = synthesize(&Scenario::small());
+        let lr = LearningRate::Decay { eta0: 2.0, lambda: 0.999 };
+        let mut s = OgaState::new(&p, lr, 0);
+        let x = vec![1.0; p.num_ports()];
+        for t in 0..500 {
+            let used = s.step(&p, &x);
+            let want = lr.eta(&p, t, 0.0);
+            assert!(
+                (used - want).abs() <= 1e-9 * want.max(1.0),
+                "t={t}: recurrence {used} vs closed form {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_sparse_path_matches_full_reference() {
+        // the Oracle branch computes gradient/norm/ascent only on the
+        // arrived ports' slices; it must equal the naive full-buffer
+        // two-pass step (gradient is zero off the arrived neighborhood)
+        let p = synthesize(&Scenario::small());
+        let kinds = KindIndex::build(&p);
+        let horizon = 40;
+        let lr = LearningRate::Oracle { horizon };
+        let mut s = OgaState::new(&p, lr, 0);
+        let mut y_ref = vec![0.0; p.decision_len()];
+        let mut grad = vec![0.0; p.decision_len()];
+        let mut scratch = GradScratch::default();
+        let mut rng = crate::utils::rng::Rng::new(11);
+        for t in 0..12 {
+            let x: Vec<f64> = (0..p.num_ports())
+                .map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 })
+                .collect();
+            s.step(&p, &x);
+            gradient::gradient(&p, &kinds, &x, &y_ref, &mut grad, &mut scratch);
+            let eta = lr.eta(&p, t, gradient::grad_norm(&grad));
+            for i in 0..y_ref.len() {
+                y_ref[i] += eta * grad[i];
+            }
+            project(&p, &mut y_ref, 0);
+            for i in 0..y_ref.len() {
+                assert!(
+                    (s.y[i] - y_ref[i]).abs() < 1e-9,
+                    "t={t} i={i}: sparse {} vs full {}",
+                    s.y[i],
+                    y_ref[i]
+                );
+            }
+        }
     }
 
     #[test]

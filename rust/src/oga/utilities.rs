@@ -93,6 +93,75 @@ impl UtilityKind {
     pub fn varpi(self, alpha: f64) -> f64 {
         self.grad(0.0, alpha)
     }
+
+    // --- kind-batched slice kernels (§Perf-2) -------------------------
+    //
+    // The hot loops dispatch on the family once per same-kind run (see
+    // model::KindIndex) and then stream one of these over a contiguous
+    // slice.  Each helper is monomorphic in the family at the call site,
+    // so the inner `value`/`grad` match constant-folds away and the loop
+    // body is branch-free; per-element semantics are identical to the
+    // scalar calculus above (including the y ≥ 0 clamp).
+
+    /// Σ_i f(y_i, α_i) over a run.
+    pub fn value_sum(self, y: &[f64], alpha: &[f64]) -> f64 {
+        match self {
+            UtilityKind::Linear => value_sum_with(UtilityKind::Linear, y, alpha),
+            UtilityKind::Log => value_sum_with(UtilityKind::Log, y, alpha),
+            UtilityKind::Reciprocal => value_sum_with(UtilityKind::Reciprocal, y, alpha),
+            UtilityKind::Poly => value_sum_with(UtilityKind::Poly, y, alpha),
+        }
+    }
+
+    /// out_i = scale · f'(y_i, α_i) over a run.
+    pub fn grad_into(self, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
+        match self {
+            UtilityKind::Linear => grad_into_with(UtilityKind::Linear, y, alpha, scale, out),
+            UtilityKind::Log => grad_into_with(UtilityKind::Log, y, alpha, scale, out),
+            UtilityKind::Reciprocal => {
+                grad_into_with(UtilityKind::Reciprocal, y, alpha, scale, out)
+            }
+            UtilityKind::Poly => grad_into_with(UtilityKind::Poly, y, alpha, scale, out),
+        }
+    }
+
+    /// y_i += scale · f'(y_i, α_i) over a run (the fused-ascent body;
+    /// f' is evaluated at the pre-update y_i).
+    pub fn ascend_slice(self, y: &mut [f64], alpha: &[f64], scale: f64) {
+        match self {
+            UtilityKind::Linear => ascend_with(UtilityKind::Linear, y, alpha, scale),
+            UtilityKind::Log => ascend_with(UtilityKind::Log, y, alpha, scale),
+            UtilityKind::Reciprocal => ascend_with(UtilityKind::Reciprocal, y, alpha, scale),
+            UtilityKind::Poly => ascend_with(UtilityKind::Poly, y, alpha, scale),
+        }
+    }
+}
+
+#[inline(always)]
+fn value_sum_with(kind: UtilityKind, y: &[f64], alpha: &[f64]) -> f64 {
+    debug_assert_eq!(y.len(), alpha.len());
+    let mut acc = 0.0;
+    for (v, &a) in y.iter().zip(alpha) {
+        acc += kind.value(*v, a);
+    }
+    acc
+}
+
+#[inline(always)]
+fn grad_into_with(kind: UtilityKind, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
+    debug_assert_eq!(y.len(), alpha.len());
+    debug_assert_eq!(y.len(), out.len());
+    for i in 0..y.len() {
+        out[i] = scale * kind.grad(y[i], alpha[i]);
+    }
+}
+
+#[inline(always)]
+fn ascend_with(kind: UtilityKind, y: &mut [f64], alpha: &[f64], scale: f64) {
+    debug_assert_eq!(y.len(), alpha.len());
+    for (v, &a) in y.iter_mut().zip(alpha) {
+        *v += scale * kind.grad(*v, a);
+    }
 }
 
 /// The per-experiment utility assignment policy (Fig. 7 sweeps these).
@@ -210,6 +279,32 @@ mod tests {
             assert_eq!(UtilityMix::from_name(&mix.name()), Some(mix));
         }
         assert_eq!(UtilityMix::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn slice_kernels_match_scalar_calculus() {
+        // value_sum / grad_into / ascend_slice are the batched forms of
+        // value/grad — same numbers, element by element
+        let y = [0.0, 0.4, 1.7, 3.2, -0.3];
+        let alpha = [1.0, 1.25, 1.5, 0.8, 2.0];
+        let scale = 0.75;
+        for kind in UtilityKind::ALL {
+            let want_sum: f64 =
+                y.iter().zip(&alpha).map(|(&v, &a)| kind.value(v, a)).sum();
+            assert!((kind.value_sum(&y, &alpha) - want_sum).abs() < 1e-12, "{}", kind.name());
+            let mut out = [9.0; 5];
+            kind.grad_into(&y, &alpha, scale, &mut out);
+            for i in 0..y.len() {
+                let want = scale * kind.grad(y[i], alpha[i]);
+                assert!((out[i] - want).abs() < 1e-15, "{} grad at {i}", kind.name());
+            }
+            let mut asc = y;
+            kind.ascend_slice(&mut asc, &alpha, scale);
+            for i in 0..y.len() {
+                let want = y[i] + scale * kind.grad(y[i], alpha[i]);
+                assert!((asc[i] - want).abs() < 1e-15, "{} ascend at {i}", kind.name());
+            }
+        }
     }
 
     #[test]

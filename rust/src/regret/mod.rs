@@ -9,10 +9,10 @@
 //! gradient ascent re-using the exact same gradient/projection code the
 //! online algorithm runs.
 
-use crate::model::Problem;
-use crate::oga::gradient::{grad_norm, gradient, GradScratch};
-use crate::oga::projection::project;
-use crate::reward::slot_reward;
+use crate::model::{KindIndex, Problem};
+use crate::oga::gradient::{grad_norm, gradient_sparse, GradScratch};
+use crate::oga::projection::project_instances;
+use crate::reward::{slot_reward, slot_reward_kinds};
 
 /// Result of the offline oracle solve.
 #[derive(Clone, Debug)]
@@ -39,6 +39,12 @@ pub fn arrival_counts(trajectory: &[Vec<f64>], num_ports: usize) -> Vec<f64> {
 /// Solve Eq. 10 by projected full-gradient ascent with diminishing steps
 /// (η_i = η₀/√(i+1)); tracks the best iterate seen (the objective is
 /// concave but the ascent path need not be monotone at finite step size).
+///
+/// §Perf-2: the gradient is zero on ports with n_l = 0 and y starts at
+/// the origin, so every pass — gradient (kind-batched, via
+/// [`gradient_sparse`]), ascent, projection, and objective — is
+/// restricted to the arrived ports' slices and their adjacent
+/// instances; ports that never arrive are never touched.
 pub fn solve_oracle(
     problem: &Problem,
     counts: &[f64],
@@ -46,26 +52,57 @@ pub fn solve_oracle(
     iters: usize,
     workers: usize,
 ) -> Oracle {
+    let k_n = problem.num_resources;
+    let kinds = KindIndex::build(problem);
     let mut y = vec![0.0; problem.decision_len()];
     let mut grad = vec![0.0; problem.decision_len()];
     let mut scratch = GradScratch::default();
+    let mut quota = vec![0.0; k_n];
+    let mut active_ports: Vec<usize> = Vec::new();
+
+    // instances adjacent to any arrived port: the only columns the
+    // ascent can perturb, hence the only channels to re-project
+    let mut seen = vec![false; problem.num_instances()];
+    let mut active_instances = Vec::new();
+    for l in (0..problem.num_ports()).filter(|&l| counts[l] != 0.0) {
+        for e in problem.graph.port_edges(l) {
+            let r = problem.graph.edge_instance[e];
+            if !seen[r] {
+                seen[r] = true;
+                active_instances.push(r);
+            }
+        }
+    }
+
     let mut best_y = y.clone();
-    let mut best_obj = weighted_reward(problem, counts, &y);
+    let mut best_obj = slot_reward_kinds(problem, &kinds, counts, &y, &mut quota).q;
 
     // Scale-free initial step: diam(Y) / ‖∇q(0)‖ keeps the first move
     // inside the polytope's order of magnitude.
-    gradient(problem, counts, &y, &mut grad, &mut scratch);
+    gradient_sparse(problem, &kinds, counts, &y, &mut grad, &mut scratch, &mut active_ports);
     let g0 = grad_norm(&grad).max(1e-12);
     let eta0 = problem.diam_upper() / g0;
 
     for i in 0..iters {
-        gradient(problem, counts, &y, &mut grad, &mut scratch);
+        gradient_sparse(
+            problem,
+            &kinds,
+            counts,
+            &y,
+            &mut grad,
+            &mut scratch,
+            &mut active_ports,
+        );
         let eta = eta0 / ((i + 1) as f64).sqrt();
-        for j in 0..y.len() {
-            y[j] += eta * grad[j];
+        for &l in &active_ports {
+            let lo = problem.graph.port_ptr[l] * k_n;
+            let hi = problem.graph.port_ptr[l + 1] * k_n;
+            for j in lo..hi {
+                y[j] += eta * grad[j];
+            }
         }
-        project(problem, &mut y, workers);
-        let obj = weighted_reward(problem, counts, &y);
+        project_instances(problem, &mut y, &active_instances, workers);
+        let obj = slot_reward_kinds(problem, &kinds, counts, &y, &mut quota).q;
         if obj > best_obj {
             best_obj = obj;
             best_y = y.clone();
@@ -134,12 +171,13 @@ mod tests {
         let mut y = oracle.y_star.clone();
         let mut grad = vec![0.0; y.len()];
         let mut scratch = GradScratch::default();
-        gradient(&p, &counts, &y, &mut grad, &mut scratch);
+        let kinds = KindIndex::build(&p);
+        crate::oga::gradient::gradient(&p, &kinds, &counts, &y, &mut grad, &mut scratch);
         let tiny = 1e-4;
         for j in 0..y.len() {
             y[j] += tiny * grad[j];
         }
-        project(&p, &mut y, 0);
+        crate::oga::projection::project(&p, &mut y, 0);
         let improve = weighted_reward(&p, &counts, &y) - oracle.cumulative_reward;
         assert!(
             improve <= 1e-3 * oracle.cumulative_reward.abs().max(1.0),

@@ -2,7 +2,7 @@
 //! aggregation (Eq. 8), and the Thm. 1 quantities used by the regret
 //! experiments.
 
-use crate::model::Problem;
+use crate::model::{KindIndex, Problem};
 
 /// Decomposed slot reward: q = gain − penalty summed over arrived ports.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -17,12 +17,27 @@ pub struct SlotReward {
 
 /// Per-port reward decomposition for one port (Eq. 7, without the x_l
 /// arrival factor).  `y` is edge-major [E, K], so port l's coordinates
-/// are one contiguous slice.
+/// are one contiguous slice.  Convenience wrapper that allocates its
+/// quota scratch; loop-called code must use [`port_reward_scratch`]
+/// (the seed's version heap-allocated per call inside the slot loop).
 pub fn port_reward(problem: &Problem, l: usize, y: &[f64]) -> (f64, f64) {
+    let mut quota = vec![0.0; problem.num_resources];
+    port_reward_scratch(problem, l, y, &mut quota)
+}
+
+/// Allocation-free per-port reward: caller supplies the [K] quota
+/// scratch.  Returns (gain_l, penalty_l).
+pub fn port_reward_scratch(
+    problem: &Problem,
+    l: usize,
+    y: &[f64],
+    quota: &mut [f64],
+) -> (f64, f64) {
     let k_n = problem.num_resources;
     let g = &problem.graph;
+    debug_assert_eq!(quota.len(), k_n);
     let mut gain = 0.0;
-    let mut quota = vec![0.0; k_n];
+    quota.fill(0.0);
     for e in g.port_edges(l) {
         let base = e * k_n;
         let rk = g.edge_instance[e] * k_n;
@@ -40,13 +55,27 @@ pub fn port_reward(problem: &Problem, l: usize, y: &[f64]) -> (f64, f64) {
 }
 
 /// Slot reward q(x(t), y(t)) with gain/penalty breakdown (Eqs. 7–8).
+/// Convenience wrapper (one scratch allocation per call).
 pub fn slot_reward(problem: &Problem, x: &[f64], y: &[f64]) -> SlotReward {
+    let mut quota = vec![0.0; problem.num_resources];
+    slot_reward_scratch(problem, x, y, &mut quota)
+}
+
+/// Allocation-free slot reward: caller supplies the [K] quota scratch.
+/// This is the plain per-coordinate form, kept as the reference for the
+/// kind-batched [`slot_reward_kinds`] the engine runs.
+pub fn slot_reward_scratch(
+    problem: &Problem,
+    x: &[f64],
+    y: &[f64],
+    quota: &mut [f64],
+) -> SlotReward {
     let mut out = SlotReward::default();
     for l in 0..problem.num_ports() {
         if x[l] == 0.0 {
             continue;
         }
-        let (gain, penalty) = port_reward(problem, l, y);
+        let (gain, penalty) = port_reward_scratch(problem, l, y, quota);
         out.gain += x[l] * gain;
         out.penalty += x[l] * penalty;
         out.q += x[l] * (gain - penalty);
@@ -54,10 +83,15 @@ pub fn slot_reward(problem: &Problem, x: &[f64], y: &[f64]) -> SlotReward {
     out
 }
 
-/// Allocation-free variant used in the hot loop: caller supplies the
-/// [K] quota scratch.
-pub fn slot_reward_scratch(
+/// Kind-batched slot reward (§Perf-2) — the engine's hot-path variant.
+/// The Eq. 51 gain is summed run-by-run through the [`KindIndex`] (one
+/// utility-family dispatch per same-kind run, branch-free contiguous
+/// passes); the quota/penalty term is the same strided accumulation as
+/// the scratch variant.  Cost is O(Σ_{l: x_l>0} |R_l|·K) with no
+/// per-coordinate `match`.
+pub fn slot_reward_kinds(
     problem: &Problem,
+    kinds: &KindIndex,
     x: &[f64],
     y: &[f64],
     quota: &mut [f64],
@@ -71,14 +105,16 @@ pub fn slot_reward_scratch(
             continue;
         }
         let mut gain = 0.0;
+        for run in kinds.port_runs(l) {
+            gain += run
+                .kind
+                .value_sum(&y[run.lo..run.hi], &kinds.alpha_flat[run.lo..run.hi]);
+        }
         quota.fill(0.0);
         for e in g.port_edges(l) {
             let base = e * k_n;
-            let rk = g.edge_instance[e] * k_n;
             for k in 0..k_n {
-                let v = y[base + k];
-                gain += problem.kind[rk + k].value(v, problem.alpha[rk + k]);
-                quota[k] += v;
+                quota[k] += y[base + k];
             }
         }
         let mut penalty = 0.0f64;
@@ -170,6 +206,41 @@ mod tests {
         assert!((a.q - b.q).abs() < 1e-12);
         assert!((a.gain - b.gain).abs() < 1e-12);
         assert!((a.penalty - b.penalty).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kind_batched_variant_matches() {
+        // mixed utility families per (r, k) so every run kind is hit
+        let p = synthesize(&Scenario::small());
+        let kinds = KindIndex::build(&p);
+        kinds.validate(&p).unwrap();
+        let mut rng = Rng::new(9);
+        let y: Vec<f64> = (0..p.decision_len())
+            .map(|_| rng.uniform(0.0, 0.8))
+            .collect();
+        let x: Vec<f64> =
+            (0..p.num_ports()).map(|_| if rng.bernoulli(0.5) { 2.0 } else { 0.0 }).collect();
+        let a = slot_reward(&p, &x, &y);
+        let mut quota = vec![0.0; p.num_resources];
+        let b = slot_reward_kinds(&p, &kinds, &x, &y, &mut quota);
+        assert!((a.q - b.q).abs() < 1e-9 * (1.0 + a.q.abs()));
+        assert!((a.gain - b.gain).abs() < 1e-9 * (1.0 + a.gain.abs()));
+        assert!((a.penalty - b.penalty).abs() < 1e-9 * (1.0 + a.penalty.abs()));
+    }
+
+    #[test]
+    fn port_reward_scratch_matches_convenience() {
+        let p = synthesize(&Scenario::small());
+        let mut rng = Rng::new(3);
+        let y: Vec<f64> =
+            (0..p.decision_len()).map(|_| rng.uniform(0.0, 1.5)).collect();
+        let mut quota = vec![0.0; p.num_resources];
+        for l in 0..p.num_ports() {
+            let (g1, p1) = port_reward(&p, l, &y);
+            let (g2, p2) = port_reward_scratch(&p, l, &y, &mut quota);
+            assert_eq!(g1, g2);
+            assert_eq!(p1, p2);
+        }
     }
 
     #[test]

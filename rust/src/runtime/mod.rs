@@ -93,6 +93,10 @@ pub struct HloOgaSched {
     eta0: f64,
     decay: f64,
     t: usize,
+    /// Running η (η_{t+1} = λ·η_t), matching the native `OgaState`
+    /// recurrence — the old `decay.powi(t as i32)` re-exponentiated per
+    /// slot and truncated the exponent for horizons beyond i32::MAX.
+    eta_run: f64,
     /// Last artifact-reported reward triple (pre-step decision).
     pub last_reward: StepReward,
 }
@@ -105,6 +109,7 @@ impl HloOgaSched {
             eta0,
             decay,
             t: 0,
+            eta_run: eta0,
             last_reward: StepReward::default(),
         })
     }
@@ -130,7 +135,8 @@ impl Policy for HloOgaSched {
         // Reactive scoring, matching schedulers::OgaSched::new (see the
         // semantics note there): observe x(t), run the compiled Alg. 1
         // step, serve the arrivals with the updated allocation.
-        let eta = self.eta0 * self.decay.powi(self.t as i32);
+        let eta = self.eta_run;
+        self.eta_run *= self.decay;
         self.last_reward = self.exec.step(x, eta).expect("PJRT step failed");
         self.exec.current_decision(y);
         self.t += 1;
@@ -139,5 +145,6 @@ impl Policy for HloOgaSched {
     fn reset(&mut self, _problem: &Problem) {
         self.exec.reset();
         self.t = 0;
+        self.eta_run = self.eta0;
     }
 }

@@ -17,30 +17,156 @@
 //! Decisions are written into the edge-major [E, K] tensor (see
 //! `model`); each policy walks edge-id ranges rather than dense rows, so
 //! a slot costs O(|E_x|·K) in the graph's arrived neighborhood.
+//!
+//! §Perf-2 — arrival-scoped writes.  The engine reuses one decision
+//! buffer across slots, so instead of memsetting the whole [E, K]
+//! tensor every `decide`, each baseline runs through a [`Scope`] that
+//! zeroes exactly the columns written *last* slot, hands the policy its
+//! arrived-port worklist, and reports prev ∪ cur instance neighborhoods
+//! as the policy's `Touched` set for the coordinator's incremental
+//! ledger.  The internal remaining-capacity [`Ledger`] restores only
+//! the rows it actually debited, for the same reason.  Net effect: a
+//! baseline slot is O(arrived neighborhood), with nothing proportional
+//! to |E| or R.
 
 use crate::model::Problem;
-use crate::schedulers::Policy;
+use crate::schedulers::{Policy, Touched};
 use crate::utils::rng::Rng;
 
-/// Shared scratch: remaining capacity ledger [R, K] rebuilt each slot.
+/// Shared scratch: remaining capacity ledger [R, K].  Rows are restored
+/// lazily — `begin` rewinds only the instances `take` debited last slot.
 #[derive(Clone, Debug, Default)]
 struct Ledger {
     remaining: Vec<f64>,
+    /// Instances debited since the last `begin` (restored next slot).
+    touched: Vec<usize>,
+    flag: Vec<bool>,
 }
 
 impl Ledger {
     fn begin(&mut self, problem: &Problem) {
-        self.remaining.clear();
-        self.remaining.extend_from_slice(&problem.capacity);
+        if self.remaining.len() != problem.capacity.len()
+            || self.flag.len() != problem.num_instances()
+        {
+            self.remaining.clear();
+            self.remaining.extend_from_slice(&problem.capacity);
+            self.flag.clear();
+            self.flag.resize(problem.num_instances(), false);
+            self.touched.clear();
+            return;
+        }
+        let k_n = problem.num_resources;
+        for &r in &self.touched {
+            let base = r * k_n;
+            self.remaining[base..base + k_n]
+                .copy_from_slice(&problem.capacity[base..base + k_n]);
+            self.flag[r] = false;
+        }
+        self.touched.clear();
     }
 
     /// Take up to `want` of (r, k); returns the granted amount.
     #[inline]
     fn take(&mut self, problem: &Problem, r: usize, k: usize, want: f64) -> f64 {
+        if !self.flag[r] {
+            self.flag[r] = true;
+            self.touched.push(r);
+        }
         let slot = &mut self.remaining[r * problem.num_resources + k];
         let got = want.min(*slot).max(0.0);
         *slot -= got;
         got
+    }
+
+    fn reset(&mut self) {
+        self.remaining.clear();
+    }
+}
+
+/// Per-slot write scope shared by the reactive baselines (§Perf-2; see
+/// the module docs).  Tracks which port columns the previous `decide`
+/// wrote so only those are zeroed, which instances this slot's arrivals
+/// reach (`active`), and the prev ∪ cur instance set (`touched`)
+/// reported to the engine's incremental commit.
+#[derive(Clone, Debug, Default)]
+struct Scope {
+    /// Arrived ports this slot; policies reorder it in place.
+    ports: Vec<usize>,
+    prev_ports: Vec<usize>,
+    /// Instances adjacent to this slot's arrived ports.
+    active: Vec<usize>,
+    /// prev ∪ cur instance neighborhoods — the `Touched` set.
+    touched: Vec<usize>,
+    flag: Vec<bool>,
+    len: usize,
+    primed: bool,
+    full_last: bool,
+}
+
+impl Scope {
+    /// Prepare `y` for this slot's writes: zero last slot's columns (or
+    /// the whole tensor on the first call / after a shape change),
+    /// collect the arrived ports and the touched-instance sets.
+    fn begin(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
+        let k_n = problem.num_resources;
+        let g = &problem.graph;
+        if !self.primed || self.len != y.len() || self.flag.len() != problem.num_instances() {
+            y.fill(0.0);
+            self.prev_ports.clear();
+            self.flag.clear();
+            self.flag.resize(problem.num_instances(), false);
+            self.len = y.len();
+            self.primed = true;
+            self.full_last = true;
+        } else {
+            self.full_last = false;
+            for &l in &self.prev_ports {
+                let lo = g.port_ptr[l] * k_n;
+                let hi = g.port_ptr[l + 1] * k_n;
+                y[lo..hi].fill(0.0);
+            }
+        }
+        self.ports.clear();
+        self.ports.extend((0..problem.num_ports()).filter(|&l| x[l] > 0.0));
+        self.active.clear();
+        self.touched.clear();
+        for &l in &self.ports {
+            for e in g.port_edges(l) {
+                let r = g.edge_instance[e];
+                if !self.flag[r] {
+                    self.flag[r] = true;
+                    self.active.push(r);
+                }
+            }
+        }
+        self.touched.extend_from_slice(&self.active);
+        for &l in &self.prev_ports {
+            for e in g.port_edges(l) {
+                let r = g.edge_instance[e];
+                if !self.flag[r] {
+                    self.flag[r] = true;
+                    self.touched.push(r);
+                }
+            }
+        }
+        for &r in &self.touched {
+            self.flag[r] = false;
+        }
+        self.prev_ports.clear();
+        self.prev_ports.extend_from_slice(&self.ports);
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        if self.full_last {
+            Touched::All
+        } else {
+            Touched::Instances(&self.touched)
+        }
+    }
+
+    fn reset(&mut self) {
+        self.primed = false;
+        self.prev_ports.clear();
     }
 }
 
@@ -93,11 +219,17 @@ fn budget_channels(n_channels: usize) -> f64 {
 
 pub struct Drf {
     ledger: Ledger,
+    scope: Scope,
+    /// Dominant shares per port, cached on first decide — they depend
+    /// only on the problem's demands/capacities, so recomputing the
+    /// O(|R_l|·K) score inside every sort comparison would put a
+    /// static quantity on the per-slot hot path.
+    shares: Vec<f64>,
 }
 
 impl Drf {
     pub fn new() -> Self {
-        Drf { ledger: Ledger::default() }
+        Drf { ledger: Ledger::default(), scope: Scope::default(), shares: Vec::new() }
     }
 
     /// Dominant share s_l = max_k a_l^k / Σ_{r∈R_l} c_r^k.
@@ -129,26 +261,37 @@ impl Policy for Drf {
     }
 
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
-        y.fill(0.0);
+        self.scope.begin(problem, x, y);
         self.ledger.begin(problem);
-        let mut ports: Vec<usize> =
-            (0..problem.num_ports()).filter(|&l| x[l] > 0.0).collect();
-        ports.sort_by(|&a, &b| {
-            Drf::dominant_share(problem, a)
-                .partial_cmp(&Drf::dominant_share(problem, b))
-                .unwrap()
-        });
-        greedy_fill(problem, &ports, &mut self.ledger, y);
+        if self.shares.len() != problem.num_ports() {
+            self.shares =
+                (0..problem.num_ports()).map(|l| Drf::dominant_share(problem, l)).collect();
+        }
+        let shares = &self.shares;
+        self.scope.ports.sort_by(|&a, &b| shares[a].partial_cmp(&shares[b]).unwrap());
+        greedy_fill(problem, &self.scope.ports, &mut self.ledger, y);
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.scope.reset();
+        self.ledger.reset();
+        self.shares.clear();
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.scope.touched()
     }
 }
 
 // ----------------------------------------------------------- FAIRNESS --
 
-pub struct Fairness;
+pub struct Fairness {
+    scope: Scope,
+}
 
 impl Fairness {
     pub fn new() -> Self {
-        Fairness
+        Fairness { scope: Scope::default() }
     }
 }
 
@@ -164,14 +307,13 @@ impl Policy for Fairness {
     }
 
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
-        y.fill(0.0);
+        self.scope.begin(problem, x, y);
         let k_n = problem.num_resources;
         let g = &problem.graph;
-        for r in 0..problem.num_instances() {
+        // only instances adjacent to an arrived port can receive a
+        // share — exactly the scope's active set
+        for &r in &self.scope.active {
             let edges = g.instance_edge_ids(r);
-            if !edges.iter().any(|&e| x[g.edge_port[e]] > 0.0) {
-                continue;
-            }
             for k in 0..k_n {
                 let total_demand: f64 = edges
                     .iter()
@@ -195,18 +337,27 @@ impl Policy for Fairness {
             }
         }
     }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.scope.reset();
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.scope.touched()
+    }
 }
 
 // --------------------------------------------- BINPACKING / SPREADING --
 
 pub struct BinPacking {
     ledger: Ledger,
+    scope: Scope,
     order: Vec<usize>,
 }
 
 impl BinPacking {
     pub fn new() -> Self {
-        BinPacking { ledger: Ledger::default(), order: Vec::new() }
+        BinPacking { ledger: Ledger::default(), scope: Scope::default(), order: Vec::new() }
     }
 }
 
@@ -222,11 +373,11 @@ impl Policy for BinPacking {
     }
 
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
-        y.fill(0.0);
+        self.scope.begin(problem, x, y);
         self.ledger.begin(problem);
         let k_n = problem.num_resources;
         let g = &problem.graph;
-        for l in (0..problem.num_ports()).filter(|&l| x[l] > 0.0) {
+        for &l in &self.scope.ports {
             let n_channels = g.port_edges(l).len();
             self.order.clear();
             self.order.extend(g.port_edges(l));
@@ -253,16 +404,26 @@ impl Policy for BinPacking {
             }
         }
     }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.scope.reset();
+        self.ledger.reset();
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.scope.touched()
+    }
 }
 
 pub struct Spreading {
     ledger: Ledger,
+    scope: Scope,
     order: Vec<usize>,
 }
 
 impl Spreading {
     pub fn new() -> Self {
-        Spreading { ledger: Ledger::default(), order: Vec::new() }
+        Spreading { ledger: Ledger::default(), scope: Scope::default(), order: Vec::new() }
     }
 }
 
@@ -278,11 +439,11 @@ impl Policy for Spreading {
     }
 
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
-        y.fill(0.0);
+        self.scope.begin(problem, x, y);
         self.ledger.begin(problem);
         let k_n = problem.num_resources;
         let g = &problem.graph;
-        for l in (0..problem.num_ports()).filter(|&l| x[l] > 0.0) {
+        for &l in &self.scope.ports {
             let n_channels = g.port_edges(l).len();
             self.order.clear();
             self.order.extend(g.port_edges(l));
@@ -306,6 +467,15 @@ impl Policy for Spreading {
             }
         }
     }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.scope.reset();
+        self.ledger.reset();
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.scope.touched()
+    }
 }
 
 // -------------------------------------------------------- RandomAlloc --
@@ -314,12 +484,13 @@ impl Policy for Spreading {
 /// serious policy must beat it).
 pub struct RandomAlloc {
     ledger: Ledger,
+    scope: Scope,
     rng: Rng,
 }
 
 impl RandomAlloc {
     pub fn new(seed: u64) -> Self {
-        RandomAlloc { ledger: Ledger::default(), rng: Rng::new(seed) }
+        RandomAlloc { ledger: Ledger::default(), scope: Scope::default(), rng: Rng::new(seed) }
     }
 }
 
@@ -329,14 +500,12 @@ impl Policy for RandomAlloc {
     }
 
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
-        y.fill(0.0);
+        self.scope.begin(problem, x, y);
         self.ledger.begin(problem);
         let k_n = problem.num_resources;
         let g = &problem.graph;
-        let mut ports: Vec<usize> =
-            (0..problem.num_ports()).filter(|&l| x[l] > 0.0).collect();
-        self.rng.shuffle(&mut ports);
-        for &l in &ports {
+        self.rng.shuffle(&mut self.scope.ports);
+        for &l in &self.scope.ports {
             for e in g.port_edges(l) {
                 let r = g.edge_instance[e];
                 let base = e * k_n;
@@ -347,6 +516,15 @@ impl Policy for RandomAlloc {
                 }
             }
         }
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.scope.reset();
+        self.ledger.reset();
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.scope.touched()
     }
 }
 
@@ -419,6 +597,52 @@ mod tests {
                             "{} allocated to absent port {l}",
                             pol.name()
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_writes_match_fresh_buffer_decisions() {
+        // A decides into one persistent buffer (the engine contract);
+        // B — an identical policy — gets a freshly zeroed buffer every
+        // slot.  A correct decision has all non-arrived columns at zero,
+        // so the two must agree exactly; this pins the scope's
+        // zero-last-slot bookkeeping under changing sparse arrivals.
+        let p = scarce_problem();
+        let mut rng = crate::utils::rng::Rng::new(99);
+        let arrivals: Vec<Vec<f64>> = (0..25)
+            .map(|_| {
+                (0..p.num_ports())
+                    .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let pairs: Vec<(Box<dyn Policy>, Box<dyn Policy>)> = vec![
+            (Box::new(Drf::new()), Box::new(Drf::new())),
+            (Box::new(Fairness::new()), Box::new(Fairness::new())),
+            (Box::new(BinPacking::new()), Box::new(BinPacking::new())),
+            (Box::new(Spreading::new()), Box::new(Spreading::new())),
+            (Box::new(RandomAlloc::new(5)), Box::new(RandomAlloc::new(5))),
+        ];
+        for (mut a, mut b) in pairs {
+            let mut y_a = vec![0.0; p.decision_len()];
+            for (t, x) in arrivals.iter().enumerate() {
+                a.decide(&p, x, &mut y_a);
+                let mut y_b = vec![0.0; p.decision_len()];
+                b.decide(&p, x, &mut y_b);
+                assert_eq!(y_a, y_b, "{} diverged at t={t}", a.name());
+                // the touched set must cover every arrived instance
+                if let Touched::Instances(list) = a.touched() {
+                    for l in (0..p.num_ports()).filter(|&l| x[l] > 0.0) {
+                        for &r in &p.graph.ports_to_instances[l] {
+                            assert!(
+                                list.contains(&r),
+                                "{}: touched set misses instance {r}",
+                                a.name()
+                            );
+                        }
                     }
                 }
             }

@@ -22,7 +22,7 @@
 
 use crate::model::Problem;
 use crate::oga::projection::{project, project_instances};
-use crate::schedulers::Policy;
+use crate::schedulers::{IncrementalPublisher, Policy, Touched};
 
 /// Seed allocation (fraction of the per-channel cap) so multiplicative
 /// updates have something to multiply.
@@ -37,11 +37,19 @@ pub struct OgaMirror {
     eta0: f64,
     decay: f64,
     workers: usize,
-    t: usize,
+    /// Slot counter (diagnostic; η is maintained in `eta_run`).
+    pub t: usize,
+    /// Running η (η_{t+1} = λ·η_t), replacing the per-slot
+    /// `decay.powi(t as i32)` re-exponentiation (§Perf-2; the i32 cast
+    /// also truncated for horizons beyond i32::MAX).
+    eta_run: f64,
     quota: Vec<f64>,
     /// Dirty-instance tracking (same trick as `OgaState::step`).
     dirty: Vec<bool>,
     dirty_list: Vec<usize>,
+    /// Incremental publish into the engine's reused output buffer
+    /// (shared state machine with `OgaSched`).
+    publisher: IncrementalPublisher,
 }
 
 impl OgaMirror {
@@ -52,9 +60,11 @@ impl OgaMirror {
             decay,
             workers,
             t: 0,
+            eta_run: eta0,
             quota: vec![0.0; problem.num_resources],
             dirty: vec![false; problem.num_instances()],
             dirty_list: Vec::new(),
+            publisher: IncrementalPublisher::default(),
         };
         pol.seed(problem);
         pol
@@ -72,6 +82,8 @@ impl OgaMirror {
         // the seed touches every edge, so this one projection is global
         project(problem, &mut self.y, self.workers);
         self.t = 0;
+        self.eta_run = self.eta0;
+        self.publisher.reset();
     }
 
     /// One mirror step: multiplicative update on arrived ports' lanes
@@ -80,7 +92,8 @@ impl OgaMirror {
     fn step(&mut self, problem: &Problem, x: &[f64]) {
         let k_n = problem.num_resources;
         let g = &problem.graph;
-        let eta = self.eta0 * self.decay.powi(self.t as i32);
+        let eta = self.eta_run;
+        self.eta_run *= self.decay;
         for &r in &self.dirty_list {
             self.dirty[r] = false;
         }
@@ -135,13 +148,19 @@ impl Policy for OgaMirror {
     }
 
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
-        // reactive scoring, matching OgaSched::new
+        // reactive scoring, matching OgaSched::new; the multiplicative
+        // update perturbs only the dirty instances, so publishing is an
+        // incremental column copy after the first slot (§Perf-2)
         self.step(problem, x);
-        y.copy_from_slice(&self.y);
+        self.publisher.publish(problem, &self.y, y, &self.dirty_list);
     }
 
     fn reset(&mut self, problem: &Problem) {
         self.seed(problem);
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.publisher.touched()
     }
 }
 

@@ -16,6 +16,22 @@ pub use mirror::OgaMirror;
 pub use multi_arrival::MultiArrivalOga;
 pub use oga_sched::OgaSched;
 
+/// Which part of the decision tensor the last `decide` call may have
+/// changed, relative to the previous decision the policy emitted into
+/// the same buffer (§Perf-2).
+#[derive(Clone, Copy, Debug)]
+pub enum Touched<'a> {
+    /// Treat the whole tensor as rewritten (the safe default; forces
+    /// the engine's full-sweep ledger commit).
+    All,
+    /// Only the edge columns of these instances changed.  The engine
+    /// then commits O(Σ_r |L_r|·K) over the listed rows instead of the
+    /// |E|·K full sweep (`ClusterState::commit_instances`).  A policy
+    /// may only report this when every other coordinate of the buffer
+    /// it filled is bit-identical to its previous decision.
+    Instances(&'a [usize]),
+}
+
 /// A per-slot scheduling policy.
 ///
 /// `decide` fills the edge-major decision tensor `y` [E, K] (see
@@ -25,6 +41,12 @@ pub use oga_sched::OgaSched;
 /// x(t) to place arrived jobs, while *learning* policies (OGASCHED)
 /// return the reservation y(t) they committed before seeing x(t) and use
 /// x(t) only to update toward y(t+1), exactly as Def. 2 prescribes.
+///
+/// Buffer contract: the engine passes the *same* output buffer to every
+/// `decide` of a run (zero-initialized before the first slot).  Sparse
+/// policies exploit that — they rewrite only the columns that changed
+/// and report them via [`Policy::touched`]; a policy that writes into
+/// fresh buffers per call must keep the `Touched::All` default.
 pub trait Policy {
     fn name(&self) -> &'static str;
 
@@ -32,12 +54,131 @@ pub trait Policy {
 
     /// Reset internal state between runs (default: nothing).
     fn reset(&mut self, _problem: &Problem) {}
+
+    /// Dirty set of the last `decide` (see [`Touched`]).  OGASCHED
+    /// reports its dirty instances, the baselines their arrived
+    /// neighborhoods; the default keeps the full-sweep commit.
+    fn touched(&self) -> Touched<'_> {
+        Touched::All
+    }
+}
+
+/// Copy the edge columns of the listed instances from `src` to `dst`
+/// (both edge-major [E, K]) — the incremental "publish" step of the
+/// sparse policies' `decide`.
+pub(crate) fn copy_instance_columns(
+    problem: &Problem,
+    src: &[f64],
+    dst: &mut [f64],
+    instances: &[usize],
+) {
+    let k_n = problem.num_resources;
+    for &r in instances {
+        for &e in problem.graph.instance_edge_ids(r) {
+            let base = e * k_n;
+            dst[base..base + k_n].copy_from_slice(&src[base..base + k_n]);
+        }
+    }
+}
+
+/// Process-wide run epoch: engines bump it when they start a fresh run
+/// with a fresh output buffer (`coordinator::Leader::run` does), and
+/// every [`IncrementalPublisher`] re-primes with a full copy when the
+/// epoch has moved.  This closes the silent-staleness trap where a new
+/// run's buffer lands at the freed address of the old one (allocator
+/// reuse) and a pointer-identity check alone would mistake it for the
+/// previous buffer.  Spurious bumps from concurrent runs only cost an
+/// extra full copy — never correctness.
+static RUN_EPOCH: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Declare the start of a fresh engine run (see [`RUN_EPOCH`]).
+pub fn begin_run_epoch() {
+    RUN_EPOCH.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+}
+
+fn run_epoch() -> u64 {
+    RUN_EPOCH.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Incremental decision publisher shared by the sparse learning
+/// policies (OGASCHED and the mirror variant): copies only the
+/// perturbed instances' columns into the engine's reused output buffer
+/// and reports them as the policy's [`Touched`] set.
+///
+/// The output buffer is identified by address + length + run epoch; a
+/// `decide` into a different buffer — or after a new engine run began
+/// ([`begin_run_epoch`]) — re-primes with a full copy, so
+/// fresh-buffer-per-call tests and policies reused across runs stay
+/// correct automatically.
+#[derive(Clone, Debug)]
+pub(crate) struct IncrementalPublisher {
+    touched: Vec<usize>,
+    last_ptr: usize,
+    last_len: usize,
+    last_epoch: u64,
+    full_last: bool,
+}
+
+impl Default for IncrementalPublisher {
+    fn default() -> Self {
+        IncrementalPublisher {
+            touched: Vec::new(),
+            last_ptr: 0,
+            last_len: 0,
+            last_epoch: 0,
+            full_last: true,
+        }
+    }
+}
+
+impl IncrementalPublisher {
+    /// Publish `src` into `dst`: incremental (only `dirty` instances'
+    /// columns) when `dst` is the buffer of the previous publish within
+    /// the same run epoch, full copy otherwise.
+    pub(crate) fn publish(
+        &mut self,
+        problem: &Problem,
+        src: &[f64],
+        dst: &mut [f64],
+        dirty: &[usize],
+    ) {
+        let ptr = dst.as_ptr() as usize;
+        let epoch = run_epoch();
+        if ptr == self.last_ptr && dst.len() == self.last_len && epoch == self.last_epoch {
+            self.touched.clear();
+            self.touched.extend_from_slice(dirty);
+            copy_instance_columns(problem, src, dst, &self.touched);
+            self.full_last = false;
+        } else {
+            dst.copy_from_slice(src);
+            self.last_ptr = ptr;
+            self.last_len = dst.len();
+            self.last_epoch = epoch;
+            self.full_last = true;
+        }
+    }
+
+    pub(crate) fn touched(&self) -> Touched<'_> {
+        if self.full_last {
+            Touched::All
+        } else {
+            Touched::Instances(&self.touched)
+        }
+    }
+
+    pub(crate) fn reset(&mut self) {
+        self.touched.clear();
+        self.last_ptr = 0;
+        self.last_len = 0;
+        self.full_last = true;
+    }
 }
 
 /// Construct every policy of the paper's Fig. 2 comparison, OGASCHED
-/// first (order matters for the figure legends).
+/// first (order matters for the figure legends).  Boxed `Send` so
+/// `coordinator::run_lineup` can fan the runs out over the worker pool.
 pub fn paper_lineup(problem: &Problem, eta0: f64, decay: f64, workers: usize)
-    -> Vec<Box<dyn Policy>> {
+    -> Vec<Box<dyn Policy + Send>> {
     vec![
         Box::new(OgaSched::new(problem, eta0, decay, workers)),
         Box::new(Drf::new()),

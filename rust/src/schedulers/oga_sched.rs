@@ -8,13 +8,21 @@
 
 use crate::model::Problem;
 use crate::oga::{LearningRate, OgaState};
-use crate::schedulers::Policy;
+use crate::schedulers::{IncrementalPublisher, Policy, Touched};
 
 pub struct OgaSched {
     state: OgaState,
     eta0: f64,
     decay: f64,
     workers: usize,
+    /// Incremental publish into the engine's reused output buffer
+    /// (§Perf-2): only the columns the step changed are rewritten, and
+    /// they double as the policy's `Touched` report.
+    publisher: IncrementalPublisher,
+    /// Reservation mode only: the dirty set of the last internal step,
+    /// which the *next* decide will publish (decide(t) emits the
+    /// pre-step y(t), i.e. the state after step t−1).
+    pending: Vec<usize>,
     /// Scoring semantics.  `false` = the literal Def. 2 reading: slot t
     /// is served by the reservation y(t) committed *before* x(t) was
     /// observed (what the regret proof bounds).  `true` = the paper's
@@ -40,6 +48,8 @@ impl OgaSched {
             eta0,
             decay,
             workers,
+            publisher: IncrementalPublisher::default(),
+            pending: Vec::new(),
             reactive: true,
         }
     }
@@ -58,6 +68,8 @@ impl OgaSched {
             eta0: 0.0,
             decay: 0.0,
             workers,
+            publisher: IncrementalPublisher::default(),
+            pending: Vec::new(),
             reactive: false,
         }
     }
@@ -75,14 +87,20 @@ impl Policy for OgaSched {
     fn decide(&mut self, problem: &Problem, x: &[f64], y: &mut [f64]) {
         if self.reactive {
             // Alg. 1 at the head of the slot: observe x(t), step, serve
-            // the arrivals with the updated allocation.
+            // the arrivals with the updated allocation.  The step only
+            // perturbs its dirty instances, so publishing the decision
+            // copies exactly those columns (§Perf-2).
             self.state.step(problem, x);
-            y.copy_from_slice(&self.state.y);
+            self.publisher.publish(problem, &self.state.y, y, self.state.dirty_instances());
         } else {
-            // Def. 2 reservation: commit the pre-arrival y(t) ...
-            y.copy_from_slice(&self.state.y);
+            // Def. 2 reservation: commit the pre-arrival y(t), which
+            // differs from the previously emitted y(t−1) by the dirty
+            // set of the step taken at the end of slot t−1 ...
+            self.publisher.publish(problem, &self.state.y, y, &self.pending);
             // ... then learn from x(t) toward y(t+1).
             self.state.step(problem, x);
+            self.pending.clear();
+            self.pending.extend_from_slice(self.state.dirty_instances());
         }
     }
 
@@ -93,6 +111,12 @@ impl Policy for OgaSched {
             self.state.lr
         };
         self.state = OgaState::new(problem, lr, self.workers);
+        self.publisher.reset();
+        self.pending.clear();
+    }
+
+    fn touched(&self) -> Touched<'_> {
+        self.publisher.touched()
     }
 }
 
@@ -132,6 +156,59 @@ mod tests {
         pol.reset(&p);
         pol.decide(&p, &x, &mut y);
         assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn incremental_publish_matches_raw_state_trajectory() {
+        // decide() rewrites only the dirty columns of the reused output
+        // buffer; the buffer must still equal the full state trajectory
+        // under sparse, changing arrivals
+        let p = synthesize(&Scenario::small());
+        let mut rng = crate::utils::rng::Rng::new(41);
+        let arrivals: Vec<Vec<f64>> = (0..30)
+            .map(|_| {
+                (0..p.num_ports())
+                    .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        // reactive: emitted y(t) == state after step t
+        let mut pol = OgaSched::new(&p, 5.0, 0.999, 0);
+        let mut shadow = OgaState::new(
+            &p,
+            LearningRate::Decay { eta0: 5.0, lambda: 0.999 },
+            0,
+        );
+        let mut y = vec![0.0; p.decision_len()];
+        for x in &arrivals {
+            pol.decide(&p, x, &mut y);
+            shadow.step(&p, x);
+            assert_eq!(y, shadow.y);
+            // Touched::All can legitimately occur at any slot (another
+            // test's Leader::run bumping the run epoch forces a
+            // conservative full publish); when the publish was
+            // incremental, the reported set must be the dirty set.
+            if let Touched::Instances(list) = pol.touched() {
+                let mut got = list.to_vec();
+                got.sort_unstable();
+                let mut want = shadow.dirty_instances().to_vec();
+                want.sort_unstable();
+                assert_eq!(got, want);
+            }
+        }
+        // reservation: emitted y(t) == state *before* step t
+        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, 0);
+        let mut shadow = OgaState::new(
+            &p,
+            LearningRate::Decay { eta0: 5.0, lambda: 0.999 },
+            0,
+        );
+        let mut y = vec![9.0; p.decision_len()];
+        for x in &arrivals {
+            pol.decide(&p, x, &mut y);
+            assert_eq!(y, shadow.y);
+            shadow.step(&p, x);
+        }
     }
 
     #[test]

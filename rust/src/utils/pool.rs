@@ -216,6 +216,35 @@ where
     out
 }
 
+/// Parallel map over a mutable slice: run `f(i, &mut items[i])` for
+/// every index, collecting the results in index order.  Each item is
+/// visited by exactly one worker, so `f` gets exclusive access — this
+/// is the fan-out primitive for independent stateful tasks (e.g. one
+/// scheduler run per policy in `coordinator::run_lineup`).
+pub fn parallel_map_mut<T, U, F>(items: &mut [T], workers: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send + Default + Clone,
+    F: Fn(usize, &mut T) -> U + Sync,
+{
+    let n = items.len();
+    let mut out = vec![U::default(); n];
+    if n == 0 {
+        return out;
+    }
+    {
+        let slots = SyncSlice::new(&mut out);
+        let base = SyncSlice::new(items);
+        parallel_for(n, workers.min(n).max(1), |i| {
+            // SAFETY: parallel_for hands each index to exactly one task,
+            // so item i and output slot i are touched by one thread.
+            let item = unsafe { &mut base.slice_mut(i, i + 1)[0] };
+            unsafe { slots.write(i, f(i, item)) };
+        });
+    }
+    out
+}
+
 /// Split `data` into `chunks` contiguous mutable pieces and run
 /// `f(chunk_index, start_offset, piece)` on each in parallel.
 pub fn for_each_mut_chunks<T, F>(data: &mut [T], chunks: usize, f: F)
@@ -323,6 +352,21 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map(257, 7, |i| i * 3);
         assert_eq!(out, (0..257).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_mut_mutates_and_collects() {
+        let mut items: Vec<usize> = (0..123).collect();
+        let out = parallel_map_mut(&mut items, 6, |i, item| {
+            *item += 1;
+            i * 2
+        });
+        assert_eq!(items, (1..124).collect::<Vec<_>>());
+        assert_eq!(out, (0..123).map(|i| i * 2).collect::<Vec<_>>());
+        // empty input is a no-op
+        let mut empty: Vec<usize> = Vec::new();
+        let out: Vec<usize> = parallel_map_mut(&mut empty, 4, |_, _| unreachable!());
+        assert!(out.is_empty());
     }
 
     #[test]

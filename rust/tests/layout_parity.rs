@@ -10,16 +10,16 @@
 //! step, and the slot reward are each pinned to the dense oracle.
 
 use ogasched::graph::Bipartite;
-use ogasched::model::Problem;
+use ogasched::model::{KindIndex, Problem};
 use ogasched::oga::dense_ref::{
     self, dense_idx, dense_len, fused_ascent_dense, gradient_dense, project_dense_serial,
     slot_reward_dense, DenseOgaState,
 };
-use ogasched::oga::gradient::{gradient, GradScratch};
+use ogasched::oga::gradient::{gradient, gradient_sparse, GradScratch};
 use ogasched::oga::projection::project;
 use ogasched::oga::utilities::UtilityKind;
 use ogasched::oga::{LearningRate, OgaState};
-use ogasched::reward::slot_reward;
+use ogasched::reward::{slot_reward, slot_reward_kinds};
 use ogasched::utils::prop::{check, ensure, Size};
 use ogasched::utils::rng::Rng;
 
@@ -121,16 +121,52 @@ fn compare_layouts(
 
 #[test]
 fn gradient_matches_dense_reference() {
+    // the CSR gradient is now kind-batched (KindIndex runs + a separate
+    // penalty-lane pass); the dense reference keeps the seed's scalar
+    // per-coordinate form, so this also pins the kind-batched kernels
+    // on mixed-utility problems
     check("parity-gradient", 120, |rng, size| {
         let p = random_problem(rng, size);
+        let kinds = KindIndex::build(&p);
+        kinds.validate(&p).map_err(|e| format!("kind index: {e}"))?;
         let x = random_arrivals(rng, &p);
         let y = random_decision(rng, &p, 0.0, 3.0);
         let y_dense = dense_ref::to_dense(&p, &y);
         let mut g_csr = vec![1.0; p.decision_len()];
-        gradient(&p, &x, &y, &mut g_csr, &mut GradScratch::default());
+        gradient(&p, &kinds, &x, &y, &mut g_csr, &mut GradScratch::default());
         let mut g_dense = vec![1.0; dense_len(&p)];
         gradient_dense(&p, &x, &y_dense, &mut g_dense);
         compare_layouts(&p, &g_csr, &g_dense, Some(0.0), 1e-12, "gradient")
+    });
+}
+
+#[test]
+fn sparse_gradient_matches_dense_reference_across_slots() {
+    // gradient_sparse keeps state (the previously filled slices) across
+    // calls; over a sequence of changing arrival sets it must stay
+    // equal to the memset-based dense reference every slot
+    check("parity-gradient-sparse", 60, |rng, size| {
+        let p = random_problem(rng, size);
+        let kinds = KindIndex::build(&p);
+        let mut g_csr = vec![0.0; p.decision_len()];
+        let mut active = Vec::new();
+        let mut scratch = GradScratch::default();
+        for t in 0..5 {
+            let x = random_arrivals(rng, &p);
+            let y = random_decision(rng, &p, 0.0, 3.0);
+            gradient_sparse(&p, &kinds, &x, &y, &mut g_csr, &mut scratch, &mut active);
+            let mut g_dense = vec![1.0; dense_len(&p)];
+            gradient_dense(&p, &x, &dense_ref::to_dense(&p, &y), &mut g_dense);
+            compare_layouts(
+                &p,
+                &g_csr,
+                &g_dense,
+                Some(0.0),
+                1e-12,
+                &format!("sparse gradient t={t}"),
+            )?;
+        }
+        Ok(())
     });
 }
 
@@ -178,19 +214,34 @@ fn projection_matches_dense_reference() {
 
 #[test]
 fn slot_reward_matches_dense_reference() {
+    // both the plain scratch form and the kind-batched hot-path form
+    // are pinned to the dense oracle on mixed-utility problems
     check("parity-reward", 120, |rng, size| {
         let p = random_problem(rng, size);
+        let kinds = KindIndex::build(&p);
         let x = random_arrivals(rng, &p);
         let y = random_decision(rng, &p, 0.0, 2.0);
         let y_dense = dense_ref::to_dense(&p, &y);
         let a = slot_reward(&p, &x, &y);
         let b = slot_reward_dense(&p, &x, &y_dense);
+        let mut quota = vec![0.0; p.num_resources];
+        let c = slot_reward_kinds(&p, &kinds, &x, &y, &mut quota);
         ensure((a.q - b.q).abs() < 1e-9, || format!("q: {} vs {}", a.q, b.q))?;
         ensure((a.gain - b.gain).abs() < 1e-9, || {
             format!("gain: {} vs {}", a.gain, b.gain)
         })?;
         ensure((a.penalty - b.penalty).abs() < 1e-9, || {
             format!("penalty: {} vs {}", a.penalty, b.penalty)
+        })?;
+        let tol = 1e-9 * (1.0 + b.gain.abs());
+        ensure((c.q - b.q).abs() < tol, || {
+            format!("kind-batched q: {} vs {}", c.q, b.q)
+        })?;
+        ensure((c.gain - b.gain).abs() < tol, || {
+            format!("kind-batched gain: {} vs {}", c.gain, b.gain)
+        })?;
+        ensure((c.penalty - b.penalty).abs() < tol, || {
+            format!("kind-batched penalty: {} vs {}", c.penalty, b.penalty)
         })
     });
 }

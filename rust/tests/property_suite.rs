@@ -3,6 +3,7 @@
 //! with random problems rather than fixed fixtures.
 
 use ogasched::config::{GraphSpec, Scenario};
+use ogasched::model::KindIndex;
 use ogasched::oga::gradient::{gradient, GradScratch};
 use ogasched::oga::projection::project;
 use ogasched::oga::utilities::{UtilityKind, UtilityMix};
@@ -110,7 +111,8 @@ fn gradient_is_ascent_direction() {
             }
         }
         let mut g = vec![0.0; p.decision_len()];
-        gradient(&p, &x, &y, &mut g, &mut GradScratch::default());
+        let kinds = KindIndex::build(&p);
+        gradient(&p, &kinds, &x, &y, &mut g, &mut GradScratch::default());
         let before = slot_reward(&p, &x, &y).q;
         let eps = 1e-7;
         for i in 0..y.len() {

@@ -1,33 +1,43 @@
 #!/usr/bin/env python3
-"""Layout-speedup proxy for the Rust hot path (EXPERIMENTS.md §Perf).
+"""Structural perf proxy for the Rust hot path (EXPERIMENTS.md §Perf, §Perf-2).
 
 The offline image this repo grows in ships no Rust toolchain, so the
 `benches/hot_path.rs` numbers cannot be regenerated here.  This script
-mirrors the two per-slot OGA step implementations *structurally 1:1*
-(same loops, same operation counts, same channel projector) in pure
-Python:
+mirrors the per-slot implementations *structurally 1:1* (same loops,
+same operation counts, same channel projector) in pure Python:
 
-  * dense  — the seed's [L, R, K] layout: fused ascent over arrived
+Layout section (PR 1, kept as the cross-PR baseline):
+  * dense — the seed's [L, R, K] layout: fused ascent over arrived
     ports, then a full projection that re-zeroes every off-edge
     coordinate of every instance (O(L*R*K)) and projects all R*K
     channels;
-  * csr    — the edge-major [E, K] layout with dirty-instance tracking:
-    fused ascent over arrived edge ranges, then projection of only the
-    instances adjacent to arrived ports, with no off-edge coordinates to
-    re-zero.
+  * csr   — the edge-major [E, K] layout with dirty-instance tracking.
+
+Pipeline section (PR 2, this PR's before/after pair): the *full leader
+slot* — decide (OGA step) + ledger commit + reward + release — under
+sparse Bernoulli(0.1) arrivals:
+  * pr1 — PR 1's engine: per-coordinate utility-kind dispatch in the
+    ascent/reward inner loops, full-sweep commit (scatter over all
+    |E|*K coordinates plus an R*K clamp pass), release as an R*K
+    capacity copy;
+  * pr2 — this PR: kind-batched runs (one dispatch per same-kind run,
+    tight inner loops), incremental commit over only the dirty
+    instances' rows, lazy release (flag flip).
 
 Because both sides pay identical interpreter overhead per primitive
-operation, the dense/csr *ratio* approximates the Rust ratio of the same
-loops (it excludes the seed's additional ~100us/worker thread::scope
-spawn cost on the dense side, so it is a conservative lower bound for
-the parallel path).  Regenerate the real numbers with
-`cargo bench --bench hot_path` -> BENCH_hot_path.json once a toolchain
-is available.
+operation, each pr1/pr2 *ratio* approximates the Rust ratio of the same
+loops (it cannot see cache effects or vectorization, both of which
+favor the batched/sparse side, so it is a conservative lower bound).
+Regenerate the real numbers with `cargo bench --bench hot_path`
+-> BENCH_hot_path.json once a toolchain is available.
 """
 
 import json
+import math
 import random
 import time
+
+KINDS = ("linear", "log", "reciprocal", "poly")
 
 
 def make_problem(L, R, K, density, seed):
@@ -72,12 +82,76 @@ def make_problem(L, R, K, density, seed):
     capacity = [[rng.uniform(2.0, 6.0) for _ in range(K)] for _ in range(R)]
     alpha = [[rng.uniform(1.0, 1.5) for _ in range(K)] for _ in range(R)]
     beta = [rng.uniform(0.3, 0.5) for _ in range(K)]
+    kind = [[rng.randrange(4) for _ in range(K)] for _ in range(R)]
+    E = len(edge_port)
+    # flattened per-coordinate tables + same-kind runs per port
+    # (mirrors model::KindIndex)
+    kind_flat = [0] * (E * K)
+    alpha_flat = [0.0] * (E * K)
+    for e in range(E):
+        r = edge_instance[e]
+        for k in range(K):
+            kind_flat[e * K + k] = kind[r][k]
+            alpha_flat[e * K + k] = alpha[r][k]
+    port_runs = [[] for _ in range(L)]
+    for l in range(L):
+        lo = port_ptr[l] * K
+        hi = port_ptr[l + 1] * K
+        c = lo
+        while c < hi:
+            kk = kind_flat[c]
+            start = c
+            while c < hi and kind_flat[c] == kk:
+                c += 1
+            port_runs[l].append((start, c, kk))
     return dict(L=L, R=R, K=K, ports_to_instances=ports_to_instances,
                 instances_to_ports=instances_to_ports, port_ptr=port_ptr,
                 edge_instance=edge_instance, edge_port=edge_port,
                 instance_edges=instance_edges, has_edge=has_edge,
                 demand=demand, capacity=capacity, alpha=alpha, beta=beta,
-                E=len(edge_port))
+                kind=kind, kind_flat=kind_flat, alpha_flat=alpha_flat,
+                port_runs=port_runs, E=E)
+
+
+def project_instance_csr(p, r, y):
+    """Project all K channels of instance r in place — mirrors
+    rust/src/oga/projection.rs::project_instance: an allocation-free
+    clipped-sum fast path per channel, with the event sweep only when
+    the capacity actually binds (Rust reuses per-thread scratch; the
+    comprehension-per-channel the proxy used before charged the sparse
+    side a Python-only allocation cost the Rust code never pays)."""
+    K = p["K"]
+    edges = p["instance_edges"][r]
+    demand = p["demand"]
+    edge_port = p["edge_port"]
+    for k in range(K):
+        cap_rk = p["capacity"][r][k]
+        used = 0.0
+        for e in edges:
+            z = y[e * K + k]
+            a = demand[edge_port[e]][k]
+            if z < 0.0:
+                z = 0.0
+            elif z > a:
+                z = a
+            used += z
+        if used <= cap_rk:
+            for e in edges:
+                c = e * K + k
+                z = y[c]
+                a = demand[edge_port[e]][k]
+                if z < 0.0:
+                    z = 0.0
+                elif z > a:
+                    z = a
+                y[c] = z
+            continue
+        # capacity binds: gather and run the event sweep
+        vals = [y[e * K + k] for e in edges]
+        caps = [demand[edge_port[e]][k] for e in edges]
+        out = project_channel(vals, caps, cap_rk)
+        for i, e in enumerate(edges):
+            y[e * K + k] = out[i]
 
 
 def project_channel(vals, caps, capacity):
@@ -119,6 +193,37 @@ def project_channel(vals, caps, capacity):
     return [min(max(z - tau, 0.0), a) for z, a in zip(vals, caps)]
 
 
+# -------------------------------------------------- utility calculus --
+
+def grad_scalar(kind, y, a):
+    """Per-coordinate f'(y) with the if/elif chain the PR 1 inner loops
+    paid per coordinate (mirrors the hoisted UtilityKind::grad match)."""
+    if y < 0.0:
+        y = 0.0
+    if kind == 0:
+        return a
+    elif kind == 1:
+        return a / (y + 1.0)
+    elif kind == 2:
+        d = y + a
+        return 1.0 / (d * d)
+    else:
+        return a / (2.0 * math.sqrt(y + 1.0))
+
+
+def value_scalar(kind, y, a):
+    if y < 0.0:
+        y = 0.0
+    if kind == 0:
+        return a * y
+    elif kind == 1:
+        return a * math.log(y + 1.0)
+    elif kind == 2:
+        return 1.0 / a - 1.0 / (y + a)
+    else:
+        return a * math.sqrt(y + 1.0) - a
+
+
 # --------------------------------------------------------------- dense --
 
 def dense_step(p, y, x, eta):
@@ -140,6 +245,9 @@ def dense_step(p, y, x, eta):
                 pen = p["beta"][k] if k == kstar else 0.0
                 y[base + k] += eta * xl * (p["alpha"][r][k] - pen)
     # full dense projection: off-edge re-zeroing + all R*K channels
+    # (same allocation-free fast path as the CSR side; only the layout
+    # and the per-slot work differ)
+    demand = p["demand"]
     for r in range(R):
         for l in range(L):
             if not p["has_edge"][l][r]:
@@ -150,16 +258,40 @@ def dense_step(p, y, x, eta):
         if not ports:
             continue
         for k in range(K):
+            cap_rk = p["capacity"][r][k]
+            used = 0.0
+            for l in ports:
+                z = y[(l * R + r) * K + k]
+                a = demand[l][k]
+                if z < 0.0:
+                    z = 0.0
+                elif z > a:
+                    z = a
+                used += z
+            if used <= cap_rk:
+                for l in ports:
+                    c = (l * R + r) * K + k
+                    z = y[c]
+                    a = demand[l][k]
+                    if z < 0.0:
+                        z = 0.0
+                    elif z > a:
+                        z = a
+                    y[c] = z
+                continue
             vals = [y[(l * R + r) * K + k] for l in ports]
-            caps = [p["demand"][l][k] for l in ports]
-            out = project_channel(vals, caps, p["capacity"][r][k])
+            caps = [demand[l][k] for l in ports]
+            out = project_channel(vals, caps, cap_rk)
             for i, l in enumerate(ports):
                 y[(l * R + r) * K + k] = out[i]
 
 
 # ----------------------------------------------------------------- csr --
 
-def csr_step(p, y, x, eta, dirty, dirty_list):
+def csr_step(p, y, x, eta, dirty, dirty_list, batched):
+    """One OGA slot on the edge-major layout.  batched=False mirrors the
+    PR 1 inner loops (per-coordinate kind dispatch); batched=True mirrors
+    §Perf-2 (one dispatch per same-kind run + penalty-lane pass)."""
     L, K = p["L"], p["K"]
     del dirty_list[:]
     for l in range(L):
@@ -173,26 +305,172 @@ def csr_step(p, y, x, eta, dirty, dirty_list):
             for k in range(K):
                 quota[k] += y[base + k]
         kstar = max(range(K), key=lambda k: p["beta"][k] * quota[k])
-        for e in range(lo, hi):
-            r = p["edge_instance"][e]
-            if not dirty[r]:
-                dirty[r] = True
-                dirty_list.append(r)
-            base = e * K
-            for k in range(K):
-                pen = p["beta"][k] if k == kstar else 0.0
-                y[base + k] += eta * xl * (p["alpha"][r][k] - pen)
+        if batched:
+            scale = eta * xl
+            for start, stop, kk in p["port_runs"][l]:
+                af = p["alpha_flat"]
+                if kk == 0:
+                    for c in range(start, stop):
+                        y[c] += scale * af[c]
+                elif kk == 1:
+                    for c in range(start, stop):
+                        yv = y[c] if y[c] > 0.0 else 0.0
+                        y[c] += scale * (af[c] / (yv + 1.0))
+                elif kk == 2:
+                    for c in range(start, stop):
+                        yv = y[c] if y[c] > 0.0 else 0.0
+                        d = yv + af[c]
+                        y[c] += scale / (d * d)
+                else:
+                    for c in range(start, stop):
+                        yv = y[c] if y[c] > 0.0 else 0.0
+                        y[c] += scale * af[c] / (2.0 * math.sqrt(yv + 1.0))
+            pen = scale * p["beta"][kstar]
+            for e in range(lo, hi):
+                r = p["edge_instance"][e]
+                if not dirty[r]:
+                    dirty[r] = True
+                    dirty_list.append(r)
+                y[e * K + kstar] -= pen
+        else:
+            for e in range(lo, hi):
+                r = p["edge_instance"][e]
+                if not dirty[r]:
+                    dirty[r] = True
+                    dirty_list.append(r)
+                base = e * K
+                for k in range(K):
+                    pen = p["beta"][k] if k == kstar else 0.0
+                    fp = grad_scalar(p["kind"][r][k], y[base + k], p["alpha"][r][k])
+                    y[base + k] += eta * xl * (fp - pen)
     # project only the dirty instances; nothing to re-zero
     for r in dirty_list:
-        edges = p["instance_edges"][r]
-        for k in range(K):
-            vals = [y[e * K + k] for e in edges]
-            caps = [p["demand"][p["edge_port"][e]][k] for e in edges]
-            out = project_channel(vals, caps, p["capacity"][r][k])
-            for i, e in enumerate(edges):
-                y[e * K + k] = out[i]
+        project_instance_csr(p, r, y)
     for r in dirty_list:
         dirty[r] = False
+
+
+# ------------------------------------------------------------- ledgers --
+
+def commit_full(p, y, usage):
+    """PR 1 ClusterState::commit — zero usage, scatter all |E|*K, then
+    an R*K clamp/accumulate pass."""
+    R, K = p["R"], p["K"]
+    for i in range(R * K):
+        usage[i] = 0.0
+    for e in range(p["E"]):
+        rbase = p["edge_instance"][e] * K
+        base = e * K
+        for k in range(K):
+            usage[rbase + k] += y[base + k]
+    committed = 0.0
+    for r in range(R):
+        for k in range(K):
+            used = usage[r * K + k]
+            cap = p["capacity"][r][k]
+            if used > cap * (1.0 + 1e-5) + 1e-6 and used > 0.0:
+                committed += cap
+                usage[r * K + k] = cap
+            else:
+                committed += used
+    return committed
+
+
+def release_full(p, remaining):
+    """PR 1 release — full R*K capacity copy."""
+    R, K = p["R"], p["K"]
+    for r in range(R):
+        for k in range(K):
+            remaining[r * K + k] = p["capacity"][r][k]
+
+
+def commit_dirty(p, y, usage, totals, instances):
+    """§Perf-2 ClusterState::commit_instances — re-derive only the dirty
+    rows, maintain the running total by deltas."""
+    K = p["K"]
+    for r in instances:
+        base = r * K
+        old = 0.0
+        for k in range(K):
+            old += usage[base + k]
+        row = [0.0] * K
+        for e in p["instance_edges"][r]:
+            eb = e * K
+            for k in range(K):
+                row[k] += y[eb + k]
+        new = 0.0
+        for k in range(K):
+            used = row[k]
+            cap = p["capacity"][r][k]
+            if used > cap * (1.0 + 1e-5) + 1e-6 and used > 0.0:
+                used = cap
+            usage[base + k] = used
+            new += used
+        totals[0] += new - old
+    return totals[0]
+
+
+# -------------------------------------------------------------- reward --
+
+def reward_scalar(p, x, y):
+    """PR 1 slot reward — per-coordinate kind dispatch."""
+    L, K = p["L"], p["K"]
+    q = 0.0
+    for l in range(L):
+        xl = x[l]
+        if xl == 0.0:
+            continue
+        lo, hi = p["port_ptr"][l], p["port_ptr"][l + 1]
+        gain = 0.0
+        quota = [0.0] * K
+        for e in range(lo, hi):
+            r = p["edge_instance"][e]
+            base = e * K
+            for k in range(K):
+                v = y[base + k]
+                gain += value_scalar(p["kind"][r][k], v, p["alpha"][r][k])
+                quota[k] += v
+        pen = max(p["beta"][k] * quota[k] for k in range(K))
+        q += xl * (gain - max(pen, 0.0))
+    return q
+
+
+def reward_batched(p, x, y):
+    """§Perf-2 slot_reward_kinds — one dispatch per same-kind run."""
+    L, K = p["L"], p["K"]
+    af = p["alpha_flat"]
+    q = 0.0
+    for l in range(L):
+        xl = x[l]
+        if xl == 0.0:
+            continue
+        gain = 0.0
+        for start, stop, kk in p["port_runs"][l]:
+            if kk == 0:
+                for c in range(start, stop):
+                    yv = y[c] if y[c] > 0.0 else 0.0
+                    gain += af[c] * yv
+            elif kk == 1:
+                for c in range(start, stop):
+                    yv = y[c] if y[c] > 0.0 else 0.0
+                    gain += af[c] * math.log(yv + 1.0)
+            elif kk == 2:
+                for c in range(start, stop):
+                    yv = y[c] if y[c] > 0.0 else 0.0
+                    gain += 1.0 / af[c] - 1.0 / (yv + af[c])
+            else:
+                for c in range(start, stop):
+                    yv = y[c] if y[c] > 0.0 else 0.0
+                    gain += af[c] * math.sqrt(yv + 1.0) - af[c]
+        lo, hi = p["port_ptr"][l], p["port_ptr"][l + 1]
+        quota = [0.0] * K
+        for e in range(lo, hi):
+            base = e * K
+            for k in range(K):
+                quota[k] += y[base + k]
+        pen = max(p["beta"][k] * quota[k] for k in range(K))
+        q += xl * (gain - max(pen, 0.0))
+    return q
 
 
 def bench(fn, warmup, iters):
@@ -206,8 +484,8 @@ def bench(fn, warmup, iters):
     return sum(samples) / len(samples), min(samples)
 
 
-def main():
-    rows = []
+def layout_section(rows):
+    """PR 1's dense vs CSR step comparison (kept for the perf record)."""
     for name, L, R, K, density, warm, iters in [
         ("small 4x16x4", 4, 16, 4, 3.0, 3, 30),
         ("default 10x128x6", 10, 128, 6, 3.0, 3, 20),
@@ -225,7 +503,8 @@ def main():
         dirty = [False] * R
         dirty_list = []
         mean_c, min_c = bench(
-            lambda: csr_step(p, y_csr, x, eta, dirty, dirty_list), warm, iters
+            lambda: csr_step(p, y_csr, x, eta, dirty, dirty_list, batched=True),
+            warm, iters,
         )
 
         rows.append(dict(name=name, E=p["E"], dense_coords=L * R * K,
@@ -236,9 +515,208 @@ def main():
         print(f"{name:<20} dense {mean_d*1e3:9.3f} ms   csr {mean_c*1e3:9.3f} ms"
               f"   speedup {mean_d/mean_c:6.2f}x   (|E|K={p['E']*K}"
               f" vs LRK={L*R*K})")
+
+
+def oracle_step(p, y, x, grad, eta_scale, dirty, dirty_list, active_ports, sparse):
+    """One Eq. 50 oracle-rate OGA slot (the Thm. 1 configuration every
+    regret experiment runs).  sparse=False mirrors PR 1: gradient into a
+    memset |E|*K buffer, norm and ascent over the whole buffer.
+    sparse=True mirrors §Perf-2 (gradient_sparse / grad_norm_ports):
+    zero only the previously filled slices, then gradient, norm and
+    ascent touch the arrived ports' slices alone."""
+    L, K, E = p["L"], p["K"], p["E"]
+    del dirty_list[:]
+    if sparse:
+        for l in active_ports:
+            for c in range(p["port_ptr"][l] * K, p["port_ptr"][l + 1] * K):
+                grad[c] = 0.0
+        del active_ports[:]
+    else:
+        for c in range(E * K):
+            grad[c] = 0.0
+    for l in range(L):
+        xl = x[l]
+        if xl == 0.0:
+            continue
+        active_ports.append(l)
+        lo, hi = p["port_ptr"][l], p["port_ptr"][l + 1]
+        quota = [0.0] * K
+        for e in range(lo, hi):
+            base = e * K
+            for k in range(K):
+                quota[k] += y[base + k]
+        kstar = max(range(K), key=lambda k: p["beta"][k] * quota[k])
+        for e in range(lo, hi):
+            r = p["edge_instance"][e]
+            if not dirty[r]:
+                dirty[r] = True
+                dirty_list.append(r)
+            base = e * K
+            for k in range(K):
+                pen = p["beta"][k] if k == kstar else 0.0
+                fp = grad_scalar(p["kind"][r][k], y[base + k], p["alpha"][r][k])
+                grad[base + k] = xl * (fp - pen)
+    if sparse:
+        norm = 0.0
+        for l in active_ports:
+            for c in range(p["port_ptr"][l] * K, p["port_ptr"][l + 1] * K):
+                g = grad[c]
+                norm += g * g
+    else:
+        norm = 0.0
+        for c in range(E * K):
+            g = grad[c]
+            norm += g * g
+    eta = eta_scale / max(math.sqrt(norm), 1e-9)
+    if sparse:
+        for l in active_ports:
+            for c in range(p["port_ptr"][l] * K, p["port_ptr"][l + 1] * K):
+                y[c] += eta * grad[c]
+    else:
+        for c in range(E * K):
+            y[c] += eta * grad[c]
+    for r in dirty_list:
+        project_instance_csr(p, r, y)
+    for r in dirty_list:
+        dirty[r] = False
+
+
+def pipeline_section(rows):
+    """§Perf-2: the full leader slot (decide incl. publish + commit +
+    score + release) under sparse Bernoulli(0.1) arrivals — PR 1 engine
+    vs the arrival-sparse pipeline, for both learning-rate schedules.
+
+    PR 1 per-slot |E|-proportional costs removed by this PR: the decide
+    publish (`y.copy_from_slice` of the whole tensor), the full-sweep
+    commit scatter + R*K clamp pass, the R*K release copy, and — on the
+    oracle schedule — the gradient memset, full-buffer norm and
+    full-buffer ascent."""
+    for name, L, R, K, density, warm, iters in [
+        ("default 10x128x6", 10, 128, 6, 3.0, 3, 20),
+        ("large 100x1024x6", 100, 1024, 6, 3.0, 2, 15),
+    ]:
+        p = make_problem(L, R, K, density, seed=2023)
+        E = p["E"]
+        eta = 0.5
+
+        def run_pipeline(pr2, schedule):
+            rng = random.Random(17)
+            y = [0.0] * (E * K)
+            y_out = [0.0] * (E * K)
+            grad = [0.0] * (E * K)
+            dirty = [False] * R
+            dirty_list = []
+            active_ports = []
+            usage = [0.0] * (R * K)
+            remaining = [0.0] * (R * K)
+            totals = [0.0]
+            x = [0.0] * L
+
+            def slot():
+                for l in range(L):
+                    x[l] = 1.0 if rng.random() < 0.1 else 0.0
+                if schedule == "decay":
+                    csr_step(p, y, x, eta, dirty, dirty_list, batched=pr2)
+                else:
+                    oracle_step(p, y, x, grad, 2.0, dirty, dirty_list,
+                                active_ports, sparse=pr2)
+                if pr2:
+                    # publish only the dirty columns into the engine buffer
+                    for r in dirty_list:
+                        for e in p["instance_edges"][r]:
+                            b = e * K
+                            for k in range(K):
+                                y_out[b + k] = y[b + k]
+                    commit_dirty(p, y_out, usage, totals, dirty_list)
+                    reward_batched(p, x, y_out)
+                    # lazy release: flag flip, nothing to do
+                else:
+                    # PR 1 decide published the whole tensor every slot
+                    for c in range(E * K):
+                        y_out[c] = y[c]
+                    commit_full(p, y_out, usage)
+                    reward_scalar(p, x, y_out)
+                    release_full(p, remaining)
+
+            # batch slots per timed sample: averages out the Bernoulli
+            # arrival variance (zero-arrival slots are near-free on the
+            # sparse side — by design — which would make single-slot
+            # minima unrepresentative of the typical slot)
+            batch = 10
+
+            def sample(slot=slot):
+                for _ in range(batch):
+                    slot()
+
+            return sample, batch
+
+        for schedule in ("decay", "oracle"):
+            f1, batch = run_pipeline(False, schedule)
+            mean_1, min_1 = bench(f1, warm, iters)
+            f2, _ = run_pipeline(True, schedule)
+            mean_2, min_2 = bench(f2, warm, iters)
+            mean_1, min_1 = mean_1 / batch, min_1 / batch
+            mean_2, min_2 = mean_2 / batch, min_2 / batch
+            rows.append(dict(name=name, schedule=schedule,
+                             section="pipeline-sparse10",
+                             pr1_ms=mean_1 * 1e3, pr2_ms=mean_2 * 1e3,
+                             pr1_ms_min=min_1 * 1e3, pr2_ms_min=min_2 * 1e3,
+                             speedup=mean_1 / mean_2,
+                             speedup_min=min_1 / min_2))
+            print(f"slot sparse10 {schedule:<6} {name:<20}"
+                  f" pr1 {mean_1*1e3:9.3f} ms   pr2 {mean_2*1e3:9.3f} ms"
+                  f"   speedup {mean_1/mean_2:6.2f}x"
+                  f" (min {min_1/min_2:.2f}x)")
+
+
+def main():
+    layout_rows = []
+    layout_section(layout_rows)
+    pipeline_rows = []
+    pipeline_section(pipeline_rows)
     with open("perf_proxy.json", "w") as f:
-        json.dump(rows, f, indent=2)
+        json.dump(dict(layout=layout_rows, pipeline=pipeline_rows), f, indent=2)
     print("wrote perf_proxy.json")
+
+    # refresh the cross-PR perf record with proxy provenance (overwritten
+    # by the first real `cargo bench --bench hot_path` run)
+    entries = []
+    for row in layout_rows:
+        entries.append(dict(name=f"dense-ref OGA step {row['name']}", iters=0,
+                            ns_per_op=round(row["dense_ms"] * 1e6, 1),
+                            ns_per_op_min=round(row["dense_ms_min"] * 1e6, 1),
+                            std_ns=0.0))
+        entries.append(dict(name=f"native OGA step   {row['name']}", iters=0,
+                            ns_per_op=round(row["csr_ms"] * 1e6, 1),
+                            ns_per_op_min=round(row["csr_ms_min"] * 1e6, 1),
+                            std_ns=0.0))
+    for row in pipeline_rows:
+        sched = row["schedule"]
+        entries.append(dict(
+            name=f"leader slot sparse10 {sched} full {row['name']}", iters=0,
+            ns_per_op=round(row["pr1_ms"] * 1e6, 1),
+            ns_per_op_min=round(row["pr1_ms_min"] * 1e6, 1),
+            std_ns=0.0))
+        entries.append(dict(
+            name=f"leader slot sparse10 {sched} incr {row['name']}", iters=0,
+            ns_per_op=round(row["pr2_ms"] * 1e6, 1),
+            ns_per_op_min=round(row["pr2_ms_min"] * 1e6, 1),
+            std_ns=0.0))
+    doc = dict(
+        bench="hot_path",
+        note=("python structural proxy (scripts/perf_proxy.py): this container "
+              "has no Rust toolchain; overwrite by running `cargo bench --bench "
+              "hot_path`. Ratios are a conservative lower bound for the Rust "
+              "speedups (see EXPERIMENTS.md §Perf, §Perf-2). NB the PR-2 proxy "
+              "re-measured the layout rows with updated proxy code (kind-"
+              "batched csr step, allocation-free projection fast path on both "
+              "sides), so dense-ref/native rows are not comparable to the "
+              "PR-1 committed values — harness change, not a perf change."),
+        entries=entries,
+    )
+    with open("BENCH_hot_path.json", "w") as f:
+        json.dump(doc, f, indent=2)
+    print("wrote BENCH_hot_path.json")
 
 
 if __name__ == "__main__":
