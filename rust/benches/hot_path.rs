@@ -14,8 +14,7 @@
 
 use ogasched::benchlib::{time_fn, Reporter};
 use ogasched::config::Scenario;
-use ogasched::coordinator::ClusterState;
-use ogasched::model::KindIndex;
+use ogasched::coordinator::{ClusterState, ShardedLeader};
 use ogasched::oga::dense_ref::DenseOgaState;
 use ogasched::oga::gradient::{grad_norm, gradient, GradScratch};
 use ogasched::oga::projection::{project, project_instances};
@@ -36,7 +35,7 @@ fn main() {
     ] {
         scenario.horizon = 1;
         let p = synthesize(&scenario);
-        let kinds = KindIndex::build(&p);
+        let kinds = p.kinds();
         let mut rng = Rng::new(5);
         let x: Vec<f64> = (0..p.num_ports())
             .map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 })
@@ -46,7 +45,7 @@ fn main() {
         let mut grad = vec![0.0; p.decision_len()];
         let mut scratch = GradScratch::default();
         rep.record(time_fn(&format!("gradient          {name}"), 3, 50, || {
-            gradient(&p, &kinds, &x, &y, &mut grad, &mut scratch);
+            gradient(&p, kinds, &x, &y, &mut grad, &mut scratch);
             std::hint::black_box(&grad);
         }));
         rep.record(time_fn(&format!("projection(auto)  {name}"), 3, 50, || {
@@ -59,7 +58,7 @@ fn main() {
             std::hint::black_box(slot_reward_scratch(&p, &x, &y, &mut quota));
         }));
         rep.record(time_fn(&format!("reward(kinds)     {name}"), 3, 50, || {
-            std::hint::black_box(slot_reward_kinds(&p, &kinds, &x, &y, &mut quota));
+            std::hint::black_box(slot_reward_kinds(&p, kinds, &x, &y, &mut quota));
         }));
         let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);
         rep.record(time_fn(&format!("native OGA step   {name}"), 3, 50, || {
@@ -90,7 +89,7 @@ fn main() {
         let mut scenario = Scenario::large_scale();
         scenario.horizon = 1;
         let p = synthesize(&scenario);
-        let kinds = KindIndex::build(&p);
+        let kinds = p.kinds();
         let mut quota = vec![0.0; p.num_resources];
 
         let make_policy = |schedule: &str| -> OgaSched {
@@ -119,7 +118,7 @@ fn main() {
                             Touched::Instances(list) => st.commit_instances(&p, &mut y, list),
                         };
                         std::hint::black_box(report);
-                        std::hint::black_box(slot_reward_kinds(&p, &kinds, &x, &y, &mut quota));
+                        std::hint::black_box(slot_reward_kinds(&p, kinds, &x, &y, &mut quota));
                         st.release();
                     },
                 ));
@@ -156,7 +155,7 @@ fn main() {
                             pol.decide(&p, &x, &mut y);
                         } else {
                             // PR 1's oracle decide: full-buffer two-pass
-                            gradient(&p, &kinds, &x, &y, &mut grad, &mut gs);
+                            gradient(&p, kinds, &x, &y, &mut grad, &mut gs);
                             let eta = lr.eta(&p, 0, grad_norm(&grad));
                             for i in 0..y.len() {
                                 y[i] += eta * grad[i];
@@ -185,6 +184,35 @@ fn main() {
                     },
                 ));
             }
+        }
+    }
+
+    // ---- §Perf-3: sharded single-slot pipeline, large scenario ----
+    // The same sparse10 leader slot driven through the ShardedLeader at
+    // 1/2/4/8 shards: decide (per-shard ascent/projection via the bound
+    // plan) + sharded commit + sharded reward + release.  shard1 is the
+    // single-worker overhead row (plan bound, everything inline); the
+    // incr row above is the serial-leader baseline it should match.
+    {
+        let mut scenario = Scenario::large_scale();
+        scenario.horizon = 1;
+        let p = synthesize(&scenario);
+        for shards in [1usize, 2, 4, 8] {
+            let mut leader = ShardedLeader::new(&p, shards);
+            let mut pol = OgaSched::new(&p, scenario.eta0, scenario.decay, 0);
+            pol.bind_shards(leader.plan());
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.1, 7);
+            let mut x = vec![0.0; p.num_ports()];
+            let mut y = vec![0.0; p.decision_len()];
+            rep.record(time_fn(
+                &format!("leader slot sparse10 decay shard{shards} large 100x1024x6"),
+                10,
+                200,
+                || {
+                    arr.next(&mut x);
+                    std::hint::black_box(leader.slot(&mut pol, &x, &mut y));
+                },
+            ));
         }
     }
 

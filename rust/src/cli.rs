@@ -81,7 +81,7 @@ COMMANDS:
                --rho F --contention F --eta0 F --decay F --seed N
     compare    run the full paper lineup on one scenario (same options)
     figure     regenerate a paper figure/table:
-               ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|all>
+               ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|all>
                --horizon N   override T (0 = paper scale)
     artifacts  check AOT artifacts and run a PJRT smoke step
     help       show this help

@@ -18,7 +18,7 @@
 use std::time::Instant;
 
 use crate::coordinator::state::ClusterState;
-use crate::model::{KindIndex, Problem};
+use crate::model::Problem;
 use crate::reward::{slot_reward_kinds, SlotReward};
 use crate::schedulers::{Policy, Touched};
 use crate::sim::arrivals::ArrivalModel;
@@ -78,8 +78,6 @@ impl RunResult {
 pub struct Leader<'p> {
     problem: &'p Problem,
     state: ClusterState,
-    /// Kind-grouped runs for the batched reward kernel (§Perf-2).
-    kinds: KindIndex,
     /// Assert that policies never need clamping (on in tests/debug).
     pub strict: bool,
 }
@@ -89,9 +87,13 @@ impl<'p> Leader<'p> {
         Leader {
             problem,
             state: ClusterState::new(problem),
-            kinds: KindIndex::build(problem),
             strict: cfg!(debug_assertions),
         }
+    }
+
+    /// The cluster ledger (diagnostics and the shard-parity suite).
+    pub fn state(&self) -> &ClusterState {
+        &self.state
     }
 
     /// Run `policy` against `arrivals` for `horizon` slots.  Does not
@@ -136,7 +138,7 @@ impl<'p> Leader<'p> {
             }
             result.clamped_total += report.clamped;
             let SlotReward { q, gain, penalty } =
-                slot_reward_kinds(p, &self.kinds, &x, &y, &mut quota);
+                slot_reward_kinds(p, p.kinds(), &x, &y, &mut quota);
             self.state.release();
             result.cumulative_reward += q;
             result.records.push(SlotRecord {

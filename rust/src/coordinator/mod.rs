@@ -1,9 +1,12 @@
 //! Layer 3 — the Rust coordinator.  Owns the cluster ledger
-//! ([`state::ClusterState`]), the slot event loop ([`leader::Leader`])
-//! and, through `runtime/`, the PJRT-compiled OGA step on the hot path.
+//! ([`state::ClusterState`]), the slot event loop ([`leader::Leader`]),
+//! the sharded single-slot pipeline ([`sharded::ShardedLeader`]) and,
+//! through `runtime/`, the PJRT-compiled OGA step on the hot path.
 
 pub mod leader;
+pub mod sharded;
 pub mod state;
 
 pub use leader::{run_lineup, Leader, RunResult, SlotRecord};
+pub use sharded::{ShardPlan, ShardedLeader};
 pub use state::ClusterState;

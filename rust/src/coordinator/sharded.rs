@@ -1,0 +1,701 @@
+//! Sharded single-slot coordinator (§Perf-3).
+//!
+//! PR 2 made each slot's *work* scale with the arrived neighborhood,
+//! but one slot still ran on one core — the only parallelism was
+//! *across* runs (`run_lineup`).  The paper leans on "several parallel
+//! sub-procedures" (Sec. 5) precisely so a single slot's latency keeps
+//! dropping with cores; this module supplies that:
+//!
+//! * [`ShardPlan`] statically partitions the instances (and with them
+//!   their edge-CSR columns — every edge belongs to exactly one
+//!   instance) into per-worker shards balanced by Σ|E_r|·K, with a
+//!   per-shard port→owned-edges CSR so a worker can walk an arrived
+//!   port's slice restricted to its own coordinates.
+//! * [`ShardLedger`] is a worker-owned copy of the incremental cluster
+//!   ledger rows: each shard re-derives *its own* instances' usage rows
+//!   (`coordinator::state::commit_row_into`, the same kernel the serial
+//!   ledger runs) and reports mergeable per-row Σ deltas.
+//! * [`ShardedLeader`] drives the whole slot through
+//!   `utils::pool::parallel_shards`: decide (the OGA policies run their
+//!   ascent/projection per shard when bound via `Policy::bind_shards`),
+//!   commit (scatter the policy's `Touched` set by owner, commit rows in
+//!   parallel, fold reports), reward (per-port kernels in parallel,
+//!   merged serially), release.
+//!
+//! **Bitwise parity with the serial leader is a hard invariant**, kept
+//! by construction and checked by `tests/shard_parity.rs`:
+//! per-coordinate math is identical (shared kernels, disjoint writes),
+//! and every floating-point *reduction* is replayed serially by the
+//! leader in the serial code's order — per-port rewards merge in
+//! ascending port order, ledger Σ deltas replay in the policy's
+//! original dirty order through the same compensated accumulator, and
+//! the full-sweep fallback re-sums usage in flat index order.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::leader::{RunResult, SlotRecord};
+use crate::coordinator::state::{commit_row_into, ClusterState, CommitReport};
+use crate::model::Problem;
+use crate::oga::projection::project_instances_serial;
+use crate::reward::{port_reward_kinds, SlotReward};
+use crate::schedulers::{Policy, Touched};
+use crate::sim::arrivals::ArrivalModel;
+use crate::utils::pool;
+use crate::utils::pool::SyncSlice;
+
+/// One arrived port's precomputed step parameters (phase A of a sharded
+/// policy step): the per-port quota/k* reduction runs once on the leader
+/// thread, then every shard worker replays the recorded step against
+/// the edges it owns.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivedPort {
+    pub l: usize,
+    /// η_t · x_l — the ascent scale.
+    pub scale: f64,
+    /// argmax_k β_k · quota_k (Eq. 27).
+    pub kstar: usize,
+    /// scale · β_{k*} — the additive penalty on the k* lane (OGA step;
+    /// the mirror step folds β into its exponent instead).
+    pub pen: f64,
+}
+
+/// Static partition of the instances into per-worker shards.
+///
+/// Built once per (problem, shard count); greedy LPT keeps the shards
+/// balanced by column weight w_r = |E_r|·K: instances are placed
+/// heaviest-first onto the currently lightest shard, which bounds
+/// max load ≤ (Σw)/S + max_r w_r.  Assignment is deterministic (stable
+/// ordering, lowest shard id wins ties), so a plan — and everything
+/// scheduled through it — is reproducible.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    num_shards: usize,
+    /// instance → owning shard.
+    owner: Vec<u32>,
+    /// Instances per shard, ascending.
+    shard_instances: Vec<Vec<usize>>,
+    /// Σ|E_r|·K per shard.
+    loads: Vec<u64>,
+    /// Per-shard port CSR: edges of port l owned by shard s are
+    /// `port_edges[s][port_ptr[s][l]..port_ptr[s][l+1]]`.
+    port_ptr: Vec<Vec<usize>>,
+    port_edges: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// Partition `problem`'s instances into `num_shards` shards
+    /// (clamped to [1, R]; 0 means auto — the pool's worker budget).
+    pub fn build(problem: &Problem, num_shards: usize) -> ShardPlan {
+        let r_n = problem.num_instances();
+        let auto = pool::default_workers(r_n.max(1));
+        let want = if num_shards == 0 { auto } else { num_shards };
+        let s_n = want.clamp(1, r_n.max(1));
+        let k = problem.num_resources as u64;
+
+        // LPT: heaviest instances first (stable, so ties keep id order).
+        let mut order: Vec<usize> = (0..r_n).collect();
+        order.sort_by_key(|&r| std::cmp::Reverse(problem.graph.instance_degree(r)));
+        let mut owner = vec![0u32; r_n];
+        let mut loads = vec![0u64; s_n];
+        let mut shard_instances = vec![Vec::new(); s_n];
+        for &r in &order {
+            let mut s = 0;
+            for c in 1..s_n {
+                if loads[c] < loads[s] {
+                    s = c;
+                }
+            }
+            owner[r] = s as u32;
+            loads[s] += problem.graph.instance_degree(r) as u64 * k;
+            shard_instances[s].push(r);
+        }
+        for list in &mut shard_instances {
+            list.sort_unstable();
+        }
+
+        // Per-shard port→owned-edges CSR (edges stay in port-major id
+        // order inside each shard, matching the serial walk).
+        let g = &problem.graph;
+        let l_n = problem.num_ports();
+        let mut port_ptr = Vec::with_capacity(s_n);
+        let mut port_edges = Vec::with_capacity(s_n);
+        for s in 0..s_n {
+            let mut ptr = Vec::with_capacity(l_n + 1);
+            let mut edges = Vec::new();
+            ptr.push(0);
+            for l in 0..l_n {
+                for e in g.port_edges(l) {
+                    if owner[g.edge_instance[e]] == s as u32 {
+                        edges.push(e);
+                    }
+                }
+                ptr.push(edges.len());
+            }
+            port_ptr.push(ptr);
+            port_edges.push(edges);
+        }
+
+        ShardPlan { num_shards: s_n, owner, shard_instances, loads, port_ptr, port_edges }
+    }
+
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// Owning shard of instance r.
+    #[inline]
+    pub fn owner(&self, r: usize) -> usize {
+        self.owner[r] as usize
+    }
+
+    /// Instances owned by shard s (ascending).
+    #[inline]
+    pub fn instances(&self, s: usize) -> &[usize] {
+        &self.shard_instances[s]
+    }
+
+    /// Σ|E_r|·K over shard s's instances.
+    #[inline]
+    pub fn load(&self, s: usize) -> u64 {
+        self.loads[s]
+    }
+
+    /// Port l's edges owned by shard s, ascending edge id.
+    #[inline]
+    pub fn port_edges(&self, s: usize, l: usize) -> &[usize] {
+        &self.port_edges[s][self.port_ptr[s][l]..self.port_ptr[s][l + 1]]
+    }
+
+    /// Internal-consistency check used by tests: the shards tile the
+    /// instance set, the per-shard port CSRs tile every port's edge
+    /// list, and the recorded loads match the weights.
+    pub fn validate(&self, problem: &Problem) -> Result<(), String> {
+        let r_n = problem.num_instances();
+        if self.owner.len() != r_n {
+            return Err("owner map has wrong length".into());
+        }
+        let mut seen = vec![false; r_n];
+        for s in 0..self.num_shards {
+            let mut load = 0u64;
+            for &r in self.instances(s) {
+                if seen[r] {
+                    return Err(format!("instance {r} appears in two shards"));
+                }
+                seen[r] = true;
+                if self.owner(r) != s {
+                    return Err(format!("owner({r}) disagrees with shard {s}'s list"));
+                }
+                load += problem.graph.instance_degree(r) as u64
+                    * problem.num_resources as u64;
+            }
+            if load != self.loads[s] {
+                return Err(format!("shard {s} load {} != recorded {}", load, self.loads[s]));
+            }
+        }
+        if seen.iter().any(|&s| !s) {
+            return Err("some instance is unassigned".into());
+        }
+        for l in 0..problem.num_ports() {
+            let mut count = 0;
+            for s in 0..self.num_shards {
+                for &e in self.port_edges(s, l) {
+                    if problem.graph.edge_port[e] != l {
+                        return Err(format!("edge {e} filed under wrong port {l}"));
+                    }
+                    if self.owner(problem.graph.edge_instance[e]) != s {
+                        return Err(format!("edge {e} filed under wrong shard {s}"));
+                    }
+                    count += 1;
+                }
+            }
+            if count != problem.graph.port_edges(l).len() {
+                return Err(format!("shard port lists do not tile port {l}'s edges"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Worker-owned rows of the incremental cluster ledger.  Only the
+/// owning shard ever commits an instance, so its rows here are
+/// authoritative between slots; the leader folds them into the global
+/// [`ClusterState`] after each scatter.
+#[derive(Clone, Debug)]
+pub struct ShardLedger {
+    /// [R, K]; only the owned rows are meaningful.
+    usage: Vec<f64>,
+    /// [K] scratch for `commit_row_into`.
+    row: Vec<f64>,
+}
+
+impl ShardLedger {
+    pub fn new(problem: &Problem) -> Self {
+        ShardLedger {
+            usage: vec![0.0; problem.capacity.len()],
+            row: vec![0.0; problem.num_resources],
+        }
+    }
+
+    /// Re-derive instance r's usage row from `y` (clamping overshoot
+    /// exactly like the serial ledger) and return the row's Σ delta —
+    /// the same `new − old` float the serial `commit_instances`
+    /// accumulates.
+    fn commit_instance(
+        &mut self,
+        problem: &Problem,
+        y: &mut [f64],
+        r: usize,
+        clamped: &mut usize,
+    ) -> f64 {
+        let k_n = problem.num_resources;
+        let base = r * k_n;
+        let old: f64 = self.usage[base..base + k_n].iter().sum();
+        *clamped +=
+            commit_row_into(problem, y, r, &mut self.usage, &mut self.row, &problem.capacity);
+        let new: f64 = self.usage[base..base + k_n].iter().sum();
+        new - old
+    }
+
+    /// Instance r's usage row.
+    #[inline]
+    fn row_of(&self, r: usize, k_n: usize) -> &[f64] {
+        &self.usage[r * k_n..(r + 1) * k_n]
+    }
+}
+
+/// Per-shard worker state: the ledger shard plus per-slot scratch.
+struct ShardWorker {
+    ledger: ShardLedger,
+    /// Positions (indices into the slot's dirty list) routed to this
+    /// shard for the current slot (see `ShardedLeader::commit_list`).
+    assigned: Vec<usize>,
+    clamped: usize,
+}
+
+thread_local! {
+    /// Per-thread [K] quota scratch for the parallel reward stage.
+    static REWARD_QUOTA: std::cell::RefCell<Vec<f64>> = std::cell::RefCell::new(Vec::new());
+}
+
+/// The sharded L3 coordinator: same contract as [`super::Leader`], but a
+/// single slot's decide/commit/reward fan out over the persistent
+/// worker pool according to a [`ShardPlan`].
+pub struct ShardedLeader<'p> {
+    problem: &'p Problem,
+    state: ClusterState,
+    plan: Arc<ShardPlan>,
+    workers: Vec<ShardWorker>,
+    /// Σ-delta scratch indexed by *position in the slot's dirty list*
+    /// (not by instance), so a duplicated instance id replays its
+    /// per-occurrence deltas exactly like the serial ledger would.
+    /// Grown on demand; positions are unique by construction.
+    delta_of: Vec<f64>,
+    /// Arrived ports of the current slot (ascending).
+    arrived: Vec<usize>,
+    /// [L] per-port reward components filled by the parallel stage.
+    port_gain: Vec<f64>,
+    port_pen: Vec<f64>,
+    /// Assert that policies never need clamping (on in tests/debug).
+    pub strict: bool,
+}
+
+impl<'p> ShardedLeader<'p> {
+    /// `num_shards == 0` sizes the plan from the pool's worker budget
+    /// (`PALLAS_WORKERS` / available parallelism).
+    pub fn new(problem: &'p Problem, num_shards: usize) -> Self {
+        let plan = Arc::new(ShardPlan::build(problem, num_shards));
+        let workers = (0..plan.num_shards())
+            .map(|_| ShardWorker {
+                ledger: ShardLedger::new(problem),
+                assigned: Vec::new(),
+                clamped: 0,
+            })
+            .collect();
+        ShardedLeader {
+            problem,
+            state: ClusterState::new(problem),
+            plan,
+            workers,
+            delta_of: vec![0.0; problem.num_instances()],
+            arrived: Vec::new(),
+            port_gain: vec![0.0; problem.num_ports()],
+            port_pen: vec![0.0; problem.num_ports()],
+            strict: cfg!(debug_assertions),
+        }
+    }
+
+    pub fn plan(&self) -> &Arc<ShardPlan> {
+        &self.plan
+    }
+
+    pub fn state(&self) -> &ClusterState {
+        &self.state
+    }
+
+    /// One slot: decide → sharded commit → sharded reward → release.
+    /// Exposed for the hot-path bench; [`ShardedLeader::run`] is the
+    /// normal driver (and the one that binds the policy's shards and
+    /// bumps the run epoch).
+    pub fn slot(
+        &mut self,
+        policy: &mut dyn Policy,
+        x: &[f64],
+        y: &mut [f64],
+    ) -> (CommitReport, SlotReward) {
+        let p = self.problem;
+        policy.decide(p, x, y);
+        let report = match policy.touched() {
+            Touched::All => self.commit_all(y),
+            Touched::Instances(list) => self.commit_list(y, list),
+        };
+        let reward = self.reward(x, y);
+        self.state.release();
+        (report, reward)
+    }
+
+    /// Run `policy` against `arrivals` for `horizon` slots — the sharded
+    /// mirror of [`super::Leader::run`], record-for-record bit-identical
+    /// to it for every policy (`tests/shard_parity.rs`).
+    pub fn run(
+        &mut self,
+        policy: &mut dyn Policy,
+        arrivals: &mut dyn ArrivalModel,
+        horizon: usize,
+    ) -> RunResult {
+        crate::schedulers::begin_run_epoch();
+        policy.bind_shards(&self.plan);
+        let p = self.problem;
+        let mut x = vec![0.0; p.num_ports()];
+        let mut y = vec![0.0; p.decision_len()];
+        let mut result = RunResult {
+            policy: policy.name().to_string(),
+            records: Vec::with_capacity(horizon),
+            ..Default::default()
+        };
+        let start = Instant::now();
+        for t in 0..horizon {
+            arrivals.next(&mut x);
+            let (report, SlotReward { q, gain, penalty }) = self.slot(policy, &x, &mut y);
+            if self.strict {
+                assert_eq!(
+                    report.clamped, 0,
+                    "policy {} emitted an infeasible decision at t={t}",
+                    policy.name()
+                );
+            }
+            result.clamped_total += report.clamped;
+            result.cumulative_reward += q;
+            result.records.push(SlotRecord {
+                t,
+                q,
+                gain,
+                penalty,
+                arrivals: x.iter().sum(),
+            });
+        }
+        result.elapsed_secs = start.elapsed().as_secs_f64();
+        result
+    }
+
+    /// Incremental sharded commit: route the dirty set by owner, commit
+    /// rows in the worker-owned ledgers, fold rows + Σ deltas back.
+    fn commit_list(&mut self, y: &mut [f64], list: &[usize]) -> CommitReport {
+        let p = self.problem;
+        self.state.begin_merge();
+        if list.is_empty() {
+            // zero/sparse-arrival fast path: nothing to scatter — match
+            // the serial empty incremental commit (no dispatch cost)
+            return CommitReport {
+                clamped: 0,
+                committed_units: self.state.committed_units(),
+            };
+        }
+        for w in &mut self.workers {
+            w.assigned.clear();
+            w.clamped = 0;
+        }
+        // Route by owner, carrying the *position* in `list`: positions
+        // are unique even if a policy lists an instance twice, and a
+        // duplicated instance routes to one shard, which processes its
+        // occurrences in list order — so the per-occurrence deltas equal
+        // the serial ledger's (first d, then 0) exactly.
+        for (i, &r) in list.iter().enumerate() {
+            let s = self.plan.owner(r);
+            self.workers[s].assigned.push(i);
+        }
+        if self.delta_of.len() < list.len() {
+            self.delta_of.resize(list.len(), 0.0);
+        }
+        {
+            let deltas = SyncSlice::new(&mut self.delta_of);
+            let view = SyncSlice::new(y);
+            let y_len = view.len();
+            pool::parallel_shards(&mut self.workers, |_s, w| {
+                // SAFETY: shards own disjoint instance sets, so an
+                // instance's usage row and edge columns of `y` are
+                // touched only by its owner, and each list position is
+                // routed to exactly one shard.  The full-range view
+                // follows the crate's established disjoint-ownership
+                // pattern (`projection::SharedTensor`).
+                let y = unsafe { view.slice_mut(0, y_len) };
+                for &i in &w.assigned {
+                    let r = list[i];
+                    let delta = w.ledger.commit_instance(p, y, r, &mut w.clamped);
+                    unsafe { deltas.write(i, delta) };
+                }
+            });
+        }
+        let mut report = CommitReport::default();
+        let k_n = p.num_resources;
+        for w in &self.workers {
+            report.clamped += w.clamped;
+            for &i in &w.assigned {
+                let r = list[i];
+                self.state.merge_row(r, w.ledger.row_of(r, k_n));
+            }
+        }
+        // Σ deltas replay in the policy's original dirty order — the
+        // serial `commit_instances` accumulation sequence, bit for bit.
+        for i in 0..list.len() {
+            self.state.add_total_delta(self.delta_of[i]);
+        }
+        report.committed_units = self.state.committed_units();
+        report
+    }
+
+    /// Full-sweep fallback (`Touched::All`): every shard re-derives all
+    /// of its rows; the folded total is re-summed in flat index order,
+    /// exactly like the serial full-sweep commit.
+    fn commit_all(&mut self, y: &mut [f64]) -> CommitReport {
+        let p = self.problem;
+        self.state.begin_merge();
+        for w in &mut self.workers {
+            w.clamped = 0;
+        }
+        {
+            let plan = &self.plan;
+            let view = SyncSlice::new(y);
+            let y_len = view.len();
+            pool::parallel_shards(&mut self.workers, |s, w| {
+                // SAFETY: as in `commit_list` — disjoint instance sets,
+                // full-range view per the crate's `projection::SharedTensor`
+                // disjoint-ownership pattern.
+                let y = unsafe { view.slice_mut(0, y_len) };
+                for &r in plan.instances(s) {
+                    w.clamped += commit_row_into(
+                        p,
+                        y,
+                        r,
+                        &mut w.ledger.usage,
+                        &mut w.ledger.row,
+                        &p.capacity,
+                    );
+                }
+            });
+        }
+        let mut report = CommitReport::default();
+        let k_n = p.num_resources;
+        for (s, w) in self.workers.iter().enumerate() {
+            report.clamped += w.clamped;
+            for &r in self.plan.instances(s) {
+                self.state.merge_row(r, w.ledger.row_of(r, k_n));
+            }
+        }
+        self.state.refresh_total();
+        report.committed_units = self.state.committed_units();
+        report
+    }
+
+    /// Sharded slot reward: per-port kernels fan out over the pool,
+    /// then the components merge serially in ascending port order — the
+    /// exact accumulation sequence of `reward::slot_reward_kinds`.
+    fn reward(&mut self, x: &[f64], y: &[f64]) -> SlotReward {
+        let p = self.problem;
+        self.arrived.clear();
+        self.arrived.extend((0..p.num_ports()).filter(|&l| x[l] != 0.0));
+        if self.arrived.is_empty() {
+            return SlotReward::default();
+        }
+        {
+            let gains = SyncSlice::new(&mut self.port_gain);
+            let pens = SyncSlice::new(&mut self.port_pen);
+            let arrived = &self.arrived;
+            let kinds = p.kinds();
+            let k_n = p.num_resources;
+            pool::parallel_for(arrived.len(), self.plan.num_shards(), |i| {
+                let l = arrived[i];
+                let (gain, pen) = REWARD_QUOTA.with(|q| {
+                    let quota = &mut *q.borrow_mut();
+                    quota.resize(k_n, 0.0);
+                    port_reward_kinds(p, kinds, l, y, quota)
+                });
+                // SAFETY: each arrived port is handed to exactly one task.
+                unsafe {
+                    gains.write(l, gain);
+                    pens.write(l, pen);
+                }
+            });
+        }
+        let mut out = SlotReward::default();
+        for &l in &self.arrived {
+            let x_l = x[l];
+            let gain = self.port_gain[l];
+            let penalty = self.port_pen[l];
+            out.gain += x_l * gain;
+            out.penalty += x_l * penalty;
+            out.q += x_l * (gain - penalty);
+        }
+        out
+    }
+}
+
+/// Project exactly the listed dirty instances, scattered by shard owner
+/// over the pool (each shard projects its own instances serially on its
+/// own thread).  The per-instance projection is independent, so any
+/// partition yields the serial result bit for bit.  `parts` is caller
+/// scratch (one list per shard, reused across slots).
+pub fn project_dirty_sharded(
+    problem: &Problem,
+    y: &mut [f64],
+    dirty: &[usize],
+    plan: &ShardPlan,
+    parts: &mut Vec<Vec<usize>>,
+) {
+    if dirty.is_empty() {
+        return;
+    }
+    if parts.len() != plan.num_shards() {
+        *parts = vec![Vec::new(); plan.num_shards()];
+    }
+    for &r in dirty {
+        parts[plan.owner(r)].push(r);
+    }
+    {
+        let view = SyncSlice::new(y);
+        let y_len = view.len();
+        let parts_ref = &*parts;
+        pool::parallel_for(plan.num_shards(), plan.num_shards(), |s| {
+            // SAFETY: instance r owns only its edges' coordinates —
+            // disjoint across distinct r, and the owner partition lists
+            // each dirty r exactly once.
+            let y = unsafe { view.slice_mut(0, y_len) };
+            project_instances_serial(problem, y, &parts_ref[s]);
+        });
+    }
+    for part in parts.iter_mut() {
+        part.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::coordinator::Leader;
+    use crate::schedulers::{Fairness, OgaSched};
+    use crate::sim::arrivals::Bernoulli;
+    use crate::traces::synthesize;
+
+    #[test]
+    fn plan_partitions_and_balances() {
+        let p = synthesize(&Scenario::small());
+        for s_n in [1, 2, 3, 7] {
+            let plan = ShardPlan::build(&p, s_n);
+            plan.validate(&p).unwrap();
+            assert_eq!(plan.num_shards(), s_n.min(p.num_instances()));
+            let total: u64 = (0..plan.num_shards()).map(|s| plan.load(s)).sum();
+            let expect: u64 = (0..p.num_instances())
+                .map(|r| p.graph.instance_degree(r) as u64 * p.num_resources as u64)
+                .sum();
+            assert_eq!(total, expect);
+            // LPT guarantee: max load ≤ mean + max single weight
+            let max_load = (0..plan.num_shards()).map(|s| plan.load(s)).max().unwrap();
+            let max_w = (0..p.num_instances())
+                .map(|r| p.graph.instance_degree(r) as u64 * p.num_resources as u64)
+                .max()
+                .unwrap();
+            assert!(
+                max_load <= total / plan.num_shards() as u64 + max_w,
+                "unbalanced plan: max {max_load}, total {total}, w* {max_w}"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_clamps_shard_count_to_instances() {
+        let p = synthesize(&Scenario::small());
+        let plan = ShardPlan::build(&p, 10 * p.num_instances());
+        assert_eq!(plan.num_shards(), p.num_instances());
+        plan.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn sharded_leader_matches_serial_smoke() {
+        // the full property matrix lives in tests/shard_parity.rs; this
+        // is the in-crate smoke check for the seam
+        let p = synthesize(&Scenario::small());
+        let horizon = 40;
+        let serial = {
+            let mut leader = Leader::new(&p);
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.4, 11);
+            leader.run(&mut pol, &mut arr, horizon)
+        };
+        for shards in [1, 3] {
+            let mut leader = ShardedLeader::new(&p, shards);
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.4, 11);
+            let run = leader.run(&mut pol, &mut arr, horizon);
+            assert_eq!(run.cumulative_reward, serial.cumulative_reward, "shards={shards}");
+            for (a, b) in run.records.iter().zip(&serial.records) {
+                assert_eq!(a.q, b.q);
+                assert_eq!(a.gain, b.gain);
+                assert_eq!(a.penalty, b.penalty);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_ledger_tracks_remaining_capacity() {
+        let p = synthesize(&Scenario::small());
+        let mut leader = ShardedLeader::new(&p, 3);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 1.0, 5);
+        let mut serial = Leader::new(&p);
+        let mut pol2 = Fairness::new();
+        let mut arr2 = Bernoulli::uniform(p.num_ports(), 1.0, 5);
+        leader.run(&mut pol, &mut arr, 10);
+        serial.run(&mut pol2, &mut arr2, 10);
+        leader.state().check_conservation().unwrap();
+        for r in 0..p.num_instances() {
+            for k in 0..p.num_resources {
+                assert_eq!(
+                    leader.state().remaining_at(r, k),
+                    serial.state().remaining_at(r, k),
+                    "remaining({r},{k}) diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn project_dirty_sharded_matches_serial() {
+        use crate::oga::projection::project_instances;
+        let p = synthesize(&Scenario::small());
+        let mut rng = crate::utils::rng::Rng::new(3);
+        let base: Vec<f64> =
+            (0..p.decision_len()).map(|_| rng.uniform(0.0, 6.0)).collect();
+        let dirty: Vec<usize> = (0..p.num_instances()).filter(|r| r % 2 == 0).collect();
+        let plan = ShardPlan::build(&p, 3);
+        let mut parts = Vec::new();
+        let mut y_sharded = base.clone();
+        let mut y_serial = base;
+        project_dirty_sharded(&p, &mut y_sharded, &dirty, &plan, &mut parts);
+        project_instances(&p, &mut y_serial, &dirty, 1);
+        assert_eq!(y_sharded, y_serial);
+        // scratch lists are drained for the next slot
+        assert!(parts.iter().all(|p| p.is_empty()));
+    }
+}

@@ -30,6 +30,81 @@ pub struct CommitReport {
     pub committed_units: f64,
 }
 
+/// One Neumaier (improved Kahan) step: add `v` into (`sum`, `comp`).
+/// The delta-maintained running total accumulates one rounding error
+/// per incremental commit; with compensation the reported Σ stays
+/// exact to the last ulp over arbitrarily long horizons, so figure
+/// harnesses can difference committed units across slots without the
+/// 1e-9-relative drift the plain running sum allowed (ROADMAP "exact
+/// committed-units").  The sharded leader replays the identical call
+/// sequence when folding shard deltas, so serial and sharded totals
+/// agree bit for bit.
+#[inline]
+pub(crate) fn kahan_add(sum: &mut f64, comp: &mut f64, v: f64) {
+    let t = *sum + v;
+    if sum.abs() >= v.abs() {
+        *comp += (*sum - t) + v;
+    } else {
+        *comp += (v - t) + *sum;
+    }
+    *sum = t;
+}
+
+/// Re-derive instance r's usage row from `y`, clamping overshoot, and
+/// store it into `usage[r*K..]`.  Shared by the serial ledger
+/// ([`ClusterState`]) and the worker-owned shard ledgers
+/// (`coordinator::sharded::ShardLedger`) so every path produces
+/// bit-identical rows (same gather order over `instance_edge_ids`, same
+/// clamp threshold).  Returns the number of clamped coordinates.
+pub(crate) fn commit_row_into(
+    problem: &Problem,
+    y: &mut [f64],
+    r: usize,
+    usage: &mut [f64],
+    row: &mut [f64],
+    capacity: &[f64],
+) -> usize {
+    let k_n = problem.num_resources;
+    let edges = problem.graph.instance_edge_ids(r);
+    let mut clamped = 0;
+    row.fill(0.0);
+    for &e in edges {
+        let base = e * k_n;
+        for k in 0..k_n {
+            row[k] += y[base + k];
+        }
+    }
+    for k in 0..k_n {
+        let used = row[k];
+        let cap = capacity[r * k_n + k];
+        // tolerance is relative: decisions produced by the f32
+        // artifact path carry ~1e-6 relative rounding.
+        if used > cap * (1.0 + 1e-5) + 1e-6 && used > 0.0 {
+            // proportional clamp back to capacity
+            let scale = cap / used;
+            for &e in edges {
+                let j = e * k_n + k;
+                if y[j] != 0.0 {
+                    y[j] *= scale;
+                    clamped += 1;
+                }
+            }
+            // re-gather the clamped column (≈ cap up to rounding):
+            // the stored row must equal what a later sweep of the
+            // unchanged tensor would derive, or the incremental and
+            // full-sweep paths drift apart by ulps
+            let mut clamped_used = 0.0;
+            for &e in edges {
+                clamped_used += y[e * k_n + k];
+            }
+            usage[r * k_n + k] = clamped_used;
+        } else {
+            usage[r * k_n + k] = used;
+        }
+    }
+    clamped
+}
+
 /// Capacity accounting for one slot at a time.
 #[derive(Clone, Debug)]
 pub struct ClusterState {
@@ -39,9 +114,12 @@ pub struct ClusterState {
     usage: Vec<f64>,
     /// Capacity snapshot for validation.
     capacity: Vec<f64>,
-    /// Σ usage, maintained incrementally (reported as committed_units;
-    /// refreshed exactly on every full-sweep commit so it cannot drift).
+    /// Σ usage, maintained incrementally with Neumaier compensation
+    /// ([`kahan_add`]; reported as committed_units, refreshed exactly on
+    /// every full-sweep commit).
     total_units: f64,
+    /// Compensation term of the running Σ.
+    total_comp: f64,
     /// [K] scratch row for `commit_row`.
     row: Vec<f64>,
     k_n: usize,
@@ -54,6 +132,7 @@ impl ClusterState {
             usage: vec![0.0; problem.capacity.len()],
             capacity: problem.capacity.clone(),
             total_units: 0.0,
+            total_comp: 0.0,
             row: vec![0.0; problem.num_resources],
             k_n: problem.num_resources,
             in_slot: false,
@@ -73,8 +152,8 @@ impl ClusterState {
             self.commit_row(problem, y, r, &mut report);
         }
         // the full sweep refreshes the running total exactly
-        self.total_units = self.usage.iter().sum();
-        report.committed_units = self.total_units;
+        self.refresh_total();
+        report.committed_units = self.committed_units();
         report
     }
 
@@ -98,15 +177,14 @@ impl ClusterState {
             let old: f64 = self.usage[base..base + k_n].iter().sum();
             self.commit_row(problem, y, r, &mut report);
             let new: f64 = self.usage[base..base + k_n].iter().sum();
-            self.total_units += new - old;
+            kahan_add(&mut self.total_units, &mut self.total_comp, new - old);
         }
-        report.committed_units = self.total_units;
+        report.committed_units = self.committed_units();
         report
     }
 
-    /// Re-derive instance r's usage row from `y`, clamping overshoot.
-    /// Shared by the full-sweep and incremental paths so both produce
-    /// bit-identical rows (same gather order over `instance_edge_ids`).
+    /// Re-derive instance r's usage row from `y` (see [`commit_row_into`],
+    /// the kernel shared with the shard ledgers).
     fn commit_row(
         &mut self,
         problem: &Problem,
@@ -114,43 +192,47 @@ impl ClusterState {
         r: usize,
         report: &mut CommitReport,
     ) {
-        let k_n = self.k_n;
-        let edges = problem.graph.instance_edge_ids(r);
-        self.row.fill(0.0);
-        for &e in edges {
-            let base = e * k_n;
-            for k in 0..k_n {
-                self.row[k] += y[base + k];
-            }
-        }
-        for k in 0..k_n {
-            let used = self.row[k];
-            let cap = self.capacity[r * k_n + k];
-            // tolerance is relative: decisions produced by the f32
-            // artifact path carry ~1e-6 relative rounding.
-            if used > cap * (1.0 + 1e-5) + 1e-6 && used > 0.0 {
-                // proportional clamp back to capacity
-                let scale = cap / used;
-                for &e in edges {
-                    let j = e * k_n + k;
-                    if y[j] != 0.0 {
-                        y[j] *= scale;
-                        report.clamped += 1;
-                    }
-                }
-                // re-gather the clamped column (≈ cap up to rounding):
-                // the stored row must equal what a later sweep of the
-                // unchanged tensor would derive, or the incremental and
-                // full-sweep paths drift apart by ulps
-                let mut clamped_used = 0.0;
-                for &e in edges {
-                    clamped_used += y[e * k_n + k];
-                }
-                self.usage[r * k_n + k] = clamped_used;
-            } else {
-                self.usage[r * k_n + k] = used;
-            }
-        }
+        report.clamped +=
+            commit_row_into(problem, y, r, &mut self.usage, &mut self.row, &self.capacity);
+    }
+
+    // --- sharded-commit seam (coordinator::sharded) --------------------
+    //
+    // The sharded leader commits rows in worker-owned `ShardLedger`s and
+    // folds the results back here: `begin_merge` opens the slot,
+    // `merge_row` copies an authoritative shard row, `add_total_delta`
+    // replays the per-instance Σ deltas *in the policy's original dirty
+    // order* through the same compensated accumulator the serial
+    // `commit_instances` uses — which is what makes the folded total
+    // bit-identical to the serial ledger's.
+
+    /// Open the slot for an externally computed (sharded) commit.
+    pub(crate) fn begin_merge(&mut self) {
+        assert!(!self.in_slot, "commit called twice without release");
+        self.in_slot = true;
+    }
+
+    /// Adopt instance r's usage row as computed by its owning shard.
+    pub(crate) fn merge_row(&mut self, r: usize, row: &[f64]) {
+        let base = r * self.k_n;
+        self.usage[base..base + self.k_n].copy_from_slice(row);
+    }
+
+    /// Replay one incremental Σ-usage delta (Neumaier-compensated).
+    pub(crate) fn add_total_delta(&mut self, delta: f64) {
+        kahan_add(&mut self.total_units, &mut self.total_comp, delta);
+    }
+
+    /// Recompute Σ usage exactly (flat index order — the same reduction
+    /// the serial full-sweep commit performs).
+    pub(crate) fn refresh_total(&mut self) {
+        self.total_units = self.usage.iter().sum();
+        self.total_comp = 0.0;
+    }
+
+    /// The compensated running Σ usage.
+    pub(crate) fn committed_units(&self) -> f64 {
+        self.total_units + self.total_comp
     }
 
     /// Release the slot's resources (jobs completed).  Lazy: remaining
@@ -254,6 +336,56 @@ mod tests {
         assert!((rep.committed_units - 0.75).abs() < 1e-12);
         st.check_conservation().unwrap();
         st.release();
+    }
+
+    #[test]
+    fn compensated_total_tracks_full_resum_over_long_horizons() {
+        // The running Σ is maintained by per-instance deltas across the
+        // whole horizon; Neumaier compensation keeps it pinned to the
+        // fresh full-sweep re-sum far below the 1e-9-relative drift the
+        // plain running sum allowed (ROADMAP "exact committed-units").
+        let p = synthesize(&Scenario::small());
+        let k_n = p.num_resources;
+        let mut st = ClusterState::new(&p);
+        let mut y = vec![0.0; p.decision_len()];
+        let mut rng = crate::utils::rng::Rng::new(7);
+        for t in 0..500 {
+            let r = rng.below(p.num_instances());
+            for &e in p.graph.instance_edge_ids(r) {
+                for k in 0..k_n {
+                    // magnitudes spanning ~9 decades stress the deltas
+                    let v = if rng.bernoulli(0.3) {
+                        rng.uniform(0.0, 1.0)
+                    } else {
+                        rng.uniform(0.0, 1e-9)
+                    };
+                    y[e * k_n + k] = v;
+                }
+            }
+            let rep = st.commit_instances(&p, &mut y, &[r]);
+            let mut y_oracle = y.clone();
+            let mut oracle = ClusterState::new(&p);
+            let rep_full = oracle.commit(&p, &mut y_oracle);
+            let err = (rep.committed_units - rep_full.committed_units).abs();
+            assert!(
+                err <= 1e-12 * (1.0 + rep_full.committed_units.abs()),
+                "t={t}: compensated {} vs full {}",
+                rep.committed_units,
+                rep_full.committed_units
+            );
+            st.release();
+        }
+    }
+
+    #[test]
+    fn kahan_add_recovers_cancelled_small_terms() {
+        // 1e16 + 1 - 1e16 == 0 in plain f64; the compensated pair keeps
+        // the 1.0
+        let (mut sum, mut comp) = (0.0, 0.0);
+        for v in [1e16, 1.0, -1e16] {
+            kahan_add(&mut sum, &mut comp, v);
+        }
+        assert_eq!(sum + comp, 1.0);
     }
 
     #[test]

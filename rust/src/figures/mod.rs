@@ -10,6 +10,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod regret_fig;
+pub mod sparse;
 pub mod table3;
 
 use std::path::PathBuf;
@@ -50,11 +51,12 @@ pub fn run_by_id(id: &str, horizon_override: usize) -> Result<FigureOutput, Stri
         "fig7" => Ok(fig7::run(horizon_override)),
         "table3" => Ok(table3::run(horizon_override)),
         "regret" => Ok(regret_fig::run(horizon_override)),
+        "sparse" => Ok(sparse::run(horizon_override)),
         other => Err(format!(
-            "unknown figure id `{other}` (have fig2..fig7, table3, regret)"
+            "unknown figure id `{other}` (have fig2..fig7, table3, regret, sparse)"
         )),
     }
 }
 
-pub const ALL_IDS: [&str; 8] =
-    ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table3", "regret"];
+pub const ALL_IDS: [&str; 9] =
+    ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table3", "regret", "sparse"];

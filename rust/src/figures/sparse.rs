@@ -1,0 +1,97 @@
+//! Arrival-sparse sweep — the fig2-style lineup comparison at
+//! Bernoulli(0.1) traffic, the §Perf-2/§Perf-3 bench regime.
+//!
+//! fig2/fig5 score dense ρ = 0.7 traffic, so the figures never visit
+//! the sparse regime the arrival-sparse pipeline (and now the sharded
+//! single-slot coordinator) is built for.  This harness runs the same
+//! five-policy comparison on the Tab. 2 default cluster at ρ = 0.1:
+//! per-slot rewards are ~7× smaller (fewer arrivals score), but the
+//! *ordering* — OGASCHED above the reactive heuristics — must survive,
+//! and the run itself exercises the zero/sparse-arrival fast paths end
+//! to end at figure scale.  CSVs land next to the fig2 series so the
+//! same plotting scripts apply.
+
+use crate::config::Scenario;
+use crate::figures::{results_dir, FigureOutput};
+use crate::metrics;
+use crate::sim;
+use crate::utils::table::Table;
+
+/// Bernoulli arrival probability of the sparse regime (the §Perf-2
+/// bench setting).
+pub const SPARSE_ARRIVAL_PROB: f64 = 0.1;
+
+pub fn scenario(horizon_override: usize) -> Scenario {
+    let mut s = Scenario::default();
+    s.name = "sparse".into();
+    s.horizon = if horizon_override > 0 { horizon_override } else { 8000 };
+    s.arrival_prob = SPARSE_ARRIVAL_PROB;
+    s
+}
+
+pub fn run(horizon_override: usize) -> FigureOutput {
+    let s = scenario(horizon_override);
+    let results = sim::run_paper_lineup(&s);
+    let oga = &results[0];
+
+    let names: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
+    let avg_curves: Vec<Vec<f64>> = results.iter().map(metrics::avg_reward_curve).collect();
+    let cum_curves: Vec<Vec<f64>> = results.iter().map(metrics::cumulative_curve).collect();
+
+    let dir = results_dir();
+    let mut csv_paths = Vec::new();
+    for (file, curves) in [
+        ("sparse_avg_reward.csv", &avg_curves),
+        ("sparse_cumulative.csv", &cum_curves),
+    ] {
+        let path = dir.join(file);
+        let _ = metrics::curves_to_csv(&names, curves, 400).write_file(&path);
+        csv_paths.push(path);
+    }
+
+    let mut table =
+        Table::new(&["policy", "avg reward", "cumulative", "OGA improvement"]);
+    for run in &results {
+        let imp = if run.policy == "OGASCHED" {
+            "-".into()
+        } else {
+            format!("{:+.2}%", metrics::improvement_pct(oga, run))
+        };
+        table.push(&[
+            run.policy.clone(),
+            format!("{:.3}", run.avg_reward()),
+            format!("{:.1}", run.cumulative_reward),
+            imp,
+        ]);
+    }
+    FigureOutput {
+        title: "Sparse traffic — lineup at Bernoulli(0.1) arrivals".into(),
+        rendered: format!(
+            "T={} rho={} (fig2 defaults otherwise; the §Perf-2 bench regime)\n{}",
+            s.horizon,
+            SPARSE_ARRIVAL_PROB,
+            table.render()
+        ),
+        csv_paths,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_figure_runs_and_oga_leads() {
+        let out = run(400);
+        assert!(out.rendered.contains("OGASCHED"));
+        assert_eq!(out.csv_paths.len(), 2);
+    }
+
+    #[test]
+    fn sparse_scenario_is_the_bench_regime() {
+        let s = scenario(0);
+        assert_eq!(s.arrival_prob, 0.1);
+        assert_eq!(s.horizon, 8000);
+        s.validate().unwrap();
+    }
+}

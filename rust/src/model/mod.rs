@@ -133,7 +133,20 @@ impl KindIndex {
     }
 }
 
+/// Monotone id handed to each `Problem::new` (clones share their
+/// original's).  The sparse publishers key their buffer-identity checks
+/// on it, so a *different* problem reusing a same-shaped buffer can
+/// never be mistaken for the previous one (see
+/// `schedulers::IncrementalPublisher`).
+static PROBLEM_GENERATION: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 /// A fully specified scheduling problem instance.
+///
+/// Constructed through [`Problem::new`], which is the single owner of
+/// the derived [`KindIndex`]: consumers (`coordinator::Leader`,
+/// `oga::OgaState`, `regret::solve_oracle`, the benches) borrow it via
+/// [`Problem::kinds`] instead of each rebuilding the O(|E|·K) index and
+/// holding their own ~|E|·K copy of α.
 #[derive(Clone, Debug)]
 pub struct Problem {
     pub graph: Bipartite,
@@ -150,9 +163,58 @@ pub struct Problem {
     pub kind: Vec<UtilityKind>,
     /// [K] communication-overhead coefficients β_k ∈ [0, 1].
     pub beta: Vec<f64>,
+    /// Kind-grouped decision view (single owner; see [`Problem::kinds`]).
+    kinds: KindIndex,
+    /// Problem generation (see [`PROBLEM_GENERATION`]).
+    generation: u64,
 }
 
 impl Problem {
+    /// Build a problem and its derived kind index.  Panics on shape
+    /// mismatches — a malformed instance would only fail later and
+    /// further from the cause.
+    pub fn new(
+        graph: Bipartite,
+        num_resources: usize,
+        demand: Vec<f64>,
+        capacity: Vec<f64>,
+        alpha: Vec<f64>,
+        kind: Vec<UtilityKind>,
+        beta: Vec<f64>,
+    ) -> Problem {
+        assert_eq!(demand.len(), graph.num_ports * num_resources, "demand is [L, K]");
+        assert_eq!(capacity.len(), graph.num_instances * num_resources, "capacity is [R, K]");
+        assert_eq!(alpha.len(), capacity.len(), "alpha is [R, K]");
+        assert_eq!(kind.len(), capacity.len(), "kind is [R, K]");
+        assert_eq!(beta.len(), num_resources, "beta is [K]");
+        let mut problem = Problem {
+            graph,
+            num_resources,
+            demand,
+            capacity,
+            alpha,
+            kind,
+            beta,
+            kinds: KindIndex::default(),
+            generation: PROBLEM_GENERATION
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        };
+        problem.kinds = KindIndex::build(&problem);
+        problem
+    }
+
+    /// The kind-grouped runs + flattened α for the batched kernels.
+    #[inline]
+    pub fn kinds(&self) -> &KindIndex {
+        &self.kinds
+    }
+
+    /// Generation id assigned at [`Problem::new`] (clones share it).
+    #[inline]
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
     pub fn num_ports(&self) -> usize {
         self.graph.num_ports
     }
@@ -316,16 +378,15 @@ mod tests {
     use crate::graph::Bipartite;
 
     fn tiny() -> Problem {
-        let graph = Bipartite::full(2, 3);
-        Problem {
-            graph,
-            num_resources: 2,
-            demand: vec![1.0, 2.0, 3.0, 4.0],       // [2,2]
-            capacity: vec![5.0; 6],                 // [3,2]
-            alpha: vec![1.0; 6],
-            kind: vec![UtilityKind::Linear; 6],
-            beta: vec![0.3, 0.5],
-        }
+        Problem::new(
+            Bipartite::full(2, 3),
+            2,
+            vec![1.0, 2.0, 3.0, 4.0], // [2,2]
+            vec![5.0; 6],             // [3,2]
+            vec![1.0; 6],
+            vec![UtilityKind::Linear; 6],
+            vec![0.3, 0.5],
+        )
     }
 
     #[test]
@@ -343,33 +404,42 @@ mod tests {
     #[test]
     fn sparse_graph_shrinks_decision_len() {
         let graph = Bipartite::from_edges(2, 3, &[(0, 0), (1, 2)]);
-        let p = Problem {
+        let p = Problem::new(
             graph,
-            num_resources: 2,
-            demand: vec![1.0; 4],
-            capacity: vec![5.0; 6],
-            alpha: vec![1.0; 6],
-            kind: vec![UtilityKind::Linear; 6],
-            beta: vec![0.3, 0.5],
-        };
+            2,
+            vec![1.0; 4],
+            vec![5.0; 6],
+            vec![1.0; 6],
+            vec![UtilityKind::Linear; 6],
+            vec![0.3, 0.5],
+        );
         assert_eq!(p.decision_len(), 2 * 2); // |E|·K, not L·R·K
         assert_eq!(p.idx(0, 0, 1), 1);
         assert_eq!(p.idx(1, 2, 0), 2);
     }
 
     #[test]
+    fn generations_are_distinct_but_shared_by_clones() {
+        let a = tiny();
+        let b = tiny();
+        assert_ne!(a.generation(), b.generation());
+        assert_eq!(a.generation(), a.clone().generation());
+        assert!(a.generation() > 0);
+    }
+
+    #[test]
     #[should_panic(expected = "is not an edge")]
     fn off_edge_idx_panics() {
         let graph = Bipartite::from_edges(2, 3, &[(0, 0), (1, 2)]);
-        let p = Problem {
+        let p = Problem::new(
             graph,
-            num_resources: 2,
-            demand: vec![1.0; 4],
-            capacity: vec![5.0; 6],
-            alpha: vec![1.0; 6],
-            kind: vec![UtilityKind::Linear; 6],
-            beta: vec![0.3, 0.5],
-        };
+            2,
+            vec![1.0; 4],
+            vec![5.0; 6],
+            vec![1.0; 6],
+            vec![UtilityKind::Linear; 6],
+            vec![0.3, 0.5],
+        );
         p.idx(0, 1, 0);
     }
 
@@ -397,17 +467,19 @@ mod tests {
             UtilityKind::Log,
             UtilityKind::Reciprocal,
         ];
-        let p = Problem {
+        let p = Problem::new(
             graph,
-            num_resources: 2,
-            demand: vec![1.0; 6],
-            capacity: vec![5.0; 6],
-            alpha: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
-            kind: kinds,
-            beta: vec![0.3, 0.5],
-        };
+            2,
+            vec![1.0; 6],
+            vec![5.0; 6],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            kinds,
+            vec![0.3, 0.5],
+        );
         let idx = KindIndex::build(&p);
         idx.validate(&p).unwrap();
+        // the problem-owned index is the same construction
+        p.kinds().validate(&p).unwrap();
         // port 0 -> instances 0 and 2: coordinate kinds are
         // [Linear, Linear, Log, Reciprocal] -> 3 runs
         assert_eq!(idx.port_runs(0).len(), 3);

@@ -158,15 +158,15 @@ mod tests {
 
     fn problem() -> Problem {
         let graph = Bipartite::from_edges(2, 2, &[(0, 0), (0, 1), (1, 1)]);
-        Problem {
+        Problem::new(
             graph,
-            num_resources: 2,
-            demand: vec![5.0; 4],
-            capacity: vec![10.0; 4],
-            alpha: vec![1.0, 2.0, 3.0, 4.0],
-            kind: vec![UtilityKind::Linear; 4],
-            beta: vec![0.4, 0.6],
-        }
+            2,
+            vec![5.0; 4],
+            vec![10.0; 4],
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![UtilityKind::Linear; 4],
+            vec![0.4, 0.6],
+        )
     }
 
     fn grad_of(p: &Problem, x: &[f64], y: &[f64]) -> Vec<f64> {

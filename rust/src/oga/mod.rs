@@ -7,7 +7,11 @@ pub mod gradient;
 pub mod projection;
 pub mod utilities;
 
+use std::sync::Arc;
+
+use crate::coordinator::sharded::{project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::{KindIndex, Problem};
+use crate::utils::pool::{self, SyncSlice};
 use gradient::{grad_norm_ports, gradient_sparse, GradScratch};
 use projection::{project, project_instances};
 
@@ -63,8 +67,6 @@ pub struct OgaState {
     grad: Vec<f64>,
     scratch: GradScratch,
     scratch_quota: Vec<f64>,
-    /// Kind-grouped runs + flattened α for the batched kernels (§Perf-2).
-    kinds: KindIndex,
     /// Running η for the Decay schedule (η_{t+1} = λ·η_t, Alg. 1 l.32).
     /// Maintained multiplicatively: the closed form η₀λ^t costs a
     /// `powf` per slot and the seed's `powi(t as i32)` truncated the
@@ -79,6 +81,16 @@ pub struct OgaState {
     /// Set by `invalidate`: the next step projects globally because `y`
     /// was written from outside and may be infeasible anywhere.
     full_project_pending: bool,
+    /// Shard plan bound by the sharded coordinator (§Perf-3): when set
+    /// with > 1 shard, the fused ascent and the dirty projection fan out
+    /// per shard instead of running serially — bit-identically, since
+    /// per-coordinate math is unchanged and shards own disjoint
+    /// coordinates.
+    plan: Option<Arc<ShardPlan>>,
+    /// Phase-A records of the sharded ascent (arrived ports' η·x, k*).
+    port_steps: Vec<ArrivedPort>,
+    /// Per-shard dirty partitions (projection scatter scratch).
+    shard_dirty: Vec<Vec<usize>>,
 }
 
 impl OgaState {
@@ -93,7 +105,6 @@ impl OgaState {
             grad: vec![0.0; problem.decision_len()],
             scratch: GradScratch::default(),
             scratch_quota: Vec::new(),
-            kinds: KindIndex::build(problem),
             eta_run: match lr {
                 LearningRate::Decay { eta0, .. } => eta0,
                 _ => 0.0,
@@ -102,7 +113,18 @@ impl OgaState {
             dirty_list: Vec::new(),
             grad_ports: Vec::new(),
             full_project_pending: false,
+            plan: None,
+            port_steps: Vec::new(),
+            shard_dirty: Vec::new(),
         }
+    }
+
+    /// Bind a shard plan (see the `plan` field).  The sharded
+    /// coordinator calls this through `Policy::bind_shards`; unbound
+    /// states keep the serial paths.
+    pub fn bind_shards(&mut self, plan: Arc<ShardPlan>) {
+        self.shard_dirty = vec![Vec::new(); plan.num_shards()];
+        self.plan = Some(plan);
     }
 
     /// Declare `y` externally modified: the next `step` re-projects
@@ -138,7 +160,7 @@ impl OgaState {
                 // so nothing here scales with |E|.
                 gradient_sparse(
                     problem,
-                    &self.kinds,
+                    problem.kinds(),
                     x,
                     &self.y,
                     &mut self.grad,
@@ -162,11 +184,11 @@ impl OgaState {
             LearningRate::Decay { lambda, .. } => {
                 let eta = self.eta_run;
                 self.eta_run *= lambda;
-                self.fused_ascent(problem, x, eta);
+                self.ascend(problem, x, eta);
                 eta
             }
             LearningRate::Constant(eta) => {
-                self.fused_ascent(problem, x, eta);
+                self.ascend(problem, x, eta);
                 eta
             }
         };
@@ -174,10 +196,30 @@ impl OgaState {
             project(problem, &mut self.y, self.workers);
             self.full_project_pending = false;
         } else {
-            project_instances(problem, &mut self.y, &self.dirty_list, self.workers);
+            match self.plan.clone().filter(|plan| plan.num_shards() > 1) {
+                Some(plan) => project_dirty_sharded(
+                    problem,
+                    &mut self.y,
+                    &self.dirty_list,
+                    &plan,
+                    &mut self.shard_dirty,
+                ),
+                None => {
+                    project_instances(problem, &mut self.y, &self.dirty_list, self.workers)
+                }
+            }
         }
         self.t += 1;
         eta
+    }
+
+    /// Route the fused ascent: per-shard when a multi-shard plan is
+    /// bound, the serial kernel otherwise.  Identical floats either way.
+    fn ascend(&mut self, problem: &Problem, x: &[f64], eta: f64) {
+        match self.plan.clone().filter(|plan| plan.num_shards() > 1) {
+            Some(plan) => self.fused_ascent_sharded(problem, x, eta, &plan),
+            None => self.fused_ascent(problem, x, eta),
+        }
     }
 
     /// y += η·∇q(x, y) touching only the arrived ports (Eq. 30 inline).
@@ -199,26 +241,12 @@ impl OgaState {
                 continue;
             }
             let edges = g.port_edges(l);
-            self.scratch_quota.fill(0.0);
-            for e in edges.clone() {
-                let base = e * k_n;
-                for k in 0..k_n {
-                    self.scratch_quota[k] += self.y[base + k];
-                }
-            }
-            let mut kstar = 0;
-            let mut best = f64::NEG_INFINITY;
-            for k in 0..k_n {
-                let v = problem.beta[k] * self.scratch_quota[k];
-                if v > best {
-                    best = v;
-                    kstar = k;
-                }
-            }
-            for run in self.kinds.port_runs(l) {
+            let kstar = port_kstar(problem, l, &self.y, &mut self.scratch_quota);
+            let kinds = problem.kinds();
+            for run in kinds.port_runs(l) {
                 run.kind.ascend_slice(
                     &mut self.y[run.lo..run.hi],
-                    &self.kinds.alpha_flat[run.lo..run.hi],
+                    &kinds.alpha_flat[run.lo..run.hi],
                     eta * x_l,
                 );
             }
@@ -232,6 +260,69 @@ impl OgaState {
                 self.y[e * k_n + kstar] -= pen;
             }
         }
+    }
+
+    /// Sharded fused ascent (§Perf-3).  Phase A (leader thread) runs
+    /// the per-port quota/k* reductions — reads only, identical floats
+    /// to the serial kernel since ports own disjoint slices — and marks
+    /// the dirty instances in the serial discovery order.  Phase B fans
+    /// the per-coordinate updates out over the pool: each shard applies
+    /// every arrived port's recorded step to exactly the edges it owns,
+    /// so writes are disjoint and each coordinate sees the same two
+    /// operations (ascend, then k*-lane penalty) in the same order as
+    /// the serial kernel.
+    fn fused_ascent_sharded(
+        &mut self,
+        problem: &Problem,
+        x: &[f64],
+        eta: f64,
+        plan: &ShardPlan,
+    ) {
+        let k_n = problem.num_resources;
+        self.scratch_quota.resize(k_n, 0.0);
+        self.port_steps.clear();
+        let g = &problem.graph;
+        for l in 0..problem.num_ports() {
+            let x_l = x[l];
+            if x_l == 0.0 {
+                continue;
+            }
+            let edges = g.port_edges(l);
+            let kstar = port_kstar(problem, l, &self.y, &mut self.scratch_quota);
+            let scale = eta * x_l;
+            self.port_steps.push(ArrivedPort {
+                l,
+                scale,
+                kstar,
+                pen: scale * problem.beta[kstar],
+            });
+            for e in edges {
+                let r = g.edge_instance[e];
+                if !self.dirty[r] {
+                    self.dirty[r] = true;
+                    self.dirty_list.push(r);
+                }
+            }
+        }
+        if self.port_steps.is_empty() {
+            return;
+        }
+        let steps = &self.port_steps;
+        let kinds = problem.kinds();
+        let view = SyncSlice::new(&mut self.y);
+        let y_len = view.len();
+        pool::parallel_for(plan.num_shards(), plan.num_shards(), |s| {
+            // SAFETY: every edge belongs to exactly one instance, and
+            // the plan assigns each instance to exactly one shard — the
+            // coordinate sets written by distinct shards are disjoint.
+            let y = unsafe { view.slice_mut(0, y_len) };
+            for step in steps {
+                for &e in plan.port_edges(s, step.l) {
+                    ascend_edge(problem, kinds, y, e, step.scale);
+                    y[e * k_n + step.kstar] -= step.pen;
+                }
+            }
+        });
     }
 
     fn mark_dirty_from_grad_ports(&mut self, problem: &Problem) {
@@ -257,6 +348,57 @@ impl OgaState {
     /// and the Thm. 1 bound checks).
     pub fn last_grad(&self) -> &[f64] {
         &self.grad
+    }
+}
+
+/// Port l's resource quota Σ_{r∈R_l} y (into `quota`) and the Eq. 27
+/// argmax lane k*.  The single shared reduction behind the serial and
+/// sharded OGA ascents *and* the mirror update — one implementation, so
+/// plan-bound and unbound runs agree bit for bit by construction.
+pub(crate) fn port_kstar(problem: &Problem, l: usize, y: &[f64], quota: &mut [f64]) -> usize {
+    let k_n = problem.num_resources;
+    debug_assert_eq!(quota.len(), k_n);
+    quota.fill(0.0);
+    for e in problem.graph.port_edges(l) {
+        let base = e * k_n;
+        for k in 0..k_n {
+            quota[k] += y[base + k];
+        }
+    }
+    let mut kstar = 0;
+    let mut best = f64::NEG_INFINITY;
+    for k in 0..k_n {
+        let v = problem.beta[k] * quota[k];
+        if v > best {
+            best = v;
+            kstar = k;
+        }
+    }
+    kstar
+}
+
+/// y[e·K..] += scale · f'(y, α) for one edge, cut into maximal
+/// same-kind sub-runs so the call streams through the *same*
+/// `ascend_slice` kernel the serial port-run ascent uses — per-element
+/// semantics (and floats) are identical; only the slice boundaries
+/// differ, which the element-wise kernel cannot observe.
+fn ascend_edge(problem: &Problem, kinds: &KindIndex, y: &mut [f64], e: usize, scale: f64) {
+    let k_n = problem.num_resources;
+    let base = e * k_n;
+    let rk = problem.graph.edge_instance[e] * k_n;
+    let mut k = 0;
+    while k < k_n {
+        let kind = problem.kind[rk + k];
+        let start = k;
+        k += 1;
+        while k < k_n && problem.kind[rk + k] == kind {
+            k += 1;
+        }
+        kind.ascend_slice(
+            &mut y[base + start..base + k],
+            &kinds.alpha_flat[base + start..base + k],
+            scale,
+        );
     }
 }
 
@@ -406,6 +548,33 @@ mod tests {
         let lr = LearningRate::Oracle { horizon: 100 };
         let eta = lr.eta(&p, 0, 2.0);
         assert!((eta - p.diam_upper() / (2.0 * 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_step_matches_serial_bitwise() {
+        // the §Perf-3 invariant at the OgaState level: binding a shard
+        // plan changes who computes each coordinate, never its value —
+        // trajectories (and dirty-set discovery order) are bit-identical
+        use crate::coordinator::sharded::ShardPlan;
+        use std::sync::Arc;
+        let p = synthesize(&Scenario::small());
+        let mut rng = crate::utils::rng::Rng::new(23);
+        for shards in [2, 3, 7] {
+            let lr = LearningRate::Decay { eta0: 2.0, lambda: 0.999 };
+            let mut serial = OgaState::new(&p, lr, 0);
+            let mut sharded = OgaState::new(&p, lr, 0);
+            sharded.bind_shards(Arc::new(ShardPlan::build(&p, shards)));
+            for t in 0..30 {
+                let x: Vec<f64> = (0..p.num_ports())
+                    .map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 })
+                    .collect();
+                let e1 = serial.step(&p, &x);
+                let e2 = sharded.step(&p, &x);
+                assert_eq!(e1, e2);
+                assert_eq!(serial.y, sharded.y, "shards={shards} t={t}");
+                assert_eq!(serial.dirty_instances(), sharded.dirty_instances());
+            }
+        }
     }
 
     #[test]

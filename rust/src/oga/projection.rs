@@ -207,6 +207,24 @@ pub fn project_instances(problem: &Problem, z: &mut [f64], instances: &[usize], 
     project_impl(problem, z, workers, touched, instances.len(), |i| instances[i]);
 }
 
+/// Project exactly the listed instances on the calling thread,
+/// bypassing the worker heuristics — the per-shard body of the sharded
+/// slot (`coordinator::sharded`): each shard worker projects the dirty
+/// instances it owns, so the parallelism lives one level up and must
+/// not recurse into the pool.  Uses the same per-thread scratch as the
+/// pooled paths, so a shard worker allocates nothing per slot.
+pub fn project_instances_serial(problem: &Problem, z: &mut [f64], instances: &[usize]) {
+    if instances.is_empty() {
+        return;
+    }
+    SCRATCH.with(|s| {
+        let scratch = &mut *s.borrow_mut();
+        for &r in instances {
+            project_instance(problem, r, z, scratch);
+        }
+    });
+}
+
 fn project_impl(
     problem: &Problem,
     z: &mut [f64],

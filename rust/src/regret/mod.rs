@@ -53,7 +53,7 @@ pub fn solve_oracle(
     workers: usize,
 ) -> Oracle {
     let k_n = problem.num_resources;
-    let kinds = KindIndex::build(problem);
+    let kinds = problem.kinds();
     let mut y = vec![0.0; problem.decision_len()];
     let mut grad = vec![0.0; problem.decision_len()];
     let mut scratch = GradScratch::default();
@@ -75,18 +75,18 @@ pub fn solve_oracle(
     }
 
     let mut best_y = y.clone();
-    let mut best_obj = slot_reward_kinds(problem, &kinds, counts, &y, &mut quota).q;
+    let mut best_obj = slot_reward_kinds(problem, kinds, counts, &y, &mut quota).q;
 
     // Scale-free initial step: diam(Y) / ‖∇q(0)‖ keeps the first move
     // inside the polytope's order of magnitude.
-    gradient_sparse(problem, &kinds, counts, &y, &mut grad, &mut scratch, &mut active_ports);
+    gradient_sparse(problem, kinds, counts, &y, &mut grad, &mut scratch, &mut active_ports);
     let g0 = grad_norm(&grad).max(1e-12);
     let eta0 = problem.diam_upper() / g0;
 
     for i in 0..iters {
         gradient_sparse(
             problem,
-            &kinds,
+            kinds,
             counts,
             &y,
             &mut grad,
@@ -102,7 +102,7 @@ pub fn solve_oracle(
             }
         }
         project_instances(problem, &mut y, &active_instances, workers);
-        let obj = slot_reward_kinds(problem, &kinds, counts, &y, &mut quota).q;
+        let obj = slot_reward_kinds(problem, kinds, counts, &y, &mut quota).q;
         if obj > best_obj {
             best_obj = obj;
             best_y = y.clone();

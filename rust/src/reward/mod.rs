@@ -83,6 +83,40 @@ pub fn slot_reward_scratch(
     out
 }
 
+/// Kind-batched per-port reward (gain_l, penalty_l) — the per-port body
+/// of [`slot_reward_kinds`], exposed so the sharded leader can fan the
+/// ports out over the pool and still merge the *identical* per-port
+/// floats the serial loop accumulates (`coordinator::sharded`).
+pub fn port_reward_kinds(
+    problem: &Problem,
+    kinds: &KindIndex,
+    l: usize,
+    y: &[f64],
+    quota: &mut [f64],
+) -> (f64, f64) {
+    let k_n = problem.num_resources;
+    let g = &problem.graph;
+    debug_assert_eq!(quota.len(), k_n);
+    let mut gain = 0.0;
+    for run in kinds.port_runs(l) {
+        gain += run
+            .kind
+            .value_sum(&y[run.lo..run.hi], &kinds.alpha_flat[run.lo..run.hi]);
+    }
+    quota.fill(0.0);
+    for e in g.port_edges(l) {
+        let base = e * k_n;
+        for k in 0..k_n {
+            quota[k] += y[base + k];
+        }
+    }
+    let mut penalty = 0.0f64;
+    for k in 0..k_n {
+        penalty = penalty.max(problem.beta[k] * quota[k]);
+    }
+    (gain, penalty)
+}
+
 /// Kind-batched slot reward (§Perf-2) — the engine's hot-path variant.
 /// The Eq. 51 gain is summed run-by-run through the [`KindIndex`] (one
 /// utility-family dispatch per same-kind run, branch-free contiguous
@@ -96,31 +130,12 @@ pub fn slot_reward_kinds(
     y: &[f64],
     quota: &mut [f64],
 ) -> SlotReward {
-    let k_n = problem.num_resources;
-    let g = &problem.graph;
-    debug_assert_eq!(quota.len(), k_n);
     let mut out = SlotReward::default();
     for l in 0..problem.num_ports() {
         if x[l] == 0.0 {
             continue;
         }
-        let mut gain = 0.0;
-        for run in kinds.port_runs(l) {
-            gain += run
-                .kind
-                .value_sum(&y[run.lo..run.hi], &kinds.alpha_flat[run.lo..run.hi]);
-        }
-        quota.fill(0.0);
-        for e in g.port_edges(l) {
-            let base = e * k_n;
-            for k in 0..k_n {
-                quota[k] += y[base + k];
-            }
-        }
-        let mut penalty = 0.0f64;
-        for k in 0..k_n {
-            penalty = penalty.max(problem.beta[k] * quota[k]);
-        }
+        let (gain, penalty) = port_reward_kinds(problem, kinds, l, y, quota);
         out.gain += x[l] * gain;
         out.penalty += x[l] * penalty;
         out.q += x[l] * (gain - penalty);
@@ -138,20 +153,20 @@ mod tests {
     use crate::utils::rng::Rng;
 
     fn tiny() -> Problem {
-        Problem {
-            graph: Bipartite::full(1, 2),
-            num_resources: 2,
-            demand: vec![10.0, 10.0],
-            capacity: vec![10.0; 4],
-            alpha: vec![1.0, 2.0, 1.5, 0.5],
-            kind: vec![
+        Problem::new(
+            Bipartite::full(1, 2),
+            2,
+            vec![10.0, 10.0],
+            vec![10.0; 4],
+            vec![1.0, 2.0, 1.5, 0.5],
+            vec![
                 UtilityKind::Linear,
                 UtilityKind::Log,
                 UtilityKind::Poly,
                 UtilityKind::Reciprocal,
             ],
-            beta: vec![0.5, 0.25],
-        }
+            vec![0.5, 0.25],
+        )
     }
 
     #[test]

@@ -684,15 +684,15 @@ mod tests {
         // single instance, two ports, ample capacity: each gets its demand
         use crate::graph::Bipartite;
         use crate::oga::utilities::UtilityKind;
-        let p = Problem {
-            graph: Bipartite::full(2, 1),
-            num_resources: 1,
-            demand: vec![2.0, 6.0],
-            capacity: vec![100.0],
-            alpha: vec![1.0],
-            kind: vec![UtilityKind::Linear],
-            beta: vec![0.3],
-        };
+        let p = Problem::new(
+            Bipartite::full(2, 1),
+            1,
+            vec![2.0, 6.0],
+            vec![100.0],
+            vec![1.0],
+            vec![UtilityKind::Linear],
+            vec![0.3],
+        );
         let mut y = vec![0.0; 2];
         Fairness::new().decide(&p, &[1.0, 1.0], &mut y);
         // shares: cap*2/8 = 25 -> capped at 2; cap*6/8 = 75 -> capped at 6

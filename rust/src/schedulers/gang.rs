@@ -71,15 +71,15 @@ impl GangOga {
             ranges.push((start, next));
         }
         let graph = Bipartite::from_edges(next, problem.num_instances(), &edges);
-        let expanded = Problem {
+        let expanded = Problem::new(
             graph,
-            num_resources: k_n,
+            k_n,
             demand,
-            capacity: problem.capacity.clone(),
-            alpha: problem.alpha.clone(),
-            kind: problem.kind.clone(),
-            beta: problem.beta.clone(),
-        };
+            problem.capacity.clone(),
+            problem.alpha.clone(),
+            problem.kind.clone(),
+            problem.beta.clone(),
+        );
         let state = OgaState::new(
             &expanded,
             LearningRate::Decay { eta0, lambda: decay },

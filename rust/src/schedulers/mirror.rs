@@ -20,9 +20,13 @@
 //! Because exp(·) freezes coordinates at exactly 0, the state is seeded
 //! at a small ε > 0 on every edge instead of the OGA zero start.
 
+use std::sync::Arc;
+
+use crate::coordinator::sharded::{project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::Problem;
 use crate::oga::projection::{project, project_instances};
 use crate::schedulers::{IncrementalPublisher, Policy, Touched};
+use crate::utils::pool::{self, SyncSlice};
 
 /// Seed allocation (fraction of the per-channel cap) so multiplicative
 /// updates have something to multiply.
@@ -50,6 +54,15 @@ pub struct OgaMirror {
     /// Incremental publish into the engine's reused output buffer
     /// (shared state machine with `OgaSched`).
     publisher: IncrementalPublisher,
+    /// Shard plan bound by the sharded coordinator (§Perf-3): the
+    /// multiplicative update and the dirty projection fan out per
+    /// shard, bit-identically (disjoint coordinate ownership, same
+    /// per-element math).
+    plan: Option<Arc<ShardPlan>>,
+    /// Phase-A records of the sharded step.
+    port_steps: Vec<ArrivedPort>,
+    /// Per-shard dirty partitions (projection scatter scratch).
+    shard_dirty: Vec<Vec<usize>>,
 }
 
 impl OgaMirror {
@@ -65,6 +78,9 @@ impl OgaMirror {
             dirty: vec![false; problem.num_instances()],
             dirty_list: Vec::new(),
             publisher: IncrementalPublisher::default(),
+            plan: None,
+            port_steps: Vec::new(),
+            shard_dirty: Vec::new(),
         };
         pol.seed(problem);
         pol
@@ -90,55 +106,109 @@ impl OgaMirror {
     /// (Eq. 30 gradient), then the Alg. 1 projection of the perturbed
     /// (dirty) instances only.
     fn step(&mut self, problem: &Problem, x: &[f64]) {
-        let k_n = problem.num_resources;
-        let g = &problem.graph;
         let eta = self.eta_run;
         self.eta_run *= self.decay;
         for &r in &self.dirty_list {
             self.dirty[r] = false;
         }
         self.dirty_list.clear();
+        match self.plan.clone().filter(|plan| plan.num_shards() > 1) {
+            Some(plan) => {
+                self.update_sharded(problem, x, eta, &plan);
+                project_dirty_sharded(
+                    problem,
+                    &mut self.y,
+                    &self.dirty_list,
+                    &plan,
+                    &mut self.shard_dirty,
+                );
+            }
+            None => {
+                self.update_serial(problem, x, eta);
+                project_instances(problem, &mut self.y, &self.dirty_list, self.workers);
+            }
+        }
+        self.t += 1;
+    }
+
+    fn update_serial(&mut self, problem: &Problem, x: &[f64], eta: f64) {
+        let g = &problem.graph;
         for l in 0..problem.num_ports() {
             let x_l = x[l];
             if x_l == 0.0 {
                 continue;
             }
             let edges = g.port_edges(l);
-            self.quota.fill(0.0);
-            for e in edges.clone() {
-                let base = e * k_n;
-                for k in 0..k_n {
-                    self.quota[k] += self.y[base + k];
-                }
-            }
-            let mut kstar = 0;
-            let mut best = f64::NEG_INFINITY;
-            for k in 0..k_n {
-                let v = problem.beta[k] * self.quota[k];
-                if v > best {
-                    best = v;
-                    kstar = k;
-                }
-            }
+            let kstar = crate::oga::port_kstar(problem, l, &self.y, &mut self.quota);
             for e in edges {
                 let r = g.edge_instance[e];
                 if !self.dirty[r] {
                     self.dirty[r] = true;
                     self.dirty_list.push(r);
                 }
-                let base = e * k_n;
-                let rk = r * k_n;
-                for k in 0..k_n {
-                    let yv = self.y[base + k];
-                    let fp = problem.kind[rk + k].grad(yv, problem.alpha[rk + k]);
-                    let pen = if k == kstar { problem.beta[k] } else { 0.0 };
-                    let expo = (eta * x_l * (fp - pen)).clamp(-MAX_EXPONENT, MAX_EXPONENT);
-                    self.y[base + k] = yv * expo.exp();
+                mirror_edge(problem, &mut self.y, e, eta * x_l, kstar);
+            }
+        }
+    }
+
+    /// Sharded multiplicative update (§Perf-3): phase A records each
+    /// arrived port's (η·x, k*) and marks the dirty set in the serial
+    /// discovery order (reads only — ports own disjoint slices, so the
+    /// quotas equal the serial interleaved ones bit for bit); phase B
+    /// fans the per-edge updates out, each shard touching exactly the
+    /// edges it owns through the same [`mirror_edge`] kernel.
+    fn update_sharded(&mut self, problem: &Problem, x: &[f64], eta: f64, plan: &ShardPlan) {
+        let g = &problem.graph;
+        self.port_steps.clear();
+        for l in 0..problem.num_ports() {
+            let x_l = x[l];
+            if x_l == 0.0 {
+                continue;
+            }
+            let edges = g.port_edges(l);
+            let kstar = crate::oga::port_kstar(problem, l, &self.y, &mut self.quota);
+            self.port_steps.push(ArrivedPort { l, scale: eta * x_l, kstar, pen: 0.0 });
+            for e in edges {
+                let r = g.edge_instance[e];
+                if !self.dirty[r] {
+                    self.dirty[r] = true;
+                    self.dirty_list.push(r);
                 }
             }
         }
-        project_instances(problem, &mut self.y, &self.dirty_list, self.workers);
-        self.t += 1;
+        if self.port_steps.is_empty() {
+            return;
+        }
+        let steps = &self.port_steps;
+        let view = SyncSlice::new(&mut self.y);
+        let y_len = view.len();
+        pool::parallel_for(plan.num_shards(), plan.num_shards(), |s| {
+            // SAFETY: every edge belongs to exactly one instance and
+            // each instance to exactly one shard — disjoint writes.
+            let y = unsafe { view.slice_mut(0, y_len) };
+            for step in steps {
+                for &e in plan.port_edges(s, step.l) {
+                    mirror_edge(problem, y, e, step.scale, step.kstar);
+                }
+            }
+        });
+    }
+}
+
+/// One edge's multiplicative update — the shared per-edge kernel of the
+/// serial and sharded steps (identical floats by construction).
+/// `scale` is η_t · x_l; β_{k*} is folded into the exponent.
+#[inline]
+fn mirror_edge(problem: &Problem, y: &mut [f64], e: usize, scale: f64, kstar: usize) {
+    let k_n = problem.num_resources;
+    let base = e * k_n;
+    let rk = problem.graph.edge_instance[e] * k_n;
+    for k in 0..k_n {
+        let yv = y[base + k];
+        let fp = problem.kind[rk + k].grad(yv, problem.alpha[rk + k]);
+        let pen = if k == kstar { problem.beta[k] } else { 0.0 };
+        let expo = (scale * (fp - pen)).clamp(-MAX_EXPONENT, MAX_EXPONENT);
+        y[base + k] = yv * expo.exp();
     }
 }
 
@@ -161,6 +231,11 @@ impl Policy for OgaMirror {
 
     fn touched(&self) -> Touched<'_> {
         self.publisher.touched()
+    }
+
+    fn bind_shards(&mut self, plan: &Arc<ShardPlan>) {
+        self.shard_dirty = vec![Vec::new(); plan.num_shards()];
+        self.plan = Some(plan.clone());
     }
 }
 

@@ -8,6 +8,9 @@ pub mod mirror;
 pub mod multi_arrival;
 pub mod oga_sched;
 
+use std::sync::Arc;
+
+use crate::coordinator::sharded::ShardPlan;
 use crate::model::Problem;
 
 pub use baselines::{BinPacking, Drf, Fairness, RandomAlloc, Spreading};
@@ -61,6 +64,17 @@ pub trait Policy {
     fn touched(&self) -> Touched<'_> {
         Touched::All
     }
+
+    /// Bind the sharded coordinator's [`ShardPlan`] (§Perf-3).  The
+    /// learning policies route their internal ascent/projection through
+    /// the plan's per-shard views so a single slot's decide fans out
+    /// over the worker pool; the Touched reporting then arrives
+    /// pre-partitionable by the same plan.  Policies whose decide is
+    /// inherently sequential (the reactive baselines' capacity ledgers)
+    /// keep this default no-op — the engine still shards their commit
+    /// and reward stages.  Binding must never change emitted decisions:
+    /// `tests/shard_parity.rs` pins bound and unbound runs bit-to-bit.
+    fn bind_shards(&mut self, _plan: &Arc<ShardPlan>) {}
 }
 
 /// Copy the edge columns of the listed instances from `src` to `dst`
@@ -105,9 +119,12 @@ fn run_epoch() -> u64 {
 /// perturbed instances' columns into the engine's reused output buffer
 /// and reports them as the policy's [`Touched`] set.
 ///
-/// The output buffer is identified by address + length + run epoch; a
-/// `decide` into a different buffer — or after a new engine run began
-/// ([`begin_run_epoch`]) — re-primes with a full copy, so
+/// The output buffer is identified by address + length + run epoch +
+/// problem generation; a `decide` into a different buffer — or after a
+/// new engine run began ([`begin_run_epoch`]), or against a *different
+/// problem* (`Problem::generation`, which closes the last identity
+/// hole: a new same-shaped problem whose engine buffer lands at the
+/// freed address of the old one) — re-primes with a full copy, so
 /// fresh-buffer-per-call tests and policies reused across runs stay
 /// correct automatically.
 #[derive(Clone, Debug)]
@@ -116,6 +133,9 @@ pub(crate) struct IncrementalPublisher {
     last_ptr: usize,
     last_len: usize,
     last_epoch: u64,
+    /// `Problem::generation` of the previous publish (0 = never; real
+    /// generations start at 1).
+    last_generation: u64,
     full_last: bool,
 }
 
@@ -126,6 +146,7 @@ impl Default for IncrementalPublisher {
             last_ptr: 0,
             last_len: 0,
             last_epoch: 0,
+            last_generation: 0,
             full_last: true,
         }
     }
@@ -134,7 +155,7 @@ impl Default for IncrementalPublisher {
 impl IncrementalPublisher {
     /// Publish `src` into `dst`: incremental (only `dirty` instances'
     /// columns) when `dst` is the buffer of the previous publish within
-    /// the same run epoch, full copy otherwise.
+    /// the same run epoch and problem generation, full copy otherwise.
     pub(crate) fn publish(
         &mut self,
         problem: &Problem,
@@ -144,7 +165,12 @@ impl IncrementalPublisher {
     ) {
         let ptr = dst.as_ptr() as usize;
         let epoch = run_epoch();
-        if ptr == self.last_ptr && dst.len() == self.last_len && epoch == self.last_epoch {
+        let generation = problem.generation();
+        if ptr == self.last_ptr
+            && dst.len() == self.last_len
+            && epoch == self.last_epoch
+            && generation == self.last_generation
+        {
             self.touched.clear();
             self.touched.extend_from_slice(dirty);
             copy_instance_columns(problem, src, dst, &self.touched);
@@ -154,6 +180,7 @@ impl IncrementalPublisher {
             self.last_ptr = ptr;
             self.last_len = dst.len();
             self.last_epoch = epoch;
+            self.last_generation = generation;
             self.full_last = true;
         }
     }
@@ -170,6 +197,7 @@ impl IncrementalPublisher {
         self.touched.clear();
         self.last_ptr = 0;
         self.last_len = 0;
+        self.last_generation = 0;
         self.full_last = true;
     }
 }
@@ -213,6 +241,25 @@ mod tests {
                     .unwrap();
             }
         }
+    }
+
+    #[test]
+    fn publisher_reprimes_on_new_problem_generation() {
+        // Two same-shaped problems publishing into the *same* buffer:
+        // ptr/len/epoch all match, so before the generation key an
+        // incremental publish with an empty dirty set would have left
+        // the previous problem's decision behind.
+        let p1 = synthesize(&Scenario::small());
+        let p2 = synthesize(&Scenario::small());
+        assert_ne!(p1.generation(), p2.generation());
+        let mut publisher = IncrementalPublisher::default();
+        let src1 = vec![1.0; p1.decision_len()];
+        let mut dst = vec![0.0; p1.decision_len()];
+        publisher.publish(&p1, &src1, &mut dst, &[]);
+        let src2 = vec![2.0; p2.decision_len()];
+        publisher.publish(&p2, &src2, &mut dst, &[]);
+        assert_eq!(dst, src2, "generation switch must force a full re-prime");
+        assert!(matches!(publisher.touched(), Touched::All));
     }
 
     #[test]

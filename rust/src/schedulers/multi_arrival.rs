@@ -34,15 +34,15 @@ pub fn expand_problem(problem: &Problem, copies: &[usize]) -> (Problem, Vec<usiz
     }
     let graph = Bipartite::from_edges(owner.len(), problem.num_instances(), &edges);
     (
-        Problem {
+        Problem::new(
             graph,
-            num_resources: k_n,
+            k_n,
             demand,
-            capacity: problem.capacity.clone(),
-            alpha: problem.alpha.clone(),
-            kind: problem.kind.clone(),
-            beta: problem.beta.clone(),
-        },
+            problem.capacity.clone(),
+            problem.alpha.clone(),
+            problem.kind.clone(),
+            problem.beta.clone(),
+        ),
         owner,
     )
 }

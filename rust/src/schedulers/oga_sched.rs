@@ -6,6 +6,9 @@
 //! ascent toward y(t+1).  `decide` therefore copies the committed y(t)
 //! into the output buffer first and steps the internal state afterwards.
 
+use std::sync::Arc;
+
+use crate::coordinator::sharded::ShardPlan;
 use crate::model::Problem;
 use crate::oga::{LearningRate, OgaState};
 use crate::schedulers::{IncrementalPublisher, Policy, Touched};
@@ -15,6 +18,9 @@ pub struct OgaSched {
     eta0: f64,
     decay: f64,
     workers: usize,
+    /// Shard plan bound by the sharded coordinator (§Perf-3); re-bound
+    /// into the fresh state on `reset`.
+    plan: Option<Arc<ShardPlan>>,
     /// Incremental publish into the engine's reused output buffer
     /// (§Perf-2): only the columns the step changed are rewritten, and
     /// they double as the policy's `Touched` report.
@@ -48,6 +54,7 @@ impl OgaSched {
             eta0,
             decay,
             workers,
+            plan: None,
             publisher: IncrementalPublisher::default(),
             pending: Vec::new(),
             reactive: true,
@@ -68,6 +75,7 @@ impl OgaSched {
             eta0: 0.0,
             decay: 0.0,
             workers,
+            plan: None,
             publisher: IncrementalPublisher::default(),
             pending: Vec::new(),
             reactive: false,
@@ -111,12 +119,20 @@ impl Policy for OgaSched {
             self.state.lr
         };
         self.state = OgaState::new(problem, lr, self.workers);
+        if let Some(plan) = &self.plan {
+            self.state.bind_shards(plan.clone());
+        }
         self.publisher.reset();
         self.pending.clear();
     }
 
     fn touched(&self) -> Touched<'_> {
         self.publisher.touched()
+    }
+
+    fn bind_shards(&mut self, plan: &Arc<ShardPlan>) {
+        self.plan = Some(plan.clone());
+        self.state.bind_shards(plan.clone());
     }
 }
 

@@ -201,7 +201,7 @@ pub fn synthesize(scenario: &Scenario) -> Problem {
     let (blo, bhi) = scenario.beta_range;
     let beta: Vec<f64> = (0..k_n).map(|_| util_rng.uniform(blo, bhi)).collect();
 
-    Problem { graph, num_resources: k_n, demand, capacity, alpha, kind, beta }
+    Problem::new(graph, k_n, demand, capacity, alpha, kind, beta)
 }
 
 #[cfg(test)]

@@ -118,7 +118,7 @@ pub fn problem_from_csv(
     let (blo, bhi) = scenario.beta_range;
     let beta: Vec<f64> = (0..k_n).map(|_| util_rng.uniform(blo, bhi)).collect();
 
-    Ok(Problem { graph, num_resources: k_n, demand, capacity, alpha, kind, beta })
+    Ok(Problem::new(graph, k_n, demand, capacity, alpha, kind, beta))
 }
 
 /// Arrival weights from the sample jobs file (used by the trace-driven

@@ -21,10 +21,26 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+/// Process-wide parallelism budget: `PALLAS_WORKERS` when set to a
+/// positive integer (CI pins it so small runners still exercise the
+/// multi-worker paths deterministically), otherwise the machine's
+/// available parallelism.  Read once — the pool is sized from it.
+fn configured_parallelism() -> usize {
+    static CONF: OnceLock<usize> = OnceLock::new();
+    *CONF.get_or_init(|| {
+        std::env::var("PALLAS_WORKERS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
 /// Number of worker threads to use for `n_tasks` independent tasks.
 pub fn default_workers(n_tasks: usize) -> usize {
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    cores.min(n_tasks).max(1)
+    configured_parallelism().min(n_tasks).max(1)
 }
 
 /// One published parallel-for job.
@@ -245,6 +261,35 @@ where
     out
 }
 
+/// Scatter-gather over per-shard worker states: run `f(s, &mut
+/// shards[s])` for every shard concurrently on the persistent pool and
+/// return once all have finished.  This is the single-slot fan-out
+/// primitive of `coordinator::sharded`: the caller owns one long-lived
+/// state per shard (ledger + scratch), so the steady-state dispatch
+/// allocates nothing beyond the pool's one refcounted job header —
+/// results land in the shard states, not in a fresh output Vec.
+pub fn parallel_shards<T, F>(shards: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = shards.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 {
+        f(0, &mut shards[0]);
+        return;
+    }
+    let base = SyncSlice::new(shards);
+    parallel_for(n, n, |s| {
+        // SAFETY: parallel_for hands each index to exactly one task, so
+        // shard state s is touched by exactly one thread.
+        let shard = unsafe { &mut base.slice_mut(s, s + 1)[0] };
+        f(s, shard);
+    });
+}
+
 /// Split `data` into `chunks` contiguous mutable pieces and run
 /// `f(chunk_index, start_offset, piece)` on each in parallel.
 pub fn for_each_mut_chunks<T, F>(data: &mut [T], chunks: usize, f: F)
@@ -272,7 +317,9 @@ where
 
 /// A shared wrapper allowing disjoint-index writes into a slice from
 /// multiple threads.  Callers must guarantee indices don't collide.
-struct SyncSlice<T> {
+/// Crate-visible: the sharded coordinator and the OGA shard step use it
+/// for their disjoint-ownership scatters (safety argued at each site).
+pub(crate) struct SyncSlice<T> {
     ptr: *mut T,
     len: usize,
 }
@@ -281,20 +328,24 @@ unsafe impl<T: Send> Sync for SyncSlice<T> {}
 unsafe impl<T: Send> Send for SyncSlice<T> {}
 
 impl<T> SyncSlice<T> {
-    fn new(slice: &mut [T]) -> Self {
+    pub(crate) fn new(slice: &mut [T]) -> Self {
         SyncSlice { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
     }
 
     /// SAFETY: caller guarantees `i < len` and that no two threads write
     /// the same index.
-    unsafe fn write(&self, i: usize, value: T) {
+    pub(crate) unsafe fn write(&self, i: usize, value: T) {
         debug_assert!(i < self.len);
         unsafe { self.ptr.add(i).write(value) };
     }
 
     /// SAFETY: caller guarantees `lo <= hi <= len` and that ranges
     /// handed out to concurrent users are disjoint.
-    unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+    pub(crate) unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
         debug_assert!(lo <= hi && hi <= self.len);
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo) }
     }
@@ -367,6 +418,32 @@ mod tests {
         let mut empty: Vec<usize> = Vec::new();
         let out: Vec<usize> = parallel_map_mut(&mut empty, 4, |_, _| unreachable!());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_shards_gives_each_state_to_one_worker() {
+        struct Shard {
+            hits: usize,
+            sum: usize,
+        }
+        let mut shards: Vec<Shard> =
+            (0..7).map(|_| Shard { hits: 0, sum: 0 }).collect();
+        for round in 0..20 {
+            parallel_shards(&mut shards, |s, shard| {
+                shard.hits += 1;
+                shard.sum += s;
+            });
+            for (s, shard) in shards.iter().enumerate() {
+                assert_eq!(shard.hits, round + 1);
+                assert_eq!(shard.sum, (round + 1) * s);
+            }
+        }
+        // degenerate shapes
+        let mut empty: Vec<Shard> = Vec::new();
+        parallel_shards(&mut empty, |_, _| unreachable!());
+        let mut one = vec![Shard { hits: 0, sum: 0 }];
+        parallel_shards(&mut one, |_, shard| shard.hits += 1);
+        assert_eq!(one[0].hits, 1);
     }
 
     #[test]

@@ -51,15 +51,15 @@ fn random_problem(rng: &mut Rng, size: Size) -> Problem {
         UtilityKind::Poly,
         UtilityKind::Reciprocal,
     ];
-    Problem {
+    Problem::new(
         graph,
-        num_resources: k_n,
-        demand: (0..l_n * k_n).map(|_| rng.uniform(0.2, 4.0)).collect(),
-        capacity: (0..r_n * k_n).map(|_| rng.uniform(0.5, 8.0)).collect(),
-        alpha: (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
-        kind: (0..r_n * k_n).map(|_| kinds[rng.below(kinds.len())]).collect(),
-        beta: (0..k_n).map(|_| rng.uniform(0.0, 1.0)).collect(),
-    }
+        k_n,
+        (0..l_n * k_n).map(|_| rng.uniform(0.2, 4.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 8.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..r_n * k_n).map(|_| kinds[rng.below(kinds.len())]).collect(),
+        (0..k_n).map(|_| rng.uniform(0.0, 1.0)).collect(),
+    )
 }
 
 fn random_arrivals(rng: &mut Rng, p: &Problem) -> Vec<f64> {
@@ -277,15 +277,15 @@ fn full_graph_parity_smoke() {
     // fully-connected graph: CSR edge ids coincide with dense (l·R + r)
     // ordering, so the tensors must be bit-identical after projection
     let mut rng = Rng::new(99);
-    let p = Problem {
-        graph: Bipartite::full(5, 7),
-        num_resources: 3,
-        demand: (0..5 * 3).map(|_| rng.uniform(0.5, 2.0)).collect(),
-        capacity: (0..7 * 3).map(|_| rng.uniform(1.0, 4.0)).collect(),
-        alpha: vec![1.0; 21],
-        kind: vec![UtilityKind::Linear; 21],
-        beta: vec![0.3, 0.4, 0.5],
-    };
+    let p = Problem::new(
+        Bipartite::full(5, 7),
+        3,
+        (0..5 * 3).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..7 * 3).map(|_| rng.uniform(1.0, 4.0)).collect(),
+        vec![1.0; 21],
+        vec![UtilityKind::Linear; 21],
+        vec![0.3, 0.4, 0.5],
+    );
     assert_eq!(p.decision_len(), dense_len(&p));
     let z: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(-1.0, 5.0)).collect();
     let mut z_csr = z.clone();
@@ -300,15 +300,15 @@ fn zero_degree_port_contributes_nothing() {
     // a port with no instances has no coordinates, no gradient, and no
     // reward — and must not break any stage
     let graph = Bipartite::from_edges(3, 2, &[(0, 0), (2, 1)]); // port 1 stranded
-    let p = Problem {
+    let p = Problem::new(
         graph,
-        num_resources: 2,
-        demand: vec![1.0; 6],
-        capacity: vec![2.0; 4],
-        alpha: vec![1.0; 4],
-        kind: vec![UtilityKind::Linear; 4],
-        beta: vec![0.4, 0.6],
-    };
+        2,
+        vec![1.0; 6],
+        vec![2.0; 4],
+        vec![1.0; 4],
+        vec![UtilityKind::Linear; 4],
+        vec![0.4, 0.6],
+    );
     assert_eq!(p.decision_len(), 2 * 2);
     let x = vec![1.0, 1.0, 1.0];
     let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);

@@ -35,17 +35,15 @@ fn random_problem(rng: &mut Rng, size: Size) -> Problem {
         }
     }
     let graph = Bipartite::from_edges(l_n, r_n, &edges);
-    Problem {
+    Problem::new(
         graph,
-        num_resources: k_n,
-        demand: (0..l_n * k_n).map(|_| rng.uniform(0.2, 3.0)).collect(),
-        capacity: (0..r_n * k_n).map(|_| rng.uniform(0.5, 4.0)).collect(),
-        alpha: (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
-        kind: (0..r_n * k_n)
-            .map(|_| UtilityKind::ALL[rng.below(4)])
-            .collect(),
-        beta: (0..k_n).map(|_| rng.uniform(0.1, 0.8)).collect(),
-    }
+        k_n,
+        (0..l_n * k_n).map(|_| rng.uniform(0.2, 3.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..r_n * k_n).map(|_| UtilityKind::ALL[rng.below(4)]).collect(),
+        (0..k_n).map(|_| rng.uniform(0.1, 0.8)).collect(),
+    )
 }
 
 #[test]

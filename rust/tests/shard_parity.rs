@@ -1,0 +1,215 @@
+//! Sharded-vs-serial leader parity (§Perf-3): a `ShardedLeader` run —
+//! per-shard policy ascent/projection, worker-owned ledger shards,
+//! merged commit reports, parallel per-port reward — must reproduce the
+//! serial `Leader` run **bit for bit**: every slot record (q, gain,
+//! penalty), the cumulative reward, the clamp counts, the final ledger
+//! (remaining capacity per (r, k)) and, for the learning policies, the
+//! final decision tensor.  Across the full policy lineup × shard counts
+//! {1, 2, 3, 7} × sparse and dense arrivals, on random bipartite
+//! problems.
+//!
+//! This works because the sharded pipeline never re-associates a
+//! floating-point reduction: per-coordinate math runs through the same
+//! kernels on disjoint shard-owned coordinates, and every merge (per-
+//! port rewards, ledger Σ deltas, full-sweep re-sums) is replayed
+//! serially in the serial code's order.
+
+use ogasched::coordinator::{Leader, ShardPlan, ShardedLeader};
+use ogasched::graph::Bipartite;
+use ogasched::model::Problem;
+use ogasched::oga::utilities::UtilityKind;
+use ogasched::schedulers::{
+    BinPacking, Drf, Fairness, OgaMirror, OgaSched, Policy, RandomAlloc, Spreading,
+};
+use ogasched::sim::arrivals::Bernoulli;
+use ogasched::utils::prop::{check, ensure, Size};
+use ogasched::utils::rng::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+fn random_problem(rng: &mut Rng, size: Size) -> Problem {
+    let l_n = rng.range(1, size.dim(6, 1));
+    let r_n = rng.range(1, size.dim(16, 1));
+    let k_n = rng.range(1, size.dim(4, 1));
+    let p = rng.uniform(0.1, 0.9);
+    let mut edges = Vec::new();
+    for l in 0..l_n {
+        for r in 0..r_n {
+            if rng.bernoulli(p) {
+                edges.push((l, r));
+            }
+        }
+    }
+    let graph = Bipartite::from_edges(l_n, r_n, &edges);
+    Problem::new(
+        graph,
+        k_n,
+        (0..l_n * k_n).map(|_| rng.uniform(0.2, 3.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..r_n * k_n).map(|_| UtilityKind::ALL[rng.below(4)]).collect(),
+        (0..k_n).map(|_| rng.uniform(0.1, 0.8)).collect(),
+    )
+}
+
+/// Fresh policy #i — the paper lineup plus both OGA scoring modes, the
+/// mirror variant, and the random floor.
+fn make_policy(p: &Problem, i: usize, seed: u64) -> (&'static str, Box<dyn Policy>) {
+    match i {
+        0 => ("oga-reactive", Box::new(OgaSched::new(p, 2.0, 0.999, 0))),
+        1 => ("oga-reservation", Box::new(OgaSched::reservation(p, 2.0, 0.999, 0))),
+        2 => ("oga-mirror", Box::new(OgaMirror::new(p, 2.0, 0.999, 0))),
+        3 => ("drf", Box::new(Drf::new())),
+        4 => ("fairness", Box::new(Fairness::new())),
+        5 => ("binpacking", Box::new(BinPacking::new())),
+        6 => ("spreading", Box::new(Spreading::new())),
+        _ => ("random", Box::new(RandomAlloc::new(seed))),
+    }
+}
+
+const N_POLICIES: usize = 8;
+
+#[test]
+fn sharded_leader_matches_serial_bitwise() {
+    check("shard-parity", 10, |rng, size| {
+        let p = random_problem(rng, size);
+        let horizon = 30;
+        let arrival_seed = rng.below(1 << 30) as u64;
+        let policy_seed = rng.below(1 << 30) as u64;
+        for &rho in &[0.1, 0.8] {
+            for i in 0..N_POLICIES {
+                let (name, mut pol) = make_policy(&p, i, policy_seed);
+                let serial = {
+                    let mut leader = Leader::new(&p);
+                    let mut arr = Bernoulli::uniform(p.num_ports(), rho, arrival_seed);
+                    leader.run(pol.as_mut(), &mut arr, horizon)
+                };
+                for &shards in &SHARD_COUNTS {
+                    let (_, mut pol) = make_policy(&p, i, policy_seed);
+                    let mut leader = ShardedLeader::new(&p, shards);
+                    let mut arr = Bernoulli::uniform(p.num_ports(), rho, arrival_seed);
+                    let run = leader.run(pol.as_mut(), &mut arr, horizon);
+                    let ctx = format!("{name} rho={rho} shards={shards}");
+                    ensure(run.cumulative_reward == serial.cumulative_reward, || {
+                        format!(
+                            "{ctx}: cumulative {} vs serial {}",
+                            run.cumulative_reward, serial.cumulative_reward
+                        )
+                    })?;
+                    ensure(run.clamped_total == serial.clamped_total, || {
+                        format!("{ctx}: clamped totals diverged")
+                    })?;
+                    for (a, b) in run.records.iter().zip(&serial.records) {
+                        ensure(
+                            a.q == b.q && a.gain == b.gain && a.penalty == b.penalty,
+                            || {
+                                format!(
+                                    "{ctx} t={}: ({}, {}, {}) vs ({}, {}, {})",
+                                    a.t, a.q, a.gain, a.penalty, b.q, b.gain, b.penalty
+                                )
+                            },
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_ledger_matches_serial_ledger() {
+    // after identical runs, remaining capacity must agree exactly on
+    // every (r, k) — the folded shard rows ARE the serial ledger rows
+    check("shard-ledger-parity", 8, |rng, size| {
+        let p = random_problem(rng, size);
+        let horizon = 25;
+        let seed = rng.below(1 << 30) as u64;
+        for i in [0, 2, 4, 5] {
+            let (name, mut pol) = make_policy(&p, i, seed);
+            let mut serial = Leader::new(&p);
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, seed);
+            serial.run(pol.as_mut(), &mut arr, horizon);
+            for &shards in &SHARD_COUNTS {
+                let (_, mut pol) = make_policy(&p, i, seed);
+                let mut sharded = ShardedLeader::new(&p, shards);
+                let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, seed);
+                sharded.run(pol.as_mut(), &mut arr, horizon);
+                sharded.state().check_conservation().map_err(|e| {
+                    format!("{name} shards={shards}: conservation: {e}")
+                })?;
+                for r in 0..p.num_instances() {
+                    for k in 0..p.num_resources {
+                        ensure(
+                            sharded.state().remaining_at(r, k)
+                                == serial.state().remaining_at(r, k),
+                            || {
+                                format!(
+                                    "{name} shards={shards}: remaining({r},{k}) {} vs {}",
+                                    sharded.state().remaining_at(r, k),
+                                    serial.state().remaining_at(r, k)
+                                )
+                            },
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_decisions_match_serial_bitwise() {
+    // the learning policies' internal state (the decision tensor y)
+    // after a sharded run equals the serial trajectory exactly — the
+    // per-shard ascent/projection changed who computes each coordinate,
+    // never its value
+    let mut rng = Rng::new(4242);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 40;
+    let serial_y = {
+        let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+        let mut leader = Leader::new(&p);
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.3, 17);
+        leader.run(&mut pol, &mut arr, horizon);
+        pol.current_decision().to_vec()
+    };
+    for &shards in &SHARD_COUNTS {
+        let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+        let mut leader = ShardedLeader::new(&p, shards);
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.3, 17);
+        leader.run(&mut pol, &mut arr, horizon);
+        assert_eq!(
+            pol.current_decision(),
+            &serial_y[..],
+            "decision tensors diverged at shards={shards}"
+        );
+    }
+}
+
+#[test]
+fn shard_plan_balances_random_problems() {
+    check("shard-plan-balance", 40, |rng, size| {
+        let p = random_problem(rng, size);
+        for &shards in &SHARD_COUNTS {
+            let plan = ShardPlan::build(&p, shards);
+            plan.validate(&p).map_err(|e| format!("shards={shards}: {e}"))?;
+            let s_n = plan.num_shards();
+            let total: u64 = (0..s_n).map(|s| plan.load(s)).sum();
+            let max_load = (0..s_n).map(|s| plan.load(s)).max().unwrap_or(0);
+            let max_w = (0..p.num_instances())
+                .map(|r| p.graph.instance_degree(r) as u64 * p.num_resources as u64)
+                .max()
+                .unwrap_or(0);
+            // greedy-LPT guarantee
+            ensure(max_load <= total / s_n as u64 + max_w, || {
+                format!(
+                    "shards={shards}: max load {max_load} over bound (total {total}, \
+                     w* {max_w})"
+                )
+            })?;
+        }
+        Ok(())
+    });
+}
