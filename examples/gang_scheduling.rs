@@ -12,6 +12,7 @@ use ogasched::config::Scenario;
 use ogasched::coordinator::Leader;
 use ogasched::schedulers::gang::{GangOga, GangSpec};
 use ogasched::schedulers::{MultiArrivalOga, OgaSched, Policy};
+use ogasched::ExecBudget;
 use ogasched::sim::arrivals::{Bernoulli, MultiCount};
 use ogasched::traces::synthesize;
 use ogasched::utils::table::Table;
@@ -38,14 +39,14 @@ fn main() {
             min_tasks: 2,
         })
         .collect();
-    let mut gang = GangOga::new(&problem, &specs, scenario.eta0, scenario.decay, 0);
+    let mut gang = GangOga::new(&problem, &specs, scenario.eta0, scenario.decay, ExecBudget::auto());
     let mut leader = Leader::new(&problem);
     let mut arrivals =
         Bernoulli::uniform(problem.num_ports(), scenario.arrival_prob, 11);
     let gang_run = leader.run(&mut gang, &mut arrivals, scenario.horizon);
 
     // --- plain OGASCHED on the same trajectory for reference ---
-    let mut plain = OgaSched::new(&problem, scenario.eta0, scenario.decay, 0);
+    let mut plain = OgaSched::new(&problem, scenario.eta0, scenario.decay, ExecBudget::auto());
     let mut leader = Leader::new(&problem);
     let mut arrivals =
         Bernoulli::uniform(problem.num_ports(), scenario.arrival_prob, 11);
@@ -55,7 +56,7 @@ fn main() {
     // --- multi-arrival (Sec. 3.4): up to 3 jobs per port per slot ---
     let copies = vec![3usize; problem.num_ports()];
     let mut multi =
-        MultiArrivalOga::new(&problem, &copies, scenario.eta0, scenario.decay, 0);
+        MultiArrivalOga::new(&problem, &copies, scenario.eta0, scenario.decay, ExecBudget::auto());
     let mut leader = Leader::new(&problem);
     let mut counts = MultiCount::new(0.4, 3, 13);
     let multi_run = leader.run(&mut multi, &mut counts, scenario.horizon);

@@ -46,7 +46,7 @@ fn main() {
     );
 
     // --- the paper lineup (native OGASCHED + 4 baselines) ---
-    let mut lineup = paper_lineup(&problem, scenario.eta0, scenario.decay, scenario.workers);
+    let mut lineup = paper_lineup(&problem, scenario.eta0, scenario.decay, scenario.parallel);
     let mut results: Vec<RunResult> = lineup
         .iter_mut()
         .map(|policy| {

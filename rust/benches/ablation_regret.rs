@@ -1,6 +1,7 @@
 //! Ablation bench: Thm. 1 — empirical regret vs T and vs |L| with the
 //! offline stationary oracle; verifies sublinearity (exponent < 1).
 
+use ogasched::ExecBudget;
 use ogasched::benchlib::{policy_table, scaled, time_fn, Reporter};
 use ogasched::config::Scenario;
 use ogasched::figures::regret_fig;
@@ -21,8 +22,8 @@ fn main() {
     let mut s = Scenario::default();
     s.horizon = t;
     let p = synthesize(&s);
-    let additive = sim::run_on_problem(&s, &p, &mut OgaSched::new(&p, s.eta0, s.decay, 0));
-    let mirror = sim::run_on_problem(&s, &p, &mut OgaMirror::new(&p, s.eta0, s.decay, 0));
+    let additive = sim::run_on_problem(&s, &p, &mut OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto()));
+    let mirror = sim::run_on_problem(&s, &p, &mut OgaMirror::new(&p, s.eta0, s.decay, ExecBudget::auto()));
     rep.section(
         "additive vs mirror ascent (default scenario)",
         policy_table(

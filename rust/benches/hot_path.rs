@@ -14,6 +14,7 @@
 
 use ogasched::benchlib::{time_fn, Reporter};
 use ogasched::config::Scenario;
+use ogasched::ExecBudget;
 use ogasched::coordinator::{ClusterState, ShardedLeader};
 use ogasched::oga::dense_ref::DenseOgaState;
 use ogasched::oga::gradient::{grad_norm, gradient, GradScratch};
@@ -60,7 +61,7 @@ fn main() {
         rep.record(time_fn(&format!("reward(kinds)     {name}"), 3, 50, || {
             std::hint::black_box(slot_reward_kinds(&p, kinds, &x, &y, &mut quota));
         }));
-        let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);
+        let mut state = OgaState::new(&p, LearningRate::Constant(0.5), ExecBudget::auto());
         rep.record(time_fn(&format!("native OGA step   {name}"), 3, 50, || {
             state.step(&p, &x);
         }));
@@ -94,8 +95,8 @@ fn main() {
 
         let make_policy = |schedule: &str| -> OgaSched {
             match schedule {
-                "decay" => OgaSched::new(&p, scenario.eta0, scenario.decay, 0),
-                _ => OgaSched::with_oracle_rate(&p, 10_000, 0),
+                "decay" => OgaSched::new(&p, scenario.eta0, scenario.decay, ExecBudget::auto()),
+                _ => OgaSched::with_oracle_rate(&p, 10_000, ExecBudget::auto()),
             }
         };
         for schedule in ["decay", "oracle"] {
@@ -199,7 +200,7 @@ fn main() {
         let p = synthesize(&scenario);
         for shards in [1usize, 2, 4, 8] {
             let mut leader = ShardedLeader::new(&p, shards);
-            let mut pol = OgaSched::new(&p, scenario.eta0, scenario.decay, 0);
+            let mut pol = OgaSched::new(&p, scenario.eta0, scenario.decay, ExecBudget::auto());
             pol.bind_shards(leader.plan());
             let mut arr = Bernoulli::uniform(p.num_ports(), 0.1, 7);
             let mut x = vec![0.0; p.num_ports()];
@@ -211,6 +212,82 @@ fn main() {
                 || {
                     arr.next(&mut x);
                     std::hint::black_box(leader.slot(&mut pol, &x, &mut y));
+                },
+            ));
+        }
+    }
+
+    // ---- §Perf-4: sharded Eq. 50 oracle solve, large scenario ----
+    // The offline benchmark of Eq. 50 (`regret::solve_oracle`) at
+    // 1/2/4/8 shards: per iteration the gradient fill, ascent and
+    // projection fan out over the shard plan while the ‖∇q‖ reduction
+    // and the objective replay serially — floats identical to shard1
+    // (tests/shard_parity.rs), time dropping with shards.
+    {
+        use ogasched::regret::{arrival_counts, solve_oracle};
+        use ogasched::sim::arrivals::record_trajectory;
+        let scenario = Scenario::large_scale();
+        let p = synthesize(&scenario);
+        let mut src = Bernoulli::uniform(p.num_ports(), 0.7, 13);
+        let traj = record_trajectory(&mut src, p.num_ports(), 200);
+        let counts = arrival_counts(&traj, p.num_ports());
+        for shards in [1usize, 2, 4, 8] {
+            rep.record(time_fn(
+                &format!("solve_oracle 5it oracle shard{shards} large 100x1024x6"),
+                2,
+                10,
+                || {
+                    std::hint::black_box(solve_oracle(
+                        &p,
+                        &counts,
+                        200,
+                        5,
+                        ExecBudget::shards_only(shards),
+                    ));
+                },
+            ));
+        }
+    }
+
+    // ---- §Perf-4: lineup under a hierarchical budget, default scenario ----
+    // The whole five-policy sweep at the three splits of a 4-worker
+    // budget (plus the serial floor): runs x shards compose — 1x4 is a
+    // serial lineup of 4-shard leaders, 4x1 is four concurrent serial
+    // leaders, 2x2 is both at once.  Results are bit-identical across
+    // rows; only wall clock moves.
+    {
+        use ogasched::coordinator::run_lineup;
+        use ogasched::schedulers::paper_lineup;
+        let mut scenario = Scenario::default();
+        scenario.horizon = 50;
+        let p = synthesize(&scenario);
+        for (label, budget) in [
+            ("serial", ExecBudget::serial()),
+            ("1x4", ExecBudget::split(1, 4)),
+            ("2x2", ExecBudget::split(2, 2)),
+            ("4x1", ExecBudget::split(4, 1)),
+        ] {
+            rep.record(time_fn(
+                &format!("run_lineup 5pol h50 budget {label} default 10x128x6"),
+                1,
+                5,
+                || {
+                    let mut lineup =
+                        paper_lineup(&p, scenario.eta0, scenario.decay, budget);
+                    let results = run_lineup(
+                        &p,
+                        &mut lineup,
+                        || {
+                            Box::new(Bernoulli::uniform(
+                                p.num_ports(),
+                                scenario.arrival_prob,
+                                scenario.seed ^ 0xA5A5,
+                            ))
+                        },
+                        scenario.horizon,
+                        budget,
+                    );
+                    std::hint::black_box(results);
                 },
             ));
         }

@@ -79,6 +79,10 @@ COMMANDS:
                --config <file.toml>   scenario config (TOML subset)
                --horizon N --ports N --instances N --resources N
                --rho F --contention F --eta0 F --decay F --seed N
+               --runs N --shards N   two-level worker budget: N concurrent
+                                     runs x N workers per run (0 = auto
+                                     from PALLAS_WORKERS/cores; --workers N
+                                     is the legacy alias for --shards)
     compare    run the full paper lineup on one scenario (same options)
     figure     regenerate a paper figure/table:
                ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|all>

@@ -5,6 +5,7 @@
 
 use crate::config::value::Doc;
 use crate::oga::utilities::UtilityMix;
+use crate::utils::pool::ExecBudget;
 
 /// How the bipartite graph is generated.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -54,8 +55,11 @@ pub struct Scenario {
     pub graph: GraphSpec,
     pub utility_mix: UtilityMix,
     pub seed: u64,
-    /// Worker threads for the parallel projection (0 = auto).
-    pub workers: usize,
+    /// Execution budget (`[parallel]` in config files): `runs`
+    /// concurrent lineup lanes x `shards` workers per run, 0 = auto
+    /// (derived from `PALLAS_WORKERS` / available parallelism by
+    /// `ExecBudget::resolve`).
+    pub parallel: ExecBudget,
 }
 
 impl Default for Scenario {
@@ -79,7 +83,7 @@ impl Default for Scenario {
             graph: GraphSpec::Density(3.0),
             utility_mix: UtilityMix::Mixed,
             seed: 2023,
-            workers: 0,
+            parallel: ExecBudget::auto(),
         }
     }
 }
@@ -163,6 +167,7 @@ impl Scenario {
             "name", "ports", "instances", "resources", "horizon", "arrival_prob",
             "contention", "alpha_range", "beta_range", "eta0", "decay", "graph",
             "graph_degree", "graph_density", "utility_mix", "seed", "workers",
+            "parallel.runs", "parallel.shards",
         ];
         for key in doc.entries.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -206,7 +211,15 @@ impl Scenario {
             graph,
             utility_mix,
             seed: doc.usize_or("seed", d.seed as usize)? as u64,
-            workers: doc.usize_or("workers", d.workers)?,
+            // legacy flat `workers` = per-run shard budget; the
+            // `[parallel]` section wins when present
+            parallel: ExecBudget {
+                runs: doc.usize_or("parallel.runs", d.parallel.runs)?,
+                shards: doc.usize_or(
+                    "parallel.shards",
+                    doc.usize_or("workers", d.parallel.shards)?,
+                )?,
+            },
         };
         s.validate()?;
         Ok(s)
@@ -260,6 +273,24 @@ mod tests {
     #[test]
     fn unknown_keys_rejected() {
         assert!(Scenario::from_toml("portz = 5\n").unwrap_err().contains("unknown"));
+        assert!(Scenario::from_toml("[parallel]\nrunz = 2\n")
+            .unwrap_err()
+            .contains("unknown"));
+    }
+
+    #[test]
+    fn parallel_section_parses_and_defaults_auto() {
+        // default: fully automatic budget
+        assert_eq!(Scenario::default().parallel, ExecBudget::auto());
+        // explicit [parallel] split
+        let s = Scenario::from_toml("[parallel]\nruns = 2\nshards = 4\n").unwrap();
+        assert_eq!(s.parallel, ExecBudget::split(2, 4));
+        // legacy flat `workers` maps to the per-run shard budget ...
+        let s = Scenario::from_toml("workers = 3\n").unwrap();
+        assert_eq!(s.parallel, ExecBudget { runs: 0, shards: 3 });
+        // ... and the [parallel] section wins when both are present
+        let s = Scenario::from_toml("workers = 3\n[parallel]\nshards = 5\n").unwrap();
+        assert_eq!(s.parallel.shards, 5);
     }
 
     #[test]

@@ -11,18 +11,24 @@
 //! full sweep as fallback and parity oracle), release is lazy, and the
 //! reward runs the kind-batched kernel over the arrived ports — so a
 //! zero/sparse-arrival slot costs O(dirty), not O(|E|·K + R·K).
-//! [`run_lineup`] fans independent policy runs out over the persistent
-//! `utils::pool` workers (each run's inner projections degrade to
-//! inline submission, which the pool handles by construction).
+//! [`run_lineup`] fans independent policy runs out under an
+//! [`ExecBudget`] split of the worker budget (§Perf-4): up to
+//! `budget.runs` concurrent runs, each owning a private
+//! `budget.shards`-wide group that drives a sharded leader's
+//! within-slot scatters — across-run and within-slot parallelism
+//! compose instead of competing for one flat pool.
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::sharded::{ShardPlan, ShardedLeader};
 use crate::coordinator::state::ClusterState;
 use crate::model::Problem;
 use crate::reward::{slot_reward_kinds, SlotReward};
 use crate::schedulers::{Policy, Touched};
 use crate::sim::arrivals::ArrivalModel;
 use crate::utils::pool;
+use crate::utils::pool::ExecBudget;
 
 /// Per-slot record (the recorder of sim/).
 #[derive(Clone, Copy, Debug, Default)]
@@ -61,10 +67,11 @@ impl RunResult {
     /// Slots per second achieved by the whole loop.
     ///
     /// NB: for results produced by the parallel [`run_lineup`], wall
-    /// clock includes contention with the other policies' runs (and
-    /// inner projections degrade to inline execution), so this measures
-    /// sweep throughput, not isolated per-policy speed — time a direct
-    /// [`Leader::run`] (e.g. `benches/hot_path.rs`) for that.
+    /// clock includes contention with the other policies' runs (each
+    /// run's inner scatters are confined to its own budget-granted
+    /// shard group), so this measures sweep throughput, not isolated
+    /// per-policy speed — time a direct [`Leader::run`] (e.g.
+    /// `benches/hot_path.rs`) for that.
     pub fn throughput(&self) -> f64 {
         if self.elapsed_secs > 0.0 {
             self.records.len() as f64 / self.elapsed_secs
@@ -157,22 +164,51 @@ impl<'p> Leader<'p> {
 /// Convenience: run a whole policy lineup on forked arrival streams
 /// (every policy sees the *same* trajectory — seeded identically).
 ///
-/// §Perf-2: the runs are independent (each gets its own leader, ledger
-/// and arrival stream), so they are fanned out over the persistent
-/// worker pool — the figure sweeps become parallel across policies
-/// instead of serial.  Inner projections submitted from within a run
-/// degrade to inline execution (pool contract), so *results* are
-/// identical to the serial loop; per-run `elapsed_secs`/`throughput`
-/// however reflect the contended sweep, not isolated policy speed (see
-/// [`RunResult::throughput`]).
+/// §Perf-4: the runs are independent (each gets its own leader, ledger
+/// and arrival stream) and fan out under the [`ExecBudget`] split —
+/// `budget.runs` concurrent runs, **each of which** owns a private
+/// `budget.shards`-wide group driving a [`ShardedLeader`]'s within-slot
+/// scatters.  A lineup of sharded leaders therefore uses both
+/// parallelism levels at once; with a 1-shard budget the runs use plain
+/// serial [`Leader`]s, and when the lineup is itself nested inside an
+/// enclosing scatter (a figure sweep point) the runs fan over that
+/// scope with serial insides.  All three shapes are bit-identical to
+/// the serial loop (`ShardedLeader` ≡ `Leader` by the §Perf-3
+/// invariant, pinned across budget splits by `tests/shard_parity.rs`);
+/// per-run `elapsed_secs`/`throughput` however reflect the contended
+/// sweep, not isolated policy speed (see [`RunResult::throughput`]).
 pub fn run_lineup(
     problem: &Problem,
     policies: &mut [Box<dyn Policy + Send>],
     make_arrivals: impl Fn() -> Box<dyn ArrivalModel> + Sync,
     horizon: usize,
+    budget: ExecBudget,
 ) -> Vec<RunResult> {
-    pool::parallel_map_mut(policies, policies.len().max(1), |_, policy| {
+    let n = policies.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let serial_run = |policy: &mut Box<dyn Policy + Send>| {
         let mut leader = Leader::new(problem);
+        let mut arrivals = make_arrivals();
+        policy.reset(problem);
+        leader.run(policy.as_mut(), arrivals.as_mut(), horizon)
+    };
+    if pool::nested_scope() {
+        // already inside a scatter (e.g. a fig3 sweep point's shard
+        // group): fan the runs over the enclosing scope's workers and
+        // keep each run serial inside — no third budget level.
+        return pool::parallel_map_mut(policies, n, |_, policy| serial_run(policy));
+    }
+    let b = budget.resolve(n);
+    if b.shards <= 1 {
+        return pool::parallel_map_mut(policies, b.runs, |_, policy| serial_run(policy));
+    }
+    // one deterministic plan shared by every run (same problem, same
+    // shard count ⇒ same partition)
+    let plan = Arc::new(ShardPlan::build(problem, b.shards));
+    pool::scatter_runs(policies, b, |_, policy| {
+        let mut leader = ShardedLeader::with_plan(problem, Arc::clone(&plan));
         let mut arrivals = make_arrivals();
         policy.reset(problem);
         leader.run(policy.as_mut(), arrivals.as_mut(), horizon)
@@ -205,7 +241,7 @@ mod tests {
         let p = synthesize(&Scenario::small());
         let run = |seed| {
             let mut leader = Leader::new(&p);
-            let mut pol = OgaSched::new(&p, 5.0, 0.999, 0);
+            let mut pol = OgaSched::new(&p, 5.0, 0.999, ExecBudget::auto());
             let mut arr = Bernoulli::uniform(p.num_ports(), 0.7, seed);
             leader.run(&mut pol, &mut arr, 50).cumulative_reward
         };
@@ -216,12 +252,13 @@ mod tests {
     #[test]
     fn lineup_shares_the_trajectory() {
         let p = synthesize(&Scenario::small());
-        let mut lineup = paper_lineup(&p, 5.0, 0.999, 0);
+        let mut lineup = paper_lineup(&p, 5.0, 0.999, ExecBudget::auto());
         let results = run_lineup(
             &p,
             &mut lineup,
             || Box::new(Bernoulli::uniform(p.num_ports(), 0.7, 99)),
             60,
+            ExecBudget::auto(),
         );
         assert_eq!(results.len(), 5);
         // identical arrival totals across policies

@@ -51,7 +51,10 @@ use crate::utils::pool::SyncSlice;
 #[derive(Clone, Copy, Debug)]
 pub struct ArrivedPort {
     pub l: usize,
-    /// η_t · x_l — the ascent scale.
+    /// The per-coordinate scale of phase B: η_t · x_l for the fused
+    /// ascent; plain x_l for the Eq. 50 two-pass gradient fill
+    /// (`oga::gradient_sparse_sharded`), where η multiplies later in
+    /// the sharded ascent.
     pub scale: f64,
     /// argmax_k β_k · quota_k (Eq. 27).
     pub kstar: usize,
@@ -305,7 +308,13 @@ impl<'p> ShardedLeader<'p> {
     /// `num_shards == 0` sizes the plan from the pool's worker budget
     /// (`PALLAS_WORKERS` / available parallelism).
     pub fn new(problem: &'p Problem, num_shards: usize) -> Self {
-        let plan = Arc::new(ShardPlan::build(problem, num_shards));
+        Self::with_plan(problem, Arc::new(ShardPlan::build(problem, num_shards)))
+    }
+
+    /// Build on an existing plan — the budgeted `run_lineup` shares one
+    /// deterministic plan across all of a lineup's sharded leaders
+    /// instead of rebuilding it per run.
+    pub fn with_plan(problem: &'p Problem, plan: Arc<ShardPlan>) -> Self {
         let workers = (0..plan.num_shards())
             .map(|_| ShardWorker {
                 ledger: ShardLedger::new(problem),
@@ -551,6 +560,15 @@ impl<'p> ShardedLeader<'p> {
     }
 }
 
+/// The bound plan when it actually shards (> 1 shard) — the single
+/// activation predicate behind every plan-routed step (OGA fused
+/// ascent, oracle two-pass, mirror update, dirty projection).  Cloned
+/// (one refcount bump) so the caller can keep borrowing its own fields
+/// mutably for the step's duration.
+pub(crate) fn active_plan(plan: &Option<Arc<ShardPlan>>) -> Option<Arc<ShardPlan>> {
+    plan.clone().filter(|plan| plan.num_shards() > 1)
+}
+
 /// Project exactly the listed dirty instances, scattered by shard owner
 /// over the pool (each shard projects its own instances serially on its
 /// own thread).  The per-instance projection is independent, so any
@@ -639,13 +657,13 @@ mod tests {
         let horizon = 40;
         let serial = {
             let mut leader = Leader::new(&p);
-            let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, crate::utils::pool::ExecBudget::auto());
             let mut arr = Bernoulli::uniform(p.num_ports(), 0.4, 11);
             leader.run(&mut pol, &mut arr, horizon)
         };
         for shards in [1, 3] {
             let mut leader = ShardedLeader::new(&p, shards);
-            let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, crate::utils::pool::ExecBudget::auto());
             let mut arr = Bernoulli::uniform(p.num_ports(), 0.4, 11);
             let run = leader.run(&mut pol, &mut arr, horizon);
             assert_eq!(run.cumulative_reward, serial.cumulative_reward, "shards={shards}");

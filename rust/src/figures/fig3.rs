@@ -10,6 +10,7 @@ use crate::figures::{results_dir, FigureOutput};
 use crate::sim;
 use crate::utils::csv::Csv;
 use crate::utils::pool;
+use crate::utils::pool::ExecBudget;
 use crate::utils::table::Table;
 
 const INSTANCES: [usize; 5] = [32, 64, 128, 256, 512];
@@ -27,15 +28,19 @@ fn base(horizon_override: usize) -> Scenario {
 
 /// One sweep: vary a scenario knob, return (labels, per-policy curves).
 ///
-/// §Perf-2: sweep points are independent (policy, seed) bundles, so
-/// they run in parallel over the persistent worker pool; the lineup
-/// parallelism nested inside each point degrades to inline execution
-/// (pool contract), keeping results identical to the serial sweep.
+/// §Perf-4: sweep points are independent (policy, seed) bundles and fan
+/// out under the auto [`ExecBudget`] split — up to `runs` concurrent
+/// points, **each owning a private shard group** that the lineup nested
+/// inside the point fans its policy runs over (`run_lineup` detects the
+/// enclosing scope and keeps each run serial inside — two composed
+/// levels, never a third).  Results are identical to the serial sweep:
+/// every run is an independent (policy, seed) bundle and each run's
+/// floats never depend on which lane or group executed it.
 fn sweep(
     scenarios: Vec<(String, Scenario)>,
 ) -> (Vec<String>, Vec<String>, Vec<Vec<f64>>) {
     let labels: Vec<String> = scenarios.iter().map(|(l, _)| l.clone()).collect();
-    let all = pool::parallel_map(scenarios.len(), scenarios.len(), |i| {
+    let all = pool::scatter_map(scenarios.len(), ExecBudget::auto(), |i| {
         sim::run_paper_lineup(&scenarios[i].1)
     });
     let mut policy_names = Vec::new();

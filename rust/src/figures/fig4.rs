@@ -29,7 +29,7 @@ pub fn run(horizon_override: usize) -> FigureOutput {
     let mut table_a = Table::new(&["eta0", "avg reward", "cumulative", "min slot reward"]);
     let mut csv_a = Csv::new(&["eta0", "avg_reward", "cumulative", "min_slot"]);
     for &eta0 in &ETA0 {
-        let mut pol = OgaSched::new(&problem, eta0, s.decay, s.workers);
+        let mut pol = OgaSched::new(&problem, eta0, s.decay, s.parallel);
         let run = sim::run_on_problem(&s, &problem, &mut pol);
         let min_slot =
             run.records.iter().map(|r| r.q).fold(f64::INFINITY, f64::min);
@@ -47,7 +47,7 @@ pub fn run(horizon_override: usize) -> FigureOutput {
     let mut curves = Vec::new();
     let mut curve_names = Vec::new();
     for &decay in &DECAY {
-        let mut pol = OgaSched::new(&problem, s.eta0, decay, s.workers);
+        let mut pol = OgaSched::new(&problem, s.eta0, decay, s.parallel);
         let run = sim::run_on_problem(&s, &problem, &mut pol);
         let min_slot =
             run.records.iter().map(|r| r.q).fold(f64::INFINITY, f64::min);

@@ -26,7 +26,7 @@ pub fn run(horizon_override: usize) -> FigureOutput {
             s.horizon = horizon_override;
         }
         let problem = synthesize(&s);
-        let mut pol = OgaSched::new(&problem, s.eta0, s.decay, s.workers);
+        let mut pol = OgaSched::new(&problem, s.eta0, s.decay, s.parallel);
         let run = sim::run_on_problem(&s, &problem, &mut pol);
         let (gain, penalty) = metrics::gain_penalty_split(&run);
         let share = if gain.abs() > 1e-12 { 100.0 * penalty / gain } else { 0.0 };

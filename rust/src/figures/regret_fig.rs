@@ -21,7 +21,10 @@ const ORACLE_ITERS: usize = 400;
 
 /// Measure regret of OGASCHED (oracle learning rate, Eq. 50) on one
 /// scenario against the offline stationary optimum for the same
-/// realized trajectory.
+/// realized trajectory.  Both the offline `solve_oracle` benchmark and
+/// the online oracle-rate run inherit the scenario's `[parallel]`
+/// budget — under a multi-shard budget the Eq. 50 two-pass fans out
+/// per shard, bit-identically to the serial solve (§Perf-4).
 fn measure(scenario: &Scenario) -> (f64, f64) {
     let p = synthesize(scenario);
     let mut src =
@@ -29,10 +32,10 @@ fn measure(scenario: &Scenario) -> (f64, f64) {
     let traj = record_trajectory(&mut src, p.num_ports(), scenario.horizon);
     let counts = regret::arrival_counts(&traj, p.num_ports());
     let oracle =
-        regret::solve_oracle(&p, &counts, scenario.horizon, ORACLE_ITERS, scenario.workers);
+        regret::solve_oracle(&p, &counts, scenario.horizon, ORACLE_ITERS, scenario.parallel);
 
     let mut leader = Leader::new(&p);
-    let mut pol = OgaSched::with_oracle_rate(&p, scenario.horizon, scenario.workers);
+    let mut pol = OgaSched::with_oracle_rate(&p, scenario.horizon, scenario.parallel);
     let mut replay = Replay::new(traj);
     let run = leader.run(&mut pol, &mut replay, scenario.horizon);
     let r = regret::regret(&oracle, run.cumulative_reward).max(0.0);

@@ -41,3 +41,9 @@ pub mod schedulers;
 pub mod sim;
 pub mod traces;
 pub mod utils;
+
+/// The crate-wide execution-budget currency (re-exported from
+/// [`utils::pool`]): every `workers`-shaped knob — scenario configs,
+/// policy constructors, `run_lineup`, `solve_oracle` — takes this
+/// two-level `runs × shards` split instead of a raw int.
+pub use utils::pool::ExecBudget;

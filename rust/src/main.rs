@@ -62,7 +62,11 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     s.eta0 = args.opt_f64("eta0", s.eta0)?;
     s.decay = args.opt_f64("decay", s.decay)?;
     s.seed = args.opt_usize("seed", s.seed as usize)? as u64;
-    s.workers = args.opt_usize("workers", s.workers)?;
+    // --workers is the legacy per-run shard budget; --runs/--shards set
+    // the two-level split explicitly (0 = auto, see utils::pool)
+    s.parallel.shards = args.opt_usize("workers", s.parallel.shards)?;
+    s.parallel.runs = args.opt_usize("runs", s.parallel.runs)?;
+    s.parallel.shards = args.opt_usize("shards", s.parallel.shards)?;
     s.validate()?;
     Ok(s)
 }
@@ -72,7 +76,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let problem = synthesize(&s);
     let name = args.opt("policy").unwrap_or("ogasched");
     let mut policy: Box<dyn Policy> = match name {
-        "ogasched" => Box::new(OgaSched::new(&problem, s.eta0, s.decay, s.workers)),
+        "ogasched" => Box::new(OgaSched::new(&problem, s.eta0, s.decay, s.parallel)),
         "ogasched-hlo" => Box::new(
             HloOgaSched::from_default_dir(&problem, s.eta0, s.decay)
                 .map_err(|e| format!("{e:#}"))?,
@@ -82,7 +86,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         "binpacking" => Box::new(BinPacking::new()),
         "spreading" => Box::new(Spreading::new()),
         "ogasched-mirror" => {
-            Box::new(ogasched::schedulers::OgaMirror::new(&problem, s.eta0, s.decay, s.workers))
+            Box::new(ogasched::schedulers::OgaMirror::new(&problem, s.eta0, s.decay, s.parallel))
         }
         "random" => Box::new(RandomAlloc::new(s.seed)),
         other => return Err(format!("unknown policy `{other}`")),

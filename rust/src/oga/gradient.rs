@@ -127,6 +127,42 @@ fn port_gradient(
     }
 }
 
+/// One edge's gradient entries — `grad[e·K + k] = scale · f'(y, α)` —
+/// cut into maximal same-kind sub-runs so the call streams through the
+/// *same* element-wise [`UtilityKind::grad_into`] kernel as the serial
+/// port-run pass; per-element semantics (and floats) are identical,
+/// only the slice boundaries differ, which the kernel cannot observe.
+/// The per-edge body of the sharded Eq. 50 two-pass (§Perf-4; mirrors
+/// `oga::ascend_edge`).  The Eq. 27 k\*-lane penalty is the caller's
+/// second pass.
+pub(crate) fn grad_edge(
+    problem: &Problem,
+    kinds: &KindIndex,
+    y: &[f64],
+    grad: &mut [f64],
+    e: usize,
+    scale: f64,
+) {
+    let k_n = problem.num_resources;
+    let base = e * k_n;
+    let rk = problem.graph.edge_instance[e] * k_n;
+    let mut k = 0;
+    while k < k_n {
+        let kind = problem.kind[rk + k];
+        let start = k;
+        k += 1;
+        while k < k_n && problem.kind[rk + k] == kind {
+            k += 1;
+        }
+        kind.grad_into(
+            &y[base + start..base + k],
+            &kinds.alpha_flat[base + start..base + k],
+            scale,
+            &mut grad[base + start..base + k],
+        );
+    }
+}
+
 /// Euclidean norm of the gradient (used for the Eq. 50 oracle step size
 /// and the Thm. 1 bound check).
 pub fn grad_norm(grad: &[f64]) -> f64 {

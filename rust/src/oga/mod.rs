@@ -9,10 +9,10 @@ pub mod utilities;
 
 use std::sync::Arc;
 
-use crate::coordinator::sharded::{project_dirty_sharded, ArrivedPort, ShardPlan};
+use crate::coordinator::sharded::{active_plan, project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::{KindIndex, Problem};
-use crate::utils::pool::{self, SyncSlice};
-use gradient::{grad_norm_ports, gradient_sparse, GradScratch};
+use crate::utils::pool::{self, ExecBudget, SyncSlice};
+use gradient::{grad_edge, grad_norm_ports, gradient_sparse, GradScratch};
 use projection::{project, project_instances};
 
 /// Learning-rate schedule.  The paper's experiments use a multiplicative
@@ -62,8 +62,9 @@ pub struct OgaState {
     /// Slot counter (t starts at 0 == paper's t = 1).
     pub t: usize,
     pub lr: LearningRate,
-    /// Worker threads for the projection (0 = auto).
-    pub workers: usize,
+    /// Execution budget; `budget.shards` bounds the projection workers
+    /// of the unbound (plan-less) paths (0 = auto).
+    pub budget: ExecBudget,
     grad: Vec<f64>,
     scratch: GradScratch,
     scratch_quota: Vec<f64>,
@@ -96,12 +97,12 @@ pub struct OgaState {
 impl OgaState {
     /// y(1) = 0 is feasible (Y contains the origin) and is the paper's
     /// un-boosted initialization (Sec. 4.1 notes the early oscillation).
-    pub fn new(problem: &Problem, lr: LearningRate, workers: usize) -> Self {
+    pub fn new(problem: &Problem, lr: LearningRate, budget: ExecBudget) -> Self {
         OgaState {
             y: vec![0.0; problem.decision_len()],
             t: 0,
             lr,
-            workers,
+            budget,
             grad: vec![0.0; problem.decision_len()],
             scratch: GradScratch::default(),
             scratch_quota: Vec::new(),
@@ -154,32 +155,68 @@ impl OgaState {
         self.dirty_list.clear();
         let eta = match self.lr {
             LearningRate::Oracle { .. } => {
-                // Sparse two-pass path (§Perf-2): the gradient, its
-                // norm, and the ascent all touch only the arrived
-                // ports' slices — the gradient is zero everywhere else,
-                // so nothing here scales with |E|.
-                gradient_sparse(
-                    problem,
-                    problem.kinds(),
-                    x,
-                    &self.y,
-                    &mut self.grad,
-                    &mut self.scratch,
-                    &mut self.grad_ports,
-                );
-                let gnorm = grad_norm_ports(problem, &self.grad, &self.grad_ports);
-                let eta = self.lr.eta(problem, self.t, gnorm);
-                let k_n = problem.num_resources;
-                for &l in &self.grad_ports {
-                    let lo = problem.graph.port_ptr[l] * k_n;
-                    let hi = problem.graph.port_ptr[l + 1] * k_n;
-                    for i in lo..hi {
-                        self.y[i] += eta * self.grad[i];
+                match active_plan(&self.plan) {
+                    // Sharded two-pass (§Perf-4): per-edge gradient
+                    // fill and ascent fan out over the bound plan; the
+                    // ‖∇q‖ reduction replays serially on this thread in
+                    // the serial order, so η — and with it the whole
+                    // trajectory — is bit-identical to the serial path.
+                    Some(plan) => {
+                        gradient_sparse_sharded(
+                            problem,
+                            x,
+                            &self.y,
+                            &mut self.grad,
+                            &mut self.scratch_quota,
+                            &mut self.grad_ports,
+                            &mut self.port_steps,
+                            &plan,
+                        );
+                        let gnorm =
+                            grad_norm_ports(problem, &self.grad, &self.grad_ports);
+                        let eta = self.lr.eta(problem, self.t, gnorm);
+                        ascend_ports_sharded(
+                            problem,
+                            &mut self.y,
+                            &self.grad,
+                            &self.port_steps,
+                            eta,
+                            &plan,
+                        );
+                        self.mark_dirty_from_grad_ports(problem);
+                        eta
+                    }
+                    None => {
+                        // Sparse two-pass path (§Perf-2): the gradient,
+                        // its norm, and the ascent all touch only the
+                        // arrived ports' slices — the gradient is zero
+                        // everywhere else, so nothing here scales with
+                        // |E|.
+                        gradient_sparse(
+                            problem,
+                            problem.kinds(),
+                            x,
+                            &self.y,
+                            &mut self.grad,
+                            &mut self.scratch,
+                            &mut self.grad_ports,
+                        );
+                        let gnorm =
+                            grad_norm_ports(problem, &self.grad, &self.grad_ports);
+                        let eta = self.lr.eta(problem, self.t, gnorm);
+                        let k_n = problem.num_resources;
+                        for &l in &self.grad_ports {
+                            let lo = problem.graph.port_ptr[l] * k_n;
+                            let hi = problem.graph.port_ptr[l + 1] * k_n;
+                            for i in lo..hi {
+                                self.y[i] += eta * self.grad[i];
+                            }
+                        }
+                        // only the arrived ports' instances were perturbed
+                        self.mark_dirty_from_grad_ports(problem);
+                        eta
                     }
                 }
-                // only the arrived ports' instances were perturbed
-                self.mark_dirty_from_grad_ports(problem);
-                eta
             }
             LearningRate::Decay { lambda, .. } => {
                 let eta = self.eta_run;
@@ -193,10 +230,10 @@ impl OgaState {
             }
         };
         if self.full_project_pending {
-            project(problem, &mut self.y, self.workers);
+            project(problem, &mut self.y, self.budget.shards);
             self.full_project_pending = false;
         } else {
-            match self.plan.clone().filter(|plan| plan.num_shards() > 1) {
+            match active_plan(&self.plan) {
                 Some(plan) => project_dirty_sharded(
                     problem,
                     &mut self.y,
@@ -204,9 +241,12 @@ impl OgaState {
                     &plan,
                     &mut self.shard_dirty,
                 ),
-                None => {
-                    project_instances(problem, &mut self.y, &self.dirty_list, self.workers)
-                }
+                None => project_instances(
+                    problem,
+                    &mut self.y,
+                    &self.dirty_list,
+                    self.budget.shards,
+                ),
             }
         }
         self.t += 1;
@@ -216,7 +256,7 @@ impl OgaState {
     /// Route the fused ascent: per-shard when a multi-shard plan is
     /// bound, the serial kernel otherwise.  Identical floats either way.
     fn ascend(&mut self, problem: &Problem, x: &[f64], eta: f64) {
-        match self.plan.clone().filter(|plan| plan.num_shards() > 1) {
+        match active_plan(&self.plan) {
             Some(plan) => self.fused_ascent_sharded(problem, x, eta, &plan),
             None => self.fused_ascent(problem, x, eta),
         }
@@ -402,6 +442,100 @@ fn ascend_edge(problem: &Problem, kinds: &KindIndex, y: &mut [f64], e: usize, sc
     }
 }
 
+/// Sharded sparse gradient fill (§Perf-4) — the two-pass companion of
+/// [`gradient::gradient_sparse`], shared by the plan-bound Eq. 50
+/// oracle-rate step and `regret::solve_oracle`.  Phase A (caller
+/// thread) re-zeroes the slices the *previous* call filled, then runs
+/// the per-port quota/k\* reductions in the serial port order,
+/// recording each arrived port's step and the active-port list.  Phase
+/// B fans the per-edge `grad` writes out over the plan: each shard
+/// fills exactly the coordinates of the edges it owns through the same
+/// element-wise `grad_into` kernel (cut at edge boundaries, which the
+/// kernel cannot observe) and applies the Eq. 27 penalty on the k\*
+/// lane — so the resulting buffer equals the serial
+/// `gradient_sparse` output bit for bit.
+pub(crate) fn gradient_sparse_sharded(
+    problem: &Problem,
+    x: &[f64],
+    y: &[f64],
+    grad: &mut [f64],
+    quota: &mut Vec<f64>,
+    active: &mut Vec<usize>,
+    steps: &mut Vec<ArrivedPort>,
+    plan: &ShardPlan,
+) {
+    let k_n = problem.num_resources;
+    quota.resize(k_n, 0.0);
+    for &l in active.iter() {
+        let lo = problem.graph.port_ptr[l] * k_n;
+        let hi = problem.graph.port_ptr[l + 1] * k_n;
+        grad[lo..hi].fill(0.0);
+    }
+    active.clear();
+    steps.clear();
+    for l in 0..problem.num_ports() {
+        let x_l = x[l];
+        if x_l == 0.0 {
+            continue;
+        }
+        let kstar = port_kstar(problem, l, y, quota);
+        steps.push(ArrivedPort { l, scale: x_l, kstar, pen: x_l * problem.beta[kstar] });
+        active.push(l);
+    }
+    if steps.is_empty() {
+        return;
+    }
+    let kinds = problem.kinds();
+    let steps_ref: &[ArrivedPort] = steps;
+    let view = SyncSlice::new(grad);
+    let g_len = view.len();
+    pool::parallel_for(plan.num_shards(), plan.num_shards(), |s| {
+        // SAFETY: every edge belongs to exactly one instance, and the
+        // plan assigns each instance to exactly one shard — the
+        // coordinate sets written by distinct shards are disjoint.
+        let grad = unsafe { view.slice_mut(0, g_len) };
+        for step in steps_ref {
+            for &e in plan.port_edges(s, step.l) {
+                grad_edge(problem, kinds, y, grad, e, step.scale);
+                grad[e * k_n + step.kstar] -= step.pen;
+            }
+        }
+    });
+}
+
+/// Sharded ascent over the recorded arrived-port steps:
+/// `y[j] += η·grad[j]` on every coordinate of every arrived port's
+/// edges, each shard writing only the edges it owns.  One add per
+/// coordinate — exactly the serial two-pass ascent, so the floats are
+/// identical by construction.
+pub(crate) fn ascend_ports_sharded(
+    problem: &Problem,
+    y: &mut [f64],
+    grad: &[f64],
+    steps: &[ArrivedPort],
+    eta: f64,
+    plan: &ShardPlan,
+) {
+    if steps.is_empty() {
+        return;
+    }
+    let k_n = problem.num_resources;
+    let view = SyncSlice::new(y);
+    let y_len = view.len();
+    pool::parallel_for(plan.num_shards(), plan.num_shards(), |s| {
+        // SAFETY: disjoint edge ownership per shard, as above.
+        let y = unsafe { view.slice_mut(0, y_len) };
+        for step in steps {
+            for &e in plan.port_edges(s, step.l) {
+                let base = e * k_n;
+                for j in base..base + k_n {
+                    y[j] += eta * grad[j];
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,7 +546,7 @@ mod tests {
     #[test]
     fn step_keeps_feasibility() {
         let p = synthesize(&Scenario::small());
-        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 25.0, lambda: 0.9999 }, 0);
+        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 25.0, lambda: 0.9999 }, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         for _ in 0..20 {
             s.step(&p, &x);
@@ -425,7 +559,7 @@ mod tests {
         // only some ports arrive -> only their instances are dirty; the
         // result must still be globally feasible every slot
         let p = synthesize(&Scenario::small());
-        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 25.0, lambda: 0.999 }, 0);
+        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 25.0, lambda: 0.999 }, ExecBudget::auto());
         let mut rng = crate::utils::rng::Rng::new(17);
         for _ in 0..40 {
             let x: Vec<f64> = (0..p.num_ports())
@@ -439,7 +573,7 @@ mod tests {
     #[test]
     fn dirty_set_is_exactly_arrived_neighborhood() {
         let p = synthesize(&Scenario::small());
-        let mut s = OgaState::new(&p, LearningRate::Constant(1.0), 0);
+        let mut s = OgaState::new(&p, LearningRate::Constant(1.0), ExecBudget::auto());
         let mut x = vec![0.0; p.num_ports()];
         x[0] = 1.0;
         s.step(&p, &x);
@@ -453,7 +587,7 @@ mod tests {
     #[test]
     fn invalidate_forces_global_reprojection() {
         let p = synthesize(&Scenario::small());
-        let mut s = OgaState::new(&p, LearningRate::Constant(0.5), 0);
+        let mut s = OgaState::new(&p, LearningRate::Constant(0.5), ExecBudget::auto());
         // plant an infeasible decision everywhere, then arrive only at
         // port 0: without invalidate(), instances outside port 0's
         // neighborhood would never be re-projected
@@ -470,7 +604,7 @@ mod tests {
     #[test]
     fn reward_climbs_under_stationary_arrivals() {
         let p = synthesize(&Scenario::small());
-        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 5.0, lambda: 0.999 }, 0);
+        let mut s = OgaState::new(&p, LearningRate::Decay { eta0: 5.0, lambda: 0.999 }, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let r0 = slot_reward(&p, &x, &s.y).q;
         for _ in 0..100 {
@@ -494,7 +628,7 @@ mod tests {
         // the closed form eta0 * lambda^t is the parity reference
         let p = synthesize(&Scenario::small());
         let lr = LearningRate::Decay { eta0: 2.0, lambda: 0.999 };
-        let mut s = OgaState::new(&p, lr, 0);
+        let mut s = OgaState::new(&p, lr, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         for t in 0..500 {
             let used = s.step(&p, &x);
@@ -515,7 +649,7 @@ mod tests {
         let kinds = KindIndex::build(&p);
         let horizon = 40;
         let lr = LearningRate::Oracle { horizon };
-        let mut s = OgaState::new(&p, lr, 0);
+        let mut s = OgaState::new(&p, lr, ExecBudget::auto());
         let mut y_ref = vec![0.0; p.decision_len()];
         let mut grad = vec![0.0; p.decision_len()];
         let mut scratch = GradScratch::default();
@@ -552,27 +686,35 @@ mod tests {
 
     #[test]
     fn sharded_step_matches_serial_bitwise() {
-        // the §Perf-3 invariant at the OgaState level: binding a shard
-        // plan changes who computes each coordinate, never its value —
-        // trajectories (and dirty-set discovery order) are bit-identical
+        // the §Perf-3/§Perf-4 invariant at the OgaState level: binding a
+        // shard plan changes who computes each coordinate, never its
+        // value — trajectories (and dirty-set discovery order) are
+        // bit-identical for both the fused-ascent schedules and the
+        // Eq. 50 oracle-rate two-pass (whose ‖∇q‖ reduction replays
+        // serially on the driver).
         use crate::coordinator::sharded::ShardPlan;
         use std::sync::Arc;
         let p = synthesize(&Scenario::small());
-        let mut rng = crate::utils::rng::Rng::new(23);
-        for shards in [2, 3, 7] {
-            let lr = LearningRate::Decay { eta0: 2.0, lambda: 0.999 };
-            let mut serial = OgaState::new(&p, lr, 0);
-            let mut sharded = OgaState::new(&p, lr, 0);
-            sharded.bind_shards(Arc::new(ShardPlan::build(&p, shards)));
-            for t in 0..30 {
-                let x: Vec<f64> = (0..p.num_ports())
-                    .map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 })
-                    .collect();
-                let e1 = serial.step(&p, &x);
-                let e2 = sharded.step(&p, &x);
-                assert_eq!(e1, e2);
-                assert_eq!(serial.y, sharded.y, "shards={shards} t={t}");
-                assert_eq!(serial.dirty_instances(), sharded.dirty_instances());
+        for lr in [
+            LearningRate::Decay { eta0: 2.0, lambda: 0.999 },
+            LearningRate::Oracle { horizon: 64 },
+        ] {
+            let mut rng = crate::utils::rng::Rng::new(23);
+            for shards in [2, 3, 7] {
+                let mut serial = OgaState::new(&p, lr, ExecBudget::auto());
+                let mut sharded = OgaState::new(&p, lr, ExecBudget::auto());
+                sharded.bind_shards(Arc::new(ShardPlan::build(&p, shards)));
+                for t in 0..30 {
+                    let x: Vec<f64> = (0..p.num_ports())
+                        .map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 })
+                        .collect();
+                    let e1 = serial.step(&p, &x);
+                    let e2 = sharded.step(&p, &x);
+                    assert_eq!(e1, e2, "{lr:?} shards={shards} t={t}");
+                    assert_eq!(serial.y, sharded.y, "{lr:?} shards={shards} t={t}");
+                    assert_eq!(serial.dirty_instances(), sharded.dirty_instances());
+                    assert_eq!(serial.last_grad(), sharded.last_grad());
+                }
             }
         }
     }
@@ -580,7 +722,7 @@ mod tests {
     #[test]
     fn zero_arrivals_leave_y_fixed() {
         let p = synthesize(&Scenario::small());
-        let mut s = OgaState::new(&p, LearningRate::Constant(1.0), 0);
+        let mut s = OgaState::new(&p, LearningRate::Constant(1.0), ExecBudget::auto());
         let x_on = vec![1.0; p.num_ports()];
         let x_off = vec![0.0; p.num_ports()];
         for _ in 0..5 {

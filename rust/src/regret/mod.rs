@@ -9,10 +9,13 @@
 //! gradient ascent re-using the exact same gradient/projection code the
 //! online algorithm runs.
 
+use crate::coordinator::sharded::{project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::{KindIndex, Problem};
 use crate::oga::gradient::{grad_norm, gradient_sparse, GradScratch};
 use crate::oga::projection::project_instances;
+use crate::oga::{ascend_ports_sharded, gradient_sparse_sharded};
 use crate::reward::{slot_reward, slot_reward_kinds};
+use crate::utils::pool::ExecBudget;
 
 /// Result of the offline oracle solve.
 #[derive(Clone, Debug)]
@@ -45,20 +48,34 @@ pub fn arrival_counts(trajectory: &[Vec<f64>], num_ports: usize) -> Vec<f64> {
 /// [`gradient_sparse`]), ascent, projection, and objective — is
 /// restricted to the arrived ports' slices and their adjacent
 /// instances; ports that never arrive are never touched.
+///
+/// §Perf-4: under a multi-shard [`ExecBudget`] (auto resolves to the
+/// worker budget W) each iteration's gradient fill, ascent and
+/// projection fan out over a deterministic [`ShardPlan`], while the
+/// ‖∇q‖ reduction and the objective replay serially on the caller
+/// thread in the serial order — so the sharded solve is **bit-identical**
+/// to the serial one (pinned by `tests/shard_parity.rs` at shard counts
+/// {1, 2, 3, 7}), the same discipline as `coordinator::sharded`'s
+/// reward/ledger merges.
 pub fn solve_oracle(
     problem: &Problem,
     counts: &[f64],
     horizon: usize,
     iters: usize,
-    workers: usize,
+    budget: ExecBudget,
 ) -> Oracle {
     let k_n = problem.num_resources;
     let kinds = problem.kinds();
+    let shards = budget.run_shards().clamp(1, problem.num_instances().max(1));
+    let plan = if shards > 1 { Some(ShardPlan::build(problem, shards)) } else { None };
     let mut y = vec![0.0; problem.decision_len()];
     let mut grad = vec![0.0; problem.decision_len()];
     let mut scratch = GradScratch::default();
     let mut quota = vec![0.0; k_n];
+    let mut kq = vec![0.0; k_n];
     let mut active_ports: Vec<usize> = Vec::new();
+    let mut steps: Vec<ArrivedPort> = Vec::new();
+    let mut parts: Vec<Vec<usize>> = Vec::new();
 
     // instances adjacent to any arrived port: the only columns the
     // ascent can perturb, hence the only channels to re-project
@@ -78,13 +95,21 @@ pub fn solve_oracle(
     let mut best_obj = slot_reward_kinds(problem, kinds, counts, &y, &mut quota).q;
 
     // Scale-free initial step: diam(Y) / ‖∇q(0)‖ keeps the first move
-    // inside the polytope's order of magnitude.
-    gradient_sparse(problem, kinds, counts, &y, &mut grad, &mut scratch, &mut active_ports);
-    let g0 = grad_norm(&grad).max(1e-12);
-    let eta0 = problem.diam_upper() / g0;
-
-    for i in 0..iters {
-        gradient_sparse(
+    // inside the polytope's order of magnitude.  (The sharded fill
+    // writes the same floats into the same zero-initialized buffer, so
+    // the flat full-buffer norm is identical either way.)
+    match &plan {
+        Some(plan) => gradient_sparse_sharded(
+            problem,
+            counts,
+            &y,
+            &mut grad,
+            &mut kq,
+            &mut active_ports,
+            &mut steps,
+            plan,
+        ),
+        None => gradient_sparse(
             problem,
             kinds,
             counts,
@@ -92,16 +117,48 @@ pub fn solve_oracle(
             &mut grad,
             &mut scratch,
             &mut active_ports,
-        );
+        ),
+    }
+    let g0 = grad_norm(&grad).max(1e-12);
+    let eta0 = problem.diam_upper() / g0;
+
+    for i in 0..iters {
         let eta = eta0 / ((i + 1) as f64).sqrt();
-        for &l in &active_ports {
-            let lo = problem.graph.port_ptr[l] * k_n;
-            let hi = problem.graph.port_ptr[l + 1] * k_n;
-            for j in lo..hi {
-                y[j] += eta * grad[j];
+        match &plan {
+            Some(plan) => {
+                gradient_sparse_sharded(
+                    problem,
+                    counts,
+                    &y,
+                    &mut grad,
+                    &mut kq,
+                    &mut active_ports,
+                    &mut steps,
+                    plan,
+                );
+                ascend_ports_sharded(problem, &mut y, &grad, &steps, eta, plan);
+                project_dirty_sharded(problem, &mut y, &active_instances, plan, &mut parts);
+            }
+            None => {
+                gradient_sparse(
+                    problem,
+                    kinds,
+                    counts,
+                    &y,
+                    &mut grad,
+                    &mut scratch,
+                    &mut active_ports,
+                );
+                for &l in &active_ports {
+                    let lo = problem.graph.port_ptr[l] * k_n;
+                    let hi = problem.graph.port_ptr[l + 1] * k_n;
+                    for j in lo..hi {
+                        y[j] += eta * grad[j];
+                    }
+                }
+                project_instances(problem, &mut y, &active_instances, 1);
             }
         }
-        project_instances(problem, &mut y, &active_instances, workers);
         let obj = slot_reward_kinds(problem, kinds, counts, &y, &mut quota).q;
         if obj > best_obj {
             best_obj = obj;
@@ -148,7 +205,7 @@ mod tests {
     fn oracle_beats_any_feasible_point_we_try() {
         let (_s, p) = small_problem();
         let counts = vec![100.0; p.num_ports()];
-        let oracle = solve_oracle(&p, &counts, 150, 300, 0);
+        let oracle = solve_oracle(&p, &counts, 150, 300, ExecBudget::serial());
         p.check_feasible(&oracle.y_star, 1e-7).unwrap();
         // random feasible candidates never beat the oracle
         let mut rng = crate::utils::rng::Rng::new(5);
@@ -167,7 +224,7 @@ mod tests {
         // projecting one more ascent step from y* should barely move it
         let (_s, p) = small_problem();
         let counts = vec![50.0; p.num_ports()];
-        let oracle = solve_oracle(&p, &counts, 100, 500, 0);
+        let oracle = solve_oracle(&p, &counts, 100, 500, ExecBudget::serial());
         let mut y = oracle.y_star.clone();
         let mut grad = vec![0.0; y.len()];
         let mut scratch = GradScratch::default();
@@ -191,10 +248,10 @@ mod tests {
         let mut src = Bernoulli::uniform(p.num_ports(), s.arrival_prob, 77);
         let traj = record_trajectory(&mut src, p.num_ports(), s.horizon);
         let counts = arrival_counts(&traj, p.num_ports());
-        let oracle = solve_oracle(&p, &counts, s.horizon, 400, 0);
+        let oracle = solve_oracle(&p, &counts, s.horizon, 400, ExecBudget::serial());
 
         let mut leader = Leader::new(&p);
-        let mut pol = OgaSched::with_oracle_rate(&p, s.horizon, 0);
+        let mut pol = OgaSched::with_oracle_rate(&p, s.horizon, ExecBudget::auto());
         let mut replay = Replay::new(traj);
         let run = leader.run(&mut pol, &mut replay, s.horizon);
         let r = regret(&oracle, run.cumulative_reward);

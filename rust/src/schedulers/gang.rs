@@ -21,6 +21,7 @@ use crate::graph::Bipartite;
 use crate::model::Problem;
 use crate::oga::{LearningRate, OgaState};
 use crate::schedulers::Policy;
+use crate::utils::pool::ExecBudget;
 
 /// A gang job spec: per-component demand rows [(|Q_l|, K)] and the
 /// minimum component count m_l.
@@ -48,7 +49,7 @@ pub struct GangOga {
 
 impl GangOga {
     pub fn new(problem: &Problem, specs: &[GangSpec], eta0: f64, decay: f64,
-               workers: usize) -> Self {
+               budget: ExecBudget) -> Self {
         assert_eq!(specs.len(), problem.num_ports());
         let k_n = problem.num_resources;
         let mut edges = Vec::new();
@@ -83,7 +84,7 @@ impl GangOga {
         let state = OgaState::new(
             &expanded,
             LearningRate::Decay { eta0, lambda: decay },
-            workers,
+            budget,
         );
         GangOga { expanded, ranges, specs: specs.to_vec(), state, x_buf: Vec::new() }
     }
@@ -149,7 +150,7 @@ impl Policy for GangOga {
     }
 
     fn reset(&mut self, _problem: &Problem) {
-        self.state = OgaState::new(&self.expanded, self.state.lr, self.state.workers);
+        self.state = OgaState::new(&self.expanded, self.state.lr, self.state.budget);
     }
 }
 
@@ -177,7 +178,7 @@ mod tests {
     #[test]
     fn expansion_shapes() {
         let p = synthesize(&Scenario::small());
-        let gang = GangOga::new(&p, &specs_for(&p, 3, 2), 5.0, 0.999, 0);
+        let gang = GangOga::new(&p, &specs_for(&p, 3, 2), 5.0, 0.999, ExecBudget::auto());
         assert_eq!(gang.expanded.num_ports(), 3 * p.num_ports());
         assert_eq!(gang.ranges.len(), p.num_ports());
         gang.expanded.graph.validate().unwrap();
@@ -186,7 +187,7 @@ mod tests {
     #[test]
     fn decisions_feasible_under_gang_restoration() {
         let p = synthesize(&Scenario::small());
-        let mut gang = GangOga::new(&p, &specs_for(&p, 3, 2), 10.0, 0.999, 0);
+        let mut gang = GangOga::new(&p, &specs_for(&p, 3, 2), 10.0, 0.999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y = vec![0.0; p.decision_len()];
         for _ in 0..15 {
@@ -213,7 +214,7 @@ mod tests {
     fn all_or_nothing_withholds_partial_jobs() {
         let p = synthesize(&Scenario::small());
         // min_tasks == comps: every component must be active
-        let mut gang = GangOga::new(&p, &specs_for(&p, 2, 2), 5.0, 0.999, 0);
+        let mut gang = GangOga::new(&p, &specs_for(&p, 2, 2), 5.0, 0.999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y = vec![0.0; p.decision_len()];
         // first slot: y(1) = 0 so no components active -> nothing launches
@@ -227,6 +228,6 @@ mod tests {
         let p = synthesize(&Scenario::small());
         let mut specs = specs_for(&p, 2, 2);
         specs[0].min_tasks = 5;
-        GangOga::new(&p, &specs, 5.0, 0.999, 0);
+        GangOga::new(&p, &specs, 5.0, 0.999, ExecBudget::auto());
     }
 }

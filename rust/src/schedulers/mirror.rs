@@ -22,11 +22,11 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::sharded::{project_dirty_sharded, ArrivedPort, ShardPlan};
+use crate::coordinator::sharded::{active_plan, project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::Problem;
 use crate::oga::projection::{project, project_instances};
 use crate::schedulers::{IncrementalPublisher, Policy, Touched};
-use crate::utils::pool::{self, SyncSlice};
+use crate::utils::pool::{self, ExecBudget, SyncSlice};
 
 /// Seed allocation (fraction of the per-channel cap) so multiplicative
 /// updates have something to multiply.
@@ -40,7 +40,7 @@ pub struct OgaMirror {
     y: Vec<f64>,
     eta0: f64,
     decay: f64,
-    workers: usize,
+    budget: ExecBudget,
     /// Slot counter (diagnostic; η is maintained in `eta_run`).
     pub t: usize,
     /// Running η (η_{t+1} = λ·η_t), replacing the per-slot
@@ -66,12 +66,12 @@ pub struct OgaMirror {
 }
 
 impl OgaMirror {
-    pub fn new(problem: &Problem, eta0: f64, decay: f64, workers: usize) -> Self {
+    pub fn new(problem: &Problem, eta0: f64, decay: f64, budget: ExecBudget) -> Self {
         let mut pol = OgaMirror {
             y: Vec::new(),
             eta0,
             decay,
-            workers,
+            budget,
             t: 0,
             eta_run: eta0,
             quota: vec![0.0; problem.num_resources],
@@ -96,7 +96,7 @@ impl OgaMirror {
             }
         }
         // the seed touches every edge, so this one projection is global
-        project(problem, &mut self.y, self.workers);
+        project(problem, &mut self.y, self.budget.shards);
         self.t = 0;
         self.eta_run = self.eta0;
         self.publisher.reset();
@@ -112,7 +112,7 @@ impl OgaMirror {
             self.dirty[r] = false;
         }
         self.dirty_list.clear();
-        match self.plan.clone().filter(|plan| plan.num_shards() > 1) {
+        match active_plan(&self.plan) {
             Some(plan) => {
                 self.update_sharded(problem, x, eta, &plan);
                 project_dirty_sharded(
@@ -125,7 +125,7 @@ impl OgaMirror {
             }
             None => {
                 self.update_serial(problem, x, eta);
-                project_instances(problem, &mut self.y, &self.dirty_list, self.workers);
+                project_instances(problem, &mut self.y, &self.dirty_list, self.budget.shards);
             }
         }
         self.t += 1;
@@ -252,7 +252,7 @@ mod tests {
     fn mirror_decisions_feasible() {
         let s = Scenario::small();
         let p = synthesize(&s);
-        let mut pol = OgaMirror::new(&p, 2.0, 0.9999, 0);
+        let mut pol = OgaMirror::new(&p, 2.0, 0.9999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y = vec![0.0; p.decision_len()];
         for _ in 0..30 {
@@ -265,7 +265,7 @@ mod tests {
     fn mirror_climbs_reward() {
         let s = Scenario::small();
         let p = synthesize(&s);
-        let mut pol = OgaMirror::new(&p, 2.0, 0.9999, 0);
+        let mut pol = OgaMirror::new(&p, 2.0, 0.9999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y = vec![0.0; p.decision_len()];
         pol.decide(&p, &x, &mut y);
@@ -285,8 +285,8 @@ mod tests {
         let mut s = Scenario::small();
         s.horizon = 400;
         let p = synthesize(&s);
-        let mut mirror = OgaMirror::new(&p, s.eta0, s.decay, 0);
-        let mut additive = OgaSched::new(&p, s.eta0, s.decay, 0);
+        let mut mirror = OgaMirror::new(&p, s.eta0, s.decay, ExecBudget::auto());
+        let mut additive = OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
         let rm = sim::run_on_problem(&s, &p, &mut mirror);
         let ra = sim::run_on_problem(&s, &p, &mut additive);
         assert!(
@@ -301,7 +301,7 @@ mod tests {
     fn reset_reseeds() {
         let s = Scenario::small();
         let p = synthesize(&s);
-        let mut pol = OgaMirror::new(&p, 2.0, 0.9999, 0);
+        let mut pol = OgaMirror::new(&p, 2.0, 0.9999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y1 = vec![0.0; p.decision_len()];
         let mut y2 = vec![0.0; p.decision_len()];

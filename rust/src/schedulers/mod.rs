@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::coordinator::sharded::ShardPlan;
 use crate::model::Problem;
+use crate::utils::pool::ExecBudget;
 
 pub use baselines::{BinPacking, Drf, Fairness, RandomAlloc, Spreading};
 pub use gang::GangOga;
@@ -204,11 +205,14 @@ impl IncrementalPublisher {
 
 /// Construct every policy of the paper's Fig. 2 comparison, OGASCHED
 /// first (order matters for the figure legends).  Boxed `Send` so
-/// `coordinator::run_lineup` can fan the runs out over the worker pool.
-pub fn paper_lineup(problem: &Problem, eta0: f64, decay: f64, workers: usize)
+/// `coordinator::run_lineup` can fan the runs out under its
+/// [`ExecBudget`] split (the budget here seeds the learning policies'
+/// own projection/shard bounds; the lineup-level split is the
+/// engine's).
+pub fn paper_lineup(problem: &Problem, eta0: f64, decay: f64, budget: ExecBudget)
     -> Vec<Box<dyn Policy + Send>> {
     vec![
-        Box::new(OgaSched::new(problem, eta0, decay, workers)),
+        Box::new(OgaSched::new(problem, eta0, decay, budget)),
         Box::new(Drf::new()),
         Box::new(Fairness::new()),
         Box::new(BinPacking::new()),
@@ -229,7 +233,7 @@ mod tests {
         let scenario = Scenario::small();
         let p = synthesize(&scenario);
         let mut rng = Rng::new(77);
-        for mut policy in paper_lineup(&p, 5.0, 0.999, 0) {
+        for mut policy in paper_lineup(&p, 5.0, 0.999, ExecBudget::auto()) {
             let mut y = vec![0.0; p.decision_len()];
             for _ in 0..30 {
                 let x: Vec<f64> = (0..p.num_ports())
@@ -266,7 +270,7 @@ mod tests {
     fn lineup_names_match_paper() {
         let p = synthesize(&Scenario::small());
         let names: Vec<&str> =
-            paper_lineup(&p, 25.0, 0.9999, 0).iter().map(|p| p.name()).collect();
+            paper_lineup(&p, 25.0, 0.9999, ExecBudget::auto()).iter().map(|p| p.name()).collect();
         assert_eq!(names, vec!["OGASCHED", "DRF", "FAIRNESS", "BINPACKING", "SPREADING"]);
     }
 }

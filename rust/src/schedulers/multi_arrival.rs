@@ -12,6 +12,7 @@ use crate::graph::Bipartite;
 use crate::model::Problem;
 use crate::schedulers::oga_sched::OgaSched;
 use crate::schedulers::Policy;
+use crate::utils::pool::ExecBudget;
 
 /// Expand a problem so port l has `copies[l]` clones (J_l planes).
 pub fn expand_problem(problem: &Problem, copies: &[usize]) -> (Problem, Vec<usize>) {
@@ -73,9 +74,9 @@ pub struct MultiArrivalOga {
 
 impl MultiArrivalOga {
     pub fn new(problem: &Problem, copies: &[usize], eta0: f64, decay: f64,
-               workers: usize) -> Self {
+               budget: ExecBudget) -> Self {
         let (expanded, _owner) = expand_problem(problem, copies);
-        let inner = OgaSched::new(&expanded, eta0, decay, workers);
+        let inner = OgaSched::new(&expanded, eta0, decay, budget);
         let y_len = expanded.decision_len();
         MultiArrivalOga {
             expanded,
@@ -160,7 +161,7 @@ mod tests {
     fn capacity_still_respected_after_folding() {
         let p = synthesize(&Scenario::small());
         let copies = vec![3; p.num_ports()];
-        let mut pol = MultiArrivalOga::new(&p, &copies, 10.0, 0.999, 0);
+        let mut pol = MultiArrivalOga::new(&p, &copies, 10.0, 0.999, ExecBudget::auto());
         let x: Vec<f64> = (0..p.num_ports()).map(|l| (l % 4) as f64).collect();
         let mut y = vec![0.0; p.decision_len()];
         let k_n = p.num_resources;

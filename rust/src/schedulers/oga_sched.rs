@@ -12,12 +12,13 @@ use crate::coordinator::sharded::ShardPlan;
 use crate::model::Problem;
 use crate::oga::{LearningRate, OgaState};
 use crate::schedulers::{IncrementalPublisher, Policy, Touched};
+use crate::utils::pool::ExecBudget;
 
 pub struct OgaSched {
     state: OgaState,
     eta0: f64,
     decay: f64,
-    workers: usize,
+    budget: ExecBudget,
     /// Shard plan bound by the sharded coordinator (§Perf-3); re-bound
     /// into the fresh state on `reset`.
     plan: Option<Arc<ShardPlan>>,
@@ -44,16 +45,16 @@ pub struct OgaSched {
 
 impl OgaSched {
     /// Reactive-scoring OGASCHED (the paper's evaluation semantics).
-    pub fn new(problem: &Problem, eta0: f64, decay: f64, workers: usize) -> Self {
+    pub fn new(problem: &Problem, eta0: f64, decay: f64, budget: ExecBudget) -> Self {
         OgaSched {
             state: OgaState::new(
                 problem,
                 LearningRate::Decay { eta0, lambda: decay },
-                workers,
+                budget,
             ),
             eta0,
             decay,
-            workers,
+            budget,
             plan: None,
             publisher: IncrementalPublisher::default(),
             pending: Vec::new(),
@@ -63,18 +64,18 @@ impl OgaSched {
 
     /// Literal Def. 2 reservation scoring (what Thm. 1 bounds); used by
     /// the regret experiments and theory tests.
-    pub fn reservation(problem: &Problem, eta0: f64, decay: f64, workers: usize) -> Self {
-        OgaSched { reactive: false, ..Self::new(problem, eta0, decay, workers) }
+    pub fn reservation(problem: &Problem, eta0: f64, decay: f64, budget: ExecBudget) -> Self {
+        OgaSched { reactive: false, ..Self::new(problem, eta0, decay, budget) }
     }
 
     /// Use the Eq. 50 oracle learning rate instead of the decay schedule
     /// (reservation scoring — this is the Thm. 1 configuration).
-    pub fn with_oracle_rate(problem: &Problem, horizon: usize, workers: usize) -> Self {
+    pub fn with_oracle_rate(problem: &Problem, horizon: usize, budget: ExecBudget) -> Self {
         OgaSched {
-            state: OgaState::new(problem, LearningRate::Oracle { horizon }, workers),
+            state: OgaState::new(problem, LearningRate::Oracle { horizon }, budget),
             eta0: 0.0,
             decay: 0.0,
-            workers,
+            budget,
             plan: None,
             publisher: IncrementalPublisher::default(),
             pending: Vec::new(),
@@ -118,7 +119,7 @@ impl Policy for OgaSched {
         } else {
             self.state.lr
         };
-        self.state = OgaState::new(problem, lr, self.workers);
+        self.state = OgaState::new(problem, lr, self.budget);
         if let Some(plan) = &self.plan {
             self.state.bind_shards(plan.clone());
         }
@@ -145,7 +146,7 @@ mod tests {
     #[test]
     fn first_decision_is_the_zero_reservation() {
         let p = synthesize(&Scenario::small());
-        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, 0);
+        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y = vec![9.0; p.decision_len()];
         pol.decide(&p, &x, &mut y);
@@ -155,7 +156,7 @@ mod tests {
         assert!(y.iter().any(|&v| v > 0.0));
 
         // reactive mode serves x(1) with the post-step allocation
-        let mut pol = OgaSched::new(&p, 5.0, 0.999, 0);
+        let mut pol = OgaSched::new(&p, 5.0, 0.999, ExecBudget::auto());
         pol.decide(&p, &x, &mut y);
         assert!(y.iter().any(|&v| v > 0.0), "reactive y includes the slot-1 step");
     }
@@ -163,7 +164,7 @@ mod tests {
     #[test]
     fn reset_restores_initial_state() {
         let p = synthesize(&Scenario::small());
-        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, 0);
+        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, ExecBudget::auto());
         let x = vec![1.0; p.num_ports()];
         let mut y = vec![0.0; p.decision_len()];
         for _ in 0..5 {
@@ -189,11 +190,11 @@ mod tests {
             })
             .collect();
         // reactive: emitted y(t) == state after step t
-        let mut pol = OgaSched::new(&p, 5.0, 0.999, 0);
+        let mut pol = OgaSched::new(&p, 5.0, 0.999, ExecBudget::auto());
         let mut shadow = OgaState::new(
             &p,
             LearningRate::Decay { eta0: 5.0, lambda: 0.999 },
-            0,
+            ExecBudget::auto(),
         );
         let mut y = vec![0.0; p.decision_len()];
         for x in &arrivals {
@@ -213,11 +214,11 @@ mod tests {
             }
         }
         // reservation: emitted y(t) == state *before* step t
-        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, 0);
+        let mut pol = OgaSched::reservation(&p, 5.0, 0.999, ExecBudget::auto());
         let mut shadow = OgaState::new(
             &p,
             LearningRate::Decay { eta0: 5.0, lambda: 0.999 },
-            0,
+            ExecBudget::auto(),
         );
         let mut y = vec![9.0; p.decision_len()];
         for x in &arrivals {
@@ -233,8 +234,8 @@ mod tests {
         // arrival sequence (the step order is the only difference)
         let p = synthesize(&Scenario::small());
         let x = vec![1.0; p.num_ports()];
-        let mut ra = OgaSched::new(&p, 5.0, 0.999, 0);
-        let mut rs = OgaSched::reservation(&p, 5.0, 0.999, 0);
+        let mut ra = OgaSched::new(&p, 5.0, 0.999, ExecBudget::auto());
+        let mut rs = OgaSched::reservation(&p, 5.0, 0.999, ExecBudget::auto());
         let mut y_a = vec![0.0; p.decision_len()];
         let mut y_s = vec![0.0; p.decision_len()];
         rs.decide(&p, &x, &mut y_s); // reservation slot 1 -> y(1)=0

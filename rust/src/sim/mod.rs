@@ -35,14 +35,15 @@ pub fn run_on_problem(
 }
 
 /// Run the full paper lineup on a scenario; every policy sees the same
-/// arrival trajectory.
+/// arrival trajectory.  The scenario's `[parallel]` budget drives the
+/// two-level split: concurrent runs × per-run shard groups (§Perf-4).
 pub fn run_paper_lineup(scenario: &Scenario) -> Vec<RunResult> {
     let problem = synthesize(scenario);
     let mut lineup = crate::schedulers::paper_lineup(
         &problem,
         scenario.eta0,
         scenario.decay,
-        scenario.workers,
+        scenario.parallel,
     );
     crate::coordinator::run_lineup(
         &problem,
@@ -55,6 +56,7 @@ pub fn run_paper_lineup(scenario: &Scenario) -> Vec<RunResult> {
             ))
         },
         scenario.horizon,
+        scenario.parallel,
     )
 }
 

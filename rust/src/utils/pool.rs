@@ -1,31 +1,52 @@
-//! Persistent worker pool (no rayon in the offline image).
+//! Hierarchical budget-aware executor (no rayon in the offline image).
 //!
 //! Algorithm 1's projection is "for each (r, k) do in parallel".  The
 //! seed provided that parallelism with `std::thread::scope`, which pays
 //! ~100µs of spawn/join per worker per call — more than the projection
 //! itself on mid-sized problems (measured in
 //! benches/ablation_projection.rs, recorded in EXPERIMENTS.md §Perf).
-//! This module keeps one process-wide pool of parked workers instead:
-//! a call publishes a job (type-erased closure + atomic chunk cursor),
-//! wakes the workers, participates in the work itself, and blocks until
-//! every index has executed.  Steady-state dispatch cost is one mutex
-//! round-trip plus condvar wakes — single-digit microseconds.
+//! This module keeps parked workers instead: a call publishes a job
+//! (type-erased closure + atomic chunk cursor), wakes the workers,
+//! participates in the work itself, and blocks until every index has
+//! executed.  Steady-state dispatch cost is one mutex round-trip plus
+//! condvar wakes — single-digit microseconds.
+//!
+//! §Perf-4 made the executor *two-level*.  The worker budget W
+//! ([`global_workers`]: `PALLAS_WORKERS` or auto-detect) splits into an
+//! [`ExecBudget`] of `runs × shards`: up to `runs` concurrent top-level
+//! lanes (e.g. the policies of a `run_lineup` sweep), each owning a
+//! private [`ShardGroup`] of `shards` workers that its *nested* scatters
+//! dispatch to.  Dispatch is routed by a thread-local scope:
+//!
+//! * a plain thread scatters on the **global crew** (the flat pool);
+//! * a lane driver inside [`ShardGroup::run`] scatters on its **leased
+//!   group crew** — nested parallelism no longer degrades to inline
+//!   execution when the budget grants it workers;
+//! * a crew *worker* thread (global or group) runs nested scatters
+//!   inline — the two levels are the hierarchy, there is no third.
 //!
 //! Work is chunked dynamically (atomic `fetch_add` on a shared cursor in
-//! chunks of ~n/4·workers), which keeps near-uniform projection tasks
-//! balanced without a work-stealing deque.  Concurrent submitters (e.g.
-//! parallel test threads) do not queue: whoever arrives second runs its
-//! loop inline on its own thread, which is always correct and avoids
-//! nested-job deadlocks by construction.
+//! chunks of ~n/4·workers), which keeps near-uniform tasks balanced
+//! without a work-stealing deque.  Concurrent submitters to the *same*
+//! crew do not queue: whoever arrives second runs its loop inline on its
+//! own thread, which is always correct and avoids same-crew nested-job
+//! deadlocks by construction.  Which thread executes which index is
+//! scheduling-dependent, but every caller in this crate either writes
+//! disjoint coordinates or replays its float reductions serially, so
+//! results never depend on the assignment.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Process-wide parallelism budget: `PALLAS_WORKERS` when set to a
+/// Process-wide parallelism budget W: `PALLAS_WORKERS` when set to a
 /// positive integer (CI pins it so small runners still exercise the
 /// multi-worker paths deterministically), otherwise the machine's
-/// available parallelism.  Read once — the pool is sized from it.
-fn configured_parallelism() -> usize {
+/// available parallelism.  Read once — the global crew and every
+/// derived [`ExecBudget`] are sized from it.  This is the single place
+/// that parses the env var; every other layer consumes the shared
+/// [`ExecBudget`] type instead of re-reading the environment.
+pub fn global_workers() -> usize {
     static CONF: OnceLock<usize> = OnceLock::new();
     *CONF.get_or_init(|| {
         std::env::var("PALLAS_WORKERS")
@@ -38,23 +59,123 @@ fn configured_parallelism() -> usize {
     })
 }
 
+/// Optional override of the auto-derived lane count (`PALLAS_RUNS`):
+/// lets CI pin an explicit budget split (e.g. `PALLAS_WORKERS=4` with
+/// `PALLAS_RUNS=2` → 2 lanes × 2 shards) without touching configs.
+fn configured_runs() -> Option<usize> {
+    static CONF: OnceLock<Option<usize>> = OnceLock::new();
+    *CONF.get_or_init(|| {
+        std::env::var("PALLAS_RUNS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+}
+
 /// Number of worker threads to use for `n_tasks` independent tasks.
 pub fn default_workers(n_tasks: usize) -> usize {
-    configured_parallelism().min(n_tasks).max(1)
+    global_workers().min(n_tasks).max(1)
+}
+
+/// Split of the global worker budget into `runs × shards`: up to `runs`
+/// concurrent top-level lanes, each owning `shards` workers for its
+/// nested scatters.  `0` in either field means *auto*, resolved by the
+/// deterministic rule in [`ExecBudget::resolve`].  This is the shared
+/// currency every `workers`-shaped knob in the crate plumbs —
+/// scenarios, policies, `run_lineup`, `solve_oracle` — instead of raw
+/// ints with per-site env parsing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecBudget {
+    /// Concurrent top-level lanes (0 = auto).
+    pub runs: usize,
+    /// Workers per lane — the shard-group size (0 = auto).
+    pub shards: usize,
+}
+
+impl ExecBudget {
+    /// Fully automatic split (the [`Default`]).
+    pub const fn auto() -> ExecBudget {
+        ExecBudget { runs: 0, shards: 0 }
+    }
+
+    /// One lane, one worker: everything runs serially.
+    pub const fn serial() -> ExecBudget {
+        ExecBudget { runs: 1, shards: 1 }
+    }
+
+    /// Explicit split (honored as given — an explicit budget may
+    /// deliberately oversubscribe; auto-derived ones never do).
+    pub const fn split(runs: usize, shards: usize) -> ExecBudget {
+        ExecBudget { runs, shards }
+    }
+
+    /// One lane with `shards` workers (0 = auto) — the legacy shape of
+    /// the crate's old `workers: usize` parameters.
+    pub const fn shards_only(shards: usize) -> ExecBudget {
+        ExecBudget { runs: 1, shards }
+    }
+
+    /// Resolve auto fields for a fan-out of `n_runs` candidate lanes.
+    /// Deterministic rule: `runs = min(n_runs, W)` (or `PALLAS_RUNS`,
+    /// clamped the same way; with an explicit `shards`, W is first
+    /// divided by it so the lanes fit), then `shards = max(1, W / runs)`
+    /// — so `runs × shards ≤ W` and the split never oversubscribes
+    /// unless both fields were set explicitly.  Idempotent.
+    pub fn resolve(self, n_runs: usize) -> ExecBudget {
+        let n = n_runs.max(1);
+        let w = global_workers();
+        let runs = match self.runs {
+            0 => {
+                // an explicit per-run shard width consumes its slice of
+                // the budget before the lane count is derived
+                let lane_cap = match self.shards {
+                    0 => w,
+                    s => (w / s).max(1),
+                };
+                configured_runs().unwrap_or(n).min(lane_cap).min(n).max(1)
+            }
+            r => r.min(n).max(1),
+        };
+        let shards = match self.shards {
+            0 => (w / runs).max(1),
+            s => s,
+        };
+        ExecBudget { runs, shards }
+    }
+
+    /// Concrete shard count for a single run (no lane fan-out): the
+    /// explicit `shards`, or the whole worker budget W when auto.
+    pub fn run_shards(self) -> usize {
+        if self.shards == 0 {
+            global_workers()
+        } else {
+            self.shards
+        }
+    }
+
+}
+
+/// Legacy bridge: the crate's old `workers: usize` parameters meant
+/// "workers inside this one run, 0 = auto" — exactly
+/// [`ExecBudget::shards_only`].
+impl From<usize> for ExecBudget {
+    fn from(workers: usize) -> ExecBudget {
+        ExecBudget::shards_only(workers)
+    }
 }
 
 /// One published parallel-for job.
 struct Job {
     /// Type-erased pointer to the caller's closure.  Only dereferenced
-    /// while the submitting thread is blocked inside `parallel_for`, so
+    /// while the submitting thread is blocked inside `Crew::scatter`, so
     /// the pointee outlives every use (raw pointers carry no lifetime).
     f: *const (dyn Fn(usize) + Sync),
     /// Next unclaimed index (claimed in `chunk`-sized strides).
     next: AtomicUsize,
     /// Indices fully executed; the job is done when this reaches `n`.
     completed: AtomicUsize,
-    /// Pool threads that joined; capped at `max_entrants` so a caller's
-    /// `workers` budget is honored even when the pool is larger.
+    /// Crew threads that joined; capped at `max_entrants` so a caller's
+    /// `workers` budget is honored even when the crew is larger.
     entrants: AtomicUsize,
     n: usize,
     chunk: usize,
@@ -82,16 +203,92 @@ struct Shared {
     done_cv: Condvar,
 }
 
-struct Pool {
+/// One dispatch unit: a job slot plus the parked worker threads that
+/// drain it.  The flat global pool is a crew; every leased
+/// [`ShardGroup`] wraps its own private crew — same machinery, so the
+/// two hierarchy levels share one implementation.
+struct Crew {
     shared: Arc<Shared>,
     /// Serializes submissions; `try_lock` losers run inline instead of
     /// queueing (see module docs).
     submit: Mutex<()>,
-    /// Parked worker threads (detached; they live for the process).
-    pool_threads: usize,
+    /// Parked worker threads owned by this crew (detached; they live
+    /// for the process — crews are pooled and reused, never dropped).
+    threads: AtomicUsize,
+}
+
+impl Crew {
+    fn new() -> Crew {
+        Crew {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot { seq: 0, job: None }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            submit: Mutex::new(()),
+            threads: AtomicUsize::new(0),
+        }
+    }
+
+    /// Grow to at least `want` parked workers (callers serialize this
+    /// through the lease registry; the global crew grows once at init).
+    fn ensure_threads(&self, want: usize, tag: &str) {
+        let have = self.threads.load(Ordering::Relaxed);
+        for i in have..want {
+            let shared = Arc::clone(&self.shared);
+            if std::thread::Builder::new()
+                .name(format!("{tag}-{i}"))
+                .spawn(move || worker_loop(shared))
+                .is_ok()
+            {
+                self.threads.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Publish `f` over `0..n` with up to `workers` entrants (the
+    /// submitting thread counts as one) and block until done.  Returns
+    /// `false` — caller must run inline — when the crew cannot help:
+    /// one worker budget, no parked threads, or the submit lock is held
+    /// (a concurrent or nested submission on this crew).
+    fn scatter(&self, n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) -> bool {
+        if workers <= 1 || self.threads.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        let Ok(_submit) = self.submit.try_lock() else {
+            return false;
+        };
+        let job = Arc::new(Job {
+            f: f as *const (dyn Fn(usize) + Sync),
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            entrants: AtomicUsize::new(0),
+            n,
+            chunk: n.div_ceil(workers * 4).max(1),
+            max_entrants: workers,
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.seq += 1;
+            slot.job = Some(Arc::clone(&job));
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter works too — on small jobs it often finishes the
+        // whole index space before a worker even wakes.
+        run_job(&self.shared, &job);
+        let mut slot = self.shared.slot.lock().unwrap();
+        while job.completed.load(Ordering::Acquire) < job.n {
+            slot = self.shared.done_cv.wait(slot).unwrap();
+        }
+        slot.job = None;
+        true
+    }
 }
 
 fn worker_loop(shared: Arc<Shared>) {
+    // Nested scatters submitted from inside a task run inline: the two
+    // budget levels (lanes × shards) are the whole hierarchy.
+    SCOPE.with(|s| *s.borrow_mut() = Scope::WorkerInline);
     let mut last_seq = 0u64;
     loop {
         let job = {
@@ -122,7 +319,7 @@ fn run_job(shared: &Shared, job: &Job) {
             break;
         }
         // SAFETY: we hold an unexecuted chunk, so `completed < n` and the
-        // submitter is still blocked in `parallel_for` — the closure is
+        // submitter is still blocked in `Crew::scatter` — the closure is
         // alive.  A late-waking worker on a finished job always sees
         // `lo >= n` above and never reaches this deref.
         let f = unsafe { &*job.f };
@@ -141,30 +338,155 @@ fn run_job(shared: &Shared, job: &Job) {
     }
 }
 
-fn pool() -> &'static Pool {
-    static POOL: OnceLock<Pool> = OnceLock::new();
-    POOL.get_or_init(|| {
-        let shared = Arc::new(Shared {
-            slot: Mutex::new(Slot { seq: 0, job: None }),
-            work_cv: Condvar::new(),
-            done_cv: Condvar::new(),
-        });
-        // The submitter participates, so spawn cores − 1 parked workers.
-        let pool_threads = default_workers(usize::MAX).saturating_sub(1);
-        for i in 0..pool_threads {
-            let shared = Arc::clone(&shared);
-            let _ = std::thread::Builder::new()
-                .name(format!("ogasched-pool-{i}"))
-                .spawn(move || worker_loop(shared));
-        }
-        Pool { shared, submit: Mutex::new(()), pool_threads }
+/// The flat global crew: W − 1 parked workers (the submitter counts as
+/// one), serving every scatter issued outside a shard-group scope.
+fn global_crew() -> &'static Crew {
+    static CREW: OnceLock<Crew> = OnceLock::new();
+    CREW.get_or_init(|| {
+        let crew = Crew::new();
+        crew.ensure_threads(global_workers().saturating_sub(1), "ogasched-pool");
+        crew
     })
 }
 
+/// Where this thread's scatters dispatch (see module docs).
+#[derive(Clone)]
+enum Scope {
+    /// Plain thread: the global crew.
+    Global,
+    /// Crew worker thread: nested scatters run inline.
+    WorkerInline,
+    /// Lane driver inside [`ShardGroup::run`]: the leased crew, capped
+    /// at the group's size.
+    Group(Arc<Crew>, usize),
+}
+
+thread_local! {
+    static SCOPE: RefCell<Scope> = RefCell::new(Scope::Global);
+}
+
+/// True when the calling thread is already inside a scatter (a crew
+/// worker or a shard-group lane): callers that would lease sub-groups
+/// should fan out over the enclosing scope instead — there is no third
+/// level.
+pub fn nested_scope() -> bool {
+    SCOPE.with(|s| !matches!(&*s.borrow(), Scope::Global))
+}
+
+/// Scatters dispatched onto leased group crews since process start —
+/// the observable proving that budgeted nested parallelism actually
+/// executed on group workers instead of silently degrading to inline
+/// (asserted by the shard-parity suite).
+static GROUP_SCATTERS: AtomicUsize = AtomicUsize::new(0);
+
+/// See [`GROUP_SCATTERS`].
+pub fn group_scatter_count() -> usize {
+    GROUP_SCATTERS.load(Ordering::Relaxed)
+}
+
+/// A leased shard group: a private crew granting `size` workers (the
+/// lane driver counts as one, so the crew parks `size − 1` threads) to
+/// every scatter issued inside [`ShardGroup::run`].  Leases recycle
+/// through a process-wide registry — steady-state cost is a mutex pop,
+/// not thread spawns.
+pub struct ShardGroup {
+    crew: Arc<Crew>,
+    size: usize,
+}
+
+fn group_registry() -> &'static Mutex<Vec<Arc<Crew>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Crew>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+impl ShardGroup {
+    /// Lease a group able to run `size`-wide scatters, growing a
+    /// recycled crew's thread set if needed.
+    pub fn lease(size: usize) -> ShardGroup {
+        let crew = group_registry()
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Arc::new(Crew::new()));
+        crew.ensure_threads(size.saturating_sub(1), "ogasched-shard");
+        ShardGroup { crew, size }
+    }
+
+    /// Run `f` with this group as the thread's scatter target; the
+    /// previous scope is restored afterwards (also on unwind).
+    pub fn run<T>(&self, f: impl FnOnce() -> T) -> T {
+        let prev = SCOPE.with(|s| {
+            std::mem::replace(
+                &mut *s.borrow_mut(),
+                Scope::Group(Arc::clone(&self.crew), self.size),
+            )
+        });
+        let _restore = ScopeRestore(Some(prev));
+        f()
+    }
+}
+
+impl Drop for ShardGroup {
+    fn drop(&mut self) {
+        group_registry().lock().unwrap().push(Arc::clone(&self.crew));
+    }
+}
+
+struct ScopeRestore(Option<Scope>);
+
+impl Drop for ScopeRestore {
+    fn drop(&mut self) {
+        if let Some(prev) = self.0.take() {
+            let _ = SCOPE.try_with(|s| *s.borrow_mut() = prev);
+        }
+    }
+}
+
+/// One leased group per concurrent lane, plus a free-stack handing a
+/// group to whichever lane task runs next.  The lane→group assignment
+/// is scheduling-dependent; results are not (disjoint work per lane).
+struct GroupSet {
+    groups: Vec<ShardGroup>,
+    free: Mutex<Vec<usize>>,
+}
+
+impl GroupSet {
+    fn lease(budget: ExecBudget) -> GroupSet {
+        let groups: Vec<ShardGroup> =
+            (0..budget.runs.max(1)).map(|_| ShardGroup::lease(budget.shards)).collect();
+        let free = Mutex::new((0..groups.len()).collect());
+        GroupSet { groups, free }
+    }
+
+    fn run<T>(&self, f: impl FnOnce() -> T) -> T {
+        // Never fails: the enclosing scatter admits at most `runs`
+        // concurrent lane tasks and we leased exactly `runs` groups.
+        let gi = self
+            .free
+            .lock()
+            .unwrap()
+            .pop()
+            .expect("GroupSet: more concurrent lanes than leased groups");
+        // Return the group on unwind too (a panicking lane task — e.g.
+        // a strict-mode leader assert — must not starve later lanes
+        // into the misleading expect above).
+        struct Return<'a>(&'a GroupSet, usize);
+        impl Drop for Return<'_> {
+            fn drop(&mut self) {
+                self.0.free.lock().unwrap().push(self.1);
+            }
+        }
+        let ret = Return(self, gi);
+        self.groups[ret.1].run(f)
+    }
+}
+
 /// Run `f(i)` for every `i in 0..n`, in parallel over up to `workers`
-/// threads of the persistent pool (the submitting thread counts as one).
+/// threads of the scope's crew (the submitting thread counts as one).
 /// `f` must be `Sync` (interior mutability / disjoint writes are the
-/// caller's responsibility — see `for_each_mut_chunks` for slice output).
+/// caller's responsibility — see `for_each_mut_chunks` for slice
+/// output).  Dispatch follows the thread's scope: global crew, leased
+/// shard group (capped at the group size), or inline on crew workers.
 pub fn parallel_for<F>(n: usize, workers: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -173,46 +495,30 @@ where
         return;
     }
     let workers = workers.min(n).max(1);
-    let pool = pool();
-    if workers == 1 || pool.pool_threads == 0 {
-        for i in 0..n {
-            f(i);
+    let scope = SCOPE.with(|s| s.borrow().clone());
+    match scope {
+        Scope::WorkerInline => {
+            for i in 0..n {
+                f(i);
+            }
         }
-        return;
-    }
-    // Second concurrent submitter (or a nested call from inside a job)
-    // runs inline rather than waiting for the pool.
-    let Ok(_submit) = pool.submit.try_lock() else {
-        for i in 0..n {
-            f(i);
+        Scope::Group(crew, size) => {
+            if crew.scatter(n, workers.min(size), &f) {
+                GROUP_SCATTERS.fetch_add(1, Ordering::Relaxed);
+            } else {
+                for i in 0..n {
+                    f(i);
+                }
+            }
         }
-        return;
-    };
-    let f_ref: &(dyn Fn(usize) + Sync) = &f;
-    let job = Arc::new(Job {
-        f: f_ref as *const (dyn Fn(usize) + Sync),
-        next: AtomicUsize::new(0),
-        completed: AtomicUsize::new(0),
-        entrants: AtomicUsize::new(0),
-        n,
-        chunk: n.div_ceil(workers * 4).max(1),
-        // total entrants: the submitting thread plus pool threads
-        max_entrants: workers,
-    });
-    {
-        let mut slot = pool.shared.slot.lock().unwrap();
-        slot.seq += 1;
-        slot.job = Some(Arc::clone(&job));
-        pool.shared.work_cv.notify_all();
+        Scope::Global => {
+            if !global_crew().scatter(n, workers, &f) {
+                for i in 0..n {
+                    f(i);
+                }
+            }
+        }
     }
-    // The submitter works too — on small jobs it often finishes the
-    // whole index space before a worker even wakes.
-    run_job(&pool.shared, &job);
-    let mut slot = pool.shared.slot.lock().unwrap();
-    while job.completed.load(Ordering::Acquire) < job.n {
-        slot = pool.shared.done_cv.wait(slot).unwrap();
-    }
-    slot.job = None;
 }
 
 /// Parallel map over `0..n` producing a Vec<T> in index order.
@@ -261,13 +567,57 @@ where
     out
 }
 
+/// Budgeted two-level map over `0..n`: up to `budget.runs` concurrent
+/// lanes, each running `f` inside a private `budget.shards`-wide
+/// [`ShardGroup`] so the *nested* scatters `f` issues fan out instead
+/// of degrading to inline execution.  Falls back to a flat
+/// [`parallel_map`] when the resolved budget grants one worker per lane
+/// or the caller is itself already inside a scatter scope.
+pub fn scatter_map<T, F>(n: usize, budget: ExecBudget, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let b = budget.resolve(n);
+    if b.shards <= 1 || nested_scope() {
+        return parallel_map(n, b.runs, f);
+    }
+    let lanes = GroupSet::lease(b);
+    parallel_map(n, b.runs, |i| lanes.run(|| f(i)))
+}
+
+/// Budgeted two-level variant of [`parallel_map_mut`] — the
+/// `run_lineup` primitive: each item's task owns a private shard group
+/// per the budget split.  See [`scatter_map`] for the fallbacks.
+pub fn scatter_runs<T, U, F>(items: &mut [T], budget: ExecBudget, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send + Default + Clone,
+    F: Fn(usize, &mut T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let b = budget.resolve(n);
+    if b.shards <= 1 || nested_scope() {
+        return parallel_map_mut(items, b.runs, f);
+    }
+    let lanes = GroupSet::lease(b);
+    parallel_map_mut(items, b.runs, |i, item| lanes.run(|| f(i, item)))
+}
+
 /// Scatter-gather over per-shard worker states: run `f(s, &mut
-/// shards[s])` for every shard concurrently on the persistent pool and
-/// return once all have finished.  This is the single-slot fan-out
-/// primitive of `coordinator::sharded`: the caller owns one long-lived
-/// state per shard (ledger + scratch), so the steady-state dispatch
-/// allocates nothing beyond the pool's one refcounted job header —
-/// results land in the shard states, not in a fresh output Vec.
+/// shards[s])` for every shard concurrently and return once all have
+/// finished.  This is the single-slot fan-out primitive of
+/// `coordinator::sharded`: the caller owns one long-lived state per
+/// shard (ledger + scratch), so the steady-state dispatch allocates
+/// nothing beyond the crew's one refcounted job header — results land
+/// in the shard states, not in a fresh output Vec.  Inside a budgeted
+/// lineup lane this dispatches to the lane's private shard group.
 pub fn parallel_shards<T, F>(shards: &mut [T], f: F)
 where
     T: Send,
@@ -367,7 +717,7 @@ mod tests {
 
     #[test]
     fn repeated_jobs_reuse_the_pool() {
-        // the pool must stay consistent across many submissions
+        // the crew must stay consistent across many submissions
         for round in 0..50 {
             let hits = AtomicUsize::new(0);
             parallel_for(97 + round, 4, |_| {
@@ -379,8 +729,8 @@ mod tests {
 
     #[test]
     fn concurrent_submitters_fall_back_inline() {
-        // two threads submitting at once: one owns the pool, the other
-        // must run inline — both complete all indices
+        // two threads submitting at once: one owns the global crew, the
+        // other must run inline — both complete all indices
         let a = AtomicUsize::new(0);
         let b = AtomicUsize::new(0);
         std::thread::scope(|s| {
@@ -468,5 +818,108 @@ mod tests {
         parallel_for(0, 4, |_| panic!("should not run"));
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn budget_resolution_is_deterministic_and_bounded() {
+        let w = global_workers();
+        // auto split never oversubscribes and is idempotent
+        for n in [1usize, 2, 5, 64] {
+            let b = ExecBudget::auto().resolve(n);
+            assert!(b.runs >= 1 && b.shards >= 1);
+            assert!(b.runs <= n.max(1));
+            if configured_runs().is_none() {
+                assert!(b.runs * b.shards <= w.max(1), "{b:?} oversubscribes W={w}");
+            }
+            assert_eq!(b.resolve(n), b, "resolve must be idempotent");
+        }
+        // explicit fields are honored (clamped to the lane count only)
+        let b = ExecBudget::split(2, 3).resolve(5);
+        assert_eq!(b, ExecBudget::split(2, 3));
+        assert_eq!(ExecBudget::split(8, 2).resolve(3).runs, 3);
+        assert_eq!(ExecBudget::serial().resolve(9), ExecBudget::split(1, 1));
+        // a legacy `workers = N` budget (explicit shards, auto runs)
+        // caps the derived lane count so the split still fits W
+        let b = ExecBudget { runs: 0, shards: 3 }.resolve(5);
+        assert_eq!(b.shards, 3);
+        if configured_runs().is_none() {
+            assert_eq!(b.runs, (w / 3).max(1).min(5));
+        }
+        // legacy workers-int bridge
+        assert_eq!(ExecBudget::from(4usize), ExecBudget::shards_only(4));
+        assert_eq!(ExecBudget::shards_only(4).run_shards(), 4);
+        assert_eq!(ExecBudget::auto().run_shards(), w);
+    }
+
+    #[test]
+    fn scatter_runs_composes_lanes_and_groups() {
+        // 4 items under an explicit 2×2 split: every item's nested
+        // scatter must execute on its lane's private group (counted by
+        // GROUP_SCATTERS), never silently inline, and all indices of
+        // both levels must run exactly once.
+        let before = group_scatter_count();
+        let mut items = vec![0usize; 4];
+        let inner_hits = AtomicUsize::new(0);
+        let out = scatter_runs(&mut items, ExecBudget::split(2, 2), |i, item| {
+            *item = i + 1;
+            parallel_for(100, 2, |_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+            i * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        assert_eq!(items, vec![1, 2, 3, 4]);
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 400);
+        assert!(
+            group_scatter_count() >= before + 4,
+            "nested scatters must dispatch to the leased groups, not inline"
+        );
+    }
+
+    #[test]
+    fn scatter_map_matches_serial_and_recycles_groups() {
+        for round in 0..3 {
+            let out = scatter_map(9, ExecBudget::split(3, 2), |i| {
+                let part: Vec<usize> = parallel_map(8, 2, |j| i * 8 + j);
+                part.iter().sum::<usize>()
+            });
+            let want: Vec<usize> =
+                (0..9).map(|i| (0..8).map(|j| i * 8 + j).sum()).collect();
+            assert_eq!(out, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn third_level_scatters_run_inline_but_complete() {
+        // a scatter issued from inside a group worker's task has no
+        // third budget level: it must run inline and still cover all
+        // indices
+        let hits = AtomicUsize::new(0);
+        let mut items = vec![(); 2];
+        scatter_runs(&mut items, ExecBudget::split(2, 2), |_, _| {
+            parallel_for(4, 2, |_| {
+                // third level: inline by scope
+                parallel_for(25, 4, |_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2 * 4 * 25);
+    }
+
+    #[test]
+    fn explicit_budget_engages_groups_even_on_small_machines() {
+        // explicit splits are honored regardless of PALLAS_WORKERS /
+        // core count — the lease spawns the group threads it needs
+        let before = group_scatter_count();
+        let hits = AtomicUsize::new(0);
+        let mut items = vec![(); 1];
+        scatter_runs(&mut items, ExecBudget::split(1, 3), |_, _| {
+            parallel_for(30, 3, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 30);
+        assert!(group_scatter_count() > before);
     }
 }

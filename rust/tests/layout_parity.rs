@@ -10,6 +10,7 @@
 //! step, and the slot reward are each pinned to the dense oracle.
 
 use ogasched::graph::Bipartite;
+use ogasched::ExecBudget;
 use ogasched::model::{KindIndex, Problem};
 use ogasched::oga::dense_ref::{
     self, dense_idx, dense_len, fused_ascent_dense, gradient_dense, project_dense_serial,
@@ -179,7 +180,7 @@ fn fused_ascent_matches_dense_reference() {
         let y0 = random_decision(rng, &p, 0.0, 2.0);
         let mut y_dense = dense_ref::to_dense(&p, &y0);
         fused_ascent_dense(&p, &x, eta, &mut y_dense);
-        let mut state = OgaState::new(&p, LearningRate::Constant(eta), 0);
+        let mut state = OgaState::new(&p, LearningRate::Constant(eta), ExecBudget::auto());
         state.y.copy_from_slice(&y0);
         state.fused_ascent(&p, &x, eta);
         compare_layouts(&p, &state.y, &y_dense, Some(0.0), 1e-12, "fused ascent")
@@ -253,7 +254,7 @@ fn full_step_trajectory_matches_dense_reference() {
     check("parity-step-trajectory", 40, |rng, size| {
         let p = random_problem(rng, size);
         let eta = rng.uniform(0.05, 2.0);
-        let mut csr = OgaState::new(&p, LearningRate::Constant(eta), 0);
+        let mut csr = OgaState::new(&p, LearningRate::Constant(eta), ExecBudget::auto());
         let mut dense = DenseOgaState::new(&p, 1);
         for t in 0..6 {
             let x = random_arrivals(rng, &p);
@@ -311,7 +312,7 @@ fn zero_degree_port_contributes_nothing() {
     );
     assert_eq!(p.decision_len(), 2 * 2);
     let x = vec![1.0, 1.0, 1.0];
-    let mut state = OgaState::new(&p, LearningRate::Constant(0.5), 0);
+    let mut state = OgaState::new(&p, LearningRate::Constant(0.5), ExecBudget::auto());
     for _ in 0..3 {
         state.step(&p, &x);
         p.check_feasible(&state.y, 1e-9).unwrap();

@@ -11,6 +11,7 @@
 //! records of the same run forced through the full-sweep commit.
 
 use ogasched::coordinator::{ClusterState, Leader};
+use ogasched::ExecBudget;
 use ogasched::graph::Bipartite;
 use ogasched::model::Problem;
 use ogasched::oga::utilities::UtilityKind;
@@ -200,16 +201,16 @@ fn leader_runs_identical_with_and_without_touched_reporting() {
     let horizon = 60;
     let runs: Vec<(Box<dyn Policy>, Box<dyn Policy>)> = vec![
         (
-            Box::new(OgaSched::new(&p, 2.0, 0.999, 0)),
-            Box::new(FullSweep(OgaSched::new(&p, 2.0, 0.999, 0))),
+            Box::new(OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto())),
+            Box::new(FullSweep(OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto()))),
         ),
         (
-            Box::new(OgaSched::reservation(&p, 2.0, 0.999, 0)),
-            Box::new(FullSweep(OgaSched::reservation(&p, 2.0, 0.999, 0))),
+            Box::new(OgaSched::reservation(&p, 2.0, 0.999, ExecBudget::auto())),
+            Box::new(FullSweep(OgaSched::reservation(&p, 2.0, 0.999, ExecBudget::auto()))),
         ),
         (
-            Box::new(OgaMirror::new(&p, 2.0, 0.999, 0)),
-            Box::new(FullSweep(OgaMirror::new(&p, 2.0, 0.999, 0))),
+            Box::new(OgaMirror::new(&p, 2.0, 0.999, ExecBudget::auto())),
+            Box::new(FullSweep(OgaMirror::new(&p, 2.0, 0.999, ExecBudget::auto()))),
         ),
         (Box::new(Drf::new()), Box::new(FullSweep(Drf::new()))),
         (Box::new(Fairness::new()), Box::new(FullSweep(Fairness::new()))),

@@ -3,6 +3,7 @@
 //! with random problems rather than fixed fixtures.
 
 use ogasched::config::{GraphSpec, Scenario};
+use ogasched::ExecBudget;
 use ogasched::model::KindIndex;
 use ogasched::oga::gradient::{gradient, GradScratch};
 use ogasched::oga::projection::project;
@@ -41,7 +42,7 @@ fn every_policy_feasible_on_random_problems() {
         let s = random_scenario(rng, size);
         let p = synthesize(&s);
         let mut y = vec![0.0; p.decision_len()];
-        for mut policy in paper_lineup(&p, 5.0, 0.999, 1) {
+        for mut policy in paper_lineup(&p, 5.0, 0.999, ExecBudget::serial()) {
             for _ in 0..5 {
                 let x: Vec<f64> = (0..p.num_ports())
                     .map(|_| if rng.bernoulli(s.arrival_prob) { 1.0 } else { 0.0 })
@@ -138,7 +139,7 @@ fn oga_trajectory_stays_feasible_under_any_learning_rate() {
             },
             _ => LearningRate::Oracle { horizon: rng.range(10, 500) },
         };
-        let mut state = OgaState::new(&p, lr, 1);
+        let mut state = OgaState::new(&p, lr, ExecBudget::serial());
         for _ in 0..8 {
             let x: Vec<f64> = (0..p.num_ports())
                 .map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 })
@@ -159,7 +160,7 @@ fn reward_decomposition_consistent() {
         let x: Vec<f64> = (0..p.num_ports())
             .map(|_| if rng.bernoulli(0.8) { 1.0 } else { 0.0 })
             .collect();
-        let mut policy = paper_lineup(&p, 5.0, 0.999, 1)
+        let mut policy = paper_lineup(&p, 5.0, 0.999, ExecBudget::serial())
             .into_iter()
             .nth(rng.below(5))
             .unwrap();

@@ -9,6 +9,7 @@
 //! `make artifacts` builds them.
 
 use ogasched::config::Scenario;
+use ogasched::ExecBudget;
 use ogasched::coordinator::Leader;
 use ogasched::oga::{LearningRate, OgaState};
 use ogasched::runtime::{default_dir, HloOgaSched, Manifest, OgaStepExecutor};
@@ -42,7 +43,7 @@ fn hlo_step_matches_native_over_trajectory() {
     let s = small_scenario();
     let p = synthesize(&s);
     let mut exec = OgaStepExecutor::new(&manifest, &p).expect("load artifact");
-    let mut native = OgaState::new(&p, LearningRate::Constant(0.0), 1);
+    let mut native = OgaState::new(&p, LearningRate::Constant(0.0), ExecBudget::serial());
 
     let mut arr = Bernoulli::uniform(p.num_ports(), 0.7, 42);
     let mut x = vec![0.0; p.num_ports()];

@@ -15,6 +15,7 @@
 //! serially in the serial code's order.
 
 use ogasched::coordinator::{Leader, ShardPlan, ShardedLeader};
+use ogasched::ExecBudget;
 use ogasched::graph::Bipartite;
 use ogasched::model::Problem;
 use ogasched::oga::utilities::UtilityKind;
@@ -54,11 +55,11 @@ fn random_problem(rng: &mut Rng, size: Size) -> Problem {
 
 /// Fresh policy #i — the paper lineup plus both OGA scoring modes, the
 /// mirror variant, and the random floor.
-fn make_policy(p: &Problem, i: usize, seed: u64) -> (&'static str, Box<dyn Policy>) {
+fn make_policy(p: &Problem, i: usize, seed: u64) -> (&'static str, Box<dyn Policy + Send>) {
     match i {
-        0 => ("oga-reactive", Box::new(OgaSched::new(p, 2.0, 0.999, 0))),
-        1 => ("oga-reservation", Box::new(OgaSched::reservation(p, 2.0, 0.999, 0))),
-        2 => ("oga-mirror", Box::new(OgaMirror::new(p, 2.0, 0.999, 0))),
+        0 => ("oga-reactive", Box::new(OgaSched::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        1 => ("oga-reservation", Box::new(OgaSched::reservation(p, 2.0, 0.999, ExecBudget::auto()))),
+        2 => ("oga-mirror", Box::new(OgaMirror::new(p, 2.0, 0.999, ExecBudget::auto()))),
         3 => ("drf", Box::new(Drf::new())),
         4 => ("fairness", Box::new(Fairness::new())),
         5 => ("binpacking", Box::new(BinPacking::new())),
@@ -169,14 +170,14 @@ fn sharded_decisions_match_serial_bitwise() {
     let p = random_problem(&mut rng, Size { scale: 1.0 });
     let horizon = 40;
     let serial_y = {
-        let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+        let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
         let mut leader = Leader::new(&p);
         let mut arr = Bernoulli::uniform(p.num_ports(), 0.3, 17);
         leader.run(&mut pol, &mut arr, horizon);
         pol.current_decision().to_vec()
     };
     for &shards in &SHARD_COUNTS {
-        let mut pol = OgaSched::new(&p, 2.0, 0.999, 0);
+        let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
         let mut leader = ShardedLeader::new(&p, shards);
         let mut arr = Bernoulli::uniform(p.num_ports(), 0.3, 17);
         leader.run(&mut pol, &mut arr, horizon);
@@ -212,4 +213,202 @@ fn shard_plan_balances_random_problems() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// §Perf-4: hierarchical execution budgets.  A lineup of sharded leaders
+// under any `runs × shards` split must reproduce the serial lineup
+// exactly, the budget-granted nested scatters must actually execute on
+// group workers (never silently degrade to inline), and the sharded
+// Eq. 50 oracle path (offline `solve_oracle` + the oracle-rate
+// `OgaState::step` inside a sharded leader) must match its serial
+// counterpart bitwise.
+
+const BUDGET_SPLITS: [(usize, usize); 3] = [(1, 4), (2, 2), (4, 1)];
+
+fn fresh_lineup(p: &Problem, seed: u64) -> Vec<Box<dyn Policy + Send>> {
+    (0..N_POLICIES).map(|i| make_policy(p, i, seed).1).collect()
+}
+
+#[test]
+fn budgeted_lineup_matches_serial_run_lineup() {
+    use ogasched::config::Scenario;
+    use ogasched::coordinator::run_lineup;
+    use ogasched::traces::synthesize;
+    use ogasched::utils::pool;
+
+    // fixed small cluster (|R| = 16) so every split's shard plan has
+    // real multi-instance shards and the scatter assertion below is
+    // meaningful
+    let p = synthesize(&Scenario::small());
+    let horizon = 25;
+    for &rho in &[0.1, 0.8] {
+        let arrival_seed = 4242u64;
+        let make_arrivals =
+            || -> Box<dyn ogasched::sim::arrivals::ArrivalModel> {
+                Box::new(Bernoulli::uniform(p.num_ports(), rho, arrival_seed))
+            };
+
+        let mut serial_lineup = fresh_lineup(&p, 7);
+        let serial =
+            run_lineup(&p, &mut serial_lineup, make_arrivals, horizon, ExecBudget::serial());
+
+        for (runs, shards) in BUDGET_SPLITS {
+            let scatters_before = pool::group_scatter_count();
+            let mut lineup = fresh_lineup(&p, 7);
+            let results = run_lineup(
+                &p,
+                &mut lineup,
+                make_arrivals,
+                horizon,
+                ExecBudget::split(runs, shards),
+            );
+            assert_eq!(results.len(), serial.len());
+            for (run, want) in results.iter().zip(&serial) {
+                let ctx = format!("{} rho={rho} split {runs}x{shards}", run.policy);
+                assert_eq!(run.policy, want.policy, "{ctx}");
+                assert_eq!(run.cumulative_reward, want.cumulative_reward, "{ctx}");
+                assert_eq!(run.clamped_total, want.clamped_total, "{ctx}");
+                for (a, b) in run.records.iter().zip(&want.records) {
+                    assert!(
+                        a.q == b.q
+                            && a.gain == b.gain
+                            && a.penalty == b.penalty
+                            && a.arrivals == b.arrivals,
+                        "{ctx} t={}: record diverged",
+                        a.t
+                    );
+                }
+            }
+            if shards > 1 {
+                // the budget granted nested workers: the within-run shard
+                // scatters must have dispatched onto the leased groups, not
+                // silently degraded to inline execution
+                assert!(
+                    pool::group_scatter_count() > scatters_before,
+                    "rho={rho} split {runs}x{shards}: no nested scatter reached a shard group"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn budgeted_lineup_ledgers_and_decisions_match_serial() {
+    use ogasched::utils::pool;
+    use std::sync::Arc;
+
+    use ogasched::config::Scenario;
+    use ogasched::traces::synthesize;
+    let p = synthesize(&Scenario::small());
+    let horizon = 30;
+    let n_runs = 4usize;
+    let k_n = p.num_resources;
+
+    // serial reference: fresh OGASCHED per lane through the plain leader
+    let serial: Vec<(Vec<f64>, Vec<f64>)> = (0..n_runs)
+        .map(|i| {
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
+            let mut leader = Leader::new(&p);
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, 99 + i as u64);
+            leader.run(&mut pol, &mut arr, horizon);
+            let remaining: Vec<f64> = (0..p.num_instances())
+                .flat_map(|r| (0..k_n).map(move |k| (r, k)))
+                .map(|(r, k)| leader.state().remaining_at(r, k))
+                .collect();
+            (remaining, pol.current_decision().to_vec())
+        })
+        .collect();
+
+    for (runs, shards) in BUDGET_SPLITS {
+        let plan = Arc::new(ShardPlan::build(&p, shards));
+        let mut policies: Vec<OgaSched> = (0..n_runs)
+            .map(|_| OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto()))
+            .collect();
+        let budget = ExecBudget::split(runs, shards);
+        let outs: Vec<Vec<f64>> = pool::scatter_runs(&mut policies, budget, |i, pol| {
+            let mut leader = ShardedLeader::with_plan(&p, Arc::clone(&plan));
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, 99 + i as u64);
+            leader.run(pol, &mut arr, horizon);
+            (0..p.num_instances())
+                .flat_map(|r| (0..k_n).map(move |k| (r, k)))
+                .map(|(r, k)| leader.state().remaining_at(r, k))
+                .collect()
+        });
+        for i in 0..n_runs {
+            let ctx = format!("lane {i} split {runs}x{shards}");
+            assert_eq!(outs[i], serial[i].0, "{ctx}: ledgers diverged");
+            assert_eq!(
+                policies[i].current_decision(),
+                &serial[i].1[..],
+                "{ctx}: decision tensors diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_solve_oracle_matches_serial_bitwise() {
+    use ogasched::regret::{arrival_counts, solve_oracle};
+    use ogasched::sim::arrivals::record_trajectory;
+
+    use ogasched::config::Scenario;
+    use ogasched::traces::synthesize;
+    let p = synthesize(&Scenario::small());
+    let horizon = 40;
+    let mut src = Bernoulli::uniform(p.num_ports(), 0.6, 31);
+    let traj = record_trajectory(&mut src, p.num_ports(), horizon);
+    let counts = arrival_counts(&traj, p.num_ports());
+
+    let serial = solve_oracle(&p, &counts, horizon, 60, ExecBudget::serial());
+    for shards in SHARD_COUNTS {
+        let sharded =
+            solve_oracle(&p, &counts, horizon, 60, ExecBudget::shards_only(shards));
+        assert_eq!(
+            sharded.cumulative_reward, serial.cumulative_reward,
+            "shards={shards}: objective diverged"
+        );
+        assert_eq!(sharded.y_star, serial.y_star, "shards={shards}: y* diverged");
+    }
+}
+
+#[test]
+fn oracle_rate_sharded_leader_matches_serial() {
+    // the online half of the Eq. 50 path: OGASCHED with the oracle
+    // learning rate driven by a ShardedLeader — its two-pass
+    // gradient/‖∇q‖/ascent runs per shard with the norm replayed
+    // serially, so records and decisions stay bit-identical
+    use ogasched::config::Scenario;
+    use ogasched::traces::synthesize;
+    let p = synthesize(&Scenario::small());
+    let horizon = 30;
+    let serial = {
+        let mut pol = OgaSched::with_oracle_rate(&p, horizon, ExecBudget::auto());
+        let mut leader = Leader::new(&p);
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, 61);
+        let run = leader.run(&mut pol, &mut arr, horizon);
+        (run, pol.current_decision().to_vec())
+    };
+    for shards in SHARD_COUNTS {
+        let mut pol = OgaSched::with_oracle_rate(&p, horizon, ExecBudget::auto());
+        let mut leader = ShardedLeader::new(&p, shards);
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, 61);
+        let run = leader.run(&mut pol, &mut arr, horizon);
+        assert_eq!(
+            run.cumulative_reward, serial.0.cumulative_reward,
+            "shards={shards}"
+        );
+        for (a, b) in run.records.iter().zip(&serial.0.records) {
+            assert!(
+                a.q == b.q && a.gain == b.gain && a.penalty == b.penalty,
+                "shards={shards} t={}: record diverged",
+                a.t
+            );
+        }
+        assert_eq!(
+            pol.current_decision(),
+            &serial.1[..],
+            "shards={shards}: oracle-rate decision tensors diverged"
+        );
+    }
 }

@@ -3,6 +3,7 @@
 //! monotonicity trends the paper's evaluation leans on.
 
 use ogasched::config::{GraphSpec, Scenario};
+use ogasched::ExecBudget;
 use ogasched::coordinator::Leader;
 use ogasched::metrics;
 use ogasched::schedulers::{Fairness, OgaSched, Policy};
@@ -88,7 +89,7 @@ fn csv_trace_cluster_runs_end_to_end() {
     s.horizon = 100;
     let p = problem_from_csv(&s, MACHINES_SAMPLE, JOBS_SAMPLE).expect("sample parses");
     let mut leader = Leader::new(&p);
-    let mut pol = OgaSched::new(&p, s.eta0, s.decay, 0);
+    let mut pol = OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
     let mut arr = Bernoulli::uniform(p.num_ports(), s.arrival_prob, 3);
     let run = leader.run(&mut pol, &mut arr, s.horizon);
     assert!(run.cumulative_reward > 0.0);

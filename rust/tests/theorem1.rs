@@ -4,6 +4,7 @@
 //! sublinearly.  This is the theory contribution's empirical check.
 
 use ogasched::config::Scenario;
+use ogasched::ExecBudget;
 use ogasched::coordinator::Leader;
 use ogasched::regret::{arrival_counts, regret, solve_oracle, theorem1_bound};
 use ogasched::schedulers::OgaSched;
@@ -22,9 +23,9 @@ fn measure_regret(scenario: &Scenario, adversarial: bool) -> (f64, f64) {
         record_trajectory(&mut src, p.num_ports(), scenario.horizon)
     };
     let counts = arrival_counts(&traj, p.num_ports());
-    let oracle = solve_oracle(&p, &counts, scenario.horizon, 300, 0);
+    let oracle = solve_oracle(&p, &counts, scenario.horizon, 300, ExecBudget::serial());
     let mut leader = Leader::new(&p);
-    let mut pol = OgaSched::with_oracle_rate(&p, scenario.horizon, 0);
+    let mut pol = OgaSched::with_oracle_rate(&p, scenario.horizon, ExecBudget::auto());
     let mut replay = Replay::new(traj);
     let run = leader.run(&mut pol, &mut replay, scenario.horizon);
     (regret(&oracle, run.cumulative_reward), theorem1_bound(&p, scenario.horizon))

@@ -893,6 +893,180 @@ def sharded_section(rows):
                   f"   (serial {serial*1e3:.3f} ms, parallel {parallel*1e3:.3f} ms)")
 
 
+def oracle_solve_stage_times(p, warm, iters, horizon=200, rho=0.7):
+    """Stage split of one `regret::solve_oracle` iteration (the Eq. 50
+    offline benchmark, §Perf-4).  Mirrors the Rust loop stage for
+    stage; the split matches what the sharded solve fans out:
+
+      phase_a_serial    per-port quota/k* reductions (caller thread)
+      grad_parallel     per-edge gradient fill + k*-lane penalty
+      norm_serial       ||grad|| over the active slices (serial replay)
+      ascent_parallel   y += eta * grad on active slices
+      project_parallel  active-instance projection
+      objective_serial  weighted slot reward (serial replay)
+    """
+    L, K = p["L"], p["K"]
+    rng = random.Random(31)
+    counts = [0.0] * L
+    for _ in range(horizon):
+        for l in range(L):
+            if rng.random() < rho:
+                counts[l] += 1.0
+    active_ports = [l for l in range(L) if counts[l] != 0.0]
+    active_instances = sorted({r for l in active_ports
+                               for r in p["ports_to_instances"][l]})
+    E = p["E"]
+    y = [0.0] * (E * K)
+    grad = [0.0] * (E * K)
+    af = p["alpha_flat"]
+    times = {k: 0.0 for k in ("phase_a_serial", "grad_parallel", "norm_serial",
+                              "ascent_parallel", "project_parallel",
+                              "objective_serial")}
+    iters_done = 0
+
+    def iteration(record, eta):
+        nonlocal iters_done
+        t0 = time.perf_counter()
+        steps = []
+        for l in active_ports:
+            lo, hi = p["port_ptr"][l], p["port_ptr"][l + 1]
+            quota = [0.0] * K
+            for e in range(lo, hi):
+                base = e * K
+                for k in range(K):
+                    quota[k] += y[base + k]
+            kstar = max(range(K), key=lambda k: p["beta"][k] * quota[k])
+            steps.append((l, counts[l], kstar))
+        t1 = time.perf_counter()
+        for (l, xl, kstar) in steps:
+            lo, hi = p["port_ptr"][l], p["port_ptr"][l + 1]
+            pen = xl * p["beta"][kstar]
+            for e in range(lo, hi):
+                base = e * K
+                for k in range(K):
+                    c = base + k
+                    kk = p["kind_flat"][c]
+                    yv = y[c] if y[c] > 0.0 else 0.0
+                    if kk == 0:
+                        fp = af[c]
+                    elif kk == 1:
+                        fp = af[c] / (yv + 1.0)
+                    elif kk == 2:
+                        d = yv + af[c]
+                        fp = 1.0 / (d * d)
+                    else:
+                        fp = af[c] / (2.0 * math.sqrt(yv + 1.0))
+                    grad[c] = xl * fp
+                grad[base + kstar] -= pen
+        t2 = time.perf_counter()
+        norm = 0.0
+        for l in active_ports:
+            for c in range(p["port_ptr"][l] * K, p["port_ptr"][l + 1] * K):
+                g = grad[c]
+                norm += g * g
+        t3 = time.perf_counter()
+        step = eta / max(math.sqrt(norm), 1e-12)
+        for l in active_ports:
+            for c in range(p["port_ptr"][l] * K, p["port_ptr"][l + 1] * K):
+                y[c] += step * grad[c]
+        t4 = time.perf_counter()
+        for r in active_instances:
+            project_instance_csr(p, r, y)
+        t5 = time.perf_counter()
+        reward_batched(p, counts, y)
+        t6 = time.perf_counter()
+        if record:
+            times["phase_a_serial"] += t1 - t0
+            times["grad_parallel"] += t2 - t1
+            times["norm_serial"] += t3 - t2
+            times["ascent_parallel"] += t4 - t3
+            times["project_parallel"] += t5 - t4
+            times["objective_serial"] += t6 - t5
+            iters_done += 1
+
+    for _ in range(warm):
+        iteration(False, 1.0)
+    for _ in range(iters):
+        iteration(True, 1.0)
+    return {k: v / iters_done for k, v in times.items()}
+
+
+# Scatters per sharded solve_oracle iteration: gradient fill, ascent,
+# projection.
+ORACLE_DISPATCHES_PER_ITER = 3
+
+
+def perf4_section(rows):
+    """§Perf-4: the two-level execution budget.
+
+    (a) sharded-oracle rows: model one solve_oracle iteration at S
+        shards from the measured stage split —
+        t(S) = serial + parallel/S + (S > 1) * 3 * dispatch —
+        the same Amdahl shape as the §Perf-3 slot model, now applied to
+        the Eq. 50 offline benchmark (phase A / ||grad|| / objective
+        replay serially; gradient fill, ascent, projection fan out).
+
+    (b) budgeted-lineup rows: extend the model to the runs x shards
+        split.  A lineup of N independent runs on a W-worker budget
+        finishes in ceil(N / runs) waves of the per-run sharded slot
+        time, so per slot
+            t_lineup(runs, shards) = ceil(N / runs) * t_slot(shards)
+        with t_slot from the §Perf-3 decay split.  The serial floor is
+        N * t_slot(1).  Balance loss and lane skew are not modeled."""
+    for name, L, R, K, density, warm, iters in [
+        ("default 10x128x6", 10, 128, 6, 3.0, 3, 20),
+        ("large 100x1024x6", 100, 1024, 6, 3.0, 2, 10),
+    ]:
+        p = make_problem(L, R, K, density, seed=2023)
+        st = oracle_solve_stage_times(p, warm, iters)
+        serial = st["phase_a_serial"] + st["norm_serial"] + st["objective_serial"]
+        parallel = (st["grad_parallel"] + st["ascent_parallel"]
+                    + st["project_parallel"])
+        t1 = serial + parallel
+        for shards in (1, 2, 4, 8):
+            t_s = serial + parallel / shards
+            if shards > 1:
+                t_s += ORACLE_DISPATCHES_PER_ITER * DISPATCH_US * 1e-6
+            rows.append(dict(name=name, section="sharded-oracle-model",
+                             shards=shards, modeled_ms=t_s * 1e3,
+                             serial_ms=serial * 1e3, parallel_ms=parallel * 1e3,
+                             speedup=t1 / t_s))
+            print(f"solve_oracle iter shard{shards} {name:<20}"
+                  f" modeled {t_s*1e3:9.3f} ms   speedup {t1/t_s:6.2f}x"
+                  f"   (serial {serial*1e3:.3f} ms, parallel {parallel*1e3:.3f} ms)")
+
+    # (b) lineup under a split of a pinned W=4 budget (the CI matrix
+    # pin), N = 5 paper-lineup policies, decay slot stage split
+    n_runs = 5
+    for name, L, R, K, density, warm, iters in [
+        ("default 10x128x6", 10, 128, 6, 3.0, 3, 20),
+    ]:
+        p = make_problem(L, R, K, density, seed=2023)
+        st = sharded_stage_times(p, warm, iters, rho=0.7)
+        serial = st["ascent_serial"] + st["publish_serial"] + st["merge_serial"]
+        parallel = (st["ascent_parallel"] + st["project_parallel"]
+                    + st["commit_parallel"] + st["reward_parallel"])
+
+        def t_slot(shards):
+            t = serial + parallel / shards
+            if shards > 1:
+                t += DISPATCHES_PER_SLOT * DISPATCH_US * 1e-6
+            return t
+
+        t_serial_lineup = n_runs * t_slot(1)
+        for label, runs, shards in [("serial", 1, 1), ("1x4", 1, 4),
+                                    ("2x2", 2, 2), ("4x1", 4, 1)]:
+            waves = -(-n_runs // runs)  # ceil
+            t_l = waves * t_slot(shards)
+            rows.append(dict(name=name, section="lineup-budget-model",
+                             split=label, runs=runs, shards=shards,
+                             modeled_ms=t_l * 1e3,
+                             speedup=t_serial_lineup / t_l))
+            print(f"lineup {n_runs}pol budget {label:<6} {name:<20}"
+                  f" modeled {t_l*1e3:9.3f} ms/slot-wave"
+                  f"   speedup {t_serial_lineup/t_l:6.2f}x")
+
+
 def traffic_section(rows):
     """Sparse-figure regime check: the same pr2 decay slot at the figure
     harnesses' two traffic levels.  The ρ = 0.1 column is what the new
@@ -923,11 +1097,14 @@ def main():
     pipeline_section(pipeline_rows)
     sharded_rows = []
     sharded_section(sharded_rows)
+    perf4_rows = []
+    perf4_section(perf4_rows)
     traffic_rows = []
     traffic_section(traffic_rows)
     with open("perf_proxy.json", "w") as f:
         json.dump(dict(layout=layout_rows, pipeline=pipeline_rows,
-                       sharded=sharded_rows, traffic=traffic_rows), f, indent=2)
+                       sharded=sharded_rows, perf4=perf4_rows,
+                       traffic=traffic_rows), f, indent=2)
     print("wrote perf_proxy.json")
 
     # refresh the cross-PR perf record with proxy provenance (overwritten
@@ -961,6 +1138,24 @@ def main():
             ns_per_op=round(row["modeled_ms"] * 1e6, 1),
             ns_per_op_min=round(row["modeled_ms"] * 1e6, 1),
             std_ns=0.0))
+    for row in perf4_rows:
+        if row["section"] == "sharded-oracle-model" and "large" in row["name"]:
+            # matches benches/hot_path.rs's solve_oracle section: 5
+            # iterations per timed op
+            entries.append(dict(
+                name=f"solve_oracle 5it oracle shard{row['shards']} {row['name']}",
+                iters=0,
+                ns_per_op=round(row["modeled_ms"] * 5 * 1e6, 1),
+                ns_per_op_min=round(row["modeled_ms"] * 5 * 1e6, 1),
+                std_ns=0.0))
+        elif row["section"] == "lineup-budget-model":
+            # matches the run_lineup bench rows: 50 slots per timed op
+            entries.append(dict(
+                name=f"run_lineup 5pol h50 budget {row['split']} {row['name']}",
+                iters=0,
+                ns_per_op=round(row["modeled_ms"] * 50 * 1e6, 1),
+                ns_per_op_min=round(row["modeled_ms"] * 50 * 1e6, 1),
+                std_ns=0.0))
     doc = dict(
         bench="hot_path",
         note=("python structural proxy (scripts/perf_proxy.py): this container "
@@ -974,7 +1169,11 @@ def main():
               "The shard{1,2,4,8} rows are MODELED (Amdahl over the measured "
               "serial/parallel stage split + 4x5us pool dispatch, EXPERIMENTS.md "
               "SPerf-3), not timed: the proxy is single-threaded Python; the "
-              "real rows come from benches/hot_path.rs's ShardedLeader section."),
+              "real rows come from benches/hot_path.rs's ShardedLeader section. "
+              "The solve_oracle shard{1,2,4,8} and run_lineup budget rows are "
+              "likewise MODELED (SPerf-4 two-level Amdahl: t(S) = serial + "
+              "parallel/S per oracle iteration, ceil(N/runs) waves of the "
+              "sharded slot for the lineup)."),
         entries=entries,
     )
     with open("BENCH_hot_path.json", "w") as f:
