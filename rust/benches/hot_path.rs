@@ -11,6 +11,11 @@
 //! once with the incremental ledger driven by the policy's `Touched`
 //! reporting and once forced through the full-sweep commit — the
 //! before/after pair for the arrival-sparse pipeline.
+//!
+//! §Perf-5 adds the leaf-kernel rows (sequential reference vs the
+//! compiled lane path of `oga::kernels`, f64 and f32) and the sharded
+//! oracle-objective rows; build with `--features simd` (nightly) to
+//! time the `std::simd` twins under the same row names.
 
 use ogasched::benchlib::{time_fn, Reporter};
 use ogasched::config::Scenario;
@@ -217,11 +222,12 @@ fn main() {
         }
     }
 
-    // ---- §Perf-4: sharded Eq. 50 oracle solve, large scenario ----
+    // ---- §Perf-4/§Perf-5: sharded Eq. 50 oracle solve, large scenario ----
     // The offline benchmark of Eq. 50 (`regret::solve_oracle`) at
-    // 1/2/4/8 shards: per iteration the gradient fill, ascent and
-    // projection fan out over the shard plan while the ‖∇q‖ reduction
-    // and the objective replay serially — floats identical to shard1
+    // 1/2/4/8 shards: per iteration the gradient fill (phase-A port
+    // reductions included), ascent, projection AND the objective
+    // evaluation fan out over the shard plan while the ‖∇q‖ reduction
+    // replays serially — floats identical to shard1
     // (tests/shard_parity.rs), time dropping with shards.
     {
         use ogasched::regret::{arrival_counts, solve_oracle};
@@ -240,10 +246,122 @@ fn main() {
                     std::hint::black_box(solve_oracle(
                         &p,
                         &counts,
-                        200,
                         5,
                         ExecBudget::shards_only(shards),
                     ));
+                },
+            ));
+        }
+
+        // §Perf-5: the sharded objective evaluation alone — the stage
+        // that dominated the PR 4 solve's serial fraction (~47% at this
+        // scale).  Dense counts (every port arrived), merge replayed
+        // serially in ascending port order, floats identical across
+        // rows.
+        {
+            use ogasched::reward::{slot_reward_ports_sharded, PortRewardScratch};
+            let mut rng = Rng::new(17);
+            let y: Vec<f64> =
+                (0..p.decision_len()).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let arrived: Vec<usize> =
+                (0..p.num_ports()).filter(|&l| counts[l] != 0.0).collect();
+            let mut scratch = PortRewardScratch::default();
+            for shards in [1usize, 2, 4, 8] {
+                rep.record(time_fn(
+                    &format!("oracle objective shard{shards} large 100x1024x6"),
+                    5,
+                    100,
+                    || {
+                        std::hint::black_box(slot_reward_ports_sharded(
+                            &p,
+                            p.kinds(),
+                            &counts,
+                            &y,
+                            &arrived,
+                            shards,
+                            &mut scratch,
+                        ));
+                    },
+                ));
+            }
+        }
+    }
+
+    // ---- §Perf-5: leaf-kernel rows, scalar-vs-lane ----
+    // `ref` is the kept sequential reference (`oga::kernels::*_ref`);
+    // `lane` is whatever the build compiled — the scalar lane-tree path
+    // on stable, the `std::simd` twin under `--features simd` (both
+    // produce the same floats; only the row's time moves).  `lane-f32`
+    // is the artifact-path f32 calculus at 8 lanes.
+    {
+        use ogasched::oga::kernels;
+        use ogasched::oga::utilities::UtilityKind;
+        const N: usize = 4096;
+        let mut rng = Rng::new(29);
+        let y: Vec<f64> = (0..N).map(|_| rng.uniform(0.0, 3.0)).collect();
+        let alpha: Vec<f64> = (0..N).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let y32: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let alpha32: Vec<f32> = alpha.iter().map(|&v| v as f32).collect();
+        let mut out = vec![0.0f64; N];
+        let mut out32 = vec![0.0f32; N];
+        for kind in UtilityKind::ALL {
+            rep.record(time_fn(
+                &format!("kernel value_sum ref {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    std::hint::black_box(kernels::value_sum_ref(kind, &y, &alpha));
+                },
+            ));
+            rep.record(time_fn(
+                &format!("kernel value_sum lane {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    std::hint::black_box(kind.value_sum(&y, &alpha));
+                },
+            ));
+            rep.record(time_fn(
+                &format!("kernel grad_into ref {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    kernels::grad_into_ref(kind, &y, &alpha, 0.75, &mut out);
+                    std::hint::black_box(&out);
+                },
+            ));
+            rep.record(time_fn(
+                &format!("kernel grad_into lane {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    kind.grad_into(&y, &alpha, 0.75, &mut out);
+                    std::hint::black_box(&out);
+                },
+            ));
+            rep.record(time_fn(
+                &format!("kernel value_sum ref-f32 {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    std::hint::black_box(kernels::value_sum_f32_ref(kind, &y32, &alpha32));
+                },
+            ));
+            rep.record(time_fn(
+                &format!("kernel value_sum lane-f32 {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    std::hint::black_box(kernels::value_sum_f32(kind, &y32, &alpha32));
+                },
+            ));
+            rep.record(time_fn(
+                &format!("kernel grad_into lane-f32 {} n=4096", kind.name()),
+                20,
+                400,
+                || {
+                    kernels::grad_into_f32(kind, &y32, &alpha32, 0.75, &mut out32);
+                    std::hint::black_box(&out32);
                 },
             ));
         }

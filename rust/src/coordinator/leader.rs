@@ -11,6 +11,9 @@
 //! full sweep as fallback and parity oracle), release is lazy, and the
 //! reward runs the kind-batched kernel over the arrived ports — so a
 //! zero/sparse-arrival slot costs O(dirty), not O(|E|·K + R·K).
+//! (§Perf-5: that kernel now streams through the `oga::kernels`
+//! lane-tree layer — the same floats the sharded leader's scattered
+//! reward merges, on either build path of the `simd` feature.)
 //! [`run_lineup`] fans independent policy runs out under an
 //! [`ExecBudget`] split of the worker budget (§Perf-4): up to
 //! `budget.runs` concurrent runs, each owning a private

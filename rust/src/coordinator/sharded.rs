@@ -38,7 +38,7 @@ use crate::coordinator::leader::{RunResult, SlotRecord};
 use crate::coordinator::state::{commit_row_into, ClusterState, CommitReport};
 use crate::model::Problem;
 use crate::oga::projection::project_instances_serial;
-use crate::reward::{port_reward_kinds, SlotReward};
+use crate::reward::{slot_reward_ports_sharded, PortRewardScratch, SlotReward};
 use crate::schedulers::{Policy, Touched};
 use crate::sim::arrivals::ArrivalModel;
 use crate::utils::pool;
@@ -277,11 +277,6 @@ struct ShardWorker {
     clamped: usize,
 }
 
-thread_local! {
-    /// Per-thread [K] quota scratch for the parallel reward stage.
-    static REWARD_QUOTA: std::cell::RefCell<Vec<f64>> = std::cell::RefCell::new(Vec::new());
-}
-
 /// The sharded L3 coordinator: same contract as [`super::Leader`], but a
 /// single slot's decide/commit/reward fan out over the persistent
 /// worker pool according to a [`ShardPlan`].
@@ -297,9 +292,9 @@ pub struct ShardedLeader<'p> {
     delta_of: Vec<f64>,
     /// Arrived ports of the current slot (ascending).
     arrived: Vec<usize>,
-    /// [L] per-port reward components filled by the parallel stage.
-    port_gain: Vec<f64>,
-    port_pen: Vec<f64>,
+    /// Per-arrived-position reward slots of the scattered reward stage
+    /// (`reward::slot_reward_ports_sharded`, §Perf-5).
+    reward_scratch: PortRewardScratch,
     /// Assert that policies never need clamping (on in tests/debug).
     pub strict: bool,
 }
@@ -329,8 +324,7 @@ impl<'p> ShardedLeader<'p> {
             workers,
             delta_of: vec![0.0; problem.num_instances()],
             arrived: Vec::new(),
-            port_gain: vec![0.0; problem.num_ports()],
-            port_pen: vec![0.0; problem.num_ports()],
+            reward_scratch: PortRewardScratch::default(),
             strict: cfg!(debug_assertions),
         }
     }
@@ -520,43 +514,22 @@ impl<'p> ShardedLeader<'p> {
     /// Sharded slot reward: per-port kernels fan out over the pool,
     /// then the components merge serially in ascending port order — the
     /// exact accumulation sequence of `reward::slot_reward_kinds`.
+    /// §Perf-5 factored the machinery into
+    /// `reward::slot_reward_ports_sharded` so the Eq. 50 oracle solve
+    /// shards its per-iteration objective through the same code.
     fn reward(&mut self, x: &[f64], y: &[f64]) -> SlotReward {
         let p = self.problem;
         self.arrived.clear();
         self.arrived.extend((0..p.num_ports()).filter(|&l| x[l] != 0.0));
-        if self.arrived.is_empty() {
-            return SlotReward::default();
-        }
-        {
-            let gains = SyncSlice::new(&mut self.port_gain);
-            let pens = SyncSlice::new(&mut self.port_pen);
-            let arrived = &self.arrived;
-            let kinds = p.kinds();
-            let k_n = p.num_resources;
-            pool::parallel_for(arrived.len(), self.plan.num_shards(), |i| {
-                let l = arrived[i];
-                let (gain, pen) = REWARD_QUOTA.with(|q| {
-                    let quota = &mut *q.borrow_mut();
-                    quota.resize(k_n, 0.0);
-                    port_reward_kinds(p, kinds, l, y, quota)
-                });
-                // SAFETY: each arrived port is handed to exactly one task.
-                unsafe {
-                    gains.write(l, gain);
-                    pens.write(l, pen);
-                }
-            });
-        }
-        let mut out = SlotReward::default();
-        for &l in &self.arrived {
-            let x_l = x[l];
-            let gain = self.port_gain[l];
-            let penalty = self.port_pen[l];
-            out.gain += x_l * gain;
-            out.penalty += x_l * penalty;
-            out.q += x_l * (gain - penalty);
-        }
-        out
+        slot_reward_ports_sharded(
+            p,
+            p.kinds(),
+            x,
+            y,
+            &self.arrived,
+            self.plan.num_shards(),
+            &mut self.reward_scratch,
+        )
     }
 }
 

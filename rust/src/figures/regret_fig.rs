@@ -31,8 +31,7 @@ fn measure(scenario: &Scenario) -> (f64, f64) {
         Bernoulli::uniform(p.num_ports(), scenario.arrival_prob, scenario.seed ^ 0x5EED);
     let traj = record_trajectory(&mut src, p.num_ports(), scenario.horizon);
     let counts = regret::arrival_counts(&traj, p.num_ports());
-    let oracle =
-        regret::solve_oracle(&p, &counts, scenario.horizon, ORACLE_ITERS, scenario.parallel);
+    let oracle = regret::solve_oracle(&p, &counts, ORACLE_ITERS, scenario.parallel);
 
     let mut leader = Leader::new(&p);
     let mut pol = OgaSched::with_oracle_rate(&p, scenario.horizon, scenario.parallel);

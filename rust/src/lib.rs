@@ -25,6 +25,11 @@
 //! }
 //! ```
 
+// §Perf-5: the `simd` feature routes `oga::kernels` through
+// `std::simd` (nightly-only); the stable default build compiles the
+// bit-identical scalar lane-tree path instead.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod benchlib;
 pub mod cli;
 pub mod config;

@@ -92,13 +92,12 @@ fn port_gradient(
 ) {
     let k_n = problem.num_resources;
     let g = &problem.graph;
-    // quota_k = Σ_{r∈R_l} y_{(l,r)}^k
+    // quota_k = Σ_{r∈R_l} y_{(l,r)}^k (element-wise §Perf-5 kernel —
+    // same floats, vectorized K lane under the `simd` feature)
     quota.fill(0.0);
     for e in g.port_edges(l) {
         let base = e * k_n;
-        for k in 0..k_n {
-            quota[k] += y[base + k];
-        }
+        crate::oga::kernels::accumulate(quota, &y[base..base + k_n]);
     }
     // k* = argmax_k β_k · quota_k  (Eq. 27)
     let mut kstar = 0;

@@ -1,0 +1,528 @@
+//! The vectorized kind-batched kernel layer (§Perf-5).
+//!
+//! PR 2 hoisted the utility-family `match` out of the hot loops
+//! (`model::KindIndex` same-kind runs); the leaf kernels
+//! `UtilityKind::{value_sum, grad_into, ascend_slice}` were left as
+//! branch-free scalar loops "designed to auto-vectorize".  This module
+//! makes the lane level explicit:
+//!
+//! * the **default (stable) build** runs scalar loops restructured into
+//!   a fixed-width **lane-tree** accumulation order — reductions keep
+//!   [`LANES`] independent accumulators over full blocks and combine
+//!   them in a fixed binary tree, with the remainder summed sequentially
+//!   and added last;
+//! * the **`simd` feature** (nightly, `std::simd`) runs the same kernels
+//!   on `f64x4`/`f32x8` lanes.  Because the SIMD twin reproduces the
+//!   scalar path's block structure and combine tree exactly, and every
+//!   per-lane operation (`+ - * / sqrt max`) is the identically-rounded
+//!   IEEE op, **both paths produce bit-identical floats** — pinned by
+//!   `tests/kernel_parity.rs` across all four families at slice lengths
+//!   covering the remainder lanes.  (`ln` has no portable-SIMD form; the
+//!   Log family evaluates it per lane through the same `f64::ln`, so
+//!   parity holds there too, at lane-serial cost.)
+//! * the sequential pre-§Perf-5 loops are kept as `*_ref` parity
+//!   references (the role `oga::dense_ref` plays for the layout).
+//!
+//! Element-wise kernels (`grad_into`, `ascend_slice`, [`accumulate`])
+//! have no accumulation order, so their scalar form *is* the reference
+//! and the SIMD twin is bitwise-equal lane math; only the reduction
+//! ([`value_sum`]) changes floats relative to the sequential reference —
+//! by a few ulps, uniformly on both build paths.
+//!
+//! The `_f32` twins mirror the artifact path's numerics
+//! (`runtime::executor` runs the PJRT-compiled step in f32): the same
+//! Eq. 51 calculus evaluated entirely in f32, [`LANES_F32`]-wide.
+//!
+//! Shared per-edge kernels live here too: [`ascend_edge`] (the sharded
+//! fused-ascent body) and [`mirror_edge`] (the sharded multiplicative
+//! update) — both cut an edge's K lane into maximal same-kind sub-runs
+//! and stream the same element-wise kernels, so per-element floats
+//! cannot depend on who computes them.
+
+use crate::model::{KindIndex, Problem};
+use crate::oga::utilities::UtilityKind;
+
+/// f64 lane width of the fixed accumulation tree (`f64x4` under `simd`).
+pub const LANES: usize = 4;
+/// f32 lane width (`f32x8` under `simd`) — the artifact-path numerics.
+pub const LANES_F32: usize = 8;
+
+// ------------------------------------------------------------------
+// Sequential references (the pre-§Perf-5 scalar loops, kept as the
+// parity oracle for tests and the scalar-vs-lane bench rows).
+// ------------------------------------------------------------------
+
+/// Σ_i f(y_i, α_i), sequential left-to-right (reference).
+pub fn value_sum_ref(kind: UtilityKind, y: &[f64], alpha: &[f64]) -> f64 {
+    debug_assert_eq!(y.len(), alpha.len());
+    let mut acc = 0.0;
+    for (v, &a) in y.iter().zip(alpha) {
+        acc += kind.value(*v, a);
+    }
+    acc
+}
+
+/// out_i = scale · f'(y_i, α_i), plain loop (reference).
+pub fn grad_into_ref(kind: UtilityKind, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
+    debug_assert_eq!(y.len(), alpha.len());
+    debug_assert_eq!(y.len(), out.len());
+    for i in 0..y.len() {
+        out[i] = scale * kind.grad(y[i], alpha[i]);
+    }
+}
+
+/// y_i += scale · f'(y_i, α_i), plain loop (reference; f' at pre-update y).
+pub fn ascend_slice_ref(kind: UtilityKind, y: &mut [f64], alpha: &[f64], scale: f64) {
+    debug_assert_eq!(y.len(), alpha.len());
+    for (v, &a) in y.iter_mut().zip(alpha) {
+        *v += scale * kind.grad(*v, a);
+    }
+}
+
+// ------------------------------------------------------------------
+// f32 per-element calculus — Eq. 51 evaluated entirely in f32, the
+// numerics of the PJRT artifact path (runtime::executor).
+// ------------------------------------------------------------------
+
+/// f(y) in f32 (artifact-path numerics; same clamp as the f64 calculus).
+#[inline(always)]
+pub fn value_f32(kind: UtilityKind, y: f32, alpha: f32) -> f32 {
+    let y = y.max(0.0);
+    match kind {
+        UtilityKind::Linear => alpha * y,
+        UtilityKind::Log => alpha * (y + 1.0).ln(),
+        UtilityKind::Reciprocal => 1.0 / alpha - 1.0 / (y + alpha),
+        UtilityKind::Poly => alpha * (y + 1.0).sqrt() - alpha,
+    }
+}
+
+/// f'(y) in f32.
+#[inline(always)]
+pub fn grad_f32(kind: UtilityKind, y: f32, alpha: f32) -> f32 {
+    let y = y.max(0.0);
+    match kind {
+        UtilityKind::Linear => alpha,
+        UtilityKind::Log => alpha / (y + 1.0),
+        UtilityKind::Reciprocal => {
+            let d = y + alpha;
+            1.0 / (d * d)
+        }
+        UtilityKind::Poly => alpha / (2.0 * (y + 1.0).sqrt()),
+    }
+}
+
+/// Sequential f32 reference of [`value_sum_f32`].
+pub fn value_sum_f32_ref(kind: UtilityKind, y: &[f32], alpha: &[f32]) -> f32 {
+    debug_assert_eq!(y.len(), alpha.len());
+    let mut acc = 0.0f32;
+    for (v, &a) in y.iter().zip(alpha) {
+        acc += value_f32(kind, *v, a);
+    }
+    acc
+}
+
+/// Plain-loop f32 reference of [`grad_into_f32`].
+pub fn grad_into_f32_ref(
+    kind: UtilityKind,
+    y: &[f32],
+    alpha: &[f32],
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), alpha.len());
+    debug_assert_eq!(y.len(), out.len());
+    for i in 0..y.len() {
+        out[i] = scale * grad_f32(kind, y[i], alpha[i]);
+    }
+}
+
+// ------------------------------------------------------------------
+// The hot kernels — scalar lane-tree path (default, stable).
+// `#[inline(always)]` + the per-variant dispatch in `utilities.rs`
+// keeps the `kind` match constant-folded out of the loop bodies,
+// exactly like the pre-§Perf-5 `*_with` helpers.
+// ------------------------------------------------------------------
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn value_sum(kind: UtilityKind, y: &[f64], alpha: &[f64]) -> f64 {
+    debug_assert_eq!(y.len(), alpha.len());
+    let n = y.len();
+    let blocks = n - n % LANES;
+    let mut acc = [0.0f64; LANES];
+    let mut i = 0;
+    while i < blocks {
+        for j in 0..LANES {
+            acc[j] += kind.value(y[i + j], alpha[i + j]);
+        }
+        i += LANES;
+    }
+    let mut tail = 0.0;
+    for j in blocks..n {
+        tail += kind.value(y[j], alpha[j]);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn grad_into(kind: UtilityKind, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
+    // element-wise: the reference loop *is* the lane path (no
+    // accumulation order to restructure)
+    grad_into_ref(kind, y, alpha, scale, out);
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn ascend_slice(kind: UtilityKind, y: &mut [f64], alpha: &[f64], scale: f64) {
+    ascend_slice_ref(kind, y, alpha, scale);
+}
+
+/// acc_i += add_i — the quota-accumulation kernel shared by the per-port
+/// reductions (`reward::port_reward_kinds`, `oga::port_kstar`, the
+/// Eq. 30 gradient).  Element-wise across the K lane, sequential across
+/// edges, so the lane width is unobservable in the floats.
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn accumulate(acc: &mut [f64], add: &[f64]) {
+    debug_assert_eq!(acc.len(), add.len());
+    for i in 0..acc.len() {
+        acc[i] += add[i];
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn value_sum_f32(kind: UtilityKind, y: &[f32], alpha: &[f32]) -> f32 {
+    debug_assert_eq!(y.len(), alpha.len());
+    let n = y.len();
+    let blocks = n - n % LANES_F32;
+    let mut acc = [0.0f32; LANES_F32];
+    let mut i = 0;
+    while i < blocks {
+        for j in 0..LANES_F32 {
+            acc[j] += value_f32(kind, y[i + j], alpha[i + j]);
+        }
+        i += LANES_F32;
+    }
+    let mut tail = 0.0f32;
+    for j in blocks..n {
+        tail += value_f32(kind, y[j], alpha[j]);
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn grad_into_f32(kind: UtilityKind, y: &[f32], alpha: &[f32], scale: f32, out: &mut [f32]) {
+    grad_into_f32_ref(kind, y, alpha, scale, out);
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub fn ascend_slice_f32(kind: UtilityKind, y: &mut [f32], alpha: &[f32], scale: f32) {
+    debug_assert_eq!(y.len(), alpha.len());
+    for (v, &a) in y.iter_mut().zip(alpha) {
+        *v += scale * grad_f32(kind, *v, a);
+    }
+}
+
+// ------------------------------------------------------------------
+// The hot kernels — portable-SIMD path (`--features simd`, nightly).
+// Same block structure, same combine tree, identically-rounded lane
+// ops ⇒ bit-identical to the scalar lane-tree path above.
+// ------------------------------------------------------------------
+
+#[cfg(feature = "simd")]
+mod vector {
+    use super::*;
+    use std::simd::prelude::*;
+    use std::simd::StdFloat;
+
+    type F64s = Simd<f64, LANES>;
+    type F32s = Simd<f32, LANES_F32>;
+
+    /// Per-lane `ln` — no portable-SIMD transcendental exists; routing
+    /// through the same `f64::ln` keeps bit parity with the scalar path
+    /// (at lane-serial cost, see the §Perf-5 kernel table).
+    #[inline(always)]
+    fn ln_lanes(v: F64s) -> F64s {
+        F64s::from_array(v.to_array().map(f64::ln))
+    }
+
+    #[inline(always)]
+    fn ln_lanes_f32(v: F32s) -> F32s {
+        F32s::from_array(v.to_array().map(f32::ln))
+    }
+
+    /// f(y) on a lane block — op-for-op the scalar `UtilityKind::value`.
+    #[inline(always)]
+    fn value_lanes(kind: UtilityKind, y: F64s, a: F64s) -> F64s {
+        let y = y.simd_max(F64s::splat(0.0));
+        let one = F64s::splat(1.0);
+        match kind {
+            UtilityKind::Linear => a * y,
+            UtilityKind::Log => a * ln_lanes(y + one),
+            UtilityKind::Reciprocal => one / a - one / (y + a),
+            UtilityKind::Poly => a * (y + one).sqrt() - a,
+        }
+    }
+
+    /// f'(y) on a lane block — op-for-op the scalar `UtilityKind::grad`.
+    #[inline(always)]
+    fn grad_lanes(kind: UtilityKind, y: F64s, a: F64s) -> F64s {
+        let y = y.simd_max(F64s::splat(0.0));
+        let one = F64s::splat(1.0);
+        match kind {
+            UtilityKind::Linear => a,
+            UtilityKind::Log => a / (y + one),
+            UtilityKind::Reciprocal => {
+                let d = y + a;
+                one / (d * d)
+            }
+            UtilityKind::Poly => a / (F64s::splat(2.0) * (y + one).sqrt()),
+        }
+    }
+
+    #[inline(always)]
+    pub fn value_sum(kind: UtilityKind, y: &[f64], alpha: &[f64]) -> f64 {
+        debug_assert_eq!(y.len(), alpha.len());
+        let n = y.len();
+        let blocks = n - n % LANES;
+        let mut acc = F64s::splat(0.0);
+        let mut i = 0;
+        while i < blocks {
+            let yv = F64s::from_slice(&y[i..i + LANES]);
+            let av = F64s::from_slice(&alpha[i..i + LANES]);
+            acc += value_lanes(kind, yv, av);
+            i += LANES;
+        }
+        let a = acc.to_array();
+        let mut tail = 0.0;
+        for j in blocks..n {
+            tail += kind.value(y[j], alpha[j]);
+        }
+        ((a[0] + a[1]) + (a[2] + a[3])) + tail
+    }
+
+    #[inline(always)]
+    pub fn grad_into(kind: UtilityKind, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
+        debug_assert_eq!(y.len(), alpha.len());
+        debug_assert_eq!(y.len(), out.len());
+        let n = y.len();
+        let blocks = n - n % LANES;
+        let s = F64s::splat(scale);
+        let mut i = 0;
+        while i < blocks {
+            let yv = F64s::from_slice(&y[i..i + LANES]);
+            let av = F64s::from_slice(&alpha[i..i + LANES]);
+            (s * grad_lanes(kind, yv, av)).copy_to_slice(&mut out[i..i + LANES]);
+            i += LANES;
+        }
+        for j in blocks..n {
+            out[j] = scale * kind.grad(y[j], alpha[j]);
+        }
+    }
+
+    #[inline(always)]
+    pub fn ascend_slice(kind: UtilityKind, y: &mut [f64], alpha: &[f64], scale: f64) {
+        debug_assert_eq!(y.len(), alpha.len());
+        let n = y.len();
+        let blocks = n - n % LANES;
+        let s = F64s::splat(scale);
+        let mut i = 0;
+        while i < blocks {
+            let yv = F64s::from_slice(&y[i..i + LANES]);
+            let av = F64s::from_slice(&alpha[i..i + LANES]);
+            (yv + s * grad_lanes(kind, yv, av)).copy_to_slice(&mut y[i..i + LANES]);
+            i += LANES;
+        }
+        for j in blocks..n {
+            y[j] += scale * kind.grad(y[j], alpha[j]);
+        }
+    }
+
+    #[inline(always)]
+    pub fn accumulate(acc: &mut [f64], add: &[f64]) {
+        debug_assert_eq!(acc.len(), add.len());
+        let n = acc.len();
+        let blocks = n - n % LANES;
+        let mut i = 0;
+        while i < blocks {
+            let av = F64s::from_slice(&acc[i..i + LANES]);
+            let bv = F64s::from_slice(&add[i..i + LANES]);
+            (av + bv).copy_to_slice(&mut acc[i..i + LANES]);
+            i += LANES;
+        }
+        for j in blocks..n {
+            acc[j] += add[j];
+        }
+    }
+
+    #[inline(always)]
+    fn value_lanes_f32(kind: UtilityKind, y: F32s, a: F32s) -> F32s {
+        let y = y.simd_max(F32s::splat(0.0));
+        let one = F32s::splat(1.0);
+        match kind {
+            UtilityKind::Linear => a * y,
+            UtilityKind::Log => a * ln_lanes_f32(y + one),
+            UtilityKind::Reciprocal => one / a - one / (y + a),
+            UtilityKind::Poly => a * (y + one).sqrt() - a,
+        }
+    }
+
+    #[inline(always)]
+    fn grad_lanes_f32(kind: UtilityKind, y: F32s, a: F32s) -> F32s {
+        let y = y.simd_max(F32s::splat(0.0));
+        let one = F32s::splat(1.0);
+        match kind {
+            UtilityKind::Linear => a,
+            UtilityKind::Log => a / (y + one),
+            UtilityKind::Reciprocal => {
+                let d = y + a;
+                one / (d * d)
+            }
+            UtilityKind::Poly => a / (F32s::splat(2.0) * (y + one).sqrt()),
+        }
+    }
+
+    #[inline(always)]
+    pub fn value_sum_f32(kind: UtilityKind, y: &[f32], alpha: &[f32]) -> f32 {
+        debug_assert_eq!(y.len(), alpha.len());
+        let n = y.len();
+        let blocks = n - n % LANES_F32;
+        let mut acc = F32s::splat(0.0);
+        let mut i = 0;
+        while i < blocks {
+            let yv = F32s::from_slice(&y[i..i + LANES_F32]);
+            let av = F32s::from_slice(&alpha[i..i + LANES_F32]);
+            acc += value_lanes_f32(kind, yv, av);
+            i += LANES_F32;
+        }
+        let a = acc.to_array();
+        let mut tail = 0.0f32;
+        for j in blocks..n {
+            tail += value_f32(kind, y[j], alpha[j]);
+        }
+        (((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))) + tail
+    }
+
+    #[inline(always)]
+    pub fn grad_into_f32(
+        kind: UtilityKind,
+        y: &[f32],
+        alpha: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(y.len(), alpha.len());
+        debug_assert_eq!(y.len(), out.len());
+        let n = y.len();
+        let blocks = n - n % LANES_F32;
+        let s = F32s::splat(scale);
+        let mut i = 0;
+        while i < blocks {
+            let yv = F32s::from_slice(&y[i..i + LANES_F32]);
+            let av = F32s::from_slice(&alpha[i..i + LANES_F32]);
+            (s * grad_lanes_f32(kind, yv, av)).copy_to_slice(&mut out[i..i + LANES_F32]);
+            i += LANES_F32;
+        }
+        for j in blocks..n {
+            out[j] = scale * grad_f32(kind, y[j], alpha[j]);
+        }
+    }
+
+    #[inline(always)]
+    pub fn ascend_slice_f32(kind: UtilityKind, y: &mut [f32], alpha: &[f32], scale: f32) {
+        debug_assert_eq!(y.len(), alpha.len());
+        let n = y.len();
+        let blocks = n - n % LANES_F32;
+        let s = F32s::splat(scale);
+        let mut i = 0;
+        while i < blocks {
+            let yv = F32s::from_slice(&y[i..i + LANES_F32]);
+            let av = F32s::from_slice(&alpha[i..i + LANES_F32]);
+            (yv + s * grad_lanes_f32(kind, yv, av)).copy_to_slice(&mut y[i..i + LANES_F32]);
+            i += LANES_F32;
+        }
+        for j in blocks..n {
+            y[j] += scale * grad_f32(kind, y[j], alpha[j]);
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+pub use vector::{
+    accumulate, ascend_slice, ascend_slice_f32, grad_into, grad_into_f32, value_sum,
+    value_sum_f32,
+};
+
+// ------------------------------------------------------------------
+// Shared per-edge kernels (relocated here so the serial, sharded and
+// mirror steps all stream through one implementation).
+// ------------------------------------------------------------------
+
+/// y[e·K..] += scale · f'(y, α) for one edge, cut into maximal
+/// same-kind sub-runs so the call streams through the *same*
+/// element-wise [`UtilityKind::ascend_slice`] kernel as the serial
+/// port-run ascent — per-element semantics (and floats) are identical;
+/// only the slice boundaries differ, which an element-wise kernel
+/// cannot observe.  (The reduction kernel [`value_sum`] *can* observe
+/// boundaries — it is only ever called on whole port runs.)
+pub(crate) fn ascend_edge(
+    problem: &Problem,
+    kinds: &KindIndex,
+    y: &mut [f64],
+    e: usize,
+    scale: f64,
+) {
+    let k_n = problem.num_resources;
+    let base = e * k_n;
+    let rk = problem.graph.edge_instance[e] * k_n;
+    let mut k = 0;
+    while k < k_n {
+        let kind = problem.kind[rk + k];
+        let start = k;
+        k += 1;
+        while k < k_n && problem.kind[rk + k] == kind {
+            k += 1;
+        }
+        kind.ascend_slice(
+            &mut y[base + start..base + k],
+            &kinds.alpha_flat[base + start..base + k],
+            scale,
+        );
+    }
+}
+
+/// One edge's multiplicative (mirror) update — the shared per-edge
+/// kernel of the serial and sharded mirror steps (identical floats by
+/// construction).  `scale` is η_t · x_l; β_{k*} is folded into the
+/// exponent.  `max_exponent` keeps exp() finite under aggressive rates.
+#[inline]
+pub(crate) fn mirror_edge(
+    problem: &Problem,
+    y: &mut [f64],
+    e: usize,
+    scale: f64,
+    kstar: usize,
+    max_exponent: f64,
+) {
+    let k_n = problem.num_resources;
+    let base = e * k_n;
+    let rk = problem.graph.edge_instance[e] * k_n;
+    for k in 0..k_n {
+        let yv = y[base + k];
+        let fp = problem.kind[rk + k].grad(yv, problem.alpha[rk + k]);
+        let pen = if k == kstar { problem.beta[k] } else { 0.0 };
+        let expo = (scale * (fp - pen)).clamp(-max_exponent, max_exponent);
+        y[base + k] = yv * expo.exp();
+    }
+}
+
+// The lane-tree contract is pinned in ONE place — the integration
+// suite `tests/kernel_parity.rs`, whose in-test scalar oracle is what
+// both build paths (scalar lane-tree and `--features simd`) must
+// reproduce bit for bit.  In-module copies of that oracle would be
+// tautological on the stable build (code compared to its own text), so
+// this module deliberately carries no unit tests.

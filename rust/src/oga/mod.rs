@@ -4,15 +4,17 @@
 
 pub mod dense_ref;
 pub mod gradient;
+pub mod kernels;
 pub mod projection;
 pub mod utilities;
 
 use std::sync::Arc;
 
 use crate::coordinator::sharded::{active_plan, project_dirty_sharded, ArrivedPort, ShardPlan};
-use crate::model::{KindIndex, Problem};
+use crate::model::Problem;
 use crate::utils::pool::{self, ExecBudget, SyncSlice};
 use gradient::{grad_edge, grad_norm_ports, gradient_sparse, GradScratch};
+use kernels::ascend_edge;
 use projection::{project, project_instances};
 
 /// Learning-rate schedule.  The paper's experiments use a multiplicative
@@ -167,7 +169,6 @@ impl OgaState {
                             x,
                             &self.y,
                             &mut self.grad,
-                            &mut self.scratch_quota,
                             &mut self.grad_ports,
                             &mut self.port_steps,
                             &plan,
@@ -401,9 +402,7 @@ pub(crate) fn port_kstar(problem: &Problem, l: usize, y: &[f64], quota: &mut [f6
     quota.fill(0.0);
     for e in problem.graph.port_edges(l) {
         let base = e * k_n;
-        for k in 0..k_n {
-            quota[k] += y[base + k];
-        }
+        kernels::accumulate(quota, &y[base..base + k_n]);
     }
     let mut kstar = 0;
     let mut best = f64::NEG_INFINITY;
@@ -417,55 +416,31 @@ pub(crate) fn port_kstar(problem: &Problem, l: usize, y: &[f64], quota: &mut [f6
     kstar
 }
 
-/// y[e·K..] += scale · f'(y, α) for one edge, cut into maximal
-/// same-kind sub-runs so the call streams through the *same*
-/// `ascend_slice` kernel the serial port-run ascent uses — per-element
-/// semantics (and floats) are identical; only the slice boundaries
-/// differ, which the element-wise kernel cannot observe.
-fn ascend_edge(problem: &Problem, kinds: &KindIndex, y: &mut [f64], e: usize, scale: f64) {
-    let k_n = problem.num_resources;
-    let base = e * k_n;
-    let rk = problem.graph.edge_instance[e] * k_n;
-    let mut k = 0;
-    while k < k_n {
-        let kind = problem.kind[rk + k];
-        let start = k;
-        k += 1;
-        while k < k_n && problem.kind[rk + k] == kind {
-            k += 1;
-        }
-        kind.ascend_slice(
-            &mut y[base + start..base + k],
-            &kinds.alpha_flat[base + start..base + k],
-            scale,
-        );
-    }
-}
-
-/// Sharded sparse gradient fill (§Perf-4) — the two-pass companion of
-/// [`gradient::gradient_sparse`], shared by the plan-bound Eq. 50
-/// oracle-rate step and `regret::solve_oracle`.  Phase A (caller
-/// thread) re-zeroes the slices the *previous* call filled, then runs
-/// the per-port quota/k\* reductions in the serial port order,
-/// recording each arrived port's step and the active-port list.  Phase
-/// B fans the per-edge `grad` writes out over the plan: each shard
-/// fills exactly the coordinates of the edges it owns through the same
-/// element-wise `grad_into` kernel (cut at edge boundaries, which the
-/// kernel cannot observe) and applies the Eq. 27 penalty on the k\*
-/// lane — so the resulting buffer equals the serial
+/// Sharded sparse gradient fill (§Perf-4, phase A sharded in §Perf-5) —
+/// the two-pass companion of [`gradient::gradient_sparse`], shared by
+/// the plan-bound Eq. 50 oracle-rate step and `regret::solve_oracle`.
+/// Phase A re-zeroes the slices the *previous* call filled and collects
+/// the arrived ports in the serial port order (caller thread), then
+/// fans the per-port quota/k\* reductions out over the pool: each
+/// arrived port's reduction is independent, reads only `y`, and is
+/// replayed whole by exactly one worker through the same
+/// [`port_kstar`] kernel — identical floats regardless of which worker
+/// runs it.  Phase B fans the per-edge `grad` writes out over the
+/// plan: each shard fills exactly the coordinates of the edges it owns
+/// through the same element-wise `grad_into` kernel (cut at edge
+/// boundaries, which the kernel cannot observe) and applies the Eq. 27
+/// penalty on the k\* lane — so the resulting buffer equals the serial
 /// `gradient_sparse` output bit for bit.
 pub(crate) fn gradient_sparse_sharded(
     problem: &Problem,
     x: &[f64],
     y: &[f64],
     grad: &mut [f64],
-    quota: &mut Vec<f64>,
     active: &mut Vec<usize>,
     steps: &mut Vec<ArrivedPort>,
     plan: &ShardPlan,
 ) {
     let k_n = problem.num_resources;
-    quota.resize(k_n, 0.0);
     for &l in active.iter() {
         let lo = problem.graph.port_ptr[l] * k_n;
         let hi = problem.graph.port_ptr[l + 1] * k_n;
@@ -478,12 +453,27 @@ pub(crate) fn gradient_sparse_sharded(
         if x_l == 0.0 {
             continue;
         }
-        let kstar = port_kstar(problem, l, y, quota);
-        steps.push(ArrivedPort { l, scale: x_l, kstar, pen: x_l * problem.beta[kstar] });
+        steps.push(ArrivedPort { l, scale: x_l, kstar: 0, pen: 0.0 });
         active.push(l);
     }
     if steps.is_empty() {
         return;
+    }
+    // Phase A fan-out (§Perf-5): fill each recorded step's quota/k*.
+    // Per-position writes are disjoint; the [K] quota scratch is
+    // per-thread (`reward::with_quota`).
+    {
+        let view = SyncSlice::new(steps.as_mut_slice());
+        let n = view.len();
+        pool::parallel_for(n, plan.num_shards(), |i| {
+            // SAFETY: position i is handed to exactly one task.
+            let step = unsafe { &mut view.slice_mut(i, i + 1)[0] };
+            let kstar = crate::reward::with_quota(k_n, |quota| {
+                port_kstar(problem, step.l, y, quota)
+            });
+            step.kstar = kstar;
+            step.pen = step.scale * problem.beta[kstar];
+        });
     }
     let kinds = problem.kinds();
     let steps_ref: &[ArrivedPort] = steps;
@@ -540,6 +530,7 @@ pub(crate) fn ascend_ports_sharded(
 mod tests {
     use super::*;
     use crate::config::Scenario;
+    use crate::model::KindIndex;
     use crate::reward::slot_reward;
     use crate::traces::synthesize;
 

@@ -11,6 +11,8 @@
 //! | reciprocal | 1/α − 1/(y+α)         | 1/(y+α)²         | 1/α²      |
 //! | poly       | α·√(y+1) − α          | α/(2√(y+1))      | α/2       |
 
+use crate::oga::kernels;
+
 /// Utility family discriminant.  The numeric values match the `kind`
 /// codes the Python kernels use (ref.py KIND_*), so the same i32 tensor
 /// drives both implementations.
@@ -94,73 +96,55 @@ impl UtilityKind {
         self.grad(0.0, alpha)
     }
 
-    // --- kind-batched slice kernels (§Perf-2) -------------------------
+    // --- kind-batched slice kernels (§Perf-2, §Perf-5) ----------------
     //
     // The hot loops dispatch on the family once per same-kind run (see
     // model::KindIndex) and then stream one of these over a contiguous
     // slice.  Each helper is monomorphic in the family at the call site,
     // so the inner `value`/`grad` match constant-folds away and the loop
     // body is branch-free; per-element semantics are identical to the
-    // scalar calculus above (including the y ≥ 0 clamp).
+    // scalar calculus above (including the y ≥ 0 clamp).  The bodies
+    // live in `oga::kernels` (§Perf-5): a fixed-width lane-tree layer
+    // with a `std::simd` twin behind the `simd` feature, bit-identical
+    // across both build paths; `kernels::*_ref` keep the sequential
+    // pre-§Perf-5 loops as the parity reference.
 
-    /// Σ_i f(y_i, α_i) over a run.
+    /// Σ_i f(y_i, α_i) over a run (lane-tree accumulation order —
+    /// within a few ulps of, not bitwise equal to, the sequential
+    /// [`kernels::value_sum_ref`]).
     pub fn value_sum(self, y: &[f64], alpha: &[f64]) -> f64 {
         match self {
-            UtilityKind::Linear => value_sum_with(UtilityKind::Linear, y, alpha),
-            UtilityKind::Log => value_sum_with(UtilityKind::Log, y, alpha),
-            UtilityKind::Reciprocal => value_sum_with(UtilityKind::Reciprocal, y, alpha),
-            UtilityKind::Poly => value_sum_with(UtilityKind::Poly, y, alpha),
+            UtilityKind::Linear => kernels::value_sum(UtilityKind::Linear, y, alpha),
+            UtilityKind::Log => kernels::value_sum(UtilityKind::Log, y, alpha),
+            UtilityKind::Reciprocal => kernels::value_sum(UtilityKind::Reciprocal, y, alpha),
+            UtilityKind::Poly => kernels::value_sum(UtilityKind::Poly, y, alpha),
         }
     }
 
-    /// out_i = scale · f'(y_i, α_i) over a run.
+    /// out_i = scale · f'(y_i, α_i) over a run (element-wise; floats
+    /// independent of slice boundaries and build path).
     pub fn grad_into(self, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
         match self {
-            UtilityKind::Linear => grad_into_with(UtilityKind::Linear, y, alpha, scale, out),
-            UtilityKind::Log => grad_into_with(UtilityKind::Log, y, alpha, scale, out),
+            UtilityKind::Linear => kernels::grad_into(UtilityKind::Linear, y, alpha, scale, out),
+            UtilityKind::Log => kernels::grad_into(UtilityKind::Log, y, alpha, scale, out),
             UtilityKind::Reciprocal => {
-                grad_into_with(UtilityKind::Reciprocal, y, alpha, scale, out)
+                kernels::grad_into(UtilityKind::Reciprocal, y, alpha, scale, out)
             }
-            UtilityKind::Poly => grad_into_with(UtilityKind::Poly, y, alpha, scale, out),
+            UtilityKind::Poly => kernels::grad_into(UtilityKind::Poly, y, alpha, scale, out),
         }
     }
 
     /// y_i += scale · f'(y_i, α_i) over a run (the fused-ascent body;
-    /// f' is evaluated at the pre-update y_i).
+    /// f' is evaluated at the pre-update y_i; element-wise).
     pub fn ascend_slice(self, y: &mut [f64], alpha: &[f64], scale: f64) {
         match self {
-            UtilityKind::Linear => ascend_with(UtilityKind::Linear, y, alpha, scale),
-            UtilityKind::Log => ascend_with(UtilityKind::Log, y, alpha, scale),
-            UtilityKind::Reciprocal => ascend_with(UtilityKind::Reciprocal, y, alpha, scale),
-            UtilityKind::Poly => ascend_with(UtilityKind::Poly, y, alpha, scale),
+            UtilityKind::Linear => kernels::ascend_slice(UtilityKind::Linear, y, alpha, scale),
+            UtilityKind::Log => kernels::ascend_slice(UtilityKind::Log, y, alpha, scale),
+            UtilityKind::Reciprocal => {
+                kernels::ascend_slice(UtilityKind::Reciprocal, y, alpha, scale)
+            }
+            UtilityKind::Poly => kernels::ascend_slice(UtilityKind::Poly, y, alpha, scale),
         }
-    }
-}
-
-#[inline(always)]
-fn value_sum_with(kind: UtilityKind, y: &[f64], alpha: &[f64]) -> f64 {
-    debug_assert_eq!(y.len(), alpha.len());
-    let mut acc = 0.0;
-    for (v, &a) in y.iter().zip(alpha) {
-        acc += kind.value(*v, a);
-    }
-    acc
-}
-
-#[inline(always)]
-fn grad_into_with(kind: UtilityKind, y: &[f64], alpha: &[f64], scale: f64, out: &mut [f64]) {
-    debug_assert_eq!(y.len(), alpha.len());
-    debug_assert_eq!(y.len(), out.len());
-    for i in 0..y.len() {
-        out[i] = scale * kind.grad(y[i], alpha[i]);
-    }
-}
-
-#[inline(always)]
-fn ascend_with(kind: UtilityKind, y: &mut [f64], alpha: &[f64], scale: f64) {
-    debug_assert_eq!(y.len(), alpha.len());
-    for (v, &a) in y.iter_mut().zip(alpha) {
-        *v += scale * kind.grad(*v, a);
     }
 }
 
@@ -284,14 +268,22 @@ mod tests {
     #[test]
     fn slice_kernels_match_scalar_calculus() {
         // value_sum / grad_into / ascend_slice are the batched forms of
-        // value/grad — same numbers, element by element
+        // value/grad — same numbers, element by element (value_sum's
+        // §Perf-5 lane-tree order reassociates the sum by a few ulps).
+        // The negative entry exercises the y ≥ 0 clamp of the gradient
+        // kernels; `value` contracts y ≥ 0, so the sum row clamps first.
         let y = [0.0, 0.4, 1.7, 3.2, -0.3];
         let alpha = [1.0, 1.25, 1.5, 0.8, 2.0];
         let scale = 0.75;
         for kind in UtilityKind::ALL {
+            let y_sum = [0.0, 0.4, 1.7, 3.2, 0.0];
             let want_sum: f64 =
-                y.iter().zip(&alpha).map(|(&v, &a)| kind.value(v, a)).sum();
-            assert!((kind.value_sum(&y, &alpha) - want_sum).abs() < 1e-12, "{}", kind.name());
+                y_sum.iter().zip(&alpha).map(|(&v, &a)| kind.value(v, a)).sum();
+            assert!(
+                (kind.value_sum(&y_sum, &alpha) - want_sum).abs() < 1e-12,
+                "{}",
+                kind.name()
+            );
             let mut out = [9.0; 5];
             kind.grad_into(&y, &alpha, scale, &mut out);
             for i in 0..y.len() {

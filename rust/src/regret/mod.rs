@@ -14,7 +14,9 @@ use crate::model::{KindIndex, Problem};
 use crate::oga::gradient::{grad_norm, gradient_sparse, GradScratch};
 use crate::oga::projection::project_instances;
 use crate::oga::{ascend_ports_sharded, gradient_sparse_sharded};
-use crate::reward::{slot_reward, slot_reward_kinds};
+use crate::reward::{
+    slot_reward, slot_reward_kinds, slot_reward_ports_sharded, PortRewardScratch,
+};
 use crate::utils::pool::ExecBudget;
 
 /// Result of the offline oracle solve.
@@ -42,6 +44,9 @@ pub fn arrival_counts(trajectory: &[Vec<f64>], num_ports: usize) -> Vec<f64> {
 /// Solve Eq. 10 by projected full-gradient ascent with diminishing steps
 /// (η_i = η₀/√(i+1)); tracks the best iterate seen (the objective is
 /// concave but the ascent path need not be monotone at finite step size).
+/// The arrival counts already encode the realized trajectory (n_l =
+/// Σ_t x_l(t)), so there is no horizon parameter — the old `horizon:
+/// usize` argument was dead weight (`let _ = horizon`).
 ///
 /// §Perf-2: the gradient is zero on ports with n_l = 0 and y starts at
 /// the origin, so every pass — gradient (kind-batched, via
@@ -49,18 +54,21 @@ pub fn arrival_counts(trajectory: &[Vec<f64>], num_ports: usize) -> Vec<f64> {
 /// restricted to the arrived ports' slices and their adjacent
 /// instances; ports that never arrive are never touched.
 ///
-/// §Perf-4: under a multi-shard [`ExecBudget`] (auto resolves to the
-/// worker budget W) each iteration's gradient fill, ascent and
-/// projection fan out over a deterministic [`ShardPlan`], while the
-/// ‖∇q‖ reduction and the objective replay serially on the caller
-/// thread in the serial order — so the sharded solve is **bit-identical**
-/// to the serial one (pinned by `tests/shard_parity.rs` at shard counts
-/// {1, 2, 3, 7}), the same discipline as `coordinator::sharded`'s
-/// reward/ledger merges.
+/// §Perf-4/§Perf-5: under a multi-shard [`ExecBudget`] (auto resolves
+/// to the worker budget W) each iteration's gradient fill (its per-port
+/// phase-A reductions included), ascent, projection **and objective
+/// evaluation** fan out over a deterministic [`ShardPlan`] — the
+/// objective through the same per-port reward kernels + ascending
+/// serial merge the sharded leader scores slots with
+/// ([`slot_reward_ports_sharded`]).  Only the ‖∇q‖ reduction replays
+/// serially on the caller thread, so the sharded solve is
+/// **bit-identical** to the serial one (pinned by
+/// `tests/shard_parity.rs` at shard counts {1, 2, 3, 7} and the
+/// {1×4, 2×2, 4×1} budget splits), the same discipline as
+/// `coordinator::sharded`'s reward/ledger merges.
 pub fn solve_oracle(
     problem: &Problem,
     counts: &[f64],
-    horizon: usize,
     iters: usize,
     budget: ExecBudget,
 ) -> Oracle {
@@ -72,16 +80,21 @@ pub fn solve_oracle(
     let mut grad = vec![0.0; problem.decision_len()];
     let mut scratch = GradScratch::default();
     let mut quota = vec![0.0; k_n];
-    let mut kq = vec![0.0; k_n];
+    let mut reward_scratch = PortRewardScratch::default();
     let mut active_ports: Vec<usize> = Vec::new();
     let mut steps: Vec<ArrivedPort> = Vec::new();
     let mut parts: Vec<Vec<usize>> = Vec::new();
+
+    // arrived ports (ascending) — fixed for the whole solve, the
+    // objective's scatter list and serial merge order (§Perf-5)
+    let arrived: Vec<usize> =
+        (0..problem.num_ports()).filter(|&l| counts[l] != 0.0).collect();
 
     // instances adjacent to any arrived port: the only columns the
     // ascent can perturb, hence the only channels to re-project
     let mut seen = vec![false; problem.num_instances()];
     let mut active_instances = Vec::new();
-    for l in (0..problem.num_ports()).filter(|&l| counts[l] != 0.0) {
+    for &l in &arrived {
         for e in problem.graph.port_edges(l) {
             let r = problem.graph.edge_instance[e];
             if !seen[r] {
@@ -91,8 +104,45 @@ pub fn solve_oracle(
         }
     }
 
+    // Σ_l n_l (gain_l − penalty_l) — sharded per-port fan-out with the
+    // serial ascending merge when a plan is bound, the plain serial
+    // loop otherwise; identical floats either way.
+    fn objective(
+        problem: &Problem,
+        kinds: &KindIndex,
+        counts: &[f64],
+        y: &[f64],
+        arrived: &[usize],
+        plan: &Option<ShardPlan>,
+        quota: &mut [f64],
+        scratch: &mut PortRewardScratch,
+    ) -> f64 {
+        match plan {
+            Some(plan) => slot_reward_ports_sharded(
+                problem,
+                kinds,
+                counts,
+                y,
+                arrived,
+                plan.num_shards(),
+                scratch,
+            )
+            .q,
+            None => slot_reward_kinds(problem, kinds, counts, y, quota).q,
+        }
+    }
+
     let mut best_y = y.clone();
-    let mut best_obj = slot_reward_kinds(problem, kinds, counts, &y, &mut quota).q;
+    let mut best_obj = objective(
+        problem,
+        kinds,
+        counts,
+        &y,
+        &arrived,
+        &plan,
+        &mut quota,
+        &mut reward_scratch,
+    );
 
     // Scale-free initial step: diam(Y) / ‖∇q(0)‖ keeps the first move
     // inside the polytope's order of magnitude.  (The sharded fill
@@ -104,7 +154,6 @@ pub fn solve_oracle(
             counts,
             &y,
             &mut grad,
-            &mut kq,
             &mut active_ports,
             &mut steps,
             plan,
@@ -131,7 +180,6 @@ pub fn solve_oracle(
                     counts,
                     &y,
                     &mut grad,
-                    &mut kq,
                     &mut active_ports,
                     &mut steps,
                     plan,
@@ -159,13 +207,22 @@ pub fn solve_oracle(
                 project_instances(problem, &mut y, &active_instances, 1);
             }
         }
-        let obj = slot_reward_kinds(problem, kinds, counts, &y, &mut quota).q;
+        let obj = objective(
+            problem,
+            kinds,
+            counts,
+            &y,
+            &arrived,
+            &plan,
+            &mut quota,
+            &mut reward_scratch,
+        );
         if obj > best_obj {
             best_obj = obj;
-            best_y = y.clone();
+            // pre-sized: keep the improvement without a realloc
+            best_y.copy_from_slice(&y);
         }
     }
-    let _ = horizon;
     Oracle { y_star: best_y, cumulative_reward: best_obj, iters }
 }
 
@@ -205,7 +262,7 @@ mod tests {
     fn oracle_beats_any_feasible_point_we_try() {
         let (_s, p) = small_problem();
         let counts = vec![100.0; p.num_ports()];
-        let oracle = solve_oracle(&p, &counts, 150, 300, ExecBudget::serial());
+        let oracle = solve_oracle(&p, &counts, 300, ExecBudget::serial());
         p.check_feasible(&oracle.y_star, 1e-7).unwrap();
         // random feasible candidates never beat the oracle
         let mut rng = crate::utils::rng::Rng::new(5);
@@ -224,7 +281,7 @@ mod tests {
         // projecting one more ascent step from y* should barely move it
         let (_s, p) = small_problem();
         let counts = vec![50.0; p.num_ports()];
-        let oracle = solve_oracle(&p, &counts, 100, 500, ExecBudget::serial());
+        let oracle = solve_oracle(&p, &counts, 500, ExecBudget::serial());
         let mut y = oracle.y_star.clone();
         let mut grad = vec![0.0; y.len()];
         let mut scratch = GradScratch::default();
@@ -248,7 +305,7 @@ mod tests {
         let mut src = Bernoulli::uniform(p.num_ports(), s.arrival_prob, 77);
         let traj = record_trajectory(&mut src, p.num_ports(), s.horizon);
         let counts = arrival_counts(&traj, p.num_ports());
-        let oracle = solve_oracle(&p, &counts, s.horizon, 400, ExecBudget::serial());
+        let oracle = solve_oracle(&p, &counts, 400, ExecBudget::serial());
 
         let mut leader = Leader::new(&p);
         let mut pol = OgaSched::with_oracle_rate(&p, s.horizon, ExecBudget::auto());

@@ -1,8 +1,37 @@
 //! The reward model of Sec. 2.2–2.3: per-port reward (Eq. 7), slot
 //! aggregation (Eq. 8), and the Thm. 1 quantities used by the regret
 //! experiments.
+//!
+//! §Perf-5: [`slot_reward_ports_sharded`] is the pool-scattered form of
+//! [`slot_reward_kinds`] — per-port kernels fan out, the (gain, pen)
+//! components merge serially in ascending port order, so the sharded
+//! evaluation is bit-identical to the serial loop.  It serves both the
+//! sharded leader's per-slot scoring (`coordinator::sharded`) and the
+//! per-iteration objective of the sharded Eq. 50 oracle solve
+//! (`regret::solve_oracle`).
 
 use crate::model::{KindIndex, Problem};
+use crate::oga::kernels;
+use crate::utils::pool::{self, SyncSlice};
+
+thread_local! {
+    /// Per-thread [K] quota scratch for pool-scattered per-port kernels
+    /// (the sharded reward/objective and the sharded phase-A quota/k*
+    /// reductions).
+    static QUOTA_TLS: std::cell::RefCell<Vec<f64>> = std::cell::RefCell::new(Vec::new());
+}
+
+/// Run `f` on this thread's [K] quota scratch (grown on demand, handed
+/// out at exactly `k_n` — the length the per-port kernels assert).
+pub(crate) fn with_quota<R>(k_n: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    QUOTA_TLS.with(|q| {
+        let quota = &mut *q.borrow_mut();
+        if quota.len() < k_n {
+            quota.resize(k_n, 0.0);
+        }
+        f(&mut quota[..k_n])
+    })
+}
 
 /// Decomposed slot reward: q = gain − penalty summed over arrived ports.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -106,9 +135,7 @@ pub fn port_reward_kinds(
     quota.fill(0.0);
     for e in g.port_edges(l) {
         let base = e * k_n;
-        for k in 0..k_n {
-            quota[k] += y[base + k];
-        }
+        kernels::accumulate(quota, &y[base..base + k_n]);
     }
     let mut penalty = 0.0f64;
     for k in 0..k_n {
@@ -139,6 +166,71 @@ pub fn slot_reward_kinds(
         out.gain += x[l] * gain;
         out.penalty += x[l] * penalty;
         out.q += x[l] * (gain - penalty);
+    }
+    out
+}
+
+/// Reusable scratch of [`slot_reward_ports_sharded`]: per-arrived-
+/// position (gain, penalty) slots the scatter writes into before the
+/// serial merge.
+#[derive(Clone, Debug, Default)]
+pub struct PortRewardScratch {
+    gain: Vec<f64>,
+    pen: Vec<f64>,
+}
+
+/// Pool-scattered [`slot_reward_kinds`] (§Perf-5): the per-port reward
+/// kernels fan out over up to `workers` pool workers (dispatch follows
+/// the calling thread's scope — global crew, or a leased shard group
+/// inside a budgeted lane), then the components merge serially in
+/// ascending port order — the exact accumulation sequence of the serial
+/// loop, so the result is **bit-identical** to
+/// `slot_reward_kinds(problem, kinds, x, y, ..)` by construction
+/// (pinned by `tests/shard_parity.rs`).
+///
+/// `arrived` must be exactly the ports with `x[l] != 0`, ascending —
+/// the caller owns the list because both users already have it (the
+/// sharded leader rebuilds it per slot; the oracle solve's counts are
+/// fixed, so it is computed once per solve).
+pub fn slot_reward_ports_sharded(
+    problem: &Problem,
+    kinds: &KindIndex,
+    x: &[f64],
+    y: &[f64],
+    arrived: &[usize],
+    workers: usize,
+    scratch: &mut PortRewardScratch,
+) -> SlotReward {
+    debug_assert!(arrived.windows(2).all(|w| w[0] < w[1]), "arrived ports must ascend");
+    debug_assert!(arrived.iter().all(|&l| x[l] != 0.0));
+    if arrived.is_empty() {
+        return SlotReward::default();
+    }
+    let n = arrived.len();
+    scratch.gain.resize(n, 0.0);
+    scratch.pen.resize(n, 0.0);
+    {
+        let gains = SyncSlice::new(&mut scratch.gain);
+        let pens = SyncSlice::new(&mut scratch.pen);
+        let k_n = problem.num_resources;
+        pool::parallel_for(n, workers, |i| {
+            let (gain, pen) =
+                with_quota(k_n, |quota| port_reward_kinds(problem, kinds, arrived[i], y, quota));
+            // SAFETY: each arrived position is handed to exactly one task.
+            unsafe {
+                gains.write(i, gain);
+                pens.write(i, pen);
+            }
+        });
+    }
+    let mut out = SlotReward::default();
+    for (i, &l) in arrived.iter().enumerate() {
+        let x_l = x[l];
+        let gain = scratch.gain[i];
+        let penalty = scratch.pen[i];
+        out.gain += x_l * gain;
+        out.penalty += x_l * penalty;
+        out.q += x_l * (gain - penalty);
     }
     out
 }
@@ -241,6 +333,33 @@ mod tests {
         assert!((a.q - b.q).abs() < 1e-9 * (1.0 + a.q.abs()));
         assert!((a.gain - b.gain).abs() < 1e-9 * (1.0 + a.gain.abs()));
         assert!((a.penalty - b.penalty).abs() < 1e-9 * (1.0 + a.penalty.abs()));
+    }
+
+    #[test]
+    fn sharded_slot_reward_matches_serial_bitwise() {
+        // the §Perf-5 pool-scattered evaluation merges per-port floats
+        // in the serial accumulation order — results are identical, not
+        // merely close (the full property matrix is in shard_parity)
+        let p = synthesize(&Scenario::small());
+        let kinds = p.kinds();
+        let mut rng = Rng::new(31);
+        let y: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(0.0, 1.2)).collect();
+        for rho in [0.0, 0.3, 1.0] {
+            let x: Vec<f64> = (0..p.num_ports())
+                .map(|_| if rng.bernoulli(rho) { (1 + rng.below(40)) as f64 } else { 0.0 })
+                .collect();
+            let arrived: Vec<usize> =
+                (0..p.num_ports()).filter(|&l| x[l] != 0.0).collect();
+            let mut quota = vec![0.0; p.num_resources];
+            let want = slot_reward_kinds(&p, kinds, &x, &y, &mut quota);
+            for workers in [1, 2, 3, 7] {
+                let mut scratch = PortRewardScratch::default();
+                let got = slot_reward_ports_sharded(
+                    &p, kinds, &x, &y, &arrived, workers, &mut scratch,
+                );
+                assert_eq!(got, want, "rho={rho} workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ use std::sync::Arc;
 
 use crate::coordinator::sharded::{active_plan, project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::Problem;
+use crate::oga::kernels;
 use crate::oga::projection::{project, project_instances};
 use crate::schedulers::{IncrementalPublisher, Policy, Touched};
 use crate::utils::pool::{self, ExecBudget, SyncSlice};
@@ -195,21 +196,14 @@ impl OgaMirror {
     }
 }
 
-/// One edge's multiplicative update — the shared per-edge kernel of the
-/// serial and sharded steps (identical floats by construction).
-/// `scale` is η_t · x_l; β_{k*} is folded into the exponent.
+/// One edge's multiplicative update — thin wrapper over the shared
+/// [`kernels::mirror_edge`] (§Perf-5) binding this policy's exponent
+/// clamp; the single per-edge kernel of the serial and sharded steps
+/// (identical floats by construction).  `scale` is η_t · x_l; β_{k*}
+/// is folded into the exponent.
 #[inline]
 fn mirror_edge(problem: &Problem, y: &mut [f64], e: usize, scale: f64, kstar: usize) {
-    let k_n = problem.num_resources;
-    let base = e * k_n;
-    let rk = problem.graph.edge_instance[e] * k_n;
-    for k in 0..k_n {
-        let yv = y[base + k];
-        let fp = problem.kind[rk + k].grad(yv, problem.alpha[rk + k]);
-        let pen = if k == kstar { problem.beta[k] } else { 0.0 };
-        let expo = (scale * (fp - pen)).clamp(-MAX_EXPONENT, MAX_EXPONENT);
-        y[base + k] = yv * expo.exp();
-    }
+    kernels::mirror_edge(problem, y, e, scale, kstar, MAX_EXPONENT);
 }
 
 impl Policy for OgaMirror {

@@ -69,7 +69,11 @@ impl OgaSched {
     }
 
     /// Use the Eq. 50 oracle learning rate instead of the decay schedule
-    /// (reservation scoring — this is the Thm. 1 configuration).
+    /// (reservation scoring — this is the Thm. 1 configuration).  Under
+    /// a bound shard plan the two-pass step fans out per shard — since
+    /// §Perf-5 including phase A's per-port quota/k* reductions — with
+    /// only the ‖∇q‖ reduction replayed serially, so plan-bound runs
+    /// stay bit-identical to serial (`tests/shard_parity.rs`).
     pub fn with_oracle_rate(problem: &Problem, horizon: usize, budget: ExecBudget) -> Self {
         OgaSched {
             state: OgaState::new(problem, LearningRate::Oracle { horizon }, budget),

@@ -25,6 +25,12 @@
 //! * a crew *worker* thread (global or group) runs nested scatters
 //!   inline — the two levels are the hierarchy, there is no third.
 //!
+//! §Perf-5 widened what rides those scatters: the sharded Eq. 50 solve
+//! fans its per-iteration objective (per-port reward kernels, merged
+//! serially port-ascending) and the gradient's phase-A quota/k*
+//! reductions over the same crews — worker-count-many scatters per
+//! iteration whose floats never depend on the thread assignment.
+//!
 //! Work is chunked dynamically (atomic `fetch_add` on a shared cursor in
 //! chunks of ~n/4·workers), which keeps near-uniform tasks balanced
 //! without a work-stealing deque.  Concurrent submitters to the *same*

@@ -1,0 +1,221 @@
+//! Kernel-layer parity (§Perf-5): whichever path the build compiled —
+//! the default scalar lane-tree loops or the `--features simd`
+//! `std::simd` twins — the leaf kernels must produce **bit-identical**
+//! floats to the fixed-width lane-tree accumulation order spelled out
+//! here in plain scalar Rust.  Running this suite on stable pins the
+//! scalar path to the contract; running it under the advisory nightly
+//! `--features simd` CI job pins SIMD == scalar-lane-tree bitwise.
+//!
+//! Slice lengths cover 0..=2·LANES+1 (resp. 2·LANES_F32+1), so empty
+//! slices, exactly-one-block slices and every remainder-lane count are
+//! all exercised, across all four Eq. 51 utility families.
+
+use ogasched::oga::kernels::{
+    self, grad_f32, value_f32, LANES, LANES_F32,
+};
+use ogasched::oga::utilities::UtilityKind;
+use ogasched::utils::rng::Rng;
+
+/// The contract: LANES independent accumulators over full blocks,
+/// combined in a fixed binary tree, sequential remainder added last.
+fn lane_tree_f64(kind: UtilityKind, y: &[f64], alpha: &[f64]) -> f64 {
+    let n = y.len();
+    let blocks = n - n % LANES;
+    let mut acc = [0.0f64; LANES];
+    let mut i = 0;
+    while i < blocks {
+        for j in 0..LANES {
+            acc[j] += kind.value(y[i + j], alpha[i + j]);
+        }
+        i += LANES;
+    }
+    let mut tail = 0.0;
+    for j in blocks..n {
+        tail += kind.value(y[j], alpha[j]);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
+}
+
+/// The f32 contract (8-lane tree), evaluated through the artifact-path
+/// f32 calculus.
+fn lane_tree_f32(kind: UtilityKind, y: &[f32], alpha: &[f32]) -> f32 {
+    let n = y.len();
+    let blocks = n - n % LANES_F32;
+    let mut acc = [0.0f32; LANES_F32];
+    let mut i = 0;
+    while i < blocks {
+        for j in 0..LANES_F32 {
+            acc[j] += value_f32(kind, y[i + j], alpha[i + j]);
+        }
+        i += LANES_F32;
+    }
+    let mut tail = 0.0f32;
+    for j in blocks..n {
+        tail += value_f32(kind, y[j], alpha[j]);
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+#[test]
+fn value_sum_is_bitwise_lane_tree_at_every_remainder() {
+    let mut rng = Rng::new(4242);
+    for kind in UtilityKind::ALL {
+        for n in 0..=2 * LANES + 1 {
+            for round in 0..8 {
+                let y: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 5.0)).collect();
+                let alpha: Vec<f64> = (0..n).map(|_| rng.uniform(0.4, 2.5)).collect();
+                let got = kind.value_sum(&y, &alpha);
+                let want = lane_tree_f64(kind, &y, &alpha);
+                assert!(
+                    got == want,
+                    "{} n={n} round={round}: {got:?} vs lane tree {want:?}",
+                    kind.name()
+                );
+                // and the module-level entry agrees with the method
+                assert!(kernels::value_sum(kind, &y, &alpha) == want);
+            }
+        }
+    }
+}
+
+#[test]
+fn value_sum_stays_within_ulps_of_sequential_reference() {
+    // the lane tree reassociates the sum; the drift from the kept
+    // sequential reference must stay at rounding noise on long slices
+    let mut rng = Rng::new(7);
+    for kind in UtilityKind::ALL {
+        for n in [63, 64, 257, 1024] {
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 5.0)).collect();
+            let alpha: Vec<f64> = (0..n).map(|_| rng.uniform(0.4, 2.5)).collect();
+            let a = kind.value_sum(&y, &alpha);
+            let b = kernels::value_sum_ref(kind, &y, &alpha);
+            assert!(
+                (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                "{} n={n}: lane {a} vs sequential {b}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_into_matches_scalar_calculus_bitwise() {
+    let mut rng = Rng::new(99);
+    for kind in UtilityKind::ALL {
+        for n in 0..=2 * LANES + 1 {
+            // negatives exercise the y >= 0 clamp inside f'
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 5.0)).collect();
+            let alpha: Vec<f64> = (0..n).map(|_| rng.uniform(0.4, 2.5)).collect();
+            let scale = rng.uniform(0.1, 3.0);
+            let mut out = vec![f64::NAN; n];
+            kind.grad_into(&y, &alpha, scale, &mut out);
+            for i in 0..n {
+                let want = scale * kind.grad(y[i], alpha[i]);
+                assert!(
+                    out[i] == want,
+                    "{} n={n} i={i}: {} vs scalar {want}",
+                    kind.name(),
+                    out[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ascend_slice_matches_scalar_calculus_bitwise() {
+    let mut rng = Rng::new(123);
+    for kind in UtilityKind::ALL {
+        for n in 0..=2 * LANES + 1 {
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform(-0.2, 5.0)).collect();
+            let alpha: Vec<f64> = (0..n).map(|_| rng.uniform(0.4, 2.5)).collect();
+            let scale = rng.uniform(0.1, 3.0);
+            let mut got = y.clone();
+            kind.ascend_slice(&mut got, &alpha, scale);
+            for i in 0..n {
+                let want = y[i] + scale * kind.grad(y[i], alpha[i]);
+                assert!(
+                    got[i] == want,
+                    "{} n={n} i={i}: {} vs scalar {want}",
+                    kind.name(),
+                    got[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn accumulate_is_bitwise_elementwise_add() {
+    let mut rng = Rng::new(55);
+    for n in 0..=2 * LANES + 1 {
+        let base: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let add: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let mut acc = base.clone();
+        kernels::accumulate(&mut acc, &add);
+        for i in 0..n {
+            assert!(acc[i] == base[i] + add[i], "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn f32_kernels_are_bitwise_lane_tree_at_every_remainder() {
+    let mut rng = Rng::new(2024);
+    for kind in UtilityKind::ALL {
+        for n in 0..=2 * LANES_F32 + 1 {
+            let y: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 5.0) as f32).collect();
+            let alpha: Vec<f32> = (0..n).map(|_| rng.uniform(0.4, 2.5) as f32).collect();
+            let got = kernels::value_sum_f32(kind, &y, &alpha);
+            let want = lane_tree_f32(kind, &y, &alpha);
+            assert!(
+                got == want,
+                "{} n={n}: {got:?} vs f32 lane tree {want:?}",
+                kind.name()
+            );
+            let scale = 0.75f32;
+            let mut out = vec![f32::NAN; n];
+            kernels::grad_into_f32(kind, &y, &alpha, scale, &mut out);
+            for i in 0..n {
+                let w = scale * grad_f32(kind, y[i], alpha[i]);
+                assert!(out[i] == w, "{} grad_f32 n={n} i={i}", kind.name());
+            }
+            let mut asc = y.clone();
+            kernels::ascend_slice_f32(kind, &mut asc, &alpha, scale);
+            for i in 0..n {
+                let w = y[i] + scale * grad_f32(kind, y[i], alpha[i]);
+                assert!(asc[i] == w, "{} ascend_f32 n={n} i={i}", kind.name());
+            }
+            // the f32 lane sum tracks the sequential f32 reference at
+            // f32 rounding noise
+            let seq = kernels::value_sum_f32_ref(kind, &y, &alpha);
+            assert!(
+                (got - seq).abs() <= 1e-5 * (1.0 + seq.abs()),
+                "{} n={n}: f32 lane {got} vs sequential {seq}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kind_batched_reward_runs_through_the_kernel_layer() {
+    // end-to-end seam: slot_reward_kinds (value_sum over KindIndex runs
+    // + accumulate quota) equals the per-coordinate scalar reference
+    // within rounding — unchanged semantics under the §Perf-5 layer
+    use ogasched::config::Scenario;
+    use ogasched::reward::{slot_reward, slot_reward_kinds};
+    use ogasched::traces::synthesize;
+    let p = synthesize(&Scenario::small());
+    let mut rng = Rng::new(8);
+    let y: Vec<f64> = (0..p.decision_len()).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let x: Vec<f64> = (0..p.num_ports())
+        .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+        .collect();
+    let a = slot_reward(&p, &x, &y);
+    let mut quota = vec![0.0; p.num_resources];
+    let b = slot_reward_kinds(&p, p.kinds(), &x, &y, &mut quota);
+    assert!((a.q - b.q).abs() <= 1e-9 * (1.0 + a.q.abs()));
+    assert!((a.gain - b.gain).abs() <= 1e-9 * (1.0 + a.gain.abs()));
+    assert!((a.penalty - b.penalty).abs() <= 1e-9 * (1.0 + a.penalty.abs()));
+}

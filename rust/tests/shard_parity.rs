@@ -349,6 +349,11 @@ fn budgeted_lineup_ledgers_and_decisions_match_serial() {
 
 #[test]
 fn sharded_solve_oracle_matches_serial_bitwise() {
+    // §Perf-4/§Perf-5: the sharded solve fans out the gradient fill
+    // (phase-A per-port reductions included), ascent, projection AND
+    // the per-iteration objective; y* and the objective (which is now
+    // itself the sharded evaluation) must equal the serial solve
+    // exactly, across plain shard counts and runs×shards budget splits.
     use ogasched::regret::{arrival_counts, solve_oracle};
     use ogasched::sim::arrivals::record_trajectory;
 
@@ -360,16 +365,73 @@ fn sharded_solve_oracle_matches_serial_bitwise() {
     let traj = record_trajectory(&mut src, p.num_ports(), horizon);
     let counts = arrival_counts(&traj, p.num_ports());
 
-    let serial = solve_oracle(&p, &counts, horizon, 60, ExecBudget::serial());
+    let serial = solve_oracle(&p, &counts, 60, ExecBudget::serial());
     for shards in SHARD_COUNTS {
-        let sharded =
-            solve_oracle(&p, &counts, horizon, 60, ExecBudget::shards_only(shards));
+        let sharded = solve_oracle(&p, &counts, 60, ExecBudget::shards_only(shards));
         assert_eq!(
             sharded.cumulative_reward, serial.cumulative_reward,
             "shards={shards}: objective diverged"
         );
         assert_eq!(sharded.y_star, serial.y_star, "shards={shards}: y* diverged");
     }
+    for (runs, shards) in BUDGET_SPLITS {
+        let sharded = solve_oracle(&p, &counts, 60, ExecBudget::split(runs, shards));
+        assert_eq!(
+            sharded.cumulative_reward, serial.cumulative_reward,
+            "split {runs}x{shards}: objective diverged"
+        );
+        assert_eq!(
+            sharded.y_star, serial.y_star,
+            "split {runs}x{shards}: y* diverged"
+        );
+    }
+}
+
+#[test]
+fn sharded_objective_matches_serial_bitwise() {
+    // §Perf-5: the pool-scattered slot_reward_ports_sharded — per-port
+    // kernels fan out, components merge in ascending port order — must
+    // equal slot_reward_kinds bit for bit on random problems, decisions
+    // and (sparse, dense, multi-count) arrival vectors.
+    use ogasched::model::KindIndex;
+    use ogasched::reward::{
+        slot_reward_kinds, slot_reward_ports_sharded, PortRewardScratch,
+    };
+    check("sharded-objective-parity", 20, |rng, size| {
+        let p = random_problem(rng, size);
+        let kinds = KindIndex::build(&p);
+        let y: Vec<f64> =
+            (0..p.decision_len()).map(|_| rng.uniform(0.0, 2.5)).collect();
+        for &rho in &[0.15, 0.6, 1.0] {
+            let counts: Vec<f64> = (0..p.num_ports())
+                .map(|_| {
+                    if rng.bernoulli(rho) {
+                        (1 + rng.below(60)) as f64
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let arrived: Vec<usize> =
+                (0..p.num_ports()).filter(|&l| counts[l] != 0.0).collect();
+            let mut quota = vec![0.0; p.num_resources];
+            let want = slot_reward_kinds(&p, &kinds, &counts, &y, &mut quota);
+            for &workers in &SHARD_COUNTS {
+                let mut scratch = PortRewardScratch::default();
+                let got = slot_reward_ports_sharded(
+                    &p, &kinds, &counts, &y, &arrived, workers, &mut scratch,
+                );
+                ensure(got == want, || {
+                    format!(
+                        "rho={rho} workers={workers}: ({}, {}, {}) vs \
+                         ({}, {}, {})",
+                        got.q, got.gain, got.penalty, want.q, want.gain, want.penalty
+                    )
+                })?;
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

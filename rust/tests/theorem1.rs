@@ -23,7 +23,7 @@ fn measure_regret(scenario: &Scenario, adversarial: bool) -> (f64, f64) {
         record_trajectory(&mut src, p.num_ports(), scenario.horizon)
     };
     let counts = arrival_counts(&traj, p.num_ports());
-    let oracle = solve_oracle(&p, &counts, scenario.horizon, 300, ExecBudget::serial());
+    let oracle = solve_oracle(&p, &counts, 300, ExecBudget::serial());
     let mut leader = Leader::new(&p);
     let mut pol = OgaSched::with_oracle_rate(&p, scenario.horizon, ExecBudget::auto());
     let mut replay = Replay::new(traj);

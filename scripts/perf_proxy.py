@@ -992,8 +992,9 @@ def oracle_solve_stage_times(p, warm, iters, horizon=200, rho=0.7):
 
 
 # Scatters per sharded solve_oracle iteration: gradient fill, ascent,
-# projection.
+# projection (PR 4); §Perf-5 adds phase A and the objective -> 5.
 ORACLE_DISPATCHES_PER_ITER = 3
+ORACLE_DISPATCHES_PER_ITER_P5 = 5
 
 
 def perf4_section(rows):
@@ -1067,6 +1068,179 @@ def perf4_section(rows):
                   f"   speedup {t_serial_lineup/t_l:6.2f}x")
 
 
+# ------------------------------------------------------ §Perf-5 models --
+
+# Relative per-element op costs for the kernel lane model (order-of-
+# magnitude x86-64 latencies, in add/mul units): division and sqrt are
+# pipelined ~4x an add, ln is a scalar libm call.  The lane model
+# divides the vectorizable portion by the lane width; ln has no
+# portable-SIMD form (oga::kernels evaluates it per lane through the
+# same f64::ln), so its cost stays lane-serial.  These rows are MODELED
+# — the real numbers come from `cargo bench --bench hot_path` with and
+# without `--features simd`.
+OP_ADD, OP_MUL, OP_DIV, OP_SQRT, OP_LN = 1.0, 1.0, 4.0, 4.0, 12.0
+F64_LANES = 4
+F32_LANES = 8
+
+# (vectorizable, lane_serial) op units per element of value_sum / f64
+KERNEL_OPS = {
+    # clamp(max) + the Eq. 51 value + the accumulator add
+    "linear": (OP_ADD + OP_MUL + OP_ADD, 0.0),
+    "log": (OP_ADD + OP_ADD + OP_MUL + OP_ADD, OP_LN),
+    "reciprocal": (OP_ADD + OP_DIV + OP_ADD + OP_DIV + OP_ADD + OP_ADD, 0.0),
+    "poly": (OP_ADD + OP_ADD + OP_SQRT + OP_MUL + OP_ADD + OP_ADD, 0.0),
+}
+# grad_into per element (no reduction; log's f' = a/(y+1) needs no ln)
+GRAD_OPS = {
+    "linear": (OP_ADD + OP_MUL, 0.0),
+    "log": (OP_ADD + OP_ADD + OP_DIV + OP_MUL, 0.0),
+    "reciprocal": (OP_ADD + OP_ADD + OP_MUL + OP_DIV + OP_MUL, 0.0),
+    "poly": (OP_ADD + OP_ADD + OP_SQRT + OP_MUL + OP_DIV + OP_MUL, 0.0),
+}
+
+
+def kernel_lane_speedup(ops, lanes):
+    vec, serial = ops
+    return (vec + serial) / (vec / lanes + serial)
+
+
+def value_sum_mirror(p_runs, y, af, kind_code):
+    """Structural mirror of one value_sum pass (per-kind, n elements) —
+    times the *scalar* kernel; the lane rows are modeled from it."""
+    acc = 0.0
+    if kind_code == 0:
+        for c in p_runs:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            acc += af[c] * yv
+    elif kind_code == 1:
+        for c in p_runs:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            acc += af[c] * math.log(yv + 1.0)
+    elif kind_code == 2:
+        for c in p_runs:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            acc += 1.0 / af[c] - 1.0 / (yv + af[c])
+    else:
+        for c in p_runs:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            acc += af[c] * math.sqrt(yv + 1.0) - af[c]
+    return acc
+
+
+def grad_into_mirror(idx, y, af, out, kind_code, scale=0.75):
+    """Structural mirror of one grad_into pass (per-kind, n elements) —
+    note log's f' = a/(y+1) has no ln, so its scalar cost differs from
+    the value_sum mirror's; the rows are timed separately."""
+    if kind_code == 0:
+        for c in idx:
+            out[c] = scale * af[c]
+    elif kind_code == 1:
+        for c in idx:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            out[c] = scale * (af[c] / (yv + 1.0))
+    elif kind_code == 2:
+        for c in idx:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            d = yv + af[c]
+            out[c] = scale / (d * d)
+    else:
+        for c in idx:
+            yv = y[c] if y[c] > 0.0 else 0.0
+            out[c] = scale * af[c] / (2.0 * math.sqrt(yv + 1.0))
+
+
+def perf5_kernel_section(rows):
+    """§Perf-5 (b): scalar-vs-lane kernel rows.  The scalar side is
+    timed on the structural mirrors (n = 4096, matching the bench's
+    `kernel * n=4096` rows; value_sum and grad_into each on their own
+    mirror); the lane side divides the vectorizable op share by the
+    lane width (ln stays lane-serial) — the op split is the documented
+    KERNEL_OPS/GRAD_OPS model, not a measurement."""
+    n = 4096
+    rng = random.Random(29)
+    y = [rng.uniform(0.0, 3.0) for _ in range(n)]
+    af = [rng.uniform(0.5, 2.0) for _ in range(n)]
+    out = [0.0] * n
+    idx = list(range(n))
+    speedups_f64 = []
+    for code, name in enumerate(KINDS):
+        timed = {
+            "value_sum": bench(lambda: value_sum_mirror(idx, y, af, code), 5, 40),
+            "grad_into": bench(lambda: grad_into_mirror(idx, y, af, out, code), 5, 40),
+        }
+        for fn_name, ops in (("value_sum", KERNEL_OPS[name]),
+                             ("grad_into", GRAD_OPS[name])):
+            mean_s, min_s = timed[fn_name]
+            s64 = kernel_lane_speedup(ops, F64_LANES)
+            s32 = kernel_lane_speedup(ops, F32_LANES)
+            if fn_name == "value_sum":
+                speedups_f64.append(s64)
+            rows.append(dict(section="kernel-lane-model", kernel=fn_name,
+                             kind=name, n=n,
+                             scalar_ms=mean_s * 1e3, scalar_ms_min=min_s * 1e3,
+                             lane_speedup_f64=s64, lane_speedup_f32=s32,
+                             modeled_lane_ms=mean_s * 1e3 / s64))
+            print(f"kernel {fn_name:<10} {name:<10} n={n}"
+                  f" scalar {mean_s*1e3:8.3f} ms   lane f64 {s64:5.2f}x"
+                  f"   lane f32 {s32:5.2f}x")
+    mean_speedup = sum(speedups_f64) / len(speedups_f64)
+    rows.append(dict(section="kernel-lane-model", kernel="value_sum",
+                     kind="mean", n=n, lane_speedup_f64=mean_speedup))
+    print(f"kernel value_sum mean lane speedup (f64): {mean_speedup:5.2f}x"
+          " (log is the lane-serial-ln outlier; every grad row is full-width)")
+
+
+def perf5_objective_section(rows):
+    """§Perf-5 (a): the sharded oracle objective.  Same measured stage
+    split as the §Perf-4 model, re-partitioned: phase A and the
+    objective move from the serial to the parallel side (the objective
+    through the per-port reward kernels + ascending serial merge, phase
+    A through the per-port quota/k* fan-out), leaving only the ||grad||
+    replay serial —
+
+        PR 4:  t4(S) = (phase_a + norm + objective) + (grad+ascent+proj)/S + 3d
+        PR 5:  t5(S) = norm + (phase_a + grad + ascent + proj + objective)/S + 5d
+
+    The `vs_pr4` column is the per-iteration win of this PR at equal
+    shard count; acceptance asks >= 1.3x at S = 8 on the large scale."""
+    for name, L, R, K, density, warm, iters in [
+        ("default 10x128x6", 10, 128, 6, 3.0, 3, 20),
+        ("large 100x1024x6", 100, 1024, 6, 3.0, 2, 10),
+    ]:
+        p = make_problem(L, R, K, density, seed=2023)
+        st = oracle_solve_stage_times(p, warm, iters)
+        serial4 = st["phase_a_serial"] + st["norm_serial"] + st["objective_serial"]
+        par4 = st["grad_parallel"] + st["ascent_parallel"] + st["project_parallel"]
+        serial5 = st["norm_serial"]
+        par5 = (st["phase_a_serial"] + st["grad_parallel"] + st["ascent_parallel"]
+                + st["project_parallel"] + st["objective_serial"])
+        t1 = serial5 + par5
+        for shards in (1, 2, 4, 8):
+            t4 = serial4 + par4 / shards
+            t5 = serial5 + par5 / shards
+            if shards > 1:
+                t4 += ORACLE_DISPATCHES_PER_ITER * DISPATCH_US * 1e-6
+                t5 += ORACLE_DISPATCHES_PER_ITER_P5 * DISPATCH_US * 1e-6
+            rows.append(dict(name=name, section="sharded-objective-model",
+                             shards=shards, modeled_ms=t5 * 1e3,
+                             serial_ms=serial5 * 1e3, parallel_ms=par5 * 1e3,
+                             speedup=t1 / t5, vs_pr4=t4 / t5))
+            print(f"solve_oracle iter(obj-sharded) shard{shards} {name:<20}"
+                  f" modeled {t5*1e3:9.3f} ms   speedup {t1/t5:6.2f}x"
+                  f"   vs PR4 {t4/t5:5.2f}x")
+
+        # the objective evaluation alone (matches the bench's
+        # `oracle objective shard{S}` rows): obj/S + one dispatch
+        obj = st["objective_serial"]
+        for shards in (1, 2, 4, 8):
+            t_o = obj / shards + (DISPATCH_US * 1e-6 if shards > 1 else 0.0)
+            rows.append(dict(name=name, section="sharded-objective-eval",
+                             shards=shards, modeled_ms=t_o * 1e3,
+                             speedup=obj / t_o))
+            print(f"oracle objective shard{shards} {name:<20}"
+                  f" modeled {t_o*1e3:9.3f} ms   speedup {obj/t_o:6.2f}x")
+
+
 def traffic_section(rows):
     """Sparse-figure regime check: the same pr2 decay slot at the figure
     harnesses' two traffic levels.  The ρ = 0.1 column is what the new
@@ -1099,12 +1273,15 @@ def main():
     sharded_section(sharded_rows)
     perf4_rows = []
     perf4_section(perf4_rows)
+    perf5_rows = []
+    perf5_objective_section(perf5_rows)
+    perf5_kernel_section(perf5_rows)
     traffic_rows = []
     traffic_section(traffic_rows)
     with open("perf_proxy.json", "w") as f:
         json.dump(dict(layout=layout_rows, pipeline=pipeline_rows,
                        sharded=sharded_rows, perf4=perf4_rows,
-                       traffic=traffic_rows), f, indent=2)
+                       perf5=perf5_rows, traffic=traffic_rows), f, indent=2)
     print("wrote perf_proxy.json")
 
     # refresh the cross-PR perf record with proxy provenance (overwritten
@@ -1138,17 +1315,41 @@ def main():
             ns_per_op=round(row["modeled_ms"] * 1e6, 1),
             ns_per_op_min=round(row["modeled_ms"] * 1e6, 1),
             std_ns=0.0))
-    for row in perf4_rows:
-        if row["section"] == "sharded-oracle-model" and "large" in row["name"]:
+    for row in perf5_rows:
+        if row["section"] == "sharded-objective-model" and "large" in row["name"]:
             # matches benches/hot_path.rs's solve_oracle section: 5
-            # iterations per timed op
+            # iterations per timed op; the §Perf-5 model (objective +
+            # phase A sharded) supersedes the §Perf-4 rows — the Rust
+            # solve now runs the sharded objective
             entries.append(dict(
                 name=f"solve_oracle 5it oracle shard{row['shards']} {row['name']}",
                 iters=0,
                 ns_per_op=round(row["modeled_ms"] * 5 * 1e6, 1),
                 ns_per_op_min=round(row["modeled_ms"] * 5 * 1e6, 1),
                 std_ns=0.0))
-        elif row["section"] == "lineup-budget-model":
+        elif row["section"] == "sharded-objective-eval" and "large" in row["name"]:
+            entries.append(dict(
+                name=f"oracle objective shard{row['shards']} {row['name']}",
+                iters=0,
+                ns_per_op=round(row["modeled_ms"] * 1e6, 1),
+                ns_per_op_min=round(row["modeled_ms"] * 1e6, 1),
+                std_ns=0.0))
+        elif row["section"] == "kernel-lane-model" and row["kind"] != "mean":
+            n = row["n"]
+            entries.append(dict(
+                name=f"kernel {row['kernel']} ref {row['kind']} n={n}",
+                iters=0,
+                ns_per_op=round(row["scalar_ms"] * 1e6, 1),
+                ns_per_op_min=round(row["scalar_ms_min"] * 1e6, 1),
+                std_ns=0.0))
+            entries.append(dict(
+                name=f"kernel {row['kernel']} lane {row['kind']} n={n}",
+                iters=0,
+                ns_per_op=round(row["modeled_lane_ms"] * 1e6, 1),
+                ns_per_op_min=round(row["modeled_lane_ms"] * 1e6, 1),
+                std_ns=0.0))
+    for row in perf4_rows:
+        if row["section"] == "lineup-budget-model":
             # matches the run_lineup bench rows: 50 slots per timed op
             entries.append(dict(
                 name=f"run_lineup 5pol h50 budget {row['split']} {row['name']}",
@@ -1171,9 +1372,14 @@ def main():
               "SPerf-3), not timed: the proxy is single-threaded Python; the "
               "real rows come from benches/hot_path.rs's ShardedLeader section. "
               "The solve_oracle shard{1,2,4,8} and run_lineup budget rows are "
-              "likewise MODELED (SPerf-4 two-level Amdahl: t(S) = serial + "
-              "parallel/S per oracle iteration, ceil(N/runs) waves of the "
-              "sharded slot for the lineup)."),
+              "likewise MODELED (SPerf-5 supersedes the SPerf-4 oracle shape: "
+              "t(S) = norm + (phase_a + grad + ascent + proj + objective)/S "
+              "per iteration now that the objective and phase A are sharded; "
+              "ceil(N/runs) waves of the sharded slot for the lineup). The "
+              "SPerf-5 `kernel * lane` rows divide the measured scalar row by "
+              "the documented op-cost lane model (f64x4; ln lane-serial) — "
+              "time the real pair with `cargo bench --bench hot_path` with "
+              "and without `--features simd`."),
         entries=entries,
     )
     with open("BENCH_hot_path.json", "w") as f:
