@@ -20,7 +20,9 @@
 use ogasched::benchlib::{time_fn, Reporter};
 use ogasched::config::Scenario;
 use ogasched::ExecBudget;
-use ogasched::coordinator::{ClusterState, ShardedLeader};
+use ogasched::coordinator::{ClusterState, ShardPlan, ShardedLeader};
+use ogasched::graph::Bipartite;
+use ogasched::model::Problem;
 use ogasched::oga::dense_ref::DenseOgaState;
 use ogasched::oga::gradient::{grad_norm, gradient, GradScratch};
 use ogasched::oga::projection::{project, project_instances};
@@ -409,6 +411,52 @@ fn main() {
                 },
             ));
         }
+    }
+
+    // ---- §Churn: one topology edition, incremental vs rebuild ----
+    // Each iteration produces two editions (instance fails, then
+    // recovers).  "incremental" mutates the problem in place
+    // (remove/restore + reindex) and refreshes the shard plan under the
+    // re-plan epoch rule; "rebuild" reconstructs Problem + LPT plan
+    // from scratch for each edition — the two churn-parity arms, timed.
+    {
+        let mut scenario = Scenario::large_scale();
+        scenario.horizon = 1;
+        let p = synthesize(&scenario);
+        let shards = 8usize;
+        let e0: Vec<(usize, usize)> = (0..p.num_edges())
+            .map(|e| (p.graph.edge_port[e], p.graph.edge_instance[e]))
+            .collect();
+        let r_fail = 7usize;
+        let back: Vec<(usize, usize)> =
+            e0.iter().copied().filter(|&(_, r)| r == r_fail).collect();
+        let live: Vec<(usize, usize)> =
+            e0.iter().copied().filter(|&(_, r)| r != r_fail).collect();
+        {
+            let mut cur = p.clone();
+            let plan = ShardPlan::build(&cur, shards);
+            rep.record(time_fn("churn epoch incremental large 100x1024x6", 3, 30, || {
+                cur.remove_instance_edges(r_fail).expect("in range");
+                let refreshed = plan.refresh(&cur).expect("same R");
+                std::hint::black_box(refreshed.imbalance());
+                cur.restore_edges(&back).expect("in range");
+                std::hint::black_box(plan.refresh(&cur).expect("same R"));
+            }));
+        }
+        rep.record(time_fn("churn epoch rebuild large 100x1024x6", 3, 30, || {
+            for edges in [&live, &e0] {
+                let edition = Problem::new(
+                    Bipartite::from_edges(p.num_ports(), p.num_instances(), edges),
+                    p.num_resources,
+                    p.demand.clone(),
+                    p.capacity.clone(),
+                    p.alpha.clone(),
+                    p.kind.clone(),
+                    p.beta.clone(),
+                );
+                std::hint::black_box(ShardPlan::build(&edition, shards));
+            }
+        }));
     }
 
     // machine-readable perf record at the repo root (tracked across PRs)

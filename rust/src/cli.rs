@@ -83,9 +83,22 @@ COMMANDS:
                                      runs x N workers per run (0 = auto
                                      from PALLAS_WORKERS/cores; --workers N
                                      is the legacy alias for --shards)
+               fault injection (any non-zero rate arms mid-horizon churn):
+               --fault-instance-rate F --fault-port-rate F
+               --fault-rack-rate F --fault-rack-size N
+               --fault-recover-rate F --fault-seed N
+               --fault-release <drain|release>   in-flight units on a failed
+                                     instance drain at the next full commit
+                                     or are force-released immediately
+               --replan-threshold F  shard re-plan when load imbalance
+                                     (max shard load x shards / total)
+                                     exceeds F (>= 1.0)
+               --churn-rebuild       use the from-scratch rebuild arm
+                                     instead of incremental maintenance
+                                     (bitwise-identical by contract)
     compare    run the full paper lineup on one scenario (same options)
     figure     regenerate a paper figure/table:
-               ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|all>
+               ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|churn|all>
                --horizon N   override T (0 = paper scale)
     artifacts  check AOT artifacts and run a PJRT smoke step
     help       show this help
@@ -94,6 +107,7 @@ EXAMPLES:
     ogasched compare --horizon 2000
     ogasched figure fig2 --horizon 1000
     ogasched run --policy ogasched-hlo --horizon 500
+    ogasched run --fault-instance-rate 0.02 --fault-recover-rate 0.2 --horizon 500
 ";
 
 #[cfg(test)]

@@ -4,6 +4,7 @@
 //! TOML-subset config file (see `examples/configs/*.toml`).
 
 use crate::config::value::Doc;
+use crate::coordinator::ReleaseMode;
 use crate::oga::utilities::UtilityMix;
 use crate::utils::pool::ExecBudget;
 
@@ -25,6 +26,81 @@ impl GraphSpec {
             GraphSpec::RightRegular(d) => format!("regular-{d}"),
             GraphSpec::Density(d) => format!("density-{d}"),
         }
+    }
+}
+
+/// Fault-injection severity knobs (`[faults]` in config files; consumed
+/// by `sim::faults`).  All rates are per-slot probabilities; the default
+/// config injects nothing, so plain scenarios are churn-free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-slot probability of a single instance crash.
+    pub instance_rate: f64,
+    /// Per-slot, per-failed-entity recovery / re-arrival probability.
+    pub recover_rate: f64,
+    /// Per-slot probability of a port-class departure.
+    pub port_rate: f64,
+    /// Per-slot probability of a correlated rack burst (a contiguous
+    /// block of instances failing together).
+    pub rack_rate: f64,
+    /// Instances felled by one rack burst.
+    pub rack_size: usize,
+    /// What happens to a failed instance's in-flight units: `Drain`
+    /// lets them expire with the slot cycle, `Release` frees them
+    /// immediately (see `coordinator::ReleaseMode`).
+    pub release: ReleaseMode,
+    /// Re-plan epoch rule: after churn the shard plan is refreshed in
+    /// place, and LPT is re-run from scratch only when the refreshed
+    /// plan's load imbalance (max/mean) exceeds this threshold.
+    pub replan_threshold: f64,
+    /// Seed of the fault event stream (independent of the scenario
+    /// seed, so the same workload can be replayed under many fault
+    /// trajectories).
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            instance_rate: 0.0,
+            recover_rate: 0.05,
+            port_rate: 0.0,
+            rack_rate: 0.0,
+            rack_size: 4,
+            release: ReleaseMode::Drain,
+            replan_threshold: 1.5,
+            seed: 77,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does this config inject any faults at all?
+    pub fn enabled(&self) -> bool {
+        self.instance_rate > 0.0 || self.port_rate > 0.0 || self.rack_rate > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("faults.instance_rate", self.instance_rate),
+            ("faults.recover_rate", self.recover_rate),
+            ("faults.port_rate", self.port_rate),
+            ("faults.rack_rate", self.rack_rate),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} {v} outside [0,1]"));
+            }
+        }
+        if self.rack_size == 0 {
+            return Err("faults.rack_size must be > 0".into());
+        }
+        if self.replan_threshold < 1.0 {
+            return Err(format!(
+                "faults.replan_threshold {} below 1.0 (max/mean imbalance)",
+                self.replan_threshold
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -60,6 +136,8 @@ pub struct Scenario {
     /// (derived from `PALLAS_WORKERS` / available parallelism by
     /// `ExecBudget::resolve`).
     pub parallel: ExecBudget,
+    /// Fault-injection severity (`[faults]`; off by default).
+    pub faults: FaultConfig,
 }
 
 impl Default for Scenario {
@@ -84,6 +162,7 @@ impl Default for Scenario {
             utility_mix: UtilityMix::Mixed,
             seed: 2023,
             parallel: ExecBudget::auto(),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -157,6 +236,7 @@ impl Scenario {
                 return Err(format!("regular degree {d} outside [1, |L|]"));
             }
         }
+        self.faults.validate()?;
         Ok(())
     }
 
@@ -168,6 +248,9 @@ impl Scenario {
             "contention", "alpha_range", "beta_range", "eta0", "decay", "graph",
             "graph_degree", "graph_density", "utility_mix", "seed", "workers",
             "parallel.runs", "parallel.shards",
+            "faults.instance_rate", "faults.recover_rate", "faults.port_rate",
+            "faults.rack_rate", "faults.rack_size", "faults.release",
+            "faults.replan_threshold", "faults.seed",
         ];
         for key in doc.entries.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -196,6 +279,25 @@ impl Scenario {
         let mix_name = doc.str_or("utility_mix", "mixed")?;
         let utility_mix = UtilityMix::from_name(mix_name)
             .ok_or_else(|| format!("utility_mix: unknown `{mix_name}`"))?;
+        let df = d.faults;
+        let faults = FaultConfig {
+            instance_rate: doc.f64_or("faults.instance_rate", df.instance_rate)?,
+            recover_rate: doc.f64_or("faults.recover_rate", df.recover_rate)?,
+            port_rate: doc.f64_or("faults.port_rate", df.port_rate)?,
+            rack_rate: doc.f64_or("faults.rack_rate", df.rack_rate)?,
+            rack_size: doc.usize_or("faults.rack_size", df.rack_size)?,
+            release: match doc.str_or("faults.release", "drain")? {
+                "drain" => ReleaseMode::Drain,
+                "release" => ReleaseMode::Release,
+                other => {
+                    return Err(format!(
+                        "faults.release: unknown mode `{other}` (drain|release)"
+                    ))
+                }
+            },
+            replan_threshold: doc.f64_or("faults.replan_threshold", df.replan_threshold)?,
+            seed: doc.usize_or("faults.seed", df.seed as usize)? as u64,
+        };
         let s = Scenario {
             name: doc.str_or("name", &d.name)?.to_string(),
             num_ports: doc.usize_or("ports", d.num_ports)?,
@@ -220,6 +322,7 @@ impl Scenario {
                     doc.usize_or("workers", d.parallel.shards)?,
                 )?,
             },
+            faults,
         };
         s.validate()?;
         Ok(s)
@@ -291,6 +394,30 @@ mod tests {
         // ... and the [parallel] section wins when both are present
         let s = Scenario::from_toml("workers = 3\n[parallel]\nshards = 5\n").unwrap();
         assert_eq!(s.parallel.shards, 5);
+    }
+
+    #[test]
+    fn faults_section_parses_and_defaults_off() {
+        let s = Scenario::default();
+        assert!(!s.faults.enabled());
+        let s = Scenario::from_toml(
+            "[faults]\ninstance_rate = 0.02\nrack_rate = 0.005\nrack_size = 3\n\
+             release = \"release\"\nreplan_threshold = 1.2\nseed = 9\n",
+        )
+        .unwrap();
+        assert!(s.faults.enabled());
+        assert_eq!(s.faults.instance_rate, 0.02);
+        assert_eq!(s.faults.rack_size, 3);
+        assert_eq!(s.faults.release, ReleaseMode::Release);
+        assert_eq!(s.faults.replan_threshold, 1.2);
+        assert_eq!(s.faults.seed, 9);
+        // unspecified fault knobs keep their defaults
+        assert_eq!(s.faults.recover_rate, FaultConfig::default().recover_rate);
+        // bad values fail loudly
+        assert!(Scenario::from_toml("[faults]\ninstance_rate = 1.5\n").is_err());
+        assert!(Scenario::from_toml("[faults]\nrelease = \"maybe\"\n").is_err());
+        assert!(Scenario::from_toml("[faults]\nreplan_threshold = 0.5\n").is_err());
+        assert!(Scenario::from_toml("[faults]\nrack_size = 0\n").is_err());
     }
 
     #[test]

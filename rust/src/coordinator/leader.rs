@@ -101,9 +101,27 @@ impl<'p> Leader<'p> {
         }
     }
 
+    /// Resume a run with a ledger carried over from an earlier segment
+    /// (`sim::faults` drives segment-wise horizons across topology
+    /// editions; the ledger's [R, K] shape is churn-invariant).
+    pub fn resume(problem: &'p Problem, state: ClusterState) -> Self {
+        Leader { problem, state, strict: cfg!(debug_assertions) }
+    }
+
+    /// Hand the ledger to the next segment's leader.
+    pub fn into_state(self) -> ClusterState {
+        self.state
+    }
+
     /// The cluster ledger (diagnostics and the shard-parity suite).
     pub fn state(&self) -> &ClusterState {
         &self.state
+    }
+
+    /// Mutable ledger access for the fault driver (`sim::faults` flags
+    /// failed instances / forces releases between segments).
+    pub fn state_mut(&mut self) -> &mut ClusterState {
+        &mut self.state
     }
 
     /// Run `policy` against `arrivals` for `horizon` slots.  Does not

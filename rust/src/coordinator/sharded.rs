@@ -142,6 +142,72 @@ impl ShardPlan {
         ShardPlan { num_shards: s_n, owner, shard_instances, loads, port_ptr, port_edges }
     }
 
+    /// Rebuild the plan's *derived* structures against a mutated graph,
+    /// keeping the instance→shard assignment (`sim::faults`' cheap
+    /// re-plan path).  Every edge id shifts when the edge set changes,
+    /// so the per-shard port CSRs and the loads must be re-derived even
+    /// when ownership is unchanged.
+    pub fn refresh(&self, problem: &Problem) -> Result<ShardPlan, String> {
+        let r_n = problem.num_instances();
+        if self.owner.len() != r_n {
+            return Err(format!(
+                "refresh: plan covers {} instances, problem has {r_n}",
+                self.owner.len()
+            ));
+        }
+        let k = problem.num_resources as u64;
+        let mut loads = vec![0u64; self.num_shards];
+        for r in 0..r_n {
+            loads[self.owner[r] as usize] +=
+                problem.graph.instance_degree(r) as u64 * k;
+        }
+        let g = &problem.graph;
+        let l_n = problem.num_ports();
+        let mut port_ptr = Vec::with_capacity(self.num_shards);
+        let mut port_edges = Vec::with_capacity(self.num_shards);
+        for s in 0..self.num_shards {
+            let mut ptr = Vec::with_capacity(l_n + 1);
+            let mut edges = Vec::new();
+            ptr.push(0);
+            for l in 0..l_n {
+                for e in g.port_edges(l) {
+                    if self.owner[g.edge_instance[e]] == s as u32 {
+                        edges.push(e);
+                    }
+                }
+                ptr.push(edges.len());
+            }
+            port_ptr.push(ptr);
+            port_edges.push(edges);
+        }
+        let plan = ShardPlan {
+            num_shards: self.num_shards,
+            owner: self.owner.clone(),
+            shard_instances: self.shard_instances.clone(),
+            loads,
+            port_ptr,
+            port_edges,
+        };
+        if cfg!(debug_assertions) {
+            if let Err(e) = plan.validate(problem) {
+                return Err(format!("refresh produced an invalid plan: {e}"));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Load imbalance: max shard load over the mean (1.0 = perfectly
+    /// balanced).  `sim::faults` re-runs LPT only when churn pushes this
+    /// past the configured threshold — the re-plan epoch rule.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.loads.iter().copied().max().unwrap_or(0);
+        let total: u64 = self.loads.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        max as f64 * self.num_shards as f64 / total as f64
+    }
+
     #[inline]
     pub fn num_shards(&self) -> usize {
         self.num_shards
@@ -329,12 +395,53 @@ impl<'p> ShardedLeader<'p> {
         }
     }
 
+    /// Resume a run with a ledger and (optionally) the previous
+    /// segment's shard ledgers carried across a topology edition
+    /// (`sim::faults`).  When a previous plan is handed over, each
+    /// instance's authoritative usage row migrates from its old owner's
+    /// ledger to its new owner's in ascending instance order — a fixed
+    /// hand-off sequence, so any two runs that carry the same rows
+    /// produce bit-identical worker ledgers regardless of worker budget.
+    pub fn resume(
+        problem: &'p Problem,
+        plan: Arc<ShardPlan>,
+        state: ClusterState,
+        previous: Option<(Arc<ShardPlan>, Vec<ShardLedger>)>,
+    ) -> Self {
+        let mut leader = Self::with_plan(problem, plan);
+        leader.state = state;
+        if let Some((old_plan, old_ledgers)) = previous {
+            let k_n = problem.num_resources;
+            for r in 0..problem.num_instances() {
+                let from = &old_ledgers[old_plan.owner(r)];
+                let s = leader.plan.owner(r);
+                let to = &mut leader.workers[s].ledger;
+                to.usage[r * k_n..(r + 1) * k_n]
+                    .copy_from_slice(from.row_of(r, k_n));
+            }
+        }
+        leader
+    }
+
+    /// Tear down into the carryable parts (ledger, plan, shard ledgers)
+    /// for the next segment's [`ShardedLeader::resume`].
+    pub fn into_parts(self) -> (ClusterState, Arc<ShardPlan>, Vec<ShardLedger>) {
+        let ledgers = self.workers.into_iter().map(|w| w.ledger).collect();
+        (self.state, self.plan, ledgers)
+    }
+
     pub fn plan(&self) -> &Arc<ShardPlan> {
         &self.plan
     }
 
     pub fn state(&self) -> &ClusterState {
         &self.state
+    }
+
+    /// Mutable ledger access for the fault driver (`sim::faults` flags
+    /// failed instances / forces releases between segments).
+    pub fn state_mut(&mut self) -> &mut ClusterState {
+        &mut self.state
     }
 
     /// One slot: decide → sharded commit → sharded reward → release.
@@ -666,6 +773,67 @@ mod tests {
                     leader.state().remaining_at(r, k),
                     serial.state().remaining_at(r, k),
                     "remaining({r},{k}) diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_keeps_owners_and_rebuilds_edges() {
+        let mut p = synthesize(&Scenario::small());
+        let plan = ShardPlan::build(&p, 3);
+        let removed = p.remove_instance_edges(0).unwrap();
+        let refreshed = plan.refresh(&p).unwrap();
+        refreshed.validate(&p).unwrap();
+        assert_eq!(refreshed.num_shards(), plan.num_shards());
+        for r in 0..p.num_instances() {
+            assert_eq!(refreshed.owner(r), plan.owner(r));
+        }
+        // the failed instance contributes no load or edges any more
+        let s0 = refreshed.owner(0);
+        assert!(refreshed.load(s0) < plan.load(s0));
+        p.restore_edges(&removed).unwrap();
+        let back = refreshed.refresh(&p).unwrap();
+        back.validate(&p).unwrap();
+        for s in 0..plan.num_shards() {
+            assert_eq!(back.load(s), plan.load(s));
+        }
+        assert!((back.imbalance() - plan.imbalance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resume_migrates_ledger_rows_deterministically() {
+        let p = synthesize(&Scenario::small());
+        let horizon = 15;
+        // segment 1 under one plan
+        let mut leader = ShardedLeader::new(&p, 2);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.8, 9);
+        leader.run(&mut pol, &mut arr, horizon);
+        let (state, old_plan, ledgers) = leader.into_parts();
+        // hand off to a differently sharded plan: remaining capacity is
+        // unchanged and a continued run matches the serial continuation
+        let new_plan = Arc::new(ShardPlan::build(&p, 5));
+        let mut resumed = ShardedLeader::resume(
+            &p,
+            Arc::clone(&new_plan),
+            state,
+            Some((old_plan, ledgers)),
+        );
+        let run2 = resumed.run(&mut pol, &mut arr, horizon);
+
+        let mut serial = Leader::new(&p);
+        let mut pol_s = Fairness::new();
+        let mut arr_s = Bernoulli::uniform(p.num_ports(), 0.8, 9);
+        serial.run(&mut pol_s, &mut arr_s, horizon);
+        let want = serial.run(&mut pol_s, &mut arr_s, horizon);
+        assert_eq!(run2.cumulative_reward, want.cumulative_reward);
+        for r in 0..p.num_instances() {
+            for k in 0..p.num_resources {
+                assert_eq!(
+                    resumed.state().remaining_at(r, k),
+                    serial.state().remaining_at(r, k),
+                    "remaining({r},{k}) diverged after hand-off"
                 );
             }
         }

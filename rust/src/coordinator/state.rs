@@ -105,6 +105,18 @@ pub(crate) fn commit_row_into(
     clamped
 }
 
+/// What happens to a failed instance's in-flight units (`sim::faults`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReleaseMode {
+    /// Let the current occupancy expire with the slot cycle: usage is
+    /// retained until the next commit re-derives the row (which, with
+    /// the instance's channels gone, derives zero).
+    Drain,
+    /// Forcibly release: zero the usage row immediately, folding the
+    /// delta into the compensated running Σ.
+    Release,
+}
+
 /// Capacity accounting for one slot at a time.
 #[derive(Clone, Debug)]
 pub struct ClusterState {
@@ -122,6 +134,9 @@ pub struct ClusterState {
     total_comp: f64,
     /// [K] scratch row for `commit_row`.
     row: Vec<f64>,
+    /// [R] fault mask (`sim::faults`): a failed instance's remaining
+    /// capacity reads zero until it recovers.
+    failed: Vec<bool>,
     k_n: usize,
     in_slot: bool,
 }
@@ -134,9 +149,53 @@ impl ClusterState {
             total_units: 0.0,
             total_comp: 0.0,
             row: vec![0.0; problem.num_resources],
+            failed: vec![false; problem.num_instances()],
             k_n: problem.num_resources,
             in_slot: false,
         }
+    }
+
+    /// Mark instance `r` failed.  `Drain` only flags it (its stale usage
+    /// expires at the next commit, which re-derives the row as zero once
+    /// the instance's channels are gone); `Release` zeroes the usage row
+    /// now, replaying the delta through the compensated Σ.  Errors name
+    /// the instance so a bad fault event degrades with a diagnostic.
+    pub fn fail_instance(&mut self, r: usize, mode: ReleaseMode) -> Result<(), String> {
+        if r >= self.failed.len() {
+            return Err(format!(
+                "fail_instance: instance {r} out of range (R={})",
+                self.failed.len()
+            ));
+        }
+        self.failed[r] = true;
+        if mode == ReleaseMode::Release {
+            let base = r * self.k_n;
+            for k in 0..self.k_n {
+                let v = self.usage[base + k];
+                if v != 0.0 {
+                    kahan_add(&mut self.total_units, &mut self.total_comp, -v);
+                    self.usage[base + k] = 0.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Clear instance `r`'s fault flag (recovery).
+    pub fn recover_instance(&mut self, r: usize) -> Result<(), String> {
+        if r >= self.failed.len() {
+            return Err(format!(
+                "recover_instance: instance {r} out of range (R={})",
+                self.failed.len()
+            ));
+        }
+        self.failed[r] = false;
+        Ok(())
+    }
+
+    /// Is instance `r` currently failed?
+    pub fn is_failed(&self, r: usize) -> bool {
+        self.failed[r]
     }
 
     /// Commit a decision for the slot (full sweep over every instance).
@@ -244,6 +303,9 @@ impl ClusterState {
     }
 
     pub fn remaining_at(&self, r: usize, k: usize) -> f64 {
+        if self.failed[r] {
+            return 0.0;
+        }
         let i = r * self.k_n + k;
         if self.in_slot {
             self.capacity[i] - self.usage[i]
@@ -401,6 +463,60 @@ mod tests {
         // after release every remaining reads full capacity again even
         // though usage is retained internally for the next delta commit
         assert_eq!(st.remaining_at(r0, 0), p.capacity_at(r0, 0));
+    }
+
+    #[test]
+    fn fail_release_zeroes_usage_and_masks_remaining() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let r0 = p.graph.ports_to_instances[0][0];
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, r0, 0)] = 1.5;
+        st.commit_instances(&p, &mut y, &[r0]);
+        st.release();
+        st.fail_instance(r0, ReleaseMode::Release).unwrap();
+        assert!(st.is_failed(r0));
+        assert_eq!(st.remaining_at(r0, 0), 0.0);
+        assert_eq!(st.committed_units(), 0.0);
+        st.recover_instance(r0).unwrap();
+        assert!(!st.is_failed(r0));
+        assert_eq!(st.remaining_at(r0, 0), p.capacity_at(r0, 0));
+    }
+
+    #[test]
+    fn fail_drain_retains_usage_until_next_commit() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let r0 = p.graph.ports_to_instances[0][0];
+        let mut y = vec![0.0; p.decision_len()];
+        y[p.idx(0, r0, 0)] = 1.5;
+        st.commit_instances(&p, &mut y, &[r0]);
+        st.release();
+        st.fail_instance(r0, ReleaseMode::Drain).unwrap();
+        // draining: the units stay on the books ...
+        assert!((st.committed_units() - 1.5).abs() < 1e-12);
+        // ... but the failed instance offers no capacity
+        assert_eq!(st.remaining_at(r0, 0), 0.0);
+        // the next full sweep of a tensor without r0's units drains it
+        let mut y2 = vec![0.0; p.decision_len()];
+        st.commit(&p, &mut y2);
+        st.release();
+        assert_eq!(st.committed_units(), 0.0);
+    }
+
+    #[test]
+    fn fault_errors_name_the_instance() {
+        let p = synthesize(&Scenario::small());
+        let mut st = ClusterState::new(&p);
+        let r_n = p.num_instances();
+        assert!(st
+            .fail_instance(r_n + 3, ReleaseMode::Drain)
+            .unwrap_err()
+            .contains(&format!("instance {}", r_n + 3)));
+        assert!(st
+            .recover_instance(r_n)
+            .unwrap_err()
+            .contains(&format!("instance {r_n}")));
     }
 
     #[test]

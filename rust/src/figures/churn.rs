@@ -1,0 +1,116 @@
+//! Churn sweep — the fig2 lineup under mid-horizon fault injection
+//! (§Churn).
+//!
+//! Every policy runs twice on the Tab. 2 default cluster: once fault-
+//! free and once under the scenario's seeded `FaultPlan` (instance
+//! crashes with recovery, port churn, occasional rack bursts), through
+//! the incremental arm of `sim::faults::run_churned`.  The table
+//! reports the reward each policy gives up to churn; the interesting
+//! ordering claim is that OGASCHED's lead over the reactive heuristics
+//! survives topology churn — its carried-over coordinates re-project
+//! onto every new edition instead of restarting from zero.
+
+use crate::config::{FaultConfig, Scenario};
+use crate::figures::{results_dir, FigureOutput};
+use crate::metrics;
+use crate::schedulers;
+use crate::sim::{self, faults};
+use crate::traces::synthesize;
+use crate::utils::table::Table;
+
+pub fn scenario(horizon_override: usize) -> Scenario {
+    let mut s = Scenario::default();
+    s.name = "churn".into();
+    s.horizon = if horizon_override > 0 { horizon_override } else { 4000 };
+    s.faults = FaultConfig {
+        instance_rate: 0.01,
+        recover_rate: 0.1,
+        port_rate: 0.005,
+        rack_rate: 0.002,
+        rack_size: 4,
+        ..FaultConfig::default()
+    };
+    s
+}
+
+pub fn run(horizon_override: usize) -> FigureOutput {
+    let s = scenario(horizon_override);
+    let clean_s = Scenario { faults: FaultConfig::default(), ..s.clone() };
+    let clean = sim::run_paper_lineup(&clean_s);
+
+    let problem = synthesize(&s);
+    let mut lineup = schedulers::paper_lineup(&problem, s.eta0, s.decay, s.parallel);
+    let churned: Vec<faults::ChurnOutcome> = lineup
+        .iter_mut()
+        .map(|pol| {
+            faults::run_churned_scenario(&s, pol.as_mut(), false)
+                .expect("generated fault plans stay in range")
+        })
+        .collect();
+
+    let names: Vec<&str> = churned.iter().map(|o| o.result.policy.as_str()).collect();
+    let avg_curves: Vec<Vec<f64>> =
+        churned.iter().map(|o| metrics::avg_reward_curve(&o.result)).collect();
+    let dir = results_dir();
+    let path = dir.join("churn_avg_reward.csv");
+    let _ = metrics::curves_to_csv(&names, &avg_curves, 400).write_file(&path);
+
+    let mut table =
+        Table::new(&["policy", "clean avg", "churned avg", "churn cost", "cumulative"]);
+    for (out, base) in churned.iter().zip(&clean) {
+        let clean_avg = base.avg_reward();
+        let churn_avg = out.result.avg_reward();
+        let cost = if clean_avg.abs() > 1e-12 {
+            format!("{:+.2}%", (churn_avg - clean_avg) / clean_avg * 100.0)
+        } else {
+            "-".into()
+        };
+        table.push(&[
+            out.result.policy.clone(),
+            format!("{clean_avg:.3}"),
+            format!("{churn_avg:.3}"),
+            cost,
+            format!("{:.1}", out.result.cumulative_reward),
+        ]);
+    }
+    let bookkeeping = &churned[0];
+    FigureOutput {
+        title: "Churn — lineup under instance/port fault injection".into(),
+        rendered: format!(
+            "T={} faults: instance={} recover={} port={} rack={}x{} \
+             (events={} editions={} replans={}, incremental arm)\n{}",
+            s.horizon,
+            s.faults.instance_rate,
+            s.faults.recover_rate,
+            s.faults.port_rate,
+            s.faults.rack_rate,
+            s.faults.rack_size,
+            bookkeeping.events,
+            bookkeeping.editions,
+            bookkeeping.replans,
+            table.render()
+        ),
+        csv_paths: vec![path],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_figure_runs_the_lineup() {
+        let out = run(160);
+        assert!(out.rendered.contains("OGASCHED"));
+        assert!(out.rendered.contains("events="));
+        assert_eq!(out.csv_paths.len(), 1);
+    }
+
+    #[test]
+    fn churn_scenario_arms_fault_injection() {
+        let s = scenario(0);
+        assert!(s.faults.enabled());
+        assert_eq!(s.horizon, 4000);
+        s.validate().unwrap();
+    }
+}

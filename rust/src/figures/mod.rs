@@ -3,6 +3,7 @@
 //! runs the relevant sweep, prints the paper-style table, and writes the
 //! plotted series as CSV under `results/`.
 
+pub mod churn;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
@@ -52,11 +53,12 @@ pub fn run_by_id(id: &str, horizon_override: usize) -> Result<FigureOutput, Stri
         "table3" => Ok(table3::run(horizon_override)),
         "regret" => Ok(regret_fig::run(horizon_override)),
         "sparse" => Ok(sparse::run(horizon_override)),
+        "churn" => Ok(churn::run(horizon_override)),
         other => Err(format!(
-            "unknown figure id `{other}` (have fig2..fig7, table3, regret, sparse)"
+            "unknown figure id `{other}` (have fig2..fig7, table3, regret, sparse, churn)"
         )),
     }
 }
 
-pub const ALL_IDS: [&str; 9] =
-    ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table3", "regret", "sparse"];
+pub const ALL_IDS: [&str; 10] =
+    ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table3", "regret", "sparse", "churn"];

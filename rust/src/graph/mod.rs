@@ -62,45 +62,142 @@ impl Bipartite {
             v.sort_unstable();
         }
 
-        // --- edge-major CSR index (port-major edge ids) ---
-        let mut port_ptr = Vec::with_capacity(num_ports + 1);
-        port_ptr.push(0);
-        let mut edge_instance = Vec::new();
-        let mut edge_port = Vec::new();
-        for (l, rs) in ports_to_instances.iter().enumerate() {
-            for &r in rs {
-                edge_instance.push(r);
-                edge_port.push(l);
-            }
-            port_ptr.push(edge_instance.len());
-        }
-        // counting sort of edge ids by instance; port-major iteration
-        // keeps each instance's list ascending in port
-        let mut instance_ptr = vec![0usize; num_instances + 1];
-        for &r in &edge_instance {
-            instance_ptr[r + 1] += 1;
-        }
-        for r in 0..num_instances {
-            instance_ptr[r + 1] += instance_ptr[r];
-        }
-        let mut cursor = instance_ptr.clone();
-        let mut instance_edges = vec![0usize; edge_instance.len()];
-        for (e, &r) in edge_instance.iter().enumerate() {
-            instance_edges[cursor[r]] = e;
-            cursor[r] += 1;
-        }
-
-        Bipartite {
+        let mut g = Bipartite {
             num_ports,
             num_instances,
             ports_to_instances,
             instances_to_ports,
             mask,
-            port_ptr,
-            edge_instance,
-            edge_port,
-            instance_ptr,
-            instance_edges,
+            port_ptr: Vec::new(),
+            edge_instance: Vec::new(),
+            edge_port: Vec::new(),
+            instance_ptr: Vec::new(),
+            instance_edges: Vec::new(),
+        };
+        g.rebuild_index();
+        g
+    }
+
+    /// Rebuild the edge-major CSR index (port-major edge ids) from the
+    /// adjacency lists.  The adjacency lists and the mask are the source
+    /// of truth; every edge id shifts when the edge set changes, so any
+    /// cached per-edge state (decisions, shard port CSRs) must be
+    /// remapped by `(l, r)` key after a mutation.
+    fn rebuild_index(&mut self) {
+        self.port_ptr.clear();
+        self.port_ptr.reserve(self.num_ports + 1);
+        self.port_ptr.push(0);
+        self.edge_instance.clear();
+        self.edge_port.clear();
+        for (l, rs) in self.ports_to_instances.iter().enumerate() {
+            for &r in rs {
+                self.edge_instance.push(r);
+                self.edge_port.push(l);
+            }
+            self.port_ptr.push(self.edge_instance.len());
+        }
+        // counting sort of edge ids by instance; port-major iteration
+        // keeps each instance's list ascending in port
+        self.instance_ptr.clear();
+        self.instance_ptr.resize(self.num_instances + 1, 0);
+        for &r in &self.edge_instance {
+            self.instance_ptr[r + 1] += 1;
+        }
+        for r in 0..self.num_instances {
+            self.instance_ptr[r + 1] += self.instance_ptr[r];
+        }
+        let mut cursor = self.instance_ptr.clone();
+        self.instance_edges.clear();
+        self.instance_edges.resize(self.edge_instance.len(), 0);
+        for (e, &r) in self.edge_instance.iter().enumerate() {
+            self.instance_edges[cursor[r]] = e;
+            cursor[r] += 1;
+        }
+    }
+
+    /// Remove every edge incident to instance `r` (instance crash /
+    /// drain).  Returns the removed edges so the caller can restore them
+    /// on recovery.  The vertex itself stays — churn never renumbers the
+    /// id spaces, only the edge set.
+    pub fn remove_instance_edges(&mut self, r: usize) -> Result<Vec<(usize, usize)>, String> {
+        if r >= self.num_instances {
+            return Err(format!(
+                "remove_instance_edges: instance {r} out of range (R={})",
+                self.num_instances
+            ));
+        }
+        let ports = std::mem::take(&mut self.instances_to_ports[r]);
+        let removed: Vec<(usize, usize)> = ports.iter().map(|&l| (l, r)).collect();
+        for &l in &ports {
+            self.mask[l * self.num_instances + r] = 0.0;
+            if let Ok(pos) = self.ports_to_instances[l].binary_search(&r) {
+                self.ports_to_instances[l].remove(pos);
+            }
+        }
+        self.rebuild_index();
+        self.debug_validate();
+        Ok(removed)
+    }
+
+    /// Remove every edge incident to port `l` (port-class departure).
+    /// Returns the removed edges for later restoration.
+    pub fn remove_port_edges(&mut self, l: usize) -> Result<Vec<(usize, usize)>, String> {
+        if l >= self.num_ports {
+            return Err(format!(
+                "remove_port_edges: port {l} out of range (L={})",
+                self.num_ports
+            ));
+        }
+        let instances = std::mem::take(&mut self.ports_to_instances[l]);
+        let removed: Vec<(usize, usize)> = instances.iter().map(|&r| (l, r)).collect();
+        for &r in &instances {
+            self.mask[l * self.num_instances + r] = 0.0;
+            if let Ok(pos) = self.instances_to_ports[r].binary_search(&l) {
+                self.instances_to_ports[r].remove(pos);
+            }
+        }
+        self.rebuild_index();
+        self.debug_validate();
+        Ok(removed)
+    }
+
+    /// Insert edges (recovery / arrival).  Already-present edges are
+    /// ignored, out-of-range endpoints are an error naming the vertex.
+    pub fn add_edges(&mut self, edges: &[(usize, usize)]) -> Result<(), String> {
+        for &(l, r) in edges {
+            if l >= self.num_ports {
+                return Err(format!("add_edges: port {l} out of range (L={})", self.num_ports));
+            }
+            if r >= self.num_instances {
+                return Err(format!(
+                    "add_edges: instance {r} out of range (R={})",
+                    self.num_instances
+                ));
+            }
+            if self.mask[l * self.num_instances + r] != 0.0 {
+                continue;
+            }
+            self.mask[l * self.num_instances + r] = 1.0;
+            if let Err(pos) = self.ports_to_instances[l].binary_search(&r) {
+                self.ports_to_instances[l].insert(pos, r);
+            }
+            if let Err(pos) = self.instances_to_ports[r].binary_search(&l) {
+                self.instances_to_ports[r].insert(pos, l);
+            }
+        }
+        self.rebuild_index();
+        self.debug_validate();
+        Ok(())
+    }
+
+    /// Debug-build invariant gate at every mutation site (satellite-2):
+    /// a bad incremental update fails here, not three slots later.
+    #[inline]
+    fn debug_validate(&self) {
+        if cfg!(debug_assertions) {
+            if let Err(e) = self.validate() {
+                panic!("graph invariant broken after mutation: {e}");
+            }
         }
     }
 
@@ -353,6 +450,56 @@ mod tests {
         assert_eq!(g.port_edges(1).len(), 0);
         assert!(g.instance_edge_ids(0).is_empty());
         assert_eq!(g.edge_id(1, 1), None);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn remove_and_restore_instance_round_trips() {
+        let edges = [(0, 2), (0, 0), (1, 1), (2, 0), (2, 2)];
+        let mut g = Bipartite::from_edges(3, 3, &edges);
+        let reference = Bipartite::from_edges(3, 3, &edges);
+        let removed = g.remove_instance_edges(0).unwrap();
+        assert_eq!(removed, vec![(0, 0), (2, 0)]);
+        assert!(g.instance_edge_ids(0).is_empty());
+        assert!(!g.has_edge(0, 0));
+        g.validate().unwrap();
+        // edge ids re-pack port-major over the surviving edges
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.edge_id(0, 2), Some(0));
+        g.add_edges(&removed).unwrap();
+        assert_eq!(g.mask, reference.mask);
+        assert_eq!(g.port_ptr, reference.port_ptr);
+        assert_eq!(g.edge_instance, reference.edge_instance);
+        assert_eq!(g.instance_edges, reference.instance_edges);
+    }
+
+    #[test]
+    fn remove_port_edges_leaves_zero_degree_port() {
+        let mut g = Bipartite::full(3, 4);
+        let removed = g.remove_port_edges(1).unwrap();
+        assert_eq!(removed.len(), 4);
+        assert_eq!(g.port_edges(1).len(), 0);
+        assert_eq!(g.num_edges(), 8);
+        g.validate().unwrap();
+        g.add_edges(&removed).unwrap();
+        assert_eq!(g.num_edges(), 12);
+        assert!(g.is_right_regular(3));
+    }
+
+    #[test]
+    fn mutation_errors_name_the_vertex() {
+        let mut g = Bipartite::full(2, 2);
+        assert!(g.remove_instance_edges(5).unwrap_err().contains("instance 5"));
+        assert!(g.remove_port_edges(7).unwrap_err().contains("port 7"));
+        assert!(g.add_edges(&[(0, 9)]).unwrap_err().contains("instance 9"));
+        assert!(g.add_edges(&[(4, 0)]).unwrap_err().contains("port 4"));
+    }
+
+    #[test]
+    fn add_edges_is_idempotent() {
+        let mut g = Bipartite::from_edges(2, 2, &[(0, 0)]);
+        g.add_edges(&[(0, 0), (1, 1), (1, 1)]).unwrap();
+        assert_eq!(g.num_edges(), 2);
         g.validate().unwrap();
     }
 }

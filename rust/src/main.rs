@@ -67,6 +67,22 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     s.parallel.shards = args.opt_usize("workers", s.parallel.shards)?;
     s.parallel.runs = args.opt_usize("runs", s.parallel.runs)?;
     s.parallel.shards = args.opt_usize("shards", s.parallel.shards)?;
+    // Fault-injection knobs (§Churn): any non-zero rate arms the
+    // versioned-topology path in `cmd_run`.
+    s.faults.instance_rate = args.opt_f64("fault-instance-rate", s.faults.instance_rate)?;
+    s.faults.port_rate = args.opt_f64("fault-port-rate", s.faults.port_rate)?;
+    s.faults.rack_rate = args.opt_f64("fault-rack-rate", s.faults.rack_rate)?;
+    s.faults.rack_size = args.opt_usize("fault-rack-size", s.faults.rack_size)?;
+    s.faults.recover_rate = args.opt_f64("fault-recover-rate", s.faults.recover_rate)?;
+    s.faults.seed = args.opt_usize("fault-seed", s.faults.seed as usize)? as u64;
+    s.faults.replan_threshold = args.opt_f64("replan-threshold", s.faults.replan_threshold)?;
+    if let Some(mode) = args.opt("fault-release") {
+        s.faults.release = match mode {
+            "drain" => ogasched::coordinator::ReleaseMode::Drain,
+            "release" => ogasched::coordinator::ReleaseMode::Release,
+            other => return Err(format!("--fault-release: unknown mode `{other}` (drain|release)")),
+        };
+    }
     s.validate()?;
     Ok(s)
 }
@@ -91,6 +107,24 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         "random" => Box::new(RandomAlloc::new(s.seed)),
         other => return Err(format!("unknown policy `{other}`")),
     };
+    if s.faults.enabled() {
+        let rebuild = args.has_flag("churn-rebuild");
+        let out = sim::faults::run_churned_scenario(&s, policy.as_mut(), rebuild)?;
+        println!(
+            "policy={} T={} avg_reward={:.3} cumulative={:.1} throughput={:.0} slots/s \
+             churn: events={} editions={} replans={} arm={}",
+            out.result.policy,
+            s.horizon,
+            out.result.avg_reward(),
+            out.result.cumulative_reward,
+            out.result.throughput(),
+            out.events,
+            out.editions,
+            out.replans,
+            if rebuild { "rebuild" } else { "incremental" },
+        );
+        return Ok(());
+    }
     let run = sim::run_on_problem(&s, &problem, policy.as_mut());
     println!(
         "policy={} T={} avg_reward={:.3} cumulative={:.1} throughput={:.0} slots/s",
@@ -164,7 +198,7 @@ fn cmd_artifacts() -> Result<(), String> {
         .buckets
         .iter()
         .min_by_key(|b| b.volume())
-        .expect("manifest is non-empty");
+        .ok_or_else(|| format!("artifact manifest at {} lists no buckets", dir.display()))?;
     let mut s = Scenario::small();
     s.num_ports = small.l;
     s.num_instances = small.r;

@@ -210,9 +210,52 @@ impl Problem {
     }
 
     /// Generation id assigned at [`Problem::new`] (clones share it).
+    /// Topology mutations bump it, so publisher identity checks treat
+    /// the mutated problem as a new one.
     #[inline]
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Re-derive everything downstream of a graph mutation: a fresh
+    /// generation (so `IncrementalPublisher` identity goes stale and the
+    /// first post-churn publish is a conservative full copy) and a
+    /// rebuilt [`KindIndex`] (every edge id shifted).
+    fn reindex(&mut self) {
+        self.generation =
+            PROBLEM_GENERATION.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let kinds = KindIndex::build(&*self);
+        self.kinds = kinds;
+        if cfg!(debug_assertions) {
+            if let Err(e) = self.graph.validate() {
+                panic!("graph invariant broken after mutation: {e}");
+            }
+            if let Err(e) = self.kinds.validate(self) {
+                panic!("kind index invariant broken after mutation: {e}");
+            }
+        }
+    }
+
+    /// Drop every channel of instance `r` (crash).  Returns the removed
+    /// edges so recovery can restore exactly them.
+    pub fn remove_instance_edges(&mut self, r: usize) -> Result<Vec<(usize, usize)>, String> {
+        let removed = self.graph.remove_instance_edges(r)?;
+        self.reindex();
+        Ok(removed)
+    }
+
+    /// Drop every channel of port `l` (port-class departure).
+    pub fn remove_port_edges(&mut self, l: usize) -> Result<Vec<(usize, usize)>, String> {
+        let removed = self.graph.remove_port_edges(l)?;
+        self.reindex();
+        Ok(removed)
+    }
+
+    /// Restore previously removed channels (recovery / arrival).
+    pub fn restore_edges(&mut self, edges: &[(usize, usize)]) -> Result<(), String> {
+        self.graph.add_edges(edges)?;
+        self.reindex();
+        Ok(())
     }
 
     pub fn num_ports(&self) -> usize {
@@ -494,6 +537,53 @@ mod tests {
         for l in 0..uni.num_ports() {
             assert_eq!(idx.port_runs(l).len(), 1);
         }
+    }
+
+    #[test]
+    fn churn_bumps_generation_and_rebuilds_kinds() {
+        let graph = Bipartite::from_edges(3, 3, &[(0, 0), (0, 2), (1, 1), (2, 0), (2, 1)]);
+        let mut p = Problem::new(
+            graph,
+            2,
+            vec![1.0; 6],
+            vec![5.0; 6],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![UtilityKind::Linear; 6],
+            vec![0.3, 0.5],
+        );
+        let g0 = p.generation();
+        let removed = p.remove_instance_edges(0).unwrap();
+        assert_eq!(removed, vec![(0, 0), (2, 0)]);
+        assert!(p.generation() > g0);
+        assert_eq!(p.decision_len(), 3 * 2);
+        p.kinds().validate(&p).unwrap();
+        // alpha_flat re-gathered over the surviving edges: edge 0 is now
+        // (0, 2) -> alpha[2*2+k]
+        assert_eq!(p.kinds().alpha_flat[0], 5.0);
+        let g1 = p.generation();
+        p.restore_edges(&removed).unwrap();
+        assert!(p.generation() > g1);
+        assert_eq!(p.decision_len(), 5 * 2);
+        p.kinds().validate(&p).unwrap();
+        // round trip matches a from-scratch build
+        let rebuilt = Problem::new(
+            p.graph.clone(),
+            2,
+            p.demand.clone(),
+            p.capacity.clone(),
+            p.alpha.clone(),
+            p.kind.clone(),
+            p.beta.clone(),
+        );
+        assert_eq!(p.kinds().alpha_flat, rebuilt.kinds().alpha_flat);
+    }
+
+    #[test]
+    fn churn_errors_name_the_vertex() {
+        let mut p = tiny();
+        assert!(p.remove_instance_edges(9).unwrap_err().contains("instance 9"));
+        assert!(p.remove_port_edges(9).unwrap_err().contains("port 9"));
+        assert!(p.restore_edges(&[(0, 9)]).unwrap_err().contains("instance 9"));
     }
 
     #[test]

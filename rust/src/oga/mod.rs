@@ -136,6 +136,41 @@ impl OgaState {
         self.full_project_pending = true;
     }
 
+    /// Carry the learned decision across a topology edition
+    /// (`sim::faults`): every edge id shifts when the edge set changes,
+    /// so the tensor is re-gathered by `(l, r)` key — surviving channels
+    /// keep their allocation, removed channels' coordinates cease to
+    /// exist (no allocation can land on failed capacity), new channels
+    /// start at the 0 the fresh-state initialization uses.  The carried
+    /// tensor stays feasible: removals only shrink instance sums and
+    /// additions contribute nothing, so no re-projection is needed.
+    /// The learning clock (`t`, the running η) carries; the scratch,
+    /// dirty tracking and any bound shard plan are dropped (the next
+    /// sharded run re-binds against the new edition's plan).
+    pub fn remap(&mut self, old_graph: &crate::graph::Bipartite, problem: &Problem) {
+        let k_n = problem.num_resources;
+        let g = &problem.graph;
+        let mut y = vec![0.0; problem.decision_len()];
+        for e in 0..g.num_edges() {
+            let l = g.edge_port[e];
+            let r = g.edge_instance[e];
+            if let Some(old_e) = old_graph.edge_id(l, r) {
+                let src = old_e * k_n;
+                let dst = e * k_n;
+                y[dst..dst + k_n].copy_from_slice(&self.y[src..src + k_n]);
+            }
+        }
+        self.y = y;
+        self.grad = vec![0.0; problem.decision_len()];
+        self.grad_ports.clear();
+        self.port_steps.clear();
+        self.dirty.clear();
+        self.dirty.resize(problem.num_instances(), false);
+        self.dirty_list.clear();
+        self.plan = None;
+        self.shard_dirty.clear();
+    }
+
     /// One OGA slot: observe x(t), ascend the reward gradient at
     /// (x(t), y(t)), project back onto Y.  Returns the step size used.
     ///
@@ -707,6 +742,42 @@ mod tests {
                     assert_eq!(serial.last_grad(), sharded.last_grad());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn remap_carries_surviving_channels() {
+        let p0 = synthesize(&Scenario::small());
+        let mut p = p0.clone();
+        let mut s =
+            OgaState::new(&p0, LearningRate::Decay { eta0: 5.0, lambda: 0.999 }, ExecBudget::auto());
+        let x = vec![1.0; p0.num_ports()];
+        for _ in 0..10 {
+            s.step(&p0, &x);
+        }
+        let y_old = s.y.clone();
+        let t_old = s.t;
+        let victim = 0;
+        p.remove_instance_edges(victim).unwrap();
+        s.remap(&p0.graph, &p);
+        assert_eq!(s.t, t_old, "learning clock must carry");
+        assert_eq!(s.y.len(), p.decision_len());
+        p.check_feasible(&s.y, 1e-7).unwrap();
+        let k_n = p.num_resources;
+        for e in 0..p.num_edges() {
+            let l = p.graph.edge_port[e];
+            let r = p.graph.edge_instance[e];
+            let old_e = p0.graph.edge_id(l, r).unwrap();
+            assert_eq!(
+                &s.y[e * k_n..(e + 1) * k_n],
+                &y_old[old_e * k_n..(old_e + 1) * k_n],
+                "channel ({l},{r}) lost its allocation"
+            );
+        }
+        // learning continues on the new edition without issue
+        for _ in 0..5 {
+            s.step(&p, &x);
+            p.check_feasible(&s.y, 1e-7).unwrap();
         }
     }
 

@@ -231,6 +231,51 @@ impl Policy for OgaMirror {
         self.shard_dirty = vec![Vec::new(); plan.num_shards()];
         self.plan = Some(plan.clone());
     }
+
+    fn remap(&mut self, old_graph: &crate::graph::Bipartite, problem: &Problem) {
+        // Carry surviving channels by (l, r) key; channels new to this
+        // edition get the ε seed (exp(·) freezes coordinates at exactly
+        // 0, so a recovered channel must restart strictly positive).
+        // Seeding can overfill a recovered instance, so exactly the
+        // instances that gained edges are re-projected — a deterministic
+        // call both churn parity arms share.
+        let k_n = problem.num_resources;
+        let g = &problem.graph;
+        let mut y = vec![0.0; problem.decision_len()];
+        let mut fresh = vec![false; problem.num_instances()];
+        let mut fresh_list: Vec<usize> = Vec::new();
+        for e in 0..g.num_edges() {
+            let l = g.edge_port[e];
+            let r = g.edge_instance[e];
+            match old_graph.edge_id(l, r) {
+                Some(old_e) => {
+                    y[e * k_n..(e + 1) * k_n]
+                        .copy_from_slice(&self.y[old_e * k_n..(old_e + 1) * k_n]);
+                }
+                None => {
+                    for k in 0..k_n {
+                        y[e * k_n + k] = SEED_FRACTION * problem.demand_at(l, k);
+                    }
+                    if !fresh[r] {
+                        fresh[r] = true;
+                        fresh_list.push(r);
+                    }
+                }
+            }
+        }
+        self.y = y;
+        fresh_list.sort_unstable();
+        project_instances(problem, &mut self.y, &fresh_list, self.budget.shards);
+        for &r in &self.dirty_list {
+            self.dirty[r] = false;
+        }
+        self.dirty_list.clear();
+        self.plan = None;
+        self.shard_dirty.clear();
+        self.port_steps.clear();
+        self.publisher.reset();
+        // t and eta_run carry — the learning clock survives the edition
+    }
 }
 
 #[cfg(test)]

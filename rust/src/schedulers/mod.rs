@@ -11,6 +11,7 @@ pub mod oga_sched;
 use std::sync::Arc;
 
 use crate::coordinator::sharded::ShardPlan;
+use crate::graph::Bipartite;
 use crate::model::Problem;
 use crate::utils::pool::ExecBudget;
 
@@ -76,6 +77,20 @@ pub trait Policy {
     /// and reward stages.  Binding must never change emitted decisions:
     /// `tests/shard_parity.rs` pins bound and unbound runs bit-to-bit.
     fn bind_shards(&mut self, _plan: &Arc<ShardPlan>) {}
+
+    /// Carry internal state across a topology edition (`sim::faults`).
+    /// `old_graph` is the pre-churn graph; `problem` the post-churn
+    /// problem (same vertex id spaces, different edge set — every edge
+    /// id shifted).  Learning policies remap their decision tensors by
+    /// `(l, r)` key so surviving channels keep their learned allocation
+    /// and no coordinate survives on a dead edge — the graceful-
+    /// degradation contract.  The default (the reactive baselines,
+    /// which recompute from scratch every slot) just resets, which the
+    /// churn parity suite pins as equivalent to a from-scratch rebuild.
+    fn remap(&mut self, old_graph: &Bipartite, problem: &Problem) {
+        let _ = old_graph;
+        self.reset(problem);
+    }
 }
 
 /// Copy the edge columns of the listed instances from `src` to `dst`

@@ -139,6 +139,17 @@ impl Policy for OgaSched {
         self.plan = Some(plan.clone());
         self.state.bind_shards(plan.clone());
     }
+
+    fn remap(&mut self, old_graph: &crate::graph::Bipartite, problem: &Problem) {
+        // Carry the learned tensor by (l, r) key; drop the stale plan
+        // (edge ids shifted — the next sharded run re-binds) and
+        // re-prime the publisher, so the first post-churn decide is a
+        // conservative full publish into the new-length buffer.
+        self.state.remap(old_graph, problem);
+        self.plan = None;
+        self.publisher.reset();
+        self.pending.clear();
+    }
 }
 
 #[cfg(test)]

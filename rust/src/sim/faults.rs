@@ -1,0 +1,651 @@
+//! Fault injection and elastic topology (the robustness layer).
+//!
+//! A [`FaultPlan`] is a seeded, deterministic stream of topology events
+//! — instance crashes/recoveries, port-class departures/arrivals, and
+//! correlated rack bursts — scheduled against slot indices.  The driver
+//! [`run_churned`] plays a plan against the coordinator: the horizon is
+//! cut into segments at the event slots, each segment runs on the
+//! current topology *edition*, and between segments the problem mutates
+//! (incrementally, or rebuilt from scratch — the two parity arms), the
+//! ledger masks the failed instances, policies carry their learned
+//! state across via [`Policy::remap`], and the sharded path refreshes
+//! its [`ShardPlan`], re-running LPT only when the load imbalance
+//! crosses the configured threshold (the re-plan epoch rule).
+//!
+//! **Churn parity is the pinned contract** (`tests/churn_parity.rs`):
+//! a churned run in which every edition is produced by incremental
+//! apply/undo must equal — bitwise, on records, ledgers and decisions —
+//! the same run in which every edition is rebuilt from scratch, across
+//! worker budgets.  The mechanism: the vertex id spaces never change
+//! (only the edge set does), both arms share this one driver and differ
+//! *only* in how the post-churn `Problem`/plan are produced, every
+//! edition bumps `Problem::generation` so the sparse publishers'
+//! identity goes stale and the first post-churn decide is a
+//! conservative full publish (⇒ full-sweep ledger resync), and
+//! sharded ≡ serial for *any* plan (the §Perf-3 invariant), so arms
+//! arriving at different shard plans still agree bit for bit.
+//!
+//! Graceful degradation is structural: a failed instance's channels are
+//! removed from the edge-major CSR, so no decision coordinate on a dead
+//! edge can even be represented — policies cannot allocate onto a
+//! failed instance, and their surviving coordinates carry over by
+//! `(l, r)` key.
+
+use std::sync::Arc;
+
+use crate::config::{FaultConfig, Scenario};
+use crate::coordinator::{
+    ClusterState, Leader, RunResult, ShardLedger, ShardPlan, ShardedLeader,
+};
+use crate::graph::Bipartite;
+use crate::model::Problem;
+use crate::schedulers::Policy;
+use crate::sim::arrivals::{ArrivalModel, Bernoulli};
+use crate::traces::synthesize;
+use crate::utils::rng::Rng;
+
+/// One topology event, applied at a slot boundary (before the slot's
+/// arrivals are drawn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Instance crash: its channels vanish, its capacity masks to zero.
+    InstanceFail(usize),
+    /// Instance recovery: its surviving channels (against non-departed
+    /// ports) are restored.
+    InstanceRecover(usize),
+    /// Port-class departure: its channels vanish and its arrivals are
+    /// gated to zero.
+    PortDepart(usize),
+    /// Port-class arrival: channels against non-failed instances return.
+    PortArrive(usize),
+}
+
+/// A deterministic fault event stream: `(slot, event)` pairs in
+/// ascending slot order (events within a slot keep generation order —
+/// recoveries first, then bursts, crashes, departures).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<(usize, FaultEvent)>,
+}
+
+impl FaultPlan {
+    /// Generate the event stream for `horizon` slots over `l_n` ports
+    /// and `r_n` instances.  Deterministic in `cfg.seed`; the generator
+    /// never fails the last alive instance and never departs the last
+    /// active port, so every edition keeps at least one live channel
+    /// candidate on each side.
+    pub fn generate(l_n: usize, r_n: usize, horizon: usize, cfg: &FaultConfig) -> FaultPlan {
+        let mut rng = Rng::new(cfg.seed);
+        let mut alive = vec![true; r_n];
+        let mut active = vec![true; l_n];
+        let mut alive_n = r_n;
+        let mut active_n = l_n;
+        let mut events = Vec::new();
+        for t in 1..horizon {
+            // recoveries first (ascending id, so the order is stable)
+            for (r, a) in alive.iter_mut().enumerate() {
+                if !*a && rng.bernoulli(cfg.recover_rate) {
+                    *a = true;
+                    alive_n += 1;
+                    events.push((t, FaultEvent::InstanceRecover(r)));
+                }
+            }
+            for (l, a) in active.iter_mut().enumerate() {
+                if !*a && rng.bernoulli(cfg.recover_rate) {
+                    *a = true;
+                    active_n += 1;
+                    events.push((t, FaultEvent::PortArrive(l)));
+                }
+            }
+            // correlated rack burst: a contiguous block of alive
+            // instances fails together
+            if rng.bernoulli(cfg.rack_rate) {
+                let start = rng.below(r_n);
+                let mut felled = 0;
+                for i in 0..r_n {
+                    if felled >= cfg.rack_size || alive_n <= 1 {
+                        break;
+                    }
+                    let r = (start + i) % r_n;
+                    if alive[r] {
+                        alive[r] = false;
+                        alive_n -= 1;
+                        felled += 1;
+                        events.push((t, FaultEvent::InstanceFail(r)));
+                    }
+                }
+            }
+            // single instance crash
+            if rng.bernoulli(cfg.instance_rate) && alive_n > 1 {
+                let pick = rng.below(alive_n);
+                let r = alive
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| a)
+                    .nth(pick)
+                    .map(|(r, _)| r)
+                    .expect("alive_n tracks the alive mask");
+                alive[r] = false;
+                alive_n -= 1;
+                events.push((t, FaultEvent::InstanceFail(r)));
+            }
+            // port-class departure
+            if rng.bernoulli(cfg.port_rate) && active_n > 1 {
+                let pick = rng.below(active_n);
+                let l = active
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| a)
+                    .nth(pick)
+                    .map(|(l, _)| l)
+                    .expect("active_n tracks the active mask");
+                active[l] = false;
+                active_n -= 1;
+                events.push((t, FaultEvent::PortDepart(l)));
+            }
+        }
+        FaultPlan { events }
+    }
+
+    /// Generate against a problem's dimensions.
+    pub fn for_problem(problem: &Problem, horizon: usize, cfg: &FaultConfig) -> FaultPlan {
+        FaultPlan::generate(problem.num_ports(), problem.num_instances(), horizon, cfg)
+    }
+
+    /// Build a plan from an explicit `(slot, event)` stream (the parity
+    /// and degenerate-topology suites script exact failure choreography
+    /// this way).  Slots should ascend; the driver tolerates (clamps)
+    /// out-of-order slots but applies them late.
+    pub fn from_events(events: Vec<(usize, FaultEvent)>) -> FaultPlan {
+        FaultPlan { events }
+    }
+
+    /// The `(slot, event)` stream, ascending by slot.
+    pub fn events(&self) -> &[(usize, FaultEvent)] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of distinct slots with at least one event.
+    pub fn num_edition_slots(&self) -> usize {
+        let mut n = 0;
+        let mut last = usize::MAX;
+        for &(t, _) in &self.events {
+            if t != last {
+                n += 1;
+                last = t;
+            }
+        }
+        n
+    }
+}
+
+/// Masks departed ports' arrivals to zero.  The inner model's RNG
+/// advances identically whether or not a port is active, so churned and
+/// from-scratch parity arms — and runs under different fault plans over
+/// the same workload seed — all see the same underlying stream.
+pub struct Gated<'a> {
+    pub inner: &'a mut dyn ArrivalModel,
+    pub active: &'a [bool],
+}
+
+impl ArrivalModel for Gated<'_> {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn next(&mut self, x: &mut [f64]) {
+        self.inner.next(x);
+        for (l, v) in x.iter_mut().enumerate() {
+            if !self.active[l] {
+                *v = 0.0;
+            }
+        }
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.inner.reset(seed);
+    }
+}
+
+/// Outcome of a churned run: the concatenated per-slot series plus the
+/// churn bookkeeping the figures and the parity suite inspect.
+pub struct ChurnOutcome {
+    pub result: RunResult,
+    /// Final cluster ledger (parity suite compares `remaining_at`).
+    pub state: ClusterState,
+    /// Final topology edition.
+    pub problem: Problem,
+    /// Topology editions applied (event slots that changed the graph).
+    pub editions: usize,
+    /// Full LPT re-plans triggered by the imbalance threshold
+    /// (incremental arm only; the rebuild arm always re-plans).
+    pub replans: usize,
+    /// Individual fault events applied.
+    pub events: usize,
+}
+
+/// Drive `policy` over `horizon` slots under the fault plan.
+///
+/// `shards == 1` runs the serial [`Leader`]; any other value runs the
+/// [`ShardedLeader`] (0 = auto-sized plan).  `rebuild` selects the
+/// parity arm: `false` mutates the problem incrementally
+/// (`Problem::remove_instance_edges` / `restore_edges`) and refreshes
+/// the shard plan under the re-plan epoch rule; `true` rebuilds problem
+/// and plan from scratch at every edition.  Both arms are driven by
+/// this one function — everything else (segments, ledger carry, policy
+/// remap, arrival gating) is shared, which is what makes the bitwise
+/// churn parity contract testable rather than aspirational.
+pub fn run_churned(
+    base: &Problem,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalModel,
+    horizon: usize,
+    shards: usize,
+    plan: &FaultPlan,
+    cfg: &FaultConfig,
+    rebuild: bool,
+) -> Result<ChurnOutcome, String> {
+    let l_n = base.num_ports();
+    let r_n = base.num_instances();
+    // the original channel set: recovery restores into it, never beyond
+    let e0: Vec<(usize, usize)> = (0..base.num_edges())
+        .map(|e| (base.graph.edge_port[e], base.graph.edge_instance[e]))
+        .collect();
+    let mut failed = vec![false; r_n];
+    let mut departed = vec![false; l_n];
+    let mut active = vec![true; l_n];
+
+    let mut cur = base.clone();
+    let serial = shards == 1;
+    let mut state = ClusterState::new(&cur);
+    let mut cur_plan: Option<Arc<ShardPlan>> =
+        (!serial).then(|| Arc::new(ShardPlan::build(&cur, shards)));
+    let mut carry: Option<(Arc<ShardPlan>, Vec<ShardLedger>)> = None;
+
+    let mut result = RunResult {
+        policy: policy.name().to_string(),
+        records: Vec::with_capacity(horizon),
+        ..Default::default()
+    };
+    let mut editions = 0usize;
+    let mut replans = 0usize;
+    let mut events_applied = 0usize;
+
+    let mut cursor = 0usize;
+    let mut next_event = 0usize; // index into plan.events
+    while cursor < horizon {
+        let seg_end = plan
+            .events
+            .get(next_event)
+            .map(|&(t, _)| t.clamp(cursor, horizon))
+            .unwrap_or(horizon);
+        // run the segment [cursor, seg_end) on the current edition
+        {
+            let mut gated = Gated { inner: &mut *arrivals, active: &active };
+            let seg = if serial {
+                let mut leader = Leader::resume(&cur, state);
+                let seg = leader.run(policy, &mut gated, seg_end - cursor);
+                state = leader.into_state();
+                seg
+            } else {
+                let plan_arc = cur_plan.as_ref().expect("sharded path has a plan");
+                let mut leader =
+                    ShardedLeader::resume(&cur, Arc::clone(plan_arc), state, carry.take());
+                let seg = leader.run(policy, &mut gated, seg_end - cursor);
+                let (s, p, ledgers) = leader.into_parts();
+                state = s;
+                carry = Some((p, ledgers));
+                seg
+            };
+            result.clamped_total += seg.clamped_total;
+            result.cumulative_reward += seg.cumulative_reward;
+            result.elapsed_secs += seg.elapsed_secs;
+            for mut rec in seg.records {
+                rec.t += cursor; // segment-local t → run-global t
+                result.records.push(rec);
+            }
+        }
+        cursor = seg_end;
+        if cursor >= horizon {
+            break;
+        }
+
+        // apply every event scheduled at this slot, in stream order;
+        // masks update per event so restore sets see in-order liveness
+        let old_graph = cur.graph.clone();
+        let mut touched = false;
+        while let Some(&(t, ev)) = plan.events.get(next_event) {
+            if t > cursor {
+                break;
+            }
+            next_event += 1;
+            events_applied += 1;
+            let ctx = |e: String| format!("fault event at slot {t}: {e}");
+            match ev {
+                FaultEvent::InstanceFail(r) => {
+                    if r >= r_n {
+                        return Err(ctx(format!("instance {r} out of range (R={r_n})")));
+                    }
+                    failed[r] = true;
+                    state.fail_instance(r, cfg.release).map_err(&ctx)?;
+                    if !rebuild {
+                        cur.remove_instance_edges(r).map_err(&ctx)?;
+                    }
+                    touched = true;
+                }
+                FaultEvent::InstanceRecover(r) => {
+                    if r >= r_n {
+                        return Err(ctx(format!("instance {r} out of range (R={r_n})")));
+                    }
+                    failed[r] = false;
+                    state.recover_instance(r).map_err(&ctx)?;
+                    if !rebuild {
+                        let back: Vec<(usize, usize)> = e0
+                            .iter()
+                            .copied()
+                            .filter(|&(l, rr)| rr == r && !departed[l])
+                            .collect();
+                        cur.restore_edges(&back).map_err(&ctx)?;
+                    }
+                    touched = true;
+                }
+                FaultEvent::PortDepart(l) => {
+                    if l >= l_n {
+                        return Err(ctx(format!("port {l} out of range (L={l_n})")));
+                    }
+                    departed[l] = true;
+                    active[l] = false;
+                    if !rebuild {
+                        cur.remove_port_edges(l).map_err(&ctx)?;
+                    }
+                    touched = true;
+                }
+                FaultEvent::PortArrive(l) => {
+                    if l >= l_n {
+                        return Err(ctx(format!("port {l} out of range (L={l_n})")));
+                    }
+                    departed[l] = false;
+                    active[l] = true;
+                    if !rebuild {
+                        let back: Vec<(usize, usize)> = e0
+                            .iter()
+                            .copied()
+                            .filter(|&(ll, r)| ll == l && !failed[r])
+                            .collect();
+                        cur.restore_edges(&back).map_err(&ctx)?;
+                    }
+                    touched = true;
+                }
+            }
+        }
+        if !touched {
+            continue;
+        }
+        editions += 1;
+        if rebuild {
+            // the from-scratch arm: live edges of the original channel
+            // set, built as if the edition were day-one topology
+            let live: Vec<(usize, usize)> = e0
+                .iter()
+                .copied()
+                .filter(|&(l, r)| !departed[l] && !failed[r])
+                .collect();
+            cur = Problem::new(
+                Bipartite::from_edges(l_n, r_n, &live),
+                cur.num_resources,
+                cur.demand.clone(),
+                cur.capacity.clone(),
+                cur.alpha.clone(),
+                cur.kind.clone(),
+                cur.beta.clone(),
+            );
+        }
+        if cfg!(debug_assertions) {
+            // graceful degradation is structural: a dead vertex keeps
+            // no channels in the new edition
+            for (r, &f) in failed.iter().enumerate() {
+                assert!(
+                    !f || cur.graph.instance_degree(r) == 0,
+                    "failed instance {r} still has channels at slot {cursor}"
+                );
+            }
+            for (l, &d) in departed.iter().enumerate() {
+                assert!(
+                    !d || cur.graph.port_edges(l).len() == 0,
+                    "departed port {l} still has channels at slot {cursor}"
+                );
+            }
+        }
+        // carry the policy's learned state across the edition
+        policy.remap(&old_graph, &cur);
+        // re-plan epoch rule (sharded path)
+        if let Some(plan_arc) = &mut cur_plan {
+            if rebuild {
+                *plan_arc = Arc::new(ShardPlan::build(&cur, shards));
+            } else {
+                let refreshed = plan_arc
+                    .refresh(&cur)
+                    .map_err(|e| format!("fault replan at slot {cursor}: {e}"))?;
+                if refreshed.imbalance() > cfg.replan_threshold {
+                    *plan_arc = Arc::new(ShardPlan::build(&cur, shards));
+                    replans += 1;
+                } else {
+                    *plan_arc = Arc::new(refreshed);
+                }
+            }
+        }
+    }
+
+    Ok(ChurnOutcome {
+        result,
+        state,
+        problem: cur,
+        editions,
+        replans,
+        events: events_applied,
+    })
+}
+
+/// Scenario-level convenience: synthesize the problem, generate the
+/// fault plan from `scenario.faults`, and run one policy under churn
+/// with the scenario's Bernoulli arrivals and shard budget.
+pub fn run_churned_scenario(
+    scenario: &Scenario,
+    policy: &mut dyn Policy,
+    rebuild: bool,
+) -> Result<ChurnOutcome, String> {
+    let problem = synthesize(scenario);
+    let plan = FaultPlan::for_problem(&problem, scenario.horizon, &scenario.faults);
+    let mut arrivals = Bernoulli::uniform(
+        problem.num_ports(),
+        scenario.arrival_prob,
+        scenario.seed ^ 0xA5A5,
+    );
+    policy.reset(&problem);
+    run_churned(
+        &problem,
+        policy,
+        &mut arrivals,
+        scenario.horizon,
+        scenario.parallel.shards,
+        &plan,
+        &scenario.faults,
+        rebuild,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedulers::{Fairness, OgaSched};
+    use crate::utils::pool::ExecBudget;
+
+    fn churny() -> FaultConfig {
+        FaultConfig {
+            instance_rate: 0.05,
+            recover_rate: 0.2,
+            port_rate: 0.03,
+            rack_rate: 0.01,
+            rack_size: 3,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_bounded() {
+        let cfg = churny();
+        let a = FaultPlan::generate(4, 16, 300, &cfg);
+        let b = FaultPlan::generate(4, 16, 300, &cfg);
+        assert_eq!(a.events(), b.events());
+        assert!(!a.is_empty(), "churny config must inject something in 300 slots");
+        // slots ascend and all ids are in range
+        let mut last = 0;
+        for &(t, ev) in a.events() {
+            assert!(t >= last && t < 300);
+            last = t;
+            match ev {
+                FaultEvent::InstanceFail(r) | FaultEvent::InstanceRecover(r) => {
+                    assert!(r < 16)
+                }
+                FaultEvent::PortDepart(l) | FaultEvent::PortArrive(l) => assert!(l < 4),
+            }
+        }
+        // replaying the mask evolution: never all-dead, never all-departed
+        let mut alive = vec![true; 16];
+        let mut active = vec![true; 4];
+        for &(_, ev) in a.events() {
+            match ev {
+                FaultEvent::InstanceFail(r) => alive[r] = false,
+                FaultEvent::InstanceRecover(r) => alive[r] = true,
+                FaultEvent::PortDepart(l) => active[l] = false,
+                FaultEvent::PortArrive(l) => active[l] = true,
+            }
+            assert!(alive.iter().any(|&a| a), "last instance was failed");
+            assert!(active.iter().any(|&a| a), "last port was departed");
+        }
+        let different = FaultPlan::generate(4, 16, 300, &FaultConfig { seed: 78, ..cfg });
+        assert_ne!(a.events(), different.events());
+    }
+
+    #[test]
+    fn gated_arrivals_zero_departed_ports_without_desyncing() {
+        let mut inner_a = Bernoulli::uniform(6, 0.9, 3);
+        let mut inner_b = Bernoulli::uniform(6, 0.9, 3);
+        let active = vec![true, false, true, true, false, true];
+        let mut gated = Gated { inner: &mut inner_a, active: &active };
+        let all = vec![true; 6];
+        let mut open = Gated { inner: &mut inner_b, active: &all };
+        let mut x = vec![0.0; 6];
+        let mut y = vec![0.0; 6];
+        for _ in 0..50 {
+            gated.next(&mut x);
+            open.next(&mut y);
+            for l in 0..6 {
+                if active[l] {
+                    assert_eq!(x[l], y[l], "gating desynced the stream at port {l}");
+                } else {
+                    assert_eq!(x[l], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn churned_run_applies_events_and_degrades_gracefully() {
+        let scenario = {
+            let mut s = Scenario::small();
+            s.horizon = 120;
+            s.faults = churny();
+            s
+        };
+        let out = run_churned_scenario(&scenario, &mut Fairness::new(), false).unwrap();
+        assert_eq!(out.result.records.len(), 120);
+        // records carry run-global slot indices after concatenation
+        for (t, rec) in out.result.records.iter().enumerate() {
+            assert_eq!(rec.t, t);
+        }
+        assert!(out.events > 0, "churny config produced no events");
+        assert!(out.editions > 0);
+        assert_eq!(out.result.clamped_total, 0);
+    }
+
+    #[test]
+    fn incremental_and_rebuild_arms_agree_smoke() {
+        // the full matrix (policies x budgets x seeds) lives in
+        // tests/churn_parity.rs; this is the in-crate seam check
+        let scenario = {
+            let mut s = Scenario::small();
+            s.horizon = 100;
+            s.faults = churny();
+            s
+        };
+        let problem = synthesize(&scenario);
+        let plan = FaultPlan::for_problem(&problem, scenario.horizon, &scenario.faults);
+        let run = |rebuild: bool, shards: usize| {
+            let mut pol = OgaSched::new(&problem, 2.0, 0.999, ExecBudget::serial());
+            pol.reset(&problem);
+            let mut arr = Bernoulli::uniform(problem.num_ports(), 0.7, 11);
+            run_churned(
+                &problem,
+                &mut pol,
+                &mut arr,
+                scenario.horizon,
+                shards,
+                &plan,
+                &scenario.faults,
+                rebuild,
+            )
+            .unwrap()
+        };
+        let inc = run(false, 1);
+        let reb = run(true, 1);
+        assert_eq!(inc.result.cumulative_reward, reb.result.cumulative_reward);
+        for (a, b) in inc.result.records.iter().zip(&reb.result.records) {
+            assert_eq!((a.t, a.q, a.gain, a.penalty), (b.t, b.q, b.gain, b.penalty));
+        }
+        let sharded = run(false, 3);
+        assert_eq!(sharded.result.cumulative_reward, inc.result.cumulative_reward);
+        for r in 0..problem.num_instances() {
+            for k in 0..problem.num_resources {
+                assert_eq!(
+                    inc.state.remaining_at(r, k),
+                    reb.state.remaining_at(r, k),
+                    "ledger diverged at ({r},{k})"
+                );
+                assert_eq!(
+                    inc.state.remaining_at(r, k),
+                    sharded.state.remaining_at(r, k),
+                    "sharded ledger diverged at ({r},{k})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_errors_name_slot_and_vertex() {
+        let scenario = Scenario::small();
+        let problem = synthesize(&scenario);
+        let plan = FaultPlan {
+            events: vec![(5, FaultEvent::InstanceFail(999))],
+        };
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(problem.num_ports(), 0.5, 1);
+        let err = run_churned(
+            &problem,
+            &mut pol,
+            &mut arr,
+            20,
+            1,
+            &plan,
+            &scenario.faults,
+            false,
+        )
+        .unwrap_err();
+        assert!(err.contains("slot 5"), "{err}");
+        assert!(err.contains("instance 999"), "{err}");
+    }
+}

@@ -122,10 +122,15 @@ pub fn problem_from_csv(
 }
 
 /// Arrival weights from the sample jobs file (used by the trace-driven
-/// arrival model).
-pub fn sample_arrival_weights(num_ports: usize) -> Vec<f64> {
-    let (_, w) = parse_jobs(JOBS_SAMPLE).expect("embedded sample is valid");
-    (0..num_ports).map(|l| w[l % w.len()]).collect()
+/// arrival model).  Errors name the port count so a bad embedded sample
+/// surfaces as a diagnosable failure rather than a panic deep in a run.
+pub fn sample_arrival_weights(num_ports: usize) -> Result<Vec<f64>, String> {
+    let (_, w) = parse_jobs(JOBS_SAMPLE)
+        .map_err(|e| format!("embedded jobs sample invalid (need weights for {num_ports} ports): {e}"))?;
+    if w.is_empty() {
+        return Err(format!("embedded jobs sample has no rows (need weights for {num_ports} ports)"));
+    }
+    Ok((0..num_ports).map(|l| w[l % w.len()]).collect())
 }
 
 #[cfg(test)]

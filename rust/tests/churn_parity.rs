@@ -1,0 +1,414 @@
+//! Churn parity (§Churn): a run whose topology editions are produced by
+//! incremental apply/undo (`Problem::remove_instance_edges` /
+//! `restore_edges` + `ShardPlan::refresh` under the re-plan epoch rule)
+//! must reproduce the same run with every edition rebuilt from scratch
+//! (`Bipartite::from_edges` + `Problem::new` + `ShardPlan::build`)
+//! **bit for bit**: every slot record (q, gain, penalty, arrivals), the
+//! cumulative reward, the final ledger (remaining capacity per (r, k))
+//! and, for the learning policy, the final decision tensor — across the
+//! policy lineup × worker budgets {1, 2, 4} × random fault plans.  And
+//! no decision ever allocates onto a failed instance: its channels are
+//! gone from the CSR, so the coordinate cannot be represented.
+//!
+//! The CI matrix re-runs this suite under several fault seeds
+//! (`CHURN_FAULT_SEED`) × `PALLAS_WORKERS` with `--test-threads=1`.
+
+use ogasched::config::FaultConfig;
+use ogasched::coordinator::ReleaseMode;
+use ogasched::graph::Bipartite;
+use ogasched::model::Problem;
+use ogasched::oga::utilities::UtilityKind;
+use ogasched::schedulers::{
+    BinPacking, Drf, Fairness, OgaMirror, OgaSched, Policy, RandomAlloc, Spreading,
+};
+use ogasched::sim::arrivals::Bernoulli;
+use ogasched::sim::faults::{run_churned, ChurnOutcome, FaultEvent, FaultPlan};
+use ogasched::utils::prop::{check_seeded, ensure, Size};
+use ogasched::utils::rng::Rng;
+use ogasched::ExecBudget;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Fault seed for the property matrix; the CI churn-parity job sweeps
+/// this via the environment so different event streams hit the same
+/// parity contract.
+fn fault_base_seed() -> u64 {
+    std::env::var("CHURN_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn random_problem(rng: &mut Rng, size: Size) -> Problem {
+    let l_n = rng.range(1, size.dim(6, 1));
+    let r_n = rng.range(2, size.dim(16, 2).max(3));
+    let k_n = rng.range(1, size.dim(4, 1));
+    let p = rng.uniform(0.2, 0.9);
+    let mut edges = Vec::new();
+    for l in 0..l_n {
+        for r in 0..r_n {
+            if rng.bernoulli(p) {
+                edges.push((l, r));
+            }
+        }
+    }
+    let graph = Bipartite::from_edges(l_n, r_n, &edges);
+    Problem::new(
+        graph,
+        k_n,
+        (0..l_n * k_n).map(|_| rng.uniform(0.2, 3.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..r_n * k_n).map(|_| UtilityKind::ALL[rng.below(4)]).collect(),
+        (0..k_n).map(|_| rng.uniform(0.1, 0.8)).collect(),
+    )
+}
+
+/// Fixed-capacity problem for the scripted degenerate topologies.
+fn tiny_problem(l_n: usize, r_n: usize, k_n: usize, edges: &[(usize, usize)]) -> Problem {
+    Problem::new(
+        Bipartite::from_edges(l_n, r_n, edges),
+        k_n,
+        vec![1.0; l_n * k_n],
+        vec![4.0; r_n * k_n],
+        vec![1.0; r_n * k_n],
+        vec![UtilityKind::ALL[0]; r_n * k_n],
+        vec![0.3; k_n],
+    )
+}
+
+fn make_policy(p: &Problem, i: usize, seed: u64) -> (&'static str, Box<dyn Policy + Send>) {
+    match i {
+        0 => ("oga-reactive", Box::new(OgaSched::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        1 => ("oga-reservation", Box::new(OgaSched::reservation(p, 2.0, 0.999, ExecBudget::auto()))),
+        2 => ("oga-mirror", Box::new(OgaMirror::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        3 => ("drf", Box::new(Drf::new())),
+        4 => ("fairness", Box::new(Fairness::new())),
+        5 => ("binpacking", Box::new(BinPacking::new())),
+        6 => ("spreading", Box::new(Spreading::new())),
+        _ => ("random", Box::new(RandomAlloc::new(seed))),
+    }
+}
+
+const N_POLICIES: usize = 8;
+
+fn arm(
+    p: &Problem,
+    policy: &mut dyn Policy,
+    plan: &FaultPlan,
+    cfg: &FaultConfig,
+    horizon: usize,
+    shards: usize,
+    arrival_seed: u64,
+    rho: f64,
+    rebuild: bool,
+) -> Result<ChurnOutcome, String> {
+    policy.reset(p);
+    let mut arr = Bernoulli::uniform(p.num_ports(), rho, arrival_seed);
+    run_churned(p, policy, &mut arr, horizon, shards, plan, cfg, rebuild)
+}
+
+/// Final failed/departed masks implied by a plan (for the masking
+/// assertions — replayed independently of the driver).
+fn final_masks(plan: &FaultPlan, l_n: usize, r_n: usize) -> (Vec<bool>, Vec<bool>) {
+    let mut failed = vec![false; r_n];
+    let mut departed = vec![false; l_n];
+    for &(_, ev) in plan.events() {
+        match ev {
+            FaultEvent::InstanceFail(r) => failed[r] = true,
+            FaultEvent::InstanceRecover(r) => failed[r] = false,
+            FaultEvent::PortDepart(l) => departed[l] = true,
+            FaultEvent::PortArrive(l) => departed[l] = false,
+        }
+    }
+    (failed, departed)
+}
+
+fn compare_outcomes(ctx: &str, got: &ChurnOutcome, want: &ChurnOutcome) -> Result<(), String> {
+    ensure(got.result.cumulative_reward == want.result.cumulative_reward, || {
+        format!(
+            "{ctx}: cumulative {} vs {}",
+            got.result.cumulative_reward, want.result.cumulative_reward
+        )
+    })?;
+    ensure(got.result.clamped_total == want.result.clamped_total, || {
+        format!("{ctx}: clamped totals diverged")
+    })?;
+    ensure(got.result.records.len() == want.result.records.len(), || {
+        format!("{ctx}: record counts diverged")
+    })?;
+    for (a, b) in got.result.records.iter().zip(&want.result.records) {
+        ensure(
+            a.t == b.t && a.q == b.q && a.gain == b.gain && a.penalty == b.penalty
+                && a.arrivals == b.arrivals,
+            || {
+                format!(
+                    "{ctx} t={}: ({}, {}, {}) vs ({}, {}, {})",
+                    a.t, a.q, a.gain, a.penalty, b.q, b.gain, b.penalty
+                )
+            },
+        )?;
+    }
+    for r in 0..want.problem.num_instances() {
+        for k in 0..want.problem.num_resources {
+            ensure(got.state.remaining_at(r, k) == want.state.remaining_at(r, k), || {
+                format!(
+                    "{ctx}: remaining({r},{k}) {} vs {}",
+                    got.state.remaining_at(r, k),
+                    want.state.remaining_at(r, k)
+                )
+            })?;
+        }
+    }
+    ensure(got.problem.num_edges() == want.problem.num_edges(), || {
+        format!(
+            "{ctx}: final editions differ ({} vs {} edges)",
+            got.problem.num_edges(),
+            want.problem.num_edges()
+        )
+    })?;
+    Ok(())
+}
+
+#[test]
+fn churned_incremental_matches_rebuild_bitwise() {
+    check_seeded("churn-parity", fault_base_seed(), 5, |rng, size| {
+        let p = random_problem(rng, size);
+        let horizon = 36;
+        let cfg = FaultConfig {
+            instance_rate: 0.08,
+            recover_rate: 0.25,
+            port_rate: 0.05,
+            rack_rate: 0.02,
+            rack_size: 2,
+            release: if rng.bernoulli(0.5) { ReleaseMode::Release } else { ReleaseMode::Drain },
+            replan_threshold: if rng.bernoulli(0.5) { 1.0 } else { 1.5 },
+            seed: rng.below(1 << 30) as u64,
+        };
+        let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+        let (failed, departed) = final_masks(&plan, p.num_ports(), p.num_instances());
+        let arrival_seed = rng.below(1 << 30) as u64;
+        let policy_seed = rng.below(1 << 30) as u64;
+        for i in 0..N_POLICIES {
+            let (name, mut pol) = make_policy(&p, i, policy_seed);
+            let reference =
+                arm(&p, pol.as_mut(), &plan, &cfg, horizon, 1, arrival_seed, 0.6, false)
+                    .map_err(|e| format!("{name} serial incremental: {e}"))?;
+            ensure(reference.result.records.len() == horizon, || {
+                format!("{name}: expected {horizon} records")
+            })?;
+            // graceful degradation: dead vertices keep no channels and
+            // failed capacity is masked out of the ledger
+            for (r, &f) in failed.iter().enumerate() {
+                if f {
+                    ensure(reference.problem.graph.instance_degree(r) == 0, || {
+                        format!("{name}: failed instance {r} kept channels")
+                    })?;
+                    for k in 0..p.num_resources {
+                        ensure(reference.state.remaining_at(r, k) == 0.0, || {
+                            format!("{name}: failed instance {r} not masked at k={k}")
+                        })?;
+                    }
+                }
+            }
+            for (l, &d) in departed.iter().enumerate() {
+                if d {
+                    ensure(reference.problem.graph.port_edges(l).len() == 0, || {
+                        format!("{name}: departed port {l} kept channels")
+                    })?;
+                }
+            }
+            for &shards in &SHARD_COUNTS {
+                for rebuild in [false, true] {
+                    if shards == 1 && !rebuild {
+                        continue; // that IS the reference
+                    }
+                    let (_, mut pol) = make_policy(&p, i, policy_seed);
+                    let out = arm(
+                        &p, pol.as_mut(), &plan, &cfg, horizon, shards, arrival_seed, 0.6,
+                        rebuild,
+                    )
+                    .map_err(|e| format!("{name} shards={shards} rebuild={rebuild}: {e}"))?;
+                    let ctx = format!("{name} shards={shards} rebuild={rebuild}");
+                    compare_outcomes(&ctx, &out, &reference)?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn churned_decision_tensors_match_across_arms() {
+    // the learning policy's final y after churn is identical whichever
+    // arm produced the editions and however the work was sharded
+    let mut rng = Rng::new(fault_base_seed() ^ 0x5EED);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 50;
+    let cfg = FaultConfig {
+        instance_rate: 0.08,
+        recover_rate: 0.3,
+        port_rate: 0.04,
+        seed: 9,
+        ..FaultConfig::default()
+    };
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    let run_oga = |shards: usize, rebuild: bool| {
+        let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
+        let out = arm(&p, &mut pol, &plan, &cfg, horizon, shards, 17, 0.5, rebuild).unwrap();
+        (pol.current_decision().to_vec(), out)
+    };
+    let (reference_y, reference) = run_oga(1, false);
+    assert_eq!(reference_y.len(), reference.problem.decision_len());
+    for &shards in &SHARD_COUNTS {
+        for rebuild in [false, true] {
+            if shards == 1 && !rebuild {
+                continue;
+            }
+            let (y, _) = run_oga(shards, rebuild);
+            assert_eq!(
+                y,
+                reference_y,
+                "decision tensors diverged at shards={shards} rebuild={rebuild}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Degenerate topologies: the scripted choreography below exercises the
+// corners the random matrix is unlikely to hit.
+
+#[test]
+fn zero_degree_port_survives_churn() {
+    // port 1 has no channels from day one; churning it (and an
+    // instance) must be a harmless no-op that still holds parity
+    let p = tiny_problem(3, 3, 2, &[(0, 0), (0, 1), (2, 1), (2, 2)]);
+    let plan = FaultPlan::from_events(vec![
+        (3, FaultEvent::InstanceFail(1)),
+        (4, FaultEvent::PortDepart(1)),
+        (7, FaultEvent::InstanceRecover(1)),
+        (8, FaultEvent::PortArrive(1)),
+    ]);
+    let cfg = FaultConfig::default();
+    for &shards in &SHARD_COUNTS {
+        let inc = arm(&p, &mut Fairness::new(), &plan, &cfg, 12, shards, 3, 0.8, false).unwrap();
+        let reb = arm(&p, &mut Fairness::new(), &plan, &cfg, 12, shards, 3, 0.8, true).unwrap();
+        compare_outcomes(&format!("zero-degree-port shards={shards}"), &reb, &inc).unwrap();
+        assert_eq!(inc.result.records.len(), 12);
+        assert_eq!(inc.events, 4);
+        assert_eq!(inc.problem.graph.port_edges(1).len(), 0);
+        assert!(inc.problem.graph.instance_degree(1) > 0, "instance 1 should be restored");
+    }
+}
+
+#[test]
+fn empty_arrivals_against_fully_failed_shard() {
+    // rho = 0 (no work ever arrives) while 3 of 4 instances fail — any
+    // 2-shard plan then has at least one fully-failed shard; the run
+    // must stay well-defined and hold parity
+    let p = tiny_problem(
+        3,
+        4,
+        2,
+        &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 2), (2, 3), (0, 3), (1, 0)],
+    );
+    let plan = FaultPlan::from_events(vec![
+        (2, FaultEvent::InstanceFail(0)),
+        (2, FaultEvent::InstanceFail(1)),
+        (2, FaultEvent::InstanceFail(2)),
+    ]);
+    let cfg = FaultConfig { release: ReleaseMode::Release, ..FaultConfig::default() };
+    for i in [0, 4] {
+        for &shards in &[1usize, 2] {
+            let (name, mut pol) = make_policy(&p, i, 5);
+            let inc = arm(&p, pol.as_mut(), &plan, &cfg, 10, shards, 5, 0.0, false).unwrap();
+            let (_, mut pol) = make_policy(&p, i, 5);
+            let reb = arm(&p, pol.as_mut(), &plan, &cfg, 10, shards, 5, 0.0, true).unwrap();
+            compare_outcomes(&format!("{name} dead-shard shards={shards}"), &reb, &inc)
+                .unwrap();
+            assert_eq!(inc.result.records.len(), 10);
+            for rec in &inc.result.records {
+                assert_eq!(rec.arrivals, 0.0, "{name}: rho=0 produced an arrival");
+            }
+            // only the survivor keeps channels
+            for e in 0..inc.problem.num_edges() {
+                assert_eq!(inc.problem.graph.edge_instance[e], 3);
+            }
+        }
+    }
+}
+
+#[test]
+fn single_surviving_instance_serves_alone() {
+    let p = tiny_problem(2, 3, 2, &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]);
+    let plan = FaultPlan::from_events(vec![
+        (2, FaultEvent::InstanceFail(0)),
+        (4, FaultEvent::InstanceFail(1)),
+    ]);
+    let cfg = FaultConfig::default();
+    for &shards in &SHARD_COUNTS {
+        let run_arm = |rebuild: bool| {
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
+            let out = arm(&p, &mut pol, &plan, &cfg, 15, shards, 7, 0.9, rebuild).unwrap();
+            (pol.current_decision().to_vec(), out)
+        };
+        let (y_inc, inc) = run_arm(false);
+        let (y_reb, reb) = run_arm(true);
+        compare_outcomes(&format!("single-survivor shards={shards}"), &reb, &inc).unwrap();
+        assert_eq!(y_inc, y_reb, "shards={shards}: decision tensors diverged");
+        // every remaining decision coordinate lives on the survivor —
+        // allocating onto a failed instance is unrepresentable
+        for e in 0..inc.problem.num_edges() {
+            assert_eq!(inc.problem.graph.edge_instance[e], 2);
+        }
+        assert_eq!(y_inc.len(), inc.problem.decision_len());
+        for k in 0..p.num_resources {
+            assert_eq!(inc.state.remaining_at(0, k), 0.0);
+            assert_eq!(inc.state.remaining_at(1, k), 0.0);
+        }
+    }
+}
+
+#[test]
+fn recovery_into_previously_empty_kind_run() {
+    // instance 0 is the sole member of its utility kind: failing it
+    // empties that kind run entirely; recovery must rebuild the run and
+    // hold parity through both transitions
+    let l_n = 2;
+    let r_n = 3;
+    let k_n = 2;
+    let mut kind = vec![UtilityKind::ALL[0]; r_n * k_n];
+    for k in 0..k_n {
+        kind[k] = UtilityKind::ALL[1]; // instance 0's row
+    }
+    let p = Problem::new(
+        Bipartite::from_edges(l_n, r_n, &[(0, 0), (0, 1), (1, 0), (1, 2)]),
+        k_n,
+        vec![1.0; l_n * k_n],
+        vec![4.0; r_n * k_n],
+        vec![1.0; r_n * k_n],
+        kind,
+        vec![0.3; k_n],
+    );
+    let plan = FaultPlan::from_events(vec![
+        (2, FaultEvent::InstanceFail(0)),
+        (6, FaultEvent::InstanceRecover(0)),
+    ]);
+    let cfg = FaultConfig::default();
+    for &shards in &SHARD_COUNTS {
+        let run_arm = |rebuild: bool| {
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
+            let out = arm(&p, &mut pol, &plan, &cfg, 14, shards, 21, 0.8, rebuild).unwrap();
+            (pol.current_decision().to_vec(), out)
+        };
+        let (y_inc, inc) = run_arm(false);
+        let (y_reb, reb) = run_arm(true);
+        compare_outcomes(&format!("kind-run-recovery shards={shards}"), &reb, &inc).unwrap();
+        assert_eq!(y_inc, y_reb, "shards={shards}: decision tensors diverged");
+        assert_eq!(inc.events, 2);
+        assert_eq!(inc.editions, 2);
+        // the kind run repopulated: instance 0 has its channels back
+        assert_eq!(inc.problem.graph.instance_degree(0), 2);
+    }
+}

@@ -1264,6 +1264,127 @@ def traffic_section(rows):
               f"   dense/sparse {per_rho[0.7]/per_rho[0.1]:6.2f}x")
 
 
+# ------------------------------------------------------- §Churn model --
+
+def _churn_csr(L, R, edges):
+    """Rebuild the port-major CSR index from a sorted edge list
+    (mirrors graph::Bipartite::rebuild_index)."""
+    port_ptr = [0]
+    edge_instance = []
+    i = 0
+    for l in range(L):
+        while i < len(edges) and edges[i][0] == l:
+            edge_instance.append(edges[i][1])
+            i += 1
+        port_ptr.append(len(edge_instance))
+    instance_edges = [[] for _ in range(R)]
+    for e, r in enumerate(edge_instance):
+        instance_edges[r].append(e)
+    return port_ptr, edge_instance, instance_edges
+
+
+def _churn_kind_index(L, K, port_ptr, edge_instance, kind):
+    """Flat per-coordinate tables + same-kind runs (mirrors
+    model::KindIndex::build)."""
+    kind_flat = []
+    for r in edge_instance:
+        kind_flat.extend(kind[r])
+    port_runs = []
+    for l in range(L):
+        lo, hi = port_ptr[l] * K, port_ptr[l + 1] * K
+        c = lo
+        runs = []
+        while c < hi:
+            kk = kind_flat[c]
+            start = c
+            while c < hi and kind_flat[c] == kk:
+                c += 1
+            runs.append((start, c, kk))
+        port_runs.append(runs)
+    return kind_flat, port_runs
+
+
+def _churn_lpt(R, K, instance_edges, shards):
+    """Greedy LPT over per-instance weights + per-shard edge CSRs
+    (mirrors coordinator::ShardPlan::build)."""
+    import heapq
+    loads = sorted(((len(instance_edges[r]) * K, r) for r in range(R)),
+                   reverse=True)
+    heap = [(0, s) for s in range(shards)]
+    heapq.heapify(heap)
+    owner = [0] * R
+    for w, r in loads:
+        tot, s = heapq.heappop(heap)
+        owner[r] = s
+        heapq.heappush(heap, (tot + w, s))
+    shard_edges = [[] for _ in range(shards)]
+    for r in range(R):
+        shard_edges[owner[r]].extend(instance_edges[r])
+    return owner, shard_edges
+
+
+def _churn_refresh(owner, instance_edges, shards):
+    """Keep owners, recompute per-shard CSRs + loads (mirrors
+    coordinator::ShardPlan::refresh)."""
+    shard_edges = [[] for _ in range(shards)]
+    loads = [0] * shards
+    for r, es in enumerate(instance_edges):
+        s = owner[r]
+        shard_edges[s].extend(es)
+        loads[s] += len(es)
+    return shard_edges, loads
+
+
+def churn_section(rows):
+    """§Churn: one topology edition pair (instance fails, then recovers)
+    — incremental apply + plan refresh vs from-scratch Problem + LPT
+    rebuild; structural mirror of benches/hot_path.rs's churn rows."""
+    name, L, R, K, density = "large 100x1024x6", 100, 1024, 6, 3.0
+    shards = 8
+    p = make_problem(L, R, K, density, seed=2023)
+    kind = p["kind"]
+    e0 = sorted(zip(p["edge_port"], p["edge_instance"]))
+    r_fail = 7
+    live = [(l, r) for (l, r) in e0 if r != r_fail]
+    back = [(l, r) for (l, r) in e0 if r == r_fail]
+    owner, _ = _churn_lpt(R, K, p["instance_edges"], shards)
+
+    def incremental():
+        # fail: retain + reindex + kinds + refresh
+        edges = [(l, r) for (l, r) in e0 if r != r_fail]
+        ptr, ei, inst = _churn_csr(L, R, edges)
+        _churn_kind_index(L, K, ptr, ei, kind)
+        _churn_refresh(owner, inst, shards)
+        # recover: merge the restore set back + reindex + refresh
+        edges = sorted(edges + back)
+        ptr, ei, inst = _churn_csr(L, R, edges)
+        _churn_kind_index(L, K, ptr, ei, kind)
+        _churn_refresh(owner, inst, shards)
+
+    def rebuild():
+        for edges in (live, e0):
+            se = sorted(edges)  # Bipartite::from_edges sorts
+            ptr, ei, inst = _churn_csr(L, R, se)
+            # Problem::new clones the scalar tables
+            [row[:] for row in p["demand"]]
+            [row[:] for row in p["capacity"]]
+            [row[:] for row in p["alpha"]]
+            [row[:] for row in p["kind"]]
+            _churn_kind_index(L, K, ptr, ei, kind)
+            _churn_lpt(R, K, inst, shards)
+
+    mean_i, min_i = bench(incremental, 3, 20)
+    mean_b, min_b = bench(rebuild, 3, 20)
+    rows.append(dict(name=name, section="churn-epoch", shards=shards,
+                     incremental_ms=mean_i * 1e3, rebuild_ms=mean_b * 1e3,
+                     incremental_ms_min=min_i * 1e3,
+                     rebuild_ms_min=min_b * 1e3,
+                     speedup=mean_b / mean_i))
+    print(f"churn epoch {name:<20} incremental {mean_i*1e3:9.3f} ms"
+          f"   rebuild {mean_b*1e3:9.3f} ms"
+          f"   speedup {mean_b/mean_i:6.2f}x")
+
+
 def main():
     layout_rows = []
     layout_section(layout_rows)
@@ -1278,10 +1399,13 @@ def main():
     perf5_kernel_section(perf5_rows)
     traffic_rows = []
     traffic_section(traffic_rows)
+    churn_rows = []
+    churn_section(churn_rows)
     with open("perf_proxy.json", "w") as f:
         json.dump(dict(layout=layout_rows, pipeline=pipeline_rows,
                        sharded=sharded_rows, perf4=perf4_rows,
-                       perf5=perf5_rows, traffic=traffic_rows), f, indent=2)
+                       perf5=perf5_rows, traffic=traffic_rows,
+                       churn=churn_rows), f, indent=2)
     print("wrote perf_proxy.json")
 
     # refresh the cross-PR perf record with proxy provenance (overwritten
@@ -1348,6 +1472,17 @@ def main():
                 ns_per_op=round(row["modeled_lane_ms"] * 1e6, 1),
                 ns_per_op_min=round(row["modeled_lane_ms"] * 1e6, 1),
                 std_ns=0.0))
+    for row in churn_rows:
+        entries.append(dict(
+            name=f"churn epoch incremental {row['name']}", iters=0,
+            ns_per_op=round(row["incremental_ms"] * 1e6, 1),
+            ns_per_op_min=round(row["incremental_ms_min"] * 1e6, 1),
+            std_ns=0.0))
+        entries.append(dict(
+            name=f"churn epoch rebuild {row['name']}", iters=0,
+            ns_per_op=round(row["rebuild_ms"] * 1e6, 1),
+            ns_per_op_min=round(row["rebuild_ms_min"] * 1e6, 1),
+            std_ns=0.0))
     for row in perf4_rows:
         if row["section"] == "lineup-budget-model":
             # matches the run_lineup bench rows: 50 slots per timed op
@@ -1379,7 +1514,10 @@ def main():
               "SPerf-5 `kernel * lane` rows divide the measured scalar row by "
               "the documented op-cost lane model (f64x4; ln lane-serial) — "
               "time the real pair with `cargo bench --bench hot_path` with "
-              "and without `--features simd`."),
+              "and without `--features simd`. The SChurn `churn epoch` pair "
+              "(incremental apply + ShardPlan refresh vs from-scratch Problem "
+              "+ LPT rebuild, two editions per op) is a proxy-timed "
+              "structural mirror of the same stages in Rust."),
         entries=entries,
     )
     with open("BENCH_hot_path.json", "w") as f:
