@@ -17,7 +17,7 @@
 //! oracle-objective rows; build with `--features simd` (nightly) to
 //! time the `std::simd` twins under the same row names.
 
-use ogasched::benchlib::{time_fn, Reporter};
+use ogasched::benchlib::{policy_table, time_fn, Reporter};
 use ogasched::config::Scenario;
 use ogasched::ExecBudget;
 use ogasched::coordinator::{ClusterState, ShardPlan, ShardedLeader};
@@ -205,6 +205,7 @@ fn main() {
         let mut scenario = Scenario::large_scale();
         scenario.horizon = 1;
         let p = synthesize(&scenario);
+        let mut occ_rows: Vec<(String, Vec<f64>)> = Vec::new();
         for shards in [1usize, 2, 4, 8] {
             let mut leader = ShardedLeader::new(&p, shards);
             let mut pol = OgaSched::new(&p, scenario.eta0, scenario.decay, ExecBudget::auto());
@@ -221,7 +222,26 @@ fn main() {
                     std::hint::black_box(leader.slot(&mut pol, &x, &mut y));
                 },
             ));
+            // Per-shard occupancy over everything the timed loop ran:
+            // edges touched per (slot, shard) in the reward stage — the
+            // LPT-plan skew the static partition leaves under sparse
+            // arrivals (work-stealing groundwork; see `figure sparse`
+            // for the figure-scale sweep of the same counters).
+            let occ = leader.occupancy();
+            occ_rows.push((
+                format!("shard{shards}"),
+                vec![
+                    occ.min_or_zero() as f64,
+                    occ.mean(),
+                    occ.max as f64,
+                    occ.slots as f64,
+                ],
+            ));
         }
+        rep.section(
+            "per-shard occupancy sparse10 large 100x1024x6 (edges touched per shard-slot)",
+            policy_table(&["plan", "min", "mean", "max", "slots"], &occ_rows, 1),
+        );
     }
 
     // ---- §Perf-4/§Perf-5: sharded Eq. 50 oracle solve, large scenario ----
@@ -457,6 +477,61 @@ fn main() {
                 std::hint::black_box(ShardPlan::build(&edition, shards));
             }
         }));
+    }
+
+    // ---- §Recover: checkpointed execution + kill-and-resume, default ----
+    // Overhead story first: the same 50-slot OGASCHED run uninterrupted
+    // (`nockpt`), then through the resilient driver at checkpoint epochs
+    // {1, 5, 17} with no injected faults — the gap is pure freeze cost
+    // (snapshot serialization amortized over epoch slots; results are
+    // bitwise-identical by the recovery-parity contract).  The `kills`
+    // row injects process kills on top of epoch 5, so it additionally
+    // pays thaw + replay of the slots since the last checkpoint.
+    {
+        use ogasched::sim::checkpoint::run_resilient_scenario;
+        use ogasched::sim::run_on_problem;
+        let mut scenario = Scenario::default();
+        scenario.horizon = 50;
+        let p = synthesize(&scenario);
+        rep.record(time_fn("resilient run h50 nockpt default 10x128x6", 1, 5, || {
+            let mut pol =
+                OgaSched::new(&p, scenario.eta0, scenario.decay, ExecBudget::auto());
+            std::hint::black_box(run_on_problem(&scenario, &p, &mut pol));
+        }));
+        for epoch in [1usize, 5, 17] {
+            let mut s = scenario.clone();
+            s.recovery.checkpoint_epoch = epoch;
+            rep.record(time_fn(
+                &format!("resilient run h50 epoch{epoch} default 10x128x6"),
+                1,
+                5,
+                || {
+                    let mut pol =
+                        OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
+                    std::hint::black_box(
+                        run_resilient_scenario(&s, &mut pol, false).expect("resilient"),
+                    );
+                },
+            ));
+        }
+        {
+            let mut s = scenario.clone();
+            s.recovery.checkpoint_epoch = 5;
+            s.recovery.kill_rate = 0.04;
+            s.recovery.seed = 11;
+            rep.record(time_fn(
+                "resilient run h50 epoch5 kills default 10x128x6",
+                1,
+                5,
+                || {
+                    let mut pol =
+                        OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
+                    std::hint::black_box(
+                        run_resilient_scenario(&s, &mut pol, false).expect("resilient"),
+                    );
+                },
+            ));
+        }
     }
 
     // machine-readable perf record at the repo root (tracked across PRs)

@@ -96,6 +96,14 @@ COMMANDS:
                --churn-rebuild       use the from-scratch rebuild arm
                                      instead of incremental maintenance
                                      (bitwise-identical by contract)
+               crash resilience (any active knob runs the resilient driver:
+               deterministic checkpoints + kill-and-resume recovery, bitwise
+               equal to the uninterrupted run by contract):
+               --checkpoint-epoch N  snapshot every N slots (0 = only the
+                                     implicit slot-0 snapshot; kills then
+                                     replay from the start)
+               --exec-panic-rate F --exec-stall-rate F --exec-stall-ms N
+               --exec-kill-rate F --ckpt-fail-rate F --exec-fault-seed N
     compare    run the full paper lineup on one scenario (same options)
     figure     regenerate a paper figure/table:
                ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|churn|all>
@@ -108,6 +116,7 @@ EXAMPLES:
     ogasched figure fig2 --horizon 1000
     ogasched run --policy ogasched-hlo --horizon 500
     ogasched run --fault-instance-rate 0.02 --fault-recover-rate 0.2 --horizon 500
+    ogasched run --checkpoint-epoch 20 --exec-kill-rate 0.01 --horizon 500
 ";
 
 #[cfg(test)]

@@ -104,6 +104,74 @@ impl FaultConfig {
     }
 }
 
+/// Crash-resilience knobs (`[recovery]` in config files; consumed by
+/// `sim::checkpoint`).  The default config checkpoints nothing and
+/// injects nothing, so plain scenarios pay zero overhead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryConfig {
+    /// Snapshot every this-many slots (0 = checkpointing off).
+    pub checkpoint_epoch: usize,
+    /// Per-slot probability of an injected worker panic (one shard of
+    /// the slot's commit scatter panics at task entry, is retried).
+    pub panic_rate: f64,
+    /// Per-slot probability of an injected worker stall (sleeps past
+    /// the watchdog deadline, then panics and is retried).
+    pub stall_rate: f64,
+    /// Per-slot probability that a process kill is scheduled at the
+    /// slot boundary (the resilient driver discards live state and
+    /// restores from the last durable checkpoint).
+    pub kill_rate: f64,
+    /// Per-checkpoint probability that the write fails (the snapshot is
+    /// dropped; recovery then reaches further back).
+    pub ckpt_fail_rate: f64,
+    /// Injected stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Seed of the execution-fault stream (independent of both the
+    /// workload seed and the topology-fault seed).
+    pub seed: u64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            checkpoint_epoch: 0,
+            panic_rate: 0.0,
+            stall_rate: 0.0,
+            kill_rate: 0.0,
+            ckpt_fail_rate: 0.0,
+            stall_ms: 20,
+            seed: 101,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Does this config do anything (checkpoint or inject)?
+    pub fn enabled(&self) -> bool {
+        self.checkpoint_epoch > 0
+            || self.panic_rate > 0.0
+            || self.stall_rate > 0.0
+            || self.kill_rate > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("recovery.panic_rate", self.panic_rate),
+            ("recovery.stall_rate", self.stall_rate),
+            ("recovery.kill_rate", self.kill_rate),
+            ("recovery.ckpt_fail_rate", self.ckpt_fail_rate),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} {v} outside [0,1]"));
+            }
+        }
+        // kill_rate with checkpoint_epoch == 0 is legal: the driver
+        // always holds the implicit slot-0 snapshot, so a kill replays
+        // from the start — slow, but still bitwise.
+        Ok(())
+    }
+}
+
 /// All knobs of one simulated experiment (defaults = paper Tab. 2).
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -138,6 +206,8 @@ pub struct Scenario {
     pub parallel: ExecBudget,
     /// Fault-injection severity (`[faults]`; off by default).
     pub faults: FaultConfig,
+    /// Crash-resilience knobs (`[recovery]`; off by default).
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for Scenario {
@@ -163,6 +233,7 @@ impl Default for Scenario {
             seed: 2023,
             parallel: ExecBudget::auto(),
             faults: FaultConfig::default(),
+            recovery: RecoveryConfig::default(),
         }
     }
 }
@@ -237,6 +308,7 @@ impl Scenario {
             }
         }
         self.faults.validate()?;
+        self.recovery.validate()?;
         Ok(())
     }
 
@@ -251,6 +323,9 @@ impl Scenario {
             "faults.instance_rate", "faults.recover_rate", "faults.port_rate",
             "faults.rack_rate", "faults.rack_size", "faults.release",
             "faults.replan_threshold", "faults.seed",
+            "recovery.checkpoint_epoch", "recovery.panic_rate",
+            "recovery.stall_rate", "recovery.kill_rate",
+            "recovery.ckpt_fail_rate", "recovery.stall_ms", "recovery.seed",
         ];
         for key in doc.entries.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -298,6 +373,16 @@ impl Scenario {
             replan_threshold: doc.f64_or("faults.replan_threshold", df.replan_threshold)?,
             seed: doc.usize_or("faults.seed", df.seed as usize)? as u64,
         };
+        let dr = d.recovery;
+        let recovery = RecoveryConfig {
+            checkpoint_epoch: doc.usize_or("recovery.checkpoint_epoch", dr.checkpoint_epoch)?,
+            panic_rate: doc.f64_or("recovery.panic_rate", dr.panic_rate)?,
+            stall_rate: doc.f64_or("recovery.stall_rate", dr.stall_rate)?,
+            kill_rate: doc.f64_or("recovery.kill_rate", dr.kill_rate)?,
+            ckpt_fail_rate: doc.f64_or("recovery.ckpt_fail_rate", dr.ckpt_fail_rate)?,
+            stall_ms: doc.usize_or("recovery.stall_ms", dr.stall_ms as usize)? as u64,
+            seed: doc.usize_or("recovery.seed", dr.seed as usize)? as u64,
+        };
         let s = Scenario {
             name: doc.str_or("name", &d.name)?.to_string(),
             num_ports: doc.usize_or("ports", d.num_ports)?,
@@ -323,6 +408,7 @@ impl Scenario {
                 )?,
             },
             faults,
+            recovery,
         };
         s.validate()?;
         Ok(s)
@@ -418,6 +504,27 @@ mod tests {
         assert!(Scenario::from_toml("[faults]\nrelease = \"maybe\"\n").is_err());
         assert!(Scenario::from_toml("[faults]\nreplan_threshold = 0.5\n").is_err());
         assert!(Scenario::from_toml("[faults]\nrack_size = 0\n").is_err());
+    }
+
+    #[test]
+    fn recovery_section_parses_and_defaults_off() {
+        let s = Scenario::default();
+        assert!(!s.recovery.enabled());
+        let s = Scenario::from_toml(
+            "[recovery]\ncheckpoint_epoch = 5\npanic_rate = 0.02\nkill_rate = 0.01\n\
+             ckpt_fail_rate = 0.1\nstall_ms = 15\nseed = 4\n",
+        )
+        .unwrap();
+        assert!(s.recovery.enabled());
+        assert_eq!(s.recovery.checkpoint_epoch, 5);
+        assert_eq!(s.recovery.panic_rate, 0.02);
+        assert_eq!(s.recovery.kill_rate, 0.01);
+        assert_eq!(s.recovery.ckpt_fail_rate, 0.1);
+        assert_eq!(s.recovery.stall_ms, 15);
+        assert_eq!(s.recovery.seed, 4);
+        assert_eq!(s.recovery.stall_rate, RecoveryConfig::default().stall_rate);
+        assert!(Scenario::from_toml("[recovery]\npanic_rate = 2.0\n").is_err());
+        assert!(Scenario::from_toml("[recovery]\nepoch = 5\n").is_err());
     }
 
     #[test]

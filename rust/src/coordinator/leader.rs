@@ -33,8 +33,10 @@ use crate::sim::arrivals::ArrivalModel;
 use crate::utils::pool;
 use crate::utils::pool::ExecBudget;
 
-/// Per-slot record (the recorder of sim/).
-#[derive(Clone, Copy, Debug, Default)]
+/// Per-slot record (the recorder of sim/).  `PartialEq` is *bitwise*
+/// (f64 ==) on purpose: recovery/churn parity tests assert records are
+/// identical to the last bit, not merely close.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SlotRecord {
     pub t: usize,
     pub q: f64,
@@ -90,6 +92,14 @@ pub struct Leader<'p> {
     state: ClusterState,
     /// Assert that policies never need clamping (on in tests/debug).
     pub strict: bool,
+    /// Execution-fault injector (`sim::checkpoint::run_resilient`):
+    /// fired once per slot at a side-effect-free point, isolated by
+    /// `pool::run_isolated` so an injected panic/stall is survived —
+    /// identically to the sharded leader's per-shard fire sites.
+    probe: Option<Arc<pool::ExecProbe>>,
+    /// Global slot offset of this segment (resumed runs restart their
+    /// local `t` at 0; probes and failure reports use absolute slots).
+    slot_base: u64,
 }
 
 impl<'p> Leader<'p> {
@@ -98,6 +108,8 @@ impl<'p> Leader<'p> {
             problem,
             state: ClusterState::new(problem),
             strict: cfg!(debug_assertions),
+            probe: None,
+            slot_base: 0,
         }
     }
 
@@ -105,7 +117,20 @@ impl<'p> Leader<'p> {
     /// (`sim::faults` drives segment-wise horizons across topology
     /// editions; the ledger's [R, K] shape is churn-invariant).
     pub fn resume(problem: &'p Problem, state: ClusterState) -> Self {
-        Leader { problem, state, strict: cfg!(debug_assertions) }
+        Leader {
+            problem,
+            state,
+            strict: cfg!(debug_assertions),
+            probe: None,
+            slot_base: 0,
+        }
+    }
+
+    /// Arm an execution-fault probe and set the absolute slot of this
+    /// segment's first local slot (see [`Leader::run`]).
+    pub fn arm_probe(&mut self, probe: Arc<pool::ExecProbe>, slot_base: u64) {
+        self.probe = Some(probe);
+        self.slot_base = slot_base;
     }
 
     /// Hand the ledger to the next segment's leader.
@@ -147,6 +172,14 @@ impl<'p> Leader<'p> {
         };
         let start = Instant::now();
         for t in 0..horizon {
+            let abs_slot = self.slot_base + t as u64;
+            pool::set_slot(abs_slot);
+            if let Some(probe) = &self.probe {
+                // side-effect-free fire point (before decide): a caught
+                // injected panic retries against unmodified state, so
+                // the serial path survives faults without float drift
+                pool::run_isolated(|| probe.fire(abs_slot, 0));
+            }
             arrivals.next(&mut x);
             policy.decide(p, &x, &mut y);
             // commit only what the policy changed (§Perf-2); the full

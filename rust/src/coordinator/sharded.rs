@@ -142,6 +142,53 @@ impl ShardPlan {
         ShardPlan { num_shards: s_n, owner, shard_instances, loads, port_ptr, port_edges }
     }
 
+    /// Rebuild a plan from a snapshotted instance→shard assignment
+    /// (`sim::checkpoint`).  Ownership is *path-dependent* — threshold
+    /// re-plans re-run LPT against whatever topology edition triggered
+    /// them — so a resumed run cannot re-derive it; the checkpoint
+    /// carries the owner map and this reconstructs every derived
+    /// structure against the restored topology.
+    pub fn with_owners(
+        problem: &Problem,
+        num_shards: usize,
+        owner: Vec<u32>,
+    ) -> Result<ShardPlan, String> {
+        let r_n = problem.num_instances();
+        if num_shards == 0 {
+            return Err("with_owners: zero shards".into());
+        }
+        if owner.len() != r_n {
+            return Err(format!(
+                "with_owners: owner map covers {} instances, problem has {r_n}",
+                owner.len()
+            ));
+        }
+        let mut shard_instances = vec![Vec::new(); num_shards];
+        for (r, &s) in owner.iter().enumerate() {
+            let s = s as usize;
+            if s >= num_shards {
+                return Err(format!(
+                    "with_owners: instance {r} assigned to shard {s} (S={num_shards})"
+                ));
+            }
+            shard_instances[s].push(r);
+        }
+        let skeleton = ShardPlan {
+            num_shards,
+            owner,
+            shard_instances,
+            loads: vec![0; num_shards],
+            port_ptr: Vec::new(),
+            port_edges: Vec::new(),
+        };
+        skeleton.refresh(problem)
+    }
+
+    /// The instance→shard assignment (snapshotted by `sim::checkpoint`).
+    pub fn owners(&self) -> &[u32] {
+        &self.owner
+    }
+
     /// Rebuild the plan's *derived* structures against a mutated graph,
     /// keeping the instance→shard assignment (`sim::faults`' cheap
     /// re-plan path).  Every edge id shifts when the edge set changes,
@@ -332,6 +379,77 @@ impl ShardLedger {
     fn row_of(&self, r: usize, k_n: usize) -> &[f64] {
         &self.usage[r * k_n..(r + 1) * k_n]
     }
+
+    /// Serialize the shard's rows (`sim::checkpoint`).  The full [R, K]
+    /// grid is written — only the owned rows are meaningful, but the
+    /// owner set is the plan's concern and writing the grid keeps the
+    /// blob layout independent of it.
+    pub fn snapshot(&self, w: &mut crate::utils::codec::Writer) {
+        w.put_f64s(&self.usage);
+    }
+
+    /// Rebuild from [`ShardLedger::snapshot`] against the same edition.
+    pub fn restore(
+        problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<ShardLedger, String> {
+        let usage = r.get_f64s()?;
+        if usage.len() != problem.capacity.len() {
+            return Err(format!(
+                "shard ledger snapshot: usage len {} vs capacity len {}",
+                usage.len(),
+                problem.capacity.len()
+            ));
+        }
+        Ok(ShardLedger { usage, row: vec![0.0; problem.num_resources] })
+    }
+}
+
+/// Per-shard occupancy telemetry: edges-touched per shard per slot in
+/// the reward stage's arrived neighborhood (the quantity phase-B work
+/// scales with).  Groundwork for the ROADMAP work-stealing item — this
+/// measures the skew the static LPT plan leaves on the table under
+/// sparse/skewed arrivals.  min/max are over every (slot, shard)
+/// sample; `mean` averages across them.
+#[derive(Clone, Copy, Debug)]
+pub struct OccupancyStats {
+    /// Slots sampled.
+    pub slots: u64,
+    /// Shards per slot (the plan's width).
+    pub shards: usize,
+    /// Fewest edges any shard touched in any sampled slot.
+    pub min: u64,
+    /// Most edges any shard touched in any sampled slot.
+    pub max: u64,
+    /// Total edges touched across all samples.
+    pub sum: u64,
+}
+
+impl Default for OccupancyStats {
+    fn default() -> Self {
+        OccupancyStats { slots: 0, shards: 0, min: u64::MAX, max: 0, sum: 0 }
+    }
+}
+
+impl OccupancyStats {
+    /// Mean edges-touched per (slot, shard) sample.
+    pub fn mean(&self) -> f64 {
+        let samples = self.slots * self.shards.max(1) as u64;
+        if samples == 0 {
+            0.0
+        } else {
+            self.sum as f64 / samples as f64
+        }
+    }
+
+    /// `min` with the empty sentinel normalized away.
+    pub fn min_or_zero(&self) -> u64 {
+        if self.slots == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
 }
 
 /// Per-shard worker state: the ledger shard plus per-slot scratch.
@@ -361,6 +479,20 @@ pub struct ShardedLeader<'p> {
     /// Per-arrived-position reward slots of the scattered reward stage
     /// (`reward::slot_reward_ports_sharded`, §Perf-5).
     reward_scratch: PortRewardScratch,
+    /// Execution-fault probe (`sim::faults::ExecFaultPlan`): fired at
+    /// the entry of every per-shard commit closure, *before* any ledger
+    /// or decision write, so an injected panic/stall is retried from a
+    /// clean slate and can never change floats.
+    probe: Option<Arc<pool::ExecProbe>>,
+    /// Absolute slot of the next [`ShardedLeader::slot`] call.  Resumed
+    /// segments restart their local `t` at 0; probes and failure reports
+    /// key on absolute slots, so the driver re-bases this via
+    /// [`ShardedLeader::arm_probe`].
+    next_slot: u64,
+    /// Per-shard edges-touched telemetry accumulated by the reward
+    /// stage (ISSUE 7 satellite; surfaces LPT skew under sparse
+    /// arrivals for the hot-path bench and `figure sparse`).
+    occupancy: OccupancyStats,
     /// Assert that policies never need clamping (on in tests/debug).
     pub strict: bool,
 }
@@ -391,8 +523,25 @@ impl<'p> ShardedLeader<'p> {
             delta_of: vec![0.0; problem.num_instances()],
             arrived: Vec::new(),
             reward_scratch: PortRewardScratch::default(),
+            probe: None,
+            next_slot: 0,
+            occupancy: OccupancyStats::default(),
             strict: cfg!(debug_assertions),
         }
+    }
+
+    /// Arm an execution-fault probe and re-base the absolute slot
+    /// counter (resumed segments run local `t = 0..` but injected
+    /// faults key on absolute slots).
+    pub fn arm_probe(&mut self, probe: Arc<pool::ExecProbe>, slot_base: u64) {
+        self.probe = Some(probe);
+        self.next_slot = slot_base;
+    }
+
+    /// The occupancy telemetry accumulated so far (reset-free; callers
+    /// snapshot before/after a run window if they want a delta).
+    pub fn occupancy(&self) -> OccupancyStats {
+        self.occupancy
     }
 
     /// Resume a run with a ledger and (optionally) the previous
@@ -454,11 +603,14 @@ impl<'p> ShardedLeader<'p> {
         x: &[f64],
         y: &mut [f64],
     ) -> (CommitReport, SlotReward) {
+        let abs_slot = self.next_slot;
+        self.next_slot += 1;
+        pool::set_slot(abs_slot);
         let p = self.problem;
         policy.decide(p, x, y);
         let report = match policy.touched() {
-            Touched::All => self.commit_all(y),
-            Touched::Instances(list) => self.commit_list(y, list),
+            Touched::All => self.commit_all(y, abs_slot),
+            Touched::Instances(list) => self.commit_list(y, list, abs_slot),
         };
         let reward = self.reward(x, y);
         self.state.release();
@@ -511,7 +663,7 @@ impl<'p> ShardedLeader<'p> {
 
     /// Incremental sharded commit: route the dirty set by owner, commit
     /// rows in the worker-owned ledgers, fold rows + Σ deltas back.
-    fn commit_list(&mut self, y: &mut [f64], list: &[usize]) -> CommitReport {
+    fn commit_list(&mut self, y: &mut [f64], list: &[usize], abs_slot: u64) -> CommitReport {
         let p = self.problem;
         self.state.begin_merge();
         if list.is_empty() {
@@ -539,10 +691,16 @@ impl<'p> ShardedLeader<'p> {
             self.delta_of.resize(list.len(), 0.0);
         }
         {
+            let probe = self.probe.clone();
             let deltas = SyncSlice::new(&mut self.delta_of);
             let view = SyncSlice::new(y);
             let y_len = view.len();
-            pool::parallel_shards(&mut self.workers, |_s, w| {
+            pool::parallel_shards(&mut self.workers, |s, w| {
+                // Fault-injection point: *before* any write, so a
+                // retried task replays against untouched state.
+                if let Some(probe) = &probe {
+                    probe.fire(abs_slot, s as u32);
+                }
                 // SAFETY: shards own disjoint instance sets, so an
                 // instance's usage row and edge columns of `y` are
                 // touched only by its owner, and each list position is
@@ -578,17 +736,23 @@ impl<'p> ShardedLeader<'p> {
     /// Full-sweep fallback (`Touched::All`): every shard re-derives all
     /// of its rows; the folded total is re-summed in flat index order,
     /// exactly like the serial full-sweep commit.
-    fn commit_all(&mut self, y: &mut [f64]) -> CommitReport {
+    fn commit_all(&mut self, y: &mut [f64], abs_slot: u64) -> CommitReport {
         let p = self.problem;
         self.state.begin_merge();
         for w in &mut self.workers {
             w.clamped = 0;
         }
         {
+            let probe = self.probe.clone();
             let plan = &self.plan;
             let view = SyncSlice::new(y);
             let y_len = view.len();
             pool::parallel_shards(&mut self.workers, |s, w| {
+                // Fault-injection point — before any write (see
+                // `commit_list`).
+                if let Some(probe) = &probe {
+                    probe.fire(abs_slot, s as u32);
+                }
                 // SAFETY: as in `commit_list` — disjoint instance sets,
                 // full-range view per the crate's `projection::SharedTensor`
                 // disjoint-ownership pattern.
@@ -628,6 +792,22 @@ impl<'p> ShardedLeader<'p> {
         let p = self.problem;
         self.arrived.clear();
         self.arrived.extend((0..p.num_ports()).filter(|&l| x[l] != 0.0));
+        // Occupancy telemetry: edges each shard would touch in this
+        // slot's arrived neighborhood.  CSR ptr arithmetic only —
+        // O(shards × arrived) per slot, no edge walk.
+        let shards = self.plan.num_shards();
+        self.occupancy.slots += 1;
+        self.occupancy.shards = shards;
+        for s in 0..shards {
+            let edges: u64 = self
+                .arrived
+                .iter()
+                .map(|&l| self.plan.port_edges(s, l).len() as u64)
+                .sum();
+            self.occupancy.min = self.occupancy.min.min(edges);
+            self.occupancy.max = self.occupancy.max.max(edges);
+            self.occupancy.sum += edges;
+        }
         slot_reward_ports_sharded(
             p,
             p.kinds(),
@@ -856,5 +1036,104 @@ mod tests {
         assert_eq!(y_sharded, y_serial);
         // scratch lists are drained for the next slot
         assert!(parts.iter().all(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn with_owners_round_trips_a_plan() {
+        let p = synthesize(&Scenario::small());
+        let plan = ShardPlan::build(&p, 3);
+        let rebuilt =
+            ShardPlan::with_owners(&p, plan.num_shards(), plan.owners().to_vec()).unwrap();
+        rebuilt.validate(&p).unwrap();
+        assert_eq!(rebuilt.owners(), plan.owners());
+        for s in 0..plan.num_shards() {
+            assert_eq!(rebuilt.instances(s), plan.instances(s));
+            assert_eq!(rebuilt.load(s), plan.load(s));
+        }
+        for l in 0..p.num_ports() {
+            for s in 0..plan.num_shards() {
+                assert_eq!(rebuilt.port_edges(s, l), plan.port_edges(s, l));
+            }
+        }
+    }
+
+    #[test]
+    fn with_owners_rejects_malformed_maps() {
+        let p = synthesize(&Scenario::small());
+        let plan = ShardPlan::build(&p, 2);
+        assert!(ShardPlan::with_owners(&p, 0, plan.owners().to_vec()).is_err());
+        assert!(ShardPlan::with_owners(&p, 2, vec![0; 3]).is_err());
+        let mut bad = plan.owners().to_vec();
+        bad[0] = 7; // out of range for S=2
+        assert!(ShardPlan::with_owners(&p, 2, bad).is_err());
+    }
+
+    #[test]
+    fn shard_ledger_snapshot_round_trips() {
+        let p = synthesize(&Scenario::small());
+        let mut leader = ShardedLeader::new(&p, 2);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.8, 21);
+        leader.run(&mut pol, &mut arr, 10);
+        let (_, _, ledgers) = leader.into_parts();
+        for ledger in &ledgers {
+            let mut w = crate::utils::codec::Writer::new();
+            ledger.snapshot(&mut w);
+            let bytes = w.into_bytes();
+            let mut r = crate::utils::codec::Reader::new(&bytes).unwrap();
+            let back = ShardLedger::restore(&p, &mut r).unwrap();
+            r.finish().unwrap();
+            assert_eq!(back.usage, ledger.usage);
+        }
+    }
+
+    #[test]
+    fn occupancy_counts_arrived_neighborhood_edges() {
+        let p = synthesize(&Scenario::small());
+        let mut leader = ShardedLeader::new(&p, 3);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.8, 5);
+        let horizon = 12;
+        leader.run(&mut pol, &mut arr, horizon);
+        let occ = leader.occupancy();
+        assert_eq!(occ.slots, horizon as u64);
+        assert_eq!(occ.shards, leader.plan().num_shards());
+        assert!(occ.min_or_zero() <= occ.max);
+        assert!(occ.mean() >= occ.min_or_zero() as f64);
+        assert!(occ.mean() <= occ.max as f64);
+        // every edge of every arrived port lands in exactly one shard,
+        // so the per-slot shard sum telescopes into the total
+        assert!(occ.sum > 0, "dense arrivals must touch edges");
+    }
+
+    #[test]
+    fn armed_probe_fault_is_survived_and_bitwise_invisible() {
+        use std::collections::BTreeSet;
+        let p = synthesize(&Scenario::small());
+        let horizon = 10;
+        let mut clean = ShardedLeader::new(&p, 2);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.8, 33);
+        let want = clean.run(&mut pol, &mut arr, horizon);
+
+        let mut faulty = ShardedLeader::new(&p, 2);
+        let panics: BTreeSet<(u64, u32)> = [(3u64, 1u32), (7, 0)].into();
+        let probe = Arc::new(pool::ExecProbe::new(panics, BTreeSet::new(), 5));
+        faulty.arm_probe(Arc::clone(&probe), 0);
+        let mut pol2 = Fairness::new();
+        let mut arr2 = Bernoulli::uniform(p.num_ports(), 0.8, 33);
+        let got = faulty.run(&mut pol2, &mut arr2, horizon);
+
+        assert_eq!(probe.fired_count(), 2, "both injected faults must fire");
+        assert_eq!(got.cumulative_reward, want.cumulative_reward);
+        assert_eq!(got.records, want.records);
+        for r in 0..p.num_instances() {
+            for k in 0..p.num_resources {
+                assert_eq!(
+                    faulty.state().remaining_at(r, k),
+                    clean.state().remaining_at(r, k),
+                );
+            }
+        }
     }
 }

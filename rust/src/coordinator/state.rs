@@ -314,6 +314,56 @@ impl ClusterState {
         }
     }
 
+    /// Serialize the ledger for `sim::checkpoint` — exact: the usage
+    /// grid, the compensated running Σ (both words, so the Neumaier
+    /// state resumes mid-stream without re-deriving), and the fault
+    /// mask.  Capacity/scratch are rebuilt from the Problem on restore;
+    /// `in_slot` is always false at a checkpoint boundary (snapshots
+    /// are taken between slots, after release).
+    pub fn snapshot(&self, w: &mut crate::utils::codec::Writer) {
+        debug_assert!(!self.in_slot, "checkpoint mid-slot");
+        w.put_f64s(&self.usage);
+        w.put_f64(self.total_units);
+        w.put_f64(self.total_comp);
+        w.put_bools(&self.failed);
+    }
+
+    /// Rebuild a ledger from [`ClusterState::snapshot`] against the
+    /// same topology edition the snapshot was taken on.
+    pub fn restore(
+        problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<ClusterState, String> {
+        let usage = r.get_f64s()?;
+        let total_units = r.get_f64()?;
+        let total_comp = r.get_f64()?;
+        let failed = r.get_bools()?;
+        if usage.len() != problem.capacity.len() {
+            return Err(format!(
+                "ledger snapshot: usage len {} vs capacity len {} (wrong edition?)",
+                usage.len(),
+                problem.capacity.len()
+            ));
+        }
+        if failed.len() != problem.num_instances() {
+            return Err(format!(
+                "ledger snapshot: fault mask len {} vs R={}",
+                failed.len(),
+                problem.num_instances()
+            ));
+        }
+        Ok(ClusterState {
+            usage,
+            capacity: problem.capacity.clone(),
+            total_units,
+            total_comp,
+            row: vec![0.0; problem.num_resources],
+            failed,
+            k_n: problem.num_resources,
+            in_slot: false,
+        })
+    }
+
     /// Conservation invariant: remaining + committed == capacity, and
     /// remaining is never negative.
     pub fn check_conservation(&self) -> Result<(), String> {

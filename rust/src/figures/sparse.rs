@@ -12,10 +12,16 @@
 //! same plotting scripts apply.
 
 use crate::config::Scenario;
+use crate::coordinator::{OccupancyStats, ShardedLeader};
 use crate::figures::{results_dir, FigureOutput};
 use crate::metrics;
+use crate::schedulers::OgaSched;
 use crate::sim;
+use crate::sim::arrivals::{ArrivalModel, Bernoulli};
+use crate::traces::synthesize;
+use crate::utils::csv::Csv;
 use crate::utils::table::Table;
+use crate::ExecBudget;
 
 /// Bernoulli arrival probability of the sparse regime (the §Perf-2
 /// bench setting).
@@ -27,6 +33,33 @@ pub fn scenario(horizon_override: usize) -> Scenario {
     s.horizon = if horizon_override > 0 { horizon_override } else { 8000 };
     s.arrival_prob = SPARSE_ARRIVAL_PROB;
     s
+}
+
+/// Shard widths swept by the occupancy columns.
+const OCCUPANCY_SHARDS: [usize; 4] = [1, 2, 4, 8];
+
+/// Drive OGASCHED through the sharded leader at each shard width and
+/// report the per-shard edges-touched telemetry — how much reward-stage
+/// work each shard of the static LPT plan actually sees per slot under
+/// the sparse regime (ISSUE 7 satellite; work-stealing groundwork).
+fn occupancy_sweep(s: &Scenario) -> Vec<(usize, OccupancyStats)> {
+    let p = synthesize(s);
+    OCCUPANCY_SHARDS
+        .iter()
+        .map(|&shards| {
+            let mut leader = ShardedLeader::new(&p, shards);
+            let mut pol = OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
+            pol.bind_shards(leader.plan());
+            let mut arr = Bernoulli::uniform(p.num_ports(), s.arrival_prob, s.seed);
+            let mut x = vec![0.0; p.num_ports()];
+            let mut y = vec![0.0; p.decision_len()];
+            for _ in 0..s.horizon {
+                arr.next(&mut x);
+                leader.slot(&mut pol, &x, &mut y);
+            }
+            (shards, leader.occupancy())
+        })
+        .collect()
 }
 
 pub fn run(horizon_override: usize) -> FigureOutput {
@@ -49,6 +82,32 @@ pub fn run(horizon_override: usize) -> FigureOutput {
         csv_paths.push(path);
     }
 
+    // Occupancy columns: the same per-shard edges-touched counters the
+    // hot-path bench samples, here at figure scale and horizon.
+    let occ = occupancy_sweep(&s);
+    let mut occ_csv =
+        Csv::new(&["shards", "slots", "min_edges", "mean_edges", "max_edges"]);
+    let mut occ_table = Table::new(&["shards", "slots", "min", "mean", "max"]);
+    for (shards, o) in &occ {
+        occ_csv.push_row(&[
+            shards.to_string(),
+            o.slots.to_string(),
+            o.min_or_zero().to_string(),
+            format!("{:.2}", o.mean()),
+            o.max.to_string(),
+        ]);
+        occ_table.push(&[
+            shards.to_string(),
+            o.slots.to_string(),
+            o.min_or_zero().to_string(),
+            format!("{:.2}", o.mean()),
+            o.max.to_string(),
+        ]);
+    }
+    let occ_path = dir.join("sparse_occupancy.csv");
+    let _ = occ_csv.write_file(&occ_path);
+    csv_paths.push(occ_path);
+
     let mut table =
         Table::new(&["policy", "avg reward", "cumulative", "OGA improvement"]);
     for run in &results {
@@ -67,10 +126,12 @@ pub fn run(horizon_override: usize) -> FigureOutput {
     FigureOutput {
         title: "Sparse traffic — lineup at Bernoulli(0.1) arrivals".into(),
         rendered: format!(
-            "T={} rho={} (fig2 defaults otherwise; the §Perf-2 bench regime)\n{}",
+            "T={} rho={} (fig2 defaults otherwise; the §Perf-2 bench regime)\n{}\n\
+             per-shard occupancy (reward-stage edges touched per shard-slot):\n{}",
             s.horizon,
             SPARSE_ARRIVAL_PROB,
-            table.render()
+            table.render(),
+            occ_table.render()
         ),
         csv_paths,
     }
@@ -84,7 +145,22 @@ mod tests {
     fn sparse_figure_runs_and_oga_leads() {
         let out = run(400);
         assert!(out.rendered.contains("OGASCHED"));
-        assert_eq!(out.csv_paths.len(), 2);
+        assert!(out.rendered.contains("per-shard occupancy"));
+        assert_eq!(out.csv_paths.len(), 3);
+    }
+
+    #[test]
+    fn occupancy_sweep_samples_every_width() {
+        let mut s = scenario(40);
+        s.num_ports = 6;
+        s.num_instances = 24;
+        let occ = occupancy_sweep(&s);
+        assert_eq!(occ.len(), OCCUPANCY_SHARDS.len());
+        for (shards, o) in occ {
+            assert_eq!(o.shards, shards);
+            assert_eq!(o.slots, 40);
+            assert!(o.min_or_zero() <= o.max);
+        }
     }
 
     #[test]

@@ -83,6 +83,17 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
             other => return Err(format!("--fault-release: unknown mode `{other}` (drain|release)")),
         };
     }
+    // Crash-resilience knobs (§Recover): checkpoint cadence plus the
+    // execution-fault stream; any active knob routes `cmd_run` through
+    // the resilient kill-and-resume driver.
+    s.recovery.checkpoint_epoch =
+        args.opt_usize("checkpoint-epoch", s.recovery.checkpoint_epoch)?;
+    s.recovery.panic_rate = args.opt_f64("exec-panic-rate", s.recovery.panic_rate)?;
+    s.recovery.stall_rate = args.opt_f64("exec-stall-rate", s.recovery.stall_rate)?;
+    s.recovery.kill_rate = args.opt_f64("exec-kill-rate", s.recovery.kill_rate)?;
+    s.recovery.ckpt_fail_rate = args.opt_f64("ckpt-fail-rate", s.recovery.ckpt_fail_rate)?;
+    s.recovery.stall_ms = args.opt_usize("exec-stall-ms", s.recovery.stall_ms as usize)? as u64;
+    s.recovery.seed = args.opt_usize("exec-fault-seed", s.recovery.seed as usize)? as u64;
     s.validate()?;
     Ok(s)
 }
@@ -107,6 +118,30 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         "random" => Box::new(RandomAlloc::new(s.seed)),
         other => return Err(format!("unknown policy `{other}`")),
     };
+    if s.recovery.enabled() {
+        let rebuild = args.has_flag("churn-rebuild");
+        let out = sim::checkpoint::run_resilient_scenario(&s, policy.as_mut(), rebuild)?;
+        println!(
+            "policy={} T={} avg_reward={:.3} cumulative={:.1} throughput={:.0} slots/s \
+             churn: events={} editions={} replans={} \
+             recover: ckpts={} (+{} dropped) kills={} restored_from={:?} worker_faults={} arm={}",
+            out.churn.result.policy,
+            s.horizon,
+            out.churn.result.avg_reward(),
+            out.churn.result.cumulative_reward,
+            out.churn.result.throughput(),
+            out.churn.events,
+            out.churn.editions,
+            out.churn.replans,
+            out.checkpoints_written,
+            out.checkpoints_failed,
+            out.kills,
+            out.restored_from,
+            out.worker_faults,
+            if rebuild { "rebuild" } else { "incremental" },
+        );
+        return Ok(());
+    }
     if s.faults.enabled() {
         let rebuild = args.has_flag("churn-rebuild");
         let out = sim::faults::run_churned_scenario(&s, policy.as_mut(), rebuild)?;

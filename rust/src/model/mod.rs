@@ -221,17 +221,29 @@ impl Problem {
     /// generation (so `IncrementalPublisher` identity goes stale and the
     /// first post-churn publish is a conservative full copy) and a
     /// rebuilt [`KindIndex`] (every edge id shifted).
-    fn reindex(&mut self) {
+    /// The debug panic carries the mutation site and the *new*
+    /// generation, so a broken invariant names which churn edit of
+    /// which edition produced it (editions are otherwise anonymous once
+    /// the event stream has scrolled by).
+    fn reindex(&mut self, site: impl FnOnce() -> String) {
         self.generation =
             PROBLEM_GENERATION.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let kinds = KindIndex::build(&*self);
         self.kinds = kinds;
         if cfg!(debug_assertions) {
             if let Err(e) = self.graph.validate() {
-                panic!("graph invariant broken after mutation: {e}");
+                panic!(
+                    "graph invariant broken after {} (generation {}): {e}",
+                    site(),
+                    self.generation
+                );
             }
             if let Err(e) = self.kinds.validate(self) {
-                panic!("kind index invariant broken after mutation: {e}");
+                panic!(
+                    "kind index invariant broken after {} (generation {}): {e}",
+                    site(),
+                    self.generation
+                );
             }
         }
     }
@@ -240,21 +252,21 @@ impl Problem {
     /// edges so recovery can restore exactly them.
     pub fn remove_instance_edges(&mut self, r: usize) -> Result<Vec<(usize, usize)>, String> {
         let removed = self.graph.remove_instance_edges(r)?;
-        self.reindex();
+        self.reindex(|| format!("remove_instance_edges({r})"));
         Ok(removed)
     }
 
     /// Drop every channel of port `l` (port-class departure).
     pub fn remove_port_edges(&mut self, l: usize) -> Result<Vec<(usize, usize)>, String> {
         let removed = self.graph.remove_port_edges(l)?;
-        self.reindex();
+        self.reindex(|| format!("remove_port_edges({l})"));
         Ok(removed)
     }
 
     /// Restore previously removed channels (recovery / arrival).
     pub fn restore_edges(&mut self, edges: &[(usize, usize)]) -> Result<(), String> {
         self.graph.add_edges(edges)?;
-        self.reindex();
+        self.reindex(|| format!("restore_edges({} channels)", edges.len()));
         Ok(())
     }
 
@@ -300,13 +312,24 @@ impl Problem {
     /// Flat index of channel (l, r), resource k in the edge-major
     /// decision layout.  Panics when (l, r) is not an edge — off-edge
     /// coordinates do not exist under the CSR layout.
+    ///
+    /// The hit path inlines to a CSR lookup plus a multiply-add; the
+    /// miss path is split out `#[cold]` so the panic's formatting
+    /// machinery never lands in the hot loop's code.  Both paths stay
+    /// fully bounds-checked — no `unsafe`, no UB — in release builds;
+    /// the miss simply panics from an outlined shim.
     #[inline]
     pub fn idx(&self, l: usize, r: usize, k: usize) -> usize {
-        let e = self
-            .graph
-            .edge_id(l, r)
-            .unwrap_or_else(|| panic!("idx({l},{r},{k}): ({l},{r}) is not an edge"));
-        e * self.num_resources + k
+        match self.graph.edge_id(l, r) {
+            Some(e) => e * self.num_resources + k,
+            None => Self::idx_miss(l, r, k),
+        }
+    }
+
+    #[cold]
+    #[inline(never)]
+    fn idx_miss(l: usize, r: usize, k: usize) -> ! {
+        panic!("idx({l},{r},{k}): ({l},{r}) is not an edge")
     }
 
     /// Flat index of edge `e`, resource k.

@@ -171,6 +171,42 @@ impl OgaState {
         self.shard_dirty.clear();
     }
 
+    /// Serialize the resume-sufficient state (`sim::checkpoint`): the
+    /// learned tensor y(t), the slot clock, and the running η.  Nothing
+    /// else survives a cut on purpose — the gradient/dirty scratch is
+    /// recomputed from scratch at every step's start, and checkpoints
+    /// are taken *between* slots where y is feasible and no projection
+    /// is pending.
+    pub fn snapshot(&self, w: &mut crate::utils::codec::Writer) {
+        w.put_f64s(&self.y);
+        w.put_u64(self.t as u64);
+        w.put_f64(self.eta_run);
+    }
+
+    /// Rebuild from [`OgaState::snapshot`] on top of a freshly
+    /// constructed state for the restored problem (scratch, dirty
+    /// tracking and plan binding all start clean, exactly like a new
+    /// run's first slot).
+    pub fn restore(
+        &mut self,
+        problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<(), String> {
+        let y = r.get_f64s()?;
+        if y.len() != problem.decision_len() {
+            return Err(format!(
+                "oga snapshot: y len {} vs decision len {} (wrong edition?)",
+                y.len(),
+                problem.decision_len()
+            ));
+        }
+        self.y = y;
+        self.t = r.get_u64()? as usize;
+        self.eta_run = r.get_f64()?;
+        self.full_project_pending = false;
+        Ok(())
+    }
+
     /// One OGA slot: observe x(t), ascend the reward gradient at
     /// (x(t), y(t)), project back onto Y.  Returns the step size used.
     ///

@@ -526,6 +526,28 @@ impl Policy for RandomAlloc {
     fn touched(&self) -> Touched<'_> {
         self.scope.touched()
     }
+
+    fn snapshot_state(&self, w: &mut crate::utils::codec::Writer) {
+        // The only cross-slot state is the RNG stream (ledger and scope
+        // rebuild from the arrived neighborhood every decide); `reset`
+        // does NOT re-seed it, so a resume must restore the stream
+        // position, not the seed.
+        let s = self.rng.state();
+        w.put_u64s(&s);
+    }
+
+    fn restore_state(
+        &mut self,
+        _problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<(), String> {
+        let s = r.get_u64s()?;
+        if s.len() != 4 {
+            return Err(format!("random-alloc snapshot: rng state len {}", s.len()));
+        }
+        self.rng = Rng::from_state([s[0], s[1], s[2], s[3]]);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -276,6 +276,35 @@ impl Policy for OgaMirror {
         self.publisher.reset();
         // t and eta_run carry — the learning clock survives the edition
     }
+
+    fn snapshot_state(&self, w: &mut crate::utils::codec::Writer) {
+        // Same minimal-sufficiency contract as `OgaState::snapshot`:
+        // the learned tensor, the slot clock, the running η.  The dirty
+        // tracking is cleared at every step's start, and the restored
+        // publisher's first publish is a full copy.
+        w.put_f64s(&self.y);
+        w.put_u64(self.t as u64);
+        w.put_f64(self.eta_run);
+    }
+
+    fn restore_state(
+        &mut self,
+        problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<(), String> {
+        let y = r.get_f64s()?;
+        if y.len() != problem.decision_len() {
+            return Err(format!(
+                "mirror snapshot: y len {} vs decision len {} (wrong edition?)",
+                y.len(),
+                problem.decision_len()
+            ));
+        }
+        self.y = y;
+        self.t = r.get_u64()? as usize;
+        self.eta_run = r.get_f64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

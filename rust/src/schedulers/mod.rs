@@ -91,6 +91,33 @@ pub trait Policy {
         let _ = old_graph;
         self.reset(problem);
     }
+
+    /// Serialize whatever internal state a mid-run resume needs into a
+    /// checkpoint blob (`sim::checkpoint`).  The contract is *minimal
+    /// sufficiency*: a policy writes exactly the state that the slot
+    /// loop cannot re-derive — learned tensors, decayed step sizes, RNG
+    /// streams — and nothing it recomputes per slot anyway.  Stateless
+    /// reactive policies (the capacity-ledger baselines rebuild from
+    /// the arrived neighborhood each slot) keep this default no-op.
+    fn snapshot_state(&self, w: &mut crate::utils::codec::Writer) {
+        let _ = w;
+    }
+
+    /// Rebuild from [`Policy::snapshot_state`].  Called on a policy
+    /// that was just `reset` against the restored problem — the restore
+    /// overlays the snapshotted state on top of that fresh baseline, so
+    /// implementations only touch the fields their snapshot wrote.
+    /// Must consume exactly the bytes the snapshot produced (the
+    /// checkpoint frames each policy blob as a length-prefixed section
+    /// and rejects trailing bytes).
+    fn restore_state(
+        &mut self,
+        problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<(), String> {
+        let _ = (problem, r);
+        Ok(())
+    }
 }
 
 /// Copy the edge columns of the listed instances from `src` to `dst`

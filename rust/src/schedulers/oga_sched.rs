@@ -150,6 +150,23 @@ impl Policy for OgaSched {
         self.publisher.reset();
         self.pending.clear();
     }
+
+    fn snapshot_state(&self, w: &mut crate::utils::codec::Writer) {
+        // `pending` is deliberately absent: a restored policy starts
+        // with a re-primed publisher, whose first publish is a full
+        // copy — bitwise identical to the incremental publish of the
+        // pending set, which is the same equivalence the run-epoch
+        // re-prime already relies on every fresh run.
+        self.state.snapshot(w);
+    }
+
+    fn restore_state(
+        &mut self,
+        problem: &Problem,
+        r: &mut crate::utils::codec::Reader,
+    ) -> Result<(), String> {
+        self.state.restore(problem, r)
+    }
 }
 
 #[cfg(test)]

@@ -3,7 +3,22 @@
 //! trace-derived base intensities (Tab. 2's ρ), and the regret ablation
 //! needs adversarial and bursty trajectories too.
 
+use crate::utils::codec::{Reader, Writer};
 use crate::utils::rng::Rng;
+
+/// Serialize an RNG stream position into a checkpoint blob.
+fn put_rng(w: &mut Writer, rng: &Rng) {
+    w.put_u64s(&rng.state());
+}
+
+/// Rebuild an RNG stream position from [`put_rng`]'s bytes.
+fn get_rng(r: &mut Reader) -> Result<Rng, String> {
+    let s = r.get_u64s()?;
+    if s.len() != 4 {
+        return Err(format!("arrival snapshot: rng state len {}", s.len()));
+    }
+    Ok(Rng::from_state([s[0], s[1], s[2], s[3]]))
+}
 
 /// A source of per-slot arrival vectors x(t) ∈ ℝ^|L| (0/1 in the base
 /// model; counts in the Sec. 3.4 extension).
@@ -14,6 +29,22 @@ pub trait ArrivalModel: Send {
     fn next(&mut self, x: &mut [f64]);
 
     fn reset(&mut self, _seed: u64) {}
+
+    /// Serialize the stream position for a mid-run resume
+    /// (`sim::checkpoint`).  Models write exactly what `next` consumes —
+    /// RNG state, phase counters — so a restored model emits the same
+    /// continuation the uninterrupted one would.  The default no-op is
+    /// only correct for stateless models; every model in this module
+    /// overrides it.
+    fn snapshot(&self, w: &mut Writer) {
+        let _ = w;
+    }
+
+    /// Rebuild from [`ArrivalModel::snapshot`] (default: nothing).
+    fn restore(&mut self, r: &mut Reader) -> Result<(), String> {
+        let _ = r;
+        Ok(())
+    }
 }
 
 /// i.i.d. Bernoulli(ρ_l) per port, ρ_l = ρ · w_l with per-port weights
@@ -55,6 +86,15 @@ impl ArrivalModel for Bernoulli {
     fn reset(&mut self, seed: u64) {
         self.seed = seed;
         self.rng = Rng::new(seed);
+    }
+
+    fn snapshot(&self, w: &mut Writer) {
+        put_rng(w, &self.rng);
+    }
+
+    fn restore(&mut self, r: &mut Reader) -> Result<(), String> {
+        self.rng = get_rng(r)?;
+        Ok(())
     }
 }
 
@@ -101,6 +141,25 @@ impl ArrivalModel for Bursty {
         self.rng = Rng::new(seed);
         self.state_on.fill(true);
     }
+
+    fn snapshot(&self, w: &mut Writer) {
+        put_rng(w, &self.rng);
+        w.put_bools(&self.state_on);
+    }
+
+    fn restore(&mut self, r: &mut Reader) -> Result<(), String> {
+        self.rng = get_rng(r)?;
+        let on = r.get_bools()?;
+        if on.len() != self.state_on.len() {
+            return Err(format!(
+                "bursty snapshot: {} phases vs {} ports",
+                on.len(),
+                self.state_on.len()
+            ));
+        }
+        self.state_on = on;
+        Ok(())
+    }
 }
 
 /// Adversarial-ish trajectory for the regret supremum (Eq. 11): phases
@@ -133,6 +192,15 @@ impl ArrivalModel for Alternating {
 
     fn reset(&mut self, _seed: u64) {
         self.t = 0;
+    }
+
+    fn snapshot(&self, w: &mut Writer) {
+        w.put_u64(self.t as u64);
+    }
+
+    fn restore(&mut self, r: &mut Reader) -> Result<(), String> {
+        self.t = r.get_u64()? as usize;
+        Ok(())
     }
 }
 
@@ -170,6 +238,15 @@ impl ArrivalModel for MultiCount {
     fn reset(&mut self, seed: u64) {
         self.rng = Rng::new(seed);
     }
+
+    fn snapshot(&self, w: &mut Writer) {
+        put_rng(w, &self.rng);
+    }
+
+    fn restore(&mut self, r: &mut Reader) -> Result<(), String> {
+        self.rng = get_rng(r)?;
+        Ok(())
+    }
 }
 
 /// Replay a fixed trajectory (tests, recorded traces).
@@ -197,6 +274,15 @@ impl ArrivalModel for Replay {
 
     fn reset(&mut self, _seed: u64) {
         self.t = 0;
+    }
+
+    fn snapshot(&self, w: &mut Writer) {
+        w.put_u64(self.t as u64);
+    }
+
+    fn restore(&mut self, r: &mut Reader) -> Result<(), String> {
+        self.t = r.get_u64()? as usize;
+        Ok(())
     }
 }
 
@@ -292,6 +378,50 @@ mod tests {
         for t in 0..5 {
             rep.next(&mut x);
             assert_eq!(x, traj[t]);
+        }
+    }
+
+    #[test]
+    fn snapshots_resume_every_model_bit_identically() {
+        // (live model, fresh same-constructed model) pairs: snapshot the
+        // live one mid-stream, restore onto the fresh one, and the
+        // continuations must agree to the bit.
+        let pairs: Vec<(Box<dyn ArrivalModel>, Box<dyn ArrivalModel>)> = vec![
+            (
+                Box::new(Bernoulli::uniform(6, 0.6, 11)),
+                Box::new(Bernoulli::uniform(6, 0.6, 11)),
+            ),
+            (
+                Box::new(Bursty::new(6, 0.8, 0.1, 0.2, 13)),
+                Box::new(Bursty::new(6, 0.8, 0.1, 0.2, 13)),
+            ),
+            (Box::new(Alternating::new(3)), Box::new(Alternating::new(3))),
+            (
+                Box::new(MultiCount::new(0.4, 3, 17)),
+                Box::new(MultiCount::new(0.4, 3, 17)),
+            ),
+            (
+                Box::new(Replay::new(vec![vec![1.0; 6], vec![0.0; 6], vec![1.0; 6]])),
+                Box::new(Replay::new(vec![vec![1.0; 6], vec![0.0; 6], vec![1.0; 6]])),
+            ),
+        ];
+        for (mut live, mut fresh) in pairs {
+            let mut x = vec![0.0; 6];
+            for _ in 0..13 {
+                live.next(&mut x);
+            }
+            let mut w = crate::utils::codec::Writer::new();
+            live.snapshot(&mut w);
+            let bytes = w.into_bytes();
+            let mut r = crate::utils::codec::Reader::new(&bytes).unwrap();
+            fresh.restore(&mut r).unwrap();
+            r.finish().unwrap();
+            let mut got = vec![0.0; 6];
+            for t in 0..20 {
+                live.next(&mut x);
+                fresh.next(&mut got);
+                assert_eq!(x, got, "{} diverged at resumed slot {t}", live.name());
+            }
         }
     }
 

@@ -31,9 +31,10 @@
 //! failed instance, and their surviving coordinates carry over by
 //! `(l, r)` key.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
-use crate::config::{FaultConfig, Scenario};
+use crate::config::{FaultConfig, RecoveryConfig, Scenario};
 use crate::coordinator::{
     ClusterState, Leader, RunResult, ShardLedger, ShardPlan, ShardedLeader,
 };
@@ -42,6 +43,7 @@ use crate::model::Problem;
 use crate::schedulers::Policy;
 use crate::sim::arrivals::{ArrivalModel, Bernoulli};
 use crate::traces::synthesize;
+use crate::utils::pool::ExecProbe;
 use crate::utils::rng::Rng;
 
 /// One topology event, applied at a slot boundary (before the slot's
@@ -180,6 +182,74 @@ impl FaultPlan {
             }
         }
         n
+    }
+}
+
+/// A seeded, deterministic stream of *execution* faults — crashes of
+/// the machinery that runs the simulation, as opposed to the
+/// [`FaultPlan`]'s crashes of the simulated cluster.  Three layers:
+///
+/// * **worker faults** (`panics`, `stalls`): at `(slot, shard)` the
+///   commit task panics at entry — or sleeps past the watchdog deadline
+///   first — is caught by the pool's panic isolation, and is retried
+///   inline.  Fired *before* any write, so retries never change floats.
+/// * **checkpoint-write failures** (`ckpt_fails`): the snapshot due at
+///   that slot is dropped; recovery then reaches further back.
+/// * **process kills** (`kills`): at the slot boundary the resilient
+///   driver discards all live state and restores from the last durable
+///   checkpoint (`sim::checkpoint::run_resilient`).
+#[derive(Clone, Debug, Default)]
+pub struct ExecFaultPlan {
+    /// Worker panics at `(slot, shard)`, one-shot each.
+    pub panics: BTreeSet<(u64, u32)>,
+    /// Worker stalls at `(slot, shard)`, one-shot each.
+    pub stalls: BTreeSet<(u64, u32)>,
+    /// Slots whose checkpoint write fails.
+    pub ckpt_fails: BTreeSet<u64>,
+    /// Ascending, distinct process-kill slots (the kill fires at the
+    /// boundary *before* the slot runs).
+    pub kills: Vec<u64>,
+    /// Injected stall duration (ms).
+    pub stall_ms: u64,
+}
+
+impl ExecFaultPlan {
+    /// Generate the stream for `horizon` slots against a `shards`-wide
+    /// commit scatter.  Deterministic in `cfg.seed`; slot 0 is never
+    /// targeted (the implicit initial checkpoint must exist before the
+    /// first kill, and slot 0's scatter precedes any fault window).
+    pub fn generate(horizon: usize, shards: usize, cfg: &RecoveryConfig) -> ExecFaultPlan {
+        let mut rng = Rng::new(cfg.seed);
+        let shards = shards.max(1);
+        let mut plan = ExecFaultPlan { stall_ms: cfg.stall_ms, ..Default::default() };
+        for t in 1..horizon as u64 {
+            if rng.bernoulli(cfg.panic_rate) {
+                plan.panics.insert((t, rng.below(shards) as u32));
+            }
+            if rng.bernoulli(cfg.stall_rate) {
+                plan.stalls.insert((t, rng.below(shards) as u32));
+            }
+            if rng.bernoulli(cfg.ckpt_fail_rate) {
+                plan.ckpt_fails.insert(t);
+            }
+            if rng.bernoulli(cfg.kill_rate) {
+                plan.kills.push(t);
+            }
+        }
+        plan
+    }
+
+    /// The pool-side half of the plan: a shared probe the leaders arm,
+    /// which fires (and disarms) each injected panic/stall exactly once.
+    pub fn probe(&self) -> Arc<ExecProbe> {
+        Arc::new(ExecProbe::new(self.panics.clone(), self.stalls.clone(), self.stall_ms))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.panics.is_empty()
+            && self.stalls.is_empty()
+            && self.ckpt_fails.is_empty()
+            && self.kills.is_empty()
     }
 }
 
@@ -529,6 +599,33 @@ mod tests {
         }
         let different = FaultPlan::generate(4, 16, 300, &FaultConfig { seed: 78, ..cfg });
         assert_ne!(a.events(), different.events());
+    }
+
+    #[test]
+    fn exec_fault_plan_is_deterministic_and_never_targets_slot_zero() {
+        let cfg = RecoveryConfig {
+            checkpoint_epoch: 5,
+            panic_rate: 0.1,
+            stall_rate: 0.05,
+            kill_rate: 0.05,
+            ckpt_fail_rate: 0.2,
+            ..RecoveryConfig::default()
+        };
+        let a = ExecFaultPlan::generate(200, 4, &cfg);
+        let b = ExecFaultPlan::generate(200, 4, &cfg);
+        assert_eq!(a.panics, b.panics);
+        assert_eq!(a.stalls, b.stalls);
+        assert_eq!(a.ckpt_fails, b.ckpt_fails);
+        assert_eq!(a.kills, b.kills);
+        assert!(!a.is_empty());
+        assert!(a.panics.iter().all(|&(t, s)| t >= 1 && t < 200 && s < 4));
+        assert!(a.kills.iter().all(|&t| t >= 1));
+        assert!(a.kills.windows(2).all(|w| w[0] < w[1]), "kills must ascend");
+        let c = ExecFaultPlan::generate(200, 4, &RecoveryConfig { seed: 999, ..cfg });
+        assert_ne!(a.kills, c.kills);
+        // the probe half carries exactly the worker faults
+        let probe = a.probe();
+        assert_eq!(probe.fired_count(), 0);
     }
 
     #[test]

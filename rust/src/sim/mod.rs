@@ -3,6 +3,7 @@
 //! — the simulator *is* the coordinator running against synthetic time.)
 
 pub mod arrivals;
+pub mod checkpoint;
 pub mod faults;
 
 use crate::config::Scenario;

@@ -1,0 +1,338 @@
+//! Minimal binary snapshot codec (zero deps).
+//!
+//! `sim::checkpoint` serializes run state through this layer.  The
+//! format is little-endian, length-prefixed, and *exact*: f64s round
+//! trip through `to_bits`/`from_bits`, so a restored checkpoint replays
+//! bit-identically — including NaN payloads and signed zeros.  A magic
+//! tag plus a format version head every blob so stale snapshots fail
+//! loudly instead of decoding garbage (see ROADMAP: checkpoint format
+//! versioning).
+
+/// Blob magic: "PLCK" (pallas checkpoint) as LE bytes.
+pub const MAGIC: u32 = 0x4B434C50;
+/// Bump on any incompatible layout change.
+pub const VERSION: u32 = 1;
+
+/// Append-only encoder over an owned byte buffer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Fresh blob headed by the magic tag and format version.
+    pub fn new() -> Writer {
+        let mut w = Writer { buf: Vec::new() };
+        w.put_u32(MAGIC);
+        w.put_u32(VERSION);
+        w
+    }
+
+    /// Headerless writer for nested sections (policy / arrival blobs
+    /// embedded inside an outer checkpoint via [`Writer::put_bytes`]).
+    pub fn section() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Exact: the IEEE bit pattern, not a decimal round trip.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn put_f64s(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    pub fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+
+    pub fn put_usizes(&mut self, xs: &[usize]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_usize(x);
+        }
+    }
+
+    pub fn put_bools(&mut self, xs: &[bool]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_bool(x);
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor-based decoder.  Every read is bounds-checked and returns
+/// `Err` with the offset instead of panicking — a truncated or corrupt
+/// checkpoint must surface as a recoverable error, not a crash, since
+/// `run_resilient` injects checkpoint-write failures on purpose.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Open a headed blob, validating magic + version.
+    pub fn new(buf: &'a [u8]) -> Result<Reader<'a>, String> {
+        let mut r = Reader { buf, pos: 0 };
+        let magic = r.get_u32()?;
+        if magic != MAGIC {
+            return Err(format!("checkpoint: bad magic {magic:#010x} (want {MAGIC:#010x})"));
+        }
+        let version = r.get_u32()?;
+        if version != VERSION {
+            return Err(format!("checkpoint: format version {version} (this build reads {VERSION})"));
+        }
+        Ok(r)
+    }
+
+    /// Open a headerless section (the payload of [`Writer::section`]).
+    pub fn section(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                format!("checkpoint: truncated at byte {} (need {} more)", self.pos, n)
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize, String> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| format!("checkpoint: length {v} overflows usize"))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool, String> {
+        match self.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("checkpoint: bad bool byte {b:#04x} at {}", self.pos - 1)),
+        }
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_str(&mut self) -> Result<String, String> {
+        let n = self.get_usize()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| format!("checkpoint: bad utf8: {e}"))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.get_usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.get_usize()?;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.get_usize()?;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
+        for _ in 0..n {
+            out.push(self.get_u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>, String> {
+        let n = self.get_usize()?;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
+        for _ in 0..n {
+            out.push(self.get_usize()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_bools(&mut self) -> Result<Vec<bool>, String> {
+        let n = self.get_usize()?;
+        let mut out = Vec::with_capacity(n.min(self.remaining()));
+        for _ in 0..n {
+            out.push(self.get_bool()?);
+        }
+        Ok(out)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// All bytes consumed?  Decoders call this last so trailing garbage
+    /// (e.g. a mis-versioned appendix) is caught.
+    pub fn finish(self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "checkpoint: {} trailing bytes after decode",
+                self.buf.len() - self.pos
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip_exactly() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX);
+        w.put_usize(12345);
+        w.put_bool(true);
+        w.put_bool(false);
+        w.put_f64(-0.0);
+        w.put_f64(f64::from_bits(0x7FF8_0000_DEAD_BEEF)); // NaN payload
+        w.put_f64(1.0 / 3.0);
+        w.put_str("pallas");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes).unwrap();
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_usize().unwrap(), 12345);
+        assert!(r.get_bool().unwrap());
+        assert!(!r.get_bool().unwrap());
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_f64().unwrap().to_bits(), 0x7FF8_0000_DEAD_BEEF);
+        assert_eq!(r.get_f64().unwrap(), 1.0 / 3.0);
+        assert_eq!(r.get_str().unwrap(), "pallas");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn vectors_round_trip() {
+        let mut w = Writer::new();
+        w.put_f64s(&[0.1, -2.5, f64::INFINITY]);
+        w.put_u64s(&[1, 2, 3]);
+        w.put_usizes(&[9, 8]);
+        w.put_bools(&[true, false, true]);
+        w.put_bytes(&[0xAB, 0xCD]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes).unwrap();
+        assert_eq!(r.get_f64s().unwrap(), vec![0.1, -2.5, f64::INFINITY]);
+        assert_eq!(r.get_u64s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_usizes().unwrap(), vec![9, 8]);
+        assert_eq!(r.get_bools().unwrap(), vec![true, false, true]);
+        assert_eq!(r.get_bytes().unwrap(), vec![0xAB, 0xCD]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut w = Writer::new();
+        w.put_u64(7);
+        let mut bytes = w.into_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(Reader::new(&bytes).unwrap_err().contains("bad magic"));
+        let mut w2 = Writer::section();
+        w2.put_u32(MAGIC);
+        w2.put_u32(VERSION + 1);
+        let b2 = w2.into_bytes();
+        assert!(Reader::new(&b2).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.put_f64s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..bytes.len() - 4]).unwrap();
+        assert!(r.get_f64s().unwrap_err().contains("truncated"));
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = Writer::new();
+        w.put_u64(1);
+        w.put_u64(2);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes).unwrap();
+        r.get_u64().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn sections_nest_inside_headed_blobs() {
+        let mut inner = Writer::section();
+        inner.put_f64(2.5);
+        inner.put_str("policy-state");
+        let mut outer = Writer::new();
+        outer.put_bytes(&inner.into_bytes());
+        let bytes = outer.into_bytes();
+        let mut r = Reader::new(&bytes).unwrap();
+        let blob = r.get_bytes().unwrap();
+        r.finish().unwrap();
+        let mut s = Reader::section(&blob);
+        assert_eq!(s.get_f64().unwrap(), 2.5);
+        assert_eq!(s.get_str().unwrap(), "policy-state");
+        s.finish().unwrap();
+    }
+}

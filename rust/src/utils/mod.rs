@@ -2,6 +2,7 @@
 //! property-testing harness.  The offline build environment only ships
 //! the `xla` crate closure, so these replace rand/rayon/csv/proptest.
 
+pub mod codec;
 pub mod csv;
 pub mod pool;
 pub mod prop;

@@ -41,9 +41,185 @@
 //! disjoint coordinates or replays its float reductions serially, so
 //! results never depend on the assignment.
 
-use std::cell::RefCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeSet;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Substring that tags *injected* execution-fault panics (see
+/// [`ExecProbe`]).  The isolation layer retries exactly these: an
+/// injected fault fires at task entry, before any writes, and disarms
+/// itself, so a bounded re-dispatch always succeeds and never replays a
+/// side effect.  Panics without the marker are real bugs (or strict-mode
+/// asserts) and are re-raised on the submitting thread after the
+/// scatter drains.
+pub const EXEC_FAULT_MARKER: &str = "pallas-exec-fault";
+
+/// Bounded deterministic retry schedule for marker-tagged failures:
+/// attempt k backs off by `1 << k` cooperative yields (no wall-clock
+/// randomness — the schedule is a pure function of the attempt index).
+const MAX_RETRY_ATTEMPTS: u32 = 3;
+
+/// Structured report of one isolated task panic: which index of the
+/// scatter failed (for shard-shaped scatters this *is* the shard id),
+/// at which simulation slot (from the submitter's [`set_slot`] context),
+/// and the stringified panic payload.
+#[derive(Clone, Debug)]
+pub struct TaskFailure {
+    pub shard: usize,
+    pub slot: u64,
+    pub payload: String,
+}
+
+/// Total isolated task panics since process start (injected + real);
+/// tests assert this moves instead of the process dying.
+static TASK_FAILURES: AtomicUsize = AtomicUsize::new(0);
+
+/// See [`TASK_FAILURES`].
+pub fn task_failure_count() -> usize {
+    TASK_FAILURES.load(Ordering::Relaxed)
+}
+
+/// Scatters flagged overdue by the per-scatter deadline watchdog.
+static WATCHDOG_TRIPS: AtomicU64 = AtomicU64::new(0);
+
+/// See [`WATCHDOG_TRIPS`].
+pub fn watchdog_trip_count() -> u64 {
+    WATCHDOG_TRIPS.load(Ordering::Relaxed)
+}
+
+/// Per-scatter watchdog deadline.  Read per scatter (not once) so tests
+/// and CI can tighten/loosen it at runtime; the default is generous —
+/// the watchdog only *flags* (it never re-executes possibly-started
+/// work, which would be unsound for the non-idempotent `+=` kernels),
+/// so a trip is an observability signal, not a recovery action.
+fn watchdog_ms() -> u64 {
+    std::env::var("PALLAS_WATCHDOG_MS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&ms| ms >= 1)
+        .unwrap_or(10_000)
+}
+
+thread_local! {
+    /// Simulation slot the calling thread is currently executing; the
+    /// coordinator sets it once per slot so [`TaskFailure`]s carry it.
+    static CURRENT_SLOT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Tag subsequent scatters from this thread with simulation slot `t`
+/// (surfaced in [`TaskFailure::slot`]).
+pub fn set_slot(t: u64) {
+    CURRENT_SLOT.with(|s| s.set(t));
+}
+
+fn current_slot() -> u64 {
+    CURRENT_SLOT.with(|s| s.get())
+}
+
+/// Seeded execution-fault injector (armed by `sim::faults`'
+/// `ExecFaultPlan`).  Leaders carry an optional probe and call
+/// [`ExecProbe::fire`] at the entry of every per-shard task — *before
+/// any writes* — so a fired fault is always retry-safe.  Faults are
+/// one-shot: firing disarms the (slot, shard) entry, so the bounded
+/// retry's second attempt runs clean and the floats never change.
+#[derive(Debug, Default)]
+pub struct ExecProbe {
+    panics: Mutex<BTreeSet<(u64, u32)>>,
+    stalls: Mutex<BTreeSet<(u64, u32)>>,
+    stall_ms: u64,
+    fired: AtomicUsize,
+}
+
+impl ExecProbe {
+    pub fn new(
+        panics: BTreeSet<(u64, u32)>,
+        stalls: BTreeSet<(u64, u32)>,
+        stall_ms: u64,
+    ) -> ExecProbe {
+        ExecProbe {
+            panics: Mutex::new(panics),
+            stalls: Mutex::new(stalls),
+            stall_ms,
+            fired: AtomicUsize::new(0),
+        }
+    }
+
+    /// Fire any fault armed for (slot, shard): an injected panic raises
+    /// immediately; an injected stall sleeps past the watchdog deadline
+    /// first, then raises (so the work still re-dispatches exactly once
+    /// via the marker-retry path — a stalled worker costs latency,
+    /// never floats).
+    pub fn fire(&self, slot: u64, shard: u32) {
+        if self.panics.lock().unwrap().remove(&(slot, shard)) {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+            panic!("{EXEC_FAULT_MARKER}: injected worker panic at (slot {slot}, shard {shard})");
+        }
+        if self.stalls.lock().unwrap().remove(&(slot, shard)) {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.stall_ms));
+            panic!("{EXEC_FAULT_MARKER}: injected worker stall at (slot {slot}, shard {shard})");
+        }
+    }
+
+    /// Faults fired so far (tests assert injection actually happened).
+    pub fn fired_count(&self) -> usize {
+        self.fired.load(Ordering::Relaxed)
+    }
+}
+
+/// Stringify a caught panic payload (the two shapes `panic!` produces).
+fn payload_string(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Deterministic backoff for retry attempt `attempt`: cooperative
+/// yields only, count a pure function of the attempt index.
+fn retry_backoff(attempt: u32) {
+    for _ in 0..(1u32 << attempt) {
+        std::thread::yield_now();
+    }
+}
+
+/// Run `f` with injected-fault isolation: marker-tagged panics (see
+/// [`EXEC_FAULT_MARKER`]) are caught and retried on the bounded
+/// deterministic schedule; anything else propagates unchanged.  This is
+/// the *inline* arm of the isolation layer — serial leaders and
+/// single-worker fallbacks route their per-task calls through it so an
+/// injected fault is survived identically whether or not a crew ran.
+pub fn run_isolated<T>(mut f: impl FnMut() -> T) -> T {
+    for attempt in 0..MAX_RETRY_ATTEMPTS {
+        match std::panic::catch_unwind(AssertUnwindSafe(|| f())) {
+            Ok(v) => return v,
+            Err(p) => {
+                let payload = payload_string(p.as_ref());
+                TASK_FAILURES.fetch_add(1, Ordering::Relaxed);
+                if !payload.contains(EXEC_FAULT_MARKER) {
+                    // a real panic: re-raise with the stringified
+                    // payload (expected-substring matching still works)
+                    std::panic::resume_unwind(Box::new(payload));
+                }
+                retry_backoff(attempt);
+            }
+        }
+    }
+    // a fault that survives the bounded schedule is not an injected
+    // one-shot — let it propagate as the bug it is
+    f()
+}
+
+#[inline]
+fn call_isolated(f: &(dyn Fn(usize) + Sync), i: usize) {
+    run_isolated(|| f(i));
+}
 
 /// Process-wide parallelism budget W: `PALLAS_WORKERS` when set to a
 /// positive integer (CI pins it so small runners still exercise the
@@ -186,6 +362,13 @@ struct Job {
     n: usize,
     chunk: usize,
     max_entrants: usize,
+    /// Simulation slot the submitter was in (for [`TaskFailure`]s).
+    slot_tag: u64,
+    /// Per-index panics caught by the isolation layer; the submitter
+    /// drains these after the scatter completes (retry or re-raise).
+    failures: Mutex<Vec<TaskFailure>>,
+    /// Set once by the watchdog when the scatter blew its deadline.
+    overdue: AtomicBool,
 }
 
 // SAFETY: `f` points at a `Sync` closure owned by the submitting thread,
@@ -207,6 +390,8 @@ struct Shared {
     work_cv: Condvar,
     /// The submitter parks here waiting for `completed == n`.
     done_cv: Condvar,
+    /// Set by [`shutdown`]: workers exit their loop instead of parking.
+    quit: AtomicBool,
 }
 
 /// One dispatch unit: a job slot plus the parked worker threads that
@@ -218,9 +403,14 @@ struct Crew {
     /// Serializes submissions; `try_lock` losers run inline instead of
     /// queueing (see module docs).
     submit: Mutex<()>,
-    /// Parked worker threads owned by this crew (detached; they live
-    /// for the process — crews are pooled and reused, never dropped).
+    /// Parked worker threads owned by this crew.  Count in `threads`
+    /// (hot-path check), join handles in `handles` so
+    /// [`shutdown`] can drain them cleanly between harness runs.
     threads: AtomicUsize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Serializes thread growth (leases and post-shutdown respawns can
+    /// race on the same recycled crew).
+    grow: Mutex<()>,
 }
 
 impl Crew {
@@ -230,26 +420,51 @@ impl Crew {
                 slot: Mutex::new(Slot { seq: 0, job: None }),
                 work_cv: Condvar::new(),
                 done_cv: Condvar::new(),
+                quit: AtomicBool::new(false),
             }),
             submit: Mutex::new(()),
             threads: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+            grow: Mutex::new(()),
         }
     }
 
-    /// Grow to at least `want` parked workers (callers serialize this
-    /// through the lease registry; the global crew grows once at init).
+    /// Grow to at least `want` parked workers.
     fn ensure_threads(&self, want: usize, tag: &str) {
+        if self.threads.load(Ordering::Relaxed) >= want {
+            return;
+        }
+        let _grow = self.grow.lock().unwrap();
         let have = self.threads.load(Ordering::Relaxed);
         for i in have..want {
             let shared = Arc::clone(&self.shared);
-            if std::thread::Builder::new()
+            if let Ok(handle) = std::thread::Builder::new()
                 .name(format!("{tag}-{i}"))
                 .spawn(move || worker_loop(shared))
-                .is_ok()
             {
+                self.handles.lock().unwrap().push(handle);
                 self.threads.fetch_add(1, Ordering::Relaxed);
             }
         }
+    }
+
+    /// Signal workers to exit, join them, and reset so a later scatter
+    /// can respawn.  Used by [`shutdown`].
+    fn drain(&self) {
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        if handles.is_empty() {
+            return;
+        }
+        self.shared.quit.store(true, Ordering::Release);
+        {
+            let _slot = self.shared.slot.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        self.shared.quit.store(false, Ordering::Release);
+        self.threads.store(0, Ordering::Relaxed);
     }
 
     /// Publish `f` over `0..n` with up to `workers` entrants (the
@@ -272,6 +487,9 @@ impl Crew {
             n,
             chunk: n.div_ceil(workers * 4).max(1),
             max_entrants: workers,
+            slot_tag: current_slot(),
+            failures: Mutex::new(Vec::new()),
+            overdue: AtomicBool::new(false),
         });
         {
             let mut slot = self.shared.slot.lock().unwrap();
@@ -282,12 +500,54 @@ impl Crew {
         // The submitter works too — on small jobs it often finishes the
         // whole index space before a worker even wakes.
         run_job(&self.shared, &job);
+        let deadline = Duration::from_millis(watchdog_ms());
         let mut slot = self.shared.slot.lock().unwrap();
         while job.completed.load(Ordering::Acquire) < job.n {
-            slot = self.shared.done_cv.wait(slot).unwrap();
+            // Deadline watchdog: a scatter past its deadline is flagged
+            // (once) and counted, then we keep waiting — a wedged task
+            // cannot be soundly re-executed (it may have started its
+            // writes), so the watchdog observes rather than intervenes.
+            let (s, timeout) =
+                self.shared.done_cv.wait_timeout(slot, deadline).unwrap();
+            slot = s;
+            if timeout.timed_out()
+                && job.completed.load(Ordering::Acquire) < job.n
+                && !job.overdue.swap(true, Ordering::Relaxed)
+            {
+                WATCHDOG_TRIPS.fetch_add(1, Ordering::Relaxed);
+            }
         }
         slot.job = None;
+        drop(slot);
+        // Drain isolated panics outside every lock: marker-tagged
+        // (injected) failures re-dispatch inline on the bounded
+        // deterministic schedule; a real panic re-raises here on the
+        // submitting thread — after the scatter fully drained, so no
+        // worker still references `f`.
+        let failures = std::mem::take(&mut *job.failures.lock().unwrap());
+        if !failures.is_empty() {
+            drain_failures(failures, f);
+        }
         true
+    }
+}
+
+/// Submitter-side failure handling (see `Crew::scatter`).  Injected
+/// faults disarm on first fire, so their inline re-dispatch runs the
+/// task's real work exactly once — same disjoint writes as the crew
+/// path, hence bitwise-identical results; a flaky worker costs
+/// throughput, never floats.
+fn drain_failures(failures: Vec<TaskFailure>, f: &(dyn Fn(usize) + Sync)) {
+    let mut real: Option<String> = None;
+    for fail in failures {
+        if fail.payload.contains(EXEC_FAULT_MARKER) {
+            call_isolated(f, fail.shard);
+        } else if real.is_none() {
+            real = Some(fail.payload);
+        }
+    }
+    if let Some(payload) = real {
+        std::panic::resume_unwind(Box::new(payload));
     }
 }
 
@@ -300,6 +560,9 @@ fn worker_loop(shared: Arc<Shared>) {
         let job = {
             let mut slot = shared.slot.lock().unwrap();
             loop {
+                if shared.quit.load(Ordering::Acquire) {
+                    return;
+                }
                 if slot.seq != last_seq {
                     last_seq = slot.seq;
                     if let Some(job) = slot.job.clone() {
@@ -331,7 +594,22 @@ fn run_job(shared: &Shared, job: &Job) {
         let f = unsafe { &*job.f };
         let hi = (lo + job.chunk).min(job.n);
         for i in lo..hi {
-            f(i);
+            // Panic isolation: tasks run over disjoint chunks, so
+            // catching here cannot observe broken shared invariants
+            // (AssertUnwindSafe is justified by the same disjointness
+            // every scatter caller already relies on).  A panicking
+            // index is recorded — not re-run here: the `+=` kernels are
+            // non-idempotent, so only the submitter may decide what is
+            // safe to retry — and still counts toward `completed`, so
+            // the scatter always drains and the worker thread survives.
+            if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                TASK_FAILURES.fetch_add(1, Ordering::Relaxed);
+                job.failures.lock().unwrap().push(TaskFailure {
+                    shard: i,
+                    slot: job.slot_tag,
+                    payload: payload_string(p.as_ref()),
+                });
+            }
         }
         let done = job.completed.fetch_add(hi - lo, Ordering::AcqRel) + (hi - lo);
         if done == job.n {
@@ -344,15 +622,36 @@ fn run_job(shared: &Shared, job: &Job) {
     }
 }
 
+static GLOBAL_CREW: OnceLock<Crew> = OnceLock::new();
+
 /// The flat global crew: W − 1 parked workers (the submitter counts as
 /// one), serving every scatter issued outside a shard-group scope.
+/// Re-grows lazily after a [`shutdown`] drained it.
 fn global_crew() -> &'static Crew {
-    static CREW: OnceLock<Crew> = OnceLock::new();
-    CREW.get_or_init(|| {
-        let crew = Crew::new();
-        crew.ensure_threads(global_workers().saturating_sub(1), "ogasched-pool");
-        crew
-    })
+    let crew = GLOBAL_CREW.get_or_init(Crew::new);
+    crew.ensure_threads(global_workers().saturating_sub(1), "pallas-crew-global");
+    crew
+}
+
+/// Cleanly drain every parked worker thread — the global crew and all
+/// recycled shard-group crews — joining them so test harnesses and
+/// embedding processes don't leak parked threads between runs.  Crews
+/// stay registered: the next scatter or group lease respawns workers on
+/// demand (and until then scatters degrade to inline execution, which
+/// is always correct).  Must not be called while a scatter is in
+/// flight; the quit flag is only checked between jobs, so in-flight
+/// work completes first.
+pub fn shutdown() {
+    if let Some(crew) = GLOBAL_CREW.get() {
+        crew.drain();
+    }
+    let crews: Vec<Arc<Crew>> = {
+        let reg = group_registry().lock().unwrap();
+        reg.iter().map(Arc::clone).collect()
+    };
+    for crew in crews {
+        crew.drain();
+    }
 }
 
 /// Where this thread's scatters dispatch (see module docs).
@@ -414,7 +713,7 @@ impl ShardGroup {
             .unwrap()
             .pop()
             .unwrap_or_else(|| Arc::new(Crew::new()));
-        crew.ensure_threads(size.saturating_sub(1), "ogasched-shard");
+        crew.ensure_threads(size.saturating_sub(1), "pallas-crew-group");
         ShardGroup { crew, size }
     }
 
@@ -502,10 +801,13 @@ where
     }
     let workers = workers.min(n).max(1);
     let scope = SCOPE.with(|s| s.borrow().clone());
+    // Every inline arm routes through `call_isolated`, so an injected
+    // execution fault is survived identically at any worker budget —
+    // including budget 1, where no crew ever runs.
     match scope {
         Scope::WorkerInline => {
             for i in 0..n {
-                f(i);
+                call_isolated(&f, i);
             }
         }
         Scope::Group(crew, size) => {
@@ -513,14 +815,14 @@ where
                 GROUP_SCATTERS.fetch_add(1, Ordering::Relaxed);
             } else {
                 for i in 0..n {
-                    f(i);
+                    call_isolated(&f, i);
                 }
             }
         }
         Scope::Global => {
             if !global_crew().scatter(n, workers, &f) {
                 for i in 0..n {
-                    f(i);
+                    call_isolated(&f, i);
                 }
             }
         }
@@ -634,7 +936,9 @@ where
         return;
     }
     if n == 1 {
-        f(0, &mut shards[0]);
+        // same isolation as the scattered path: a single-shard commit
+        // with an injected fault retries instead of aborting
+        run_isolated(|| f(0, &mut shards[0]));
         return;
     }
     let base = SyncSlice::new(shards);
@@ -911,6 +1215,172 @@ mod tests {
             });
         });
         assert_eq!(hits.load(Ordering::Relaxed), 2 * 4 * 25);
+    }
+
+    #[test]
+    fn injected_fault_is_retried_without_aborting_or_losing_indices() {
+        // one index is armed to panic (with the marker) on its first
+        // execution only — the isolation layer must retry it and the
+        // scatter must still cover every index exactly once in the
+        // output, whatever worker budget actually ran
+        use std::sync::atomic::AtomicBool;
+        for workers in [1usize, 2, 4, 8] {
+            let armed = AtomicBool::new(true);
+            let before = task_failure_count();
+            let out = parallel_map(64, workers, |i| {
+                if i == 7 && armed.swap(false, Ordering::Relaxed) {
+                    panic!("{EXEC_FAULT_MARKER}: test fault at index 7");
+                }
+                i * 3
+            });
+            assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+            assert!(
+                task_failure_count() > before,
+                "the injected panic must be recorded, workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn run_isolated_retries_one_shot_faults() {
+        let probe = ExecProbe::new(
+            [(3u64, 0u32)].into_iter().collect(),
+            std::collections::BTreeSet::new(),
+            0,
+        );
+        // armed (slot 3, shard 0): fires once, retry succeeds
+        let v = run_isolated(|| {
+            probe.fire(3, 0);
+            41 + 1
+        });
+        assert_eq!(v, 42);
+        assert_eq!(probe.fired_count(), 1);
+        // unarmed coordinates never fire
+        probe.fire(3, 0);
+        probe.fire(4, 1);
+        assert_eq!(probe.fired_count(), 1);
+    }
+
+    #[test]
+    fn stall_probe_is_caught_and_retried() {
+        let probe = ExecProbe::new(
+            std::collections::BTreeSet::new(),
+            [(0u64, 0u32)].into_iter().collect(),
+            10,
+        );
+        let hits = AtomicUsize::new(0);
+        run_isolated(|| {
+            probe.fire(0, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(probe.fired_count(), 1);
+        // the stall panicked before the increment; only the clean
+        // retry executed the real work
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "a real bug")]
+    fn real_panics_still_propagate_to_the_submitter() {
+        parallel_for(32, 4, |i| {
+            if i == 11 {
+                panic!("a real bug at index {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn worker_survives_a_task_panic() {
+        // after a real panic drained through a scatter, the crew's
+        // workers must still be alive and serving later scatters
+        let r = std::panic::catch_unwind(|| {
+            parallel_for(16, 4, |i| {
+                if i == 3 {
+                    panic!("one bad task");
+                }
+            })
+        });
+        assert!(r.is_err());
+        let hits = AtomicUsize::new(0);
+        parallel_for(500, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn watchdog_flags_overdue_scatters() {
+        // tighten the deadline (read per scatter), stall one index past
+        // it, and require a trip to be counted; the scatter still
+        // completes with every index run
+        std::env::set_var("PALLAS_WATCHDOG_MS", "25");
+        let before = watchdog_trip_count();
+        let hits = AtomicUsize::new(0);
+        parallel_for(4, 2, |i| {
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(120));
+            }
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        std::env::remove_var("PALLAS_WATCHDOG_MS");
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        // the sleeping index may have run on the submitter itself (in
+        // which case the submitter never waited); only require a trip
+        // when the wait actually timed out — but with 2 workers and the
+        // chunk cursor, some scatter of the loop below must trip.
+        let mut tripped = watchdog_trip_count() > before;
+        if !tripped {
+            std::env::set_var("PALLAS_WATCHDOG_MS", "25");
+            for _ in 0..4 {
+                parallel_for(64, 4, |i| {
+                    if i == 63 {
+                        std::thread::sleep(Duration::from_millis(120));
+                    }
+                });
+                if watchdog_trip_count() > before {
+                    tripped = true;
+                    break;
+                }
+            }
+            std::env::remove_var("PALLAS_WATCHDOG_MS");
+        }
+        assert!(tripped, "an overdue scatter must trip the watchdog");
+    }
+
+    #[test]
+    fn shutdown_drains_and_scatters_still_complete() {
+        // prime the pool, drain it, then prove later scatters still
+        // cover all indices (respawn or inline) and shutdown is
+        // idempotent
+        let hits = AtomicUsize::new(0);
+        parallel_for(100, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        shutdown();
+        shutdown();
+        let hits = AtomicUsize::new(0);
+        parallel_for(100, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn failure_reports_carry_slot_and_shard() {
+        // drive a marker fault through the crew path and check the
+        // TaskFailure surface via the counters + the slot tag round
+        // trip (the structured record itself is consumed by the drain)
+        set_slot(1234);
+        let before = task_failure_count();
+        use std::sync::atomic::AtomicBool;
+        let armed = AtomicBool::new(true);
+        parallel_for(32, 4, |i| {
+            if i == 5 && armed.swap(false, Ordering::Relaxed) {
+                panic!("{EXEC_FAULT_MARKER}: at slot {}", 1234);
+            }
+        });
+        assert!(task_failure_count() > before);
+        set_slot(0);
     }
 
     #[test]

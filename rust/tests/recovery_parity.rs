@@ -1,0 +1,374 @@
+//! Recovery parity (§Recover): a run that is **killed at injected
+//! slots and resumed from its last durable checkpoint** must reproduce
+//! the same run uninterrupted **bit for bit** — every slot record
+//! (q, gain, penalty, arrivals), the cumulative reward, the final
+//! ledger (remaining capacity per (r, k)) and, for the learning
+//! policy, the final decision tensor — across the policy lineup ×
+//! worker budgets {1, 2, 4} × checkpoint epochs {1, 5, 17} × random
+//! execution-fault streams, composed with PR 6's topology churn.
+//!
+//! Injected worker panics and stalls are likewise required to be
+//! *survived* (the process never aborts; the pool catches, reports and
+//! retries them inline) and *float-invisible* (they fire before any
+//! write, so the retried task recomputes identical bits).
+//!
+//! The diagnostic ledger running totals (`total_units`/`total_comp`)
+//! are deliberately NOT compared: extra segment cuts re-sum them in
+//! flat order versus the compensated incremental accumulation, which
+//! perturbs low bits of those two telemetry scalars only — never the
+//! usage grid, the decisions, or the rewards (see `sim::checkpoint`).
+//!
+//! The CI matrix re-runs this suite under several exec-fault seeds
+//! (`RECOVERY_FAULT_SEED`) × `PALLAS_WORKERS` with `--test-threads=1`.
+
+use ogasched::config::{FaultConfig, RecoveryConfig};
+use ogasched::graph::Bipartite;
+use ogasched::model::Problem;
+use ogasched::oga::utilities::UtilityKind;
+use ogasched::schedulers::{
+    BinPacking, Drf, Fairness, OgaMirror, OgaSched, Policy, RandomAlloc, Spreading,
+};
+use ogasched::sim::arrivals::Bernoulli;
+use ogasched::sim::checkpoint::{run_resilient, ResilientOutcome};
+use ogasched::sim::faults::{run_churned, ChurnOutcome, ExecFaultPlan, FaultPlan};
+use ogasched::utils::prop::{check_seeded, ensure, Size};
+use ogasched::utils::rng::Rng;
+use ogasched::ExecBudget;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+const CHECKPOINT_EPOCHS: [usize; 3] = [1, 5, 17];
+
+/// Exec-fault seed for the property matrix; the CI recovery-parity job
+/// sweeps this via the environment so different kill/panic streams hit
+/// the same parity contract.
+fn fault_base_seed() -> u64 {
+    std::env::var("RECOVERY_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xFACADE)
+}
+
+fn random_problem(rng: &mut Rng, size: Size) -> Problem {
+    let l_n = rng.range(1, size.dim(6, 1));
+    let r_n = rng.range(2, size.dim(16, 2).max(3));
+    let k_n = rng.range(1, size.dim(4, 1));
+    let p = rng.uniform(0.2, 0.9);
+    let mut edges = Vec::new();
+    for l in 0..l_n {
+        for r in 0..r_n {
+            if rng.bernoulli(p) {
+                edges.push((l, r));
+            }
+        }
+    }
+    let graph = Bipartite::from_edges(l_n, r_n, &edges);
+    Problem::new(
+        graph,
+        k_n,
+        (0..l_n * k_n).map(|_| rng.uniform(0.2, 3.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..r_n * k_n).map(|_| UtilityKind::ALL[rng.below(4)]).collect(),
+        (0..k_n).map(|_| rng.uniform(0.1, 0.8)).collect(),
+    )
+}
+
+fn make_policy(p: &Problem, i: usize, seed: u64) -> (&'static str, Box<dyn Policy + Send>) {
+    match i {
+        0 => ("oga-reactive", Box::new(OgaSched::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        1 => ("oga-reservation", Box::new(OgaSched::reservation(p, 2.0, 0.999, ExecBudget::auto()))),
+        2 => ("oga-mirror", Box::new(OgaMirror::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        3 => ("drf", Box::new(Drf::new())),
+        4 => ("fairness", Box::new(Fairness::new())),
+        5 => ("binpacking", Box::new(BinPacking::new())),
+        6 => ("spreading", Box::new(Spreading::new())),
+        _ => ("random", Box::new(RandomAlloc::new(seed))),
+    }
+}
+
+const N_POLICIES: usize = 8;
+
+fn churny(seed: u64) -> FaultConfig {
+    FaultConfig {
+        instance_rate: 0.06,
+        recover_rate: 0.25,
+        port_rate: 0.04,
+        rack_rate: 0.02,
+        rack_size: 2,
+        seed,
+        ..FaultConfig::default()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn uninterrupted(
+    p: &Problem,
+    policy: &mut dyn Policy,
+    plan: &FaultPlan,
+    cfg: &FaultConfig,
+    horizon: usize,
+    shards: usize,
+    arrival_seed: u64,
+    rho: f64,
+) -> Result<ChurnOutcome, String> {
+    policy.reset(p);
+    let mut arr = Bernoulli::uniform(p.num_ports(), rho, arrival_seed);
+    run_churned(p, policy, &mut arr, horizon, shards, plan, cfg, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn crashed(
+    p: &Problem,
+    policy: &mut dyn Policy,
+    plan: &FaultPlan,
+    cfg: &FaultConfig,
+    horizon: usize,
+    shards: usize,
+    arrival_seed: u64,
+    rho: f64,
+    rebuild: bool,
+    recovery: &RecoveryConfig,
+    exec: &ExecFaultPlan,
+) -> Result<ResilientOutcome, String> {
+    policy.reset(p);
+    let mut arr = Bernoulli::uniform(p.num_ports(), rho, arrival_seed);
+    run_resilient(
+        p, policy, &mut arr, horizon, shards, plan, cfg, rebuild, recovery, exec,
+    )
+}
+
+fn compare(ctx: &str, got: &ChurnOutcome, want: &ChurnOutcome) -> Result<(), String> {
+    ensure(got.result.cumulative_reward == want.result.cumulative_reward, || {
+        format!(
+            "{ctx}: cumulative {} vs {}",
+            got.result.cumulative_reward, want.result.cumulative_reward
+        )
+    })?;
+    ensure(got.result.clamped_total == want.result.clamped_total, || {
+        format!("{ctx}: clamped totals diverged")
+    })?;
+    ensure(got.result.records == want.result.records, || {
+        let at = got
+            .result
+            .records
+            .iter()
+            .zip(&want.result.records)
+            .position(|(a, b)| a != b);
+        format!("{ctx}: slot records diverged (first at {at:?})")
+    })?;
+    ensure(
+        (got.editions, got.replans, got.events) == (want.editions, want.replans, want.events),
+        || {
+            format!(
+                "{ctx}: churn counters ({}, {}, {}) vs ({}, {}, {})",
+                got.editions, got.replans, got.events, want.editions, want.replans, want.events
+            )
+        },
+    )?;
+    for r in 0..want.problem.num_instances() {
+        for k in 0..want.problem.num_resources {
+            ensure(got.state.remaining_at(r, k) == want.state.remaining_at(r, k), || {
+                format!(
+                    "{ctx}: remaining({r},{k}) {} vs {}",
+                    got.state.remaining_at(r, k),
+                    want.state.remaining_at(r, k)
+                )
+            })?;
+        }
+    }
+    ensure(got.problem.num_edges() == want.problem.num_edges(), || {
+        format!(
+            "{ctx}: final editions differ ({} vs {} edges)",
+            got.problem.num_edges(),
+            want.problem.num_edges()
+        )
+    })?;
+    Ok(())
+}
+
+#[test]
+fn crashed_and_resumed_matches_uninterrupted_bitwise() {
+    check_seeded("recovery-parity", fault_base_seed(), 3, |rng, size| {
+        let p = random_problem(rng, size);
+        let horizon = 36;
+        let cfg = churny(rng.below(1 << 30) as u64);
+        let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+        let arrival_seed = rng.below(1 << 30) as u64;
+        let policy_seed = rng.below(1 << 30) as u64;
+        let exec_seed = rng.below(1 << 30) as u64;
+        for i in 0..N_POLICIES {
+            let (name, mut pol) = make_policy(&p, i, policy_seed);
+            let reference =
+                uninterrupted(&p, pol.as_mut(), &plan, &cfg, horizon, 1, arrival_seed, 0.6)
+                    .map_err(|e| format!("{name} uninterrupted: {e}"))?;
+            ensure(reference.result.records.len() == horizon, || {
+                format!("{name}: expected {horizon} records")
+            })?;
+            for &shards in &SHARD_COUNTS {
+                for &epoch in &CHECKPOINT_EPOCHS {
+                    let rcfg = RecoveryConfig {
+                        checkpoint_epoch: epoch,
+                        panic_rate: 0.04,
+                        stall_rate: 0.02,
+                        kill_rate: 0.08,
+                        ckpt_fail_rate: 0.15,
+                        stall_ms: 1,
+                        seed: exec_seed ^ (epoch as u64) << 8 ^ shards as u64,
+                    };
+                    let exec = ExecFaultPlan::generate(horizon, shards, &rcfg);
+                    let (_, mut pol) = make_policy(&p, i, policy_seed);
+                    let out = crashed(
+                        &p, pol.as_mut(), &plan, &cfg, horizon, shards, arrival_seed, 0.6,
+                        false, &rcfg, &exec,
+                    )
+                    .map_err(|e| format!("{name} shards={shards} epoch={epoch}: {e}"))?;
+                    let ctx = format!("{name} shards={shards} epoch={epoch}");
+                    ensure(out.kills == exec.kills.len(), || {
+                        format!(
+                            "{ctx}: {} of {} kills taken",
+                            out.kills,
+                            exec.kills.len()
+                        )
+                    })?;
+                    ensure(out.checkpoints_written > 0, || {
+                        format!("{ctx}: no checkpoint written")
+                    })?;
+                    ensure(out.restored_from.len() == out.kills, || {
+                        format!("{ctx}: restores != kills")
+                    })?;
+                    compare(&ctx, &out.churn, &reference)?;
+                }
+            }
+            // composition: the rebuild churn arm under crash-recovery
+            // still equals the incremental uninterrupted reference
+            let rcfg = RecoveryConfig {
+                checkpoint_epoch: 5,
+                kill_rate: 0.1,
+                seed: exec_seed ^ 0xB00,
+                ..RecoveryConfig::default()
+            };
+            let exec = ExecFaultPlan::generate(horizon, 2, &rcfg);
+            let (_, mut pol) = make_policy(&p, i, policy_seed);
+            let out = crashed(
+                &p, pol.as_mut(), &plan, &cfg, horizon, 2, arrival_seed, 0.6, true, &rcfg,
+                &exec,
+            )
+            .map_err(|e| format!("{name} rebuild resilient: {e}"))?;
+            compare(&format!("{name} rebuild resilient"), &out.churn, &reference)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn crashed_decision_tensors_match_uninterrupted() {
+    // the learning policy's final y — snapshotted, killed, thawed,
+    // replayed — is bit-identical to the uninterrupted tensor, for
+    // every worker budget and checkpoint cadence
+    let mut rng = Rng::new(fault_base_seed() ^ 0x5EED);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 50;
+    let cfg = churny(9);
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    let reference = {
+        let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
+        let out = uninterrupted(&p, &mut pol, &plan, &cfg, horizon, 1, 17, 0.5).unwrap();
+        (pol.current_decision().to_vec(), out)
+    };
+    assert_eq!(reference.0.len(), reference.1.problem.decision_len());
+    for &shards in &SHARD_COUNTS {
+        for &epoch in &CHECKPOINT_EPOCHS {
+            let rcfg = RecoveryConfig {
+                checkpoint_epoch: epoch,
+                kill_rate: 0.1,
+                ckpt_fail_rate: 0.1,
+                seed: 31 + epoch as u64,
+                ..RecoveryConfig::default()
+            };
+            let exec = ExecFaultPlan::generate(horizon, shards, &rcfg);
+            let mut pol = OgaSched::new(&p, 2.0, 0.999, ExecBudget::auto());
+            let out =
+                crashed(&p, &mut pol, &plan, &cfg, horizon, shards, 17, 0.5, false, &rcfg, &exec)
+                    .unwrap();
+            assert!(out.kills > 0 || exec.kills.is_empty());
+            compare(
+                &format!("y-parity shards={shards} epoch={epoch}"),
+                &out.churn,
+                &reference.1,
+            )
+            .unwrap();
+            assert_eq!(
+                pol.current_decision(),
+                &reference.0[..],
+                "decision tensors diverged at shards={shards} epoch={epoch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kill_storm_without_epochs_replays_from_slot_zero() {
+    // checkpoint_epoch = 0 means only the implicit slot-0 snapshot
+    // exists: every kill replays the whole prefix — slow but legal,
+    // and still bitwise
+    let mut rng = Rng::new(fault_base_seed() ^ 0xC0);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 24;
+    let cfg = churny(5);
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    let recovery = RecoveryConfig::default(); // checkpoint_epoch: 0
+    let exec = ExecFaultPlan { kills: vec![4, 9, 21], ..ExecFaultPlan::default() };
+    for &shards in &[1usize, 4] {
+        let (_, mut pol) = make_policy(&p, 0, 1);
+        let reference =
+            uninterrupted(&p, pol.as_mut(), &plan, &cfg, horizon, 1, 77, 0.7).unwrap();
+        let (_, mut pol) = make_policy(&p, 0, 1);
+        let out = crashed(
+            &p, pol.as_mut(), &plan, &cfg, horizon, shards, 77, 0.7, false, &recovery, &exec,
+        )
+        .unwrap();
+        assert_eq!(out.kills, 3);
+        assert_eq!(out.restored_from, vec![0, 0, 0]);
+        compare(&format!("kill-storm shards={shards}"), &out.churn, &reference).unwrap();
+    }
+}
+
+#[test]
+fn worker_fault_storm_is_survived_and_float_invisible() {
+    // saturating panic/stall rates: the pool must isolate and retry
+    // every single one without aborting the process or moving a bit
+    let mut rng = Rng::new(fault_base_seed() ^ 0xAB);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 30;
+    let cfg = churny(13);
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    for &shards in &SHARD_COUNTS {
+        let rcfg = RecoveryConfig {
+            checkpoint_epoch: 5,
+            panic_rate: 0.5,
+            stall_rate: 0.3,
+            stall_ms: 1,
+            seed: 71,
+            ..RecoveryConfig::default()
+        };
+        let exec = ExecFaultPlan::generate(horizon, shards, &rcfg);
+        assert!(!exec.panics.is_empty() && !exec.stalls.is_empty());
+        for i in [0usize, 2, 7] {
+            let (name, mut pol) = make_policy(&p, i, 3);
+            let reference =
+                uninterrupted(&p, pol.as_mut(), &plan, &cfg, horizon, shards, 19, 0.8).unwrap();
+            let (_, mut pol) = make_policy(&p, i, 3);
+            let out = crashed(
+                &p, pol.as_mut(), &plan, &cfg, horizon, shards, 19, 0.8, false, &rcfg, &exec,
+            )
+            .unwrap();
+            assert_eq!(out.kills, 0);
+            assert!(
+                out.worker_faults > 0,
+                "{name} shards={shards}: no injected worker fault fired"
+            );
+            compare(&format!("{name} fault-storm shards={shards}"), &out.churn, &reference)
+                .unwrap();
+        }
+    }
+}

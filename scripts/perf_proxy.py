@@ -35,6 +35,7 @@ Regenerate the real numbers with `cargo bench --bench hot_path`
 import json
 import math
 import random
+import struct
 import time
 
 KINDS = ("linear", "log", "reciprocal", "poly")
@@ -1385,6 +1386,84 @@ def churn_section(rows):
           f"   speedup {mean_b/mean_i:6.2f}x")
 
 
+# ----------------------------------------------------- §Recover model --
+
+def _freeze_mirror(p, records_len, y, usage):
+    """Structural mirror of sim::checkpoint::freeze — pack the run
+    snapshot into the utils::codec byte layout (magic/version header,
+    u64 counters, per-slot records, liveness masks, the ClusterState
+    usage grid, and the policy's decision tensor; every f64 as its IEEE
+    bits, which struct '<d' emits byte-identically to f64::to_bits)."""
+    out = bytearray()
+    out += struct.pack("<II", 0x4B434C50, 1)          # "PLCK", VERSION 1
+    for v in (records_len, 0, 0, 0, 0):               # cursor + counters
+        out += struct.pack("<Q", v)
+    name = b"OGASCHED"
+    out += struct.pack("<Q", len(name)) + name
+    out += struct.pack("<dQ", 123.456, 0)             # cum reward, clamped
+    out += struct.pack("<Q", records_len)
+    for t in range(records_len):                      # SlotRecord stream
+        out += struct.pack("<Qdddd", t, 0.1, 0.2, 0.05, 3.0)
+    out += bytes(p["R"]) + bytes(p["L"]) + bytes(p["L"])  # liveness masks
+    for row in usage:                                 # ClusterState grid
+        out += struct.pack("<%dd" % len(row), *row)
+    out += struct.pack("<dd", 17.0, 0.0)              # total + compensation
+    out += struct.pack("<Q", len(y))                  # policy section: y
+    out += struct.pack("<%dd" % len(y), *y)
+    out += struct.pack("<4Q", 1, 2, 3, 4)             # arrivals RNG state
+    return out
+
+
+def recover_section(rows, traffic_rows):
+    """§Recover: checkpointed execution overhead vs epoch length plus
+    kill-and-resume recovery cost, modeled against the measured dense
+    (ρ = 0.7, Scenario::default traffic) slot — the regime the new
+    `resilient run h50` rows of benches/hot_path.rs run in.  Freeze cost
+    is proxy-timed on the structural snapshot mirror; thaw is charged
+    equal to freeze (same bytes decoded), and each kill additionally
+    replays the slots since the last checkpoint (epoch/2 on average)."""
+    name, L, R, K, density = "default 10x128x6", 10, 128, 6, 3.0
+    horizon = 50
+    p = make_problem(L, R, K, density, seed=2023)
+    slot_ms = next(r["dense_ms"] for r in traffic_rows if r["name"] == name)
+    rng = random.Random(7)
+    y = [rng.uniform(0.0, 1.0) for _ in range(p["E"] * K)]
+    usage = [[rng.uniform(0.0, 2.0) for _ in range(K)] for _ in range(R)]
+    # average checkpoint packs ~horizon/2 accumulated slot records
+    mean_f, min_f = bench(lambda: _freeze_mirror(p, horizon // 2, y, usage),
+                          10, 200)
+    freeze_ms = mean_f * 1e3
+    nockpt_ms = horizon * slot_ms
+    rows.append(dict(name=name, section="recover-model", label="nockpt",
+                     ckpts=0, freeze_ms=freeze_ms, modeled_ms=nockpt_ms,
+                     overhead_pct=0.0))
+    for epoch in (1, 5, 17):
+        # boundaries 0, epoch, 2·epoch, … < horizon (slot 0 always writes)
+        ckpts = 1 + (horizon - 1) // epoch
+        modeled = nockpt_ms + ckpts * freeze_ms
+        rows.append(dict(name=name, section="recover-model",
+                         label=f"epoch{epoch}", ckpts=ckpts,
+                         freeze_ms=freeze_ms, modeled_ms=modeled,
+                         overhead_pct=(modeled / nockpt_ms - 1.0) * 100))
+        print(f"resilient h{horizon} {name:<20} epoch{epoch:<3} "
+              f"ckpts {ckpts:3}   freeze {freeze_ms:7.3f} ms   "
+              f"overhead {(modeled / nockpt_ms - 1.0) * 100:5.2f}%")
+    # kill-and-resume on epoch 5: each kill thaws the latest blob and
+    # replays the (epoch/2 expected) slots since it; replayed boundaries
+    # re-write their (bit-identical) blobs
+    epoch, kills = 5, 2
+    ckpts = 1 + (horizon - 1) // epoch
+    recover_ms = kills * (freeze_ms + (epoch / 2) * slot_ms + freeze_ms)
+    modeled = nockpt_ms + ckpts * freeze_ms + recover_ms
+    rows.append(dict(name=name, section="recover-model",
+                     label="epoch5 kills", ckpts=ckpts, kills=kills,
+                     freeze_ms=freeze_ms, modeled_ms=modeled,
+                     overhead_pct=(modeled / nockpt_ms - 1.0) * 100))
+    print(f"resilient h{horizon} {name:<20} epoch5 +{kills} kills      "
+          f"recover {recover_ms:7.3f} ms   "
+          f"overhead {(modeled / nockpt_ms - 1.0) * 100:5.2f}%")
+
+
 def main():
     layout_rows = []
     layout_section(layout_rows)
@@ -1401,11 +1480,13 @@ def main():
     traffic_section(traffic_rows)
     churn_rows = []
     churn_section(churn_rows)
+    recover_rows = []
+    recover_section(recover_rows, traffic_rows)
     with open("perf_proxy.json", "w") as f:
         json.dump(dict(layout=layout_rows, pipeline=pipeline_rows,
                        sharded=sharded_rows, perf4=perf4_rows,
                        perf5=perf5_rows, traffic=traffic_rows,
-                       churn=churn_rows), f, indent=2)
+                       churn=churn_rows, recover=recover_rows), f, indent=2)
     print("wrote perf_proxy.json")
 
     # refresh the cross-PR perf record with proxy provenance (overwritten
@@ -1483,6 +1564,12 @@ def main():
             ns_per_op=round(row["rebuild_ms"] * 1e6, 1),
             ns_per_op_min=round(row["rebuild_ms_min"] * 1e6, 1),
             std_ns=0.0))
+    for row in recover_rows:
+        entries.append(dict(
+            name=f"resilient run h50 {row['label']} {row['name']}", iters=0,
+            ns_per_op=round(row["modeled_ms"] * 1e6, 1),
+            ns_per_op_min=round(row["modeled_ms"] * 1e6, 1),
+            std_ns=0.0))
     for row in perf4_rows:
         if row["section"] == "lineup-budget-model":
             # matches the run_lineup bench rows: 50 slots per timed op
@@ -1517,7 +1604,12 @@ def main():
               "and without `--features simd`. The SChurn `churn epoch` pair "
               "(incremental apply + ShardPlan refresh vs from-scratch Problem "
               "+ LPT rebuild, two editions per op) is a proxy-timed "
-              "structural mirror of the same stages in Rust."),
+              "structural mirror of the same stages in Rust. The SRecover "
+              "`resilient run h50` rows are MODELED (horizon x the measured "
+              "dense slot + a proxy-timed structural freeze mirror per "
+              "checkpoint boundary; kills add thaw + epoch/2 replay slots, "
+              "EXPERIMENTS.md SRecover) — the real rows come from "
+              "benches/hot_path.rs's run_resilient_scenario section."),
         entries=entries,
     )
     with open("BENCH_hot_path.json", "w") as f:
