@@ -233,15 +233,53 @@ fn main() {
                 vec![
                     occ.min_or_zero() as f64,
                     occ.mean(),
+                    occ.p50() as f64,
+                    occ.p99() as f64,
                     occ.max as f64,
-                    occ.slots as f64,
+                    (occ.count / shards as u64) as f64,
                 ],
             ));
         }
         rep.section(
             "per-shard occupancy sparse10 large 100x1024x6 (edges touched per shard-slot)",
-            policy_table(&["plan", "min", "mean", "max", "slots"], &occ_rows, 1),
+            policy_table(&["plan", "min", "mean", "p50", "p99", "max", "slots"], &occ_rows, 1),
         );
+    }
+
+    // ---- §Obs: observability overhead on the sharded sparse slot ----
+    // The shard4 sparse10 slot re-timed at each obs level: `off` is the
+    // shipped default (counters only — one relaxed load + branch past the
+    // span sites), `summary` adds span-duration histograms on every
+    // slot/phase/shard span, `trace` additionally appends each span to
+    // the per-thread rings.  Floats are untouched at every level (see
+    // tests/obs_parity.rs); only the row's time may move.  Target:
+    // summary within ~2% of off.
+    {
+        use ogasched::obs;
+        let mut scenario = Scenario::large_scale();
+        scenario.horizon = 1;
+        let p = synthesize(&scenario);
+        for level in [obs::ObsLevel::Off, obs::ObsLevel::Summary, obs::ObsLevel::Trace] {
+            obs::reset();
+            obs::set_level(level);
+            let mut leader = ShardedLeader::new(&p, 4);
+            let mut pol = OgaSched::new(&p, scenario.eta0, scenario.decay, ExecBudget::auto());
+            pol.bind_shards(leader.plan());
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.1, 7);
+            let mut x = vec![0.0; p.num_ports()];
+            let mut y = vec![0.0; p.decision_len()];
+            rep.record(time_fn(
+                &format!("leader slot sparse10 decay shard4 obs={} large 100x1024x6", level.name()),
+                10,
+                200,
+                || {
+                    arr.next(&mut x);
+                    std::hint::black_box(leader.slot(&mut pol, &x, &mut y));
+                },
+            ));
+        }
+        obs::set_level(obs::ObsLevel::Off);
+        obs::reset();
     }
 
     // ---- §Perf-4/§Perf-5: sharded Eq. 50 oracle solve, large scenario ----

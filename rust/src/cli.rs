@@ -104,10 +104,16 @@ COMMANDS:
                                      replay from the start)
                --exec-panic-rate F --exec-stall-rate F --exec-stall-ms N
                --exec-kill-rate F --ckpt-fail-rate F --exec-fault-seed N
+               observability (slot-phase spans + metrics; bitwise-inert):
+               --obs <off|summary|trace>  summary prints the metric table
+                                     after the run; trace also writes
+                                     results/obs_events.jsonl and the
+                                     Perfetto-loadable results/obs_trace.json
     compare    run the full paper lineup on one scenario (same options)
     figure     regenerate a paper figure/table:
                ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|churn|all>
                --horizon N   override T (0 = paper scale)
+               --obs <off|summary|trace>   as in `run`
     artifacts  check AOT artifacts and run a PJRT smoke step
     help       show this help
 

@@ -4,5 +4,5 @@
 pub mod scenario;
 pub mod value;
 
-pub use scenario::{FaultConfig, GraphSpec, RecoveryConfig, Scenario};
+pub use scenario::{FaultConfig, GraphSpec, ObsConfig, RecoveryConfig, Scenario};
 pub use value::{Doc, Value};

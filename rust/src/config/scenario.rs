@@ -5,6 +5,7 @@
 
 use crate::config::value::Doc;
 use crate::coordinator::ReleaseMode;
+use crate::obs::ObsLevel;
 use crate::oga::utilities::UtilityMix;
 use crate::utils::pool::ExecBudget;
 
@@ -172,6 +173,22 @@ impl RecoveryConfig {
     }
 }
 
+/// Observability knobs (`[obs]` in config files; consumed by the CLI
+/// drivers, which call `obs::set_level` before a run).  Off by default:
+/// spans cost one relaxed-atomic branch and nothing is exported.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// `off` | `summary` | `trace` (see `obs::ObsLevel`).
+    pub level: ObsLevel,
+}
+
+impl ObsConfig {
+    /// Does this config record anything?
+    pub fn enabled(&self) -> bool {
+        self.level != ObsLevel::Off
+    }
+}
+
 /// All knobs of one simulated experiment (defaults = paper Tab. 2).
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -208,6 +225,8 @@ pub struct Scenario {
     pub faults: FaultConfig,
     /// Crash-resilience knobs (`[recovery]`; off by default).
     pub recovery: RecoveryConfig,
+    /// Observability level (`[obs]`; off by default).
+    pub obs: ObsConfig,
 }
 
 impl Default for Scenario {
@@ -234,6 +253,7 @@ impl Default for Scenario {
             parallel: ExecBudget::auto(),
             faults: FaultConfig::default(),
             recovery: RecoveryConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -326,6 +346,7 @@ impl Scenario {
             "recovery.checkpoint_epoch", "recovery.panic_rate",
             "recovery.stall_rate", "recovery.kill_rate",
             "recovery.ckpt_fail_rate", "recovery.stall_ms", "recovery.seed",
+            "obs.level",
         ];
         for key in doc.entries.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -383,6 +404,10 @@ impl Scenario {
             stall_ms: doc.usize_or("recovery.stall_ms", dr.stall_ms as usize)? as u64,
             seed: doc.usize_or("recovery.seed", dr.seed as usize)? as u64,
         };
+        let obs = ObsConfig {
+            level: ObsLevel::parse(doc.str_or("obs.level", d.obs.level.name())?)
+                .map_err(|e| format!("obs.level: {e}"))?,
+        };
         let s = Scenario {
             name: doc.str_or("name", &d.name)?.to_string(),
             num_ports: doc.usize_or("ports", d.num_ports)?,
@@ -409,6 +434,7 @@ impl Scenario {
             },
             faults,
             recovery,
+            obs,
         };
         s.validate()?;
         Ok(s)
@@ -525,6 +551,21 @@ mod tests {
         assert_eq!(s.recovery.stall_rate, RecoveryConfig::default().stall_rate);
         assert!(Scenario::from_toml("[recovery]\npanic_rate = 2.0\n").is_err());
         assert!(Scenario::from_toml("[recovery]\nepoch = 5\n").is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_and_defaults_off() {
+        let s = Scenario::default();
+        assert!(!s.obs.enabled());
+        assert_eq!(s.obs.level, ObsLevel::Off);
+        let s = Scenario::from_toml("[obs]\nlevel = \"summary\"\n").unwrap();
+        assert!(s.obs.enabled());
+        assert_eq!(s.obs.level, ObsLevel::Summary);
+        let s = Scenario::from_toml("[obs]\nlevel = \"trace\"\n").unwrap();
+        assert_eq!(s.obs.level, ObsLevel::Trace);
+        // unknown levels and keys fail loudly
+        assert!(Scenario::from_toml("[obs]\nlevel = \"verbose\"\n").is_err());
+        assert!(Scenario::from_toml("[obs]\nring = 64\n").is_err());
     }
 
     #[test]

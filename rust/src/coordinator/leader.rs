@@ -27,6 +27,7 @@ use std::time::Instant;
 use crate::coordinator::sharded::{ShardPlan, ShardedLeader};
 use crate::coordinator::state::ClusterState;
 use crate::model::Problem;
+use crate::obs;
 use crate::reward::{slot_reward_kinds, SlotReward};
 use crate::schedulers::{Policy, Touched};
 use crate::sim::arrivals::ArrivalModel;
@@ -181,15 +182,20 @@ impl<'p> Leader<'p> {
                 pool::run_isolated(|| probe.fire(abs_slot, 0));
             }
             arrivals.next(&mut x);
-            policy.decide(p, &x, &mut y);
+            let _slot_span = obs::SpanTimer::start(obs::SpanKind::Slot, abs_slot, 0);
+            obs::with_span(obs::SpanKind::Decide, abs_slot, 0, || {
+                policy.decide(p, &x, &mut y)
+            });
             // commit only what the policy changed (§Perf-2); the full
             // sweep remains the fallback for Touched::All policies
-            let report = match policy.touched() {
-                Touched::All => self.state.commit(p, &mut y),
-                Touched::Instances(instances) => {
-                    self.state.commit_instances(p, &mut y, instances)
+            let report = obs::with_span(obs::SpanKind::Commit, abs_slot, 0, || {
+                match policy.touched() {
+                    Touched::All => self.state.commit(p, &mut y),
+                    Touched::Instances(instances) => {
+                        self.state.commit_instances(p, &mut y, instances)
+                    }
                 }
-            };
+            });
             if self.strict {
                 assert_eq!(
                     report.clamped, 0,
@@ -199,7 +205,9 @@ impl<'p> Leader<'p> {
             }
             result.clamped_total += report.clamped;
             let SlotReward { q, gain, penalty } =
-                slot_reward_kinds(p, p.kinds(), &x, &y, &mut quota);
+                obs::with_span(obs::SpanKind::Reward, abs_slot, 0, || {
+                    slot_reward_kinds(p, p.kinds(), &x, &y, &mut quota)
+                });
             self.state.release();
             result.cumulative_reward += q;
             result.records.push(SlotRecord {

@@ -8,5 +8,5 @@ pub mod sharded;
 pub mod state;
 
 pub use leader::{run_lineup, Leader, RunResult, SlotRecord};
-pub use sharded::{OccupancyStats, ShardLedger, ShardPlan, ShardedLeader};
+pub use sharded::{ShardLedger, ShardPlan, ShardedLeader, OCCUPANCY_METRIC};
 pub use state::{ClusterState, ReleaseMode};

@@ -37,6 +37,7 @@ use std::time::Instant;
 use crate::coordinator::leader::{RunResult, SlotRecord};
 use crate::coordinator::state::{commit_row_into, ClusterState, CommitReport};
 use crate::model::Problem;
+use crate::obs;
 use crate::oga::projection::project_instances_serial;
 use crate::reward::{slot_reward_ports_sharded, PortRewardScratch, SlotReward};
 use crate::schedulers::{Policy, Touched};
@@ -405,52 +406,9 @@ impl ShardLedger {
     }
 }
 
-/// Per-shard occupancy telemetry: edges-touched per shard per slot in
-/// the reward stage's arrived neighborhood (the quantity phase-B work
-/// scales with).  Groundwork for the ROADMAP work-stealing item — this
-/// measures the skew the static LPT plan leaves on the table under
-/// sparse/skewed arrivals.  min/max are over every (slot, shard)
-/// sample; `mean` averages across them.
-#[derive(Clone, Copy, Debug)]
-pub struct OccupancyStats {
-    /// Slots sampled.
-    pub slots: u64,
-    /// Shards per slot (the plan's width).
-    pub shards: usize,
-    /// Fewest edges any shard touched in any sampled slot.
-    pub min: u64,
-    /// Most edges any shard touched in any sampled slot.
-    pub max: u64,
-    /// Total edges touched across all samples.
-    pub sum: u64,
-}
-
-impl Default for OccupancyStats {
-    fn default() -> Self {
-        OccupancyStats { slots: 0, shards: 0, min: u64::MAX, max: 0, sum: 0 }
-    }
-}
-
-impl OccupancyStats {
-    /// Mean edges-touched per (slot, shard) sample.
-    pub fn mean(&self) -> f64 {
-        let samples = self.slots * self.shards.max(1) as u64;
-        if samples == 0 {
-            0.0
-        } else {
-            self.sum as f64 / samples as f64
-        }
-    }
-
-    /// `min` with the empty sentinel normalized away.
-    pub fn min_or_zero(&self) -> u64 {
-        if self.slots == 0 {
-            0
-        } else {
-            self.min
-        }
-    }
-}
+/// Registry name of the per-(slot, shard) edges-touched occupancy
+/// histogram published by [`ShardedLeader::publish_occupancy`].
+pub const OCCUPANCY_METRIC: &str = "sharded.occupancy_edges";
 
 /// Per-shard worker state: the ledger shard plus per-slot scratch.
 struct ShardWorker {
@@ -489,10 +447,13 @@ pub struct ShardedLeader<'p> {
     /// key on absolute slots, so the driver re-bases this via
     /// [`ShardedLeader::arm_probe`].
     next_slot: u64,
-    /// Per-shard edges-touched telemetry accumulated by the reward
-    /// stage (ISSUE 7 satellite; surfaces LPT skew under sparse
-    /// arrivals for the hot-path bench and `figure sparse`).
-    occupancy: OccupancyStats,
+    /// Per-(slot, shard) edges-touched telemetry accumulated by the
+    /// reward stage into a leader-local log₂ histogram (surfaces LPT
+    /// skew under sparse arrivals for the hot-path bench and `figure
+    /// sparse`); [`ShardedLeader::publish_occupancy`] folds it into
+    /// the obs registry under [`OCCUPANCY_METRIC`].  Leader-local so
+    /// concurrent lineup lanes never mix their samples mid-run.
+    occupancy: obs::Histogram,
     /// Assert that policies never need clamping (on in tests/debug).
     pub strict: bool,
 }
@@ -525,7 +486,7 @@ impl<'p> ShardedLeader<'p> {
             reward_scratch: PortRewardScratch::default(),
             probe: None,
             next_slot: 0,
-            occupancy: OccupancyStats::default(),
+            occupancy: obs::Histogram::new(),
             strict: cfg!(debug_assertions),
         }
     }
@@ -538,10 +499,25 @@ impl<'p> ShardedLeader<'p> {
         self.next_slot = slot_base;
     }
 
-    /// The occupancy telemetry accumulated so far (reset-free; callers
-    /// snapshot before/after a run window if they want a delta).
-    pub fn occupancy(&self) -> OccupancyStats {
-        self.occupancy
+    /// Snapshot of the occupancy telemetry accumulated so far — one
+    /// sample per (slot, shard), so `count / num_shards` is the slots
+    /// sampled.  Reset-free; callers snapshot before/after a run window
+    /// if they want a delta.
+    pub fn occupancy(&self) -> obs::HistSnapshot {
+        self.occupancy.snapshot()
+    }
+
+    /// Fold the leader-local occupancy histogram into the process-wide
+    /// obs registry ([`OCCUPANCY_METRIC`]) and record the plan width on
+    /// the "sharded.occupancy_shards" gauge.  [`ShardedLeader::run`]
+    /// publishes automatically when obs is enabled; harnesses that
+    /// drive [`ShardedLeader::slot`] directly (hot-path bench, `figure
+    /// sparse`) call this at their window boundaries.
+    pub fn publish_occupancy(&self) {
+        self.occupancy.merge_into(&obs::registry().histogram(OCCUPANCY_METRIC));
+        obs::registry()
+            .gauge("sharded.occupancy_shards")
+            .set(self.plan.num_shards() as i64);
     }
 
     /// Resume a run with a ledger and (optionally) the previous
@@ -606,13 +582,17 @@ impl<'p> ShardedLeader<'p> {
         let abs_slot = self.next_slot;
         self.next_slot += 1;
         pool::set_slot(abs_slot);
+        let _slot_span = obs::SpanTimer::start(obs::SpanKind::Slot, abs_slot, 0);
         let p = self.problem;
-        policy.decide(p, x, y);
-        let report = match policy.touched() {
-            Touched::All => self.commit_all(y, abs_slot),
-            Touched::Instances(list) => self.commit_list(y, list, abs_slot),
-        };
-        let reward = self.reward(x, y);
+        obs::with_span(obs::SpanKind::Decide, abs_slot, 0, || policy.decide(p, x, y));
+        let report = obs::with_span(obs::SpanKind::Commit, abs_slot, 0, || {
+            match policy.touched() {
+                Touched::All => self.commit_all(y, abs_slot),
+                Touched::Instances(list) => self.commit_list(y, list, abs_slot),
+            }
+        });
+        let reward =
+            obs::with_span(obs::SpanKind::Reward, abs_slot, 0, || self.reward(x, y));
         self.state.release();
         (report, reward)
     }
@@ -658,6 +638,9 @@ impl<'p> ShardedLeader<'p> {
             });
         }
         result.elapsed_secs = start.elapsed().as_secs_f64();
+        if obs::enabled() {
+            self.publish_occupancy();
+        }
         result
     }
 
@@ -696,23 +679,25 @@ impl<'p> ShardedLeader<'p> {
             let view = SyncSlice::new(y);
             let y_len = view.len();
             pool::parallel_shards(&mut self.workers, |s, w| {
-                // Fault-injection point: *before* any write, so a
-                // retried task replays against untouched state.
-                if let Some(probe) = &probe {
-                    probe.fire(abs_slot, s as u32);
-                }
-                // SAFETY: shards own disjoint instance sets, so an
-                // instance's usage row and edge columns of `y` are
-                // touched only by its owner, and each list position is
-                // routed to exactly one shard.  The full-range view
-                // follows the crate's established disjoint-ownership
-                // pattern (`projection::SharedTensor`).
-                let y = unsafe { view.slice_mut(0, y_len) };
-                for &i in &w.assigned {
-                    let r = list[i];
-                    let delta = w.ledger.commit_instance(p, y, r, &mut w.clamped);
-                    unsafe { deltas.write(i, delta) };
-                }
+                obs::with_span(obs::SpanKind::ShardCommit, abs_slot, s as u32, || {
+                    // Fault-injection point: *before* any write, so a
+                    // retried task replays against untouched state.
+                    if let Some(probe) = &probe {
+                        probe.fire(abs_slot, s as u32);
+                    }
+                    // SAFETY: shards own disjoint instance sets, so an
+                    // instance's usage row and edge columns of `y` are
+                    // touched only by its owner, and each list position is
+                    // routed to exactly one shard.  The full-range view
+                    // follows the crate's established disjoint-ownership
+                    // pattern (`projection::SharedTensor`).
+                    let y = unsafe { view.slice_mut(0, y_len) };
+                    for &i in &w.assigned {
+                        let r = list[i];
+                        let delta = w.ledger.commit_instance(p, y, r, &mut w.clamped);
+                        unsafe { deltas.write(i, delta) };
+                    }
+                });
             });
         }
         let mut report = CommitReport::default();
@@ -748,25 +733,27 @@ impl<'p> ShardedLeader<'p> {
             let view = SyncSlice::new(y);
             let y_len = view.len();
             pool::parallel_shards(&mut self.workers, |s, w| {
-                // Fault-injection point — before any write (see
-                // `commit_list`).
-                if let Some(probe) = &probe {
-                    probe.fire(abs_slot, s as u32);
-                }
-                // SAFETY: as in `commit_list` — disjoint instance sets,
-                // full-range view per the crate's `projection::SharedTensor`
-                // disjoint-ownership pattern.
-                let y = unsafe { view.slice_mut(0, y_len) };
-                for &r in plan.instances(s) {
-                    w.clamped += commit_row_into(
-                        p,
-                        y,
-                        r,
-                        &mut w.ledger.usage,
-                        &mut w.ledger.row,
-                        &p.capacity,
-                    );
-                }
+                obs::with_span(obs::SpanKind::ShardCommit, abs_slot, s as u32, || {
+                    // Fault-injection point — before any write (see
+                    // `commit_list`).
+                    if let Some(probe) = &probe {
+                        probe.fire(abs_slot, s as u32);
+                    }
+                    // SAFETY: as in `commit_list` — disjoint instance sets,
+                    // full-range view per the crate's `projection::SharedTensor`
+                    // disjoint-ownership pattern.
+                    let y = unsafe { view.slice_mut(0, y_len) };
+                    for &r in plan.instances(s) {
+                        w.clamped += commit_row_into(
+                            p,
+                            y,
+                            r,
+                            &mut w.ledger.usage,
+                            &mut w.ledger.row,
+                            &p.capacity,
+                        );
+                    }
+                });
             });
         }
         let mut report = CommitReport::default();
@@ -793,20 +780,17 @@ impl<'p> ShardedLeader<'p> {
         self.arrived.clear();
         self.arrived.extend((0..p.num_ports()).filter(|&l| x[l] != 0.0));
         // Occupancy telemetry: edges each shard would touch in this
-        // slot's arrived neighborhood.  CSR ptr arithmetic only —
-        // O(shards × arrived) per slot, no edge walk.
+        // slot's arrived neighborhood — one histogram sample per
+        // (slot, shard).  CSR ptr arithmetic only — O(shards × arrived)
+        // per slot, no edge walk, and integer-only (obs parity).
         let shards = self.plan.num_shards();
-        self.occupancy.slots += 1;
-        self.occupancy.shards = shards;
         for s in 0..shards {
             let edges: u64 = self
                 .arrived
                 .iter()
                 .map(|&l| self.plan.port_edges(s, l).len() as u64)
                 .sum();
-            self.occupancy.min = self.occupancy.min.min(edges);
-            self.occupancy.max = self.occupancy.max.max(edges);
-            self.occupancy.sum += edges;
+            self.occupancy.record(edges);
         }
         slot_reward_ports_sharded(
             p,
@@ -1096,11 +1080,13 @@ mod tests {
         let horizon = 12;
         leader.run(&mut pol, &mut arr, horizon);
         let occ = leader.occupancy();
-        assert_eq!(occ.slots, horizon as u64);
-        assert_eq!(occ.shards, leader.plan().num_shards());
+        let shards = leader.plan().num_shards() as u64;
+        // one histogram sample per (slot, shard)
+        assert_eq!(occ.count, horizon as u64 * shards);
         assert!(occ.min_or_zero() <= occ.max);
         assert!(occ.mean() >= occ.min_or_zero() as f64);
         assert!(occ.mean() <= occ.max as f64);
+        assert!(occ.p50() <= occ.p99());
         // every edge of every arrived port lands in exactly one shard,
         // so the per-slot shard sum telescopes into the total
         assert!(occ.sum > 0, "dense arrivals must touch edges");

@@ -12,7 +12,7 @@
 //! same plotting scripts apply.
 
 use crate::config::Scenario;
-use crate::coordinator::{OccupancyStats, ShardedLeader};
+use crate::coordinator::ShardedLeader;
 use crate::figures::{results_dir, FigureOutput};
 use crate::metrics;
 use crate::schedulers::OgaSched;
@@ -42,7 +42,9 @@ const OCCUPANCY_SHARDS: [usize; 4] = [1, 2, 4, 8];
 /// report the per-shard edges-touched telemetry — how much reward-stage
 /// work each shard of the static LPT plan actually sees per slot under
 /// the sparse regime (ISSUE 7 satellite; work-stealing groundwork).
-fn occupancy_sweep(s: &Scenario) -> Vec<(usize, OccupancyStats)> {
+/// Since ISSUE 8 the telemetry is an `obs` log₂ histogram, so the sweep
+/// also surfaces tail percentiles, not just min/mean/max.
+fn occupancy_sweep(s: &Scenario) -> Vec<(usize, crate::obs::HistSnapshot)> {
     let p = synthesize(s);
     OCCUPANCY_SHARDS
         .iter()
@@ -85,24 +87,24 @@ pub fn run(horizon_override: usize) -> FigureOutput {
     // Occupancy columns: the same per-shard edges-touched counters the
     // hot-path bench samples, here at figure scale and horizon.
     let occ = occupancy_sweep(&s);
-    let mut occ_csv =
-        Csv::new(&["shards", "slots", "min_edges", "mean_edges", "max_edges"]);
-    let mut occ_table = Table::new(&["shards", "slots", "min", "mean", "max"]);
+    let mut occ_csv = Csv::new(&[
+        "shards", "slots", "min_edges", "mean_edges", "p50_edges", "p99_edges", "max_edges",
+    ]);
+    let mut occ_table =
+        Table::new(&["shards", "slots", "min", "mean", "p50", "p99", "max"]);
     for (shards, o) in &occ {
-        occ_csv.push_row(&[
+        let slots = o.count / *shards as u64;
+        let row = [
             shards.to_string(),
-            o.slots.to_string(),
+            slots.to_string(),
             o.min_or_zero().to_string(),
             format!("{:.2}", o.mean()),
+            o.p50().to_string(),
+            o.p99().to_string(),
             o.max.to_string(),
-        ]);
-        occ_table.push(&[
-            shards.to_string(),
-            o.slots.to_string(),
-            o.min_or_zero().to_string(),
-            format!("{:.2}", o.mean()),
-            o.max.to_string(),
-        ]);
+        ];
+        occ_csv.push_row(&row);
+        occ_table.push(&row);
     }
     let occ_path = dir.join("sparse_occupancy.csv");
     let _ = occ_csv.write_file(&occ_path);
@@ -157,9 +159,9 @@ mod tests {
         let occ = occupancy_sweep(&s);
         assert_eq!(occ.len(), OCCUPANCY_SHARDS.len());
         for (shards, o) in occ {
-            assert_eq!(o.shards, shards);
-            assert_eq!(o.slots, 40);
+            assert_eq!(o.count, 40 * shards as u64);
             assert!(o.min_or_zero() <= o.max);
+            assert!(o.p50() <= o.p99() && o.p99() <= o.max);
         }
     }
 

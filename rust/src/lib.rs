@@ -38,6 +38,7 @@ pub mod figures;
 pub mod graph;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod oga;
 pub mod regret;
 pub mod reward;

@@ -6,6 +6,7 @@ use ogasched::cli::{Args, HELP};
 use ogasched::config::Scenario;
 use ogasched::figures;
 use ogasched::metrics;
+use ogasched::obs;
 use ogasched::runtime::{default_dir, HloOgaSched, Manifest};
 use ogasched::schedulers::{
     BinPacking, Drf, Fairness, OgaSched, Policy, RandomAlloc, Spreading,
@@ -94,12 +95,37 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     s.recovery.ckpt_fail_rate = args.opt_f64("ckpt-fail-rate", s.recovery.ckpt_fail_rate)?;
     s.recovery.stall_ms = args.opt_usize("exec-stall-ms", s.recovery.stall_ms as usize)? as u64;
     s.recovery.seed = args.opt_usize("exec-fault-seed", s.recovery.seed as usize)? as u64;
+    // Observability level (§Obs): bitwise-inert by contract, so it can be
+    // toggled per-invocation without invalidating any parity baseline.
+    if let Some(v) = args.opt("obs") {
+        s.obs.level = obs::ObsLevel::parse(v).map_err(|e| format!("--obs: {e}"))?;
+    }
     s.validate()?;
     Ok(s)
 }
 
+/// Flush observability output for a finished command: the metric table at
+/// `summary` and above, plus the JSONL + Chrome-trace files at `trace`.
+fn obs_finish(s: &Scenario) -> Result<(), String> {
+    if !s.obs.enabled() {
+        return Ok(());
+    }
+    println!("{}", obs::export::summary_table().render());
+    if s.obs.level == obs::ObsLevel::Trace {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir).map_err(|e| format!("results: {e}"))?;
+        let events = dir.join("obs_events.jsonl");
+        let trace = dir.join("obs_trace.json");
+        obs::export::write_jsonl(&events)?;
+        obs::export::write_chrome_trace(&trace)?;
+        println!("obs: wrote {} and {}", events.display(), trace.display());
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<(), String> {
     let s = scenario_from(args)?;
+    obs::set_level(s.obs.level);
     let problem = synthesize(&s);
     let name = args.opt("policy").unwrap_or("ogasched");
     let mut policy: Box<dyn Policy> = match name {
@@ -140,7 +166,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             out.worker_faults,
             if rebuild { "rebuild" } else { "incremental" },
         );
-        return Ok(());
+        return obs_finish(&s);
     }
     if s.faults.enabled() {
         let rebuild = args.has_flag("churn-rebuild");
@@ -158,7 +184,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             out.replans,
             if rebuild { "rebuild" } else { "incremental" },
         );
-        return Ok(());
+        return obs_finish(&s);
     }
     let run = sim::run_on_problem(&s, &problem, policy.as_mut());
     println!(
@@ -169,11 +195,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         run.cumulative_reward,
         run.throughput()
     );
-    Ok(())
+    obs_finish(&s)
 }
 
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let s = scenario_from(args)?;
+    obs::set_level(s.obs.level);
     let results = sim::run_paper_lineup(&s);
     let oga = results[0].clone();
     let mut table =
@@ -198,20 +225,22 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
         s.arrival_prob, s.contention
     );
     println!("{}", table.render());
-    Ok(())
+    obs_finish(&s)
 }
 
 fn cmd_figure(args: &Args) -> Result<(), String> {
+    let s = scenario_from(args)?;
+    obs::set_level(s.obs.level);
     let id = args.positional.first().map(String::as_str).unwrap_or("all");
     let horizon = args.opt_usize("horizon", 0)?;
     if id == "all" {
         for id in figures::ALL_IDS {
             println!("{}", figures::run_by_id(id, horizon)?);
         }
-        return Ok(());
+        return obs_finish(&s);
     }
     println!("{}", figures::run_by_id(id, horizon)?);
-    Ok(())
+    obs_finish(&s)
 }
 
 fn cmd_artifacts() -> Result<(), String> {

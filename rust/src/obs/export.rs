@@ -1,0 +1,253 @@
+//! Deterministic exporters for the obs layer.
+//!
+//! Three formats, all rendered from the same (ring snapshot, registry
+//! snapshot) pair and therefore mutually consistent:
+//!
+//! * **JSON-lines** — a `meta` header line (schema + version, the
+//!   `utils::codec` versioning idiom), then one line per trace event in
+//!   merged (group, idx) ring order, then every metric in registry name
+//!   order.  Validated by `scripts/check_obs.py` in CI.
+//! * **Chrome trace-event JSON** — loadable in Perfetto / `chrome://
+//!   tracing`; one `tid` per ring with a `thread_name` metadata record,
+//!   `ph:"X"` duration spans and `ph:"i"` instant events.
+//! * **Run-summary table** — the `--obs summary` table printed by
+//!   `run`/`figure`: histograms with count/p50/p99/max/mean, then
+//!   non-zero counters and gauges.
+//!
+//! Determinism: given the same recorded events and metric values, every
+//! byte of output is a pure function of the snapshots — iteration
+//! orders are sorted, floats appear only in fixed-precision `mean`
+//! cells, timestamps are integer nanoseconds (formatted as exact
+//! microsecond decimals for Chrome).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::{metrics::registry, ring, SpanKind};
+use crate::utils::table::Table;
+
+pub const SCHEMA: &str = "ogasched-obs";
+pub const VERSION: u32 = 1;
+
+fn kind_name(k: u8) -> &'static str {
+    SpanKind::from_u8(k).map(SpanKind::name).unwrap_or("unknown")
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars) for
+/// thread/metric names; the names we emit are ASCII identifiers, but
+/// test-harness thread names can contain arbitrary text.
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Exact ns → µs decimal (e.g. 1530 ns → "1.530") without any float
+/// arithmetic, for the Chrome `ts`/`dur` fields.
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Render the JSON-lines export.
+pub fn render_jsonl() -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{{\"record\":\"meta\",\"schema\":\"{SCHEMA}\",\"version\":{VERSION}}}"
+    );
+    let mut seq = 0u64;
+    for snap in ring::snapshot_all() {
+        let thread = escape_json(&format!("{}-{}", snap.group, snap.idx));
+        for ev in &snap.events {
+            let _ = writeln!(
+                out,
+                "{{\"record\":\"span\",\"seq\":{},\"thread\":\"{}\",\"kind\":\"{}\",\
+                 \"slot\":{},\"shard\":{},\"gen\":{},\"ts_ns\":{},\"dur_ns\":{}}}",
+                seq, thread, kind_name(ev.kind), ev.slot, ev.shard, ev.gen, ev.t0_ns, ev.dur_ns
+            );
+            seq += 1;
+        }
+        if snap.dropped > 0 {
+            let _ = writeln!(
+                out,
+                "{{\"record\":\"dropped\",\"thread\":\"{}\",\"count\":{}}}",
+                thread, snap.dropped
+            );
+        }
+    }
+    for (name, v) in registry().counters() {
+        let _ = writeln!(
+            out,
+            "{{\"record\":\"counter\",\"name\":\"{}\",\"value\":{}}}",
+            escape_json(&name),
+            v
+        );
+    }
+    for (name, v) in registry().gauges() {
+        let _ = writeln!(
+            out,
+            "{{\"record\":\"gauge\",\"name\":\"{}\",\"value\":{}}}",
+            escape_json(&name),
+            v
+        );
+    }
+    for (name, h) in registry().histograms() {
+        let _ = writeln!(
+            out,
+            "{{\"record\":\"histogram\",\"name\":\"{}\",\"count\":{},\"sum\":{},\
+             \"min\":{},\"max\":{},\"p50\":{},\"p99\":{}}}",
+            escape_json(&name),
+            h.count,
+            h.sum,
+            h.min_or_zero(),
+            h.max,
+            h.p50(),
+            h.p99()
+        );
+    }
+    out
+}
+
+/// Render the Chrome trace-event JSON (the `traceEvents` array form
+/// that Perfetto and `chrome://tracing` load directly).
+pub fn render_chrome_trace() -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |out: &mut String, line: String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&line);
+    };
+    for (pos, snap) in ring::snapshot_all().iter().enumerate() {
+        let tid = pos + 1;
+        let thread = escape_json(&format!("{}-{}", snap.group, snap.idx));
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{thread}\"}}}}"
+            ),
+        );
+        for ev in &snap.events {
+            let name = kind_name(ev.kind);
+            let args = format!(
+                "{{\"slot\":{},\"shard\":{},\"gen\":{}}}",
+                ev.slot, ev.shard, ev.gen
+            );
+            let instant = SpanKind::from_u8(ev.kind).map(SpanKind::is_instant).unwrap_or(true);
+            let line = if instant {
+                format!(
+                    "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{tid},\
+                     \"ts\":{},\"args\":{args}}}",
+                    micros(ev.t0_ns)
+                )
+            } else {
+                format!(
+                    "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\
+                     \"ts\":{},\"dur\":{},\"args\":{args}}}",
+                    micros(ev.t0_ns),
+                    micros(ev.dur_ns)
+                )
+            };
+            push(&mut out, line);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// The `--obs summary` table: histograms first (count/p50/p99/max/mean
+/// in ns or edges), then non-zero counters and gauges.
+pub fn summary_table() -> Table {
+    let mut t = Table::new(&["metric", "count", "p50", "p99", "max", "mean"]);
+    for (name, h) in registry().histograms() {
+        if h.count == 0 {
+            continue;
+        }
+        t.push(&[
+            name,
+            h.count.to_string(),
+            h.p50().to_string(),
+            h.p99().to_string(),
+            h.max.to_string(),
+            format!("{:.1}", h.mean()),
+        ]);
+    }
+    for (name, v) in registry().counters() {
+        if v == 0 {
+            continue;
+        }
+        t.push(&[name, v.to_string(), "-".into(), "-".into(), "-".into(), "-".into()]);
+    }
+    for (name, v) in registry().gauges() {
+        if v == 0 {
+            continue;
+        }
+        t.push(&[name, v.to_string(), "-".into(), "-".into(), "-".into(), "-".into()]);
+    }
+    t
+}
+
+/// Write the JSON-lines export to `path`.
+pub fn write_jsonl(path: &Path) -> Result<(), String> {
+    std::fs::write(path, render_jsonl()).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Write the Chrome trace export to `path`.
+pub fn write_chrome_trace(path: &Path) -> Result<(), String> {
+    std::fs::write(path, render_chrome_trace()).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_has_versioned_meta_first() {
+        let out = render_jsonl();
+        let first = out.lines().next().unwrap();
+        assert_eq!(
+            first,
+            format!("{{\"record\":\"meta\",\"schema\":\"{SCHEMA}\",\"version\":{VERSION}}}")
+        );
+    }
+
+    #[test]
+    fn chrome_trace_is_balanced_json_shape() {
+        let out = render_chrome_trace();
+        assert!(out.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(out.trim_end().ends_with("]}"));
+        // crude but dependency-free balance check
+        let opens = out.matches('{').count();
+        let closes = out.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn escaping_and_micros_are_exact() {
+        assert_eq!(escape_json("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape_json("t\n"), "t\\u000a");
+        assert_eq!(micros(0), "0.000");
+        assert_eq!(micros(999), "0.999");
+        assert_eq!(micros(1_530), "1.530");
+        assert_eq!(micros(2_000_007), "2000.007");
+    }
+
+    #[test]
+    fn summary_table_skips_zero_metrics() {
+        let t = summary_table();
+        let rendered = t.render();
+        assert!(rendered.contains("metric"));
+    }
+}

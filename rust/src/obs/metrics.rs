@@ -1,0 +1,438 @@
+//! The obs metrics registry: counters, gauges, and log₂-bucketed
+//! histograms behind a process-wide name → handle table.
+//!
+//! Everything here is integer-only relaxed atomics — recording a metric
+//! can never perturb simulation floats or RNG streams, which is the
+//! obs-on/off bitwise-parity contract (`tests/obs_parity.rs`).  Handles
+//! are `Arc`s resolved once per call site (hot paths cache them in a
+//! `OnceLock`), so steady-state cost is one atomic RMW per update; the
+//! registry lock is touched only at registration and export.
+//!
+//! Snapshot order is the `BTreeMap` name order — deterministic for the
+//! exporters regardless of registration interleaving.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins signed level (queue depth, plan width, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Bucket count of [`Histogram`]: bucket 0 holds exact zeros, bucket
+/// `i ≥ 1` holds values in `[2^(i-1), 2^i)`, up to `i = 64` for the
+/// top of the u64 range.
+pub const NUM_BUCKETS: usize = 65;
+
+/// Log₂-bucketed u64 histogram with exact count/sum/min/max.
+///
+/// Percentiles are bucket-resolution (the p50/p99 columns of the run
+/// summary and the slot-latency substrate of the ROADMAP throughput
+/// item); count, sum (hence mean), min and max are exact, which is what
+/// the occupancy telemetry migrated from `OccupancyStats` needs.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket of value `v`: 0 for 0, else `floor(log2 v) + 1` — so every
+    /// power of two starts a new bucket (`2^k` lands in bucket `k + 1`,
+    /// `2^k − 1` in bucket `k`).
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Lower edge of bucket `i` (0, 1, 2, 4, 8, ...).
+    pub fn bucket_floor(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Fold this histogram's samples into `other` (used by per-leader
+    /// occupancy histograms publishing into the global registry).
+    pub fn merge_into(&self, other: &Histogram) {
+        for (from, to) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = from.load(Ordering::Relaxed);
+            if n > 0 {
+                to.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return;
+        }
+        other.count.fetch_add(count, Ordering::Relaxed);
+        other.sum.fetch_add(self.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        other.min.fetch_min(self.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        other.max.fetch_max(self.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Owned copy of a [`Histogram`]'s state at one instant.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// `u64::MAX` sentinel while empty — use [`HistSnapshot::min_or_zero`].
+    pub min: u64,
+    pub max: u64,
+    pub buckets: [u64; NUM_BUCKETS],
+}
+
+impl HistSnapshot {
+    pub fn min_or_zero(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact mean (export-time float formatting only; the hot path
+    /// never computes this).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Integer-rank quantile `num/den`: the lower edge of the bucket
+    /// holding sample rank `⌊(count−1)·num/den⌋`, clamped into the
+    /// observed `[min, max]` so one-sample histograms return the sample's
+    /// bucket floor exactly.  Empty histograms return 0.
+    pub fn quantile(&self, num: u64, den: u64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (self.count - 1).saturating_mul(num) / den.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Histogram::bucket_floor(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(1, 2)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(99, 100)
+    }
+}
+
+/// The process-wide metric table.  One instance (see [`registry`]);
+/// handles are shared `Arc`s, so a name always resolves to the same
+/// metric no matter which layer registered it first.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(self.counters.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(self.gauges.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(self.hists.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    /// Counter values in name order.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect()
+    }
+
+    /// Gauge values in name order.
+    pub fn gauges(&self) -> Vec<(String, i64)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, g)| (n.clone(), g.get()))
+            .collect()
+    }
+
+    /// Histogram snapshots in name order.
+    pub fn histograms(&self) -> Vec<(String, HistSnapshot)> {
+        self.hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| (n.clone(), h.snapshot()))
+            .collect()
+    }
+
+    /// Zero every registered metric (handles stay valid).  Benches and
+    /// figure harnesses call this between measurement windows; tests
+    /// that difference counters across a window must not run
+    /// concurrently with a reset (the parity/bench binaries run with
+    /// `--test-threads=1` or single-threaded mains).
+    pub fn reset(&self) {
+        for c in self.counters.lock().unwrap().values() {
+            c.reset();
+        }
+        for g in self.gauges.lock().unwrap().values() {
+            g.reset();
+        }
+        for h in self.hists.lock().unwrap().values() {
+            h.reset();
+        }
+    }
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_at_powers_of_two() {
+        // 0 is its own bucket; every 2^k starts bucket k+1.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(7), 3);
+        assert_eq!(Histogram::bucket_index(8), 4);
+        for k in 0..63 {
+            let v = 1u64 << k;
+            assert_eq!(Histogram::bucket_index(v), k as usize + 1, "2^{k}");
+            assert_eq!(Histogram::bucket_floor(k as usize + 1), v);
+            if v > 1 {
+                assert_eq!(Histogram::bucket_index(v - 1), k as usize, "2^{k}-1");
+            }
+        }
+        assert_eq!(Histogram::bucket_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn histogram_exact_counts_at_powers_of_two() {
+        let h = Histogram::new();
+        for v in [4u64, 4, 5, 7] {
+            h.record(v);
+        }
+        h.record(8);
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.buckets[3], 4); // [4, 8)
+        assert_eq!(s.buckets[4], 1); // [8, 16)
+        assert_eq!(s.sum, 28);
+        assert_eq!(s.min, 4);
+        assert_eq!(s.max, 8);
+    }
+
+    #[test]
+    fn empty_and_one_sample_percentiles() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.min_or_zero(), 0);
+        assert_eq!(s.mean(), 0.0);
+
+        h.record(5);
+        let s = h.snapshot();
+        // one sample: every quantile collapses to the sample's bucket
+        // floor clamped into [min, max] = [5, 5]
+        assert_eq!(s.p50(), 5);
+        assert_eq!(s.p99(), 5);
+        assert_eq!(s.quantile(0, 1), 5);
+        assert_eq!(s.min_or_zero(), 5);
+        assert_eq!(s.mean(), 5.0);
+
+        // an exact power of two is its own bucket floor
+        let h = Histogram::new();
+        h.record(16);
+        assert_eq!(h.snapshot().p50(), 16);
+    }
+
+    #[test]
+    fn quantiles_walk_the_cumulative_counts() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(2); // bucket 2, floor 2
+        }
+        h.record(1024); // bucket 11, floor 1024
+        let s = h.snapshot();
+        assert_eq!(s.p50(), 2);
+        // rank ⌊99·99/100⌋ = 98 — the 99th of the hundred samples, still 2
+        assert_eq!(s.p99(), 2);
+        // the max-rank quantile reaches the tail bucket
+        assert_eq!(s.quantile(1, 1), 1024);
+        assert_eq!(s.max, 1024);
+    }
+
+    #[test]
+    fn merge_folds_everything() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(3);
+        a.record(100);
+        b.record(7);
+        a.merge_into(&b);
+        let s = b.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 110);
+        assert_eq!(s.min, 3);
+        assert_eq!(s.max, 100);
+        // empty merge is a no-op (min sentinel must not leak)
+        Histogram::new().merge_into(&b);
+        assert_eq!(b.snapshot().min, 3);
+    }
+
+    #[test]
+    fn registry_dedups_by_name_and_resets() {
+        let r = Registry::default();
+        let c1 = r.counter("x.hits");
+        let c2 = r.counter("x.hits");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(r.counters(), vec![("x.hits".to_string(), 3)]);
+        r.gauge("x.level").set(-4);
+        r.histogram("x.lat").record(9);
+        r.reset();
+        assert_eq!(r.counters()[0].1, 0);
+        assert_eq!(r.gauges()[0].1, 0);
+        assert_eq!(r.histograms()[0].1.count, 0);
+        // handle still live after reset
+        c1.inc();
+        assert_eq!(r.counters()[0].1, 1);
+    }
+}

@@ -1,0 +1,351 @@
+//! `obs` — crate-wide zero-dependency observability.
+//!
+//! Three pieces, in the hand-rolled/versioned/deterministic spirit of
+//! `utils::codec`:
+//!
+//! * **Spans** ([`with_span`], [`SpanTimer`], [`event`]) over the hot
+//!   path — slot → phase (decide/commit/reward) → per-shard scatter —
+//!   plus oracle iterations, checkpoint freeze/thaw, recovery replay,
+//!   fault-plan notices, and pool retries/watchdog trips.  Trace events
+//!   land in lock-free per-thread rings ([`ring`]) merged in
+//!   deterministic (group, idx) order.
+//! * **Metrics** ([`metrics`]) — counters, gauges, and log₂-bucketed
+//!   latency histograms (p50/p99/max) in a process-wide registry.
+//! * **Exporters** ([`export`]) — JSON-lines events, a run-summary
+//!   table, and a Chrome trace-event (Perfetto-loadable) file.
+//!
+//! ## The parity contract
+//!
+//! Observability must never change what the engine computes:
+//!
+//! * no floats, no RNG — every recorded value is an integer; means and
+//!   percentiles are derived at export time only;
+//! * when the level is [`ObsLevel::Off`], every span call compiles down
+//!   to a single relaxed atomic load and branch;
+//! * sharded, budgeted, and resilient runs are bitwise identical with
+//!   obs on vs off (`tests/obs_parity.rs` pins this across
+//!   `PALLAS_WORKERS` ∈ {1, 2, 4}).
+//!
+//! Counters that replaced always-on ad-hoc telemetry (pool task
+//! failures, watchdog trips, group scatters, recovery ckpt/kill
+//! counts, occupancy) record unconditionally — they are the crate's
+//! bookkeeping, not optional tracing — while spans and ring events gate
+//! on the level.
+
+pub mod export;
+pub mod metrics;
+pub mod ring;
+
+pub use metrics::{registry, Counter, Gauge, HistSnapshot, Histogram, Registry};
+pub use ring::Event;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// How much the obs layer records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ObsLevel {
+    /// Spans are a single relaxed-atomic branch; no rings, no span
+    /// histograms.  (Registry counters still count — see module docs.)
+    #[default]
+    Off = 0,
+    /// Span latency histograms + event counters; no per-event rings.
+    Summary = 1,
+    /// Summary plus per-thread ring capture for the JSONL/Chrome
+    /// exporters.
+    Trace = 2,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> Result<ObsLevel, String> {
+        match s {
+            "off" => Ok(ObsLevel::Off),
+            "summary" => Ok(ObsLevel::Summary),
+            "trace" => Ok(ObsLevel::Trace),
+            other => Err(format!("obs level `{other}` (expected off|summary|trace)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Summary => "summary",
+            ObsLevel::Trace => "trace",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_level(level: ObsLevel) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> ObsLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => ObsLevel::Summary,
+        2 => ObsLevel::Trace,
+        _ => ObsLevel::Off,
+    }
+}
+
+/// The one hot-path branch: false ⇒ every span/event call returns
+/// immediately.
+#[inline(always)]
+pub fn enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) != 0
+}
+
+/// Ring capture on (`--obs trace`).
+#[inline(always)]
+pub fn tracing() -> bool {
+    LEVEL.load(Ordering::Relaxed) == 2
+}
+
+/// Everything the obs layer knows how to time (spans) or mark
+/// (instant events).  Discriminants are the `Event::kind` wire values
+/// and the index into the per-kind histogram/counter caches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Whole slot: decide + commit + reward.
+    Slot = 0,
+    /// Policy decision phase.
+    Decide = 1,
+    /// Commit phase (serial or sharded).
+    Commit = 2,
+    /// Reward + release phase.
+    Reward = 3,
+    /// One shard's slice of a commit scatter.
+    ShardCommit = 4,
+    /// One scatter task of the sharded reward reduction.
+    ShardReward = 5,
+    /// One projected-ascent iteration of `regret::solve_oracle`.
+    OracleIter = 6,
+    /// `sim::checkpoint` freeze (codec encode + write).
+    CkptFreeze = 7,
+    /// `sim::checkpoint` thaw (read + codec decode).
+    CkptThaw = 8,
+    /// Post-kill replay segment from a restored checkpoint.
+    RecoveryReplay = 9,
+    /// Instant: a pool task panicked and was queued for retry.
+    TaskFault = 10,
+    /// Instant: a faulted task was re-run via the isolated path.
+    TaskRetry = 11,
+    /// Instant: the pool watchdog declared a scatter overdue.
+    WatchdogTrip = 12,
+    /// Instant: a checkpoint write failed and was dropped.
+    CkptDropped = 13,
+    /// Instant: a fault-plan topology event was applied.
+    FaultTopology = 14,
+    /// Instant: a threshold re-plan was triggered.
+    Replan = 15,
+    /// Instant: a kill fault took the run down mid-slot.
+    KillTaken = 16,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 17] = [
+        SpanKind::Slot,
+        SpanKind::Decide,
+        SpanKind::Commit,
+        SpanKind::Reward,
+        SpanKind::ShardCommit,
+        SpanKind::ShardReward,
+        SpanKind::OracleIter,
+        SpanKind::CkptFreeze,
+        SpanKind::CkptThaw,
+        SpanKind::RecoveryReplay,
+        SpanKind::TaskFault,
+        SpanKind::TaskRetry,
+        SpanKind::WatchdogTrip,
+        SpanKind::CkptDropped,
+        SpanKind::FaultTopology,
+        SpanKind::Replan,
+        SpanKind::KillTaken,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Slot => "slot",
+            SpanKind::Decide => "slot.decide",
+            SpanKind::Commit => "slot.commit",
+            SpanKind::Reward => "slot.reward",
+            SpanKind::ShardCommit => "shard.commit",
+            SpanKind::ShardReward => "shard.reward",
+            SpanKind::OracleIter => "oracle.iter",
+            SpanKind::CkptFreeze => "ckpt.freeze",
+            SpanKind::CkptThaw => "ckpt.thaw",
+            SpanKind::RecoveryReplay => "recover.replay",
+            SpanKind::TaskFault => "pool.task_fault",
+            SpanKind::TaskRetry => "pool.task_retry",
+            SpanKind::WatchdogTrip => "pool.watchdog_trip",
+            SpanKind::CkptDropped => "ckpt.dropped",
+            SpanKind::FaultTopology => "fault.topology",
+            SpanKind::Replan => "fault.replan",
+            SpanKind::KillTaken => "recover.kill",
+        }
+    }
+
+    /// Instant events mark a moment (Chrome `ph:"i"`); everything else
+    /// is a duration span (`ph:"X"`).
+    pub fn is_instant(self) -> bool {
+        (self as u8) >= SpanKind::TaskFault as u8
+    }
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        Self::ALL.get(v as usize).copied()
+    }
+}
+
+/// Nanoseconds since the first obs clock read of the process.  A
+/// monotonic epoch (not wall time) keeps exported timestamps small and
+/// keeps obs off the system-clock path, matching the checkpoint
+/// codec's no-wall-time rule.
+pub(crate) fn clock_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Per-kind span latency histograms ("span.<kind>.ns"), resolved once.
+fn span_hists() -> &'static [Arc<Histogram>] {
+    static H: OnceLock<Vec<Arc<Histogram>>> = OnceLock::new();
+    H.get_or_init(|| {
+        SpanKind::ALL
+            .iter()
+            .map(|k| registry().histogram(&format!("span.{}.ns", k.name())))
+            .collect()
+    })
+}
+
+/// Per-kind instant-event counters ("event.<kind>"), resolved once.
+fn event_counters() -> &'static [Arc<Counter>] {
+    static C: OnceLock<Vec<Arc<Counter>>> = OnceLock::new();
+    C.get_or_init(|| {
+        SpanKind::ALL
+            .iter()
+            .map(|k| registry().counter(&format!("event.{}", k.name())))
+            .collect()
+    })
+}
+
+fn record_span(kind: SpanKind, slot: u64, shard: u32, gen: u32, t0: u64, dur: u64) {
+    span_hists()[kind as usize].record(dur);
+    if tracing() {
+        ring::record(Event {
+            kind: kind as u8,
+            shard,
+            gen,
+            slot,
+            t0_ns: t0,
+            dur_ns: dur,
+        });
+    }
+}
+
+/// Time `f` as a `kind` span.  Off ⇒ one relaxed load + branch, then
+/// straight into `f`.
+#[inline]
+pub fn with_span<T>(kind: SpanKind, slot: u64, shard: u32, f: impl FnOnce() -> T) -> T {
+    if !enabled() {
+        return f();
+    }
+    let t0 = clock_ns();
+    let out = f();
+    let dur = clock_ns().saturating_sub(t0);
+    record_span(kind, slot, shard, 0, t0, dur);
+    out
+}
+
+/// Scope-shaped span for regions that don't fit a closure (e.g. the
+/// whole slot body around early returns).  Inert when obs is off.
+pub struct SpanTimer {
+    kind: SpanKind,
+    slot: u64,
+    shard: u32,
+    t0: u64,
+    armed: bool,
+}
+
+impl SpanTimer {
+    #[inline]
+    pub fn start(kind: SpanKind, slot: u64, shard: u32) -> SpanTimer {
+        if !enabled() {
+            return SpanTimer { kind, slot, shard, t0: 0, armed: false };
+        }
+        SpanTimer { kind, slot, shard, t0: clock_ns(), armed: true }
+    }
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        if self.armed {
+            let dur = clock_ns().saturating_sub(self.t0);
+            record_span(self.kind, self.slot, self.shard, 0, self.t0, dur);
+        }
+    }
+}
+
+/// Record a structured instant event with (slot, shard, generation)
+/// context: counted at summary level, captured into the rings at trace
+/// level, a single branch when off.
+#[inline]
+pub fn event(kind: SpanKind, slot: u64, shard: u32, gen: u32) {
+    if !enabled() {
+        return;
+    }
+    event_counters()[kind as usize].inc();
+    if tracing() {
+        ring::record(Event {
+            kind: kind as u8,
+            shard,
+            gen,
+            slot,
+            t0_ns: clock_ns(),
+            dur_ns: 0,
+        });
+    }
+}
+
+/// Zero all metrics and drop all captured trace events.  Quiesced-only
+/// (no concurrent scatter in flight), like [`ring::clear_all`].
+pub fn reset() {
+    registry().reset();
+    ring::clear_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_round_trips() {
+        for l in [ObsLevel::Off, ObsLevel::Summary, ObsLevel::Trace] {
+            assert_eq!(ObsLevel::parse(l.name()), Ok(l));
+        }
+        assert!(ObsLevel::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn span_kind_wire_values_round_trip() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(*k as usize, i);
+            assert_eq!(SpanKind::from_u8(*k as u8), Some(*k));
+        }
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+        assert!(SpanKind::WatchdogTrip.is_instant());
+        assert!(!SpanKind::OracleIter.is_instant());
+    }
+
+    #[test]
+    fn with_span_passes_through_when_off() {
+        // Tests share one process: other suites may flip the level, so
+        // assert only the pass-through value here.
+        let v = with_span(SpanKind::Decide, 1, 0, || 41 + 1);
+        assert_eq!(v, 42);
+        let t = SpanTimer::start(SpanKind::Slot, 1, 0);
+        drop(t);
+    }
+}

@@ -1,0 +1,294 @@
+//! Lock-free per-thread event rings for `--obs trace`.
+//!
+//! Each thread that records a trace event lazily registers one bounded
+//! single-producer append log.  The producer is the owning thread only;
+//! readers (the exporters) see a consistent prefix via the
+//! release-published length.  When a ring fills, new events are dropped
+//! and counted — never overwritten — so the exported prefix stays
+//! deterministic under any reader/writer interleaving.
+//!
+//! Merge order is by (group, idx, registration-seq): the group and idx
+//! are parsed from the `pallas-crew-{tag}-{i}` thread names assigned by
+//! `utils::pool::Crew::ensure_threads`, so a trace taken under
+//! `PALLAS_WORKERS=4` lists `global-0..3` in the same order every run.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One recorded span or instant event.  Pure integers — recording is a
+/// slot write plus one atomic store, and can never perturb simulation
+/// floats or RNG streams.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Event {
+    /// `SpanKind as u8`.
+    pub kind: u8,
+    /// Shard (or scatter-task) index; 0 where not meaningful.
+    pub shard: u32,
+    /// Topology generation / edition context; 0 where not meaningful.
+    pub gen: u32,
+    /// Absolute slot (or oracle iteration) the event belongs to.
+    pub slot: u64,
+    /// Start time, ns since the process obs epoch.
+    pub t0_ns: u64,
+    /// Duration in ns; 0 for instant events.
+    pub dur_ns: u64,
+}
+
+/// Bounded single-producer event log owned by one thread.
+pub struct Ring {
+    buf: Box<[UnsafeCell<Event>]>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    group: String,
+    idx: u32,
+    seq: u32,
+}
+
+// SAFETY: `push` is called only by the owning thread (the ring lives in
+// a thread-local and is reached through it), so there is a single
+// producer.  A slot is written before `len` is release-stored past it,
+// and readers copy only indices below an acquire-load of `len`, so they
+// never observe a partially written event.  `clear` is documented as
+// quiesced-only (no concurrent producer).
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(group: String, idx: u32, seq: u32, cap: usize) -> Ring {
+        Ring {
+            buf: (0..cap).map(|_| UnsafeCell::new(Event::default())).collect(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            group,
+            idx,
+            seq,
+        }
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        let len = self.len.load(Ordering::Relaxed);
+        if len >= self.buf.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: single producer; index `len` is unpublished, so no
+        // reader can be looking at it (see the impl-level invariant).
+        unsafe {
+            *self.buf[len].get() = ev;
+        }
+        self.len.store(len + 1, Ordering::Release);
+    }
+
+    fn events(&self) -> Vec<Event> {
+        let len = self.len.load(Ordering::Acquire);
+        // SAFETY: indices < len are fully written and never mutated
+        // again (append-only until a quiesced clear).
+        (0..len).map(|i| unsafe { *self.buf[i].get() }).collect()
+    }
+
+    /// Quiesced-only: callers must guarantee the owning thread is not
+    /// pushing (the bench/CLI reset points run between scatters).
+    fn clear(&self) {
+        self.len.store(0, Ordering::Release);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Ring capacity: `PALLAS_OBS_RING` events per thread (default 65536).
+fn ring_capacity() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("PALLAS_OBS_RING")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 16)
+            .unwrap_or(1 << 16)
+    })
+}
+
+fn rings() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Merge key parsed from a thread name: `pallas-crew-{tag}-{i}` becomes
+/// `({tag}, i)`; anything else keeps its whole name with idx 0 (`main`
+/// for the main thread, the test name under the test harness).
+pub(crate) fn parse_thread_key(name: &str) -> (String, u32) {
+    if let Some(rest) = name.strip_prefix("pallas-crew-") {
+        if let Some((group, idx)) = rest.rsplit_once('-') {
+            if let Ok(i) = idx.parse::<u32>() {
+                return (group.to_string(), i);
+            }
+        }
+    }
+    if name.is_empty() {
+        ("anon".to_string(), 0)
+    } else {
+        (name.to_string(), 0)
+    }
+}
+
+thread_local! {
+    static LOCAL: std::cell::OnceCell<Arc<Ring>> = const { std::cell::OnceCell::new() };
+}
+
+/// Append an event to the calling thread's ring, registering the ring
+/// on first use.  Only called while `obs::tracing()`.
+pub(crate) fn record(ev: Event) {
+    LOCAL.with(|cell| {
+        cell.get_or_init(|| {
+            let thread = std::thread::current();
+            let (group, idx) = parse_thread_key(thread.name().unwrap_or(""));
+            let mut reg = rings().lock().unwrap();
+            let ring = Arc::new(Ring::new(group, idx, reg.len() as u32, ring_capacity()));
+            reg.push(Arc::clone(&ring));
+            ring
+        })
+        .push(ev);
+    });
+}
+
+/// One ring's events plus its merge key, copied out for export.
+#[derive(Clone, Debug)]
+pub struct RingSnap {
+    pub group: String,
+    pub idx: u32,
+    pub seq: u32,
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+/// Every registered ring, in deterministic (group, idx, seq) order.
+/// seq (registration order) only breaks ties between same-named
+/// threads across pool rebuilds.
+pub fn snapshot_all() -> Vec<RingSnap> {
+    let mut snaps: Vec<RingSnap> = rings()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|r| RingSnap {
+            group: r.group.clone(),
+            idx: r.idx,
+            seq: r.seq,
+            events: r.events(),
+            dropped: r.dropped.load(Ordering::Relaxed),
+        })
+        .collect();
+    snaps.sort_by(|a, b| {
+        (a.group.as_str(), a.idx, a.seq).cmp(&(b.group.as_str(), b.idx, b.seq))
+    });
+    snaps
+}
+
+/// Total events dropped to full rings.
+pub fn dropped_total() -> u64 {
+    rings()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|r| r.dropped.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Drop every recorded event.  Quiesced-only, like [`Ring::clear`].
+pub fn clear_all() {
+    for r in rings().lock().unwrap().iter() {
+        r.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_key_parses_crew_names() {
+        assert_eq!(parse_thread_key("pallas-crew-global-3"), ("global".into(), 3));
+        assert_eq!(parse_thread_key("pallas-crew-group-0"), ("group".into(), 0));
+        assert_eq!(parse_thread_key("pallas-crew-group-12"), ("group".into(), 12));
+        // non-numeric tail keeps the whole name
+        assert_eq!(parse_thread_key("pallas-crew-odd"), ("pallas-crew-odd".into(), 0));
+        assert_eq!(parse_thread_key("main"), ("main".into(), 0));
+        assert_eq!(parse_thread_key(""), ("anon".into(), 0));
+    }
+
+    #[test]
+    fn ring_push_read_and_drop_counting() {
+        let r = Ring::new("t".into(), 0, 0, 4);
+        for i in 0..6u64 {
+            r.push(Event { slot: i, ..Event::default() });
+        }
+        let evs = r.events();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[3].slot, 3, "drop-newest keeps the prefix");
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 2);
+        r.clear();
+        assert!(r.events().is_empty());
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn merge_order_is_group_then_idx_then_seq() {
+        // Registered out of order on purpose: seq reflects registration,
+        // but the merge sorts by (group, idx) first.
+        let mk = |g: &str, i: u32, s: u32| RingSnap {
+            group: g.into(),
+            idx: i,
+            seq: s,
+            events: Vec::new(),
+            dropped: 0,
+        };
+        let mut snaps = vec![
+            mk("group", 1, 0),
+            mk("global", 2, 1),
+            mk("global", 0, 2),
+            mk("group", 0, 4),
+            mk("group", 0, 3),
+        ];
+        snaps.sort_by(|a, b| {
+            (a.group.as_str(), a.idx, a.seq).cmp(&(b.group.as_str(), b.idx, b.seq))
+        });
+        let keys: Vec<(String, u32, u32)> =
+            snaps.iter().map(|s| (s.group.clone(), s.idx, s.seq)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("global".into(), 0, 2),
+                ("global".into(), 2, 1),
+                ("group".into(), 0, 3),
+                ("group".into(), 0, 4),
+                ("group".into(), 1, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn named_threads_register_with_parsed_keys() {
+        // Use a group name no other test emits so we can pick our rings
+        // out of the process-global registry.
+        let spawn = |i: u32| {
+            std::thread::Builder::new()
+                .name(format!("pallas-crew-zobstest-{i}"))
+                .spawn(move || {
+                    super::record(Event { slot: u64::from(i), ..Event::default() });
+                })
+                .unwrap()
+        };
+        // spawn high index first: merge order must not be registration order
+        for h in [spawn(1), spawn(0)] {
+            h.join().unwrap();
+        }
+        let ours: Vec<RingSnap> = snapshot_all()
+            .into_iter()
+            .filter(|s| s.group == "zobstest")
+            .collect();
+        assert_eq!(ours.len(), 2);
+        assert_eq!(ours[0].idx, 0);
+        assert_eq!(ours[1].idx, 1);
+        assert_eq!(ours[0].events[0].slot, 0);
+        assert_eq!(ours[1].events[0].slot, 1);
+    }
+}

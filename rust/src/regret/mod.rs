@@ -11,6 +11,7 @@
 
 use crate::coordinator::sharded::{project_dirty_sharded, ArrivedPort, ShardPlan};
 use crate::model::{KindIndex, Problem};
+use crate::obs;
 use crate::oga::gradient::{grad_norm, gradient_sparse, GradScratch};
 use crate::oga::projection::project_instances;
 use crate::oga::{ascend_ports_sharded, gradient_sparse_sharded};
@@ -172,6 +173,10 @@ pub fn solve_oracle(
     let eta0 = problem.diam_upper() / g0;
 
     for i in 0..iters {
+        // span per projected-ascent iteration; the iteration index
+        // rides in the span's slot field (there is no simulation slot
+        // inside a solve)
+        let _iter_span = obs::SpanTimer::start(obs::SpanKind::OracleIter, i as u64, 0);
         let eta = eta0 / ((i + 1) as f64).sqrt();
         match &plan {
             Some(plan) => {

@@ -11,6 +11,7 @@
 //! (`regret::solve_oracle`).
 
 use crate::model::{KindIndex, Problem};
+use crate::obs;
 use crate::oga::kernels;
 use crate::utils::pool::{self, SyncSlice};
 
@@ -213,14 +214,20 @@ pub fn slot_reward_ports_sharded(
         let gains = SyncSlice::new(&mut scratch.gain);
         let pens = SyncSlice::new(&mut scratch.pen);
         let k_n = problem.num_resources;
+        // slot context for the per-task reward spans (the scatter runs
+        // on pool workers, whose thread-local slot tag is unset)
+        let slot = pool::current_slot();
         pool::parallel_for(n, workers, |i| {
-            let (gain, pen) =
-                with_quota(k_n, |quota| port_reward_kinds(problem, kinds, arrived[i], y, quota));
-            // SAFETY: each arrived position is handed to exactly one task.
-            unsafe {
-                gains.write(i, gain);
-                pens.write(i, pen);
-            }
+            obs::with_span(obs::SpanKind::ShardReward, slot, i as u32, || {
+                let (gain, pen) = with_quota(k_n, |quota| {
+                    port_reward_kinds(problem, kinds, arrived[i], y, quota)
+                });
+                // SAFETY: each arrived position is handed to exactly one task.
+                unsafe {
+                    gains.write(i, gain);
+                    pens.write(i, pen);
+                }
+            });
         });
     }
     let mut out = SlotReward::default();

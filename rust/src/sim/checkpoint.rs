@@ -41,6 +41,7 @@ use crate::coordinator::{
 };
 use crate::graph::Bipartite;
 use crate::model::Problem;
+use crate::obs;
 use crate::schedulers::Policy;
 use crate::sim::arrivals::{ArrivalModel, Bernoulli};
 use crate::sim::faults::{ChurnOutcome, ExecFaultPlan, FaultEvent, FaultPlan, Gated};
@@ -438,6 +439,10 @@ pub fn run_resilient(
 
     let mut cursor = 0usize;
     let mut next_event = 0usize; // index into plan.events
+    // Highest slot reached before any kill: segments below it re-run
+    // previously executed slots, which the obs layer marks as recovery
+    // replay rather than fresh progress.
+    let mut replay_target = 0u64;
     loop {
         // 1. process kill: discard every live structure, thaw the last
         //    durable blob (out-of-order hand-built kills fire late,
@@ -445,10 +450,15 @@ pub fn run_resilient(
         if kills.front().map_or(false, |&k| k as usize <= cursor) {
             kills.pop_front();
             kills_taken += 1;
+            obs::registry().counter("recover.kills").inc();
+            obs::event(obs::SpanKind::KillTaken, cursor as u64, 0, editions as u32);
+            replay_target = replay_target.max(cursor as u64);
             let ck = store.as_ref().ok_or_else(|| {
                 "process kill precedes the initial checkpoint".to_string()
             })?;
-            let th = thaw(ck, base, &e0, plan, rebuild, policy, arrivals)?;
+            let th = obs::with_span(obs::SpanKind::CkptThaw, ck.slot, 0, || {
+                thaw(ck, base, &e0, plan, rebuild, policy, arrivals)
+            })?;
             cursor = th.cursor;
             next_event = th.next_event;
             editions = th.editions;
@@ -477,6 +487,8 @@ pub fn run_resilient(
         if due && store.as_ref().map(|c| c.slot) != Some(cursor as u64) {
             if cursor > 0 && exec.ckpt_fails.contains(&(cursor as u64)) {
                 checkpoints_failed += 1;
+                obs::registry().counter("recover.ckpts_dropped").inc();
+                obs::event(obs::SpanKind::CkptDropped, cursor as u64, 0, editions as u32);
             } else {
                 debug_assert!(
                     match (&carry, &cur_plan) {
@@ -486,25 +498,28 @@ pub fn run_resilient(
                     },
                     "carry plan diverged from the live plan at a checkpoint boundary"
                 );
-                let ck = freeze(
-                    cursor,
-                    next_event,
-                    editions,
-                    replans,
-                    events_applied,
-                    &result,
-                    &failed,
-                    &departed,
-                    &active,
-                    &state,
-                    &*policy,
-                    &*arrivals,
-                    cur_plan
-                        .as_deref()
-                        .map(|p| (p, carry.as_ref().map(|(_, l)| l.as_slice()))),
-                );
+                let ck = obs::with_span(obs::SpanKind::CkptFreeze, cursor as u64, 0, || {
+                    freeze(
+                        cursor,
+                        next_event,
+                        editions,
+                        replans,
+                        events_applied,
+                        &result,
+                        &failed,
+                        &departed,
+                        &active,
+                        &state,
+                        &*policy,
+                        &*arrivals,
+                        cur_plan
+                            .as_deref()
+                            .map(|p| (p, carry.as_ref().map(|(_, l)| l.as_slice()))),
+                    )
+                });
                 store = Some(ck);
                 checkpoints_written += 1;
+                obs::registry().counter("recover.ckpts_written").inc();
             }
         }
 
@@ -526,6 +541,11 @@ pub fn run_resilient(
             }
             next_event += 1;
             events_applied += 1;
+            let entity = match ev {
+                FaultEvent::InstanceFail(r) | FaultEvent::InstanceRecover(r) => r,
+                FaultEvent::PortDepart(l) | FaultEvent::PortArrive(l) => l,
+            };
+            obs::event(obs::SpanKind::FaultTopology, t as u64, entity as u32, editions as u32);
             let ctx = |e: String| format!("fault event at slot {t}: {e}");
             match ev {
                 FaultEvent::InstanceFail(r) => {
@@ -628,6 +648,7 @@ pub fn run_resilient(
                     if refreshed.imbalance() > cfg.replan_threshold {
                         *plan_arc = Arc::new(ShardPlan::build(&cur, shards));
                         replans += 1;
+                        obs::event(obs::SpanKind::Replan, cursor as u64, 0, editions as u32);
                     } else {
                         *plan_arc = Arc::new(refreshed);
                     }
@@ -657,6 +678,17 @@ pub fn run_resilient(
         // 5. run the segment [cursor, seg_end) on the current edition,
         //    with the worker-fault probe armed at the absolute slot base
         {
+            // slots below the pre-kill high-water mark are re-executed
+            // work: span them as recovery replay
+            let _replay_span = if (cursor as u64) < replay_target {
+                Some(obs::SpanTimer::start(
+                    obs::SpanKind::RecoveryReplay,
+                    cursor as u64,
+                    0,
+                ))
+            } else {
+                None
+            };
             let mut gated = Gated { inner: &mut *arrivals, active: &active };
             let seg = if serial {
                 let mut leader = Leader::resume(&cur, state);

@@ -40,6 +40,7 @@ use crate::coordinator::{
 };
 use crate::graph::Bipartite;
 use crate::model::Problem;
+use crate::obs;
 use crate::schedulers::Policy;
 use crate::sim::arrivals::{ArrivalModel, Bernoulli};
 use crate::traces::synthesize;
@@ -394,6 +395,11 @@ pub fn run_churned(
             }
             next_event += 1;
             events_applied += 1;
+            let entity = match ev {
+                FaultEvent::InstanceFail(r) | FaultEvent::InstanceRecover(r) => r,
+                FaultEvent::PortDepart(l) | FaultEvent::PortArrive(l) => l,
+            };
+            obs::event(obs::SpanKind::FaultTopology, t as u64, entity as u32, editions as u32);
             let ctx = |e: String| format!("fault event at slot {t}: {e}");
             match ev {
                 FaultEvent::InstanceFail(r) => {
@@ -503,6 +509,7 @@ pub fn run_churned(
                 if refreshed.imbalance() > cfg.replan_threshold {
                     *plan_arc = Arc::new(ShardPlan::build(&cur, shards));
                     replans += 1;
+                    obs::event(obs::SpanKind::Replan, cursor as u64, 0, editions as u32);
                 } else {
                     *plan_arc = Arc::new(refreshed);
                 }

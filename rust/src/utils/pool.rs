@@ -44,9 +44,11 @@
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeSet;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
+
+use crate::obs;
 
 /// Substring that tags *injected* execution-fault panics (see
 /// [`ExecProbe`]).  The isolation layer retries exactly these: an
@@ -73,21 +75,32 @@ pub struct TaskFailure {
     pub payload: String,
 }
 
-/// Total isolated task panics since process start (injected + real);
-/// tests assert this moves instead of the process dying.
-static TASK_FAILURES: AtomicUsize = AtomicUsize::new(0);
-
-/// See [`TASK_FAILURES`].
-pub fn task_failure_count() -> usize {
-    TASK_FAILURES.load(Ordering::Relaxed)
+/// "pool.task_failures" — total isolated task panics since process
+/// start (injected + real); tests assert this moves instead of the
+/// process dying.  Lives in the obs registry (so the run summary and
+/// JSONL export see it); the `OnceLock` cache keeps the hot path at
+/// one relaxed RMW per event, registry lock touched once.
+fn task_failures() -> &'static obs::Counter {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("pool.task_failures"))
 }
 
-/// Scatters flagged overdue by the per-scatter deadline watchdog.
-static WATCHDOG_TRIPS: AtomicU64 = AtomicU64::new(0);
+/// See [`task_failures`].
+pub fn task_failure_count() -> usize {
+    task_failures().get() as usize
+}
 
-/// See [`WATCHDOG_TRIPS`].
+/// "pool.watchdog_trips" — scatters flagged overdue by the per-scatter
+/// deadline watchdog (registry-backed, same pattern as
+/// [`task_failures`]).
+fn watchdog_trips() -> &'static obs::Counter {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("pool.watchdog_trips"))
+}
+
+/// See [`watchdog_trips`].
 pub fn watchdog_trip_count() -> u64 {
-    WATCHDOG_TRIPS.load(Ordering::Relaxed)
+    watchdog_trips().get()
 }
 
 /// Per-scatter watchdog deadline.  Read per scatter (not once) so tests
@@ -115,7 +128,7 @@ pub fn set_slot(t: u64) {
     CURRENT_SLOT.with(|s| s.set(t));
 }
 
-fn current_slot() -> u64 {
+pub(crate) fn current_slot() -> u64 {
     CURRENT_SLOT.with(|s| s.get())
 }
 
@@ -201,7 +214,8 @@ pub fn run_isolated<T>(mut f: impl FnMut() -> T) -> T {
             Ok(v) => return v,
             Err(p) => {
                 let payload = payload_string(p.as_ref());
-                TASK_FAILURES.fetch_add(1, Ordering::Relaxed);
+                task_failures().inc();
+                obs::event(obs::SpanKind::TaskFault, current_slot(), 0, attempt);
                 if !payload.contains(EXEC_FAULT_MARKER) {
                     // a real panic: re-raise with the stringified
                     // payload (expected-substring matching still works)
@@ -514,7 +528,8 @@ impl Crew {
                 && job.completed.load(Ordering::Acquire) < job.n
                 && !job.overdue.swap(true, Ordering::Relaxed)
             {
-                WATCHDOG_TRIPS.fetch_add(1, Ordering::Relaxed);
+                watchdog_trips().inc();
+                obs::event(obs::SpanKind::WatchdogTrip, job.slot_tag, 0, 0);
             }
         }
         slot.job = None;
@@ -541,6 +556,7 @@ fn drain_failures(failures: Vec<TaskFailure>, f: &(dyn Fn(usize) + Sync)) {
     let mut real: Option<String> = None;
     for fail in failures {
         if fail.payload.contains(EXEC_FAULT_MARKER) {
+            obs::event(obs::SpanKind::TaskRetry, fail.slot, fail.shard as u32, 0);
             call_isolated(f, fail.shard);
         } else if real.is_none() {
             real = Some(fail.payload);
@@ -603,7 +619,8 @@ fn run_job(shared: &Shared, job: &Job) {
             // safe to retry — and still counts toward `completed`, so
             // the scatter always drains and the worker thread survives.
             if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
-                TASK_FAILURES.fetch_add(1, Ordering::Relaxed);
+                task_failures().inc();
+                obs::event(obs::SpanKind::TaskFault, job.slot_tag, i as u32, 0);
                 job.failures.lock().unwrap().push(TaskFailure {
                     shard: i,
                     slot: job.slot_tag,
@@ -678,15 +695,19 @@ pub fn nested_scope() -> bool {
     SCOPE.with(|s| !matches!(&*s.borrow(), Scope::Global))
 }
 
-/// Scatters dispatched onto leased group crews since process start —
-/// the observable proving that budgeted nested parallelism actually
-/// executed on group workers instead of silently degrading to inline
-/// (asserted by the shard-parity suite).
-static GROUP_SCATTERS: AtomicUsize = AtomicUsize::new(0);
+/// "pool.group_scatters" — scatters dispatched onto leased group crews
+/// since process start: the observable proving that budgeted nested
+/// parallelism actually executed on group workers instead of silently
+/// degrading to inline (asserted by the shard-parity suite).
+/// Registry-backed, same pattern as [`task_failures`].
+fn group_scatters() -> &'static obs::Counter {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("pool.group_scatters"))
+}
 
-/// See [`GROUP_SCATTERS`].
+/// See [`group_scatters`].
 pub fn group_scatter_count() -> usize {
-    GROUP_SCATTERS.load(Ordering::Relaxed)
+    group_scatters().get() as usize
 }
 
 /// A leased shard group: a private crew granting `size` workers (the
@@ -812,7 +833,7 @@ where
         }
         Scope::Group(crew, size) => {
             if crew.scatter(n, workers.min(size), &f) {
-                GROUP_SCATTERS.fetch_add(1, Ordering::Relaxed);
+                group_scatters().inc();
             } else {
                 for i in 0..n {
                     call_isolated(&f, i);
@@ -1165,8 +1186,8 @@ mod tests {
     fn scatter_runs_composes_lanes_and_groups() {
         // 4 items under an explicit 2×2 split: every item's nested
         // scatter must execute on its lane's private group (counted by
-        // GROUP_SCATTERS), never silently inline, and all indices of
-        // both levels must run exactly once.
+        // the pool.group_scatters counter), never silently inline, and
+        // all indices of both levels must run exactly once.
         let before = group_scatter_count();
         let mut items = vec![0usize; 4];
         let inner_hits = AtomicUsize::new(0);

@@ -1,0 +1,189 @@
+//! Observability parity (§Obs): turning the tracing + metrics layer on
+//! must leave every simulated number untouched.  The `obs` module's
+//! contract is that it records *integers about* the run (span
+//! durations, counters, occupancy edges) and never participates in it —
+//! no float passes through a histogram, no RNG draw feeds a span, no
+//! code path branches on the level except the recording itself.  These
+//! tests prove the contract the same way the shard/churn/recovery
+//! suites prove theirs: run the full paper lineup, a churned run and a
+//! kill-and-resume resilient run once at `off` and once at `trace`
+//! (the most invasive level), and require bitwise-identical slot
+//! records, cumulative rewards and recovery telemetry.
+//!
+//! The obs level is process-global, so every test serializes on `GATE`
+//! and restores `Off` before releasing it; CI additionally pins
+//! `--test-threads=1` (see `.github/workflows/ci.yml` job `obs-parity`)
+//! and sweeps `PALLAS_WORKERS` ∈ {1, 2, 4} so the per-thread rings see
+//! one, some and many producer threads.
+
+use std::sync::Mutex;
+
+use ogasched::config::Scenario;
+use ogasched::coordinator::RunResult;
+use ogasched::obs;
+use ogasched::schedulers::OgaSched;
+use ogasched::sim;
+use ogasched::ExecBudget;
+
+/// Serializes tests in this binary: they all mutate the global obs level.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Run `f` at the given obs level with the registry and rings cleared
+/// first, restoring `Off` afterwards.  (A panicking `f` fails the test
+/// and poisons `GATE`, which aborts the sibling tests too — fine, since
+/// any assertion here means the parity contract is broken.)
+fn at_level<T>(level: obs::ObsLevel, f: impl FnOnce() -> T) -> T {
+    obs::reset();
+    obs::set_level(level);
+    let out = f();
+    obs::set_level(obs::ObsLevel::Off);
+    out
+}
+
+fn assert_runs_bitwise_equal(ctx: &str, got: &RunResult, want: &RunResult) {
+    assert_eq!(got.policy, want.policy, "{ctx}: policy order diverged");
+    assert_eq!(
+        got.cumulative_reward, want.cumulative_reward,
+        "{ctx} {}: cumulative diverged",
+        got.policy
+    );
+    assert_eq!(
+        got.clamped_total, want.clamped_total,
+        "{ctx} {}: clamp counts diverged",
+        got.policy
+    );
+    assert_eq!(got.records.len(), want.records.len(), "{ctx} {}", got.policy);
+    for (a, b) in got.records.iter().zip(&want.records) {
+        assert!(
+            a.q == b.q && a.gain == b.gain && a.penalty == b.penalty
+                && a.arrivals == b.arrivals,
+            "{ctx} {} t={}: ({}, {}, {}) vs ({}, {}, {})",
+            got.policy, a.t, a.q, a.gain, a.penalty, b.q, b.gain, b.penalty
+        );
+    }
+}
+
+#[test]
+fn lineup_is_bitwise_identical_with_tracing_on() {
+    let _gate = GATE.lock().unwrap();
+    let mut s = Scenario::default();
+    s.horizon = 40;
+    let off = at_level(obs::ObsLevel::Off, || sim::run_paper_lineup(&s));
+    let traced = at_level(obs::ObsLevel::Trace, || sim::run_paper_lineup(&s));
+    assert_eq!(off.len(), traced.len());
+    for (got, want) in traced.iter().zip(&off) {
+        assert_runs_bitwise_equal("lineup", got, want);
+    }
+}
+
+#[test]
+fn churned_run_is_bitwise_identical_with_tracing_on() {
+    let _gate = GATE.lock().unwrap();
+    let mut s = Scenario::default();
+    s.horizon = 60;
+    s.faults.instance_rate = 0.02;
+    s.faults.recover_rate = 0.2;
+    s.faults.seed = 7;
+    let run = |level| {
+        at_level(level, || {
+            let p = ogasched::traces::synthesize(&s);
+            let mut pol = OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
+            sim::faults::run_churned_scenario(&s, &mut pol, false).expect("churned")
+        })
+    };
+    let off = run(obs::ObsLevel::Off);
+    let traced = run(obs::ObsLevel::Trace);
+    assert_runs_bitwise_equal("churn", &traced.result, &off.result);
+    assert_eq!(traced.events, off.events, "churn: event counts diverged");
+    assert_eq!(traced.editions, off.editions, "churn: editions diverged");
+    assert_eq!(traced.replans, off.replans, "churn: replans diverged");
+}
+
+#[test]
+fn resilient_run_is_bitwise_identical_with_tracing_on() {
+    let _gate = GATE.lock().unwrap();
+    let mut s = Scenario::default();
+    s.horizon = 60;
+    s.recovery.checkpoint_epoch = 5;
+    s.recovery.kill_rate = 0.04;
+    s.recovery.ckpt_fail_rate = 0.1;
+    s.recovery.seed = 11;
+    let run = |level| {
+        at_level(level, || {
+            let p = ogasched::traces::synthesize(&s);
+            let mut pol = OgaSched::new(&p, s.eta0, s.decay, ExecBudget::auto());
+            sim::checkpoint::run_resilient_scenario(&s, &mut pol, false)
+                .expect("resilient")
+        })
+    };
+    let off = run(obs::ObsLevel::Off);
+    let traced = run(obs::ObsLevel::Trace);
+    assert_runs_bitwise_equal("recover", &traced.churn.result, &off.churn.result);
+    assert_eq!(traced.kills, off.kills, "recover: kill counts diverged");
+    assert_eq!(
+        traced.restored_from, off.restored_from,
+        "recover: restore points diverged"
+    );
+    assert_eq!(
+        traced.checkpoints_written, off.checkpoints_written,
+        "recover: checkpoint counts diverged"
+    );
+    assert_eq!(
+        traced.checkpoints_failed, off.checkpoints_failed,
+        "recover: dropped-checkpoint counts diverged"
+    );
+}
+
+#[test]
+fn traced_run_exports_spans_and_metrics() {
+    let _gate = GATE.lock().unwrap();
+    let mut s = Scenario::default();
+    s.horizon = 20;
+    at_level(obs::ObsLevel::Trace, || {
+        let _ = sim::run_paper_lineup(&s);
+        let jsonl = obs::export::render_jsonl();
+        let first = jsonl.lines().next().expect("meta line");
+        assert!(
+            first.contains("\"schema\":\"ogasched-obs\"") && first.contains("\"version\":1"),
+            "meta line malformed: {first}"
+        );
+        assert!(
+            jsonl.lines().any(|l| l.contains("\"record\":\"span\"")),
+            "no spans captured by a traced lineup"
+        );
+        assert!(
+            jsonl.lines().any(|l| l.contains("\"slot.decide\"")),
+            "decide phase missing from the trace"
+        );
+        let chrome = obs::export::render_chrome_trace();
+        assert!(chrome.starts_with('{') && chrome.ends_with('}'));
+        assert!(chrome.contains("\"traceEvents\""));
+        assert!(chrome.contains("\"ph\":\"X\""), "no duration events in trace");
+        let table = obs::export::summary_table().render();
+        assert!(table.contains("span.slot.ns"), "summary missing slot span row");
+    });
+}
+
+#[test]
+fn summary_level_records_histograms_without_rings() {
+    let _gate = GATE.lock().unwrap();
+    let mut s = Scenario::default();
+    s.horizon = 10;
+    at_level(obs::ObsLevel::Summary, || {
+        let _ = sim::run_paper_lineup(&s);
+        let hists = obs::registry().histograms();
+        let slot = hists
+            .iter()
+            .find(|(name, _)| name == "span.slot.ns")
+            .map(|(_, snap)| snap.clone())
+            .expect("slot span histogram");
+        assert!(slot.count > 0, "summary level recorded no slot spans");
+        assert!(slot.p50() <= slot.p99());
+        // rings stay empty below `trace`
+        let jsonl = obs::export::render_jsonl();
+        assert!(
+            !jsonl.lines().any(|l| l.contains("\"record\":\"span\"")),
+            "summary level must not append to rings"
+        );
+    });
+}

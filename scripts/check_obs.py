@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Validate the obs exporters' output (EXPERIMENTS.md §Obs).
+
+CI runs a short traced lineup (`compare --obs trace`) and feeds the two
+files it writes through this script:
+
+  check_obs.py results/obs_events.jsonl results/obs_trace.json
+
+Checks, matching the schema contract of `rust/src/obs/export.rs`:
+
+  * the JSONL stream starts with a `meta` record carrying the
+    `ogasched-obs` schema name and version 1, every line parses as
+    JSON, and every record type carries its required fields;
+  * at least one span record and the slot-phase span names are present
+    (a traced lineup must have produced them);
+  * the Chrome trace file is valid JSON of the `traceEvents` object
+    form Perfetto loads, the array is non-empty, every event has a
+    known phase (`M`/`X`/`i`) with the fields that phase requires, and
+    every `X`/`i` event's `tid` was introduced by a `thread_name`
+    metadata record.
+
+Exits non-zero with a message on the first violation.
+"""
+
+import json
+import sys
+
+REQUIRED = {
+    "meta": {"schema", "version"},
+    "span": {"seq", "thread", "kind", "slot", "shard", "gen", "ts_ns", "dur_ns"},
+    "dropped": {"thread", "count"},
+    "counter": {"name", "value"},
+    "gauge": {"name", "value"},
+    "histogram": {"name", "count", "sum", "min", "max", "p50", "p99"},
+}
+
+SLOT_PHASES = {"slot", "slot.decide", "slot.commit", "slot.reward"}
+
+
+def fail(msg):
+    print(f"check_obs: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_jsonl(path):
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln]
+    if not lines:
+        fail(f"{path}: empty")
+    records = []
+    for i, ln in enumerate(lines):
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError as e:
+            fail(f"{path}:{i + 1}: not JSON: {e}")
+        kind = rec.get("record")
+        if kind not in REQUIRED:
+            fail(f"{path}:{i + 1}: unknown record type {kind!r}")
+        missing = REQUIRED[kind] - rec.keys()
+        if missing:
+            fail(f"{path}:{i + 1}: {kind} record missing {sorted(missing)}")
+        records.append(rec)
+    meta = records[0]
+    if meta["record"] != "meta":
+        fail(f"{path}: first record is {meta['record']!r}, not meta")
+    if meta["schema"] != "ogasched-obs" or meta["version"] != 1:
+        fail(f"{path}: unexpected schema header {meta}")
+    spans = [r for r in records if r["record"] == "span"]
+    if not spans:
+        fail(f"{path}: a traced run produced no span records")
+    kinds = {s["kind"] for s in spans}
+    missing_phases = SLOT_PHASES - kinds
+    if missing_phases:
+        fail(f"{path}: slot phases missing from trace: {sorted(missing_phases)}")
+    seqs = [s["seq"] for s in spans]
+    if seqs != list(range(len(seqs))):
+        fail(f"{path}: span seq numbers are not 0..{len(seqs) - 1} in order")
+    hists = [r for r in records if r["record"] == "histogram"]
+    if not any(h["name"] == "span.slot.ns" and h["count"] > 0 for h in hists):
+        fail(f"{path}: no populated span.slot.ns histogram")
+    for h in hists:
+        if h["count"] > 0 and not (
+            h["min"] <= h["p50"] <= h["p99"] <= h["max"]
+        ):
+            fail(f"{path}: histogram {h['name']} quantiles out of order: {h}")
+    print(f"check_obs: {path}: OK ({len(spans)} spans, {len(hists)} histograms)")
+
+
+def check_chrome(path):
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path}: not JSON: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    named_tids = set()
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") != "thread_name" or "name" not in ev.get("args", {}):
+                fail(f"{path}: event {i}: malformed metadata record {ev}")
+            named_tids.add(ev.get("tid"))
+        elif ph == "X":
+            for field in ("name", "ts", "dur", "pid", "tid"):
+                if field not in ev:
+                    fail(f"{path}: event {i}: X event missing {field!r}")
+        elif ph == "i":
+            for field in ("name", "ts", "s", "pid", "tid"):
+                if field not in ev:
+                    fail(f"{path}: event {i}: i event missing {field!r}")
+        else:
+            fail(f"{path}: event {i}: unknown phase {ph!r}")
+        if ph in ("X", "i") and ev["tid"] not in named_tids:
+            fail(f"{path}: event {i}: tid {ev['tid']} has no thread_name record")
+    durations = sum(1 for ev in events if ev.get("ph") == "X")
+    if durations == 0:
+        fail(f"{path}: no duration (ph=X) events")
+    print(f"check_obs: {path}: OK ({len(events)} events, {durations} spans)")
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail("usage: check_obs.py <obs_events.jsonl> <obs_trace.json>")
+    check_jsonl(sys.argv[1])
+    check_chrome(sys.argv[2])
+    print("check_obs: PASS")
+
+
+if __name__ == "__main__":
+    main()
