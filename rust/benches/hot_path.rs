@@ -572,6 +572,78 @@ fn main() {
         }
     }
 
+    // ---- §SPerf-9: streaming ingest + overlapped slot pipeline ----
+    // Queue-op floor first (push + ticketed k-way-merge pop per event,
+    // single producer), then the full streaming slot, then the
+    // pipeline pair: the same 40-slot OGASCHED run driven through
+    // `run_pipeline` lockstep (the bitwise reference) and overlapped
+    // (slot t+1 decide concurrent with slot t commit + reward).  The
+    // pair is bit-identical by the pipeline-parity contract; the gap is
+    // the Amdahl overlap win minus the handoff copy.  `ogasched serve`
+    // sweeps the same pair at figure scale into BENCH_throughput.json.
+    {
+        use ogasched::coordinator::{run_pipeline, PipelineMode};
+        use ogasched::sim::ingest::{IngestQueue, StreamArrivals, StreamParams};
+        {
+            let q = IngestQueue::new(1, 4096, true);
+            let prod = q.producer(0);
+            rep.record(time_fn("ingest queue push+pop 1prod n=1024", 10, 400, || {
+                for i in 0..1024u32 {
+                    prod.push(i & 63, 1.0);
+                }
+                while let Some(ev) = q.pop() {
+                    std::hint::black_box(ev);
+                }
+            }));
+        }
+        {
+            let scenario = Scenario::default();
+            let p = synthesize(&scenario);
+            let mut arr =
+                StreamArrivals::new(p.num_ports(), StreamParams::default(), 41);
+            let mut x = vec![0.0; p.num_ports()];
+            rep.record(time_fn("stream next batch32 default 10x128x6", 10, 400, || {
+                arr.next(&mut x);
+                std::hint::black_box(&x);
+            }));
+        }
+        let mut scenario = Scenario::default();
+        scenario.horizon = 40;
+        let p = synthesize(&scenario);
+        for batch in [32usize, 128] {
+            for mode in [PipelineMode::Lockstep, PipelineMode::Overlapped] {
+                rep.record(time_fn(
+                    &format!(
+                        "pipeline h40 {} batch{batch} shard4 default 10x128x6",
+                        mode.name()
+                    ),
+                    1,
+                    5,
+                    || {
+                        let mut leader = ShardedLeader::new(&p, 4);
+                        let mut pol = OgaSched::new(
+                            &p,
+                            scenario.eta0,
+                            scenario.decay,
+                            ExecBudget::auto(),
+                        );
+                        let params =
+                            StreamParams { batch_events: batch, ..StreamParams::default() };
+                        let mut arr =
+                            StreamArrivals::new(p.num_ports(), params, scenario.seed ^ 0x1A57);
+                        std::hint::black_box(run_pipeline(
+                            &mut leader,
+                            &mut pol,
+                            &mut arr,
+                            scenario.horizon,
+                            mode,
+                        ));
+                    },
+                ));
+            }
+        }
+    }
+
     // machine-readable perf record at the repo root (tracked across PRs)
     rep.write_json(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_path.json"));
     rep.finish();

@@ -110,6 +110,21 @@ COMMANDS:
                                      results/obs_events.jsonl and the
                                      Perfetto-loadable results/obs_trace.json
     compare    run the full paper lineup on one scenario (same options)
+    serve      sustained-traffic throughput bench: stream arrivals through
+               the lock-free ingest queue + batcher and run the slot
+               pipeline in both modes (lockstep = bitwise reference,
+               overlapped = slot t+1 decide over slot t commit+reward),
+               writing BENCH_throughput.json from the obs registry's
+               span.slot.ns histogram
+               --slots N             slots per (mode, shape) run
+               --batch-shapes A,B    batch_events sweep (default 32,128)
+               --backpressure [on|off]  block at queue capacity instead
+                                     of dropping newest
+               --ingest-capacity N --batch-events N --ingest-burst N
+               --ewma-alpha F --ewma-epoch N   per-port arrival-rate
+                                     EWMA gauges (ingest.rate.port<l>)
+               --out <file>          output path (BENCH_throughput.json)
+               plus the `run` scenario/policy/parallel options
     figure     regenerate a paper figure/table:
                ogasched figure <fig2|fig3|fig4|fig5|fig6|fig7|table3|regret|sparse|churn|all>
                --horizon N   override T (0 = paper scale)
@@ -123,6 +138,7 @@ EXAMPLES:
     ogasched run --policy ogasched-hlo --horizon 500
     ogasched run --fault-instance-rate 0.02 --fault-recover-rate 0.2 --horizon 500
     ogasched run --checkpoint-epoch 20 --exec-kill-rate 0.01 --horizon 500
+    ogasched serve --slots 200 --batch-shapes 16,64 --backpressure on
 ";
 
 #[cfg(test)]

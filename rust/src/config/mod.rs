@@ -4,5 +4,7 @@
 pub mod scenario;
 pub mod value;
 
-pub use scenario::{FaultConfig, GraphSpec, ObsConfig, RecoveryConfig, Scenario};
+pub use scenario::{
+    FaultConfig, GraphSpec, IngestConfig, ObsConfig, RecoveryConfig, Scenario,
+};
 pub use value::{Doc, Value};

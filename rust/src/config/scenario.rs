@@ -173,6 +173,71 @@ impl RecoveryConfig {
     }
 }
 
+/// Streaming-ingest knobs (`[ingest]` in config files; consumed by
+/// `sim::ingest::StreamArrivals` and the `serve` CLI driver).  Off by
+/// default: plain scenarios keep their Bernoulli arrivals.  The numeric
+/// defaults mirror `sim::ingest::StreamParams::default` (pinned by a
+/// test there — config stays a leaf layer, so the values are repeated
+/// rather than imported).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IngestConfig {
+    /// Route arrivals through the ingest queue + batcher.
+    pub enabled: bool,
+    /// Lane capacity (events).
+    pub capacity: usize,
+    /// Events per formed slot batch.
+    pub batch_events: usize,
+    /// Events generated ahead per refill round.
+    pub burst: usize,
+    /// External producers block (spin) at capacity instead of dropping
+    /// newest (the `--backpressure` CLI knob).
+    pub backpressure: bool,
+    /// Per-port arrival-rate EWMA smoothing factor α ∈ [0, 1].
+    pub ewma_alpha: f64,
+    /// Batches per EWMA epoch.
+    pub ewma_epoch: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            enabled: false,
+            capacity: 1024,
+            batch_events: 32,
+            burst: 48,
+            backpressure: true,
+            ewma_alpha: 0.2,
+            ewma_epoch: 16,
+        }
+    }
+}
+
+impl IngestConfig {
+    /// Does this config route arrivals through the ingest queue?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.capacity == 0 {
+            return Err("ingest.capacity must be > 0".into());
+        }
+        if self.batch_events == 0 {
+            return Err("ingest.batch_events must be > 0".into());
+        }
+        if self.burst == 0 {
+            return Err("ingest.burst must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.ewma_alpha) {
+            return Err(format!("ingest.ewma_alpha {} outside [0,1]", self.ewma_alpha));
+        }
+        if self.ewma_epoch == 0 {
+            return Err("ingest.ewma_epoch must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// Observability knobs (`[obs]` in config files; consumed by the CLI
 /// drivers, which call `obs::set_level` before a run).  Off by default:
 /// spans cost one relaxed-atomic branch and nothing is exported.
@@ -227,6 +292,8 @@ pub struct Scenario {
     pub recovery: RecoveryConfig,
     /// Observability level (`[obs]`; off by default).
     pub obs: ObsConfig,
+    /// Streaming-ingest knobs (`[ingest]`; off by default).
+    pub ingest: IngestConfig,
 }
 
 impl Default for Scenario {
@@ -254,6 +321,7 @@ impl Default for Scenario {
             faults: FaultConfig::default(),
             recovery: RecoveryConfig::default(),
             obs: ObsConfig::default(),
+            ingest: IngestConfig::default(),
         }
     }
 }
@@ -329,6 +397,7 @@ impl Scenario {
         }
         self.faults.validate()?;
         self.recovery.validate()?;
+        self.ingest.validate()?;
         Ok(())
     }
 
@@ -347,6 +416,9 @@ impl Scenario {
             "recovery.stall_rate", "recovery.kill_rate",
             "recovery.ckpt_fail_rate", "recovery.stall_ms", "recovery.seed",
             "obs.level",
+            "ingest.enabled", "ingest.capacity", "ingest.batch_events",
+            "ingest.burst", "ingest.backpressure", "ingest.ewma_alpha",
+            "ingest.ewma_epoch",
         ];
         for key in doc.entries.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -408,6 +480,16 @@ impl Scenario {
             level: ObsLevel::parse(doc.str_or("obs.level", d.obs.level.name())?)
                 .map_err(|e| format!("obs.level: {e}"))?,
         };
+        let di = d.ingest;
+        let ingest = IngestConfig {
+            enabled: doc.bool_or("ingest.enabled", di.enabled)?,
+            capacity: doc.usize_or("ingest.capacity", di.capacity)?,
+            batch_events: doc.usize_or("ingest.batch_events", di.batch_events)?,
+            burst: doc.usize_or("ingest.burst", di.burst)?,
+            backpressure: doc.bool_or("ingest.backpressure", di.backpressure)?,
+            ewma_alpha: doc.f64_or("ingest.ewma_alpha", di.ewma_alpha)?,
+            ewma_epoch: doc.usize_or("ingest.ewma_epoch", di.ewma_epoch)?,
+        };
         let s = Scenario {
             name: doc.str_or("name", &d.name)?.to_string(),
             num_ports: doc.usize_or("ports", d.num_ports)?,
@@ -435,6 +517,7 @@ impl Scenario {
             faults,
             recovery,
             obs,
+            ingest,
         };
         s.validate()?;
         Ok(s)
@@ -566,6 +649,32 @@ mod tests {
         // unknown levels and keys fail loudly
         assert!(Scenario::from_toml("[obs]\nlevel = \"verbose\"\n").is_err());
         assert!(Scenario::from_toml("[obs]\nring = 64\n").is_err());
+    }
+
+    #[test]
+    fn ingest_section_parses_and_defaults_off() {
+        let s = Scenario::default();
+        assert!(!s.ingest.enabled());
+        let s = Scenario::from_toml(
+            "[ingest]\nenabled = true\ncapacity = 256\nbatch_events = 16\n\
+             burst = 24\nbackpressure = false\newma_alpha = 0.5\newma_epoch = 8\n",
+        )
+        .unwrap();
+        assert!(s.ingest.enabled());
+        assert_eq!(s.ingest.capacity, 256);
+        assert_eq!(s.ingest.batch_events, 16);
+        assert_eq!(s.ingest.burst, 24);
+        assert!(!s.ingest.backpressure);
+        assert_eq!(s.ingest.ewma_alpha, 0.5);
+        assert_eq!(s.ingest.ewma_epoch, 8);
+        // unspecified ingest knobs keep their defaults
+        let s = Scenario::from_toml("[ingest]\nenabled = true\n").unwrap();
+        assert_eq!(s.ingest.capacity, IngestConfig::default().capacity);
+        // bad values fail loudly
+        assert!(Scenario::from_toml("[ingest]\ncapacity = 0\n").is_err());
+        assert!(Scenario::from_toml("[ingest]\nbatch_events = 0\n").is_err());
+        assert!(Scenario::from_toml("[ingest]\newma_alpha = 1.5\n").is_err());
+        assert!(Scenario::from_toml("[ingest]\nqueue = 64\n").is_err());
     }
 
     #[test]

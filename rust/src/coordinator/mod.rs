@@ -1,12 +1,15 @@
 //! Layer 3 — the Rust coordinator.  Owns the cluster ledger
 //! ([`state::ClusterState`]), the slot event loop ([`leader::Leader`]),
-//! the sharded single-slot pipeline ([`sharded::ShardedLeader`]) and,
-//! through `runtime/`, the PJRT-compiled OGA step on the hot path.
+//! the sharded single-slot pipeline ([`sharded::ShardedLeader`]), the
+//! overlapped slot pipeline ([`pipeline::run_pipeline`]) and, through
+//! `runtime/`, the PJRT-compiled OGA step on the hot path.
 
 pub mod leader;
+pub mod pipeline;
 pub mod sharded;
 pub mod state;
 
 pub use leader::{run_lineup, Leader, RunResult, SlotRecord};
+pub use pipeline::{run_pipeline, PipelineMode, PipelineRun, TouchedOwned};
 pub use sharded::{ShardLedger, ShardPlan, ShardedLeader, OCCUPANCY_METRIC};
 pub use state::{ClusterState, ReleaseMode};

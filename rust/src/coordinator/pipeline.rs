@@ -1,0 +1,398 @@
+//! Overlapped slot pipeline (§SPerf-9).
+//!
+//! PR 4 sharded a single slot *across* cores; this module overlaps
+//! *adjacent* slots.  A slot's wall time is decide (the policy's
+//! gradient/quota reductions) followed by commit + reward merge — two
+//! phases with no data dependency *between neighboring slots* beyond
+//! the decision tensor itself: `Policy::decide` reads only
+//! (problem, x, y, internal state), never the cluster ledger, so slot
+//! t+1's decide can run while slot t's commit + reward merge is still
+//! in flight.  The executor here does exactly that, depth-1:
+//!
+//! * the **leader thread** pulls arrivals, runs decide into the
+//!   *permanent* front tensor `y_front` (same pointer every slot, so
+//!   the sparse policies' incremental publishers see the identical
+//!   buffer identity they see under lockstep), then copies the decision
+//!   into one of two rotating back buffers and hands it — with an
+//!   owned snapshot of the policy's `Touched` set — to
+//! * the **committer thread**, which replays the exact tail of
+//!   [`ShardedLeader::slot`] (`commit_and_reward`: sharded commit,
+//!   sharded reward, release) in slot order over a bounded
+//!   `sync_channel(1)`.
+//!
+//! **Bitwise parity with lockstep is a hard invariant**
+//! (`tests/pipeline_parity.rs`).  It holds because commits stay
+//! serially ordered (one committer, FIFO channel), arrivals are drawn
+//! on the leader thread in serial order, and the only way commit could
+//! feed *back* into decide — the ledger clamping an infeasible
+//! decision in place — is outlawed here: the overlapped executor
+//! asserts `clamped == 0` unconditionally (every lineup policy is
+//! clamp-free by construction; a clamping policy must run lockstep).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::leader::{RunResult, SlotRecord};
+use crate::coordinator::sharded::ShardedLeader;
+use crate::obs;
+use crate::reward::SlotReward;
+use crate::schedulers::{Policy, Touched};
+use crate::sim::arrivals::ArrivalModel;
+use crate::utils::pool;
+
+/// Execution mode of [`run_pipeline`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// decide → commit → reward strictly in sequence per slot — the
+    /// bitwise reference (the plain [`ShardedLeader::run`] schedule).
+    Lockstep,
+    /// Slot t+1's decide overlaps slot t's commit + reward merge.
+    Overlapped,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> Result<PipelineMode, String> {
+        match s {
+            "lockstep" => Ok(PipelineMode::Lockstep),
+            "overlapped" => Ok(PipelineMode::Overlapped),
+            other => Err(format!(
+                "unknown pipeline mode `{other}` (expected lockstep|overlapped)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineMode::Lockstep => "lockstep",
+            PipelineMode::Overlapped => "overlapped",
+        }
+    }
+}
+
+/// Owned snapshot of a policy's [`Touched`] report.  The borrowed form
+/// points into the policy, which stays on the leader thread and mutates
+/// on the very next decide — so the handoff to the committer captures
+/// the dirty list by value (original order preserved: the Σ-delta
+/// replay in `commit_list` is order-sensitive).
+#[derive(Clone, Debug)]
+pub enum TouchedOwned {
+    All,
+    Instances(Vec<usize>),
+}
+
+impl TouchedOwned {
+    pub fn capture(t: Touched<'_>) -> TouchedOwned {
+        match t {
+            Touched::All => TouchedOwned::All,
+            Touched::Instances(list) => TouchedOwned::Instances(list.to_vec()),
+        }
+    }
+
+    pub fn as_touched(&self) -> Touched<'_> {
+        match self {
+            TouchedOwned::All => Touched::All,
+            TouchedOwned::Instances(list) => Touched::Instances(list),
+        }
+    }
+}
+
+/// A pipeline run's outcome: the usual [`RunResult`] plus the final
+/// decision tensor (the parity suite pins tensors across modes; plain
+/// `run` paths drop it).
+pub struct PipelineRun {
+    pub result: RunResult,
+    pub y: Vec<f64>,
+}
+
+/// One slot's handoff from leader to committer.
+struct Work {
+    t: usize,
+    abs_slot: u64,
+    /// `clock_ns` stamp at the slot's open (before decide) — the
+    /// committer closes the "span.slot.ns" window with it.
+    t0: u64,
+    arrivals_sum: f64,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    touched: TouchedOwned,
+}
+
+/// One slot's results back from the committer (buffers ride along for
+/// reuse).
+struct Done {
+    t: usize,
+    clamped: usize,
+    reward: SlotReward,
+    arrivals_sum: f64,
+    x: Vec<f64>,
+    y: Vec<f64>,
+}
+
+/// Drive `policy` against `arrivals` for `horizon` slots under `mode`.
+/// Both modes share [`ShardedLeader`]'s machinery slot-for-slot; the
+/// parity suite pins them bit-to-bit on records, ledgers, and decision
+/// tensors.
+pub fn run_pipeline(
+    leader: &mut ShardedLeader,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalModel,
+    horizon: usize,
+    mode: PipelineMode,
+) -> PipelineRun {
+    match mode {
+        PipelineMode::Lockstep => run_lockstep(leader, policy, arrivals, horizon),
+        PipelineMode::Overlapped => run_overlapped(leader, policy, arrivals, horizon),
+    }
+}
+
+/// The reference schedule: [`ShardedLeader::run`]'s exact loop, driven
+/// through [`ShardedLeader::slot`], with the final tensor kept.
+fn run_lockstep(
+    leader: &mut ShardedLeader,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalModel,
+    horizon: usize,
+) -> PipelineRun {
+    crate::schedulers::begin_run_epoch();
+    policy.bind_shards(leader.plan());
+    let p = leader.problem();
+    let mut x = vec![0.0; p.num_ports()];
+    let mut y = vec![0.0; p.decision_len()];
+    let mut result = RunResult {
+        policy: policy.name().to_string(),
+        records: Vec::with_capacity(horizon),
+        ..Default::default()
+    };
+    let start = Instant::now();
+    for t in 0..horizon {
+        arrivals.next(&mut x);
+        let (report, SlotReward { q, gain, penalty }) = leader.slot(policy, &x, &mut y);
+        if leader.strict {
+            assert_eq!(
+                report.clamped, 0,
+                "policy {} emitted an infeasible decision at t={t}",
+                policy.name()
+            );
+        }
+        result.clamped_total += report.clamped;
+        result.cumulative_reward += q;
+        result.records.push(SlotRecord { t, q, gain, penalty, arrivals: x.iter().sum() });
+    }
+    result.elapsed_secs = start.elapsed().as_secs_f64();
+    if obs::enabled() {
+        leader.publish_occupancy();
+    }
+    PipelineRun { result, y }
+}
+
+/// The overlapped schedule (module docs).  The committer owns
+/// `&mut ShardedLeader` for the scope; the leader thread keeps only
+/// the `'p` problem reference, the policy, and the arrival stream.
+fn run_overlapped(
+    leader: &mut ShardedLeader,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalModel,
+    horizon: usize,
+) -> PipelineRun {
+    crate::schedulers::begin_run_epoch();
+    policy.bind_shards(leader.plan());
+    let p = leader.problem();
+    let base = leader.next_slot();
+    let name = policy.name().to_string();
+    let mut result = RunResult {
+        policy: name.clone(),
+        records: Vec::with_capacity(horizon),
+        ..Default::default()
+    };
+    let mut y_front = vec![0.0; p.decision_len()];
+    let start = Instant::now();
+    if horizon > 0 {
+        let (work_tx, work_rx) = mpsc::sync_channel::<Work>(1);
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        std::thread::scope(|s| {
+            let committer = {
+                let leader = &mut *leader;
+                s.spawn(move || {
+                    while let Ok(mut w) = work_rx.recv() {
+                        let (report, reward) = leader.commit_and_reward(
+                            &w.x,
+                            &mut w.y,
+                            w.touched.as_touched(),
+                            w.abs_slot,
+                        );
+                        obs::record_span_window(obs::SpanKind::Slot, w.abs_slot, 0, w.t0);
+                        let done = Done {
+                            t: w.t,
+                            clamped: report.clamped,
+                            reward,
+                            arrivals_sum: w.arrivals_sum,
+                            x: w.x,
+                            y: w.y,
+                        };
+                        if done_tx.send(done).is_err() {
+                            return; // leader unwound; stop quietly
+                        }
+                    }
+                })
+            };
+            let mut collect = |d: Done, result: &mut RunResult| {
+                assert_eq!(
+                    d.t,
+                    result.records.len(),
+                    "committer results must arrive in slot order"
+                );
+                result.clamped_total += d.clamped;
+                assert_eq!(
+                    d.clamped, 0,
+                    "overlapped pipeline requires clamp-free decisions \
+                     (policy {name} clamped at t={}); run lockstep instead",
+                    d.t
+                );
+                let SlotReward { q, gain, penalty } = d.reward;
+                result.cumulative_reward += q;
+                result.records.push(SlotRecord {
+                    t: d.t,
+                    q,
+                    gain,
+                    penalty,
+                    arrivals: d.arrivals_sum,
+                });
+                (d.x, d.y)
+            };
+            // Two rotating buffer pairs: one can sit in the bounded
+            // channel while the other is being committed; a third slot
+            // is never needed at depth 1.
+            let mut free: Vec<(Vec<f64>, Vec<f64>)> = (0..2)
+                .map(|_| (vec![0.0; p.num_ports()], vec![0.0; p.decision_len()]))
+                .collect();
+            for t in 0..horizon {
+                let (mut xb, mut yb) = match free.pop() {
+                    Some(pair) => pair,
+                    None => collect(done_rx.recv().expect("committer died"), &mut result),
+                };
+                arrivals.next(&mut xb);
+                let abs_slot = base + t as u64;
+                pool::set_slot(abs_slot);
+                let t0 = obs::clock_ns();
+                obs::with_span(obs::SpanKind::Decide, abs_slot, 0, || {
+                    policy.decide(p, &xb, &mut y_front)
+                });
+                yb.copy_from_slice(&y_front);
+                let touched = TouchedOwned::capture(policy.touched());
+                let arrivals_sum = xb.iter().sum();
+                let work =
+                    Work { t, abs_slot, t0, arrivals_sum, x: xb, y: yb, touched };
+                work_tx.send(work).expect("committer died");
+            }
+            drop(work_tx);
+            while result.records.len() < horizon {
+                let pair =
+                    collect(done_rx.recv().expect("committer died"), &mut result);
+                free.push(pair);
+            }
+            committer.join().expect("committer panicked");
+        });
+    }
+    result.elapsed_secs = start.elapsed().as_secs_f64();
+    if obs::enabled() {
+        leader.publish_occupancy();
+    }
+    PipelineRun { result, y: y_front }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::schedulers::{Fairness, OgaSched};
+    use crate::sim::arrivals::Bernoulli;
+    use crate::sim::ingest::{StreamArrivals, StreamParams};
+    use crate::traces::synthesize;
+    use crate::utils::pool::ExecBudget;
+
+    fn modes_agree(make: &dyn Fn(&crate::model::Problem) -> Box<dyn Policy>, seed: u64) {
+        let p = synthesize(&Scenario::small());
+        let horizon = 40;
+        let run = |mode: PipelineMode| {
+            let mut leader = ShardedLeader::new(&p, 3);
+            let mut pol = make(&p);
+            let mut arr = Bernoulli::uniform(p.num_ports(), 0.4, seed);
+            let out = run_pipeline(&mut leader, pol.as_mut(), &mut arr, horizon, mode);
+            let mut remaining = Vec::new();
+            for r in 0..p.num_instances() {
+                for k in 0..p.num_resources {
+                    remaining.push(leader.state().remaining_at(r, k));
+                }
+            }
+            (out, remaining)
+        };
+        let (lock, lock_rem) = run(PipelineMode::Lockstep);
+        let (over, over_rem) = run(PipelineMode::Overlapped);
+        assert_eq!(over.result.records, lock.result.records);
+        assert_eq!(over.result.cumulative_reward, lock.result.cumulative_reward);
+        assert_eq!(over.result.clamped_total, lock.result.clamped_total);
+        assert_eq!(over.y, lock.y, "decision tensors diverged");
+        assert_eq!(over_rem, lock_rem, "ledgers diverged");
+    }
+
+    #[test]
+    fn overlapped_matches_lockstep_for_a_sparse_learner() {
+        modes_agree(
+            &|p| Box::new(OgaSched::new(p, 2.0, 0.999, ExecBudget::auto())),
+            17,
+        );
+    }
+
+    #[test]
+    fn overlapped_matches_lockstep_for_a_reactive_baseline() {
+        modes_agree(&|_| Box::new(Fairness::new()), 23);
+    }
+
+    #[test]
+    fn overlapped_consumes_a_streaming_ingest_model() {
+        let p = synthesize(&Scenario::small());
+        let horizon = 30;
+        let params = StreamParams { batch_events: 8, ..StreamParams::default() };
+        let run = |mode: PipelineMode| {
+            let mut leader = ShardedLeader::new(&p, 2);
+            let mut pol = Fairness::new();
+            let mut arr = StreamArrivals::new(p.num_ports(), params, 313);
+            run_pipeline(&mut leader, &mut pol, &mut arr, horizon, mode)
+        };
+        let lock = run(PipelineMode::Lockstep);
+        let over = run(PipelineMode::Overlapped);
+        assert_eq!(over.result.records, lock.result.records);
+        assert_eq!(over.y, lock.y);
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in [PipelineMode::Lockstep, PipelineMode::Overlapped] {
+            assert_eq!(PipelineMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert!(PipelineMode::parse("eager").is_err());
+    }
+
+    #[test]
+    fn touched_capture_preserves_the_dirty_order() {
+        let list = [4usize, 1, 4, 2];
+        let owned = TouchedOwned::capture(Touched::Instances(&list));
+        match owned.as_touched() {
+            Touched::Instances(got) => assert_eq!(got, &list),
+            Touched::All => panic!("capture lost the list"),
+        }
+        assert!(matches!(TouchedOwned::capture(Touched::All).as_touched(), Touched::All));
+    }
+
+    #[test]
+    fn zero_horizon_is_a_noop() {
+        let p = synthesize(&Scenario::small());
+        let mut leader = ShardedLeader::new(&p, 2);
+        let mut pol = Fairness::new();
+        let mut arr = Bernoulli::uniform(p.num_ports(), 0.5, 1);
+        let out =
+            run_pipeline(&mut leader, &mut pol, &mut arr, 0, PipelineMode::Overlapped);
+        assert!(out.result.records.is_empty());
+        assert_eq!(out.result.cumulative_reward, 0.0);
+    }
+}

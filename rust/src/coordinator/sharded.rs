@@ -559,6 +559,21 @@ impl<'p> ShardedLeader<'p> {
         &self.plan
     }
 
+    /// The bound problem.  Returns the `'p` reference itself (not a
+    /// reborrow of `self`), so callers — the overlapped pipeline's
+    /// leader thread in particular — can keep using it while the
+    /// committer thread holds `&mut self`.
+    pub fn problem(&self) -> &'p Problem {
+        self.problem
+    }
+
+    /// Absolute slot of the next [`ShardedLeader::slot`] call (the
+    /// pipeline pre-computes its slot ids from this base because the
+    /// committer thread owns `&mut self` for the run's duration).
+    pub(crate) fn next_slot(&self) -> u64 {
+        self.next_slot
+    }
+
     pub fn state(&self) -> &ClusterState {
         &self.state
     }
@@ -580,16 +595,33 @@ impl<'p> ShardedLeader<'p> {
         y: &mut [f64],
     ) -> (CommitReport, SlotReward) {
         let abs_slot = self.next_slot;
-        self.next_slot += 1;
         pool::set_slot(abs_slot);
         let _slot_span = obs::SpanTimer::start(obs::SpanKind::Slot, abs_slot, 0);
         let p = self.problem;
         obs::with_span(obs::SpanKind::Decide, abs_slot, 0, || policy.decide(p, x, y));
-        let report = obs::with_span(obs::SpanKind::Commit, abs_slot, 0, || {
-            match policy.touched() {
-                Touched::All => self.commit_all(y, abs_slot),
-                Touched::Instances(list) => self.commit_list(y, list, abs_slot),
-            }
+        self.commit_and_reward(x, y, policy.touched(), abs_slot)
+    }
+
+    /// The slot's phase after decide: sharded commit → sharded reward →
+    /// release, exactly the tail of [`ShardedLeader::slot`].  Factored
+    /// out so `coordinator::pipeline`'s committer thread can run slot
+    /// t's tail while the leader thread decides slot t+1; the `touched`
+    /// set is passed in because the policy (and its borrow) stays on
+    /// the leader thread.  Advances the absolute slot counter past
+    /// `abs_slot` and re-stamps the thread-local slot tag (`pool` tags
+    /// are per-thread, and this may run off the deciding thread).
+    pub(crate) fn commit_and_reward(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        touched: Touched<'_>,
+        abs_slot: u64,
+    ) -> (CommitReport, SlotReward) {
+        self.next_slot = abs_slot + 1;
+        pool::set_slot(abs_slot);
+        let report = obs::with_span(obs::SpanKind::Commit, abs_slot, 0, || match touched {
+            Touched::All => self.commit_all(y, abs_slot),
+            Touched::Instances(list) => self.commit_list(y, list, abs_slot),
         });
         let reward =
             obs::with_span(obs::SpanKind::Reward, abs_slot, 0, || self.reward(x, y));

@@ -28,6 +28,7 @@ fn main() {
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
         "figure" => cmd_figure(&args),
+        "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(),
         "help" | "" => {
             println!("{HELP}");
@@ -100,8 +101,55 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     if let Some(v) = args.opt("obs") {
         s.obs.level = obs::ObsLevel::parse(v).map_err(|e| format!("--obs: {e}"))?;
     }
+    // Streaming-ingest knobs (§SPerf-9, the `serve` driver).  A bare
+    // `--backpressure` turns blocking-at-capacity on; `--backpressure
+    // off` selects drop-newest explicitly.
+    if let Some(v) = args.opt("backpressure") {
+        s.ingest.backpressure = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => {
+                return Err(format!("--backpressure: `{other}` is not on|off"));
+            }
+        };
+    } else if args.has_flag("backpressure") {
+        s.ingest.backpressure = true;
+    }
+    if args.has_flag("ingest") {
+        s.ingest.enabled = true;
+    }
+    s.ingest.capacity = args.opt_usize("ingest-capacity", s.ingest.capacity)?;
+    s.ingest.batch_events = args.opt_usize("batch-events", s.ingest.batch_events)?;
+    s.ingest.burst = args.opt_usize("ingest-burst", s.ingest.burst)?;
+    s.ingest.ewma_alpha = args.opt_f64("ewma-alpha", s.ingest.ewma_alpha)?;
+    s.ingest.ewma_epoch = args.opt_usize("ewma-epoch", s.ingest.ewma_epoch)?;
     s.validate()?;
     Ok(s)
+}
+
+/// Resolve a `--policy` name against a synthesized problem (shared by
+/// `run` and `serve`).
+fn build_policy(
+    name: &str,
+    problem: &ogasched::model::Problem,
+    s: &Scenario,
+) -> Result<Box<dyn Policy>, String> {
+    Ok(match name {
+        "ogasched" => Box::new(OgaSched::new(problem, s.eta0, s.decay, s.parallel)),
+        "ogasched-hlo" => Box::new(
+            HloOgaSched::from_default_dir(problem, s.eta0, s.decay)
+                .map_err(|e| format!("{e:#}"))?,
+        ),
+        "drf" => Box::new(Drf::new()),
+        "fairness" => Box::new(Fairness::new()),
+        "binpacking" => Box::new(BinPacking::new()),
+        "spreading" => Box::new(Spreading::new()),
+        "ogasched-mirror" => {
+            Box::new(ogasched::schedulers::OgaMirror::new(problem, s.eta0, s.decay, s.parallel))
+        }
+        "random" => Box::new(RandomAlloc::new(s.seed)),
+        other => return Err(format!("unknown policy `{other}`")),
+    })
 }
 
 /// Flush observability output for a finished command: the metric table at
@@ -128,22 +176,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     obs::set_level(s.obs.level);
     let problem = synthesize(&s);
     let name = args.opt("policy").unwrap_or("ogasched");
-    let mut policy: Box<dyn Policy> = match name {
-        "ogasched" => Box::new(OgaSched::new(&problem, s.eta0, s.decay, s.parallel)),
-        "ogasched-hlo" => Box::new(
-            HloOgaSched::from_default_dir(&problem, s.eta0, s.decay)
-                .map_err(|e| format!("{e:#}"))?,
-        ),
-        "drf" => Box::new(Drf::new()),
-        "fairness" => Box::new(Fairness::new()),
-        "binpacking" => Box::new(BinPacking::new()),
-        "spreading" => Box::new(Spreading::new()),
-        "ogasched-mirror" => {
-            Box::new(ogasched::schedulers::OgaMirror::new(&problem, s.eta0, s.decay, s.parallel))
-        }
-        "random" => Box::new(RandomAlloc::new(s.seed)),
-        other => return Err(format!("unknown policy `{other}`")),
-    };
+    let mut policy = build_policy(name, &problem, &s)?;
     if s.recovery.enabled() {
         let rebuild = args.has_flag("churn-rebuild");
         let out = sim::checkpoint::run_resilient_scenario(&s, policy.as_mut(), rebuild)?;
@@ -240,6 +273,130 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
         return obs_finish(&s);
     }
     println!("{}", figures::run_by_id(id, horizon)?);
+    obs_finish(&s)
+}
+
+/// Sustained-traffic throughput harness (§SPerf-9): drive one policy
+/// through the streaming ingest queue + batcher under both pipeline
+/// modes at each requested batch shape, read slot latency from the obs
+/// registry's "span.slot.ns" histogram (not a bespoke timer), and write
+/// `BENCH_throughput.json`.  Cross-mode cumulative rewards are asserted
+/// equal per shape — the parity contract rides along with every bench.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use ogasched::coordinator::{run_pipeline, PipelineMode, ShardedLeader};
+    use ogasched::sim::ingest::{StreamArrivals, StreamParams};
+
+    let mut s = scenario_from(args)?;
+    s.ingest.enabled = true;
+    // the bench reads registry histograms, so obs must be at least on
+    if !s.obs.enabled() {
+        s.obs.level = obs::ObsLevel::Summary;
+    }
+    obs::set_level(s.obs.level);
+    let slots = args.opt_usize("slots", s.horizon.min(400))?;
+    if slots == 0 {
+        return Err("--slots must be > 0".into());
+    }
+    let shapes: Vec<usize> = match args.opt("batch-shapes") {
+        None => vec![s.ingest.batch_events, s.ingest.batch_events * 4],
+        Some(v) => v
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("--batch-shapes: `{t}` is not an integer"))
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    if shapes.is_empty() || shapes.contains(&0) {
+        return Err("--batch-shapes needs positive batch sizes".into());
+    }
+    let out_path = args.opt("out").unwrap_or("BENCH_throughput.json");
+    let name = args.opt("policy").unwrap_or("ogasched");
+    let problem = synthesize(&s);
+
+    let mut table = Table::new(&[
+        "mode", "batch", "slots/s", "events/s", "p50 us", "p99 us", "max us", "dropped",
+    ]);
+    let mut rows = String::new();
+    for &shape in &shapes {
+        let mut cumulative: Option<f64> = None;
+        for mode in [PipelineMode::Lockstep, PipelineMode::Overlapped] {
+            obs::reset();
+            let mut leader = ShardedLeader::new(&problem, s.parallel.shards);
+            let mut policy = build_policy(name, &problem, &s)?;
+            policy.reset(&problem);
+            let params = StreamParams {
+                batch_events: shape,
+                ..StreamParams::from_config(&s.ingest)
+            };
+            let mut arr = StreamArrivals::new(problem.num_ports(), params, s.seed ^ 0x1A57);
+            let out = run_pipeline(&mut leader, policy.as_mut(), &mut arr, slots, mode);
+            match cumulative {
+                None => cumulative = Some(out.result.cumulative_reward),
+                Some(want) => {
+                    if out.result.cumulative_reward != want {
+                        return Err(format!(
+                            "pipeline parity violated at batch_events={shape}: \
+                             lockstep cumulative {want}, overlapped {}",
+                            out.result.cumulative_reward
+                        ));
+                    }
+                }
+            }
+            arr.drain_in_flight();
+            arr.queue().publish_counters();
+            let reg = obs::registry();
+            let hist = reg.histogram("span.slot.ns").snapshot();
+            let accepted = arr.queue().pushed();
+            let dropped = arr.queue().dropped();
+            let waits = arr.queue().backpressure_waits();
+            let elapsed = out.result.elapsed_secs.max(1e-9);
+            let slots_per_sec = slots as f64 / elapsed;
+            let events_per_sec = accepted as f64 / elapsed;
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"mode\": \"{}\", \"batch_events\": {shape}, \"slots\": {slots}, \
+                 \"elapsed_secs\": {elapsed:.6}, \"slots_per_sec\": {slots_per_sec:.1}, \
+                 \"events_per_sec\": {events_per_sec:.1}, \"events_total\": {accepted}, \
+                 \"batches_total\": {}, \"dropped\": {dropped}, \
+                 \"backpressure_waits\": {waits}, \"slot_ns\": {{\"count\": {}, \
+                 \"p50\": {}, \"p99\": {}, \"max\": {}}}}}",
+                mode.name(),
+                arr.batches_total(),
+                hist.count,
+                hist.p50(),
+                hist.p99(),
+                hist.max,
+            ));
+            table.push(&[
+                mode.name().into(),
+                format!("{shape}"),
+                format!("{slots_per_sec:.0}"),
+                format!("{events_per_sec:.0}"),
+                format!("{:.1}", hist.p50() as f64 / 1e3),
+                format!("{:.1}", hist.p99() as f64 / 1e3),
+                format!("{:.1}", hist.max as f64 / 1e3),
+                format!("{dropped}"),
+            ]);
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"throughput\",\n  \"provenance\": \"measured (ogasched serve; \
+         slot latency from the obs registry span.slot.ns histogram)\",\n  \
+         \"policy\": \"{name}\",\n  \"slots\": {slots},\n  \"shards\": {},\n  \
+         \"backpressure\": {},\n  \"runs\": [\n{rows}\n  ]\n}}\n",
+        s.parallel.shards, s.ingest.backpressure,
+    );
+    std::fs::write(out_path, json).map_err(|e| format!("{out_path}: {e}"))?;
+    println!(
+        "serve: policy={name} slots={slots} shards={} shapes={shapes:?} backpressure={}",
+        s.parallel.shards, s.ingest.backpressure
+    );
+    println!("{}", table.render());
+    println!("serve: wrote {out_path}");
     obs_finish(&s)
 }
 

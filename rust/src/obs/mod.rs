@@ -144,10 +144,14 @@ pub enum SpanKind {
     Replan = 15,
     /// Instant: a kill fault took the run down mid-slot.
     KillTaken = 16,
+    /// Instant: the ingest queue dropped a newest event at capacity.
+    IngestDrop = 17,
+    /// Instant: the batcher completed a slot batch.
+    BatchFormed = 18,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 17] = [
+    pub const ALL: [SpanKind; 19] = [
         SpanKind::Slot,
         SpanKind::Decide,
         SpanKind::Commit,
@@ -165,6 +169,8 @@ impl SpanKind {
         SpanKind::FaultTopology,
         SpanKind::Replan,
         SpanKind::KillTaken,
+        SpanKind::IngestDrop,
+        SpanKind::BatchFormed,
     ];
 
     pub fn name(self) -> &'static str {
@@ -186,6 +192,8 @@ impl SpanKind {
             SpanKind::FaultTopology => "fault.topology",
             SpanKind::Replan => "fault.replan",
             SpanKind::KillTaken => "recover.kill",
+            SpanKind::IngestDrop => "ingest.drop",
+            SpanKind::BatchFormed => "ingest.batch",
         }
     }
 
@@ -243,6 +251,20 @@ fn record_span(kind: SpanKind, slot: u64, shard: u32, gen: u32, t0: u64, dur: u6
             dur_ns: dur,
         });
     }
+}
+
+/// Record a completed span from an explicitly captured start stamp —
+/// the overlapped pipeline opens a slot's wall window on the leader
+/// thread (`clock_ns` before decide) and closes it on the committer
+/// thread after the reward merge, so neither `with_span` nor
+/// [`SpanTimer`] fits.  Inert when obs is off.
+#[inline]
+pub(crate) fn record_span_window(kind: SpanKind, slot: u64, shard: u32, t0: u64) {
+    if !enabled() {
+        return;
+    }
+    let dur = clock_ns().saturating_sub(t0);
+    record_span(kind, slot, shard, 0, t0, dur);
 }
 
 /// Time `f` as a `kind` span.  Off ⇒ one relaxed load + branch, then
@@ -337,6 +359,13 @@ mod tests {
         assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
         assert!(SpanKind::WatchdogTrip.is_instant());
         assert!(!SpanKind::OracleIter.is_instant());
+        // PR 9 kinds are appended instants: existing wire values (and the
+        // `is_instant` threshold at TaskFault) must not shift.
+        assert_eq!(SpanKind::KillTaken as u8, 16);
+        assert_eq!(SpanKind::IngestDrop as u8, 17);
+        assert_eq!(SpanKind::BatchFormed as u8, 18);
+        assert!(SpanKind::IngestDrop.is_instant());
+        assert!(SpanKind::BatchFormed.is_instant());
     }
 
     #[test]

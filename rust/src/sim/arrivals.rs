@@ -45,6 +45,24 @@ pub trait ArrivalModel: Send {
         let _ = r;
         Ok(())
     }
+
+    /// Streaming sources (`sim::ingest::StreamArrivals`): drain every
+    /// in-flight ingest event into checkpointable batch state, then
+    /// serialize cursor + batch + EWMA state as a sub-versioned
+    /// section for the checkpoint blob appendix.  `None` (the default)
+    /// for slot-synchronous models — the blob then records only the
+    /// absence flag.
+    fn ingest_checkpoint(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Rebuild from [`ArrivalModel::ingest_checkpoint`] bytes.  Models
+    /// without ingest state reject the call: a blob carrying an ingest
+    /// section must be thawed onto a streaming model.
+    fn ingest_restore(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let _ = bytes;
+        Err(format!("arrival model `{}` carries no ingest state", self.name()))
+    }
 }
 
 /// i.i.d. Bernoulli(ρ_l) per port, ρ_l = ρ · w_l with per-port weights

@@ -7,8 +7,11 @@
 //! the driver cursor and fault-stream position, the concatenated slot
 //! records and reward accumulators, the liveness masks, the cluster
 //! ledger, the policy's learned state (via [`Policy::snapshot_state`]),
-//! the arrival model's RNG stream position, and — on the sharded path —
-//! the instance→shard ownership map plus the per-shard worker ledgers.
+//! the arrival model's RNG stream position, — on the sharded path —
+//! the instance→shard ownership map plus the per-shard worker ledgers,
+//! and (blob v2, streaming models only) the drained ingest
+//! cursor/batch-state section of `sim::ingest` so a kill mid-batch
+//! resumes bitwise.
 //!
 //! What is deliberately *not* stored: the topology edition itself.  The
 //! incremental churn arm's edge ordering is path-dependent (it is the
@@ -206,6 +209,17 @@ fn freeze(
             }
         }
     }
+    // Blob v2: streaming-ingest cursor/batch state (§SPerf-9).  The
+    // call *drains* the model's in-flight queue into its batcher first
+    // — the durability contract for mid-batch kills — then serializes
+    // the sub-versioned section; non-streaming models write `absent`.
+    match arrivals.ingest_checkpoint() {
+        None => w.put_bool(false),
+        Some(section) => {
+            w.put_bool(true);
+            w.put_bytes(&section);
+        }
+    }
     Checkpoint { slot: cursor as u64, bytes: w.into_bytes() }
 }
 
@@ -333,6 +347,12 @@ fn thaw(
     } else {
         (None, None)
     };
+    if r.get_bool()? {
+        let ibytes = r.get_bytes()?;
+        arrivals
+            .ingest_restore(&ibytes)
+            .map_err(|e| format!("ingest section: {e}"))?;
+    }
     r.finish()?;
     Ok(Thawed {
         cursor,

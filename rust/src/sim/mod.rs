@@ -5,6 +5,7 @@
 pub mod arrivals;
 pub mod checkpoint;
 pub mod faults;
+pub mod ingest;
 
 use crate::config::Scenario;
 use crate::coordinator::{Leader, RunResult};

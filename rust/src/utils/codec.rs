@@ -10,8 +10,9 @@
 
 /// Blob magic: "PLCK" (pallas checkpoint) as LE bytes.
 pub const MAGIC: u32 = 0x4B434C50;
-/// Bump on any incompatible layout change.
-pub const VERSION: u32 = 1;
+/// Bump on any incompatible layout change.  v2: appended the optional
+/// streaming-ingest cursor/batch-state section (§SPerf-9).
+pub const VERSION: u32 = 2;
 
 /// Append-only encoder over an owned byte buffer.
 #[derive(Debug, Default)]

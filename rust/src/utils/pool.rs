@@ -44,7 +44,7 @@
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeSet;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -650,6 +650,46 @@ fn global_crew() -> &'static Crew {
     crew
 }
 
+/// Pre-shutdown drain hooks.  Streaming subsystems (`sim::ingest`)
+/// register a closure that flushes their in-flight work into
+/// checkpointable state; [`shutdown`] runs every hook *before* the
+/// crews drain, so nothing a later freeze needs is stranded in
+/// lock-free buffers.  Hooks run in registration order and must be
+/// idempotent (a freeze may have drained already).
+fn drain_hooks() -> &'static Mutex<Vec<(u64, Arc<dyn Fn() + Send + Sync>)>> {
+    static H: OnceLock<Mutex<Vec<(u64, Arc<dyn Fn() + Send + Sync>)>>> = OnceLock::new();
+    H.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a drain hook; returns an id for [`unregister_drain_hook`].
+pub fn register_drain_hook(hook: Box<dyn Fn() + Send + Sync>) -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let id = NEXT.fetch_add(1, Ordering::Relaxed);
+    drain_hooks().lock().unwrap().push((id, Arc::from(hook)));
+    id
+}
+
+/// Remove a hook registered by [`register_drain_hook`] (owners do this
+/// on drop so a dead subsystem is never drained).
+pub fn unregister_drain_hook(id: u64) {
+    drain_hooks().lock().unwrap().retain(|(i, _)| *i != id);
+}
+
+/// Run every registered drain hook in registration order.  Called by
+/// [`shutdown`]; checkpoint paths may call it directly to flush
+/// in-flight ingest state before a freeze.  Hooks are cloned out of
+/// the registry first and run unlocked, so a hook (or a concurrent
+/// drop) may (un)register without deadlocking.
+pub fn run_drain_hooks() {
+    let hooks: Vec<Arc<dyn Fn() + Send + Sync>> = {
+        let reg = drain_hooks().lock().unwrap();
+        reg.iter().map(|(_, h)| Arc::clone(h)).collect()
+    };
+    for hook in hooks {
+        hook();
+    }
+}
+
 /// Cleanly drain every parked worker thread — the global crew and all
 /// recycled shard-group crews — joining them so test harnesses and
 /// embedding processes don't leak parked threads between runs.  Crews
@@ -657,8 +697,11 @@ fn global_crew() -> &'static Crew {
 /// demand (and until then scatters degrade to inline execution, which
 /// is always correct).  Must not be called while a scatter is in
 /// flight; the quit flag is only checked between jobs, so in-flight
-/// work completes first.
+/// work completes first.  Drain hooks run first (see [`drain_hooks`]):
+/// in-flight ingest batches land in checkpointable state before the
+/// worker threads go away.
 pub fn shutdown() {
+    run_drain_hooks();
     if let Some(crew) = GLOBAL_CREW.get() {
         crew.drain();
     }
@@ -1149,6 +1192,51 @@ mod tests {
         parallel_for(0, 4, |_| panic!("should not run"));
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drain_hooks_run_in_order_and_unregister() {
+        // Counters, not an exact log: other tests may legitimately call
+        // run_drain_hooks concurrently (it is process-global), and every
+        // caller runs our hooks too — assertions must survive that.
+        let a_runs = Arc::new(AtomicUsize::new(0));
+        let b_runs = Arc::new(AtomicUsize::new(0));
+        let order_ok = Arc::new(AtomicBool::new(true));
+        let ida = register_drain_hook(Box::new({
+            let a = Arc::clone(&a_runs);
+            move || {
+                a.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+        let checking = Arc::new(AtomicBool::new(true));
+        let idb = register_drain_hook(Box::new({
+            let (a, b) = (Arc::clone(&a_runs), Arc::clone(&b_runs));
+            let (ok, on) = (Arc::clone(&order_ok), Arc::clone(&checking));
+            move || {
+                // registration order: while both hooks are registered,
+                // every pass runs `a` before `b`, so at `b`'s entry
+                // completed-a must outnumber entered-b
+                let nb = b.fetch_add(1, Ordering::SeqCst);
+                if on.load(Ordering::SeqCst) && a.load(Ordering::SeqCst) < nb + 1 {
+                    ok.store(false, Ordering::SeqCst);
+                }
+            }
+        }));
+        run_drain_hooks();
+        assert!(a_runs.load(Ordering::SeqCst) >= 1);
+        assert!(b_runs.load(Ordering::SeqCst) >= 1);
+        assert!(order_ok.load(Ordering::SeqCst), "hooks must run in registration order");
+        checking.store(false, Ordering::SeqCst);
+        unregister_drain_hook(ida);
+        let frozen = a_runs.load(Ordering::SeqCst);
+        run_drain_hooks();
+        assert_eq!(a_runs.load(Ordering::SeqCst), frozen, "unregistered hook ran");
+        assert!(b_runs.load(Ordering::SeqCst) >= 2);
+        assert!(order_ok.load(Ordering::SeqCst), "hooks must run in registration order");
+        unregister_drain_hook(idb);
+        // unregistering an unknown id is a no-op
+        unregister_drain_hook(ida);
+        run_drain_hooks();
     }
 
     #[test]

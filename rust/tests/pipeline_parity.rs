@@ -1,0 +1,316 @@
+//! Pipeline parity (§SPerf-9): the **overlapped slot pipeline** — slot
+//! t+1's decide running concurrently with slot t's commit + reward
+//! merge on a committer thread — must reproduce the **lockstep**
+//! schedule bit for bit: every slot record (q, gain, penalty,
+//! arrivals), the cumulative reward, the final ledger (remaining
+//! capacity per (r, k)) and the final decision tensor, across the
+//! policy lineup × worker budgets {1, 2, 4} × arrival sources
+//! (Bernoulli and the lock-free streaming-ingest queue at several
+//! batch shapes).
+//!
+//! The suite also pins the **kill-and-resume composition**: a run over
+//! the same ingest stream that is killed mid-flight and thawed from a
+//! checkpoint carrying the v2 ingest cursor/batch-state section must
+//! land on the same bits as the uninterrupted overlapped pipeline.
+//!
+//! The CI matrix re-runs this suite under several `PALLAS_WORKERS`
+//! budgets × batch shapes (`PIPELINE_BATCH_SHAPES`) with
+//! `--test-threads=1`.
+
+use ogasched::config::{FaultConfig, RecoveryConfig};
+use ogasched::coordinator::{run_pipeline, PipelineMode, PipelineRun, ShardedLeader};
+use ogasched::graph::Bipartite;
+use ogasched::model::Problem;
+use ogasched::oga::utilities::UtilityKind;
+use ogasched::schedulers::{
+    BinPacking, Drf, Fairness, OgaMirror, OgaSched, Policy, RandomAlloc, Spreading,
+};
+use ogasched::sim::arrivals::{ArrivalModel, Bernoulli};
+use ogasched::sim::checkpoint::run_resilient;
+use ogasched::sim::faults::{ExecFaultPlan, FaultPlan};
+use ogasched::sim::ingest::{StreamArrivals, StreamParams};
+use ogasched::utils::prop::{check_seeded, ensure, Size};
+use ogasched::utils::rng::Rng;
+use ogasched::ExecBudget;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Batch shapes for the streaming source; the CI pipeline-parity job
+/// sweeps this via the environment (comma-separated `batch_events`).
+fn batch_shapes() -> Vec<usize> {
+    match std::env::var("PIPELINE_BATCH_SHAPES") {
+        Ok(v) => v
+            .split(',')
+            .map(|s| s.trim().parse().expect("PIPELINE_BATCH_SHAPES: bad integer"))
+            .collect(),
+        Err(_) => vec![8, 32],
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PIPELINE_PARITY_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x51_9E)
+}
+
+fn random_problem(rng: &mut Rng, size: Size) -> Problem {
+    let l_n = rng.range(1, size.dim(6, 1));
+    let r_n = rng.range(2, size.dim(16, 2).max(3));
+    let k_n = rng.range(1, size.dim(4, 1));
+    let p = rng.uniform(0.2, 0.9);
+    let mut edges = Vec::new();
+    for l in 0..l_n {
+        for r in 0..r_n {
+            if rng.bernoulli(p) {
+                edges.push((l, r));
+            }
+        }
+    }
+    let graph = Bipartite::from_edges(l_n, r_n, &edges);
+    Problem::new(
+        graph,
+        k_n,
+        (0..l_n * k_n).map(|_| rng.uniform(0.2, 3.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+        (0..r_n * k_n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+        (0..r_n * k_n).map(|_| UtilityKind::ALL[rng.below(4)]).collect(),
+        (0..k_n).map(|_| rng.uniform(0.1, 0.8)).collect(),
+    )
+}
+
+fn make_policy(p: &Problem, i: usize, seed: u64) -> (&'static str, Box<dyn Policy + Send>) {
+    match i {
+        0 => ("oga-reactive", Box::new(OgaSched::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        1 => ("oga-reservation", Box::new(OgaSched::reservation(p, 2.0, 0.999, ExecBudget::auto()))),
+        2 => ("oga-mirror", Box::new(OgaMirror::new(p, 2.0, 0.999, ExecBudget::auto()))),
+        3 => ("drf", Box::new(Drf::new())),
+        4 => ("fairness", Box::new(Fairness::new())),
+        5 => ("binpacking", Box::new(BinPacking::new())),
+        6 => ("spreading", Box::new(Spreading::new())),
+        _ => ("random", Box::new(RandomAlloc::new(seed))),
+    }
+}
+
+const N_POLICIES: usize = 8;
+
+/// An arrival source the matrix can rebuild identically per run: the
+/// dense Bernoulli reference model, or the streaming-ingest queue at a
+/// given batch shape (same-thread producer, lossless by construction).
+#[derive(Clone, Copy)]
+enum Source {
+    Bernoulli { rho: f64, seed: u64 },
+    Stream { batch_events: usize, seed: u64 },
+}
+
+impl Source {
+    fn build(self, num_ports: usize) -> Box<dyn ArrivalModel> {
+        match self {
+            Source::Bernoulli { rho, seed } => {
+                Box::new(Bernoulli::uniform(num_ports, rho, seed))
+            }
+            Source::Stream { batch_events, seed } => {
+                let params = StreamParams { batch_events, ..StreamParams::default() };
+                Box::new(StreamArrivals::new(num_ports, params, seed))
+            }
+        }
+    }
+
+    fn name(self) -> String {
+        match self {
+            Source::Bernoulli { .. } => "bernoulli".into(),
+            Source::Stream { batch_events, .. } => format!("stream/b{batch_events}"),
+        }
+    }
+}
+
+/// One full pipeline run: the result, the final decision tensor, and
+/// the flattened remaining-capacity grid.
+fn run_once(
+    p: &Problem,
+    policy_ix: usize,
+    policy_seed: u64,
+    source: Source,
+    horizon: usize,
+    shards: usize,
+    mode: PipelineMode,
+) -> (PipelineRun, Vec<f64>) {
+    let (_, mut pol) = make_policy(p, policy_ix, policy_seed);
+    pol.reset(p);
+    let mut arr = source.build(p.num_ports());
+    let mut leader = ShardedLeader::new(p, shards);
+    let out = run_pipeline(&mut leader, pol.as_mut(), arr.as_mut(), horizon, mode);
+    let mut remaining = Vec::new();
+    for r in 0..p.num_instances() {
+        for k in 0..p.num_resources {
+            remaining.push(leader.state().remaining_at(r, k));
+        }
+    }
+    (out, remaining)
+}
+
+fn compare(
+    ctx: &str,
+    got: &(PipelineRun, Vec<f64>),
+    want: &(PipelineRun, Vec<f64>),
+) -> Result<(), String> {
+    ensure(
+        got.0.result.cumulative_reward == want.0.result.cumulative_reward,
+        || {
+            format!(
+                "{ctx}: cumulative {} vs {}",
+                got.0.result.cumulative_reward, want.0.result.cumulative_reward
+            )
+        },
+    )?;
+    ensure(got.0.result.clamped_total == want.0.result.clamped_total, || {
+        format!("{ctx}: clamped totals diverged")
+    })?;
+    ensure(got.0.result.records == want.0.result.records, || {
+        let at = got
+            .0
+            .result
+            .records
+            .iter()
+            .zip(&want.0.result.records)
+            .position(|(a, b)| a != b);
+        format!("{ctx}: slot records diverged (first at {at:?})")
+    })?;
+    ensure(got.0.y == want.0.y, || format!("{ctx}: decision tensors diverged"))?;
+    ensure(got.1 == want.1, || format!("{ctx}: ledgers diverged"))?;
+    Ok(())
+}
+
+#[test]
+fn overlapped_matches_lockstep_bitwise_across_the_matrix() {
+    check_seeded("pipeline-parity", base_seed(), 3, |rng, size| {
+        let p = random_problem(rng, size);
+        let horizon = 32;
+        let policy_seed = rng.below(1 << 30) as u64;
+        let arrival_seed = rng.below(1 << 30) as u64;
+        let mut sources = vec![Source::Bernoulli { rho: 0.6, seed: arrival_seed }];
+        for shape in batch_shapes() {
+            sources.push(Source::Stream { batch_events: shape, seed: arrival_seed ^ 0x57 });
+        }
+        for i in 0..N_POLICIES {
+            for &src in &sources {
+                let reference =
+                    run_once(&p, i, policy_seed, src, horizon, 1, PipelineMode::Lockstep);
+                ensure(reference.0.result.records.len() == horizon, || {
+                    format!("policy {i}: expected {horizon} records")
+                })?;
+                let name = make_policy(&p, i, policy_seed).0;
+                for &shards in &SHARD_COUNTS {
+                    let got = run_once(
+                        &p, i, policy_seed, src, horizon, shards, PipelineMode::Overlapped,
+                    );
+                    compare(
+                        &format!("{name} {} overlapped shards={shards}", src.name()),
+                        &got,
+                        &reference,
+                    )?;
+                }
+                // run_lockstep at a non-trivial budget is the same
+                // machinery on a different shard plan — still bitwise
+                let got =
+                    run_once(&p, i, policy_seed, src, horizon, 4, PipelineMode::Lockstep);
+                compare(&format!("{name} {} lockstep shards=4", src.name()), &got, &reference)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn killed_and_resumed_ingest_run_matches_the_overlapped_pipeline() {
+    // the three-way pin: uninterrupted lockstep ≡ uninterrupted
+    // overlapped ≡ killed-and-resumed (checkpoints carry the v2 ingest
+    // cursor/batch-state section; kills discard the live queue, the
+    // restored RNG regenerates it)
+    let mut rng = Rng::new(base_seed() ^ 0x1E57);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 36;
+    let shards = 2;
+    let cfg = FaultConfig::default(); // no churn: isolate the ingest path
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    assert!(plan.is_empty(), "zero-rate fault plan must be empty");
+    for shape in batch_shapes() {
+        let src = Source::Stream { batch_events: shape, seed: 0xFEED ^ shape as u64 };
+        for policy_ix in [0usize, 4] {
+            let (name, _) = make_policy(&p, policy_ix, 7);
+            let ctx = format!("{name} b={shape}");
+            let reference =
+                run_once(&p, policy_ix, 7, src, horizon, shards, PipelineMode::Lockstep);
+            let over =
+                run_once(&p, policy_ix, 7, src, horizon, shards, PipelineMode::Overlapped);
+            compare(&format!("{ctx} overlapped"), &over, &reference).unwrap();
+
+            let rcfg = RecoveryConfig {
+                checkpoint_epoch: 4,
+                seed: 11 + shape as u64,
+                ..RecoveryConfig::default()
+            };
+            let exec =
+                ExecFaultPlan { kills: vec![5, 13, 29], ..ExecFaultPlan::default() };
+            let (_, mut pol) = make_policy(&p, policy_ix, 7);
+            pol.reset(&p);
+            let mut arr = src.build(p.num_ports());
+            let out = run_resilient(
+                &p, pol.as_mut(), arr.as_mut(), horizon, shards, &plan, &cfg, false,
+                &rcfg, &exec,
+            )
+            .unwrap_or_else(|e| panic!("{ctx}: resilient run failed: {e}"));
+            assert_eq!(out.kills, 3, "{ctx}: kills not all taken");
+            assert!(out.checkpoints_written > 0, "{ctx}: no checkpoint written");
+            assert_eq!(
+                out.churn.result.records, reference.0.result.records,
+                "{ctx}: killed-and-resumed records diverged from the pipeline"
+            );
+            assert_eq!(
+                out.churn.result.cumulative_reward, reference.0.result.cumulative_reward,
+                "{ctx}: cumulative reward diverged"
+            );
+            for r in 0..p.num_instances() {
+                for k in 0..p.num_resources {
+                    assert_eq!(
+                        out.churn.state.remaining_at(r, k),
+                        reference.1[r * p.num_resources + k],
+                        "{ctx}: remaining({r},{k}) diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_capacity_stream_stays_bitwise_across_modes() {
+    // a lane smaller than the refill burst forces many short refill
+    // rounds per batch; the model's same-thread refill is lossless by
+    // contract, so both modes must see identical batches *and*
+    // identical queue accounting (pushed grows, dropped stays zero)
+    let mut rng = Rng::new(base_seed() ^ 0xD0);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 24;
+    let run = |mode: PipelineMode| {
+        let params = StreamParams {
+            batch_events: 8,
+            capacity: 8,
+            burst: 32,
+            backpressure: false,
+            ..StreamParams::default()
+        };
+        let mut arr = StreamArrivals::new(p.num_ports(), params, 97);
+        let mut pol = Fairness::new();
+        pol.reset(&p);
+        let mut leader = ShardedLeader::new(&p, 2);
+        let out = run_pipeline(&mut leader, &mut pol, &mut arr, horizon, mode);
+        (out.result.records.clone(), arr.queue().pushed(), arr.queue().dropped())
+    };
+    let (lock, lock_pushed, lock_dropped) = run(PipelineMode::Lockstep);
+    let (over, over_pushed, over_dropped) = run(PipelineMode::Overlapped);
+    assert_eq!(over, lock, "tiny-capacity records diverged across modes");
+    assert_eq!(over_pushed, lock_pushed, "pushed counters diverged across modes");
+    assert!(lock_pushed >= (horizon as u64) * 8, "batches must flow through the lane");
+    assert_eq!((lock_dropped, over_dropped), (0, 0), "lossless refill must never drop");
+}

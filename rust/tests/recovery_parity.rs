@@ -31,6 +31,7 @@ use ogasched::schedulers::{
 use ogasched::sim::arrivals::Bernoulli;
 use ogasched::sim::checkpoint::{run_resilient, ResilientOutcome};
 use ogasched::sim::faults::{run_churned, ChurnOutcome, ExecFaultPlan, FaultPlan};
+use ogasched::sim::ingest::{StreamArrivals, StreamParams};
 use ogasched::utils::prop::{check_seeded, ensure, Size};
 use ogasched::utils::rng::Rng;
 use ogasched::ExecBudget;
@@ -330,6 +331,53 @@ fn kill_storm_without_epochs_replays_from_slot_zero() {
         assert_eq!(out.kills, 3);
         assert_eq!(out.restored_from, vec![0, 0, 0]);
         compare(&format!("kill-storm shards={shards}"), &out.churn, &reference).unwrap();
+    }
+}
+
+#[test]
+fn kills_mid_batch_resume_the_ingest_stream_bitwise() {
+    // §SPerf-9 satellite: with the streaming-ingest arrival model,
+    // every checkpoint drains the in-flight lane into the batcher
+    // before freezing (shutdown drain hook + `ingest_checkpoint`), so
+    // a kill taken mid-batch — the burst (13) never divides the batch
+    // shape (8), leaving stranded events at every boundary — thaws the
+    // v2 ingest cursor/batch-state section and resumes bitwise, under
+    // churn and at every worker budget.
+    let mut rng = Rng::new(fault_base_seed() ^ 0x1497);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 33;
+    let cfg = churny(21);
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    let params = StreamParams { batch_events: 8, burst: 13, ..StreamParams::default() };
+    let reference = {
+        let (_, mut pol) = make_policy(&p, 0, 3);
+        pol.reset(&p);
+        let mut arr = StreamArrivals::new(p.num_ports(), params, 555);
+        run_churned(&p, pol.as_mut(), &mut arr, horizon, 1, &plan, &cfg, false).unwrap()
+    };
+    for &shards in &SHARD_COUNTS {
+        let rcfg = RecoveryConfig {
+            checkpoint_epoch: 3,
+            kill_rate: 0.12,
+            ckpt_fail_rate: 0.1,
+            seed: 91 + shards as u64,
+            ..RecoveryConfig::default()
+        };
+        let exec = ExecFaultPlan::generate(horizon, shards, &rcfg);
+        let (_, mut pol) = make_policy(&p, 0, 3);
+        pol.reset(&p);
+        let mut arr = StreamArrivals::new(p.num_ports(), params, 555);
+        let out = run_resilient(
+            &p, pol.as_mut(), &mut arr, horizon, shards, &plan, &cfg, false, &rcfg, &exec,
+        )
+        .unwrap();
+        assert_eq!(out.kills, exec.kills.len(), "ingest shards={shards}: kills not taken");
+        assert!(out.checkpoints_written > 0, "ingest shards={shards}: nothing frozen");
+        compare(&format!("ingest-resilient shards={shards}"), &out.churn, &reference)
+            .unwrap();
+        // lossless cursor: every event the stream generated was either
+        // batched out through `next` or parked in checkpointable state
+        assert_eq!(arr.queue().dropped(), 0, "ingest shards={shards}: stream dropped");
     }
 }
 

@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Validate BENCH_throughput.json (EXPERIMENTS.md §SPerf-9).
+
+CI runs a smoke `ogasched serve --slots ... --batch-shapes A,B` and
+feeds the file it writes through this script:
+
+  check_throughput.py BENCH_throughput.json [--measured]
+
+Checks, matching the schema `cmd_serve` (rust/src/main.rs) emits and
+`scripts/perf_proxy.py::write_throughput_json` mirrors:
+
+  * top-level keys: bench == "throughput", a non-empty provenance
+    string, policy, slots > 0, shards >= 1, backpressure bool, runs[];
+  * every run row carries mode/batch_events/slots/elapsed_secs/
+    slots_per_sec/events_per_sec/events_total/batches_total/dropped/
+    backpressure_waits and a slot_ns object with count/p50/p99/max,
+    with the right JSON types and p50 <= p99 <= max;
+  * both pipeline modes are present, at >= 2 batch shapes, and every
+    (mode, batch_events) pair appears exactly once;
+  * per row: batches_total == slots, events_total >= slots *
+    batch_events (the stream forms full batches; the refill may push
+    ahead), and the throughput fields are positive;
+  * lockstep and overlapped rows at the same batch shape agree on
+    events_total — the bitwise pipeline-parity contract seen through
+    the integer counters;
+  * with --measured (the CI smoke path): provenance starts with
+    "measured" and every slot_ns histogram has count == slots and a
+    positive p50 — the latencies really came from the obs registry.
+
+Exits non-zero with a message on the first violation.
+"""
+
+import json
+import sys
+
+RUN_FIELDS = {
+    "mode": str,
+    "batch_events": int,
+    "slots": int,
+    "elapsed_secs": (int, float),
+    "slots_per_sec": (int, float),
+    "events_per_sec": (int, float),
+    "events_total": int,
+    "batches_total": int,
+    "dropped": int,
+    "backpressure_waits": int,
+    "slot_ns": dict,
+}
+
+SLOT_NS_FIELDS = ("count", "p50", "p99", "max")
+
+
+def fail(msg):
+    print(f"check_throughput: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path, measured):
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path}: not JSON: {e}")
+    if doc.get("bench") != "throughput":
+        fail(f"{path}: bench is {doc.get('bench')!r}, not 'throughput'")
+    provenance = doc.get("provenance")
+    if not isinstance(provenance, str) or not provenance:
+        fail(f"{path}: missing provenance string")
+    if measured and not provenance.startswith("measured"):
+        fail(f"{path}: --measured run has provenance {provenance[:40]!r}...")
+    if not isinstance(doc.get("policy"), str):
+        fail(f"{path}: missing policy")
+    slots = doc.get("slots")
+    if not isinstance(slots, int) or slots <= 0:
+        fail(f"{path}: slots must be a positive integer, got {slots!r}")
+    if not isinstance(doc.get("shards"), int) or doc["shards"] < 1:
+        fail(f"{path}: shards must be an integer >= 1")
+    if not isinstance(doc.get("backpressure"), bool):
+        fail(f"{path}: backpressure must be a bool")
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or not runs:
+        fail(f"{path}: runs missing or empty")
+
+    seen = set()
+    by_shape = {}
+    for i, run in enumerate(runs):
+        ctx = f"{path}: runs[{i}]"
+        if not isinstance(run, dict):
+            fail(f"{ctx}: not an object")
+        for field, ty in RUN_FIELDS.items():
+            if field not in run:
+                fail(f"{ctx}: missing {field!r}")
+            if not isinstance(run[field], ty) or isinstance(run[field], bool):
+                fail(f"{ctx}: {field} has type {type(run[field]).__name__}")
+        if run["mode"] not in ("lockstep", "overlapped"):
+            fail(f"{ctx}: unknown mode {run['mode']!r}")
+        key = (run["mode"], run["batch_events"])
+        if key in seen:
+            fail(f"{ctx}: duplicate (mode, batch_events) {key}")
+        seen.add(key)
+        if run["slots"] != slots:
+            fail(f"{ctx}: slots {run['slots']} != top-level {slots}")
+        if run["batch_events"] <= 0:
+            fail(f"{ctx}: batch_events must be positive")
+        for field in ("elapsed_secs", "slots_per_sec", "events_per_sec"):
+            if run[field] <= 0:
+                fail(f"{ctx}: {field} must be positive, got {run[field]}")
+        if run["batches_total"] != slots:
+            fail(f"{ctx}: batches_total {run['batches_total']} != slots {slots}")
+        if run["events_total"] < slots * run["batch_events"]:
+            fail(f"{ctx}: events_total {run['events_total']} below "
+                 f"slots * batch_events = {slots * run['batch_events']}")
+        if run["dropped"] < 0 or run["backpressure_waits"] < 0:
+            fail(f"{ctx}: negative queue counters")
+        sn = run["slot_ns"]
+        for field in SLOT_NS_FIELDS:
+            if not isinstance(sn.get(field), int) or isinstance(sn.get(field), bool):
+                fail(f"{ctx}: slot_ns.{field} must be an integer, got "
+                     f"{sn.get(field)!r}")
+        if not sn["p50"] <= sn["p99"] <= sn["max"]:
+            fail(f"{ctx}: slot_ns quantiles out of order: {sn}")
+        if measured:
+            if sn["count"] != slots:
+                fail(f"{ctx}: measured slot_ns.count {sn['count']} != {slots} "
+                     "(histogram not reset per run?)")
+            if sn["p50"] <= 0:
+                fail(f"{ctx}: measured p50 must be positive")
+        by_shape.setdefault(run["batch_events"], {})[run["mode"]] = run
+
+    shapes = sorted(by_shape)
+    if len(shapes) < 2:
+        fail(f"{path}: need >= 2 batch shapes, got {shapes}")
+    for shape, modes in by_shape.items():
+        missing = {"lockstep", "overlapped"} - modes.keys()
+        if missing:
+            fail(f"{path}: batch_events={shape} missing modes {sorted(missing)}")
+        lock, over = modes["lockstep"], modes["overlapped"]
+        if lock["events_total"] != over["events_total"]:
+            fail(f"{path}: batch_events={shape}: events_total diverged across "
+                 f"modes ({lock['events_total']} vs {over['events_total']}) — "
+                 "pipeline parity violated")
+    print(f"check_throughput: {path}: OK ({len(runs)} runs, "
+          f"shapes {shapes}, slots {slots})")
+
+
+def main():
+    argv = sys.argv[1:]
+    measured = "--measured" in argv
+    argv = [a for a in argv if a != "--measured"]
+    if len(argv) != 1:
+        fail("usage: check_throughput.py <BENCH_throughput.json> [--measured]")
+    check(argv[0], measured)
+    print("check_throughput: PASS")
+
+
+if __name__ == "__main__":
+    main()
