@@ -572,6 +572,84 @@ fn main() {
         }
     }
 
+    // ---- §SStore: durable checkpoint chain — persist + fallback thaw ----
+    // The freeze+persist pair first: the same epoch-5 resilient run
+    // with the chain held in memory vs persisted to disk (write-temp +
+    // flush + atomic rename per blob; a fresh directory per iteration).
+    // Then the recovery walk: one kill late in the run against a chain
+    // whose newest {0, 1, 3} blobs are torn — the fallback rows
+    // additionally pay the rejected CRC walks plus the longer replay
+    // from the older restore point.  All rows are bitwise-equal to the
+    // uninterrupted run by the §SStore parity contract.
+    {
+        use ogasched::config::{FaultConfig, RecoveryConfig};
+        use ogasched::sim::checkpoint::run_resilient_with_store;
+        use ogasched::sim::faults::{ExecFaultPlan, FaultPlan};
+        use ogasched::sim::store::BlobStore;
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        let mut scenario = Scenario::default();
+        scenario.horizon = 50;
+        let p = synthesize(&scenario);
+        let fcfg = FaultConfig::default();
+        let plan = FaultPlan::for_problem(&p, scenario.horizon, &fcfg);
+        let rcfg = RecoveryConfig {
+            checkpoint_epoch: 5,
+            chain_depth: 5,
+            ..RecoveryConfig::default()
+        };
+        let run = |store: &mut BlobStore, exec: &ExecFaultPlan| {
+            let mut pol =
+                OgaSched::new(&p, scenario.eta0, scenario.decay, ExecBudget::auto());
+            pol.reset(&p);
+            let mut arr = Bernoulli::uniform(
+                p.num_ports(),
+                scenario.arrival_prob,
+                scenario.seed ^ 0xA5A5,
+            );
+            std::hint::black_box(
+                run_resilient_with_store(
+                    &p, &mut pol, &mut arr, scenario.horizon, 1, &plan, &fcfg, false,
+                    &rcfg, exec, store,
+                )
+                .expect("sstore bench"),
+            );
+        };
+        let quiet = ExecFaultPlan::default();
+        rep.record(time_fn("sstore freeze+put mem h50 epoch5 default 10x128x6", 1, 5, || {
+            let mut store = BlobStore::memory(rcfg.chain_depth);
+            run(&mut store, &quiet);
+        }));
+        let root = std::env::temp_dir()
+            .join(format!("ogasched-sstore-bench-{}", std::process::id()));
+        let iter = AtomicU64::new(0);
+        rep.record(time_fn("sstore freeze+put disk h50 epoch5 default 10x128x6", 1, 5, || {
+            let dir = root.join(format!("i{}", iter.fetch_add(1, Ordering::Relaxed)));
+            let mut store = BlobStore::open(&dir, rcfg.chain_depth).expect("open store");
+            run(&mut store, &quiet);
+        }));
+        let _ = std::fs::remove_dir_all(&root);
+        for (label, torn) in [
+            ("valid", &[][..]),
+            ("fallback1", &[40u64][..]),
+            ("fallback3", &[30u64, 35, 40][..]),
+        ] {
+            let mut exec = ExecFaultPlan { kills: vec![41], ..ExecFaultPlan::default() };
+            for &s in torn {
+                exec.torn_writes.insert(s, 0xBEEF + s);
+            }
+            rep.record(time_fn(
+                &format!("sstore thaw {label} h50 epoch5 default 10x128x6"),
+                1,
+                5,
+                || {
+                    let mut store = BlobStore::memory(rcfg.chain_depth);
+                    run(&mut store, &exec);
+                },
+            ));
+        }
+    }
+
     // ---- §SPerf-9: streaming ingest + overlapped slot pipeline ----
     // Queue-op floor first (push + ticketed k-way-merge pop per event,
     // single producer), then the full streaming slot, then the

@@ -104,6 +104,15 @@ COMMANDS:
                                      replay from the start)
                --exec-panic-rate F --exec-stall-rate F --exec-stall-ms N
                --exec-kill-rate F --ckpt-fail-rate F --exec-fault-seed N
+               durable self-verifying checkpoint store (PLCK v3 blobs in a
+               chain; recovery skips corrupt blobs and falls back):
+               --chain-depth N       blobs retained per store (>= 1; the
+                                     genesis blob is always pinned)
+               --store-dir PATH      persist the chain on disk via
+                                     write-temp + flush + atomic rename
+                                     (default: in-memory store)
+               storage fault injection (deterministic per (slot, seed)):
+               --torn-write-rate F --bit-flip-rate F --lost-rename-rate F
                observability (slot-phase spans + metrics; bitwise-inert):
                --obs <off|summary|trace>  summary prints the metric table
                                      after the run; trace also writes
@@ -138,6 +147,8 @@ EXAMPLES:
     ogasched run --policy ogasched-hlo --horizon 500
     ogasched run --fault-instance-rate 0.02 --fault-recover-rate 0.2 --horizon 500
     ogasched run --checkpoint-epoch 20 --exec-kill-rate 0.01 --horizon 500
+    ogasched run --checkpoint-epoch 10 --exec-kill-rate 0.01 --chain-depth 3 \
+        --torn-write-rate 0.05 --bit-flip-rate 0.05 --horizon 500
     ogasched serve --slots 200 --batch-shapes 16,64 --backpressure on
 ";
 

@@ -127,6 +127,21 @@ pub struct RecoveryConfig {
     pub ckpt_fail_rate: f64,
     /// Injected stall duration in milliseconds.
     pub stall_ms: u64,
+    /// Checkpoint-chain retention depth (§SStore): the blob store keeps
+    /// the newest this-many blobs, plus the epoch-0 genesis blob and
+    /// the newest *verifying* blob, so fallback thaw always has a valid
+    /// floor to land on.  Must be ≥ 1; 1 reproduces the single-blob
+    /// semantics of the pre-chain driver.
+    pub chain_depth: usize,
+    /// Per-slot probability that a checkpoint write at that slot is
+    /// torn: only a seeded prefix of the blob's bytes is persisted.
+    pub torn_write_rate: f64,
+    /// Per-slot probability that one seeded bit of the persisted blob
+    /// is flipped.
+    pub bit_flip_rate: f64,
+    /// Per-slot probability that the blob's atomic rename is lost: the
+    /// temp file is written and synced but never enters the chain.
+    pub lost_rename_rate: f64,
     /// Seed of the execution-fault stream (independent of both the
     /// workload seed and the topology-fault seed).
     pub seed: u64,
@@ -141,6 +156,10 @@ impl Default for RecoveryConfig {
             kill_rate: 0.0,
             ckpt_fail_rate: 0.0,
             stall_ms: 20,
+            chain_depth: 1,
+            torn_write_rate: 0.0,
+            bit_flip_rate: 0.0,
+            lost_rename_rate: 0.0,
             seed: 101,
         }
     }
@@ -161,10 +180,16 @@ impl RecoveryConfig {
             ("recovery.stall_rate", self.stall_rate),
             ("recovery.kill_rate", self.kill_rate),
             ("recovery.ckpt_fail_rate", self.ckpt_fail_rate),
+            ("recovery.torn_write_rate", self.torn_write_rate),
+            ("recovery.bit_flip_rate", self.bit_flip_rate),
+            ("recovery.lost_rename_rate", self.lost_rename_rate),
         ] {
             if !(0.0..=1.0).contains(&v) {
                 return Err(format!("{name} {v} outside [0,1]"));
             }
+        }
+        if self.chain_depth == 0 {
+            return Err("recovery.chain_depth must be > 0".into());
         }
         // kill_rate with checkpoint_epoch == 0 is legal: the driver
         // always holds the implicit slot-0 snapshot, so a kill replays
@@ -290,6 +315,11 @@ pub struct Scenario {
     pub faults: FaultConfig,
     /// Crash-resilience knobs (`[recovery]`; off by default).
     pub recovery: RecoveryConfig,
+    /// On-disk checkpoint store directory (`recovery.store_dir`); when
+    /// unset the resilient driver keeps its blob chain in memory.  A
+    /// sibling of `recovery` rather than a member so `RecoveryConfig`
+    /// stays `Copy` for the struct-update construction idiom.
+    pub store_dir: Option<String>,
     /// Observability level (`[obs]`; off by default).
     pub obs: ObsConfig,
     /// Streaming-ingest knobs (`[ingest]`; off by default).
@@ -320,6 +350,7 @@ impl Default for Scenario {
             parallel: ExecBudget::auto(),
             faults: FaultConfig::default(),
             recovery: RecoveryConfig::default(),
+            store_dir: None,
             obs: ObsConfig::default(),
             ingest: IngestConfig::default(),
         }
@@ -414,7 +445,10 @@ impl Scenario {
             "faults.replan_threshold", "faults.seed",
             "recovery.checkpoint_epoch", "recovery.panic_rate",
             "recovery.stall_rate", "recovery.kill_rate",
-            "recovery.ckpt_fail_rate", "recovery.stall_ms", "recovery.seed",
+            "recovery.ckpt_fail_rate", "recovery.stall_ms",
+            "recovery.chain_depth", "recovery.store_dir",
+            "recovery.torn_write_rate", "recovery.bit_flip_rate",
+            "recovery.lost_rename_rate", "recovery.seed",
             "obs.level",
             "ingest.enabled", "ingest.capacity", "ingest.batch_events",
             "ingest.burst", "ingest.backpressure", "ingest.ewma_alpha",
@@ -474,7 +508,15 @@ impl Scenario {
             kill_rate: doc.f64_or("recovery.kill_rate", dr.kill_rate)?,
             ckpt_fail_rate: doc.f64_or("recovery.ckpt_fail_rate", dr.ckpt_fail_rate)?,
             stall_ms: doc.usize_or("recovery.stall_ms", dr.stall_ms as usize)? as u64,
+            chain_depth: doc.usize_or("recovery.chain_depth", dr.chain_depth)?,
+            torn_write_rate: doc.f64_or("recovery.torn_write_rate", dr.torn_write_rate)?,
+            bit_flip_rate: doc.f64_or("recovery.bit_flip_rate", dr.bit_flip_rate)?,
+            lost_rename_rate: doc.f64_or("recovery.lost_rename_rate", dr.lost_rename_rate)?,
             seed: doc.usize_or("recovery.seed", dr.seed as usize)? as u64,
+        };
+        let store_dir = match doc.get("recovery.store_dir") {
+            None => None,
+            Some(_) => Some(doc.str_or("recovery.store_dir", "")?.to_string()),
         };
         let obs = ObsConfig {
             level: ObsLevel::parse(doc.str_or("obs.level", d.obs.level.name())?)
@@ -516,6 +558,7 @@ impl Scenario {
             },
             faults,
             recovery,
+            store_dir,
             obs,
             ingest,
         };
@@ -632,8 +675,34 @@ mod tests {
         assert_eq!(s.recovery.stall_ms, 15);
         assert_eq!(s.recovery.seed, 4);
         assert_eq!(s.recovery.stall_rate, RecoveryConfig::default().stall_rate);
+        // §SStore knobs default off / in-memory
+        assert_eq!(s.recovery.chain_depth, 1);
+        assert_eq!(s.recovery.torn_write_rate, 0.0);
+        assert_eq!(s.recovery.bit_flip_rate, 0.0);
+        assert_eq!(s.recovery.lost_rename_rate, 0.0);
+        assert_eq!(s.store_dir, None);
         assert!(Scenario::from_toml("[recovery]\npanic_rate = 2.0\n").is_err());
         assert!(Scenario::from_toml("[recovery]\nepoch = 5\n").is_err());
+    }
+
+    #[test]
+    fn recovery_storage_knobs_parse_and_validate() {
+        let s = Scenario::from_toml(
+            "[recovery]\ncheckpoint_epoch = 5\nchain_depth = 3\n\
+             store_dir = \"/tmp/ogasched-ckpts\"\ntorn_write_rate = 0.1\n\
+             bit_flip_rate = 0.05\nlost_rename_rate = 0.02\n",
+        )
+        .unwrap();
+        assert_eq!(s.recovery.chain_depth, 3);
+        assert_eq!(s.recovery.torn_write_rate, 0.1);
+        assert_eq!(s.recovery.bit_flip_rate, 0.05);
+        assert_eq!(s.recovery.lost_rename_rate, 0.02);
+        assert_eq!(s.store_dir.as_deref(), Some("/tmp/ogasched-ckpts"));
+        // bad values fail loudly
+        assert!(Scenario::from_toml("[recovery]\nchain_depth = 0\n").is_err());
+        assert!(Scenario::from_toml("[recovery]\ntorn_write_rate = 1.5\n").is_err());
+        assert!(Scenario::from_toml("[recovery]\nbit_flip_rate = -0.1\n").is_err());
+        assert!(Scenario::from_toml("[recovery]\nlost_rename_rate = 2.0\n").is_err());
     }
 
     #[test]

@@ -1095,7 +1095,7 @@ mod tests {
         for ledger in &ledgers {
             let mut w = crate::utils::codec::Writer::new();
             ledger.snapshot(&mut w);
-            let bytes = w.into_bytes();
+            let bytes = w.finish();
             let mut r = crate::utils::codec::Reader::new(&bytes).unwrap();
             let back = ShardLedger::restore(&p, &mut r).unwrap();
             r.finish().unwrap();

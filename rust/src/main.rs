@@ -96,6 +96,16 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     s.recovery.ckpt_fail_rate = args.opt_f64("ckpt-fail-rate", s.recovery.ckpt_fail_rate)?;
     s.recovery.stall_ms = args.opt_usize("exec-stall-ms", s.recovery.stall_ms as usize)? as u64;
     s.recovery.seed = args.opt_usize("exec-fault-seed", s.recovery.seed as usize)? as u64;
+    // Checkpoint-store knobs (§SStore): chain retention, optional disk
+    // backing, and the storage-fault stream.
+    s.recovery.chain_depth = args.opt_usize("chain-depth", s.recovery.chain_depth)?;
+    s.recovery.torn_write_rate = args.opt_f64("torn-write-rate", s.recovery.torn_write_rate)?;
+    s.recovery.bit_flip_rate = args.opt_f64("bit-flip-rate", s.recovery.bit_flip_rate)?;
+    s.recovery.lost_rename_rate =
+        args.opt_f64("lost-rename-rate", s.recovery.lost_rename_rate)?;
+    if let Some(dir) = args.opt("store-dir") {
+        s.store_dir = Some(dir.to_string());
+    }
     // Observability level (§Obs): bitwise-inert by contract, so it can be
     // toggled per-invocation without invalidating any parity baseline.
     if let Some(v) = args.opt("obs") {
@@ -183,7 +193,8 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         println!(
             "policy={} T={} avg_reward={:.3} cumulative={:.1} throughput={:.0} slots/s \
              churn: events={} editions={} replans={} \
-             recover: ckpts={} (+{} dropped) kills={} restored_from={:?} worker_faults={} arm={}",
+             recover: ckpts={} ({} rewrites, +{} dropped) kills={} restored_from={:?} \
+             worker_faults={} blobs_rejected={} thaw_fallbacks={} arm={}",
             out.churn.result.policy,
             s.horizon,
             out.churn.result.avg_reward(),
@@ -193,10 +204,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             out.churn.editions,
             out.churn.replans,
             out.checkpoints_written,
+            out.checkpoints_rewritten,
             out.checkpoints_failed,
             out.kills,
             out.restored_from,
             out.worker_faults,
+            out.blobs_rejected,
+            out.thaw_fallbacks,
             if rebuild { "rebuild" } else { "incremental" },
         );
         return obs_finish(&s);

@@ -148,10 +148,16 @@ pub enum SpanKind {
     IngestDrop = 17,
     /// Instant: the batcher completed a slot batch.
     BatchFormed = 18,
+    /// Instant: a chain blob failed PLCK verification during a
+    /// recovery walk and was skipped (§SStore).
+    BlobRejected = 19,
+    /// Instant: a recovery fell back past rejected blob(s) to an older
+    /// checkpoint (§SStore); `gen` carries the rejected count.
+    ThawFallback = 20,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 19] = [
+    pub const ALL: [SpanKind; 21] = [
         SpanKind::Slot,
         SpanKind::Decide,
         SpanKind::Commit,
@@ -171,6 +177,8 @@ impl SpanKind {
         SpanKind::KillTaken,
         SpanKind::IngestDrop,
         SpanKind::BatchFormed,
+        SpanKind::BlobRejected,
+        SpanKind::ThawFallback,
     ];
 
     pub fn name(self) -> &'static str {
@@ -194,6 +202,8 @@ impl SpanKind {
             SpanKind::KillTaken => "recover.kill",
             SpanKind::IngestDrop => "ingest.drop",
             SpanKind::BatchFormed => "ingest.batch",
+            SpanKind::BlobRejected => "store.blob_rejected",
+            SpanKind::ThawFallback => "recover.thaw_fallback",
         }
     }
 
@@ -364,8 +374,12 @@ mod tests {
         assert_eq!(SpanKind::KillTaken as u8, 16);
         assert_eq!(SpanKind::IngestDrop as u8, 17);
         assert_eq!(SpanKind::BatchFormed as u8, 18);
+        assert_eq!(SpanKind::BlobRejected as u8, 19);
+        assert_eq!(SpanKind::ThawFallback as u8, 20);
         assert!(SpanKind::IngestDrop.is_instant());
         assert!(SpanKind::BatchFormed.is_instant());
+        assert!(SpanKind::BlobRejected.is_instant());
+        assert!(SpanKind::ThawFallback.is_instant());
     }
 
     #[test]

@@ -430,7 +430,7 @@ mod tests {
             }
             let mut w = crate::utils::codec::Writer::new();
             live.snapshot(&mut w);
-            let bytes = w.into_bytes();
+            let bytes = w.finish();
             let mut r = crate::utils::codec::Reader::new(&bytes).unwrap();
             fresh.restore(&mut r).unwrap();
             r.finish().unwrap();

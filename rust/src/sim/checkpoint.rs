@@ -3,15 +3,37 @@
 //!
 //! A [`Checkpoint`] is a self-contained binary snapshot (`utils::codec`
 //! framing — magic, version, bounds-checked sections, `f64::to_bits`
-//! floats) of everything a churned run needs to continue mid-horizon:
-//! the driver cursor and fault-stream position, the concatenated slot
-//! records and reward accumulators, the liveness masks, the cluster
-//! ledger, the policy's learned state (via [`Policy::snapshot_state`]),
-//! the arrival model's RNG stream position, — on the sharded path —
-//! the instance→shard ownership map plus the per-shard worker ledgers,
-//! and (blob v2, streaming models only) the drained ingest
-//! cursor/batch-state section of `sim::ingest` so a kill mid-batch
-//! resumes bitwise.
+//! floats) of everything a churned run needs to continue mid-horizon.
+//! **Blob v3** (§SStore) frames that state as named, CRC-tagged
+//! sections plus a whole-blob trailer checksum, in this order:
+//!
+//! | section    | payload |
+//! |------------|---------|
+//! | `driver`   | cursor, fault-stream position, edition/replan/event counters, policy name, reward accumulators |
+//! | `records`  | the concatenated [`SlotRecord`]s |
+//! | `masks`    | failed / departed / active liveness masks |
+//! | `ledger`   | the cluster ledger (`ClusterState::snapshot`) |
+//! | `policy`   | the policy's learned state ([`Policy::snapshot_state`]) |
+//! | `arrivals` | the arrival model's RNG stream position |
+//! | `shards`   | (sharded path) instance→shard ownership map + per-shard worker ledgers |
+//! | `ingest`   | (streaming models) the drained ingest cursor/batch state of `sim::ingest`, so a kill mid-batch resumes bitwise |
+//!
+//! The trailer CRC is verified by `Reader::new` *before* any field is
+//! decoded and each section's own CRC before its payload is handed out,
+//! so a truncated, bit-flipped or mis-spliced blob is rejected with a
+//! structured error naming the offending section — never silently
+//! thawed.  Version gate: v1 blobs are rejected, v2 blobs (the flat
+//! pre-§SStore layout, same field order without section frames or
+//! checksums) stay readable, v3 blobs get full verification.
+//!
+//! Blobs are persisted through a [`BlobStore`] chain (`sim::store`):
+//! epoch-numbered atomic-rename puts, `recovery.chain_depth` retention,
+//! and injected storage faults (`ExecFaultPlan::storage_fault_at`).  On
+//! a kill, recovery walks the chain newest→oldest, **skips blobs that
+//! fail verification** (surfaced as `recover.blobs_rejected` /
+//! `recover.thaw_fallbacks`), thaws the newest intact one and replays
+//! forward — bitwise-identical to the uninterrupted run even when every
+//! blob but the slot-0 genesis is corrupt.
 //!
 //! What is deliberately *not* stored: the topology edition itself.  The
 //! incremental churn arm's edge ordering is path-dependent (it is the
@@ -48,8 +70,9 @@ use crate::obs;
 use crate::schedulers::Policy;
 use crate::sim::arrivals::{ArrivalModel, Bernoulli};
 use crate::sim::faults::{ChurnOutcome, ExecFaultPlan, FaultEvent, FaultPlan, Gated};
+use crate::sim::store::BlobStore;
 use crate::traces::synthesize;
-use crate::utils::codec::{Reader, Writer};
+use crate::utils::codec::{self, Reader, Writer};
 
 /// One durable snapshot: the slot boundary it was taken at, plus the
 /// codec blob.  `bytes` is the wire format — hand it to an external
@@ -162,65 +185,77 @@ fn freeze(
     sharded: Option<(&ShardPlan, Option<&[ShardLedger]>)>,
 ) -> Checkpoint {
     let mut w = Writer::new();
-    w.put_u64(cursor as u64);
-    w.put_u64(next_event as u64);
-    w.put_u64(editions as u64);
-    w.put_u64(replans as u64);
-    w.put_u64(events_applied as u64);
-    w.put_str(&result.policy);
-    w.put_f64(result.cumulative_reward);
-    w.put_u64(result.clamped_total as u64);
+    let mut d = Writer::section();
+    d.put_u64(cursor as u64);
+    d.put_u64(next_event as u64);
+    d.put_u64(editions as u64);
+    d.put_u64(replans as u64);
+    d.put_u64(events_applied as u64);
+    d.put_str(&result.policy);
+    d.put_f64(result.cumulative_reward);
+    d.put_u64(result.clamped_total as u64);
     // elapsed wall time is deliberately absent: the blob stays
     // bit-identical across reruns of the same trajectory
-    w.put_usize(result.records.len());
+    w.put_section("driver", &d.into_bytes());
+    let mut rs = Writer::section();
+    rs.put_usize(result.records.len());
     for rec in &result.records {
-        w.put_u64(rec.t as u64);
-        w.put_f64(rec.q);
-        w.put_f64(rec.gain);
-        w.put_f64(rec.penalty);
-        w.put_f64(rec.arrivals);
+        rs.put_u64(rec.t as u64);
+        rs.put_f64(rec.q);
+        rs.put_f64(rec.gain);
+        rs.put_f64(rec.penalty);
+        rs.put_f64(rec.arrivals);
     }
-    w.put_bools(failed);
-    w.put_bools(departed);
-    w.put_bools(active);
-    state.snapshot(&mut w);
+    w.put_section("records", &rs.into_bytes());
+    let mut ms = Writer::section();
+    ms.put_bools(failed);
+    ms.put_bools(departed);
+    ms.put_bools(active);
+    w.put_section("masks", &ms.into_bytes());
+    let mut ls = Writer::section();
+    state.snapshot(&mut ls);
+    w.put_section("ledger", &ls.into_bytes());
     let mut ps = Writer::section();
     policy.snapshot_state(&mut ps);
-    w.put_bytes(&ps.into_bytes());
+    w.put_section("policy", &ps.into_bytes());
     let mut ar = Writer::section();
     arrivals.snapshot(&mut ar);
-    w.put_bytes(&ar.into_bytes());
+    w.put_section("arrivals", &ar.into_bytes());
+    let mut sh = Writer::section();
     match sharded {
-        None => w.put_bool(false),
+        None => sh.put_bool(false),
         Some((plan, ledgers)) => {
-            w.put_bool(true);
-            w.put_usize(plan.num_shards());
+            sh.put_bool(true);
+            sh.put_usize(plan.num_shards());
             let owners: Vec<u64> = plan.owners().iter().map(|&s| s as u64).collect();
-            w.put_u64s(&owners);
+            sh.put_u64s(&owners);
             match ledgers {
-                None => w.put_bool(false),
+                None => sh.put_bool(false),
                 Some(ls) => {
-                    w.put_bool(true);
-                    w.put_usize(ls.len());
+                    sh.put_bool(true);
+                    sh.put_usize(ls.len());
                     for l in ls {
-                        l.snapshot(&mut w);
+                        l.snapshot(&mut sh);
                     }
                 }
             }
         }
     }
-    // Blob v2: streaming-ingest cursor/batch state (§SPerf-9).  The
-    // call *drains* the model's in-flight queue into its batcher first
+    w.put_section("shards", &sh.into_bytes());
+    // Streaming-ingest cursor/batch state (§SPerf-9).  The call
+    // *drains* the model's in-flight queue into its batcher first
     // — the durability contract for mid-batch kills — then serializes
     // the sub-versioned section; non-streaming models write `absent`.
+    let mut ing = Writer::section();
     match arrivals.ingest_checkpoint() {
-        None => w.put_bool(false),
+        None => ing.put_bool(false),
         Some(section) => {
-            w.put_bool(true);
-            w.put_bytes(&section);
+            ing.put_bool(true);
+            ing.put_bytes(&section);
         }
     }
-    Checkpoint { slot: cursor as u64, bytes: w.into_bytes() }
+    w.put_section("ingest", &ing.into_bytes());
+    Checkpoint { slot: cursor as u64, bytes: w.finish() }
 }
 
 /// The decoded half of [`freeze`], ready to be dropped into the
@@ -243,6 +278,28 @@ struct Thawed {
     carry: Option<(Arc<ShardPlan>, Vec<ShardLedger>)>,
 }
 
+/// Decode one logical group of the blob.  A v3 blob frames the group as
+/// a named, CRC-checked section (`get_section` verifies name + checksum
+/// before `f` sees a byte, and `finish` rejects trailing bytes); a v2
+/// blob stores the same fields flat, so `f` reads the outer stream
+/// directly.
+fn in_section<'a, T>(
+    r: &mut Reader<'a>,
+    name: &'static str,
+    v3: bool,
+    f: impl FnOnce(&mut Reader<'a>) -> Result<T, String>,
+) -> Result<T, String> {
+    if v3 {
+        let payload = r.get_section(name)?;
+        let mut sr = Reader::named_section(payload, name);
+        let v = f(&mut sr)?;
+        sr.finish()?;
+        Ok(v)
+    } else {
+        f(r)
+    }
+}
+
 /// Restore a [`Checkpoint`]: decode the blob, replay the graph to the
 /// stored fault-stream position, and rebuild ledger/policy/arrival
 /// state in place.  `policy` and `arrivals` are reset-then-restored —
@@ -260,12 +317,21 @@ fn thaw(
     arrivals: &mut dyn ArrivalModel,
 ) -> Result<Thawed, String> {
     let mut r = Reader::new(&ck.bytes)?;
-    let cursor = r.get_u64()? as usize;
-    let next_event = r.get_u64()? as usize;
-    let editions = r.get_u64()? as usize;
-    let replans = r.get_u64()? as usize;
-    let events_applied = r.get_u64()? as usize;
-    let name = r.get_str()?;
+    let v3 = r.version() >= 3;
+    #[allow(clippy::type_complexity)]
+    let (cursor, next_event, editions, replans, events_applied, name, cumulative_reward, clamped_total): (usize, usize, usize, usize, usize, String, f64, usize) =
+        in_section(&mut r, "driver", v3, |r| {
+            Ok((
+                r.get_u64()? as usize,
+                r.get_u64()? as usize,
+                r.get_u64()? as usize,
+                r.get_u64()? as usize,
+                r.get_u64()? as usize,
+                r.get_str()?,
+                r.get_f64()?,
+                r.get_u64()? as usize,
+            ))
+        })?;
     if name != policy.name() {
         return Err(format!(
             "checkpoint policy mismatch: blob has {name:?}, resuming {:?}",
@@ -278,27 +344,28 @@ fn thaw(
             plan.events().len()
         ));
     }
-    let cumulative_reward = r.get_f64()?;
-    let clamped_total = r.get_u64()? as usize;
-    let n_rec = r.get_usize()?;
-    if n_rec != cursor {
-        return Err(format!(
-            "checkpoint has {n_rec} slot records for cursor {cursor}"
-        ));
-    }
-    let mut records = Vec::with_capacity(n_rec);
-    for _ in 0..n_rec {
-        records.push(SlotRecord {
-            t: r.get_u64()? as usize,
-            q: r.get_f64()?,
-            gain: r.get_f64()?,
-            penalty: r.get_f64()?,
-            arrivals: r.get_f64()?,
-        });
-    }
-    let failed = r.get_bools()?;
-    let departed = r.get_bools()?;
-    let active = r.get_bools()?;
+    let records = in_section(&mut r, "records", v3, |r| {
+        let n_rec = r.get_usize()?;
+        if n_rec != cursor {
+            return Err(format!(
+                "checkpoint has {n_rec} slot records for cursor {cursor}"
+            ));
+        }
+        let mut records = Vec::with_capacity(n_rec);
+        for _ in 0..n_rec {
+            records.push(SlotRecord {
+                t: r.get_u64()? as usize,
+                q: r.get_f64()?,
+                gain: r.get_f64()?,
+                penalty: r.get_f64()?,
+                arrivals: r.get_f64()?,
+            });
+        }
+        Ok(records)
+    })?;
+    let (failed, departed, active) = in_section(&mut r, "masks", v3, |r| {
+        Ok((r.get_bools()?, r.get_bools()?, r.get_bools()?))
+    })?;
     if failed.len() != base.num_instances()
         || departed.len() != base.num_ports()
         || active.len() != base.num_ports()
@@ -306,53 +373,61 @@ fn thaw(
         return Err("checkpoint liveness masks do not match the problem".into());
     }
     let problem = replay_graph(base, e0, &plan.events()[..next_event], rebuild)?;
-    let state = ClusterState::restore(&problem, &mut r)?;
-    let pbytes = r.get_bytes()?;
+    let state = in_section(&mut r, "ledger", v3, |r| {
+        Ok(ClusterState::restore(&problem, r)?)
+    })?;
+    let pbytes = if v3 { r.get_section("policy")?.to_vec() } else { r.get_bytes()? };
     policy.reset(&problem);
-    let mut pr = Reader::section(&pbytes);
+    let mut pr = Reader::named_section(&pbytes, "policy");
     policy.restore_state(&problem, &mut pr)?;
     pr.finish()
         .map_err(|e| format!("policy snapshot section: {e}"))?;
-    let abytes = r.get_bytes()?;
-    let mut ar = Reader::section(&abytes);
+    let abytes = if v3 { r.get_section("arrivals")?.to_vec() } else { r.get_bytes()? };
+    let mut ar = Reader::named_section(&abytes, "arrivals");
     arrivals.restore(&mut ar)?;
     ar.finish()
         .map_err(|e| format!("arrival snapshot section: {e}"))?;
-    let (plan_arc, carry) = if r.get_bool()? {
-        let num_shards = r.get_usize()?;
-        let owners64 = r.get_u64s()?;
-        let mut owners = Vec::with_capacity(owners64.len());
-        for o in owners64 {
-            owners.push(
-                u32::try_from(o).map_err(|_| format!("checkpoint owner {o} overflows u32"))?,
-            );
-        }
-        let plan_arc = Arc::new(ShardPlan::with_owners(&problem, num_shards, owners)?);
-        let carry = if r.get_bool()? {
-            let n = r.get_usize()?;
-            if n != num_shards {
-                return Err(format!(
-                    "checkpoint has {n} shard ledgers for {num_shards} shards"
-                ));
+    let (plan_arc, carry) = in_section(&mut r, "shards", v3, |r| {
+        if r.get_bool()? {
+            let num_shards = r.get_usize()?;
+            let owners64 = r.get_u64s()?;
+            let mut owners = Vec::with_capacity(owners64.len());
+            for o in owners64 {
+                owners.push(
+                    u32::try_from(o)
+                        .map_err(|_| format!("checkpoint owner {o} overflows u32"))?,
+                );
             }
-            let mut ledgers = Vec::with_capacity(n);
-            for _ in 0..n {
-                ledgers.push(ShardLedger::restore(&problem, &mut r)?);
-            }
-            Some((Arc::clone(&plan_arc), ledgers))
+            let plan_arc = Arc::new(ShardPlan::with_owners(&problem, num_shards, owners)?);
+            let carry = if r.get_bool()? {
+                let n = r.get_usize()?;
+                if n != num_shards {
+                    return Err(format!(
+                        "checkpoint has {n} shard ledgers for {num_shards} shards"
+                    ));
+                }
+                let mut ledgers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ledgers.push(ShardLedger::restore(&problem, r)?);
+                }
+                Some((Arc::clone(&plan_arc), ledgers))
+            } else {
+                None
+            };
+            Ok((Some(plan_arc), carry))
         } else {
-            None
-        };
-        (Some(plan_arc), carry)
-    } else {
-        (None, None)
-    };
-    if r.get_bool()? {
-        let ibytes = r.get_bytes()?;
-        arrivals
-            .ingest_restore(&ibytes)
-            .map_err(|e| format!("ingest section: {e}"))?;
-    }
+            Ok((None, None))
+        }
+    })?;
+    in_section(&mut r, "ingest", v3, |r| {
+        if r.get_bool()? {
+            let ibytes = r.get_bytes()?;
+            arrivals
+                .ingest_restore(&ibytes)
+                .map_err(|e| format!("ingest section: {e}"))?;
+        }
+        Ok(())
+    })?;
     r.finish()?;
     Ok(Thawed {
         cursor,
@@ -374,16 +449,20 @@ fn thaw(
 }
 
 /// Outcome of a resilient run: the churned result plus the recovery
-/// telemetry.  NB: `checkpoints_written` counts *writes*, and replayed
-/// stretches re-write the boundaries they pass — after a kill the count
-/// can exceed the number of distinct checkpoint slots (the re-written
-/// blobs are bit-identical to the originals, so durability semantics
-/// are unaffected).
+/// telemetry.  `checkpoints_written` counts *writes*; the
+/// `checkpoints_rewritten` share of it is boundary re-writes during
+/// post-kill replay (bit-identical to the originals, so durability
+/// semantics are unaffected) — `written - rewritten` is the fresh-write
+/// count (`recover.ckpts_fresh` in the obs registry).
 pub struct ResilientOutcome {
     pub churn: ChurnOutcome,
-    /// Checkpoint blobs written (including boundary re-writes on
+    /// Checkpoint blobs written (fresh writes + boundary re-writes on
     /// post-kill replay).
     pub checkpoints_written: usize,
+    /// The subset of `checkpoints_written` that re-wrote a boundary the
+    /// pre-kill run had already passed (replay re-freezes the
+    /// bit-identical blob).
+    pub checkpoints_rewritten: usize,
     /// Checkpoint writes dropped by injected `ckpt_fails`.
     pub checkpoints_failed: usize,
     /// Process kills taken (and recovered from).
@@ -392,6 +471,12 @@ pub struct ResilientOutcome {
     pub restored_from: Vec<u64>,
     /// Injected worker panics/stalls that actually fired.
     pub worker_faults: usize,
+    /// Chain blobs that failed PLCK verification during recovery walks
+    /// (§SStore) — every one of these was rejected, never thawed.
+    pub blobs_rejected: usize,
+    /// Recoveries that had to fall back past at least one rejected blob
+    /// to an older checkpoint.
+    pub thaw_fallbacks: usize,
 }
 
 /// Drive `policy` under *both* fault streams: the topology churn of
@@ -423,6 +508,30 @@ pub fn run_resilient(
     recovery: &RecoveryConfig,
     exec: &ExecFaultPlan,
 ) -> Result<ResilientOutcome, String> {
+    let mut store = BlobStore::memory(recovery.chain_depth.max(1));
+    run_resilient_with_store(
+        base, policy, arrivals, horizon, shards, plan, cfg, rebuild, recovery, exec, &mut store,
+    )
+}
+
+/// [`run_resilient`] against a caller-supplied [`BlobStore`] — the
+/// §SStore entry point.  The store may be disk-backed (durable across
+/// processes) or pre-populated (resuming a previous process's chain);
+/// `run_resilient` itself delegates here with a fresh in-memory chain.
+#[allow(clippy::too_many_arguments)]
+pub fn run_resilient_with_store(
+    base: &Problem,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalModel,
+    horizon: usize,
+    shards: usize,
+    plan: &FaultPlan,
+    cfg: &FaultConfig,
+    rebuild: bool,
+    recovery: &RecoveryConfig,
+    exec: &ExecFaultPlan,
+    store: &mut BlobStore,
+) -> Result<ResilientOutcome, String> {
     let l_n = base.num_ports();
     let r_n = base.num_instances();
     let e0: Vec<(usize, usize)> = (0..base.num_edges())
@@ -451,11 +560,13 @@ pub fn run_resilient(
     let epoch = recovery.checkpoint_epoch;
     let probe = exec.probe();
     let mut kills: VecDeque<u64> = exec.kills.iter().copied().collect();
-    let mut store: Option<Checkpoint> = None;
     let mut checkpoints_written = 0usize;
+    let mut checkpoints_rewritten = 0usize;
     let mut checkpoints_failed = 0usize;
     let mut kills_taken = 0usize;
     let mut restored_from = Vec::new();
+    let mut blobs_rejected = 0usize;
+    let mut thaw_fallbacks = 0usize;
 
     let mut cursor = 0usize;
     let mut next_event = 0usize; // index into plan.events
@@ -473,12 +584,44 @@ pub fn run_resilient(
             obs::registry().counter("recover.kills").inc();
             obs::event(obs::SpanKind::KillTaken, cursor as u64, 0, editions as u32);
             replay_target = replay_target.max(cursor as u64);
-            let ck = store.as_ref().ok_or_else(|| {
-                "process kill precedes the initial checkpoint".to_string()
+            if store.is_empty() {
+                return Err("process kill precedes the initial checkpoint".to_string());
+            }
+            // Fallback thaw (§SStore): walk the chain newest→oldest,
+            // verify each blob's checksums *before* any decode, and
+            // thaw the first intact one.  Damaged blobs are counted and
+            // skipped — never silently decoded (the v3 trailer CRC is
+            // checked ahead of every field read, so a blob that passes
+            // `verify` cannot leave partial state behind either).
+            let mut rejected_here = 0u32;
+            let mut thawed: Option<(u64, Thawed)> = None;
+            for entry in store.chain() {
+                let bytes = store.load(&entry)?;
+                if codec::verify(&bytes).is_err() {
+                    rejected_here += 1;
+                    blobs_rejected += 1;
+                    obs::registry().counter("recover.blobs_rejected").inc();
+                    obs::event(obs::SpanKind::BlobRejected, entry.slot, 0, entry.epoch as u32);
+                    continue;
+                }
+                let ck = Checkpoint { slot: entry.slot, bytes };
+                let th = obs::with_span(obs::SpanKind::CkptThaw, ck.slot, 0, || {
+                    thaw(&ck, base, &e0, plan, rebuild, policy, arrivals)
+                })?;
+                thawed = Some((ck.slot, th));
+                break;
+            }
+            let (slot, th) = thawed.ok_or_else(|| {
+                format!(
+                    "kill at slot {cursor}: all {} checkpoint blobs in the chain failed verification",
+                    store.len()
+                )
             })?;
-            let th = obs::with_span(obs::SpanKind::CkptThaw, ck.slot, 0, || {
-                thaw(ck, base, &e0, plan, rebuild, policy, arrivals)
-            })?;
+            if rejected_here > 0 {
+                thaw_fallbacks += 1;
+                obs::registry().counter("recover.thaw_fallbacks").inc();
+                obs::event(obs::SpanKind::ThawFallback, slot, 0, rejected_here);
+            }
             cursor = th.cursor;
             next_event = th.next_event;
             editions = th.editions;
@@ -494,17 +637,17 @@ pub fn run_resilient(
             state = th.state;
             cur_plan = th.plan;
             carry = th.carry;
-            restored_from.push(ck.slot);
+            restored_from.push(slot);
             continue;
         }
 
         // 2. checkpoint due at this boundary?  Slot 0 is the implicit,
         //    unconditional snapshot; epoch boundaries are skippable by
-        //    injected write failures, and a boundary whose blob is
-        //    already in the store (post-kill replay arriving back at
-        //    the restore point) is not re-written.
+        //    injected write failures, and a boundary whose blob is the
+        //    chain's newest (post-kill replay arriving back at the
+        //    restore point) is not re-written.
         let due = cursor == 0 || (epoch > 0 && cursor % epoch == 0 && cursor < horizon);
-        if due && store.as_ref().map(|c| c.slot) != Some(cursor as u64) {
+        if due && store.newest_slot() != Some(cursor as u64) {
             if cursor > 0 && exec.ckpt_fails.contains(&(cursor as u64)) {
                 checkpoints_failed += 1;
                 obs::registry().counter("recover.ckpts_dropped").inc();
@@ -537,9 +680,17 @@ pub fn run_resilient(
                             .map(|p| (p, carry.as_ref().map(|(_, l)| l.as_slice()))),
                     )
                 });
-                store = Some(ck);
+                store.put(ck.slot, &ck.bytes, exec.storage_fault_at(cursor as u64))?;
                 checkpoints_written += 1;
                 obs::registry().counter("recover.ckpts_written").inc();
+                if (cursor as u64) < replay_target {
+                    // a boundary the pre-kill run had already written:
+                    // replay re-freezes the bit-identical blob
+                    checkpoints_rewritten += 1;
+                    obs::registry().counter("recover.ckpts_rewritten").inc();
+                } else {
+                    obs::registry().counter("recover.ckpts_fresh").inc();
+                }
             }
         }
 
@@ -748,16 +899,21 @@ pub fn run_resilient(
             events: events_applied,
         },
         checkpoints_written,
+        checkpoints_rewritten,
         checkpoints_failed,
         kills: kills_taken,
         restored_from,
         worker_faults: probe.fired_count(),
+        blobs_rejected,
+        thaw_fallbacks,
     })
 }
 
 /// Scenario-level convenience: synthesize the problem, generate both
 /// fault streams from the scenario, and run one policy resiliently with
-/// the scenario's Bernoulli arrivals and shard budget.
+/// the scenario's Bernoulli arrivals and shard budget.  When the
+/// scenario names a `recovery.store_dir` the blob chain is disk-backed
+/// (durable across processes); otherwise it lives in memory.
 pub fn run_resilient_scenario(
     scenario: &Scenario,
     policy: &mut dyn Policy,
@@ -776,7 +932,12 @@ pub fn run_resilient_scenario(
         scenario.seed ^ 0xA5A5,
     );
     policy.reset(&problem);
-    run_resilient(
+    let depth = scenario.recovery.chain_depth.max(1);
+    let mut store = match &scenario.store_dir {
+        Some(dir) => BlobStore::open(std::path::Path::new(dir), depth)?,
+        None => BlobStore::memory(depth),
+    };
+    run_resilient_with_store(
         &problem,
         policy,
         &mut arrivals,
@@ -787,6 +948,7 @@ pub fn run_resilient_scenario(
         rebuild,
         &scenario.recovery,
         &exec,
+        &mut store,
     )
 }
 
@@ -914,6 +1076,11 @@ mod tests {
             let got = resilient(&scenario, &problem, &plan, shards, &recovery, &exec);
             assert_eq!(got.kills, 3);
             assert_eq!(got.restored_from, vec![5, 20, 60]);
+            // every restore lands on the newest boundary, so nothing is
+            // rejected, no fallback happens, and no boundary re-writes
+            assert_eq!(got.blobs_rejected, 0);
+            assert_eq!(got.thaw_fallbacks, 0);
+            assert_eq!(got.checkpoints_rewritten, 0);
             assert_matches(&got, &want, &problem);
         }
     }
@@ -934,9 +1101,47 @@ mod tests {
         let want = baseline(&scenario, &problem, &plan, 1);
         let got = resilient(&scenario, &problem, &plan, 1, &recovery, &exec);
         // 2 drops before the kill + the same 2 boundaries re-dropped on
-        // the post-kill replay (write telemetry double-counts on replay)
+        // the post-kill replay (injected drops re-fire deterministically)
         assert_eq!(got.checkpoints_failed, 4);
         assert_eq!(got.restored_from, vec![0]);
+        // the written/rewritten split: slot 0 once (replay arrives back
+        // at the restore point, which dedups) + the 9 fresh boundaries
+        // 15..=55 — with both pre-kill boundaries dropped, nothing is
+        // ever re-written
+        assert_eq!(got.checkpoints_written, 10);
+        assert_eq!(got.checkpoints_rewritten, 0);
+        assert_matches(&got, &want, &problem);
+    }
+
+    #[test]
+    fn storage_faults_fall_back_along_the_chain_bitwise() {
+        let scenario = small(60);
+        let problem = synthesize(&scenario);
+        let plan = FaultPlan::for_problem(&problem, scenario.horizon, &scenario.faults);
+        let recovery = RecoveryConfig {
+            checkpoint_epoch: 5,
+            chain_depth: 3,
+            ..RecoveryConfig::default()
+        };
+        // the newest blob at the kill is torn: recovery must reject it
+        // and fall back to the intact slot-5 blob, then replay forward
+        let mut exec = ExecFaultPlan { kills: vec![12], ..ExecFaultPlan::default() };
+        exec.torn_writes.insert(10, 0xBEEF);
+        let want = baseline(&scenario, &problem, &plan, 1);
+        let got = resilient(&scenario, &problem, &plan, 1, &recovery, &exec);
+        assert_eq!(got.kills, 1);
+        assert_eq!(
+            got.restored_from,
+            vec![5],
+            "fallback thaw must skip the torn slot-10 blob"
+        );
+        assert_eq!(got.blobs_rejected, 1);
+        assert_eq!(got.thaw_fallbacks, 1);
+        // replay re-writes the slot-5 and slot-10 boundaries (the
+        // latter torn again, deterministically); 12 distinct boundaries
+        // 0..=55 in total
+        assert_eq!(got.checkpoints_written, 14);
+        assert_eq!(got.checkpoints_rewritten, 2);
         assert_matches(&got, &want, &problem);
     }
 
@@ -958,6 +1163,94 @@ mod tests {
         assert_eq!(got.kills, 1);
         assert!(got.worker_faults >= 2, "injected worker faults never fired");
         assert_matches(&got, &want, &problem);
+    }
+
+    fn genesis_edges(problem: &Problem) -> Vec<(usize, usize)> {
+        (0..problem.num_edges())
+            .map(|e| (problem.graph.edge_port[e], problem.graph.edge_instance[e]))
+            .collect()
+    }
+
+    #[test]
+    fn v2_blobs_stay_thawable_behind_the_version_gate() {
+        let scenario = small(10);
+        let problem = synthesize(&scenario);
+        let plan = FaultPlan::from_events(vec![]);
+        let e0 = genesis_edges(&problem);
+        let mut pol = Fairness::new();
+        pol.reset(&problem);
+        let mut arr = Bernoulli::uniform(problem.num_ports(), 0.7, 11);
+        // hand-build the flat v2 layout for the slot-0 state: the same
+        // field order as v3, without section frames or checksums
+        let mut w = Writer::with_version(2);
+        for _ in 0..5 {
+            w.put_u64(0); // cursor, next_event, editions, replans, events_applied
+        }
+        w.put_str(pol.name());
+        w.put_f64(0.0);
+        w.put_u64(0);
+        w.put_usize(0); // no records yet
+        w.put_bools(&vec![false; problem.num_instances()]);
+        w.put_bools(&vec![false; problem.num_ports()]);
+        w.put_bools(&vec![true; problem.num_ports()]);
+        ClusterState::new(&problem).snapshot(&mut w);
+        let mut ps = Writer::section();
+        pol.snapshot_state(&mut ps);
+        w.put_bytes(&ps.into_bytes());
+        let mut ar = Writer::section();
+        arr.snapshot(&mut ar);
+        w.put_bytes(&ar.into_bytes());
+        w.put_bool(false); // not sharded
+        w.put_bool(false); // no ingest section
+        let ck = Checkpoint { slot: 0, bytes: w.into_bytes() };
+        let th = thaw(&ck, &problem, &e0, &plan, false, &mut pol, &mut arr).unwrap();
+        assert_eq!(th.cursor, 0);
+        assert!(th.records.is_empty());
+        // v1 blobs are rejected by the gate
+        let mut w1 = Writer::with_version(1);
+        w1.put_u64(0);
+        let ck1 = Checkpoint { slot: 0, bytes: w1.into_bytes() };
+        assert!(thaw(&ck1, &problem, &e0, &plan, false, &mut pol, &mut arr).is_err());
+    }
+
+    #[test]
+    fn damaged_real_blobs_never_thaw() {
+        let scenario = small(10);
+        let problem = synthesize(&scenario);
+        let plan = FaultPlan::from_events(vec![]);
+        let e0 = genesis_edges(&problem);
+        let mut pol = Fairness::new();
+        pol.reset(&problem);
+        let mut arr = Bernoulli::uniform(problem.num_ports(), 0.7, 11);
+        let result = RunResult { policy: pol.name().to_string(), ..Default::default() };
+        let failed = vec![false; problem.num_instances()];
+        let departed = vec![false; problem.num_ports()];
+        let active = vec![true; problem.num_ports()];
+        let state = ClusterState::new(&problem);
+        let ck = freeze(
+            0, 0, 0, 0, 0, &result, &failed, &departed, &active, &state, &pol, &arr, None,
+        );
+        // the intact v3 blob round-trips
+        thaw(&ck, &problem, &e0, &plan, false, &mut pol, &mut arr).unwrap();
+        // truncated at every byte offset: a structured error, never a
+        // panic or a partially-applied thaw
+        for cut in 0..ck.bytes.len() {
+            let damaged = Checkpoint { slot: 0, bytes: ck.bytes[..cut].to_vec() };
+            assert!(
+                thaw(&damaged, &problem, &e0, &plan, false, &mut pol, &mut arr).is_err(),
+                "truncation at offset {cut} thawed"
+            );
+        }
+        // ... and a bit flip at every byte is caught by the checksums
+        for i in 0..ck.bytes.len() {
+            let mut bytes = ck.bytes.clone();
+            bytes[i] ^= 0x10;
+            let damaged = Checkpoint { slot: 0, bytes };
+            assert!(
+                thaw(&damaged, &problem, &e0, &plan, false, &mut pol, &mut arr).is_err(),
+                "bit flip at offset {i} thawed"
+            );
+        }
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! failed instance, and their surviving coordinates carry over by
 //! `(l, r)` key.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::config::{FaultConfig, RecoveryConfig, Scenario};
@@ -43,6 +43,7 @@ use crate::model::Problem;
 use crate::obs;
 use crate::schedulers::Policy;
 use crate::sim::arrivals::{ArrivalModel, Bernoulli};
+use crate::sim::store::StorageFault;
 use crate::traces::synthesize;
 use crate::utils::pool::ExecProbe;
 use crate::utils::rng::Rng;
@@ -199,6 +200,12 @@ impl FaultPlan {
 /// * **process kills** (`kills`): at the slot boundary the resilient
 ///   driver discards all live state and restores from the last durable
 ///   checkpoint (`sim::checkpoint::run_resilient`).
+/// * **storage faults** (`torn_writes`, `bit_flips`, `lost_renames`,
+///   §SStore): the checkpoint write at that slot reaches the store but
+///   the *persisted* bytes are damaged (truncated / one bit flipped) or
+///   the atomic rename is lost entirely; recovery must detect the
+///   damage via the PLCK v3 checksums and fall back along the chain
+///   (`sim::store::BlobStore`).
 #[derive(Clone, Debug, Default)]
 pub struct ExecFaultPlan {
     /// Worker panics at `(slot, shard)`, one-shot each.
@@ -212,6 +219,15 @@ pub struct ExecFaultPlan {
     pub kills: Vec<u64>,
     /// Injected stall duration (ms).
     pub stall_ms: u64,
+    /// Storage faults (§SStore): checkpoint writes at these slots are
+    /// torn — only the first `seed % len` bytes reach the store.
+    pub torn_writes: BTreeMap<u64, u64>,
+    /// Storage faults: one bit (`seed % (len * 8)`) of the persisted
+    /// blob is flipped.
+    pub bit_flips: BTreeMap<u64, u64>,
+    /// Storage faults: the blob's temp file is written but the rename
+    /// never lands — the chain gains no entry at this slot.
+    pub lost_renames: BTreeSet<u64>,
 }
 
 impl ExecFaultPlan {
@@ -236,8 +252,38 @@ impl ExecFaultPlan {
             if rng.bernoulli(cfg.kill_rate) {
                 plan.kills.push(t);
             }
+            // Storage faults draw *after* the execution categories and
+            // only when their rate is armed, so every pre-§SStore
+            // stream (all storage rates zero) is reproduced bit-exactly
+            // by the same seed.
+            if cfg.torn_write_rate > 0.0 && rng.bernoulli(cfg.torn_write_rate) {
+                plan.torn_writes.insert(t, rng.next_u64());
+            }
+            if cfg.bit_flip_rate > 0.0 && rng.bernoulli(cfg.bit_flip_rate) {
+                plan.bit_flips.insert(t, rng.next_u64());
+            }
+            if cfg.lost_rename_rate > 0.0 && rng.bernoulli(cfg.lost_rename_rate) {
+                plan.lost_renames.insert(t);
+            }
         }
         plan
+    }
+
+    /// The storage fault scheduled at `slot`, if any.  Lost renames
+    /// shadow torn writes shadow bit flips when a hand-built plan
+    /// stacks several on one slot (generated plans may too; the
+    /// precedence is part of the deterministic contract).
+    pub fn storage_fault_at(&self, slot: u64) -> Option<StorageFault> {
+        if self.lost_renames.contains(&slot) {
+            return Some(StorageFault::LostRename);
+        }
+        if let Some(&seed) = self.torn_writes.get(&slot) {
+            return Some(StorageFault::Torn { seed });
+        }
+        if let Some(&seed) = self.bit_flips.get(&slot) {
+            return Some(StorageFault::BitFlip { seed });
+        }
+        None
     }
 
     /// The pool-side half of the plan: a shared probe the leaders arm,
@@ -251,6 +297,9 @@ impl ExecFaultPlan {
             && self.stalls.is_empty()
             && self.ckpt_fails.is_empty()
             && self.kills.is_empty()
+            && self.torn_writes.is_empty()
+            && self.bit_flips.is_empty()
+            && self.lost_renames.is_empty()
     }
 }
 
@@ -633,6 +682,45 @@ mod tests {
         // the probe half carries exactly the worker faults
         let probe = a.probe();
         assert_eq!(probe.fired_count(), 0);
+        // Arming the §SStore rates must not disturb the execution
+        // streams: the storage draws happen after the four execution
+        // categories, so the same seed reproduces panics/kills exactly.
+        let stormy = RecoveryConfig {
+            torn_write_rate: 0.3,
+            bit_flip_rate: 0.3,
+            lost_rename_rate: 0.2,
+            ..cfg
+        };
+        let s1 = ExecFaultPlan::generate(200, 4, &stormy);
+        let s2 = ExecFaultPlan::generate(200, 4, &stormy);
+        assert_eq!(s1.panics, a.panics, "storage draws shifted the panic stream");
+        assert_eq!(s1.stalls, a.stalls);
+        assert_eq!(s1.ckpt_fails, a.ckpt_fails);
+        assert_eq!(s1.kills, a.kills);
+        assert_eq!(s1.torn_writes, s2.torn_writes);
+        assert_eq!(s1.bit_flips, s2.bit_flips);
+        assert_eq!(s1.lost_renames, s2.lost_renames);
+        assert!(!s1.torn_writes.is_empty());
+        assert!(!s1.bit_flips.is_empty());
+        assert!(!s1.lost_renames.is_empty());
+        assert!(s1.torn_writes.keys().all(|&t| t >= 1 && t < 200));
+        assert!(s1.bit_flips.keys().all(|&t| t >= 1 && t < 200));
+        assert!(s1.lost_renames.iter().all(|&t| t >= 1 && t < 200));
+    }
+
+    #[test]
+    fn storage_fault_lookup_honours_the_precedence_order() {
+        let mut plan = ExecFaultPlan::default();
+        plan.torn_writes.insert(3, 7);
+        plan.bit_flips.insert(3, 9);
+        plan.bit_flips.insert(4, 11);
+        plan.lost_renames.insert(3);
+        assert!(matches!(plan.storage_fault_at(3), Some(StorageFault::LostRename)));
+        plan.lost_renames.clear();
+        assert!(matches!(plan.storage_fault_at(3), Some(StorageFault::Torn { seed: 7 })));
+        assert!(matches!(plan.storage_fault_at(4), Some(StorageFault::BitFlip { seed: 11 })));
+        assert_eq!(plan.storage_fault_at(5), None);
+        assert!(!plan.is_empty());
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod arrivals;
 pub mod checkpoint;
 pub mod faults;
 pub mod ingest;
+pub mod store;
 
 use crate::config::Scenario;
 use crate::coordinator::{Leader, RunResult};

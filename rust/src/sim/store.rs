@@ -1,0 +1,450 @@
+//! Durable checkpoint blob chain (§SStore).
+//!
+//! [`BlobStore`] persists `sim::checkpoint` PLCK blobs under
+//! deterministic epoch-numbered names and retains a configurable chain
+//! depth so recovery can *fall back* past a corrupt newest blob instead
+//! of dying with it.  Two backends share one API:
+//!
+//! * **memory** — the default; blobs live in a `Vec` exactly like the
+//!   pre-§SStore single-`Checkpoint` store, just `chain_depth` deep.
+//! * **disk** — each put writes to `<name>.tmp`, fsyncs, then
+//!   atomically renames to `ckpt-e<epoch>-s<slot>.plck`, so a crash at
+//!   any instant leaves either the old chain or the old chain plus one
+//!   complete new blob — never a half-written one under the final name.
+//!   [`BlobStore::open`] enumerates an existing directory (a previous
+//!   process's chain) and removes stray `.tmp` leftovers.
+//!
+//! **Storage faults** are injected *at the store boundary* in the same
+//! deterministic (slot, seed) idiom as `sim::faults::ExecFaultPlan`:
+//! a [`StorageFault::Torn`] write truncates the persisted bytes at a
+//! seeded offset, [`StorageFault::BitFlip`] flips one seeded bit, and
+//! [`StorageFault::LostRename`] persists the temp file but loses the
+//! rename (the blob never enters the chain).  The driver's in-memory
+//! state is never touched — exactly like real storage lying to you.
+//!
+//! **GC is deterministic**: after every put the store retains (a) the
+//! oldest entry (the epoch-0 genesis blob — the floor every storm
+//! recovery lands on), (b) the newest `chain_depth` entries, and (c)
+//! the newest entry whose blob passes `utils::codec::verify` — so GC
+//! can never delete the newest valid blob, even when everything newer
+//! is corrupt.  Everything else is deleted, oldest first.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::obs;
+use crate::utils::codec;
+
+/// One storage-layer fault, applied to a single blob put.  Generated
+/// per slot by `ExecFaultPlan` from seeded draws; the raw `seed` is
+/// reduced against the blob length at apply time so the fault is
+/// deterministic in (slot, seed) but independent of blob size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageFault {
+    /// Persist only the first `seed % len` bytes (a torn write — power
+    /// loss mid-write).
+    Torn { seed: u64 },
+    /// Flip bit `seed % (len * 8)` of the persisted bytes (bit rot).
+    BitFlip { seed: u64 },
+    /// Write the temp file but lose the rename: the blob never becomes
+    /// durable under its final name.
+    LostRename,
+}
+
+/// Index entry for one durable blob: its monotonically increasing
+/// store epoch (put order) and the slot boundary it snapshots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChainEntry {
+    pub epoch: u64,
+    pub slot: u64,
+}
+
+impl ChainEntry {
+    /// Deterministic on-disk name: epoch-major so lexicographic order
+    /// is chain order.
+    fn file_name(&self) -> String {
+        format!("ckpt-e{:08}-s{:08}.plck", self.epoch, self.slot)
+    }
+
+    fn parse(name: &str) -> Option<ChainEntry> {
+        let rest = name.strip_prefix("ckpt-e")?.strip_suffix(".plck")?;
+        let (e, s) = rest.split_once("-s")?;
+        Some(ChainEntry { epoch: e.parse().ok()?, slot: s.parse().ok()? })
+    }
+}
+
+enum Backend {
+    Memory(Vec<Vec<u8>>),
+    Disk(PathBuf),
+}
+
+/// A chain of durable checkpoint blobs; see the module docs.
+pub struct BlobStore {
+    backend: Backend,
+    /// Entries in ascending epoch order, parallel to `Memory`'s blob
+    /// vec (disk entries index files).
+    entries: Vec<ChainEntry>,
+    depth: usize,
+    next_epoch: u64,
+}
+
+impl BlobStore {
+    /// In-memory chain (the default backend — no filesystem traffic,
+    /// used by the parity suites and by `run_resilient` when no
+    /// `store_dir` is configured).
+    pub fn memory(depth: usize) -> BlobStore {
+        BlobStore {
+            backend: Backend::Memory(Vec::new()),
+            entries: Vec::new(),
+            depth: depth.max(1),
+            next_epoch: 0,
+        }
+    }
+
+    /// Open (or create) a disk-backed chain at `dir`.  Existing blobs
+    /// are enumerated in epoch order and stray `.tmp` files — lost or
+    /// torn renames from a previous process — are removed.
+    pub fn open(dir: &Path, depth: usize) -> Result<BlobStore, String> {
+        fs::create_dir_all(dir).map_err(|e| format!("store: create {}: {e}", dir.display()))?;
+        let mut entries = Vec::new();
+        let listing =
+            fs::read_dir(dir).map_err(|e| format!("store: read {}: {e}", dir.display()))?;
+        for item in listing {
+            let item = item.map_err(|e| format!("store: read {}: {e}", dir.display()))?;
+            let name = item.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".tmp") {
+                // a rename that never landed: the blob was never
+                // durable, so the leftover is garbage by definition
+                let _ = fs::remove_file(item.path());
+                continue;
+            }
+            if let Some(entry) = ChainEntry::parse(&name) {
+                entries.push(entry);
+            }
+        }
+        entries.sort_by_key(|e| e.epoch);
+        let next_epoch = entries.last().map_or(0, |e| e.epoch + 1);
+        Ok(BlobStore {
+            backend: Backend::Disk(dir.to_path_buf()),
+            entries,
+            depth: depth.max(1),
+            next_epoch,
+        })
+    }
+
+    /// Retention depth (newest entries always kept).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The chain, newest first — the order recovery walks it.
+    pub fn chain(&self) -> Vec<ChainEntry> {
+        self.entries.iter().rev().copied().collect()
+    }
+
+    /// Slot of the newest durable entry (the driver's write-dedup key).
+    pub fn newest_slot(&self) -> Option<u64> {
+        self.entries.last().map(|e| e.slot)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Read one blob's bytes back (exactly as persisted — including any
+    /// injected corruption).
+    pub fn load(&self, entry: &ChainEntry) -> Result<Vec<u8>, String> {
+        match &self.backend {
+            Backend::Memory(blobs) => {
+                let ix = self
+                    .entries
+                    .iter()
+                    .position(|e| e == entry)
+                    .ok_or_else(|| format!("store: epoch {} not in the chain", entry.epoch))?;
+                Ok(blobs[ix].clone())
+            }
+            Backend::Disk(dir) => {
+                let path = dir.join(entry.file_name());
+                fs::read(&path).map_err(|e| format!("store: read {}: {e}", path.display()))
+            }
+        }
+    }
+
+    /// Persist one blob under the next epoch number, applying an
+    /// injected storage fault if one is scheduled, then run GC.  The
+    /// epoch counter advances even for a lost rename (the name was
+    /// claimed; only the rename was lost), keeping the naming stream
+    /// deterministic under replay.
+    pub fn put(
+        &mut self,
+        slot: u64,
+        bytes: &[u8],
+        fault: Option<StorageFault>,
+    ) -> Result<(), String> {
+        let entry = ChainEntry { epoch: self.next_epoch, slot };
+        self.next_epoch += 1;
+        obs::registry().counter("store.puts").inc();
+        let (persisted, lost) = match fault {
+            None => (bytes.to_vec(), false),
+            Some(StorageFault::Torn { seed }) => {
+                let cut = (seed % bytes.len().max(1) as u64) as usize;
+                (bytes[..cut].to_vec(), false)
+            }
+            Some(StorageFault::BitFlip { seed }) => {
+                let mut b = bytes.to_vec();
+                if !b.is_empty() {
+                    let bit = (seed % (b.len() as u64 * 8)) as usize;
+                    b[bit / 8] ^= 1 << (bit % 8);
+                }
+                (b, false)
+            }
+            Some(StorageFault::LostRename) => (bytes.to_vec(), true),
+        };
+        match &mut self.backend {
+            Backend::Memory(blobs) => {
+                if !lost {
+                    blobs.push(persisted);
+                    self.entries.push(entry);
+                }
+            }
+            Backend::Disk(dir) => {
+                let tmp = dir.join(format!("{}.tmp", entry.file_name()));
+                {
+                    let mut f = fs::File::create(&tmp)
+                        .map_err(|e| format!("store: create {}: {e}", tmp.display()))?;
+                    f.write_all(&persisted)
+                        .map_err(|e| format!("store: write {}: {e}", tmp.display()))?;
+                    // flush-to-durable before the rename publishes the
+                    // name: the atomic-rename contract
+                    f.sync_all()
+                        .map_err(|e| format!("store: sync {}: {e}", tmp.display()))?;
+                }
+                if lost {
+                    // the rename never happens; the tmp lingers exactly
+                    // as a crash would leave it (open() sweeps it)
+                    return Ok(());
+                }
+                let fin = dir.join(entry.file_name());
+                fs::rename(&tmp, &fin)
+                    .map_err(|e| format!("store: rename {}: {e}", fin.display()))?;
+                self.entries.push(entry);
+            }
+        }
+        if lost {
+            return Ok(());
+        }
+        self.gc();
+        Ok(())
+    }
+
+    /// Deterministic retention: keep the oldest entry, the newest
+    /// `depth` entries, and the newest entry whose blob verifies;
+    /// delete the rest (oldest first).  See the module docs for why
+    /// each pin exists.
+    fn gc(&mut self) {
+        if self.entries.len() <= 1 {
+            return;
+        }
+        let mut protect: BTreeSet<u64> = BTreeSet::new();
+        protect.insert(self.entries[0].epoch);
+        for e in self.entries.iter().rev().take(self.depth) {
+            protect.insert(e.epoch);
+        }
+        let snapshot: Vec<ChainEntry> = self.entries.clone();
+        for e in snapshot.iter().rev() {
+            let valid = self
+                .load(e)
+                .map(|b| codec::verify(&b).is_ok())
+                .unwrap_or(false);
+            if valid {
+                protect.insert(e.epoch);
+                break;
+            }
+        }
+        let doomed: Vec<ChainEntry> = self
+            .entries
+            .iter()
+            .filter(|e| !protect.contains(&e.epoch))
+            .copied()
+            .collect();
+        for e in &doomed {
+            if let Backend::Disk(dir) = &self.backend {
+                let _ = fs::remove_file(dir.join(e.file_name()));
+            }
+            obs::registry().counter("store.gc_deleted").inc();
+        }
+        match &mut self.backend {
+            Backend::Memory(blobs) => {
+                let mut keep_blobs = Vec::with_capacity(protect.len());
+                let mut keep_entries = Vec::with_capacity(protect.len());
+                for (e, b) in self.entries.iter().zip(blobs.drain(..)) {
+                    if protect.contains(&e.epoch) {
+                        keep_blobs.push(b);
+                        keep_entries.push(*e);
+                    }
+                }
+                *blobs = keep_blobs;
+                self.entries = keep_entries;
+            }
+            Backend::Disk(_) => {
+                self.entries.retain(|e| protect.contains(&e.epoch));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::codec::Writer;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn blob(tag: u64) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(tag);
+        w.put_str("store-test");
+        w.finish()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        static NONCE: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "ogasched-store-{}-{}-{}",
+            std::process::id(),
+            tag,
+            NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn chain_enumerates_newest_to_oldest() {
+        let mut s = BlobStore::memory(8);
+        for slot in [0u64, 5, 10] {
+            s.put(slot, &blob(slot), None).unwrap();
+        }
+        let chain = s.chain();
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain[0], ChainEntry { epoch: 2, slot: 10 });
+        assert_eq!(chain[2], ChainEntry { epoch: 0, slot: 0 });
+        assert_eq!(s.newest_slot(), Some(10));
+        assert_eq!(s.load(&chain[0]).unwrap(), blob(10));
+    }
+
+    #[test]
+    fn gc_honours_depth_and_pins_the_genesis_blob() {
+        let mut s = BlobStore::memory(2);
+        for slot in 0u64..6 {
+            s.put(slot, &blob(slot), None).unwrap();
+        }
+        // retained: genesis (epoch 0) + newest 2 (epochs 4, 5); the
+        // newest-valid pin coincides with epoch 5
+        let epochs: Vec<u64> = s.chain().iter().map(|e| e.epoch).collect();
+        assert_eq!(epochs, vec![5, 4, 0]);
+    }
+
+    #[test]
+    fn gc_never_deletes_the_newest_valid_blob() {
+        let mut s = BlobStore::memory(1);
+        s.put(0, &blob(0), None).unwrap();
+        s.put(5, &blob(5), None).unwrap();
+        // two corrupt puts: the newest depth-1 window only covers the
+        // corrupt tail, so the valid epoch-1 blob survives via the
+        // newest-valid pin
+        s.put(10, &blob(10), Some(StorageFault::Torn { seed: 7 })).unwrap();
+        s.put(15, &blob(15), Some(StorageFault::BitFlip { seed: 99 })).unwrap();
+        let chain = s.chain();
+        let valid: Vec<u64> = chain
+            .iter()
+            .filter(|e| codec::verify(&s.load(e).unwrap()).is_ok())
+            .map(|e| e.slot)
+            .collect();
+        assert!(valid.contains(&5), "newest valid blob was GC'd: chain {chain:?}");
+        assert!(valid.contains(&0), "genesis blob was GC'd");
+        // and the injected corruption is detectable, not silent
+        let newest = s.load(&chain[0]).unwrap();
+        assert!(codec::verify(&newest).is_err());
+    }
+
+    #[test]
+    fn lost_renames_never_enter_the_chain() {
+        let mut s = BlobStore::memory(4);
+        s.put(0, &blob(0), None).unwrap();
+        s.put(5, &blob(5), Some(StorageFault::LostRename)).unwrap();
+        assert_eq!(s.newest_slot(), Some(0));
+        assert_eq!(s.len(), 1);
+        // the epoch number was still consumed: naming stays deterministic
+        s.put(10, &blob(10), None).unwrap();
+        assert_eq!(s.chain()[0], ChainEntry { epoch: 2, slot: 10 });
+    }
+
+    #[test]
+    fn disk_store_persists_across_reopen() {
+        let dir = tmpdir("reopen");
+        {
+            let mut s = BlobStore::open(&dir, 4).unwrap();
+            s.put(0, &blob(0), None).unwrap();
+            s.put(7, &blob(7), None).unwrap();
+            s.put(14, &blob(14), Some(StorageFault::LostRename)).unwrap();
+        }
+        // the lost rename left a .tmp; reopen sweeps it and resumes the
+        // epoch stream past every name ever claimed durably
+        let s = BlobStore::open(&dir, 4).unwrap();
+        let chain = s.chain();
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0], ChainEntry { epoch: 1, slot: 7 });
+        assert_eq!(chain[1], ChainEntry { epoch: 0, slot: 0 });
+        assert_eq!(s.load(&chain[0]).unwrap(), blob(7));
+        let stray: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter(|f| {
+                f.as_ref().unwrap().file_name().to_string_lossy().ends_with(".tmp")
+            })
+            .collect();
+        assert!(stray.is_empty(), "reopen left stray tmp files");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_names_are_deterministic_and_sorted() {
+        let dir = tmpdir("names");
+        let mut s = BlobStore::open(&dir, 8).unwrap();
+        for slot in [0u64, 3, 6] {
+            s.put(slot, &blob(slot), None).unwrap();
+        }
+        let mut names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|f| f.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(
+            names,
+            vec![
+                "ckpt-e00000000-s00000000.plck",
+                "ckpt-e00000001-s00000003.plck",
+                "ckpt-e00000002-s00000006.plck",
+            ]
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_and_flipped_blobs_fail_verification() {
+        let mut s = BlobStore::memory(8);
+        s.put(0, &blob(0), None).unwrap();
+        s.put(1, &blob(1), Some(StorageFault::Torn { seed: 13 })).unwrap();
+        s.put(2, &blob(2), Some(StorageFault::BitFlip { seed: 12345 })).unwrap();
+        let chain = s.chain();
+        assert!(codec::verify(&s.load(&chain[0]).unwrap()).is_err(), "bit flip undetected");
+        assert!(codec::verify(&s.load(&chain[1]).unwrap()).is_err(), "torn write undetected");
+        assert!(codec::verify(&s.load(&chain[2]).unwrap()).is_ok());
+    }
+}

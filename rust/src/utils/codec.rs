@@ -1,18 +1,190 @@
-//! Minimal binary snapshot codec (zero deps).
+//! Minimal binary snapshot codec (zero deps) — PLCK v3.
 //!
 //! `sim::checkpoint` serializes run state through this layer.  The
 //! format is little-endian, length-prefixed, and *exact*: f64s round
 //! trip through `to_bits`/`from_bits`, so a restored checkpoint replays
 //! bit-identically — including NaN payloads and signed zeros.  A magic
 //! tag plus a format version head every blob so stale snapshots fail
-//! loudly instead of decoding garbage (see ROADMAP: checkpoint format
-//! versioning).
+//! loudly instead of decoding garbage.
+//!
+//! # PLCK v3 blob layout
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//! 0       4     magic    0x4B434C50 ("PLCK" LE)
+//! 4       4     version  3
+//! 8       ...   body: a sequence of named sections (put_section)
+//! len-4   4     trailer  crc32(bytes[0 .. len-4])
+//! ```
+//!
+//! Each named section is framed as
+//!
+//! ```text
+//! name     length-prefixed str  (section identity; rejects mis-splices)
+//! crc      u32                  crc32 of the payload bytes
+//! payload  length-prefixed [u8] (decoded by a nested Reader)
+//! ```
+//!
+//! CRC coverage is two-level on purpose: the whole-blob trailer makes
+//! *any* truncation or bit flip fail at [`Reader::new`] before a single
+//! field is decoded (so a corrupt blob can never hand back partial
+//! state), while the per-section checksums plus the stored section
+//! names turn a blob assembled from mismatched pieces — a mis-splice
+//! that recomputed the trailer — into a [`CodecErrorKind::WrongSection`]
+//! or [`CodecErrorKind::SectionCrc`] error *naming the offending
+//! section*.
+//!
+//! # Version gate
+//!
+//! | version | readable | notes                                        |
+//! |---------|----------|----------------------------------------------|
+//! | v1      | no       | PR-7 layout, no ingest section; rejected     |
+//! | v2      | yes      | + optional ingest section; no checksums      |
+//! | v3      | yes      | named + checksummed sections, blob trailer   |
+//!
+//! [`Writer::new`] always writes v3; v2 stays readable behind the gate
+//! so durable chains written by the previous release still thaw
+//! (without self-verification — their corruption surfaces as bounds /
+//! semantic errors during decode, never as a panic).
 
 /// Blob magic: "PLCK" (pallas checkpoint) as LE bytes.
 pub const MAGIC: u32 = 0x4B434C50;
 /// Bump on any incompatible layout change.  v2: appended the optional
-/// streaming-ingest cursor/batch-state section (§SPerf-9).
-pub const VERSION: u32 = 2;
+/// streaming-ingest cursor/batch-state section (§SPerf-9).  v3: named,
+/// CRC-32-checksummed sections plus a whole-blob trailer checksum
+/// (§SStore).
+pub const VERSION: u32 = 3;
+/// Oldest version [`Reader::new`] still accepts.
+pub const MIN_VERSION: u32 = 2;
+
+const HEADER_LEN: usize = 8;
+const TRAILER_LEN: usize = 4;
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) lookup table, built
+/// at compile time — zero deps, zero runtime init.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Hand-rolled CRC-32 (the zlib/PNG polynomial).  Detects every
+/// single-bit flip and every burst error up to 32 bits — which covers
+/// both storage-fault idioms `sim::store` injects (bit flips and torn
+/// writes).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// What went wrong while decoding a blob.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecErrorKind {
+    /// A read ran past the logical end of the buffer.
+    Truncated { need: usize },
+    /// The blob does not start with the PLCK magic.
+    BadMagic { got: u32 },
+    /// A version outside the `MIN_VERSION..=VERSION` gate.
+    BadVersion { got: u32 },
+    /// The whole-blob trailer checksum did not match (v3).
+    BlobCrc { stored: u32, computed: u32 },
+    /// A named section's payload checksum did not match (v3).
+    SectionCrc { stored: u32, computed: u32 },
+    /// The section at the cursor is not the one the decoder expected —
+    /// the signature of a mis-spliced blob.
+    WrongSection { want: String, got: String },
+    /// A bool byte outside {0, 1}.
+    BadBool { got: u8 },
+    /// A length prefix that overflows usize.
+    BadLength { got: u64 },
+    /// A string payload that is not UTF-8.
+    BadUtf8,
+    /// Bytes left over after a decoder called [`Reader::finish`].
+    Trailing { extra: usize },
+}
+
+/// Structured decode error: the kind, the byte offset it surfaced at,
+/// and — when the reader was inside a named v3 section — the section's
+/// name.  Converts into `String` so every `Result<_, String>` restore
+/// path keeps using `?`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodecError {
+    pub kind: CodecErrorKind,
+    pub offset: usize,
+    /// Name of the section the reader was decoding, if any.
+    pub section: Option<String>,
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.section {
+            Some(s) => write!(f, "checkpoint[`{s}`]: ")?,
+            None => write!(f, "checkpoint: ")?,
+        }
+        match &self.kind {
+            CodecErrorKind::Truncated { need } => {
+                write!(f, "truncated at byte {} (need {} more)", self.offset, need)
+            }
+            CodecErrorKind::BadMagic { got } => {
+                write!(f, "bad magic {got:#010x} (want {MAGIC:#010x})")
+            }
+            CodecErrorKind::BadVersion { got } => write!(
+                f,
+                "format version {got} (this build reads v{MIN_VERSION}..v{VERSION})"
+            ),
+            CodecErrorKind::BlobCrc { stored, computed } => write!(
+                f,
+                "whole-blob crc mismatch (stored {stored:#010x}, computed {computed:#010x}) \
+                 — the blob is truncated or corrupt"
+            ),
+            CodecErrorKind::SectionCrc { stored, computed } => write!(
+                f,
+                "section crc mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            CodecErrorKind::WrongSection { want, got } => write!(
+                f,
+                "expected section `{want}`, found `{got}` (mis-spliced blob?)"
+            ),
+            CodecErrorKind::BadBool { got } => {
+                write!(f, "bad bool byte {got:#04x} at {}", self.offset)
+            }
+            CodecErrorKind::BadLength { got } => write!(f, "length {got} overflows usize"),
+            CodecErrorKind::BadUtf8 => write!(f, "bad utf8 at byte {}", self.offset),
+            CodecErrorKind::Trailing { extra } => {
+                write!(f, "{extra} trailing bytes after decode")
+            }
+        }
+    }
+}
+
+impl From<CodecError> for String {
+    fn from(e: CodecError) -> String {
+        e.to_string()
+    }
+}
+
+/// Structural self-verification: magic, version gate, and — for v3 —
+/// the whole-blob trailer checksum.  Returns the blob's version.  This
+/// is the cheap validity probe `sim::store` uses to walk a chain and
+/// for GC's newest-valid pin: it reads no body fields, so it cannot
+/// mutate any decoder state.
+pub fn verify(buf: &[u8]) -> Result<u32, CodecError> {
+    Reader::new(buf).map(|r| r.version())
+}
 
 /// Append-only encoder over an owned byte buffer.
 #[derive(Debug, Default)]
@@ -21,16 +193,28 @@ pub struct Writer {
 }
 
 impl Writer {
-    /// Fresh blob headed by the magic tag and format version.
+    /// Fresh blob headed by the magic tag and the current format
+    /// version (v3).  Finalize with [`Writer::finish`] — v3 blobs
+    /// carry a trailing whole-blob checksum, so a headed writer's
+    /// bytes are not a valid blob until the trailer is appended.
     pub fn new() -> Writer {
+        Writer::with_version(VERSION)
+    }
+
+    /// Headed writer at an explicit format version — for the
+    /// version-gate tests and legacy-layout (v2) fixtures.  Versions
+    /// below 3 have no trailer: take their bytes via
+    /// [`Writer::into_bytes`], not [`Writer::finish`].
+    pub fn with_version(version: u32) -> Writer {
         let mut w = Writer { buf: Vec::new() };
         w.put_u32(MAGIC);
-        w.put_u32(VERSION);
+        w.put_u32(version);
         w
     }
 
     /// Headerless writer for nested sections (policy / arrival blobs
-    /// embedded inside an outer checkpoint via [`Writer::put_bytes`]).
+    /// embedded inside an outer checkpoint via [`Writer::put_bytes`]
+    /// or [`Writer::put_section`]).
     pub fn section() -> Writer {
         Writer { buf: Vec::new() }
     }
@@ -66,6 +250,14 @@ impl Writer {
         self.buf.extend_from_slice(b);
     }
 
+    /// Frame `payload` as a named, checksummed v3 section: name,
+    /// crc32(payload), then the length-prefixed payload itself.
+    pub fn put_section(&mut self, name: &str, payload: &[u8]) {
+        self.put_str(name);
+        self.put_u32(crc32(payload));
+        self.put_bytes(payload);
+    }
+
     pub fn put_f64s(&mut self, xs: &[f64]) {
         self.put_usize(xs.len());
         for &x in xs {
@@ -94,7 +286,16 @@ impl Writer {
         }
     }
 
+    /// Raw bytes, no trailer — for sections and pre-v3 headed blobs.
     pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Finalize a v3 headed blob: append the whole-blob crc32 trailer
+    /// over everything written so far and return the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        let crc = crc32(&self.buf);
+        self.put_u32(crc);
         self.buf
     }
 
@@ -110,83 +311,154 @@ impl Writer {
 /// Cursor-based decoder.  Every read is bounds-checked and returns
 /// `Err` with the offset instead of panicking — a truncated or corrupt
 /// checkpoint must surface as a recoverable error, not a crash, since
-/// `run_resilient` injects checkpoint-write failures on purpose.
+/// `run_resilient` injects checkpoint-write failures and storage
+/// corruption on purpose.  For v3 blobs the whole-blob trailer is
+/// verified *before* any field is handed out, so no decoder downstream
+/// of [`Reader::new`] can observe partial state from a damaged blob.
 #[derive(Debug)]
 pub struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// Logical end: excludes the v3 trailer.
+    end: usize,
+    /// Blob format version (sections report their parent's; bare
+    /// sections report the current version).
+    version: u32,
+    /// Name of the v3 section this reader decodes, for error context.
+    name: Option<String>,
 }
 
 impl<'a> Reader<'a> {
-    /// Open a headed blob, validating magic + version.
-    pub fn new(buf: &'a [u8]) -> Result<Reader<'a>, String> {
-        let mut r = Reader { buf, pos: 0 };
+    /// Open a headed blob, validating magic + version gate and — for
+    /// v3 — the whole-blob trailer checksum.
+    pub fn new(buf: &'a [u8]) -> Result<Reader<'a>, CodecError> {
+        let mut r = Reader { buf, pos: 0, end: buf.len(), version: VERSION, name: None };
         let magic = r.get_u32()?;
         if magic != MAGIC {
-            return Err(format!("checkpoint: bad magic {magic:#010x} (want {MAGIC:#010x})"));
+            return Err(r.err(CodecErrorKind::BadMagic { got: magic }));
         }
         let version = r.get_u32()?;
-        if version != VERSION {
-            return Err(format!("checkpoint: format version {version} (this build reads {VERSION})"));
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            return Err(r.err(CodecErrorKind::BadVersion { got: version }));
+        }
+        r.version = version;
+        if version >= 3 {
+            if buf.len() < HEADER_LEN + TRAILER_LEN {
+                return Err(CodecError {
+                    kind: CodecErrorKind::Truncated {
+                        need: HEADER_LEN + TRAILER_LEN - buf.len(),
+                    },
+                    offset: buf.len(),
+                    section: None,
+                });
+            }
+            let body = &buf[..buf.len() - TRAILER_LEN];
+            let stored = u32::from_le_bytes(
+                buf[buf.len() - TRAILER_LEN..].try_into().expect("4 trailer bytes"),
+            );
+            let computed = crc32(body);
+            if stored != computed {
+                return Err(r.err(CodecErrorKind::BlobCrc { stored, computed }));
+            }
+            r.end = buf.len() - TRAILER_LEN;
         }
         Ok(r)
     }
 
     /// Open a headerless section (the payload of [`Writer::section`]).
     pub fn section(buf: &'a [u8]) -> Reader<'a> {
-        Reader { buf, pos: 0 }
+        Reader { buf, pos: 0, end: buf.len(), version: VERSION, name: None }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    /// Like [`Reader::section`], but tagged with the section's name so
+    /// decode errors identify which section they came from.
+    pub fn named_section(buf: &'a [u8], name: &str) -> Reader<'a> {
+        Reader { buf, pos: 0, end: buf.len(), version: VERSION, name: Some(name.to_string()) }
+    }
+
+    /// The blob's format version (from the header).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn err(&self, kind: CodecErrorKind) -> CodecError {
+        CodecError { kind, offset: self.pos, section: self.name.clone() }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
         let end = self
             .pos
             .checked_add(n)
-            .filter(|&e| e <= self.buf.len())
-            .ok_or_else(|| {
-                format!("checkpoint: truncated at byte {} (need {} more)", self.pos, n)
-            })?;
+            .filter(|&e| e <= self.end)
+            .ok_or_else(|| self.err(CodecErrorKind::Truncated { need: n - (self.end - self.pos) }))?;
         let s = &self.buf[self.pos..end];
         self.pos = end;
         Ok(s)
     }
 
-    pub fn get_u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    pub fn get_u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    pub fn get_u64(&mut self) -> Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    pub fn get_u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
-    pub fn get_usize(&mut self) -> Result<usize, String> {
+    pub fn get_usize(&mut self) -> Result<usize, CodecError> {
         let v = self.get_u64()?;
-        usize::try_from(v).map_err(|_| format!("checkpoint: length {v} overflows usize"))
+        usize::try_from(v).map_err(|_| self.err(CodecErrorKind::BadLength { got: v }))
     }
 
-    pub fn get_bool(&mut self) -> Result<bool, String> {
+    pub fn get_bool(&mut self) -> Result<bool, CodecError> {
         match self.take(1)?[0] {
             0 => Ok(false),
             1 => Ok(true),
-            b => Err(format!("checkpoint: bad bool byte {b:#04x} at {}", self.pos - 1)),
+            b => Err(self.err(CodecErrorKind::BadBool { got: b })),
         }
     }
 
-    pub fn get_f64(&mut self) -> Result<f64, String> {
+    pub fn get_f64(&mut self) -> Result<f64, CodecError> {
         Ok(f64::from_bits(self.get_u64()?))
     }
 
-    pub fn get_str(&mut self) -> Result<String, String> {
+    pub fn get_str(&mut self) -> Result<String, CodecError> {
         let n = self.get_usize()?;
         let b = self.take(n)?;
-        String::from_utf8(b.to_vec()).map_err(|e| format!("checkpoint: bad utf8: {e}"))
+        String::from_utf8(b.to_vec()).map_err(|_| self.err(CodecErrorKind::BadUtf8))
     }
 
-    pub fn get_bytes(&mut self) -> Result<Vec<u8>, String> {
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, CodecError> {
         let n = self.get_usize()?;
         Ok(self.take(n)?.to_vec())
     }
 
-    pub fn get_f64s(&mut self) -> Result<Vec<f64>, String> {
+    /// Decode the v3 section frame at the cursor: the stored name must
+    /// equal `want` (else the blob was spliced from mismatched pieces)
+    /// and the payload must match its stored crc32.  Returns the
+    /// verified payload slice; decode it with [`Reader::named_section`].
+    pub fn get_section(&mut self, want: &str) -> Result<&'a [u8], CodecError> {
+        let got = self.get_str()?;
+        if got != want {
+            return Err(self.err(CodecErrorKind::WrongSection {
+                want: want.to_string(),
+                got,
+            }));
+        }
+        let stored = self.get_u32()?;
+        let n = self.get_usize()?;
+        let payload = self.take(n)?;
+        let computed = crc32(payload);
+        if stored != computed {
+            return Err(CodecError {
+                kind: CodecErrorKind::SectionCrc { stored, computed },
+                offset: self.pos,
+                section: Some(want.to_string()),
+            });
+        }
+        Ok(payload)
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>, CodecError> {
         let n = self.get_usize()?;
         let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
         for _ in 0..n {
@@ -195,7 +467,7 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    pub fn get_u64s(&mut self) -> Result<Vec<u64>, String> {
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>, CodecError> {
         let n = self.get_usize()?;
         let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
         for _ in 0..n {
@@ -204,7 +476,7 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    pub fn get_usizes(&mut self) -> Result<Vec<usize>, String> {
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>, CodecError> {
         let n = self.get_usize()?;
         let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
         for _ in 0..n {
@@ -213,7 +485,7 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    pub fn get_bools(&mut self) -> Result<Vec<bool>, String> {
+    pub fn get_bools(&mut self) -> Result<Vec<bool>, CodecError> {
         let n = self.get_usize()?;
         let mut out = Vec::with_capacity(n.min(self.remaining()));
         for _ in 0..n {
@@ -223,19 +495,22 @@ impl<'a> Reader<'a> {
     }
 
     pub fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
+        self.end - self.pos
     }
 
     /// All bytes consumed?  Decoders call this last so trailing garbage
-    /// (e.g. a mis-versioned appendix) is caught.
-    pub fn finish(self) -> Result<(), String> {
-        if self.pos == self.buf.len() {
+    /// (e.g. a mis-versioned appendix) is caught.  The v3 trailer is
+    /// outside the logical end and does not count as trailing.
+    pub fn finish(self) -> Result<(), CodecError> {
+        if self.pos == self.end {
             Ok(())
         } else {
-            Err(format!(
-                "checkpoint: {} trailing bytes after decode",
-                self.buf.len() - self.pos
-            ))
+            let extra = self.end - self.pos;
+            Err(CodecError {
+                kind: CodecErrorKind::Trailing { extra },
+                offset: self.pos,
+                section: self.name.clone(),
+            })
         }
     }
 }
@@ -243,6 +518,15 @@ impl<'a> Reader<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// zlib's published check value for the IEEE polynomial.
+    #[test]
+    fn crc32_matches_the_reference_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // incremental sanity: any single byte change moves the sum
+        assert_ne!(crc32(b"pallas"), crc32(b"pallbs"));
+    }
 
     #[test]
     fn scalars_round_trip_exactly() {
@@ -255,8 +539,9 @@ mod tests {
         w.put_f64(f64::from_bits(0x7FF8_0000_DEAD_BEEF)); // NaN payload
         w.put_f64(1.0 / 3.0);
         w.put_str("pallas");
-        let bytes = w.into_bytes();
+        let bytes = w.finish();
         let mut r = Reader::new(&bytes).unwrap();
+        assert_eq!(r.version(), VERSION);
         assert_eq!(r.get_u64().unwrap(), u64::MAX);
         assert_eq!(r.get_usize().unwrap(), 12345);
         assert!(r.get_bool().unwrap());
@@ -276,7 +561,7 @@ mod tests {
         w.put_usizes(&[9, 8]);
         w.put_bools(&[true, false, true]);
         w.put_bytes(&[0xAB, 0xCD]);
-        let bytes = w.into_bytes();
+        let bytes = w.finish();
         let mut r = Reader::new(&bytes).unwrap();
         assert_eq!(r.get_f64s().unwrap(), vec![0.1, -2.5, f64::INFINITY]);
         assert_eq!(r.get_u64s().unwrap(), vec![1, 2, 3]);
@@ -290,23 +575,122 @@ mod tests {
     fn bad_magic_and_version_are_rejected() {
         let mut w = Writer::new();
         w.put_u64(7);
-        let mut bytes = w.into_bytes();
+        let mut bytes = w.finish();
         bytes[0] ^= 0xFF;
-        assert!(Reader::new(&bytes).unwrap_err().contains("bad magic"));
-        let mut w2 = Writer::section();
-        w2.put_u32(MAGIC);
-        w2.put_u32(VERSION + 1);
-        let b2 = w2.into_bytes();
-        assert!(Reader::new(&b2).unwrap_err().contains("version"));
+        let e = Reader::new(&bytes).unwrap_err();
+        assert!(matches!(e.kind, CodecErrorKind::BadMagic { .. }), "{e}");
+        assert!(e.to_string().contains("bad magic"));
+        // future version: rejected by the gate
+        let w2 = Writer::with_version(VERSION + 1);
+        let e2 = Reader::new(&w2.into_bytes()).unwrap_err();
+        assert!(matches!(e2.kind, CodecErrorKind::BadVersion { got } if got == VERSION + 1));
+        // v1 predates the gate floor: rejected loudly
+        let w1 = Writer::with_version(1);
+        let e1 = Reader::new(&w1.into_bytes()).unwrap_err();
+        assert!(matches!(e1.kind, CodecErrorKind::BadVersion { got: 1 }), "{e1}");
+        assert!(e1.to_string().contains("version 1"));
     }
 
     #[test]
-    fn truncation_is_an_error_not_a_panic() {
-        let mut w = Writer::new();
-        w.put_f64s(&[1.0, 2.0, 3.0]);
+    fn v2_blobs_stay_readable_behind_the_gate() {
+        // the previous release's layout: headed, no checksums anywhere
+        let mut w = Writer::with_version(2);
+        w.put_u64(42);
+        w.put_str("legacy");
         let bytes = w.into_bytes();
-        let mut r = Reader::new(&bytes[..bytes.len() - 4]).unwrap();
-        assert!(r.get_f64s().unwrap_err().contains("truncated"));
+        let mut r = Reader::new(&bytes).unwrap();
+        assert_eq!(r.version(), 2);
+        assert_eq!(r.get_u64().unwrap(), 42);
+        assert_eq!(r.get_str().unwrap(), "legacy");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn whole_blob_trailer_rejects_any_corruption() {
+        let mut w = Writer::new();
+        w.put_section("alpha", &[1, 2, 3]);
+        w.put_f64s(&[1.0, 2.0]);
+        let bytes = w.finish();
+        assert!(Reader::new(&bytes).is_ok());
+        // flip one bit of every byte in turn — including header, section
+        // frames, payloads, and the trailer itself: all must be caught
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert!(Reader::new(&bad).is_err(), "bit flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_offset_is_an_error_not_a_panic() {
+        // representative v3 blob: scalars, vectors, nested sections
+        let mut inner = Writer::section();
+        inner.put_f64(2.5);
+        let mut w = Writer::new();
+        w.put_u64(7);
+        w.put_section("driver", &inner.into_bytes());
+        w.put_section("records", &[0u8; 33]);
+        w.put_bools(&[true, false]);
+        let bytes = w.finish();
+        assert!(Reader::new(&bytes).is_ok());
+        for cut in 0..bytes.len() {
+            assert!(
+                Reader::new(&bytes[..cut]).is_err(),
+                "truncation at byte {cut} of {} was not rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn sections_verify_names_and_payload_crcs() {
+        let mut w = Writer::new();
+        w.put_section("ledger", &[9, 9, 9]);
+        w.put_section("policy", &[4, 5]);
+        let bytes = w.finish();
+        let mut r = Reader::new(&bytes).unwrap();
+        assert_eq!(r.get_section("ledger").unwrap(), &[9, 9, 9]);
+        assert_eq!(r.get_section("policy").unwrap(), &[4, 5]);
+        r.finish().unwrap();
+        // asking for sections in the wrong order names both sides
+        let mut r2 = Reader::new(&bytes).unwrap();
+        let e = r2.get_section("policy").unwrap_err();
+        match e.kind {
+            CodecErrorKind::WrongSection { ref want, ref got } => {
+                assert_eq!(want, "policy");
+                assert_eq!(got, "ledger");
+            }
+            ref k => panic!("unexpected error kind {k:?}"),
+        }
+        assert!(e.to_string().contains("`policy`"), "{e}");
+    }
+
+    #[test]
+    fn mis_spliced_sections_are_rejected_by_name_or_crc() {
+        // splice: take blob A's "policy" payload bytes and overwrite
+        // blob B's "policy" payload in place, then recompute the
+        // trailer (a storage layer that interleaved two writes).  The
+        // section CRC still holds (payload + crc both spliced), but
+        // swapping payload *without* its crc must fail, naming the
+        // section.
+        let payload_a = [1u8, 2, 3, 4];
+        let payload_b = [9u8, 8, 7, 6];
+        let mut w = Writer::new();
+        w.put_section("policy", &payload_a);
+        let blob_a = w.finish();
+        // locate the payload: header(8) + name(8+6) + crc(4) + len(8)
+        let off = 8 + 8 + "policy".len() + 4 + 8;
+        let mut spliced = blob_a.clone();
+        spliced[off..off + 4].copy_from_slice(&payload_b);
+        // recompute the trailer so the whole-blob check passes and the
+        // per-section crc is what catches the splice
+        let body_len = spliced.len() - 4;
+        let crc = crc32(&spliced[..body_len]);
+        spliced[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let mut r = Reader::new(&spliced).unwrap();
+        let e = r.get_section("policy").unwrap_err();
+        assert!(matches!(e.kind, CodecErrorKind::SectionCrc { .. }), "{e}");
+        assert_eq!(e.section.as_deref(), Some("policy"));
     }
 
     #[test]
@@ -314,10 +698,23 @@ mod tests {
         let mut w = Writer::new();
         w.put_u64(1);
         w.put_u64(2);
-        let bytes = w.into_bytes();
+        let bytes = w.finish();
         let mut r = Reader::new(&bytes).unwrap();
         r.get_u64().unwrap();
-        assert!(r.finish().is_err());
+        let e = r.finish().unwrap_err();
+        assert!(matches!(e.kind, CodecErrorKind::Trailing { extra: 8 }), "{e}");
+    }
+
+    #[test]
+    fn named_section_errors_carry_the_section_name() {
+        let mut s = Writer::section();
+        s.put_u64(1);
+        let bytes = s.into_bytes();
+        let mut r = Reader::named_section(&bytes, "arrivals");
+        r.get_u64().unwrap();
+        let e = r.get_u64().unwrap_err();
+        assert_eq!(e.section.as_deref(), Some("arrivals"));
+        assert!(e.to_string().contains("[`arrivals`]"), "{e}");
     }
 
     #[test]
@@ -327,7 +724,7 @@ mod tests {
         inner.put_str("policy-state");
         let mut outer = Writer::new();
         outer.put_bytes(&inner.into_bytes());
-        let bytes = outer.into_bytes();
+        let bytes = outer.finish();
         let mut r = Reader::new(&bytes).unwrap();
         let blob = r.get_bytes().unwrap();
         r.finish().unwrap();
@@ -335,5 +732,19 @@ mod tests {
         assert_eq!(s.get_f64().unwrap(), 2.5);
         assert_eq!(s.get_str().unwrap(), "policy-state");
         s.finish().unwrap();
+    }
+
+    #[test]
+    fn verify_is_a_pure_structural_probe() {
+        let mut w = Writer::new();
+        w.put_section("driver", &[1, 2]);
+        let bytes = w.finish();
+        assert_eq!(verify(&bytes).unwrap(), VERSION);
+        let mut torn = bytes.clone();
+        torn.truncate(bytes.len() / 2);
+        assert!(verify(&torn).is_err());
+        let mut w2 = Writer::with_version(2);
+        w2.put_u64(3);
+        assert_eq!(verify(&w2.into_bytes()).unwrap(), 2);
     }
 }

@@ -18,6 +18,14 @@
 //! perturbs low bits of those two telemetry scalars only — never the
 //! usage grid, the decisions, or the rewards (see `sim::checkpoint`).
 //!
+//! §SStore extends the contract to **storage faults**: checkpoint
+//! blobs may be torn (truncated), bit-flipped or lost entirely
+//! (rename never lands), again deterministically per (slot, seed).
+//! Recovery must *never* thaw a damaged blob — every rejection is
+//! counted (`blobs_rejected`) and the chain walk falls back to the
+//! newest intact checkpoint (`thaw_fallbacks`), replaying forward to
+//! the same bits as the uninterrupted run.
+//!
 //! The CI matrix re-runs this suite under several exec-fault seeds
 //! (`RECOVERY_FAULT_SEED`) × `PALLAS_WORKERS` with `--test-threads=1`.
 
@@ -29,9 +37,11 @@ use ogasched::schedulers::{
     BinPacking, Drf, Fairness, OgaMirror, OgaSched, Policy, RandomAlloc, Spreading,
 };
 use ogasched::sim::arrivals::Bernoulli;
-use ogasched::sim::checkpoint::{run_resilient, ResilientOutcome};
+use ogasched::sim::checkpoint::{run_resilient, run_resilient_with_store, ResilientOutcome};
 use ogasched::sim::faults::{run_churned, ChurnOutcome, ExecFaultPlan, FaultPlan};
 use ogasched::sim::ingest::{StreamArrivals, StreamParams};
+use ogasched::sim::store::BlobStore;
+use ogasched::utils::codec;
 use ogasched::utils::prop::{check_seeded, ensure, Size};
 use ogasched::utils::rng::Rng;
 use ogasched::ExecBudget;
@@ -237,6 +247,18 @@ fn crashed_and_resumed_matches_uninterrupted_bitwise() {
                     ensure(out.restored_from.len() == out.kills, || {
                         format!("{ctx}: restores != kills")
                     })?;
+                    // no storage faults armed: every blob in the chain
+                    // is intact, so no rejection/fallback may fire and
+                    // rewrites never exceed total writes
+                    ensure(out.blobs_rejected == 0 && out.thaw_fallbacks == 0, || {
+                        format!(
+                            "{ctx}: phantom storage rejection ({} rejected, {} fallbacks)",
+                            out.blobs_rejected, out.thaw_fallbacks
+                        )
+                    })?;
+                    ensure(out.checkpoints_written > out.checkpoints_rewritten, || {
+                        format!("{ctx}: no fresh checkpoint write in the split")
+                    })?;
                     compare(&ctx, &out.churn, &reference)?;
                 }
             }
@@ -330,6 +352,13 @@ fn kill_storm_without_epochs_replays_from_slot_zero() {
         .unwrap();
         assert_eq!(out.kills, 3);
         assert_eq!(out.restored_from, vec![0, 0, 0]);
+        // telemetry split (§SStore satellite): with epoch 0 the only
+        // boundary is the implicit slot-0 snapshot, written exactly once
+        // — replay arriving back at slot 0 finds it as the chain's
+        // newest blob and dedups, so no boundary re-write is counted
+        assert_eq!(out.checkpoints_written, 1, "shards={shards}: slot-0 write double-counted");
+        assert_eq!(out.checkpoints_rewritten, 0, "shards={shards}: phantom replay re-write");
+        assert_eq!((out.blobs_rejected, out.thaw_fallbacks), (0, 0));
         compare(&format!("kill-storm shards={shards}"), &out.churn, &reference).unwrap();
     }
 }
@@ -378,6 +407,198 @@ fn kills_mid_batch_resume_the_ingest_stream_bitwise() {
         // lossless cursor: every event the stream generated was either
         // batched out through `next` or parked in checkpointable state
         assert_eq!(arr.queue().dropped(), 0, "ingest shards={shards}: stream dropped");
+    }
+}
+
+#[test]
+fn corrupted_chains_fall_back_and_stay_bitwise() {
+    // §SStore tentpole matrix: lineup × chain depths {1, 2, 5} under
+    // seeded torn writes, bit flips and lost renames.  Recovery must
+    // reject every damaged blob it meets (surfaced in
+    // `blobs_rejected`), fall back along the chain, and still replay
+    // to the uninterrupted bits.  A deterministic floor — one kill
+    // whose preceding boundary blob is always torn — guarantees the
+    // fallback path fires in every config regardless of the CI seed.
+    check_seeded("sstore-parity", fault_base_seed() ^ 0x57, 3, |rng, size| {
+        let p = random_problem(rng, size);
+        let horizon = 34;
+        let epoch = 4u64;
+        let cfg = churny(rng.below(1 << 30) as u64);
+        let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+        let arrival_seed = rng.below(1 << 30) as u64;
+        let policy_seed = rng.below(1 << 30) as u64;
+        let exec_seed = rng.below(1 << 30) as u64;
+        for i in 0..N_POLICIES {
+            let (name, mut pol) = make_policy(&p, i, policy_seed);
+            let reference =
+                uninterrupted(&p, pol.as_mut(), &plan, &cfg, horizon, 1, arrival_seed, 0.6)
+                    .map_err(|e| format!("{name} uninterrupted: {e}"))?;
+            for &depth in &[1usize, 2, 5] {
+                let rcfg = RecoveryConfig {
+                    checkpoint_epoch: epoch as usize,
+                    kill_rate: 0.08,
+                    ckpt_fail_rate: 0.1,
+                    chain_depth: depth,
+                    torn_write_rate: 0.25,
+                    bit_flip_rate: 0.25,
+                    lost_rename_rate: 0.15,
+                    seed: exec_seed ^ (depth as u64) << 4,
+                    ..RecoveryConfig::default()
+                };
+                let mut exec = ExecFaultPlan::generate(horizon, 2, &rcfg);
+                let forced_kill = horizon as u64 - 1;
+                if !exec.kills.contains(&forced_kill) {
+                    exec.kills.push(forced_kill);
+                    exec.kills.sort_unstable();
+                }
+                let boundary = (forced_kill / epoch) * epoch;
+                exec.torn_writes.insert(boundary, 0xA11CE);
+                exec.lost_renames.remove(&boundary);
+                exec.ckpt_fails.remove(&boundary);
+                let (_, mut pol) = make_policy(&p, i, policy_seed);
+                let out = crashed(
+                    &p, pol.as_mut(), &plan, &cfg, horizon, 2, arrival_seed, 0.6, false,
+                    &rcfg, &exec,
+                )
+                .map_err(|e| format!("{name} depth={depth}: {e}"))?;
+                let ctx = format!("{name} depth={depth}");
+                ensure(out.kills == exec.kills.len(), || {
+                    format!("{ctx}: {} of {} kills taken", out.kills, exec.kills.len())
+                })?;
+                ensure(out.restored_from.len() == out.kills, || {
+                    format!("{ctx}: restores != kills")
+                })?;
+                // zero silent thaws: the forced torn boundary sits
+                // newest in the chain at the forced kill, so at least
+                // one rejection + fallback must have been surfaced
+                ensure(out.blobs_rejected >= 1 && out.thaw_fallbacks >= 1, || {
+                    format!(
+                        "{ctx}: damaged blob thawed silently ({} rejected, {} fallbacks)",
+                        out.blobs_rejected, out.thaw_fallbacks
+                    )
+                })?;
+                // every fallback implies at least one rejection on its walk
+                ensure(out.blobs_rejected >= out.thaw_fallbacks, || {
+                    format!("{ctx}: fallbacks exceed rejections")
+                })?;
+                ensure(out.checkpoints_written >= out.checkpoints_rewritten, || {
+                    format!("{ctx}: rewrite split exceeds total writes")
+                })?;
+                compare(&ctx, &out.churn, &reference)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn storm_with_only_the_genesis_intact_replays_from_slot_zero() {
+    // §SStore worst case: *every* checkpoint blob except epoch 0's is
+    // torn.  Both kills must walk the whole chain, reject everything
+    // newer, land on the genesis blob, and replay from slot 0 to the
+    // uninterrupted bits.  The write/rewrite split is hand-traced:
+    // fresh boundaries {0,5,10} pre-kill-1, rewrites {0,5,10} +
+    // fresh {15,20} between kills, rewrites {0,5,10,15,20} + fresh
+    // {25} after kill-2 — 14 writes, 8 of them replay re-writes —
+    // and is independent of the chain depth (dedup keys on the
+    // newest slot only).
+    let mut rng = Rng::new(fault_base_seed() ^ 0x570);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 30;
+    let cfg = churny(7);
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    let mut exec = ExecFaultPlan { kills: vec![13, 23], ..ExecFaultPlan::default() };
+    for s in (5..horizon as u64).step_by(5) {
+        exec.torn_writes.insert(s, 0xD00D + s);
+    }
+    let (_, mut pol) = make_policy(&p, 0, 1);
+    let reference = uninterrupted(&p, pol.as_mut(), &plan, &cfg, horizon, 1, 77, 0.7).unwrap();
+    for &depth in &[2usize, 5] {
+        let rcfg = RecoveryConfig {
+            checkpoint_epoch: 5,
+            chain_depth: depth,
+            ..RecoveryConfig::default()
+        };
+        let (_, mut pol) = make_policy(&p, 0, 1);
+        let out = crashed(
+            &p, pol.as_mut(), &plan, &cfg, horizon, 2, 77, 0.7, false, &rcfg, &exec,
+        )
+        .unwrap();
+        assert_eq!(out.kills, 2, "depth={depth}");
+        assert_eq!(out.restored_from, vec![0, 0], "depth={depth}: not the genesis blob");
+        assert_eq!(out.thaw_fallbacks, 2, "depth={depth}");
+        assert!(
+            out.blobs_rejected >= 4,
+            "depth={depth}: only {} rejections across two full-chain walks",
+            out.blobs_rejected
+        );
+        assert_eq!(out.checkpoints_written, 14, "depth={depth}");
+        assert_eq!(out.checkpoints_rewritten, 8, "depth={depth}");
+        compare(&format!("genesis-storm depth={depth}"), &out.churn, &reference).unwrap();
+    }
+}
+
+#[test]
+fn gc_keeps_the_chain_bounded_and_never_drops_the_newest_valid_blob() {
+    // §SStore satellite: chain GC under a kill storm with storage
+    // faults, at depths {1, 2, 5}.  The retained set is deterministic
+    // (two identical runs leave identical (epoch, slot) chains), never
+    // exceeds depth + the two pins (genesis, newest-valid), always
+    // still contains an intact blob, and resuming through GC'd chains
+    // stays bitwise.
+    let mut rng = Rng::new(fault_base_seed() ^ 0x6C);
+    let p = random_problem(&mut rng, Size { scale: 1.0 });
+    let horizon = 40;
+    let cfg = churny(11);
+    let plan = FaultPlan::for_problem(&p, horizon, &cfg);
+    let (_, mut pol) = make_policy(&p, 0, 1);
+    let reference = uninterrupted(&p, pol.as_mut(), &plan, &cfg, horizon, 1, 177, 0.6).unwrap();
+    for &depth in &[1usize, 2, 5] {
+        let rcfg = RecoveryConfig {
+            checkpoint_epoch: 3,
+            kill_rate: 0.1,
+            chain_depth: depth,
+            torn_write_rate: 0.2,
+            bit_flip_rate: 0.1,
+            lost_rename_rate: 0.1,
+            seed: 1234 + depth as u64,
+            ..RecoveryConfig::default()
+        };
+        let exec = ExecFaultPlan::generate(horizon, 2, &rcfg);
+        let chains: Vec<Vec<(u64, u64)>> = (0..2)
+            .map(|_| {
+                let (_, mut pol) = make_policy(&p, 0, 1);
+                pol.reset(&p);
+                let mut arr = Bernoulli::uniform(p.num_ports(), 0.6, 177);
+                let mut store = BlobStore::memory(depth);
+                let out = run_resilient_with_store(
+                    &p, pol.as_mut(), &mut arr, horizon, 2, &plan, &cfg, false, &rcfg,
+                    &exec, &mut store,
+                )
+                .unwrap();
+                assert!(out.blobs_rejected >= out.thaw_fallbacks, "depth={depth}");
+                compare(&format!("gc depth={depth}"), &out.churn, &reference).unwrap();
+                assert!(
+                    store.len() <= depth + 2,
+                    "depth={depth}: chain grew to {} entries",
+                    store.len()
+                );
+                let entries = store.chain();
+                assert!(
+                    entries.iter().any(|e| {
+                        store.load(e).map(|b| codec::verify(&b).is_ok()).unwrap_or(false)
+                    }),
+                    "depth={depth}: GC left no valid blob in the chain"
+                );
+                assert_eq!(
+                    entries.last().map(|e| (e.epoch, e.slot)),
+                    Some((0, 0)),
+                    "depth={depth}: genesis blob was GC'd"
+                );
+                entries.iter().map(|e| (e.epoch, e.slot)).collect()
+            })
+            .collect();
+        assert_eq!(chains[0], chains[1], "depth={depth}: retained set not deterministic");
     }
 }
 

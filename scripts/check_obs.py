@@ -6,6 +6,17 @@ files it writes through this script:
 
   check_obs.py results/obs_events.jsonl results/obs_trace.json
 
+With `--require-recovery` (the §SStore storage-fault job, whose traced
+run drives the resilient driver), additionally validates the recovery
+counter algebra in the JSONL stream:
+
+  * `recover.ckpts_written` is present and equals
+    `recover.ckpts_fresh + recover.ckpts_rewritten` (the telemetry
+    split — a write is fresh xor a replay re-write, never both);
+  * `recover.blobs_rejected >= recover.thaw_fallbacks` (every fallback
+    walked past at least one rejected blob, so no damaged blob can
+    have been thawed silently).
+
 Checks, matching the schema contract of `rust/src/obs/export.rs`:
 
   * the JSONL stream starts with a `meta` record carrying the
@@ -84,6 +95,33 @@ def check_jsonl(path):
         ):
             fail(f"{path}: histogram {h['name']} quantiles out of order: {h}")
     print(f"check_obs: {path}: OK ({len(spans)} spans, {len(hists)} histograms)")
+    return records
+
+
+def check_recovery_counters(path, records):
+    counters = {r["name"]: r["value"] for r in records if r["record"] == "counter"}
+    written = counters.get("recover.ckpts_written")
+    if written is None:
+        fail(f"{path}: --require-recovery but no recover.ckpts_written counter")
+    fresh = counters.get("recover.ckpts_fresh", 0)
+    rewritten = counters.get("recover.ckpts_rewritten", 0)
+    if written != fresh + rewritten:
+        fail(
+            f"{path}: checkpoint-write split broken: "
+            f"written={written} != fresh={fresh} + rewritten={rewritten}"
+        )
+    rejected = counters.get("recover.blobs_rejected", 0)
+    fallbacks = counters.get("recover.thaw_fallbacks", 0)
+    if rejected < fallbacks:
+        fail(
+            f"{path}: thaw fallbacks ({fallbacks}) exceed rejected blobs "
+            f"({rejected}) — a damaged blob was thawed silently"
+        )
+    print(
+        f"check_obs: {path}: recovery counters OK "
+        f"(written={written} = fresh {fresh} + rewrites {rewritten}; "
+        f"rejected={rejected} >= fallbacks={fallbacks})"
+    )
 
 
 def check_chrome(path):
@@ -121,10 +159,15 @@ def check_chrome(path):
 
 
 def main():
-    if len(sys.argv) != 3:
-        fail("usage: check_obs.py <obs_events.jsonl> <obs_trace.json>")
-    check_jsonl(sys.argv[1])
-    check_chrome(sys.argv[2])
+    argv = sys.argv[1:]
+    require_recovery = "--require-recovery" in argv
+    argv = [a for a in argv if a != "--require-recovery"]
+    if len(argv) != 2:
+        fail("usage: check_obs.py [--require-recovery] <obs_events.jsonl> <obs_trace.json>")
+    records = check_jsonl(argv[0])
+    if require_recovery:
+        check_recovery_counters(argv[0], records)
+    check_chrome(argv[1])
     print("check_obs: PASS")
 
 

@@ -34,9 +34,12 @@ Regenerate the real numbers with `cargo bench --bench hot_path`
 
 import json
 import math
+import os
 import random
 import struct
+import tempfile
 import time
+import zlib
 
 KINDS = ("linear", "log", "reciprocal", "poly")
 
@@ -1388,29 +1391,53 @@ def churn_section(rows):
 
 # ----------------------------------------------------- §Recover model --
 
+def _put_section(out, name, payload):
+    """utils::codec v3 section frame: put_str(name) + crc32(payload) +
+    length-prefixed payload (zlib.crc32 is the same reflected
+    0xEDB88320 IEEE polynomial the hand-rolled Rust table computes)."""
+    nb = name.encode()
+    out += struct.pack("<Q", len(nb)) + nb
+    out += struct.pack("<I", zlib.crc32(payload) & 0xFFFFFFFF)
+    out += struct.pack("<Q", len(payload)) + payload
+
+
 def _freeze_mirror(p, records_len, y, usage):
     """Structural mirror of sim::checkpoint::freeze — pack the run
-    snapshot into the utils::codec byte layout (magic/version header,
-    u64 counters, per-slot records, liveness masks, the ClusterState
-    usage grid, and the policy's decision tensor; every f64 as its IEEE
-    bits, which struct '<d' emits byte-identically to f64::to_bits)."""
+    snapshot into the utils::codec **PLCK v3** byte layout: the
+    magic/version header, then one named, CRC-32-tagged section per
+    snapshot piece (driver counters, per-slot records, liveness masks,
+    the ClusterState usage grid, the policy's decision tensor, the
+    arrivals RNG state), closed by the whole-blob CRC trailer
+    `Reader::new` verifies before any field decode.  Every f64 is its
+    IEEE bits, which struct '<d' emits byte-identically to
+    f64::to_bits."""
     out = bytearray()
-    out += struct.pack("<II", 0x4B434C50, 1)          # "PLCK", VERSION 1
+    out += struct.pack("<II", 0x4B434C50, 3)          # "PLCK", VERSION 3
+    sec = bytearray()                                 # driver section
     for v in (records_len, 0, 0, 0, 0):               # cursor + counters
-        out += struct.pack("<Q", v)
+        sec += struct.pack("<Q", v)
     name = b"OGASCHED"
-    out += struct.pack("<Q", len(name)) + name
-    out += struct.pack("<dQ", 123.456, 0)             # cum reward, clamped
-    out += struct.pack("<Q", records_len)
+    sec += struct.pack("<Q", len(name)) + name
+    sec += struct.pack("<dQ", 123.456, 0)             # cum reward, clamped
+    _put_section(out, "driver", bytes(sec))
+    sec = bytearray()
+    sec += struct.pack("<Q", records_len)
     for t in range(records_len):                      # SlotRecord stream
-        out += struct.pack("<Qdddd", t, 0.1, 0.2, 0.05, 3.0)
-    out += bytes(p["R"]) + bytes(p["L"]) + bytes(p["L"])  # liveness masks
+        sec += struct.pack("<Qdddd", t, 0.1, 0.2, 0.05, 3.0)
+    _put_section(out, "records", bytes(sec))
+    _put_section(out, "masks",
+                 bytes(p["R"]) + bytes(p["L"]) + bytes(p["L"]))
+    sec = bytearray()
     for row in usage:                                 # ClusterState grid
-        out += struct.pack("<%dd" % len(row), *row)
-    out += struct.pack("<dd", 17.0, 0.0)              # total + compensation
-    out += struct.pack("<Q", len(y))                  # policy section: y
-    out += struct.pack("<%dd" % len(y), *y)
-    out += struct.pack("<4Q", 1, 2, 3, 4)             # arrivals RNG state
+        sec += struct.pack("<%dd" % len(row), *row)
+    sec += struct.pack("<dd", 17.0, 0.0)              # total + compensation
+    _put_section(out, "ledger", bytes(sec))
+    sec = bytearray()
+    sec += struct.pack("<Q", len(y))                  # policy section: y
+    sec += struct.pack("<%dd" % len(y), *y)
+    _put_section(out, "policy", bytes(sec))
+    _put_section(out, "arrivals", struct.pack("<4Q", 1, 2, 3, 4))
+    out += struct.pack("<I", zlib.crc32(bytes(out)) & 0xFFFFFFFF)  # trailer
     return out
 
 
@@ -1462,6 +1489,86 @@ def recover_section(rows, traffic_rows):
     print(f"resilient h{horizon} {name:<20} epoch5 +{kills} kills      "
           f"recover {recover_ms:7.3f} ms   "
           f"overhead {(modeled / nockpt_ms - 1.0) * 100:5.2f}%")
+
+
+# ------------------------------------------------------ §SStore model --
+
+def sstore_section(rows, traffic_rows):
+    """§SStore: the durable self-verifying checkpoint chain, modeled to
+    match the `sstore *` rows of benches/hot_path.rs (h50, epoch 5,
+    chain depth 5, one kill at slot 41).
+
+    The freeze+put pair: the epoch-5 resilient run with the chain in
+    memory (put = blob copy, proxy-timed) vs persisted to disk (put =
+    write temp + flush + fsync + atomic rename, really performed
+    against a tempdir — fsync dominates, which is exactly the Rust
+    story).  The thaw trio: recovery verifies blobs newest→oldest
+    (whole-blob CRC-32, really computed), rejects the torn ones, thaws
+    the first intact blob (charged one freeze — same bytes decoded)
+    and replays/re-writes from the older restore point:
+
+      valid      restore 40: 1 verify, 1 re-run slot, 0 re-writes
+      fallback1  restore 35: 2 verifies, 6 re-run slots, 2 re-writes
+      fallback3  restore 25: 4 verifies, 16 re-run slots, 4 re-writes
+    """
+    name, L, R, K, density = "default 10x128x6", 10, 128, 6, 3.0
+    horizon, epoch, depth = 50, 5, 5
+    p = make_problem(L, R, K, density, seed=2023)
+    slot_ms = next(r["dense_ms"] for r in traffic_rows if r["name"] == name)
+    rng = random.Random(7)
+    y = [rng.uniform(0.0, 1.0) for _ in range(p["E"] * K)]
+    usage = [[rng.uniform(0.0, 2.0) for _ in range(K)] for _ in range(R)]
+    blob = bytes(_freeze_mirror(p, horizon // 2, y, usage))
+    mean_f, _ = bench(lambda: _freeze_mirror(p, horizon // 2, y, usage),
+                      10, 200)
+    freeze_ms = mean_f * 1e3
+    ckpts = 1 + (horizon - 1) // epoch
+    base_ms = horizon * slot_ms + ckpts * freeze_ms
+
+    mean_put, _ = bench(lambda: bytes(blob), 10, 200)         # memcpy put
+    mem_ms = base_ms + ckpts * mean_put * 1e3
+    tmp = tempfile.mkdtemp(prefix="ogasched-sstore-proxy-")
+
+    def disk_put(i=[0]):
+        i[0] += 1
+        path = os.path.join(tmp, "ckpt-e%08d.plck" % i[0])
+        with open(path + ".tmp", "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(path + ".tmp", path)
+
+    mean_disk, _ = bench(disk_put, 3, 40)
+    for fn in os.listdir(tmp):
+        os.unlink(os.path.join(tmp, fn))
+    os.rmdir(tmp)
+    disk_ms = base_ms + ckpts * mean_disk * 1e3
+    rows.append(dict(name=name, section="sstore-put", backend="mem",
+                     blob_bytes=len(blob), put_us=mean_put * 1e6,
+                     modeled_ms=mem_ms))
+    rows.append(dict(name=name, section="sstore-put", backend="disk",
+                     blob_bytes=len(blob), put_us=mean_disk * 1e6,
+                     modeled_ms=disk_ms))
+    print(f"sstore put {name:<20} mem {mean_put*1e6:8.2f} us/blob   "
+          f"disk {mean_disk*1e6:8.2f} us/blob   blob {len(blob)} B")
+
+    mean_v, _ = bench(lambda: zlib.crc32(blob), 10, 200)      # verify walk
+    verify_ms = mean_v * 1e3
+    for label, verifies, replay_slots, rewrites in (
+            ("valid", 1, 1, 0),
+            ("fallback1", 2, 6, 2),
+            ("fallback3", 4, 16, 4)):
+        thaw_ms = (verifies * verify_ms + freeze_ms
+                   + replay_slots * slot_ms + rewrites * freeze_ms)
+        modeled = mem_ms + thaw_ms
+        rows.append(dict(name=name, section="sstore-thaw", label=label,
+                         verifies=verifies, replay_slots=replay_slots,
+                         rewrites=rewrites, thaw_ms=thaw_ms,
+                         modeled_ms=modeled,
+                         overhead_pct=(modeled / mem_ms - 1.0) * 100))
+        print(f"sstore thaw {label:<10} {name:<20} "
+              f"thaw+replay {thaw_ms:8.3f} ms   "
+              f"overhead {(modeled / mem_ms - 1.0) * 100:5.2f}%")
 
 
 def obs_section(rows, sharded_rows):
@@ -1735,6 +1842,8 @@ def main():
     churn_section(churn_rows)
     recover_rows = []
     recover_section(recover_rows, traffic_rows)
+    sstore_rows = []
+    sstore_section(sstore_rows, traffic_rows)
     obs_rows = []
     obs_section(obs_rows, sharded_rows)
     sperf9_rows = []
@@ -1744,7 +1853,8 @@ def main():
                        sharded=sharded_rows, perf4=perf4_rows,
                        perf5=perf5_rows, traffic=traffic_rows,
                        churn=churn_rows, recover=recover_rows,
-                       obs=obs_rows, sperf9=sperf9_rows), f, indent=2)
+                       sstore=sstore_rows, obs=obs_rows,
+                       sperf9=sperf9_rows), f, indent=2)
     print("wrote perf_proxy.json")
     write_throughput_json(sperf9_rows)
 
@@ -1829,6 +1939,17 @@ def main():
             ns_per_op=round(row["modeled_ms"] * 1e6, 1),
             ns_per_op_min=round(row["modeled_ms"] * 1e6, 1),
             std_ns=0.0))
+    for row in sstore_rows:
+        if row["section"] == "sstore-put":
+            bench_name = (f"sstore freeze+put {row['backend']} h50 epoch5 "
+                          f"{row['name']}")
+        else:
+            bench_name = f"sstore thaw {row['label']} h50 epoch5 {row['name']}"
+        entries.append(dict(
+            name=bench_name, iters=0,
+            ns_per_op=round(row["modeled_ms"] * 1e6, 1),
+            ns_per_op_min=round(row["modeled_ms"] * 1e6, 1),
+            std_ns=0.0))
     for row in obs_rows:
         if "large" in row["name"]:
             entries.append(dict(
@@ -1904,6 +2025,14 @@ def main():
               "checkpoint boundary; kills add thaw + epoch/2 replay slots, "
               "EXPERIMENTS.md SRecover) — the real rows come from "
               "benches/hot_path.rs's run_resilient_scenario section. The "
+              "SStore `sstore freeze+put {mem,disk}` and `sstore thaw "
+              "{valid,fallback1,fallback3}` rows are MODELED on the same "
+              "split plus a proxy-timed PLCK v3 freeze mirror (per-section "
+              "+ whole-blob CRC-32), a really-performed write+fsync+rename "
+              "put against a tempdir for the disk row, and per-fallback "
+              "verify walks + replay/re-write charges (EXPERIMENTS.md "
+              "SStore) — the real rows come from benches/hot_path.rs's "
+              "SStore section. The "
               "SObs `obs={off,summary,trace}` rows add a per-span-site cost "
               "proxy-timed on mirrors of rust/src/obs (clock reads + log2 "
               "histogram record, + ring append at trace) to the modeled "
